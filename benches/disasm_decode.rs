@@ -1,0 +1,53 @@
+//! Decoder/back-trace throughput: the in-handler work (decode at RIP,
+//! function sweep, back-trace) and the Fig-6 whole-binary analysis rate.
+
+use nanrepair::bench::{Bench, Runner};
+use nanrepair::disasm::analyze::analyze_image;
+use nanrepair::disasm::backtrace::backtrace_mov;
+use nanrepair::disasm::decode::decode_insn;
+use nanrepair::disasm::elf::ElfImage;
+
+// the paper's Figure-3 byte sequence (see backtrace.rs tests)
+const PAPER_FIG3: &[u8] = &[
+    0xf2, 0x41, 0x0f, 0x10, 0x04, 0xf2, 0x01, 0xfa, 0x44, 0x39, 0xc0, 0xf2, 0x41, 0x0f, 0x59,
+    0x04, 0xc9,
+];
+
+fn main() {
+    let mut r = Runner::from_env("disasm");
+
+    r.bench(
+        "decode_insn/mulsd",
+        Bench::new(|| {
+            let i = decode_insn(&[0xf2, 0x41, 0x0f, 0x59, 0x04, 0xc9]).unwrap();
+            std::hint::black_box(i.len);
+        }),
+    );
+
+    r.bench(
+        "backtrace/fig3",
+        Bench::new(|| {
+            let out = backtrace_mov(PAPER_FIG3, 0x1000, 0x1000 + 11, 0);
+            std::hint::black_box(out.is_found());
+        }),
+    );
+
+    // whole-binary Fig-6 analysis over one corpus binary
+    let corpus = nanrepair::harness::corpus::build(nanrepair::harness::corpus::default_dir())
+        .expect("corpus");
+    let dgemm_o2 = corpus
+        .iter()
+        .find(|p| p.to_string_lossy().ends_with("dgemm_O2"))
+        .expect("dgemm_O2");
+    let img = ElfImage::load(dgemm_o2).unwrap();
+    r.bench(
+        "analyze_image/dgemm_O2",
+        Bench::new(move || {
+            let rep = analyze_image(&img);
+            std::hint::black_box(rep.found);
+        })
+        .samples(5),
+    );
+
+    r.finish();
+}

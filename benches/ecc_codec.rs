@@ -1,0 +1,68 @@
+//! EXT-PROT support: SECDED(72,64) encode/decode throughput — the
+//! per-access tax behind the paper's §2.2 argument against ECC for
+//! approximate memory — plus the end-to-end ECC-matmul comparison.
+
+use nanrepair::approxmem::ecc::{decode, encode, flip_codeword_bit, Codeword};
+use nanrepair::bench::{Bench, Runner};
+use nanrepair::harness::ablation::ecc_matmul;
+use nanrepair::util::rng::Pcg64;
+use rand_core::RngCore;
+
+fn main() {
+    let mut r = Runner::from_env("ecc");
+    let mut rng = Pcg64::seed(1);
+    let words: Vec<u64> = (0..4096).map(|_| rng.next_u64()).collect();
+    let codes: Vec<Codeword> = words.iter().map(|&w| encode(w)).collect();
+    let flipped: Vec<Codeword> = codes
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| flip_codeword_bit(c, (i % 72) as u32))
+        .collect();
+
+    r.bench("encode/4096words", {
+        let words = words.clone();
+        Bench::new(move || {
+            let mut acc = 0u64;
+            for &w in &words {
+                acc ^= encode(w).check as u64;
+            }
+            std::hint::black_box(acc);
+        })
+    });
+
+    r.bench("decode-clean/4096words", {
+        let codes = codes.clone();
+        Bench::new(move || {
+            let mut acc = 0u64;
+            for &c in &codes {
+                acc ^= decode(c).data().unwrap_or(0);
+            }
+            std::hint::black_box(acc);
+        })
+    });
+
+    r.bench("decode-correcting/4096words", {
+        let flipped = flipped.clone();
+        Bench::new(move || {
+            let mut acc = 0u64;
+            for &c in &flipped {
+                acc ^= decode(c).data().unwrap_or(0);
+            }
+            std::hint::black_box(acc);
+        })
+    });
+
+    let quick = r.is_quick();
+    let n = if quick { 48 } else { 128 };
+    r.bench(
+        &format!("ecc-matmul/{n}"),
+        Bench::new(move || {
+            let (secs, _) = ecc_matmul(n, 3);
+            std::hint::black_box(secs);
+        })
+        .samples(3)
+        .budget(if quick { 0.2 } else { 2.0 }),
+    );
+
+    r.finish();
+}

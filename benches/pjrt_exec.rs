@@ -1,0 +1,62 @@
+//! L1/L2 artifact execution cost on the PJRT CPU path: protected-matmul
+//! and nan-scan kernels, clean vs NaN-bearing inputs (the reactive claim:
+//! same cost either way — the mask is fused).
+
+use nanrepair::bench::{Bench, Runner};
+use nanrepair::runtime::{Engine, Tensor};
+use nanrepair::util::rng::Pcg64;
+
+fn main() {
+    let mut r = Runner::from_env("pjrt");
+    let mut engine = Engine::cpu(Engine::default_dir()).expect("pjrt client");
+    let n = 256usize;
+    let mut rng = Pcg64::seed(9);
+    let mk = |rng: &mut Pcg64| {
+        Tensor::new(
+            &[n as i64, n as i64],
+            (0..n * n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect(),
+        )
+    };
+    let a = mk(&mut rng);
+    let b = mk(&mut rng);
+    let mut a_nan = a.clone();
+    a_nan.poison(1234);
+
+    {
+        let m = engine.load("matmul_f32_256").expect("artifact");
+        let (a2, b2) = (a.clone(), b.clone());
+        r.bench(
+            "matmul256/clean",
+            Bench::new(move || {
+                let out = m.run(&[a2.clone(), b2.clone()]).unwrap();
+                assert_eq!(out[1].data[0], 0.0);
+            })
+            .samples(5),
+        );
+    }
+    {
+        let m = engine.load("matmul_f32_256").expect("artifact");
+        let (a2, b2) = (a_nan.clone(), b.clone());
+        r.bench(
+            "matmul256/one-nan",
+            Bench::new(move || {
+                let out = m.run(&[a2.clone(), b2.clone()]).unwrap();
+                assert!(out[1].data[0] > 0.0);
+            })
+            .samples(5),
+        );
+    }
+    {
+        let m = engine.load("nan_scan_f32_256").expect("artifact");
+        let flat = Tensor::new(&[(n * n) as i64], a.data.clone());
+        r.bench(
+            "nan_scan65536/clean",
+            Bench::new(move || {
+                let out = m.run(&[flat.clone()]).unwrap();
+                std::hint::black_box(out[1].data[0]);
+            })
+            .samples(5),
+        );
+    }
+    r.finish();
+}

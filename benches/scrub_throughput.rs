@@ -1,0 +1,33 @@
+//! EXT-PROT support: proactive-scrub sweep throughput — the "must check
+//! every bit of large memory capacity" cost (paper §3.1) that reactive
+//! repair avoids.
+
+use nanrepair::approxmem::pool::ApproxPool;
+use nanrepair::approxmem::scrubber::Scrubber;
+use nanrepair::bench::{Bench, Runner};
+
+fn main() {
+    let mut r = Runner::from_env("scrub");
+    for mib in [1usize, 16, 64] {
+        if r.is_quick() && mib > 16 {
+            break;
+        }
+        let words = mib * 1024 * 1024 / 8;
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f64(words);
+        buf.fill_with(|i| i as f64);
+        let scrubber = Scrubber::default();
+        let res = r.bench(
+            &format!("sweep/{mib}MiB"),
+            Bench::new(move || {
+                let rep = scrubber.scrub(&pool);
+                std::hint::black_box(rep.words_scanned);
+            })
+            .samples(5),
+        );
+        let gib_per_s = (words * 8) as f64 / res.summary.mean / (1u64 << 30) as f64;
+        println!("  → {gib_per_s:.2} GiB/s scrub bandwidth");
+        drop(buf);
+    }
+    r.finish();
+}

@@ -1,0 +1,17 @@
+//! EXT-TRAP: single-trap cost anatomy (in-process handler), the number the
+//! paper's "negligible overhead" claim rests on.
+
+use nanrepair::harness::trapcost;
+
+fn main() {
+    let quick = std::env::var("NANREPAIR_BENCH_QUICK").map_or(false, |v| v == "1");
+    let trials = if quick { 200 } else { 5000 };
+    let rep = trapcost::run(trials);
+    rep.table.print();
+    println!(
+        "\nper-trap round trip: {:.2} µs (handler body {:.0} cycles)",
+        rep.roundtrip_secs * 1e6,
+        rep.handler_cycles
+    );
+    assert!(rep.roundtrip_secs < 1e-3, "trap cost must be sub-millisecond");
+}

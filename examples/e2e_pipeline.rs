@@ -1,0 +1,56 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//!   L1  Pallas NaN-repair matmul kernel (python, AOT → HLO text)
+//!   L2  jacobi_step model composed from the kernel (python, AOT)
+//!   L3  this Rust driver: PJRT load/execute, approximate-memory fault
+//!       injection between steps, host-side memory repair, residual log
+//!
+//! Proves all layers compose: the solver converges while NaNs keep landing
+//! in its matrix, every repair is counted, and Python never runs.
+//! The run is recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_pipeline`
+
+use nanrepair::harness::pipeline::{run_jacobi, FaultSpec};
+use nanrepair::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Engine::default_dir();
+    let dir = dir.to_str().unwrap();
+
+    {
+        let engine = Engine::cpu(dir)?;
+        println!(
+            "PJRT platform: {}; artifacts: {:?}",
+            engine.platform(),
+            engine.available()
+        );
+    }
+
+    println!("\n=== control: no faults ===");
+    let clean = run_jacobi(dir, 60, FaultSpec::None, 42, 10)?;
+    clean.table.print();
+
+    println!("\n=== paper scenario: an SNaN lands in A every 5 steps ===");
+    let nan_run = run_jacobi(dir, 60, FaultSpec::PlantNan { every: 5 }, 42, 5)?;
+    nan_run.table.print();
+
+    println!("\n=== approximate memory: random bit flips at BER 1e-7/step ===");
+    let ber_run = run_jacobi(dir, 60, FaultSpec::Ber(1e-7), 42, 10)?;
+    ber_run.table.print();
+
+    println!("\nsummary:");
+    for (name, r) in [("control", &clean), ("plant-nan", &nan_run), ("ber", &ber_run)] {
+        println!(
+            "  {name:>10}: residual {:.3e}, {} kernel repairs, corrupted: {}",
+            r.final_residual, r.total_repairs, r.corrupted
+        );
+    }
+    anyhow::ensure!(!nan_run.corrupted, "NaN run must stay finite");
+    anyhow::ensure!(
+        nan_run.total_repairs >= 12,
+        "kernel must have repaired the planted NaNs"
+    );
+    println!("\nE2E OK: all three layers compose; reactive repair kept the solver alive.");
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Out-of-process NaN repair via ptrace — the measured stand-in for the
+//! paper's gdb prototype.
+//!
+//! The paper attaches gdb to "steal" SIGFPE (Fig. 2); this example is the
+//! same supervision topology without gdb's scripting overhead: a parent
+//! ptrace-attaches a child that multiplies an SNaN; on each signal-stop it
+//! rewrites the child's xmm register through PTRACE_GETFPREGS /
+//! PTRACE_SETFPREGS and resumes it.  Comparing its per-trap cost with the
+//! in-process handler (`nanrepair trap-cost`) quantifies what moving the
+//! mechanism in-process buys (EXT-TRAP).
+//!
+//! Run: `cargo run --release --example ptrace_supervisor`
+
+use std::time::Instant;
+
+use nanrepair::fp::nan::PAPER_NAN_BITS;
+
+const TRIALS: usize = 200;
+
+fn main() -> anyhow::Result<()> {
+    unsafe {
+        match libc::fork() {
+            -1 => anyhow::bail!("fork failed"),
+            0 => child(),
+            pid => parent(pid),
+        }
+    }
+}
+
+/// Child: unmask invalid, then repeatedly run the pinned asm ddot kernel
+/// over a buffer whose first element is an SNaN.  The kernel loads it into
+/// xmm1 (`movsd`) before the `mulsd` — so the faulting operand is a
+/// *register*, which is what a register-patching supervisor (gdb's
+/// scenario in the paper's Fig. 3/4) can repair.
+unsafe fn child() -> anyhow::Result<()> {
+    libc::ptrace(libc::PTRACE_TRACEME, 0, 0, 0);
+    // stop so the parent can set options before the measured section
+    libc::raise(libc::SIGSTOP);
+
+    nanrepair::trap::mxcsr::unmask_invalid();
+    let mut buf = vec![1.0f64; 8];
+    let ones = vec![1.0f64; 8];
+    let mut acc = 0.0f64;
+    for _ in 0..TRIALS {
+        buf[0] = f64::from_bits(PAPER_NAN_BITS);
+        // one trap per call: movsd loads the SNaN into xmm1, mulsd faults,
+        // the parent patches xmm1 and resumes us
+        acc += nanrepair::workloads::kernels::ddot(&buf, &ones, 8);
+    }
+    // tell the parent we are done via exit code (acc must be finite)
+    std::process::exit(if acc.is_finite() { 0 } else { 1 });
+}
+
+/// Parent: supervise, repair on each SIGFPE, measure per-trap cost.
+unsafe fn parent(pid: libc::pid_t) -> anyhow::Result<()> {
+    let mut status = 0;
+    libc::waitpid(pid, &mut status, 0); // the SIGSTOP
+    let t_run = Instant::now();
+    libc::ptrace(libc::PTRACE_CONT, pid, 0, 0);
+
+    let mut traps = 0u64;
+    let mut total = 0.0f64;
+    let max_traps = (TRIALS as u64) * 8 + 64; // safety valve
+    loop {
+        if traps > max_traps {
+            libc::kill(pid, libc::SIGKILL);
+            anyhow::bail!("supervisor stuck: {traps} traps without child exit");
+        }
+        libc::waitpid(pid, &mut status, 0);
+        if libc::WIFEXITED(status) {
+            println!(
+                "child exited {} after {traps} supervised traps",
+                libc::WEXITSTATUS(status)
+            );
+            anyhow::ensure!(libc::WEXITSTATUS(status) == 0, "child saw a NaN result");
+            break;
+        }
+        if libc::WIFSTOPPED(status) && libc::WSTOPSIG(status) == libc::SIGFPE {
+            let t0 = Instant::now();
+            // read FP regs, repair every NaN xmm lane, write back
+            let mut fp: libc::user_fpregs_struct = std::mem::zeroed();
+            libc::ptrace(libc::PTRACE_GETFPREGS, pid, 0, &mut fp);
+            let xmm = &mut fp.xmm_space; // [u32; 64] = 16 regs × 4 words
+            for r in 0..16 {
+                let lo = (xmm[r * 4] as u64) | ((xmm[r * 4 + 1] as u64) << 32);
+                if nanrepair::fp::nan::classify_f64(lo).is_nan() {
+                    let fixed = 2.0f64.to_bits();
+                    xmm[r * 4] = fixed as u32;
+                    xmm[r * 4 + 1] = (fixed >> 32) as u32;
+                }
+            }
+            // clear IE + keep IM unmasked in the child's saved mxcsr
+            fp.mxcsr &= !0x01;
+            libc::ptrace(libc::PTRACE_SETFPREGS, pid, 0, &fp);
+            total += t0.elapsed().as_secs_f64();
+            traps += 1;
+            // deliver no signal (steal it, like gdb)
+            libc::ptrace(libc::PTRACE_CONT, pid, 0, 0);
+            continue;
+        }
+        // forward other stops
+        let sig = if libc::WIFSTOPPED(status) {
+            libc::WSTOPSIG(status)
+        } else {
+            0
+        };
+        libc::ptrace(libc::PTRACE_CONT, pid, 0, sig);
+    }
+
+    let wall = t_run.elapsed().as_secs_f64();
+    println!(
+        "ptrace-supervised repair: {:.2} µs/trap round-trip ({:.2} µs of it \
+         FPREGS get/patch/set) — compare `nanrepair trap-cost` for in-process",
+        wall / traps.max(1) as f64 * 1e6,
+        total / traps.max(1) as f64 * 1e6
+    );
+    Ok(())
+}

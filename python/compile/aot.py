@@ -1,0 +1,77 @@
+"""AOT lowering: every L2 entry point → HLO *text* in artifacts/.
+
+HLO text (NOT ``lowered.compile()`` or proto ``.serialize()``) is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which the ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md and gen_hlo.py.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--sizes 256]``
+Writes one ``<name>_f32_<n>.hlo.txt`` per entry point per size, plus a
+manifest with input/output shapes for the Rust runtime.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ENTRY_POINTS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str, n: int) -> tuple[str, dict]:
+    fn, args_builder = ENTRY_POINTS[name]
+    example_args = args_builder(n)
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    meta = {
+        "entry": name,
+        "n": n,
+        "inputs": [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in example_args
+        ],
+    }
+    return text, meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="256", help="comma-separated N values")
+    ap.add_argument(
+        "--entries",
+        default=",".join(ENTRY_POINTS),
+        help="comma-separated entry points",
+    )
+    opts = ap.parse_args()
+
+    os.makedirs(opts.out_dir, exist_ok=True)
+    manifest = []
+    for name in opts.entries.split(","):
+        for n in (int(s) for s in opts.sizes.split(",")):
+            text, meta = lower_entry(name, n)
+            fname = f"{name}_f32_{n}.hlo.txt"
+            path = os.path.join(opts.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            meta["file"] = fname
+            manifest.append(meta)
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(opts.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

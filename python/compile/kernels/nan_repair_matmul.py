@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: tiled matmul with fused reactive NaN repair.
+
+Hardware adaptation of the paper (DESIGN.md §4): TPUs have no precise
+per-instruction FP exceptions, so "react to the NaN when it is touched"
+becomes "sanitize the operand tile as it streams from (approximate) HBM
+into VMEM, on its way to the MXU".  The NaN mask is fused into the tile
+load — when no NaN is present the select is dataflow-free on the VPU,
+mirroring the paper's negligible-overhead claim; the repair *count* is
+accumulated as a second output so the host coordinator observes exactly
+what the SIGFPE counters report on CPU (Table 3's 1-vs-N distinction shows
+up as counts per tile revisit).
+
+The kernel is lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; tiling is still chosen MXU-shaped (128×128)
+so the BlockSpec schedule is the one a real TPU would run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tiles: 128×128 f32. VMEM budget per grid step:
+#   a-tile (bm·bk) + b-tile (bk·bn) + out-tile (bm·bn) = 3·128·128·4 B
+#   = 192 KiB  ≪ 16 MiB VMEM, leaving room for double-buffering.
+DEFAULT_BLOCK = 128
+
+
+def _matmul_repair_kernel(a_ref, b_ref, o_ref, cnt_ref, *, repair_value):
+    """One (i, j, k) grid step: o[i,j] += sanitize(a[i,k]) @ sanitize(b[k,j])."""
+    k = pl.program_id(2)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    a_nan = jnp.isnan(a)
+    b_nan = jnp.isnan(b)
+    a = jnp.where(a_nan, repair_value, a)
+    b = jnp.where(b_nan, repair_value, b)
+
+    @pl.when((k == 0) & (pl.program_id(0) == 0) & (pl.program_id(1) == 0))
+    def _init_count():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    @pl.when(k == 0)
+    def _init_out():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+    cnt_ref[0, 0] += (
+        jnp.sum(a_nan, dtype=jnp.int32) + jnp.sum(b_nan, dtype=jnp.int32)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block", "repair_value"))
+def matmul_repair(a, b, *, block=DEFAULT_BLOCK, repair_value=0.0):
+    """C = sanitize(A) @ sanitize(B); also returns the NaN-repair count.
+
+    Count semantics: one count per NaN *touch* (a NaN element of A is seen
+    by every j-tile — the TPU analogue of the paper's per-load SIGFPE in
+    register-only mode; see ``nan_scan`` for the memory-repair analogue).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = min(block, m), min(block, k), min(block, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        "shapes must tile evenly",
+        (m, k, n),
+        (bm, bk, bn),
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_repair_kernel, repair_value=repair_value),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,92 @@
+"""L2: numerical applications composed from the L1 NaN-repair kernels.
+
+Everything here is build-time only: ``aot.py`` lowers each entry point to
+HLO text that the Rust runtime loads and executes — Python is never on the
+request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.nan_repair_matmul import matmul_repair
+from .kernels.nan_scan import nan_scan
+
+
+def protected_matmul(a, b):
+    """C = A·B with fused NaN repair; returns (C, repair_count)."""
+    c, cnt = matmul_repair(a, b)
+    return c, cnt
+
+
+def scrub(x):
+    """Proactive scrub of a flat buffer; returns (clean, count)."""
+    clean, cnt = nan_scan(x)
+    return clean, cnt
+
+
+def jacobi_step(a, b, x):
+    """One Jacobi sweep for A·x = b with a NaN-protected matvec.
+
+    x' = (b − (A − diag(A))·x) / diag(A), where A·x runs through the
+    protected matmul kernel (x broadcast to a column).
+
+    The diagonal is the §5.2 hazard case: it is used as a *divisor*, so a
+    NaN there (or a repair-to-zero) must not reach the division.  We
+    sanitize it to 1.0 — the division-safe repair value the paper's
+    discussion motivates — and count those repairs too.
+    Returns (x', repair_count).
+    """
+    n = a.shape[0]
+    diag = jnp.diagonal(a)
+    diag_bad = jnp.isnan(diag) | (diag == 0.0)
+    diag = jnp.where(diag_bad, 1.0, diag)
+    ax, cnt = matmul_repair(a, x.reshape(n, 1))
+    off = ax.reshape(n) - diag * x
+    x_next = (b - off) / diag
+    cnt = cnt + jnp.sum(diag_bad, dtype=jnp.int32)
+    return x_next, cnt
+
+
+def power_iter_step(a, x):
+    """One power-method step: y = A·x / ‖A·x‖ with a NaN-protected matvec.
+
+    Returns (y, rayleigh, repair_count).
+    """
+    n = a.shape[0]
+    ax, cnt = matmul_repair(a, x.reshape(n, 1))
+    ax = ax.reshape(n)
+    norm = jnp.sqrt(jnp.sum(ax * ax))
+    y = ax / jnp.maximum(norm, 1e-30)
+    rayleigh = jnp.sum(x * ax)
+    return y, rayleigh, cnt
+
+
+ENTRY_POINTS = {
+    # name -> (function, example-args builder from size n)
+    "matmul": (
+        protected_matmul,
+        lambda n: (
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+        ),
+    ),
+    "jacobi_step": (
+        jacobi_step,
+        lambda n: (
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+    ),
+    "power_iter_step": (
+        power_iter_step,
+        lambda n: (
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+    ),
+    "nan_scan": (
+        scrub,
+        lambda n: (jax.ShapeDtypeStruct((n * n,), jnp.float32),),
+    ),
+}

@@ -1,0 +1,162 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/blocks/NaN placements; every case asserts
+allclose against ref.py — the core build-time correctness signal.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.nan_repair_matmul import matmul_repair
+from compile.kernels.nan_scan import nan_scan
+
+jax.config.update("jax_platform_name", "cpu")
+
+SNAN_F32 = np.uint32(0x7FA00001)  # signaling NaN pattern (quiet bit clear)
+
+
+def mats(n, m, k, seed, nan_positions_a=(), nan_positions_b=()):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(-1, 1, (n, k)).astype(np.float32)
+    b = rng.uniform(-1, 1, (k, m)).astype(np.float32)
+    for (i, j) in nan_positions_a:
+        a[i, j] = np.float32(np.nan)
+    for (i, j) in nan_positions_b:
+        b[i, j] = np.float32(np.nan)
+    return a, b
+
+
+class TestMatmulRepairBasics:
+    def test_clean_matches_ref(self):
+        a, b = mats(64, 64, 64, 0)
+        c, cnt = matmul_repair(a, b, block=32)
+        np.testing.assert_allclose(c, ref.matmul_repair_ref(a, b), rtol=3e-4, atol=1e-5)
+        assert int(cnt[0, 0]) == 0
+
+    def test_single_nan_in_a(self):
+        a, b = mats(64, 64, 64, 1, nan_positions_a=[(3, 7)])
+        c, cnt = matmul_repair(a, b, block=32)
+        np.testing.assert_allclose(c, ref.matmul_repair_ref(a, b), rtol=3e-4, atol=1e-5)
+        assert not np.any(np.isnan(np.asarray(c)))
+        assert int(cnt[0, 0]) == ref.matmul_repair_count_ref(a, b, 32) == 2
+
+    def test_single_nan_in_b(self):
+        a, b = mats(64, 64, 64, 2, nan_positions_b=[(10, 20)])
+        c, cnt = matmul_repair(a, b, block=32)
+        np.testing.assert_allclose(c, ref.matmul_repair_ref(a, b), rtol=3e-4, atol=1e-5)
+        assert int(cnt[0, 0]) == ref.matmul_repair_count_ref(a, b, 32)
+
+    def test_repair_value_nonzero(self):
+        a, b = mats(32, 32, 32, 3, nan_positions_a=[(0, 0)])
+        c, _ = matmul_repair(a, b, block=32, repair_value=1.0)
+        np.testing.assert_allclose(
+            c, ref.matmul_repair_ref(a, b, repair_value=1.0), rtol=1e-5
+        )
+
+    def test_all_nan_input_fully_repaired(self):
+        a = np.full((32, 32), np.nan, np.float32)
+        b = np.eye(32, dtype=np.float32)
+        c, cnt = matmul_repair(a, b, block=32)
+        assert np.all(np.asarray(c) == 0.0)
+        assert int(cnt[0, 0]) == 32 * 32
+
+    def test_signaling_nan_pattern_repaired(self):
+        # the paper's concern is bit-flip NaNs, which are often signaling
+        a, b = mats(32, 32, 32, 4)
+        a_bits = a.view(np.uint32).copy()
+        a_bits[5, 5] = SNAN_F32
+        a = a_bits.view(np.float32)
+        assert np.isnan(a[5, 5])
+        c, cnt = matmul_repair(a, b, block=32)
+        assert not np.any(np.isnan(np.asarray(c)))
+        assert int(cnt[0, 0]) == 1
+
+    def test_rectangular_shapes(self):
+        a, b = mats(64, 32, 128, 5, nan_positions_a=[(0, 100)])
+        c, _ = matmul_repair(a, b, block=32)
+        np.testing.assert_allclose(c, ref.matmul_repair_ref(a, b), rtol=3e-4, atol=1e-5)
+
+    def test_uneven_shape_asserts(self):
+        a, b = mats(48, 48, 48, 6)
+        with pytest.raises(AssertionError):
+            matmul_repair(a, b, block=32)
+
+
+class TestMatmulRepairHypothesis:
+    @hypothesis.settings(max_examples=25, deadline=None)
+    @hypothesis.given(
+        mkn=st.sampled_from([(32, 32, 32), (64, 32, 32), (32, 64, 96), (96, 96, 32)]),
+        block=st.sampled_from([16, 32]),
+        seed=st.integers(0, 2**16),
+        n_nans=st.integers(0, 4),
+    )
+    def test_matches_ref_with_random_nans(self, mkn, block, seed, n_nans):
+        m, k, n = mkn
+        rng = np.random.default_rng(seed)
+        a = rng.uniform(-2, 2, (m, k)).astype(np.float32)
+        b = rng.uniform(-2, 2, (k, n)).astype(np.float32)
+        for _ in range(n_nans):
+            if rng.random() < 0.5:
+                a[rng.integers(m), rng.integers(k)] = np.nan
+            else:
+                b[rng.integers(k), rng.integers(n)] = np.nan
+        c, cnt = matmul_repair(a, b, block=block)
+        np.testing.assert_allclose(
+            c, ref.matmul_repair_ref(a, b), rtol=2e-4, atol=1e-5
+        )
+        assert int(cnt[0, 0]) == ref.matmul_repair_count_ref(a, b, block)
+        assert not np.any(np.isnan(np.asarray(c)))
+
+
+class TestNanScan:
+    def test_clean_passthrough(self):
+        x = np.linspace(-1, 1, 512).astype(np.float32)
+        y, cnt = nan_scan(x, block=128)
+        np.testing.assert_array_equal(np.asarray(y), x)
+        assert int(cnt[0]) == 0
+
+    def test_repairs_and_counts(self):
+        x = np.ones(512, np.float32)
+        x[[3, 100, 511]] = np.nan
+        y, cnt = nan_scan(x, block=128)
+        want, want_cnt = ref.nan_scan_ref(jnp.asarray(x))
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+        assert int(cnt[0]) == want_cnt == 3
+
+    def test_repair_value(self):
+        x = np.zeros(256, np.float32)
+        x[0] = np.nan
+        y, _ = nan_scan(x, block=256, repair_value=7.5)
+        assert np.asarray(y)[0] == np.float32(7.5)
+
+    @hypothesis.settings(max_examples=20, deadline=None)
+    @hypothesis.given(
+        n=st.sampled_from([128, 256, 1024]),
+        block=st.sampled_from([64, 128]),
+        seed=st.integers(0, 2**16),
+        frac=st.floats(0, 0.2),
+    )
+    def test_hypothesis_sweep(self, n, block, seed, frac):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=n).astype(np.float32)
+        mask = rng.random(n) < frac
+        x[mask] = np.nan
+        y, cnt = nan_scan(x, block=block)
+        want, want_cnt = ref.nan_scan_ref(jnp.asarray(x))
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+        assert int(cnt[0]) == want_cnt
+
+    def test_scan_then_matmul_is_table3_memory_row(self):
+        # scrub first (memory repair analogue) → matmul sees zero NaNs
+        a = np.ones((32, 32), np.float32)
+        a[4, 4] = np.nan
+        clean_flat, cnt1 = nan_scan(a.reshape(-1), block=256)
+        assert int(cnt1[0]) == 1
+        clean = np.asarray(clean_flat).reshape(32, 32)
+        _, cnt2 = matmul_repair(clean, np.ones((32, 32), np.float32), block=32)
+        assert int(cnt2[0, 0]) == 0

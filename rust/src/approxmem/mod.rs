@@ -1,0 +1,24 @@
+//! Software approximate-memory substrate.
+//!
+//! The paper assumes main memory whose DRAM refresh rate has been lowered to
+//! save energy, raising the bit-error rate (BER).  No such hardware is
+//! available here, so this module provides the closest software equivalent
+//! (DESIGN.md §1): an allocation pool whose buffers are registered for
+//! fault injection ([`pool`]), a deterministic bit-flip injector driven by a
+//! BER model ([`injector`]), the refresh-interval→BER retention model that
+//! links injection rates to the energy knob ([`retention`]), a DRAM energy
+//! model quantifying what lowering refresh buys ([`energy`]), and the two
+//! *proactive* protection baselines the paper argues against: SECDED ECC
+//! ([`ecc`]) and periodic scrubbing ([`scrubber`]).
+
+pub mod ecc;
+pub mod energy;
+pub mod injector;
+pub mod pool;
+pub mod profiles;
+pub mod retention;
+pub mod scrubber;
+
+pub use injector::{InjectionReport, InjectionSpec, Injector};
+pub use pool::{ApproxPool, Region};
+pub use retention::RetentionModel;

@@ -1,0 +1,269 @@
+//! The approximate-memory allocation pool.
+//!
+//! Workloads allocate their numerical buffers from an [`ApproxPool`]; every
+//! allocation is registered so the injector can flip bits in it and the
+//! memory-repair mechanism can check whether an address it derived from a
+//! back-trace actually belongs to approximate memory (repairing arbitrary
+//! process memory on a bad decode would be a correctness bug — the pool is
+//! the safety boundary, mirroring Flikker's critical/non-critical
+//! partitioning that the paper cites).
+
+use std::alloc::{alloc_zeroed, dealloc, Layout};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Cache-line/SIMD-friendly alignment for all approximate buffers.
+pub const APPROX_ALIGN: usize = 64;
+
+/// A registered approximate-memory region (address range).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub start: usize,
+    pub len: usize,
+    pub id: usize,
+}
+
+impl Region {
+    #[inline]
+    pub fn contains(&self, addr: usize) -> bool {
+        addr >= self.start && addr < self.start + self.len
+    }
+
+    #[inline]
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+}
+
+#[derive(Debug, Default)]
+struct Registry {
+    regions: Vec<Region>,
+}
+
+/// An allocation pool whose buffers are subject to fault injection.
+///
+/// The pool hands out [`ApproxBuf<T>`]s (owned, aligned, zero-initialised)
+/// and keeps an address-range registry shared with the trap handler.
+#[derive(Debug, Clone, Default)]
+pub struct ApproxPool {
+    registry: Arc<Mutex<Registry>>,
+    next_id: Arc<AtomicUsize>,
+}
+
+impl ApproxPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate a zeroed buffer of `len` elements registered for injection.
+    pub fn alloc_f64(&self, len: usize) -> ApproxBuf<f64> {
+        self.alloc::<f64>(len)
+    }
+
+    pub fn alloc_f32(&self, len: usize) -> ApproxBuf<f32> {
+        self.alloc::<f32>(len)
+    }
+
+    pub fn alloc<T: Copy + Default>(&self, len: usize) -> ApproxBuf<T> {
+        assert!(len > 0, "zero-length approximate buffer");
+        let bytes = len * std::mem::size_of::<T>();
+        let layout = Layout::from_size_align(bytes, APPROX_ALIGN).expect("layout");
+        // Safety: layout has non-zero size (len > 0, T is not a ZST for the
+        // numeric types used here).
+        let ptr = unsafe { alloc_zeroed(layout) } as *mut T;
+        assert!(!ptr.is_null(), "allocation failed");
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let region = Region {
+            start: ptr as usize,
+            len: bytes,
+            id,
+        };
+        self.registry.lock().unwrap().regions.push(region);
+        ApproxBuf {
+            ptr,
+            len,
+            layout,
+            region_id: id,
+            pool: self.clone(),
+        }
+    }
+
+    /// Whether `addr..addr+size` lies entirely inside one registered region.
+    pub fn covers(&self, addr: usize, size: usize) -> bool {
+        let reg = self.registry.lock().unwrap();
+        reg.regions
+            .iter()
+            .any(|r| r.contains(addr) && addr + size <= r.end())
+    }
+
+    /// Snapshot of all live regions.
+    pub fn regions(&self) -> Vec<Region> {
+        self.registry.lock().unwrap().regions.clone()
+    }
+
+    /// Total registered bytes.
+    pub fn total_bytes(&self) -> usize {
+        self.registry.lock().unwrap().regions.iter().map(|r| r.len).sum()
+    }
+
+    fn unregister(&self, id: usize) {
+        let mut reg = self.registry.lock().unwrap();
+        reg.regions.retain(|r| r.id != id);
+    }
+}
+
+/// An owned, aligned, injection-registered buffer.
+///
+/// Deliberately *not* `Deref<Target=[T]>`-only sugar: the raw pointer is
+/// exposed because the trap handler patches it from a signal context.
+#[derive(Debug)]
+pub struct ApproxBuf<T: Copy> {
+    ptr: *mut T,
+    len: usize,
+    layout: Layout,
+    region_id: usize,
+    pool: ApproxPool,
+}
+
+// Safety: the buffer owns its allocation; cross-thread use is guarded by
+// the usual borrow rules on the slice accessors.
+unsafe impl<T: Copy + Send> Send for ApproxBuf<T> {}
+unsafe impl<T: Copy + Sync> Sync for ApproxBuf<T> {}
+
+impl<T: Copy> ApproxBuf<T> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+
+    #[inline]
+    pub fn as_ptr(&self) -> *const T {
+        self.ptr
+    }
+
+    #[inline]
+    pub fn as_mut_ptr(&mut self) -> *mut T {
+        self.ptr
+    }
+
+    #[inline]
+    pub fn addr(&self) -> usize {
+        self.ptr as usize
+    }
+
+    #[inline]
+    pub fn byte_len(&self) -> usize {
+        self.layout.size()
+    }
+
+    pub fn region_id(&self) -> usize {
+        self.region_id
+    }
+
+    pub fn fill_with(&mut self, mut f: impl FnMut(usize) -> T) {
+        for (i, slot) in self.as_mut_slice().iter_mut().enumerate() {
+            *slot = f(i);
+        }
+    }
+}
+
+impl<T: Copy> std::ops::Index<usize> for ApproxBuf<T> {
+    type Output = T;
+    fn index(&self, i: usize) -> &T {
+        &self.as_slice()[i]
+    }
+}
+
+impl<T: Copy> std::ops::IndexMut<usize> for ApproxBuf<T> {
+    fn index_mut(&mut self, i: usize) -> &mut T {
+        &mut self.as_mut_slice()[i]
+    }
+}
+
+impl<T: Copy> Drop for ApproxBuf<T> {
+    fn drop(&mut self) {
+        self.pool.unregister(self.region_id);
+        unsafe { dealloc(self.ptr as *mut u8, self.layout) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_zeroed_and_aligned() {
+        let pool = ApproxPool::new();
+        let buf = pool.alloc_f64(1024);
+        assert_eq!(buf.len(), 1024);
+        assert!(buf.as_slice().iter().all(|&x| x == 0.0));
+        assert_eq!(buf.addr() % APPROX_ALIGN, 0);
+    }
+
+    #[test]
+    fn registry_tracks_regions() {
+        let pool = ApproxPool::new();
+        let a = pool.alloc_f64(10);
+        let b = pool.alloc_f32(20);
+        assert_eq!(pool.regions().len(), 2);
+        assert_eq!(pool.total_bytes(), 10 * 8 + 20 * 4);
+        assert!(pool.covers(a.addr(), 8));
+        assert!(pool.covers(a.addr() + 72, 8));
+        assert!(!pool.covers(a.addr() + 10 * 8, 1)); // one past the end
+        drop(a);
+        assert_eq!(pool.regions().len(), 1);
+        assert!(pool.covers(b.addr(), 4));
+    }
+
+    #[test]
+    fn covers_rejects_straddling_ranges() {
+        let pool = ApproxPool::new();
+        let a = pool.alloc_f64(4);
+        // 8 bytes starting at the last element is fine; starting past-mid is
+        // not.
+        assert!(pool.covers(a.addr() + 24, 8));
+        assert!(!pool.covers(a.addr() + 28, 8));
+    }
+
+    #[test]
+    fn covers_outside_pool_is_false() {
+        let pool = ApproxPool::new();
+        let _a = pool.alloc_f64(4);
+        let stack_var = 1.0f64;
+        assert!(!pool.covers(&stack_var as *const f64 as usize, 8));
+    }
+
+    #[test]
+    fn index_and_fill() {
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f64(8);
+        buf.fill_with(|i| i as f64 * 2.0);
+        assert_eq!(buf[3], 6.0);
+        buf[3] = -1.0;
+        assert_eq!(buf.as_slice()[3], -1.0);
+    }
+
+    #[test]
+    fn distinct_pools_do_not_share_registry() {
+        let p1 = ApproxPool::new();
+        let p2 = ApproxPool::new();
+        let a = p1.alloc_f64(4);
+        assert!(p1.covers(a.addr(), 8));
+        assert!(!p2.covers(a.addr(), 8));
+    }
+}

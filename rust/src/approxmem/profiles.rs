@@ -1,0 +1,126 @@
+//! Named device profiles tying the retention and energy models together —
+//! the three memory classes the paper's motivation spans: commodity server
+//! DDR (RAIDR's target), mobile LPDDR (Flikker's), and a projected
+//! high-density future part (the paper's "future approximate computing
+//! environment with high memory density and high error-rate", §2.2).
+
+use super::energy::DramEnergyModel;
+use super::retention::RetentionModel;
+
+/// A named (retention, energy) parameter set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub retention: RetentionModel,
+    pub energy: DramEnergyModel,
+}
+
+impl DeviceProfile {
+    /// DDR3/4 server part, RAIDR-calibrated: refresh ≈20 % of DRAM energy.
+    pub fn server_ddr() -> Self {
+        Self {
+            name: "server-ddr",
+            description: "commodity server DDR (RAIDR [13] calibration)",
+            retention: RetentionModel::default(),
+            energy: DramEnergyModel {
+                refresh_fraction_at_64ms: 0.20,
+                approx_fraction: 1.0,
+            },
+        }
+    }
+
+    /// Mobile LPDDR in self-refresh-dominated duty cycle (Flikker \[14\]):
+    /// refresh is a larger share; only the non-critical partition (~75 %)
+    /// is approximate.
+    pub fn mobile_lpddr() -> Self {
+        Self {
+            name: "mobile-lpddr",
+            description: "mobile LPDDR, Flikker [14] partitioning (75% non-critical)",
+            retention: RetentionModel::default(),
+            energy: DramEnergyModel {
+                refresh_fraction_at_64ms: 0.32,
+                approx_fraction: 0.75,
+            },
+        }
+    }
+
+    /// Projected dense future part (paper §2.2): weaker cells — the BER
+    /// curve starts earlier and climbs faster; refresh dominates more.
+    pub fn future_dense() -> Self {
+        let mut retention = RetentionModel::default();
+        retention.a *= 50.0; // 50× weaker cells at the same interval
+        retention.b *= 1.3;
+        Self {
+            name: "future-dense",
+            description: "projected high-density part (paper §2.2 outlook)",
+            retention,
+            energy: DramEnergyModel {
+                refresh_fraction_at_64ms: 0.35,
+                approx_fraction: 1.0,
+            },
+        }
+    }
+
+    pub fn all() -> Vec<Self> {
+        vec![Self::server_ddr(), Self::mobile_lpddr(), Self::future_dense()]
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        Self::all()
+            .into_iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown device profile {name:?}"))
+    }
+
+    /// The operating point: the longest refresh interval whose BER stays
+    /// below `ber_budget`, and the savings it yields.
+    pub fn operating_point(&self, ber_budget: f64) -> (f64, f64) {
+        let interval = self
+            .retention
+            .interval_for_ber(ber_budget)
+            .unwrap_or(self.retention.t0_secs);
+        (interval, self.energy.evaluate(interval).savings)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_resolve_by_name() {
+        for p in DeviceProfile::all() {
+            let q = DeviceProfile::by_name(p.name).unwrap();
+            assert_eq!(p, q);
+        }
+        assert!(DeviceProfile::by_name("hbm9").is_err());
+    }
+
+    #[test]
+    fn future_part_fails_earlier() {
+        let server = DeviceProfile::server_ddr();
+        let future = DeviceProfile::future_dense();
+        for t in [1.0, 5.0, 10.0] {
+            assert!(future.retention.ber(t) > server.retention.ber(t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn operating_points_ordered_by_aggressiveness() {
+        let p = DeviceProfile::server_ddr();
+        let (t1, s1) = p.operating_point(1e-9);
+        let (t2, s2) = p.operating_point(1e-6);
+        assert!(t2 > t1, "looser BER budget → longer interval");
+        assert!(s2 > s1, "…and more savings");
+        assert!(s2 <= p.energy.max_savings() + 1e-12);
+    }
+
+    #[test]
+    fn mobile_profile_reproduces_flikker_range() {
+        // Flikker claims 20–25 % memory-energy savings
+        let p = DeviceProfile::mobile_lpddr();
+        let (_, s) = p.operating_point(1e-5);
+        assert!(s > 0.18 && s < 0.26, "savings {s}");
+    }
+}

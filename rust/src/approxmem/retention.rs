@@ -1,0 +1,127 @@
+//! Refresh-interval → bit-error-rate retention model.
+//!
+//! The paper's premise (§2.1) is that lowering the DRAM refresh rate saves
+//! energy (RAIDR \[13\]: 16.1 %, Flikker \[14\]: 20–25 %) at the cost of
+//! retention failures.  Published retention studies (RAIDR fig. 2; Liu et
+//! al. "An Experimental Study of Data Retention Behavior in Modern DRAM
+//! Devices", ISCA'13) show the fraction of weak cells grows roughly
+//! exponentially in the refresh interval beyond the standard 64 ms window.
+//!
+//! We model per-bit failure probability per retention window as
+//!
+//! ```text
+//! BER(t) = 0                      for t <= t0   (all cells retain)
+//! BER(t) = a * exp(b * (t - t0))  for t >  t0
+//! ```
+//!
+//! calibrated so that BER(64 ms) = 0, BER(1 s) ≈ 1e-9, BER(10 s) ≈ 1e-5 —
+//! the operating range explored by RAIDR/Flikker-class proposals.  The
+//! model is explicit and swappable; experiments always report the raw BER
+//! alongside the interval so results do not depend on the calibration.
+
+/// Retention model mapping refresh interval to per-bit error probability
+/// per window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetentionModel {
+    /// Interval below which no cell fails (standard refresh), seconds.
+    pub t0_secs: f64,
+    /// Scale factor `a` at t0.
+    pub a: f64,
+    /// Exponential slope `b` (1/s).
+    pub b: f64,
+    /// BER ceiling (all-weak-cell saturation).
+    pub ber_max: f64,
+}
+
+impl Default for RetentionModel {
+    fn default() -> Self {
+        // Calibration: BER(1s)=1e-9, BER(10s)=1e-5 →
+        // b = ln(1e4)/9 ≈ 1.0234, a = 1e-9 / exp(b*(1-0.064)) ≈ 3.84e-10
+        let b = (1e-5f64 / 1e-9).ln() / 9.0;
+        let a = 1e-9 / (b * (1.0 - 0.064)).exp();
+        Self {
+            t0_secs: 0.064,
+            a,
+            b,
+            ber_max: 1e-3,
+        }
+    }
+}
+
+impl RetentionModel {
+    /// Per-bit error probability for one retention window of `t` seconds.
+    pub fn ber(&self, t_secs: f64) -> f64 {
+        if t_secs <= self.t0_secs {
+            return 0.0;
+        }
+        (self.a * (self.b * (t_secs - self.t0_secs)).exp()).min(self.ber_max)
+    }
+
+    /// Inverse: refresh interval that yields a target BER (None if the
+    /// target is 0 or above the ceiling).
+    pub fn interval_for_ber(&self, ber: f64) -> Option<f64> {
+        if ber <= 0.0 || ber > self.ber_max {
+            return None;
+        }
+        Some(self.t0_secs + (ber / self.a).ln() / self.b)
+    }
+
+    /// Expected bit flips in `n_bits` over one window at interval `t`.
+    pub fn expected_flips(&self, n_bits: u64, t_secs: f64) -> f64 {
+        self.ber(t_secs) * n_bits as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_refresh_has_zero_ber() {
+        let m = RetentionModel::default();
+        assert_eq!(m.ber(0.064), 0.0);
+        assert_eq!(m.ber(0.032), 0.0);
+    }
+
+    #[test]
+    fn calibration_points() {
+        let m = RetentionModel::default();
+        assert!((m.ber(1.0) / 1e-9 - 1.0).abs() < 1e-6, "{}", m.ber(1.0));
+        assert!((m.ber(10.0) / 1e-5 - 1.0).abs() < 1e-6, "{}", m.ber(10.0));
+    }
+
+    #[test]
+    fn monotonic_in_interval() {
+        let m = RetentionModel::default();
+        let mut last = -1.0;
+        for t in [0.064, 0.1, 0.5, 1.0, 2.0, 5.0, 10.0, 20.0] {
+            let b = m.ber(t);
+            assert!(b >= last, "t={t}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn ceiling_respected() {
+        let m = RetentionModel::default();
+        assert_eq!(m.ber(1e6), m.ber_max);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let m = RetentionModel::default();
+        for ber in [1e-9, 1e-8, 1e-6, 1e-5] {
+            let t = m.interval_for_ber(ber).unwrap();
+            assert!((m.ber(t) / ber - 1.0).abs() < 1e-9, "ber={ber}");
+        }
+        assert!(m.interval_for_ber(0.0).is_none());
+        assert!(m.interval_for_ber(1.0).is_none());
+    }
+
+    #[test]
+    fn expected_flips_scales() {
+        let m = RetentionModel::default();
+        let e = m.expected_flips(8 * 1024 * 1024 * 1024, 10.0); // 1 GiB
+        assert!((e / (8.0 * 1024.0 * 1024.0 * 1024.0 * 1e-5) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,181 @@
+//! In-repo micro-benchmark framework (criterion is unavailable offline).
+//!
+//! Usage from a `[[bench]] harness = false` target:
+//!
+//! ```no_run
+//! use nanrepair::bench::{Bench, Runner};
+//! let mut r = Runner::from_env("my_bench");
+//! r.bench("matmul/256", Bench::new(|| { /* work */ }));
+//! r.finish();
+//! ```
+//!
+//! Measures wall time with warmup, adaptive iteration count targeting a
+//! fixed measurement budget, and reports mean ± ci95 / p50 / p99.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+use crate::util::table::{fmt_secs, Table};
+
+/// One benchmark closure plus its tuning.
+pub struct Bench<F: FnMut()> {
+    f: F,
+    /// Minimum measured samples.
+    pub min_samples: usize,
+    /// Wall-clock budget for measurement (seconds).
+    pub budget_secs: f64,
+    /// Warmup iterations.
+    pub warmup: usize,
+}
+
+impl<F: FnMut()> Bench<F> {
+    pub fn new(f: F) -> Self {
+        Self {
+            f,
+            min_samples: 10,
+            budget_secs: 1.0,
+            warmup: 2,
+        }
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.min_samples = n;
+        self
+    }
+
+    pub fn budget(mut self, secs: f64) -> Self {
+        self.budget_secs = secs;
+        self
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+/// Collects and prints benchmark results.
+pub struct Runner {
+    suite: String,
+    results: Vec<BenchResult>,
+    /// Quick mode (NANREPAIR_BENCH_QUICK=1): tiny budgets, for CI.
+    quick: bool,
+}
+
+impl Runner {
+    pub fn new(suite: &str, quick: bool) -> Self {
+        println!("== bench suite: {suite}{} ==", if quick { " (quick)" } else { "" });
+        Self {
+            suite: suite.to_string(),
+            results: Vec::new(),
+            quick,
+        }
+    }
+
+    pub fn from_env(suite: &str) -> Self {
+        let quick = std::env::var("NANREPAIR_BENCH_QUICK").map_or(false, |v| v == "1");
+        Self::new(suite, quick)
+    }
+
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Run one benchmark and record it.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut b: Bench<F>) -> &BenchResult {
+        if self.quick {
+            b.budget_secs = b.budget_secs.min(0.15);
+            b.warmup = b.warmup.min(1);
+            b.min_samples = b.min_samples.min(5);
+        }
+        for _ in 0..b.warmup {
+            (b.f)();
+        }
+        let mut samples = Vec::with_capacity(b.min_samples * 2);
+        let t_start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            (b.f)();
+            samples.push(t0.elapsed().as_secs_f64());
+            if samples.len() >= b.min_samples
+                && t_start.elapsed().as_secs_f64() >= b.budget_secs
+            {
+                break;
+            }
+            // hard cap so a single slow case cannot hang the suite
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        let summary = Summary::of(&samples);
+        println!(
+            "{:<40} {:>12} ± {:>10}  (p50 {:>10}, p99 {:>10}, n={})",
+            format!("{}/{}", self.suite, name),
+            fmt_secs(summary.mean),
+            fmt_secs(summary.ci95()),
+            fmt_secs(summary.p50),
+            fmt_secs(summary.p99),
+            summary.n
+        );
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            summary,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Print the final table; returns it for programmatic use.
+    pub fn finish(self) -> Vec<BenchResult> {
+        let mut t = Table::new(
+            &format!("suite {}", self.suite),
+            &["bench", "mean", "ci95", "p50", "p99", "n"],
+        );
+        for r in &self.results {
+            t.row(&[
+                r.name.clone(),
+                fmt_secs(r.summary.mean),
+                fmt_secs(r.summary.ci95()),
+                fmt_secs(r.summary.p50),
+                fmt_secs(r.summary.p99),
+                r.summary.n.to_string(),
+            ]);
+        }
+        t.print();
+        self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let mut r = Runner::new("test", true);
+        let res = r.bench(
+            "sleep1ms",
+            Bench::new(|| std::thread::sleep(std::time::Duration::from_millis(1)))
+                .samples(5)
+                .budget(0.05),
+        );
+        assert!(res.summary.mean >= 0.001);
+        assert!(res.summary.mean < 0.05);
+        let all = r.finish();
+        assert_eq!(all.len(), 1);
+    }
+
+    #[test]
+    fn quick_mode_caps_budget() {
+        let mut r = Runner::new("test", true);
+        let t0 = Instant::now();
+        r.bench("noop", Bench::new(|| {}).budget(10.0));
+        assert!(t0.elapsed().as_secs_f64() < 2.0, "quick mode must cap");
+    }
+}

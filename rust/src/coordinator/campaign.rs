@@ -1,0 +1,297 @@
+//! One experiment cell: workload × protection × injection, measured.
+//!
+//! Replicates the paper's §4 methodology: allocate matrices in approximate
+//! memory, inject (exactly one paper-pattern NaN for Fig. 7/Tab. 3, or a
+//! BER draw for the extension sweeps), run under the protection scheme,
+//! time it, and collect trap statistics and output quality.
+
+use std::time::Instant;
+
+use crate::approxmem::injector::{InjectionReport, InjectionSpec, Injector};
+use crate::approxmem::pool::ApproxPool;
+use crate::approxmem::scrubber::Scrubber;
+use crate::repair::policy::RepairPolicy;
+use crate::trap::{handler, TrapGuard};
+use crate::util::stats::Summary;
+use crate::workloads::{Quality, WorkloadKind};
+
+use super::protection::Protection;
+
+/// Full description of a campaign cell.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    pub workload: WorkloadKind,
+    pub protection: Protection,
+    pub injection: InjectionSpec,
+    pub policy: RepairPolicy,
+    /// Measured repetitions (paper: 10).
+    pub reps: usize,
+    /// Unmeasured warmup repetitions.
+    pub warmup: usize,
+    pub seed: u64,
+    /// Compare output against the clean reference (costs an extra clean
+    /// run; off for pure timing like Fig. 7).
+    pub check_quality: bool,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        Self {
+            workload: WorkloadKind::MatMul { n: 256 },
+            protection: Protection::RegisterMemory,
+            injection: InjectionSpec::ExactNaNs { count: 1 },
+            policy: RepairPolicy::Zero,
+            reps: 10,
+            warmup: 1,
+            seed: 42,
+            check_quality: false,
+        }
+    }
+}
+
+/// What a campaign produced.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    pub config_label: String,
+    /// Wall-clock seconds of each measured rep.
+    pub elapsed: Summary,
+    /// Trap counters accumulated over all measured reps.
+    pub traps: handler::TrapStats,
+    /// Injection ground truth of the last rep.
+    pub injection: InjectionReport,
+    /// Output quality of the last rep (if requested).
+    pub quality: Option<Quality>,
+    /// Scrub statistics (Scrub protection only): (passes, words, repairs).
+    pub scrub_passes: u64,
+    pub scrub_repairs: u64,
+    /// True if every rep finished with finite control flow (always true —
+    /// a crash would abort the process; kept for ptrace-supervisor runs).
+    pub completed: bool,
+    /// FLOPs per rep, for throughput derivation.
+    pub flops: u64,
+}
+
+impl CampaignReport {
+    pub fn gflops(&self) -> f64 {
+        if self.elapsed.mean == 0.0 {
+            0.0
+        } else {
+            self.flops as f64 / self.elapsed.mean / 1e9
+        }
+    }
+}
+
+/// Runner for one campaign cell.
+pub struct Campaign {
+    cfg: CampaignConfig,
+}
+
+impl Campaign {
+    pub fn new(cfg: CampaignConfig) -> Self {
+        Self { cfg }
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}:{}/{}",
+            self.cfg.workload.name(),
+            match self.cfg.workload {
+                WorkloadKind::MatMul { n }
+                | WorkloadKind::MatVec { n }
+                | WorkloadKind::Jacobi { n, .. }
+                | WorkloadKind::Cg { n, .. }
+                | WorkloadKind::Lu { n }
+                | WorkloadKind::Stencil { n, .. } => n,
+            },
+            self.cfg.protection.name()
+        )
+    }
+
+    /// Execute the campaign. Takes the global trap lock if the protection
+    /// scheme arms the trap.
+    pub fn run(&self) -> anyhow::Result<CampaignReport> {
+        let cfg = &self.cfg;
+        if matches!(cfg.protection, Protection::Ecc | Protection::Abft) {
+            anyhow::bail!(
+                "{} protection is workload-specific; use harness::protection_compare",
+                cfg.protection.name()
+            );
+        }
+        let _trap_serialize = cfg
+            .protection
+            .uses_trap()
+            .then(crate::trap::test_lock);
+
+        let pool = ApproxPool::new();
+        let mut workload = cfg.workload.build(&pool, cfg.seed);
+        let mut injector = Injector::new(cfg.seed ^ 0x696e6a6563740000);
+        let mut input_rng = crate::util::rng::Pcg64::seed(cfg.seed ^ 0x706f69736f6e);
+        let scrubber = Scrubber::new(match cfg.policy {
+            RepairPolicy::Constant(c) => c,
+            RepairPolicy::One => 1.0,
+            _ => 0.0,
+        });
+
+        // warmup (no injection): page in, stabilize frequency
+        for _ in 0..cfg.warmup {
+            workload.reset();
+            workload.run();
+        }
+
+        let guard = cfg
+            .protection
+            .trap_config(cfg.policy)
+            .map(|tc| TrapGuard::arm(&pool, &tc));
+        if let Some(g) = &guard {
+            g.reset_stats();
+        } else {
+            handler::stats_reset();
+        }
+
+        let mut elapsed = Vec::with_capacity(cfg.reps);
+        let mut last_injection = InjectionReport::default();
+        let mut scrub_passes = 0u64;
+        let mut scrub_repairs = 0u64;
+
+        for rep in 0..cfg.reps {
+            workload.reset();
+            // Paper §4 methodology: ExactNaNs targets the *input* matrices
+            // ("injected into one of the two matrices after their
+            // initialization"); statistical specs inject pool-wide.
+            last_injection = match cfg.injection {
+                InjectionSpec::ExactNaNs { count } => {
+                    let mut rep = InjectionReport::default();
+                    for _ in 0..count {
+                        let idx = input_rng.index(workload.input_len());
+                        let addr = workload
+                            .poison_input(idx, crate::fp::nan::PAPER_NAN_BITS);
+                        rep.bits_flipped += 64;
+                        rep.words_touched += 1;
+                        rep.snans_created += 1;
+                        rep.nan_addrs.push(addr);
+                    }
+                    rep
+                }
+                other => injector.inject(&pool, other),
+            };
+
+            // proactive scrub before compute (period in runs)
+            if let Protection::Scrub { period_runs } = cfg.protection {
+                if period_runs > 0 && (rep as u32) % period_runs == 0 {
+                    let t0 = Instant::now();
+                    let r = scrubber.scrub(&pool);
+                    scrub_passes += 1;
+                    scrub_repairs += r.nans_repaired();
+                    // scrub time *is* protection overhead: count it
+                    let scrub_secs = t0.elapsed().as_secs_f64();
+                    let t1 = Instant::now();
+                    workload.run();
+                    elapsed.push(scrub_secs + t1.elapsed().as_secs_f64());
+                    continue;
+                }
+            }
+
+            let t0 = Instant::now();
+            workload.run();
+            elapsed.push(t0.elapsed().as_secs_f64());
+        }
+
+        let traps = handler::stats_snapshot();
+        drop(guard);
+
+        let quality = cfg.check_quality.then(|| workload.quality());
+
+        Ok(CampaignReport {
+            config_label: self.label(),
+            elapsed: Summary::of(&elapsed),
+            traps,
+            injection: last_injection,
+            quality,
+            scrub_passes,
+            scrub_repairs,
+            completed: true,
+            flops: workload.flops(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg(n: usize, protection: Protection) -> CampaignConfig {
+        CampaignConfig {
+            workload: WorkloadKind::MatMul { n },
+            protection,
+            injection: InjectionSpec::ExactNaNs { count: 1 },
+            policy: RepairPolicy::Zero,
+            reps: 3,
+            warmup: 0,
+            seed: 7,
+            check_quality: true,
+        }
+    }
+
+    #[test]
+    fn memory_protection_single_trap_per_rep() {
+        let cfg = base_cfg(24, Protection::RegisterMemory);
+        let rep = Campaign::new(cfg).run().unwrap();
+        assert!(rep.completed);
+        // one NaN injected per rep, repaired at first touch →
+        // exactly 1 trap per rep (3 reps)
+        assert_eq!(rep.traps.sigfpe_total, 3, "{:#?}", rep.traps);
+        assert!(rep.traps.memory_repairs() >= 3);
+        let q = rep.quality.unwrap();
+        assert!(!q.corrupted, "reactive repair must yield finite output");
+    }
+
+    #[test]
+    fn register_only_traps_scale_with_touches() {
+        // Table 3 "register" row: the NaN is re-read once per output
+        // row/column → exactly N traps per rep.
+        let n = 16;
+        let reps = 3;
+        let cfg = base_cfg(n, Protection::RegisterOnly);
+        let rep = Campaign::new(cfg).run().unwrap();
+        assert!(rep.completed);
+        assert_eq!(
+            rep.traps.sigfpe_total,
+            (n * reps) as u64,
+            "{:#?}",
+            rep.traps
+        );
+        assert_eq!(rep.traps.memory_repairs_backtraced, 0);
+        assert_eq!(rep.traps.memory_repairs_direct, 0);
+        assert!(!rep.quality.unwrap().corrupted);
+    }
+
+    #[test]
+    fn none_protection_propagates_nans() {
+        let cfg = base_cfg(16, Protection::None);
+        let rep = Campaign::new(cfg).run().unwrap();
+        assert_eq!(rep.traps.sigfpe_total, 0);
+        // NaN is always injected into an *input* matrix (paper semantics)
+        // → without protection the output must be corrupted (Fig. 1).
+        assert!(rep.quality.unwrap().corrupted);
+    }
+
+    #[test]
+    fn scrub_protection_repairs_proactively() {
+        let cfg = base_cfg(16, Protection::Scrub { period_runs: 1 });
+        let rep = Campaign::new(cfg).run().unwrap();
+        assert_eq!(rep.scrub_passes, 3);
+        assert!(rep.scrub_repairs >= 3, "{:?}", rep.scrub_repairs);
+        assert!(!rep.quality.unwrap().corrupted);
+        assert_eq!(rep.traps.sigfpe_total, 0);
+    }
+
+    #[test]
+    fn gflops_positive() {
+        let mut cfg = base_cfg(24, Protection::None);
+        cfg.injection = InjectionSpec::None;
+        cfg.check_quality = false;
+        let rep = Campaign::new(cfg).run().unwrap();
+        assert!(rep.gflops() > 0.0);
+        assert_eq!(rep.elapsed.n, 3);
+    }
+}

@@ -1,0 +1,134 @@
+//! Named counters/gauges for the coordinator and harness: cheap to update,
+//! rendered as one table at the end of a run.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::table::Table;
+
+/// A process-wide metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicI64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The global registry.
+    pub fn global() -> &'static Metrics {
+        static GLOBAL: once_cell::sync::Lazy<Metrics> = once_cell::sync::Lazy::new(Metrics::new);
+        &GLOBAL
+    }
+
+    pub fn add(&self, name: &str, delta: i64) {
+        let map = self.counters.lock().unwrap();
+        if let Some(c) = map.get(name) {
+            c.fetch_add(delta, Ordering::Relaxed);
+            return;
+        }
+        drop(map);
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicI64::new(0))
+            .fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn set(&self, name: &str, value: i64) {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicI64::new(0))
+            .store(value, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, name: &str) -> i64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, i64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    pub fn reset(&self) {
+        self.counters.lock().unwrap().clear();
+    }
+
+    pub fn render(&self, title: &str) -> String {
+        let mut t = Table::new(title, &["metric", "value"]);
+        for (k, v) in self.snapshot() {
+            t.row(&[k, v.to_string()]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_get_set() {
+        let m = Metrics::new();
+        m.incr("a");
+        m.add("a", 4);
+        m.set("b", -2);
+        assert_eq!(m.get("a"), 5);
+        assert_eq!(m.get("b"), -2);
+        assert_eq!(m.get("missing"), 0);
+    }
+
+    #[test]
+    fn snapshot_and_render() {
+        let m = Metrics::new();
+        m.set("x", 1);
+        m.set("y", 2);
+        let s = m.snapshot();
+        assert_eq!(s.len(), 2);
+        let r = m.render("t");
+        assert!(r.contains('x') && r.contains('y'));
+    }
+
+    #[test]
+    fn concurrent_increments() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.incr("n");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.get("n"), 8000);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let m = Metrics::new();
+        m.incr("a");
+        m.reset();
+        assert_eq!(m.get("a"), 0);
+        assert!(m.snapshot().is_empty());
+    }
+}

@@ -1,0 +1,16 @@
+//! The L3 coordinator: protection schemes, injection campaigns, the
+//! experiment scheduler, and metrics.
+//!
+//! A [`campaign::Campaign`] is one (workload × protection × injection)
+//! cell: allocate in approximate memory, inject, run under the configured
+//! protection, measure.  The [`scheduler`] fans independent cells out over
+//! a worker pool (trap-armed cells serialize on the global trap state; the
+//! MXCSR unmasking itself is per-thread).
+
+pub mod campaign;
+pub mod metrics;
+pub mod protection;
+pub mod scheduler;
+
+pub use campaign::{Campaign, CampaignConfig, CampaignReport};
+pub use protection::Protection;

@@ -1,0 +1,112 @@
+//! Protection schemes — the design space the paper situates itself in
+//! (§2.2, §3.1, §6): nothing, the two reactive variants (the paper's
+//! contribution), and the proactive/algorithmic baselines.
+
+use crate::repair::policy::RepairPolicy;
+
+/// How the workload is protected against NaNs from approximate memory.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Protection {
+    /// No protection: NaNs propagate silently (baseline "normal" hardware
+    /// behaviour — the paper's Figure-1 catastrophe).
+    None,
+    /// Reactive, register-repair only (paper §3.3). Re-traps every time
+    /// the same NaN is re-loaded.
+    RegisterOnly,
+    /// Reactive, register + memory repair (paper §3.3 + §3.4). The paper's
+    /// full mechanism: at most one trap per NaN.
+    RegisterMemory,
+    /// Proactive scrubbing: sweep all approximate memory every
+    /// `period_runs` workload executions (cost ∝ memory size).
+    Scrub { period_runs: u32 },
+    /// SECDED ECC on every access (the §2.2 strawman; corrects the flip
+    /// before it ever becomes a visible NaN, at per-access cost).
+    Ecc,
+    /// Algorithm-based fault tolerance (matmul only): checksum + retry.
+    Abft,
+}
+
+impl Protection {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Protection::None => "none",
+            Protection::RegisterOnly => "register",
+            Protection::RegisterMemory => "memory",
+            Protection::Scrub { .. } => "scrub",
+            Protection::Ecc => "ecc",
+            Protection::Abft => "abft",
+        }
+    }
+
+    /// Parse CLI names; `scrub:K` sets the period.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let mut it = s.split(':');
+        match it.next().unwrap_or("") {
+            "none" | "normal" => Ok(Protection::None),
+            "register" | "reg" => Ok(Protection::RegisterOnly),
+            "memory" | "mem" | "reactive" => Ok(Protection::RegisterMemory),
+            "scrub" => Ok(Protection::Scrub {
+                period_runs: it.next().unwrap_or("1").parse()?,
+            }),
+            "ecc" => Ok(Protection::Ecc),
+            "abft" => Ok(Protection::Abft),
+            other => anyhow::bail!("unknown protection {other:?}"),
+        }
+    }
+
+    /// Does this scheme arm the SIGFPE trap path?
+    pub fn uses_trap(&self) -> bool {
+        matches!(self, Protection::RegisterOnly | Protection::RegisterMemory)
+    }
+
+    /// Trap configuration for the reactive schemes.
+    pub fn trap_config(&self, policy: RepairPolicy) -> Option<crate::trap::TrapConfig> {
+        match self {
+            Protection::RegisterOnly => Some(crate::trap::TrapConfig {
+                policy,
+                memory_repair: false,
+            }),
+            Protection::RegisterMemory => Some(crate::trap::TrapConfig {
+                policy,
+                memory_repair: true,
+            }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all() {
+        assert_eq!(Protection::parse("none").unwrap(), Protection::None);
+        assert_eq!(Protection::parse("register").unwrap(), Protection::RegisterOnly);
+        assert_eq!(Protection::parse("memory").unwrap(), Protection::RegisterMemory);
+        assert_eq!(
+            Protection::parse("scrub:4").unwrap(),
+            Protection::Scrub { period_runs: 4 }
+        );
+        assert_eq!(Protection::parse("ecc").unwrap(), Protection::Ecc);
+        assert_eq!(Protection::parse("abft").unwrap(), Protection::Abft);
+        assert!(Protection::parse("wat").is_err());
+    }
+
+    #[test]
+    fn trap_usage() {
+        assert!(Protection::RegisterOnly.uses_trap());
+        assert!(Protection::RegisterMemory.uses_trap());
+        assert!(!Protection::None.uses_trap());
+        assert!(!Protection::Ecc.uses_trap());
+        let c = Protection::RegisterMemory
+            .trap_config(RepairPolicy::Zero)
+            .unwrap();
+        assert!(c.memory_repair);
+        let c = Protection::RegisterOnly
+            .trap_config(RepairPolicy::Zero)
+            .unwrap();
+        assert!(!c.memory_repair);
+        assert!(Protection::None.trap_config(RepairPolicy::Zero).is_none());
+    }
+}

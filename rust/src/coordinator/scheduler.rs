@@ -1,0 +1,123 @@
+//! Experiment scheduler: fan independent campaign cells out over a worker
+//! pool (std::thread — tokio is unavailable offline, and a per-thread-MXCSR
+//! design wants plain threads anyway).
+//!
+//! Cells whose protection arms the trap serialize internally on the global
+//! trap lock ([`crate::trap::test_lock`] taken inside `Campaign::run`), so
+//! mixing trap and non-trap cells in one batch is safe.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use super::campaign::{Campaign, CampaignConfig, CampaignReport};
+
+/// Run every config, `workers` at a time; results come back in input order.
+pub fn run_batch(configs: Vec<CampaignConfig>, workers: usize) -> Vec<anyhow::Result<CampaignReport>> {
+    let n = configs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    let queue: Arc<Mutex<Vec<(usize, CampaignConfig)>>> =
+        Arc::new(Mutex::new(configs.into_iter().enumerate().rev().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, anyhow::Result<CampaignReport>)>();
+
+    let mut handles = Vec::new();
+    for _ in 0..workers {
+        let queue = queue.clone();
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let job = queue.lock().unwrap().pop();
+            let Some((idx, cfg)) = job else { break };
+            let out = Campaign::new(cfg).run();
+            if tx.send((idx, out)).is_err() {
+                break;
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut results: Vec<Option<anyhow::Result<CampaignReport>>> =
+        (0..n).map(|_| None).collect();
+    for (idx, r) in rx {
+        results[idx] = Some(r);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    results
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|| Err(anyhow::anyhow!("worker died"))))
+        .collect()
+}
+
+/// Reasonable default worker count.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approxmem::injector::InjectionSpec;
+    use crate::coordinator::protection::Protection;
+    use crate::workloads::WorkloadKind;
+
+    fn cfg(n: usize, seed: u64, protection: Protection) -> CampaignConfig {
+        CampaignConfig {
+            workload: WorkloadKind::MatMul { n },
+            protection,
+            injection: InjectionSpec::ExactNaNs { count: 1 },
+            reps: 2,
+            warmup: 0,
+            seed,
+            check_quality: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn batch_preserves_order_and_results() {
+        let configs: Vec<_> = (0..6)
+            .map(|i| cfg(8 + i, i as u64, Protection::RegisterMemory))
+            .collect();
+        let out = run_batch(configs, 3);
+        assert_eq!(out.len(), 6);
+        for (i, r) in out.iter().enumerate() {
+            let r = r.as_ref().unwrap();
+            assert!(r.config_label.contains(&format!("matmul:{}", 8 + i)));
+            assert!(!r.quality.unwrap().corrupted);
+        }
+    }
+
+    #[test]
+    fn mixed_trap_and_non_trap_batch() {
+        let configs = vec![
+            cfg(8, 1, Protection::RegisterMemory),
+            cfg(8, 2, Protection::None),
+            cfg(8, 3, Protection::Scrub { period_runs: 1 }),
+            cfg(8, 4, Protection::RegisterOnly),
+        ];
+        let out = run_batch(configs, 4);
+        assert!(out.iter().all(|r| r.is_ok()));
+        // none → corrupted; others → clean
+        assert!(out[1].as_ref().unwrap().quality.unwrap().corrupted);
+        assert!(!out[0].as_ref().unwrap().quality.unwrap().corrupted);
+        assert!(!out[2].as_ref().unwrap().quality.unwrap().corrupted);
+        assert!(!out[3].as_ref().unwrap().quality.unwrap().corrupted);
+    }
+
+    #[test]
+    fn empty_batch() {
+        assert!(run_batch(Vec::new(), 4).is_empty());
+    }
+
+    #[test]
+    fn invalid_config_is_error_not_panic() {
+        let out = run_batch(vec![cfg(8, 1, Protection::Ecc)], 1);
+        assert!(out[0].is_err());
+    }
+}

@@ -1,0 +1,357 @@
+//! The paper's §3.4 back-trace: from a faulting FP arithmetic instruction,
+//! find the `mov` that loaded the NaN register from memory, so the NaN can
+//! be repaired *in main memory* and not just in the register.
+//!
+//! The paper's "found" conditions, which we implement exactly:
+//!   1. the `mov` M and the faulting instruction I are in the same function
+//!      and M is reached from the function entry by linear decode (no
+//!      conditional branch between M and I — a branch makes the path
+//!      ambiguous from the static binary alone);
+//!   2. the registers used by M's address operand are not modified between
+//!      M and I (otherwise the recomputed effective address would be wrong).
+//!
+//! We add one safety condition the paper implies but does not state: the
+//! sweep must decode *every* instruction between M and I (an undecodable
+//! instruction could be anything, including a clobber) — unknown opcodes
+//! abort the search.
+
+use super::decode::{decode_len, InsnKind};
+use super::insn::{Insn, MemRef, Operand};
+
+/// Why a back-trace failed (paper §3.4 enumerates reasons (1) and (2)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BacktraceFail {
+    /// No load of the register found before I in the linear region.
+    NoMovFound,
+    /// The register's definition is an arithmetic result, not a memory
+    /// load.  A *fresh* memory-borne NaN cannot enter through this operand
+    /// — the producing instruction would have faulted first — so there is
+    /// nothing to repair in memory (vacuously safe for the Fig. 6 ratio).
+    ComputedValue,
+    /// A conditional branch (or any control flow) sits between M and I.
+    BranchInBetween,
+    /// A register used by M's address operand is modified between M and I.
+    AddressRegsClobbered,
+    /// An instruction between function entry and I could not be decoded.
+    UndecodableInsn,
+    /// The faulting RIP does not lie inside the swept function.
+    RipOutsideFunction,
+}
+
+/// Outcome of a back-trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BacktraceOutcome {
+    /// The feeding `mov` was found and its address operand is intact.
+    Found {
+        /// The mov instruction itself.
+        mov: Insn,
+        /// Virtual address of the mov (function-entry-relative base +
+        /// offset applied by the caller).
+        mov_vaddr: u64,
+        /// The memory reference it loaded from.
+        mem: MemRef,
+    },
+    NotFound(BacktraceFail),
+}
+
+impl BacktraceOutcome {
+    pub fn is_found(&self) -> bool {
+        matches!(self, BacktraceOutcome::Found { .. })
+    }
+}
+
+/// One decoded instruction in a linear sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct SweptInsn {
+    pub vaddr: u64,
+    pub len: usize,
+    pub kind: InsnKind,
+}
+
+/// Linearly decode `bytes` (a full function body) starting at virtual
+/// address `base`, stopping at `stop_vaddr` (exclusive) or the first
+/// undecodable instruction.
+///
+/// Returns the decoded instructions and whether the sweep reached
+/// `stop_vaddr` exactly (instruction boundaries aligned).
+pub fn sweep(bytes: &[u8], base: u64, stop_vaddr: u64) -> (Vec<SweptInsn>, bool) {
+    let mut out = Vec::new();
+    let mut vaddr = base;
+    while vaddr < stop_vaddr {
+        let off = (vaddr - base) as usize;
+        if off >= bytes.len() {
+            return (out, false);
+        }
+        match decode_len(&bytes[off..]) {
+            Some(d) => {
+                out.push(SweptInsn {
+                    vaddr,
+                    len: d.len,
+                    kind: d.kind,
+                });
+                vaddr += d.len as u64;
+            }
+            None => return (out, false),
+        }
+    }
+    (out, vaddr == stop_vaddr)
+}
+
+/// Find the `mov` that loaded xmm register `nan_xmm` with the value used by
+/// the faulting instruction at `fault_vaddr`.
+///
+/// `bytes`/`base` describe the enclosing function.  Mirrors the paper's
+/// static analysis; the caller afterwards recomputes the effective address
+/// from the *saved* GPRs and verifies a NaN actually lives there before
+/// patching (our extra runtime validation).
+pub fn backtrace_mov(
+    bytes: &[u8],
+    base: u64,
+    fault_vaddr: u64,
+    nan_xmm: u8,
+) -> BacktraceOutcome {
+    if fault_vaddr < base || fault_vaddr >= base + bytes.len() as u64 {
+        return BacktraceOutcome::NotFound(BacktraceFail::RipOutsideFunction);
+    }
+    let (insns, complete) = sweep(bytes, base, fault_vaddr);
+    if !complete {
+        return BacktraceOutcome::NotFound(BacktraceFail::UndecodableInsn);
+    }
+
+    // Walk backwards from the instruction just before I, following
+    // register-to-register copies (movapd xmm0, xmm1 redirects the search
+    // to xmm1 — the value's true origin).
+    let mut target = nan_xmm;
+    let mut candidate: Option<(usize, Insn, MemRef)> = None;
+    for (idx, si) in insns.iter().enumerate().rev() {
+        match si.kind {
+            InsnKind::Fp(insn) => {
+                if insn.writes_xmm(target) {
+                    if insn.is_load_to_xmm() {
+                        if let Operand::Mem(mem) = insn.src {
+                            candidate = Some((idx, insn, mem));
+                            break;
+                        }
+                    }
+                    if insn.op.is_mov() {
+                        if let Operand::Xmm(src) = insn.src {
+                            // reg-reg copy: keep tracing the source
+                            target = src;
+                            continue;
+                        }
+                    }
+                    // arithmetic (or int-convert) result: a fresh memory
+                    // NaN cannot enter here
+                    return BacktraceOutcome::NotFound(BacktraceFail::ComputedValue);
+                }
+            }
+            InsnKind::Branch => {
+                // a branch before finding the mov: path ambiguous
+                return BacktraceOutcome::NotFound(BacktraceFail::BranchInBetween);
+            }
+            InsnKind::Other { .. } => {}
+        }
+    }
+
+    let Some((mov_idx, mov, mem)) = candidate else {
+        return BacktraceOutcome::NotFound(BacktraceFail::NoMovFound);
+    };
+
+    // Condition 2: address registers unmodified between M (exclusive) and
+    // I (exclusive).
+    let mut used_mask: u16 = 0;
+    for r in mem.regs_used() {
+        used_mask |= 1u16 << r;
+    }
+    for si in &insns[mov_idx + 1..] {
+        match si.kind {
+            InsnKind::Branch => {
+                return BacktraceOutcome::NotFound(BacktraceFail::BranchInBetween)
+            }
+            InsnKind::Other { gpr_writes } => {
+                if gpr_writes & used_mask != 0 {
+                    return BacktraceOutcome::NotFound(BacktraceFail::AddressRegsClobbered);
+                }
+            }
+            InsnKind::Fp(fp) => {
+                // movd/movq/cvt to a GPR clobbers it
+                if let Operand::Gpr(g) = fp.dst {
+                    if used_mask & (1u16 << g) != 0 {
+                        return BacktraceOutcome::NotFound(
+                            BacktraceFail::AddressRegsClobbered,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    BacktraceOutcome::Found {
+        mov,
+        mov_vaddr: insns[mov_idx].vaddr,
+        mem,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::disasm::insn::FpOp;
+
+    // Hand-assembled function bodies (verified encodings; see decode.rs
+    // tests for the building blocks).
+
+    /// movsd xmm0,[r10+rsi*8]; add edx,edi; cmp eax,r8d; mulsd xmm0,[r9+rcx*8]
+    /// — the paper's exact Figure-3 scenario.
+    const PAPER_FIG3: &[u8] = &[
+        0xf2, 0x41, 0x0f, 0x10, 0x04, 0xf2, // movsd xmm0, [r10+rsi*8]
+        0x01, 0xfa, // add edx, edi
+        0x44, 0x39, 0xc0, // cmp eax, r8d
+        0xf2, 0x41, 0x0f, 0x59, 0x04, 0xc9, // mulsd xmm0, [r9+rcx*8]
+    ];
+
+    #[test]
+    fn paper_figure3_found() {
+        let base = 0x5555_5555_49ff; // cosmetic: same page as the paper
+        let fault = base + 11; // the mulsd
+        match backtrace_mov(PAPER_FIG3, base, fault, 0) {
+            BacktraceOutcome::Found { mov, mov_vaddr, mem } => {
+                assert_eq!(mov.op, FpOp::Mov);
+                assert_eq!(mov_vaddr, base);
+                assert_eq!(mem.base, Some(10)); // r10
+                assert_eq!(mem.index, Some(6)); // rsi
+                assert_eq!(mem.scale, 8);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn clobbered_address_reg_not_found() {
+        // movsd xmm0,[r10+rsi*8]; mov rsi, rdx; mulsd xmm0, xmm1
+        let body: &[u8] = &[
+            0xf2, 0x41, 0x0f, 0x10, 0x04, 0xf2, // movsd xmm0, [r10+rsi*8]
+            0x48, 0x89, 0xd6, // mov rsi, rdx  (clobbers rsi)
+            0xf2, 0x0f, 0x59, 0xc1, // mulsd xmm0, xmm1
+        ];
+        let out = backtrace_mov(body, 0x1000, 0x1000 + 9, 0);
+        assert_eq!(
+            out,
+            BacktraceOutcome::NotFound(BacktraceFail::AddressRegsClobbered)
+        );
+    }
+
+    #[test]
+    fn branch_in_between_not_found() {
+        // movsd xmm0,[rdi]; je +0; mulsd xmm0, xmm1
+        let body: &[u8] = &[
+            0xf2, 0x0f, 0x10, 0x07, // movsd xmm0, [rdi]
+            0x74, 0x00, // je $+2
+            0xf2, 0x0f, 0x59, 0xc1, // mulsd xmm0, xmm1
+        ];
+        let out = backtrace_mov(body, 0x1000, 0x1000 + 6, 0);
+        assert_eq!(
+            out,
+            BacktraceOutcome::NotFound(BacktraceFail::BranchInBetween)
+        );
+    }
+
+    #[test]
+    fn register_to_register_mov_followed_to_memory_load() {
+        // movsd xmm1,[rdi+8]; movapd xmm0,xmm1; mulsd xmm0,xmm2 — tracing
+        // xmm0 follows the reg-reg copy to xmm1 and finds its load.
+        let body: &[u8] = &[
+            0xf2, 0x0f, 0x10, 0x4f, 0x08, // movsd xmm1, [rdi+8]
+            0x66, 0x0f, 0x28, 0xc1, // movapd xmm0, xmm1
+            0xf2, 0x0f, 0x59, 0xc2, // mulsd xmm0, xmm2
+        ];
+        match backtrace_mov(body, 0x1000, 0x1000 + 9, 0) {
+            BacktraceOutcome::Found { mem, mov_vaddr, .. } => {
+                assert_eq!(mov_vaddr, 0x1000);
+                assert_eq!(mem.base, Some(7));
+                assert_eq!(mem.disp, 8);
+            }
+            other => panic!("{other:?}"),
+        }
+        // tracing xmm1 directly also finds it
+        assert!(backtrace_mov(body, 0x1000, 0x1000 + 9, 1).is_found());
+    }
+
+    #[test]
+    fn arithmetic_result_is_computed_value() {
+        // addsd xmm0, xmm1 ; mulsd xmm0, xmm2 — xmm0 holds a computed
+        // value: a fresh memory NaN cannot enter via this operand
+        let body: &[u8] = &[
+            0xf2, 0x0f, 0x58, 0xc1, // addsd xmm0, xmm1
+            0xf2, 0x0f, 0x59, 0xc2, // mulsd xmm0, xmm2
+        ];
+        let out = backtrace_mov(body, 0x1000, 0x1000 + 4, 0);
+        assert_eq!(out, BacktraceOutcome::NotFound(BacktraceFail::ComputedValue));
+    }
+
+    #[test]
+    fn undecodable_between_aborts() {
+        // movsd xmm0,[rdi]; <garbage>; mulsd …  — sweep loses alignment
+        let body: &[u8] = &[
+            0xf2, 0x0f, 0x10, 0x07, // movsd xmm0, [rdi]
+            0x0f, 0x0e, // femms (not decoded)
+            0xf2, 0x0f, 0x59, 0xc1,
+        ];
+        let out = backtrace_mov(body, 0x1000, 0x1000 + 6, 0);
+        assert_eq!(
+            out,
+            BacktraceOutcome::NotFound(BacktraceFail::UndecodableInsn)
+        );
+    }
+
+    #[test]
+    fn rip_outside_function() {
+        let out = backtrace_mov(PAPER_FIG3, 0x1000, 0x2000, 0);
+        assert_eq!(
+            out,
+            BacktraceOutcome::NotFound(BacktraceFail::RipOutsideFunction)
+        );
+    }
+
+    #[test]
+    fn closest_mov_wins() {
+        // two loads into xmm0; the later one must be reported
+        let body: &[u8] = &[
+            0xf2, 0x0f, 0x10, 0x07, // movsd xmm0, [rdi]
+            0xf2, 0x0f, 0x10, 0x46, 0x10, // movsd xmm0, [rsi+0x10]
+            0xf2, 0x0f, 0x59, 0xc1, // mulsd xmm0, xmm1
+        ];
+        match backtrace_mov(body, 0x1000, 0x1000 + 9, 0) {
+            BacktraceOutcome::Found { mem, mov_vaddr, .. } => {
+                assert_eq!(mov_vaddr, 0x1004);
+                assert_eq!(mem.base, Some(6));
+                assert_eq!(mem.disp, 0x10);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn interleaved_safe_instructions_ok() {
+        // loads then arithmetic on *other* registers + flag ops in between
+        let body: &[u8] = &[
+            0xf2, 0x0f, 0x10, 0x07, // movsd xmm0, [rdi]
+            0x48, 0x89, 0xc8, // mov rax, rcx (not an addr reg)
+            0xf2, 0x0f, 0x58, 0xd3, // addsd xmm2, xmm3
+            0x85, 0xc0, // test eax, eax
+            0xf2, 0x0f, 0x59, 0xc1, // mulsd xmm0, xmm1
+        ];
+        let out = backtrace_mov(body, 0x1000, 0x1000 + 13, 0);
+        assert!(out.is_found(), "{out:?}");
+    }
+
+    #[test]
+    fn sweep_reports_alignment() {
+        let (insns, ok) = sweep(PAPER_FIG3, 0, 11);
+        assert!(ok);
+        assert_eq!(insns.len(), 3);
+        // stopping mid-instruction → not aligned
+        let (_, ok) = sweep(PAPER_FIG3, 0, 7);
+        assert!(!ok);
+    }
+}

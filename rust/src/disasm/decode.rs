@@ -1,0 +1,1010 @@
+//! x86-64 instruction decoder.
+//!
+//! [`decode_insn`] — semantic decode of the SSE/SSE2 FP subset (paper
+//! Table 1 + mov/compare/cvt families): full operands.
+//!
+//! [`decode_len`] — length + conservative effect decode of the general
+//! instruction stream, sufficient for linear sweeps: every decoded
+//! instruction reports its length, whether it is a control-flow barrier,
+//! and a conservative mask of general-purpose registers it may write.
+//! Unknown opcodes return `None`, which callers treat as "sweep lost".
+
+use super::insn::{FpOp, FpWidth, Insn, MemRef, Operand};
+
+/// Legacy + REX prefix state.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Prefixes {
+    pub len: usize,
+    pub rex: u8,
+    pub opsize66: bool,
+    pub addr67: bool,
+    pub f2: bool,
+    pub f3: bool,
+    pub lock: bool,
+    pub segment: bool,
+}
+
+impl Prefixes {
+    #[inline]
+    pub fn rex_w(&self) -> bool {
+        self.rex & 0x08 != 0
+    }
+    #[inline]
+    pub fn rex_r(&self) -> u8 {
+        (self.rex >> 2) & 1
+    }
+    #[inline]
+    pub fn rex_x(&self) -> u8 {
+        (self.rex >> 1) & 1
+    }
+    #[inline]
+    pub fn rex_b(&self) -> u8 {
+        self.rex & 1
+    }
+}
+
+/// Parse legacy prefixes and a trailing REX byte.
+pub fn parse_prefixes(bytes: &[u8]) -> Prefixes {
+    let mut p = Prefixes::default();
+    let mut i = 0;
+    while i < bytes.len() && i < 14 {
+        match bytes[i] {
+            0x66 => p.opsize66 = true,
+            0x67 => p.addr67 = true,
+            0xf2 => {
+                p.f2 = true;
+                p.f3 = false;
+            }
+            0xf3 => {
+                p.f3 = true;
+                p.f2 = false;
+            }
+            0xf0 => p.lock = true,
+            0x2e | 0x36 | 0x3e | 0x26 | 0x64 | 0x65 => p.segment = true,
+            0x40..=0x4f => {
+                // REX must be the last prefix before the opcode
+                p.rex = bytes[i];
+                i += 1;
+                break;
+            }
+            _ => break,
+        }
+        i += 1;
+    }
+    p.len = i;
+    p
+}
+
+/// Decoded ModRM: the `reg` field and the `rm` operand.
+#[derive(Debug, Clone, Copy)]
+pub struct ModRm {
+    pub reg: u8,
+    /// rm as register number if mod==11.
+    pub rm_reg: Option<u8>,
+    /// rm as memory reference otherwise.
+    pub rm_mem: Option<MemRef>,
+    /// bytes consumed (modrm + sib + disp).
+    pub len: usize,
+}
+
+/// Parse a ModRM byte (+SIB, +displacement).
+pub fn parse_modrm(bytes: &[u8], pfx: &Prefixes) -> Option<ModRm> {
+    let modrm = *bytes.first()?;
+    let md = modrm >> 6;
+    let reg = ((modrm >> 3) & 7) | (pfx.rex_r() << 3);
+    let rm = modrm & 7;
+    let mut len = 1usize;
+
+    if md == 3 {
+        return Some(ModRm {
+            reg,
+            rm_reg: Some(rm | (pfx.rex_b() << 3)),
+            rm_mem: None,
+            len,
+        });
+    }
+
+    let mut base: Option<u8> = Some(rm | (pfx.rex_b() << 3));
+    let mut index: Option<u8> = None;
+    let mut scale = 1u8;
+    let mut rip_relative = false;
+
+    if rm == 4 {
+        // SIB byte
+        let sib = *bytes.get(len)?;
+        len += 1;
+        scale = 1 << (sib >> 6);
+        let idx = ((sib >> 3) & 7) | (pfx.rex_x() << 3);
+        // index = 4 (rsp) means "no index" (rex.x extends: 12 is valid r12)
+        index = if idx == 4 { None } else { Some(idx) };
+        let b = (sib & 7) | (pfx.rex_b() << 3);
+        if (sib & 7) == 5 && md == 0 {
+            // disp32 with no base
+            base = None;
+        } else {
+            base = Some(b);
+        }
+    } else if rm == 5 && md == 0 {
+        // RIP-relative disp32
+        base = None;
+        rip_relative = true;
+    }
+
+    let disp: i32 = match md {
+        0 => {
+            if rip_relative || (rm == 4 && base.is_none()) {
+                let d = i32::from_le_bytes(bytes.get(len..len + 4)?.try_into().ok()?);
+                len += 4;
+                d
+            } else {
+                0
+            }
+        }
+        1 => {
+            let d = *bytes.get(len)? as i8 as i32;
+            len += 1;
+            d
+        }
+        2 => {
+            let d = i32::from_le_bytes(bytes.get(len..len + 4)?.try_into().ok()?);
+            len += 4;
+            d
+        }
+        _ => unreachable!(),
+    };
+
+    Some(ModRm {
+        reg,
+        rm_reg: None,
+        rm_mem: Some(MemRef {
+            base,
+            index,
+            scale,
+            disp,
+            rip_relative,
+        }),
+        len,
+    })
+}
+
+fn rm_operand_xmm(m: &ModRm) -> Operand {
+    match (m.rm_reg, m.rm_mem) {
+        (Some(r), _) => Operand::Xmm(r),
+        (None, Some(mem)) => Operand::Mem(mem),
+        _ => unreachable!(),
+    }
+}
+
+fn rm_operand_gpr(m: &ModRm) -> Operand {
+    match (m.rm_reg, m.rm_mem) {
+        (Some(r), _) => Operand::Gpr(r),
+        (None, Some(mem)) => Operand::Mem(mem),
+        _ => unreachable!(),
+    }
+}
+
+/// Semantic decode of the FP subset at `bytes[0..]`. Returns None if the
+/// instruction is not in the covered subset (callers fall back to
+/// [`decode_len`]).
+pub fn decode_insn(bytes: &[u8]) -> Option<Insn> {
+    let pfx = parse_prefixes(bytes);
+    let rest = &bytes[pfx.len..];
+    if *rest.first()? != 0x0f {
+        return None;
+    }
+    let op = *rest.get(1)?;
+    let body = &rest[2..];
+
+    // scalar/packed width from mandatory prefix
+    let width = if pfx.f2 {
+        FpWidth::S64
+    } else if pfx.f3 {
+        FpWidth::S32
+    } else if pfx.opsize66 {
+        FpWidth::P64
+    } else {
+        FpWidth::P32
+    };
+
+    let fin = |op: FpOp, width: FpWidth, dst: Operand, src: Operand, mlen: usize| {
+        Some(Insn {
+            op,
+            width,
+            dst,
+            src,
+            len: pfx.len + 2 + mlen,
+        })
+    };
+
+    match op {
+        // 0F 10 /r: movups/movupd/movss/movsd xmm, xmm/m
+        0x10 => {
+            let m = parse_modrm(body, &pfx)?;
+            fin(FpOp::Mov, width, Operand::Xmm(m.reg), rm_operand_xmm(&m), m.len)
+        }
+        // 0F 11 /r: mov* xmm/m, xmm (store direction)
+        0x11 => {
+            let m = parse_modrm(body, &pfx)?;
+            fin(FpOp::Mov, width, rm_operand_xmm(&m), Operand::Xmm(m.reg), m.len)
+        }
+        // 0F 12/13/16/17: movlps/movhps etc. — treat as 8-byte moves
+        0x12 | 0x16 => {
+            let m = parse_modrm(body, &pfx)?;
+            fin(FpOp::Mov, FpWidth::S64, Operand::Xmm(m.reg), rm_operand_xmm(&m), m.len)
+        }
+        0x13 | 0x17 => {
+            let m = parse_modrm(body, &pfx)?;
+            fin(FpOp::Mov, FpWidth::S64, rm_operand_xmm(&m), Operand::Xmm(m.reg), m.len)
+        }
+        // 0F 28 /r movaps/movapd xmm, xmm/m ; 0F 29 store direction
+        0x28 => {
+            let m = parse_modrm(body, &pfx)?;
+            let w = if pfx.opsize66 { FpWidth::P64 } else { FpWidth::P32 };
+            fin(FpOp::Mov, w, Operand::Xmm(m.reg), rm_operand_xmm(&m), m.len)
+        }
+        0x29 => {
+            let m = parse_modrm(body, &pfx)?;
+            let w = if pfx.opsize66 { FpWidth::P64 } else { FpWidth::P32 };
+            fin(FpOp::Mov, w, rm_operand_xmm(&m), Operand::Xmm(m.reg), m.len)
+        }
+        // 0F 2A: cvtsi2ss/sd xmm, r/m ; int source — reads mem but no NaN
+        0x2a => {
+            let m = parse_modrm(body, &pfx)?;
+            let w = if pfx.f2 { FpWidth::S64 } else { FpWidth::S32 };
+            fin(FpOp::Cvt, w, Operand::Xmm(m.reg), rm_operand_gpr(&m), m.len)
+        }
+        // 0F 2C/2D: cvt(t)ss/sd2si r, xmm/m
+        0x2c | 0x2d => {
+            let m = parse_modrm(body, &pfx)?;
+            let w = if pfx.f2 { FpWidth::S64 } else { FpWidth::S32 };
+            fin(FpOp::Cvt, w, Operand::Gpr(m.reg), rm_operand_xmm(&m), m.len)
+        }
+        // 0F 2E ucomiss/ucomisd ; 0F 2F comiss/comisd
+        0x2e | 0x2f => {
+            let m = parse_modrm(body, &pfx)?;
+            let w = if pfx.opsize66 { FpWidth::S64 } else { FpWidth::S32 };
+            let kind = if op == 0x2e { FpOp::Ucomi } else { FpOp::Comi };
+            fin(kind, w, Operand::Xmm(m.reg), rm_operand_xmm(&m), m.len)
+        }
+        // 0F 51 sqrt, 0F 54-57 logicals (skip), 0F 58 add, 59 mul,
+        // 5C sub, 5D min, 5E div, 5F max, 0F 5A cvt s<->d
+        0x51 | 0x58 | 0x59 | 0x5a | 0x5c | 0x5d | 0x5e | 0x5f => {
+            let m = parse_modrm(body, &pfx)?;
+            let kind = match op {
+                0x51 => FpOp::Sqrt,
+                0x58 => FpOp::Add,
+                0x59 => FpOp::Mul,
+                0x5a => FpOp::Cvt,
+                0x5c => FpOp::Sub,
+                0x5d => FpOp::Min,
+                0x5e => FpOp::Div,
+                0x5f => FpOp::Max,
+                _ => unreachable!(),
+            };
+            fin(kind, width, Operand::Xmm(m.reg), rm_operand_xmm(&m), m.len)
+        }
+        // 66 0F 6E movd/movq xmm, r/m ; 66 0F 7E movd/movq r/m, xmm
+        // F3 0F 7E movq xmm, xmm/m64 ; 66 0F D6 movq xmm/m64, xmm
+        0x6e if pfx.opsize66 => {
+            let m = parse_modrm(body, &pfx)?;
+            fin(FpOp::MovGpr, FpWidth::Int, Operand::Xmm(m.reg), rm_operand_gpr(&m), m.len)
+        }
+        0x7e if pfx.f3 => {
+            let m = parse_modrm(body, &pfx)?;
+            fin(FpOp::Mov, FpWidth::S64, Operand::Xmm(m.reg), rm_operand_xmm(&m), m.len)
+        }
+        0x7e if pfx.opsize66 => {
+            let m = parse_modrm(body, &pfx)?;
+            fin(FpOp::MovGpr, FpWidth::Int, rm_operand_gpr(&m), Operand::Xmm(m.reg), m.len)
+        }
+        0xd6 if pfx.opsize66 => {
+            let m = parse_modrm(body, &pfx)?;
+            fin(FpOp::Mov, FpWidth::S64, rm_operand_xmm(&m), Operand::Xmm(m.reg), m.len)
+        }
+        _ => None,
+    }
+}
+
+/// Conservative classification of a length-decoded instruction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InsnKind {
+    /// Fully decoded FP instruction.
+    Fp(Insn),
+    /// Control-flow barrier (jmp/jcc/call/ret/int…); linear back-trace must
+    /// stop here (paper §3.4: "a conditional branch cannot be back-traced").
+    Branch,
+    /// Anything else: carries a bitmask of GPRs it may write
+    /// (bit i = GPR i; `0xffff` = unknown, assume clobbers everything).
+    Other { gpr_writes: u16 },
+}
+
+/// A length-decoded instruction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecodedLen {
+    pub len: usize,
+    pub kind: InsnKind,
+}
+
+const ALL_GPRS: u16 = 0xffff;
+
+#[inline]
+fn gpr_bit(r: u8) -> u16 {
+    1u16 << (r & 15)
+}
+
+/// Mask for "writes rm": only a GPR write when rm is a register.
+fn rm_write_mask(m: &ModRm) -> u16 {
+    match m.rm_reg {
+        Some(r) => gpr_bit(r),
+        None => 0,
+    }
+}
+
+/// Length-decode one instruction. `None` = unknown encoding or truncated
+/// buffer (immediate bytes must actually be present).
+pub fn decode_len(bytes: &[u8]) -> Option<DecodedLen> {
+    let d = decode_len_inner(bytes)?;
+    (d.len <= bytes.len()).then_some(d)
+}
+
+fn decode_len_inner(bytes: &[u8]) -> Option<DecodedLen> {
+    // FP subset first — it carries full semantics.
+    if let Some(insn) = decode_insn(bytes) {
+        return Some(DecodedLen {
+            len: insn.len,
+            kind: InsnKind::Fp(insn),
+        });
+    }
+
+    let pfx = parse_prefixes(bytes);
+    let rest = &bytes[pfx.len..];
+    let op = *rest.first()?;
+    let body = &rest[1..];
+    // immediate size for "z" immediates (imm16 with 66, else imm32)
+    let immz: usize = if pfx.opsize66 { 2 } else { 4 };
+
+    let other = |mlen: usize, imm: usize, writes: u16| {
+        Some(DecodedLen {
+            len: pfx.len + 1 + mlen + imm,
+            kind: InsnKind::Other { gpr_writes: writes },
+        })
+    };
+    let branch = |mlen: usize, imm: usize| {
+        Some(DecodedLen {
+            len: pfx.len + 1 + mlen + imm,
+            kind: InsnKind::Branch,
+        })
+    };
+
+    match op {
+        // ALU block 00..3F: op r/m,r ; op r,r/m ; op al,imm8 ; op eax,immz
+        0x00..=0x3f if op & 7 <= 5 && (op & 0x38) != 0x38 || (0x38..=0x3d).contains(&op) => {
+            // 38..3D are cmp (no writes)
+            let is_cmp = (0x38..=0x3d).contains(&op);
+            match op & 7 {
+                0 | 1 => {
+                    let m = parse_modrm(body, &pfx)?;
+                    other(m.len, 0, if is_cmp { 0 } else { rm_write_mask(&m) })
+                }
+                2 | 3 => {
+                    let m = parse_modrm(body, &pfx)?;
+                    other(m.len, 0, if is_cmp { 0 } else { gpr_bit(m.reg) })
+                }
+                4 => other(0, 1, if is_cmp { 0 } else { gpr_bit(0) }),
+                5 => other(0, immz, if is_cmp { 0 } else { gpr_bit(0) }),
+                _ => None,
+            }
+        }
+        0x50..=0x57 => other(0, 0, gpr_bit(4)), // push: writes rsp
+        0x58..=0x5f => other(0, 0, gpr_bit((op & 7) | (pfx.rex_b() << 3)) | gpr_bit(4)), // pop
+        0x63 => {
+            // movsxd r, r/m32
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, 0, gpr_bit(m.reg))
+        }
+        0x68 => other(0, immz, gpr_bit(4)), // push immz
+        0x69 => {
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, immz, gpr_bit(m.reg)) // imul r, r/m, immz
+        }
+        0x6a => other(0, 1, gpr_bit(4)), // push imm8
+        0x6b => {
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, 1, gpr_bit(m.reg)) // imul r, r/m, imm8
+        }
+        0x70..=0x7f => branch(0, 1), // jcc rel8
+        0x80 => {
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, 1, rm_write_mask(&m))
+        }
+        0x81 => {
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, immz, rm_write_mask(&m))
+        }
+        0x83 => {
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, 1, rm_write_mask(&m))
+        }
+        0x84 | 0x85 => {
+            // test r/m, r — no writes
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, 0, 0)
+        }
+        0x86 | 0x87 => {
+            // xchg: writes both
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, 0, rm_write_mask(&m) | gpr_bit(m.reg))
+        }
+        0x88 | 0x89 => {
+            // mov r/m, r
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, 0, rm_write_mask(&m))
+        }
+        0x8a | 0x8b => {
+            // mov r, r/m
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, 0, gpr_bit(m.reg))
+        }
+        0x8d => {
+            // lea r, m
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, 0, gpr_bit(m.reg))
+        }
+        0x8f => {
+            // pop r/m
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, 0, rm_write_mask(&m) | gpr_bit(4))
+        }
+        0x90..=0x97 => {
+            // xchg rax, r (90 = nop)
+            if op == 0x90 {
+                other(0, 0, 0)
+            } else {
+                other(0, 0, gpr_bit(0) | gpr_bit((op & 7) | (pfx.rex_b() << 3)))
+            }
+        }
+        0x98 | 0x99 => other(0, 0, gpr_bit(0) | gpr_bit(2)), // cwde/cdq
+        0x9c => other(0, 0, gpr_bit(4)),                     // pushf
+        0x9d => other(0, 0, gpr_bit(4)),                     // popf
+        // string ops (with REP prefixes): movs/cmps/stos/lods/scas —
+        // clobber rsi/rdi/rcx/rax conservatively
+        0xa4 | 0xa5 | 0xa6 | 0xa7 | 0xaa | 0xab | 0xac | 0xad | 0xae | 0xaf => {
+            other(0, 0, gpr_bit(0) | gpr_bit(1) | gpr_bit(6) | gpr_bit(7))
+        }
+        0xa8 => other(0, 1, 0),                              // test al, imm8
+        0xa9 => other(0, immz, 0),                           // test eax, immz
+        0xb0..=0xb7 => other(0, 1, gpr_bit((op & 7) | (pfx.rex_b() << 3))),
+        0xb8..=0xbf => {
+            // mov r, imm — imm64 with REX.W, imm16 with 66, else imm32
+            let imm = if pfx.rex_w() {
+                8
+            } else if pfx.opsize66 {
+                2
+            } else {
+                4
+            };
+            other(0, imm, gpr_bit((op & 7) | (pfx.rex_b() << 3)))
+        }
+        0xc0 | 0xc1 => {
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, 1, rm_write_mask(&m))
+        }
+        0xc2 => branch(0, 2), // ret imm16
+        0xc3 => branch(0, 0), // ret
+        0xc6 => {
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, 1, rm_write_mask(&m))
+        }
+        0xc7 => {
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, immz, rm_write_mask(&m))
+        }
+        0xc8 => other(0, 3, gpr_bit(4) | gpr_bit(5)), // enter imm16, imm8
+        0xc9 => other(0, 0, gpr_bit(4) | gpr_bit(5)), // leave
+        0xcc => branch(0, 0),                          // int3
+        0xd0..=0xd3 => {
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, 0, rm_write_mask(&m))
+        }
+        0xe8 => branch(0, 4), // call rel32
+        0xe9 => branch(0, 4), // jmp rel32
+        0xeb => branch(0, 1), // jmp rel8
+        0xf6 => {
+            let m = parse_modrm(body, &pfx)?;
+            // /0,/1 = test imm8; /2 not /3 neg write rm; /4../7 mul/div
+            match m.reg & 7 {
+                0 | 1 => other(m.len, 1, 0),
+                2 | 3 => other(m.len, 0, rm_write_mask(&m)),
+                _ => other(m.len, 0, gpr_bit(0) | gpr_bit(2)),
+            }
+        }
+        0xf7 => {
+            let m = parse_modrm(body, &pfx)?;
+            match m.reg & 7 {
+                0 | 1 => other(m.len, immz, 0),
+                2 | 3 => other(m.len, 0, rm_write_mask(&m)),
+                _ => other(m.len, 0, gpr_bit(0) | gpr_bit(2)),
+            }
+        }
+        0xf5 | 0xf8 | 0xf9 | 0xfa | 0xfb | 0xfc | 0xfd => other(0, 0, 0), // flag ops
+        0xfe => {
+            let m = parse_modrm(body, &pfx)?;
+            other(m.len, 0, rm_write_mask(&m))
+        }
+        0xff => {
+            let m = parse_modrm(body, &pfx)?;
+            match m.reg & 7 {
+                0 | 1 => other(m.len, 0, rm_write_mask(&m)), // inc/dec
+                2 | 3 | 4 | 5 => branch(m.len, 0),           // call/jmp
+                6 => other(m.len, 0, gpr_bit(4)),            // push
+                _ => None,
+            }
+        }
+        0x0f => {
+            let op2 = *body.first()?;
+            let body2 = &body[1..];
+            let other2 = |mlen: usize, imm: usize, writes: u16| {
+                Some(DecodedLen {
+                    len: pfx.len + 2 + mlen + imm,
+                    kind: InsnKind::Other { gpr_writes: writes },
+                })
+            };
+            let branch2 = |mlen: usize, imm: usize| {
+                Some(DecodedLen {
+                    len: pfx.len + 2 + mlen + imm,
+                    kind: InsnKind::Branch,
+                })
+            };
+            match op2 {
+                0x05 => branch2(0, 0), // syscall
+                0x0b => branch2(0, 0), // ud2
+                0x1f | 0x18 | 0x19 | 0x1a | 0x1b | 0x1c | 0x1d | 0x1e => {
+                    // long nop / hints
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 0, 0)
+                }
+                0x31 => other2(0, 0, gpr_bit(0) | gpr_bit(2)), // rdtsc
+                0x40..=0x4f => {
+                    // cmovcc r, r/m
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 0, gpr_bit(m.reg))
+                }
+                // SSE logicals / shuffles / packed int ops with modrm only
+                0x14 | 0x15 | 0x50 | 0x54 | 0x55 | 0x56 | 0x57 | 0x5b | 0x60..=0x6d
+                | 0x6f | 0x74 | 0x75 | 0x76 | 0x7f | 0xd0..=0xd5 | 0xd7..=0xdf
+                | 0xe0..=0xef | 0xf1..=0xfe => {
+                    let m = parse_modrm(body2, &pfx)?;
+                    // xmm-only: no GPR writes (0F 50 movmskps writes a GPR)
+                    let w = if op2 == 0x50 || op2 == 0xd7 {
+                        gpr_bit(m.reg)
+                    } else {
+                        0
+                    };
+                    other2(m.len, 0, w)
+                }
+                0x70 => {
+                    // pshufd etc: modrm + imm8
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 1, 0)
+                }
+                0x71 | 0x72 | 0x73 => {
+                    // psll/psrl group: modrm + imm8
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 1, 0)
+                }
+                0x80..=0x8f => branch2(0, 4), // jcc rel32
+                0x90..=0x9f => {
+                    // setcc r/m8
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 0, rm_write_mask(&m))
+                }
+                0xa2 => other2(0, 0, gpr_bit(0) | gpr_bit(1) | gpr_bit(2) | gpr_bit(3)), // cpuid
+                0xa3 | 0xab | 0xb3 | 0xbb => {
+                    // bt/bts/btr/btc r/m, r
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 0, if op2 == 0xa3 { 0 } else { rm_write_mask(&m) })
+                }
+                0xa4 | 0xac => {
+                    // shld/shrd r/m, r, imm8
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 1, rm_write_mask(&m))
+                }
+                0xa5 | 0xad => {
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 0, rm_write_mask(&m))
+                }
+                0xae => {
+                    // fences / [ld/st]mxcsr group
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 0, 0)
+                }
+                0xaf => {
+                    // imul r, r/m
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 0, gpr_bit(m.reg))
+                }
+                0xb0 | 0xb1 => {
+                    // cmpxchg
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 0, rm_write_mask(&m) | gpr_bit(0))
+                }
+                0xb6 | 0xb7 | 0xbe | 0xbf => {
+                    // movzx/movsx r, r/m
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 0, gpr_bit(m.reg))
+                }
+                0xba => {
+                    // bt group with imm8
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 1, if m.reg & 7 == 4 { 0 } else { rm_write_mask(&m) })
+                }
+                0xbc | 0xbd => {
+                    // bsf/bsr (or tzcnt/lzcnt with F3)
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 0, gpr_bit(m.reg))
+                }
+                0xc0 | 0xc1 => {
+                    // xadd
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 0, rm_write_mask(&m) | gpr_bit(m.reg))
+                }
+                0xc2 => {
+                    // cmpps/cmpss imm8
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 1, 0)
+                }
+                0xc6 => {
+                    // shufps imm8
+                    let m = parse_modrm(body2, &pfx)?;
+                    other2(m.len, 1, 0)
+                }
+                0xc8..=0xcf => other2(0, 0, gpr_bit((op2 & 7) | (pfx.rex_b() << 3))), // bswap
+                0x38 => {
+                    // three-byte map: modrm, no imm for the common ones
+                    let _op3 = *body2.first()?;
+                    let m = parse_modrm(&body2[1..], &pfx)?;
+                    Some(DecodedLen {
+                        len: pfx.len + 3 + m.len,
+                        kind: InsnKind::Other { gpr_writes: ALL_GPRS },
+                    })
+                }
+                0x3a => {
+                    // three-byte map with imm8
+                    let _op3 = *body2.first()?;
+                    let m = parse_modrm(&body2[1..], &pfx)?;
+                    Some(DecodedLen {
+                        len: pfx.len + 3 + m.len + 1,
+                        kind: InsnKind::Other { gpr_writes: ALL_GPRS },
+                    })
+                }
+                _ => None,
+            }
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // --- semantic FP decode -------------------------------------------------
+
+    #[test]
+    fn decode_mulsd_reg_reg() {
+        // f2 0f 59 c1 = mulsd xmm0, xmm1 (observed in the prototype)
+        let i = decode_insn(&[0xf2, 0x0f, 0x59, 0xc1]).unwrap();
+        assert_eq!(i.op, FpOp::Mul);
+        assert_eq!(i.width, FpWidth::S64);
+        assert_eq!(i.dst, Operand::Xmm(0));
+        assert_eq!(i.src, Operand::Xmm(1));
+        assert_eq!(i.len, 4);
+        assert_eq!(i.mnemonic(), "mulsd");
+    }
+
+    #[test]
+    fn decode_movsd_load_base_index_scale() {
+        // paper Fig. 3: movsd xmm0, QWORD PTR [r10+rsi*8]
+        // f2 41 0f 10 04 f2 : F2 REX.B 0F 10 modrm(04) sib(f2=rsi*8+r10)
+        let i = decode_insn(&[0xf2, 0x41, 0x0f, 0x10, 0x04, 0xf2]).unwrap();
+        assert_eq!(i.op, FpOp::Mov);
+        assert_eq!(i.width, FpWidth::S64);
+        assert_eq!(i.dst, Operand::Xmm(0));
+        let m = i.src.as_mem().unwrap();
+        assert_eq!(m.base, Some(10)); // r10
+        assert_eq!(m.index, Some(6)); // rsi
+        assert_eq!(m.scale, 8);
+        assert_eq!(m.disp, 0);
+        assert_eq!(i.len, 6);
+        assert!(i.is_load_to_xmm());
+    }
+
+    #[test]
+    fn decode_mulsd_mem_operand() {
+        // paper Fig. 3: mulsd xmm0, QWORD PTR [r9+rcx*8]
+        // f2 41 0f 59 04 c9
+        let i = decode_insn(&[0xf2, 0x41, 0x0f, 0x59, 0x04, 0xc9]).unwrap();
+        assert_eq!(i.op, FpOp::Mul);
+        let m = i.src.as_mem().unwrap();
+        assert_eq!(m.base, Some(9)); // r9
+        assert_eq!(m.index, Some(1)); // rcx
+        assert_eq!(m.scale, 8);
+    }
+
+    #[test]
+    fn decode_movsd_store() {
+        // f2 0f 11 47 08 = movsd [rdi+8], xmm0
+        let i = decode_insn(&[0xf2, 0x0f, 0x11, 0x47, 0x08]).unwrap();
+        assert_eq!(i.op, FpOp::Mov);
+        let m = i.dst.as_mem().unwrap();
+        assert_eq!(m.base, Some(7));
+        assert_eq!(m.disp, 8);
+        assert_eq!(i.src, Operand::Xmm(0));
+        assert!(!i.is_load_to_xmm());
+    }
+
+    #[test]
+    fn decode_addss_and_packed() {
+        // f3 0f 58 c1 = addss xmm0, xmm1
+        let i = decode_insn(&[0xf3, 0x0f, 0x58, 0xc1]).unwrap();
+        assert_eq!(i.op, FpOp::Add);
+        assert_eq!(i.width, FpWidth::S32);
+        // 66 0f 58 c1 = addpd ; 0f 58 c1 = addps
+        assert_eq!(
+            decode_insn(&[0x66, 0x0f, 0x58, 0xc1]).unwrap().width,
+            FpWidth::P64
+        );
+        assert_eq!(decode_insn(&[0x0f, 0x58, 0xc1]).unwrap().width, FpWidth::P32);
+    }
+
+    #[test]
+    fn decode_divsd_high_xmm() {
+        // f2 45 0f 5e ff = divsd xmm15, xmm15 (REX.RB)
+        let i = decode_insn(&[0xf2, 0x45, 0x0f, 0x5e, 0xff]).unwrap();
+        assert_eq!(i.op, FpOp::Div);
+        assert_eq!(i.dst, Operand::Xmm(15));
+        assert_eq!(i.src, Operand::Xmm(15));
+    }
+
+    #[test]
+    fn decode_ucomisd() {
+        // 66 0f 2e c8 = ucomisd xmm1, xmm0
+        let i = decode_insn(&[0x66, 0x0f, 0x2e, 0xc8]).unwrap();
+        assert_eq!(i.op, FpOp::Ucomi);
+        assert_eq!(i.width, FpWidth::S64);
+        assert_eq!(i.dst, Operand::Xmm(1));
+    }
+
+    #[test]
+    fn decode_rip_relative_movsd() {
+        // f2 0f 10 05 d4 03 00 00 = movsd xmm0, [rip+0x3d4]
+        let i = decode_insn(&[0xf2, 0x0f, 0x10, 0x05, 0xd4, 0x03, 0x00, 0x00]).unwrap();
+        let m = i.src.as_mem().unwrap();
+        assert!(m.rip_relative);
+        assert_eq!(m.disp, 0x3d4);
+        assert_eq!(i.len, 8);
+        let gpr = [0u64; 16];
+        assert_eq!(m.effective_addr(&gpr, 0x1000), 0x1000 + 0x3d4);
+    }
+
+    #[test]
+    fn decode_movd_gpr() {
+        // 66 0f 6e c7 = movd xmm0, edi
+        let i = decode_insn(&[0x66, 0x0f, 0x6e, 0xc7]).unwrap();
+        assert_eq!(i.op, FpOp::MovGpr);
+        assert_eq!(i.dst, Operand::Xmm(0));
+        assert_eq!(i.src, Operand::Gpr(7));
+    }
+
+    #[test]
+    fn decode_movq_f3() {
+        // f3 0f 7e 06 = movq xmm0, [rsi]
+        let i = decode_insn(&[0xf3, 0x0f, 0x7e, 0x06]).unwrap();
+        assert_eq!(i.op, FpOp::Mov);
+        assert_eq!(i.width, FpWidth::S64);
+        assert!(i.is_load_to_xmm());
+    }
+
+    #[test]
+    fn non_fp_returns_none_from_semantic() {
+        assert!(decode_insn(&[0x89, 0xc8]).is_none()); // mov eax, ecx
+        assert!(decode_insn(&[0xc3]).is_none()); // ret
+    }
+
+    // --- ModRM / SIB corner cases -------------------------------------------
+
+    #[test]
+    fn modrm_disp8_and_disp32() {
+        // f2 0f 10 46 10 : movsd xmm0, [rsi+0x10]
+        let i = decode_insn(&[0xf2, 0x0f, 0x10, 0x46, 0x10]).unwrap();
+        assert_eq!(i.src.as_mem().unwrap().disp, 0x10);
+        assert_eq!(i.len, 5);
+        // f2 0f 10 86 00 01 00 00 : movsd xmm0, [rsi+0x100]
+        let i = decode_insn(&[0xf2, 0x0f, 0x10, 0x86, 0x00, 0x01, 0x00, 0x00]).unwrap();
+        assert_eq!(i.src.as_mem().unwrap().disp, 0x100);
+        assert_eq!(i.len, 8);
+    }
+
+    #[test]
+    fn modrm_rbp_base_needs_disp() {
+        // mod=01 rm=101 (rbp+disp8): f2 0f 10 45 f8 = movsd xmm0, [rbp-8]
+        let i = decode_insn(&[0xf2, 0x0f, 0x10, 0x45, 0xf8]).unwrap();
+        let m = i.src.as_mem().unwrap();
+        assert_eq!(m.base, Some(5));
+        assert_eq!(m.disp, -8);
+        assert!(!m.rip_relative);
+    }
+
+    #[test]
+    fn sib_no_base_disp32() {
+        // f2 0f 10 04 fd 00 20 00 00 : movsd xmm0, [rdi*8 + 0x2000]
+        let i = decode_insn(&[0xf2, 0x0f, 0x10, 0x04, 0xfd, 0x00, 0x20, 0x00, 0x00]).unwrap();
+        let m = i.src.as_mem().unwrap();
+        assert_eq!(m.base, None);
+        assert_eq!(m.index, Some(7));
+        assert_eq!(m.scale, 8);
+        assert_eq!(m.disp, 0x2000);
+    }
+
+    #[test]
+    fn sib_rsp_base_no_index() {
+        // f2 0f 10 04 24 = movsd xmm0, [rsp]
+        let i = decode_insn(&[0xf2, 0x0f, 0x10, 0x04, 0x24]).unwrap();
+        let m = i.src.as_mem().unwrap();
+        assert_eq!(m.base, Some(4));
+        assert_eq!(m.index, None);
+    }
+
+    #[test]
+    fn sib_r12_base() {
+        // r12 base requires SIB: f2 41 0f 10 04 24 = movsd xmm0, [r12]
+        let i = decode_insn(&[0xf2, 0x41, 0x0f, 0x10, 0x04, 0x24]).unwrap();
+        let m = i.src.as_mem().unwrap();
+        assert_eq!(m.base, Some(12));
+        assert_eq!(m.index, None);
+    }
+
+    #[test]
+    fn rex_x_extends_index() {
+        // f2 42 0f 10 04 fa : movsd xmm0, [rdx + r15*8] (REX.X)
+        let i = decode_insn(&[0xf2, 0x42, 0x0f, 0x10, 0x04, 0xfa]).unwrap();
+        let m = i.src.as_mem().unwrap();
+        assert_eq!(m.base, Some(2));
+        assert_eq!(m.index, Some(15));
+    }
+
+    // --- length decode -------------------------------------------------------
+
+    #[test]
+    fn len_common_one_byte() {
+        assert_eq!(decode_len(&[0xc3]).unwrap().len, 1); // ret
+        assert_eq!(decode_len(&[0xc3]).unwrap().kind, InsnKind::Branch);
+        assert_eq!(decode_len(&[0x90]).unwrap().len, 1); // nop
+        assert_eq!(decode_len(&[0x55]).unwrap().len, 1); // push rbp
+    }
+
+    #[test]
+    fn len_mov_and_lea() {
+        // 48 89 e5 = mov rbp, rsp
+        let d = decode_len(&[0x48, 0x89, 0xe5]).unwrap();
+        assert_eq!(d.len, 3);
+        match d.kind {
+            InsnKind::Other { gpr_writes } => assert_eq!(gpr_writes, 1 << 5),
+            _ => panic!(),
+        }
+        // 48 8d 04 cd 00 00 00 00 = lea rax, [rcx*8]
+        let d = decode_len(&[0x48, 0x8d, 0x04, 0xcd, 0, 0, 0, 0]).unwrap();
+        assert_eq!(d.len, 8);
+        match d.kind {
+            InsnKind::Other { gpr_writes } => assert_eq!(gpr_writes, 1 << 0),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn len_branches() {
+        assert_eq!(decode_len(&[0x74, 0x10]).unwrap().kind, InsnKind::Branch); // je
+        assert_eq!(decode_len(&[0xe9, 0, 0, 0, 0]).unwrap().len, 5); // jmp rel32
+        assert_eq!(
+            decode_len(&[0x0f, 0x84, 0, 0, 0, 0]).unwrap().kind,
+            InsnKind::Branch
+        ); // je rel32
+        assert_eq!(decode_len(&[0x0f, 0x84, 0, 0, 0, 0]).unwrap().len, 6);
+        assert_eq!(decode_len(&[0xe8, 1, 2, 3, 4]).unwrap().kind, InsnKind::Branch); // call
+        // indirect call: ff d0 = call rax
+        assert_eq!(decode_len(&[0xff, 0xd0]).unwrap().kind, InsnKind::Branch);
+    }
+
+    #[test]
+    fn len_imm_group() {
+        // 83 c0 01 = add eax, 1
+        assert_eq!(decode_len(&[0x83, 0xc0, 0x01]).unwrap().len, 3);
+        // 81 c0 00 01 00 00 = add eax, 0x100
+        assert_eq!(decode_len(&[0x81, 0xc0, 0, 1, 0, 0]).unwrap().len, 6);
+        // 48 c7 c0 2a 00 00 00 = mov rax, 42
+        assert_eq!(decode_len(&[0x48, 0xc7, 0xc0, 0x2a, 0, 0, 0]).unwrap().len, 7);
+        // 48 b8 imm64 = movabs rax
+        assert_eq!(
+            decode_len(&[0x48, 0xb8, 1, 2, 3, 4, 5, 6, 7, 8]).unwrap().len,
+            10
+        );
+        // b8 imm32
+        assert_eq!(decode_len(&[0xb8, 1, 2, 3, 4]).unwrap().len, 5);
+    }
+
+    #[test]
+    fn len_movzx_cmov() {
+        // 0f b6 c0 = movzx eax, al
+        let d = decode_len(&[0x0f, 0xb6, 0xc0]).unwrap();
+        assert_eq!(d.len, 3);
+        // 0f 44 c1 = cmove eax, ecx
+        let d = decode_len(&[0x0f, 0x44, 0xc1]).unwrap();
+        assert_eq!(d.len, 3);
+        match d.kind {
+            InsnKind::Other { gpr_writes } => assert_eq!(gpr_writes, 1),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn len_long_nops() {
+        // gcc pads with 0f 1f 40 00 / 0f 1f 44 00 00 / 66 0f 1f 44 00 00 …
+        assert_eq!(decode_len(&[0x0f, 0x1f, 0x40, 0x00]).unwrap().len, 4);
+        assert_eq!(decode_len(&[0x0f, 0x1f, 0x44, 0x00, 0x00]).unwrap().len, 5);
+        assert_eq!(
+            decode_len(&[0x66, 0x0f, 0x1f, 0x44, 0x00, 0x00]).unwrap().len,
+            6
+        );
+        assert_eq!(
+            decode_len(&[0x0f, 0x1f, 0x80, 0, 0, 0, 0]).unwrap().len,
+            7
+        );
+    }
+
+    #[test]
+    fn len_fp_subset_reports_fp_kind() {
+        let d = decode_len(&[0xf2, 0x0f, 0x59, 0xc1]).unwrap();
+        match d.kind {
+            InsnKind::Fp(i) => assert_eq!(i.op, FpOp::Mul),
+            _ => panic!("expected Fp"),
+        }
+    }
+
+    #[test]
+    fn len_unknown_returns_none() {
+        // 0f 0e (femms, 3dnow) not covered
+        assert!(decode_len(&[0x0f, 0x0e]).is_none());
+    }
+
+    #[test]
+    fn len_truncated_returns_none() {
+        assert!(decode_len(&[0xf2, 0x0f]).is_none());
+        assert!(decode_len(&[0x81, 0xc0, 0x00]).is_none());
+        assert!(decode_len(&[]).is_none());
+    }
+
+    #[test]
+    fn len_test_and_div_groups() {
+        // f7 e1 = mul ecx → writes rax, rdx
+        let d = decode_len(&[0xf7, 0xe1]).unwrap();
+        match d.kind {
+            InsnKind::Other { gpr_writes } => assert_eq!(gpr_writes, 0b101),
+            _ => panic!(),
+        }
+        // f7 c0 imm32 = test eax, imm32 (len 6)
+        assert_eq!(decode_len(&[0xf7, 0xc0, 1, 2, 3, 4]).unwrap().len, 6);
+        // f6 c0 01 = test al, 1 (len 3)
+        assert_eq!(decode_len(&[0xf6, 0xc0, 0x01]).unwrap().len, 3);
+    }
+
+    #[test]
+    fn prefix_parsing() {
+        let p = parse_prefixes(&[0x66, 0x48, 0x0f]);
+        assert!(p.opsize66);
+        assert!(p.rex_w());
+        assert_eq!(p.len, 2);
+        let p = parse_prefixes(&[0xf2, 0x41, 0x0f]);
+        assert!(p.f2);
+        assert_eq!(p.rex_b(), 1);
+    }
+}

@@ -1,0 +1,313 @@
+//! Minimal ELF64 reader: program text + function symbols.
+//!
+//! Used in two places: on `/proc/self/exe` to build the in-process function
+//! table the SIGFPE handler back-traces with, and on external binaries for
+//! the Figure-6 corpus analysis.  Only the pieces we need: section headers,
+//! `.symtab`/`.dynsym`, and section bytes.  Implemented from the ELF64 spec
+//! — the `object` crate is unavailable offline, and the paper's mechanism
+//! only needs exactly this much.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const SHT_SYMTAB: u32 = 2;
+const SHT_DYNSYM: u32 = 11;
+const STT_FUNC: u8 = 2;
+
+/// A function symbol: name, virtual address, size.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FuncSym {
+    pub name: String,
+    pub addr: u64,
+    pub size: u64,
+}
+
+impl FuncSym {
+    #[inline]
+    pub fn contains(&self, vaddr: u64) -> bool {
+        vaddr >= self.addr && vaddr < self.addr + self.size
+    }
+}
+
+/// An executable section (e.g. `.text`): virtual address + bytes.
+#[derive(Debug, Clone)]
+pub struct TextSection {
+    pub name: String,
+    pub vaddr: u64,
+    pub bytes: Vec<u8>,
+}
+
+impl TextSection {
+    /// Slice of bytes at virtual addresses `[vaddr, vaddr+len)`.
+    pub fn slice_at(&self, vaddr: u64, len: usize) -> Option<&[u8]> {
+        let off = vaddr.checked_sub(self.vaddr)? as usize;
+        self.bytes.get(off..off.min(self.bytes.len()).max(off))?; // bounds sanity
+        self.bytes.get(off..off + len)
+    }
+
+    /// All bytes from `vaddr` to the end of the section.
+    pub fn tail_from(&self, vaddr: u64) -> Option<&[u8]> {
+        let off = vaddr.checked_sub(self.vaddr)? as usize;
+        self.bytes.get(off..)
+    }
+
+    pub fn contains(&self, vaddr: u64) -> bool {
+        vaddr >= self.vaddr && vaddr < self.vaddr + self.bytes.len() as u64
+    }
+}
+
+/// Parsed view of an ELF64 binary: executable sections + function symbols.
+#[derive(Debug, Clone)]
+pub struct ElfImage {
+    pub path: String,
+    pub text: Vec<TextSection>,
+    /// Function symbols sorted by address.
+    pub funcs: Vec<FuncSym>,
+    /// ELF type (2 = EXEC, 3 = DYN/PIE).
+    pub e_type: u16,
+}
+
+fn rd_u16(b: &[u8], off: usize) -> Result<u16> {
+    Ok(u16::from_le_bytes(
+        b.get(off..off + 2).context("eof u16")?.try_into()?,
+    ))
+}
+fn rd_u32(b: &[u8], off: usize) -> Result<u32> {
+    Ok(u32::from_le_bytes(
+        b.get(off..off + 4).context("eof u32")?.try_into()?,
+    ))
+}
+fn rd_u64(b: &[u8], off: usize) -> Result<u64> {
+    Ok(u64::from_le_bytes(
+        b.get(off..off + 8).context("eof u64")?.try_into()?,
+    ))
+}
+
+fn cstr_at(strtab: &[u8], off: usize) -> String {
+    let tail = &strtab[off.min(strtab.len())..];
+    let end = tail.iter().position(|&c| c == 0).unwrap_or(tail.len());
+    String::from_utf8_lossy(&tail[..end]).into_owned()
+}
+
+impl ElfImage {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let data = std::fs::read(path)
+            .with_context(|| format!("reading ELF {}", path.display()))?;
+        Self::parse(&data, &path.display().to_string())
+    }
+
+    pub fn parse(data: &[u8], path: &str) -> Result<Self> {
+        if data.len() < 64 || &data[0..4] != b"\x7fELF" {
+            bail!("{path}: not an ELF file");
+        }
+        if data[4] != 2 {
+            bail!("{path}: not ELF64");
+        }
+        if data[5] != 1 {
+            bail!("{path}: not little-endian");
+        }
+        let e_type = rd_u16(data, 16)?;
+        let e_machine = rd_u16(data, 18)?;
+        if e_machine != 62 {
+            bail!("{path}: not x86-64 (e_machine={e_machine})");
+        }
+        let shoff = rd_u64(data, 0x28)? as usize;
+        let shentsize = rd_u16(data, 0x3a)? as usize;
+        let shnum = rd_u16(data, 0x3c)? as usize;
+        let shstrndx = rd_u16(data, 0x3e)? as usize;
+
+        struct Sh {
+            name_off: u32,
+            sh_type: u32,
+            flags: u64,
+            vaddr: u64,
+            offset: u64,
+            size: u64,
+            link: u32,
+            entsize: u64,
+        }
+        let mut sections = Vec::with_capacity(shnum);
+        for i in 0..shnum {
+            let base = shoff + i * shentsize;
+            sections.push(Sh {
+                name_off: rd_u32(data, base)?,
+                sh_type: rd_u32(data, base + 4)?,
+                flags: rd_u64(data, base + 8)?,
+                vaddr: rd_u64(data, base + 16)?,
+                offset: rd_u64(data, base + 24)?,
+                size: rd_u64(data, base + 32)?,
+                link: rd_u32(data, base + 40)?,
+                entsize: rd_u64(data, base + 56)?,
+            });
+        }
+        let shstr = sections
+            .get(shstrndx)
+            .context("bad shstrndx")
+            .map(|s| {
+                data.get(s.offset as usize..(s.offset + s.size) as usize)
+                    .unwrap_or(&[])
+            })?;
+
+        // executable sections (SHF_EXECINSTR = 0x4), skipping NOBITS
+        let mut text = Vec::new();
+        for s in &sections {
+            if s.flags & 0x4 != 0 && s.sh_type != 8 {
+                let bytes = data
+                    .get(s.offset as usize..(s.offset + s.size) as usize)
+                    .context("text out of range")?
+                    .to_vec();
+                text.push(TextSection {
+                    name: cstr_at(shstr, s.name_off as usize),
+                    vaddr: s.vaddr,
+                    bytes,
+                });
+            }
+        }
+
+        // symbols: prefer .symtab, fall back to .dynsym
+        let mut funcs = Vec::new();
+        for want in [SHT_SYMTAB, SHT_DYNSYM] {
+            if !funcs.is_empty() {
+                break;
+            }
+            for s in &sections {
+                if s.sh_type != want {
+                    continue;
+                }
+                let strtab_sec = sections.get(s.link as usize).context("bad symtab link")?;
+                let strtab = data
+                    .get(strtab_sec.offset as usize..(strtab_sec.offset + strtab_sec.size) as usize)
+                    .context("strtab out of range")?;
+                let entsize = if s.entsize == 0 { 24 } else { s.entsize as usize };
+                let count = (s.size as usize) / entsize;
+                for i in 0..count {
+                    let base = s.offset as usize + i * entsize;
+                    let name_off = rd_u32(data, base)?;
+                    let info = *data.get(base + 4).context("eof sym")?;
+                    let value = rd_u64(data, base + 8)?;
+                    let size = rd_u64(data, base + 16)?;
+                    if info & 0xf == STT_FUNC && size > 0 && value > 0 {
+                        funcs.push(FuncSym {
+                            name: cstr_at(strtab, name_off as usize),
+                            addr: value,
+                            size,
+                        });
+                    }
+                }
+            }
+        }
+        funcs.sort_by_key(|f| f.addr);
+        funcs.dedup_by_key(|f| f.addr);
+
+        Ok(Self {
+            path: path.to_string(),
+            text,
+            funcs,
+            e_type,
+        })
+    }
+
+    /// The function containing `vaddr`, if any (binary search).
+    pub fn func_at(&self, vaddr: u64) -> Option<&FuncSym> {
+        let idx = self.funcs.partition_point(|f| f.addr <= vaddr);
+        let f = self.funcs.get(idx.checked_sub(1)?)?;
+        f.contains(vaddr).then_some(f)
+    }
+
+    /// Bytes of a whole function.
+    pub fn func_bytes(&self, f: &FuncSym) -> Option<&[u8]> {
+        self.text
+            .iter()
+            .find(|t| t.contains(f.addr))
+            .and_then(|t| t.slice_at(f.addr, f.size as usize))
+    }
+
+    /// Find a function by (exact) name.
+    pub fn func_named(&self, name: &str) -> Option<&FuncSym> {
+        self.funcs.iter().find(|f| f.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn self_exe() -> ElfImage {
+        ElfImage::load("/proc/self/exe").expect("parse own test binary")
+    }
+
+    #[test]
+    fn parses_own_binary() {
+        let img = self_exe();
+        assert!(!img.text.is_empty(), "no executable sections");
+        assert!(img.text.iter().any(|t| t.name == ".text"));
+        assert!(img.funcs.len() > 100, "expected many function symbols");
+    }
+
+    #[test]
+    fn symbols_sorted_and_searchable() {
+        let img = self_exe();
+        for w in img.funcs.windows(2) {
+            assert!(w[0].addr <= w[1].addr);
+        }
+        // every function must be findable via func_at at its entry and
+        // mid-body
+        for f in img.funcs.iter().take(200) {
+            let got = img.func_at(f.addr).expect("entry lookup");
+            assert_eq!(got.addr, f.addr);
+            if f.size > 2 {
+                let got = img.func_at(f.addr + f.size / 2);
+                // mid-body lookup can legitimately resolve to an overlapping
+                // (aliased) symbol at the same address; just require a hit
+                assert!(got.is_some(), "mid-body lookup failed for {}", f.name);
+            }
+        }
+    }
+
+    #[test]
+    fn func_at_misses_out_of_range() {
+        let img = self_exe();
+        assert!(img.func_at(0).is_none());
+        assert!(img.func_at(u64::MAX - 16).is_none());
+    }
+
+    #[test]
+    fn func_bytes_match_section() {
+        let img = self_exe();
+        let mut checked = 0;
+        for f in &img.funcs {
+            if let Some(bytes) = img.func_bytes(f) {
+                assert_eq!(bytes.len(), f.size as usize);
+                checked += 1;
+                if checked > 50 {
+                    break;
+                }
+            }
+        }
+        assert!(checked > 10, "too few functions with bytes");
+    }
+
+    #[test]
+    fn rejects_non_elf() {
+        assert!(ElfImage::parse(b"not an elf at all....", "mem").is_err());
+        assert!(ElfImage::parse(b"\x7fELF", "mem").is_err()); // truncated
+    }
+
+    #[test]
+    fn slice_and_tail() {
+        let t = TextSection {
+            name: ".text".into(),
+            vaddr: 0x1000,
+            bytes: (0..=255u8).collect(),
+        };
+        assert_eq!(t.slice_at(0x1000, 4), Some(&[0u8, 1, 2, 3][..]));
+        assert_eq!(t.slice_at(0x10fe, 2), Some(&[0xfeu8, 0xff][..]));
+        assert_eq!(t.slice_at(0x10ff, 2), None);
+        assert_eq!(t.slice_at(0xfff, 1), None);
+        assert_eq!(t.tail_from(0x10fc).unwrap().len(), 4);
+        assert!(t.contains(0x1000));
+        assert!(!t.contains(0x1100));
+    }
+}

@@ -1,0 +1,169 @@
+//! Human-readable formatting of decoded instructions — the diagnostics the
+//! paper's Figures 3–5 show (gdb views of the faulting context), produced
+//! by our own decoder.
+
+use super::decode::{decode_len, InsnKind};
+use super::insn::{Insn, MemRef, Operand};
+
+const GPR_NAMES: [&str; 16] = [
+    "rax", "rcx", "rdx", "rbx", "rsp", "rbp", "rsi", "rdi", "r8", "r9", "r10", "r11", "r12",
+    "r13", "r14", "r15",
+];
+
+/// Format a memory reference like `QWORD PTR [r10+rsi*8+0x20]`.
+pub fn fmt_mem(m: &MemRef, bytes: usize) -> String {
+    let size = match bytes {
+        4 => "DWORD PTR ",
+        8 => "QWORD PTR ",
+        16 => "XMMWORD PTR ",
+        _ => "",
+    };
+    // hex-format a signed displacement with a proper sign
+    let signed_hex = |d: i32| -> String {
+        if d < 0 {
+            format!("-{:#x}", -(d as i64))
+        } else {
+            format!("+{:#x}", d)
+        }
+    };
+    if m.rip_relative {
+        return format!("{size}[rip{}]", signed_hex(m.disp));
+    }
+    let mut inner = String::new();
+    if let Some(b) = m.base {
+        inner.push_str(GPR_NAMES[b as usize & 15]);
+    }
+    if let Some(i) = m.index {
+        if !inner.is_empty() {
+            inner.push('+');
+        }
+        inner.push_str(GPR_NAMES[i as usize & 15]);
+        if m.scale > 1 {
+            inner.push_str(&format!("*{}", m.scale));
+        }
+    }
+    if m.disp != 0 || inner.is_empty() {
+        if inner.is_empty() {
+            inner.push_str(&format!("{:#x}", m.disp));
+        } else {
+            inner.push_str(&signed_hex(m.disp));
+        }
+    }
+    format!("{size}[{inner}]")
+}
+
+/// Format one operand.
+pub fn fmt_operand(op: &Operand, mem_bytes: usize) -> String {
+    match op {
+        Operand::Xmm(r) => format!("xmm{r}"),
+        Operand::Gpr(r) => GPR_NAMES[*r as usize & 15].to_string(),
+        Operand::Mem(m) => fmt_mem(m, mem_bytes),
+    }
+}
+
+/// Format a decoded FP instruction, e.g.
+/// `movsd  xmm0, QWORD PTR [r10+rsi*8]`.
+pub fn fmt_insn(i: &Insn) -> String {
+    format!(
+        "{:<7}{}, {}",
+        i.mnemonic(),
+        fmt_operand(&i.dst, i.width.mem_bytes()),
+        fmt_operand(&i.src, i.width.mem_bytes())
+    )
+}
+
+/// Disassemble up to `max` instructions from `bytes` at `vaddr`,
+/// paper-Figure-3 style (address, raw bytes, text).
+pub fn disassemble(bytes: &[u8], vaddr: u64, max: usize) -> String {
+    let mut out = String::new();
+    let mut off = 0usize;
+    for _ in 0..max {
+        if off >= bytes.len() {
+            break;
+        }
+        match decode_len(&bytes[off..]) {
+            Some(d) => {
+                let raw: Vec<String> = bytes[off..off + d.len]
+                    .iter()
+                    .map(|b| format!("{b:02x}"))
+                    .collect();
+                let text = match d.kind {
+                    InsnKind::Fp(i) => fmt_insn(&i),
+                    InsnKind::Branch => "<branch>".to_string(),
+                    InsnKind::Other { .. } => "<insn>".to_string(),
+                };
+                out.push_str(&format!(
+                    "{:#014x}: {:<24} {}\n",
+                    vaddr + off as u64,
+                    raw.join(" "),
+                    text
+                ));
+                off += d.len;
+            }
+            None => {
+                out.push_str(&format!(
+                    "{:#014x}: {:02x} <undecodable>\n",
+                    vaddr + off as u64,
+                    bytes[off]
+                ));
+                break;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::disasm::decode::decode_insn;
+
+    #[test]
+    fn formats_paper_figure3_instructions() {
+        // movsd xmm0, QWORD PTR [r10+rsi*8]
+        let i = decode_insn(&[0xf2, 0x41, 0x0f, 0x10, 0x04, 0xf2]).unwrap();
+        assert_eq!(fmt_insn(&i), "movsd  xmm0, QWORD PTR [r10+rsi*8]");
+        // mulsd xmm0, QWORD PTR [r9+rcx*8]
+        let i = decode_insn(&[0xf2, 0x41, 0x0f, 0x59, 0x04, 0xc9]).unwrap();
+        assert_eq!(fmt_insn(&i), "mulsd  xmm0, QWORD PTR [r9+rcx*8]");
+    }
+
+    #[test]
+    fn formats_disp_and_rip() {
+        let i = decode_insn(&[0xf2, 0x0f, 0x10, 0x45, 0xf8]).unwrap();
+        assert_eq!(fmt_insn(&i), "movsd  xmm0, QWORD PTR [rbp-0x8]");
+        let i = decode_insn(&[0xf2, 0x0f, 0x10, 0x05, 0xd4, 0x03, 0x00, 0x00]).unwrap();
+        assert_eq!(fmt_insn(&i), "movsd  xmm0, QWORD PTR [rip+0x3d4]");
+    }
+
+    #[test]
+    fn formats_reg_reg_and_store() {
+        let i = decode_insn(&[0xf2, 0x0f, 0x59, 0xc1]).unwrap();
+        assert_eq!(fmt_insn(&i), "mulsd  xmm0, xmm1");
+        let i = decode_insn(&[0xf2, 0x0f, 0x11, 0x47, 0x08]).unwrap();
+        assert_eq!(fmt_insn(&i), "movsd  QWORD PTR [rdi+0x8], xmm0");
+    }
+
+    #[test]
+    fn disassembles_figure3_block() {
+        let block: &[u8] = &[
+            0xf2, 0x41, 0x0f, 0x10, 0x04, 0xf2, // movsd
+            0x01, 0xfa, // add edx, edi
+            0x44, 0x39, 0xc0, // cmp
+            0xf2, 0x41, 0x0f, 0x59, 0x04, 0xc9, // mulsd
+        ];
+        let text = disassemble(block, 0x5555_5555_49ff, 10);
+        assert!(text.contains("movsd  xmm0, QWORD PTR [r10+rsi*8]"), "{text}");
+        assert!(text.contains("mulsd  xmm0, QWORD PTR [r9+rcx*8]"), "{text}");
+        assert_eq!(text.lines().count(), 4);
+    }
+
+    #[test]
+    fn disassembles_live_asm_kernel() {
+        let start = crate::workloads::kernels::kernel_addr_for_tests();
+        let bytes = unsafe { std::slice::from_raw_parts(start as *const u8, 40) };
+        let text = disassemble(bytes, start, 12);
+        assert!(text.contains("movsd"), "{text}");
+        assert!(text.contains("mulsd"), "{text}");
+    }
+}

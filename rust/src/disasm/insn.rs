@@ -1,0 +1,325 @@
+//! Instruction representation for the semantically-decoded SSE subset.
+
+/// Scalar/packed FP operation kinds we decode fully (paper Table 1 plus the
+/// compare/convert/mov families needed by the trap handler and back-trace).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FpOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Sqrt,
+    Min,
+    Max,
+    /// `ucomis[sd]` / `comis[sd]` — ordered compares (trap on NaN).
+    Comi,
+    Ucomi,
+    /// mov between xmm and memory/xmm: `movss/movsd/movaps/movups/...`
+    Mov,
+    /// `movd`/`movq` xmm↔gpr/mem.
+    MovGpr,
+    /// `cvtsi2sd`-family (int → fp, cannot produce NaN but reads memory).
+    Cvt,
+}
+
+impl FpOp {
+    /// Does this operation raise `#IA` when an operand is an SNaN (with
+    /// invalid unmasked)?
+    pub fn is_arith(self) -> bool {
+        matches!(
+            self,
+            FpOp::Add | FpOp::Sub | FpOp::Mul | FpOp::Div | FpOp::Sqrt | FpOp::Min | FpOp::Max
+        )
+    }
+
+    pub fn is_compare(self) -> bool {
+        matches!(self, FpOp::Comi | FpOp::Ucomi)
+    }
+
+    pub fn is_mov(self) -> bool {
+        matches!(self, FpOp::Mov | FpOp::MovGpr)
+    }
+}
+
+/// Element width of the operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FpWidth {
+    /// 32-bit single (`ss`)
+    S32,
+    /// 64-bit double (`sd`)
+    S64,
+    /// packed single (`ps`) — 4 lanes
+    P32,
+    /// packed double (`pd`) — 2 lanes
+    P64,
+    /// 32/64-bit integer move (`movd`/`movq`)
+    Int,
+}
+
+impl FpWidth {
+    /// Bytes accessed by a memory operand of this width.
+    pub fn mem_bytes(self) -> usize {
+        match self {
+            FpWidth::S32 => 4,
+            FpWidth::S64 => 8,
+            FpWidth::P32 | FpWidth::P64 => 16,
+            FpWidth::Int => 8,
+        }
+    }
+
+    /// f64 lanes (0 for non-f64 widths).
+    pub fn f64_lanes(self) -> usize {
+        match self {
+            FpWidth::S64 => 1,
+            FpWidth::P64 => 2,
+            _ => 0,
+        }
+    }
+
+    /// f32 lanes (0 for non-f32 widths).
+    pub fn f32_lanes(self) -> usize {
+        match self {
+            FpWidth::S32 => 1,
+            FpWidth::P32 => 4,
+            _ => 0,
+        }
+    }
+}
+
+/// A memory reference `[base + index*scale + disp]` (or RIP-relative).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MemRef {
+    /// GPR number 0..=15, or None.
+    pub base: Option<u8>,
+    pub index: Option<u8>,
+    /// 1, 2, 4, or 8.
+    pub scale: u8,
+    pub disp: i32,
+    /// RIP-relative addressing (base/index are None).
+    pub rip_relative: bool,
+}
+
+impl MemRef {
+    /// Compute the effective address given a GPR file and the address of
+    /// the *next* instruction (x86 RIP-relative semantics).
+    pub fn effective_addr(&self, gpr: &[u64; 16], next_rip: u64) -> u64 {
+        if self.rip_relative {
+            return next_rip.wrapping_add(self.disp as i64 as u64);
+        }
+        let mut addr = self.disp as i64 as u64;
+        if let Some(b) = self.base {
+            addr = addr.wrapping_add(gpr[b as usize]);
+        }
+        if let Some(i) = self.index {
+            addr = addr.wrapping_add(gpr[i as usize].wrapping_mul(self.scale as u64));
+        }
+        addr
+    }
+
+    /// GPRs this reference reads.
+    pub fn regs_used(&self) -> impl Iterator<Item = u8> + '_ {
+        self.base.into_iter().chain(self.index)
+    }
+}
+
+/// An operand of a decoded FP instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Operand {
+    /// XMM register 0..=15.
+    Xmm(u8),
+    /// General-purpose register 0..=15.
+    Gpr(u8),
+    Mem(MemRef),
+}
+
+impl Operand {
+    pub fn as_xmm(&self) -> Option<u8> {
+        match self {
+            Operand::Xmm(r) => Some(*r),
+            _ => None,
+        }
+    }
+
+    pub fn as_mem(&self) -> Option<&MemRef> {
+        match self {
+            Operand::Mem(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+/// A fully decoded SSE/SSE2 FP instruction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Insn {
+    pub op: FpOp,
+    pub width: FpWidth,
+    /// Destination operand (always first; for stores this is the memory
+    /// operand).
+    pub dst: Operand,
+    /// Source operand.
+    pub src: Operand,
+    /// Encoded length in bytes.
+    pub len: usize,
+}
+
+impl Insn {
+    /// The instruction's memory operand, if any.
+    pub fn mem_operand(&self) -> Option<&MemRef> {
+        self.dst.as_mem().or_else(|| self.src.as_mem())
+    }
+
+    /// True if this is a load `xmm ← mem`.
+    pub fn is_load_to_xmm(&self) -> bool {
+        self.op.is_mov() && matches!(self.dst, Operand::Xmm(_)) && matches!(self.src, Operand::Mem(_))
+    }
+
+    /// True if this instruction *writes* xmm register `r`.
+    pub fn writes_xmm(&self, r: u8) -> bool {
+        match self.op {
+            // stores write memory, not the register
+            FpOp::Mov | FpOp::MovGpr | FpOp::Cvt => self.dst == Operand::Xmm(r),
+            // compares write only flags
+            FpOp::Comi | FpOp::Ucomi => false,
+            _ => self.dst == Operand::Xmm(r),
+        }
+    }
+
+    /// Pretty mnemonic (diagnostics / reports).
+    pub fn mnemonic(&self) -> String {
+        let base = match self.op {
+            FpOp::Add => "add",
+            FpOp::Sub => "sub",
+            FpOp::Mul => "mul",
+            FpOp::Div => "div",
+            FpOp::Sqrt => "sqrt",
+            FpOp::Min => "min",
+            FpOp::Max => "max",
+            FpOp::Comi => "comi",
+            FpOp::Ucomi => "ucomi",
+            FpOp::Mov => "mov",
+            FpOp::MovGpr => "movd",
+            FpOp::Cvt => "cvt",
+        };
+        let suffix = match self.width {
+            FpWidth::S32 => "ss",
+            FpWidth::S64 => "sd",
+            FpWidth::P32 => "ps",
+            FpWidth::P64 => "pd",
+            FpWidth::Int => "",
+        };
+        format!("{base}{suffix}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_addr_base_index_scale_disp() {
+        let mut gpr = [0u64; 16];
+        gpr[10] = 0x1000; // r10
+        gpr[6] = 3; // rsi
+        let m = MemRef {
+            base: Some(10),
+            index: Some(6),
+            scale: 8,
+            disp: 0x20,
+            rip_relative: false,
+        };
+        assert_eq!(m.effective_addr(&gpr, 0), 0x1000 + 3 * 8 + 0x20);
+    }
+
+    #[test]
+    fn effective_addr_rip_relative() {
+        let gpr = [0u64; 16];
+        let m = MemRef {
+            base: None,
+            index: None,
+            scale: 1,
+            disp: -16,
+            rip_relative: true,
+        };
+        assert_eq!(m.effective_addr(&gpr, 0x4000), 0x4000 - 16);
+    }
+
+    #[test]
+    fn effective_addr_negative_disp_wraps() {
+        let mut gpr = [0u64; 16];
+        gpr[0] = 8;
+        let m = MemRef {
+            base: Some(0),
+            index: None,
+            scale: 1,
+            disp: -8,
+            rip_relative: false,
+        };
+        assert_eq!(m.effective_addr(&gpr, 0), 0);
+    }
+
+    #[test]
+    fn width_bytes_and_lanes() {
+        assert_eq!(FpWidth::S64.mem_bytes(), 8);
+        assert_eq!(FpWidth::P32.mem_bytes(), 16);
+        assert_eq!(FpWidth::P64.f64_lanes(), 2);
+        assert_eq!(FpWidth::S32.f32_lanes(), 1);
+        assert_eq!(FpWidth::S32.f64_lanes(), 0);
+    }
+
+    #[test]
+    fn writes_xmm_semantics() {
+        let load = Insn {
+            op: FpOp::Mov,
+            width: FpWidth::S64,
+            dst: Operand::Xmm(3),
+            src: Operand::Mem(MemRef {
+                base: Some(0),
+                index: None,
+                scale: 1,
+                disp: 0,
+                rip_relative: false,
+            }),
+            len: 4,
+        };
+        assert!(load.writes_xmm(3));
+        assert!(!load.writes_xmm(4));
+        assert!(load.is_load_to_xmm());
+
+        let store = Insn {
+            op: FpOp::Mov,
+            width: FpWidth::S64,
+            dst: Operand::Mem(MemRef {
+                base: Some(0),
+                index: None,
+                scale: 1,
+                disp: 0,
+                rip_relative: false,
+            }),
+            src: Operand::Xmm(3),
+            len: 4,
+        };
+        assert!(!store.writes_xmm(3));
+        assert!(!store.is_load_to_xmm());
+
+        let cmp = Insn {
+            op: FpOp::Ucomi,
+            width: FpWidth::S64,
+            dst: Operand::Xmm(1),
+            src: Operand::Xmm(2),
+            len: 4,
+        };
+        assert!(!cmp.writes_xmm(1));
+    }
+
+    #[test]
+    fn mnemonics() {
+        let i = Insn {
+            op: FpOp::Mul,
+            width: FpWidth::S64,
+            dst: Operand::Xmm(0),
+            src: Operand::Xmm(1),
+            len: 4,
+        };
+        assert_eq!(i.mnemonic(), "mulsd");
+    }
+}

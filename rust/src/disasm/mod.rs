@@ -1,0 +1,30 @@
+//! x86-64 instruction decoding — the substrate behind both repair
+//! mechanisms and the Figure-6 static analysis.
+//!
+//! Two precision levels:
+//!
+//! * **Semantic decode** ([`insn::Insn`]) for the SSE/SSE2 floating-point
+//!   subset in the paper's Table 1 (plus the mov/compare family needed in
+//!   practice): full operand information, so the SIGFPE handler can tell
+//!   *which* operand holds the NaN and where a memory operand lives.
+//! * **Length decode** ([`decode::decode_len`]) for everything else: the
+//!   back-trace (paper §3.4) linearly sweeps a function from its entry to
+//!   the faulting instruction, which only requires correct instruction
+//!   boundaries and conservative clobber information.
+//!
+//! [`elf`] is a minimal ELF64 reader (symbols + text bytes) used both on
+//! `/proc/self/exe` (for in-process back-tracing) and on external binaries
+//! (for the Figure-6 corpus analysis).  [`backtrace`] implements the
+//! paper's found/not-found search; [`analyze`] aggregates it over whole
+//! binaries.
+
+pub mod analyze;
+pub mod backtrace;
+pub mod decode;
+pub mod elf;
+pub mod fmt;
+pub mod insn;
+
+pub use backtrace::{backtrace_mov, BacktraceOutcome};
+pub use decode::{decode_insn, decode_len};
+pub use insn::{FpOp, Insn, MemRef, Operand};

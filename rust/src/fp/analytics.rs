@@ -1,0 +1,218 @@
+//! Analytical model: probability that bit flips in approximate memory
+//! produce a NaN (paper §2.2: "we believe this happens with a
+//! non-negligible probability in a future approximate computing
+//! environment").
+//!
+//! Model: each of the 64 (or 32) bits of a stored value flips independently
+//! with probability `ber` per retention window.  A value becomes a NaN iff
+//! after flipping its exponent field is all ones **and** its fraction is
+//! non-zero.  For a value whose exponent field currently has `z` zero bits,
+//! the exact per-word probability is
+//!
+//! ```text
+//! P(NaN) = ber^z * (1-ber)^(E-z)          # exponent → all ones
+//!        * P(fraction != 0 after flips)   # ≈ 1 for random data
+//! ```
+//!
+//! The module evaluates both the exact per-value form and population-level
+//! expectations over empirical exponent-zero histograms.
+
+use super::bits::{F32Bits, F64Bits};
+
+/// Probability that a *specific* f64 value becomes a NaN after one
+/// retention window with independent per-bit flip probability `ber`.
+pub fn p_nan_f64(value: f64, ber: f64) -> f64 {
+    let b = F64Bits::from_f64(value);
+    if b.is_nan() {
+        return 1.0; // already a NaN
+    }
+    let z = b.flips_to_nan_exponent() as i32;
+    let keep = (F64Bits::EXP_BITS as i32) - z;
+    // exponent becomes all ones
+    let p_exp = ber.powi(z) * (1.0 - ber).powi(keep);
+    // fraction must end non-zero. If the value is ±Inf-able (fraction all
+    // zero and would stay zero) subtract that corner.
+    let p_frac_zero = if b.fraction() == 0 {
+        (1.0 - ber).powi(F64Bits::FRAC_BITS as i32)
+    } else {
+        // fraction must flip to exactly zero: each set bit flips, clear stays
+        let ones = b.fraction().count_ones() as i32;
+        let zeros = F64Bits::FRAC_BITS as i32 - ones;
+        ber.powi(ones) * (1.0 - ber).powi(zeros)
+    };
+    p_exp * (1.0 - p_frac_zero)
+}
+
+/// Probability that a *specific* f32 value becomes a NaN (same model).
+pub fn p_nan_f32(value: f32, ber: f64) -> f64 {
+    let b = F32Bits::from_f32(value);
+    if b.is_nan() {
+        return 1.0;
+    }
+    let z = b.flips_to_nan_exponent() as i32;
+    let keep = (F32Bits::EXP_BITS as i32) - z;
+    let p_exp = ber.powi(z) * (1.0 - ber).powi(keep);
+    let p_frac_zero = if b.fraction() == 0 {
+        (1.0 - ber).powi(F32Bits::FRAC_BITS as i32)
+    } else {
+        let ones = b.fraction().count_ones() as i32;
+        let zeros = F32Bits::FRAC_BITS as i32 - ones;
+        ber.powi(ones) * (1.0 - ber).powi(zeros)
+    };
+    p_exp * (1.0 - p_frac_zero)
+}
+
+/// Expected number of NaNs in a population of f64 values after one
+/// retention window at `ber`.
+pub fn expected_nans_f64(values: &[f64], ber: f64) -> f64 {
+    values.iter().map(|&v| p_nan_f64(v, ber)).sum()
+}
+
+/// Probability that at least one value of `values` becomes a NaN.
+pub fn p_any_nan_f64(values: &[f64], ber: f64) -> f64 {
+    let log_none: f64 = values
+        .iter()
+        .map(|&v| (1.0 - p_nan_f64(v, ber)).max(f64::MIN_POSITIVE).ln())
+        .sum();
+    1.0 - log_none.exp()
+}
+
+/// For values uniformly distributed in [lo, hi], the dominant NaN path is a
+/// single flip of the one zero exponent bit only when the exponent is
+/// 0b0111... or 0b1111...-1; in general values around magnitude ~1 have
+/// exponent 0x3ff/0x3fe (f64) with ~1-2 zero high bits.  This helper
+/// reports, for a sample, the histogram of "flips needed to reach an
+/// all-ones exponent" — the quantity that drives P(NaN).
+pub fn flips_needed_histogram_f64(values: &[f64]) -> [usize; 12] {
+    let mut h = [0usize; 12];
+    for &v in values {
+        let z = F64Bits::from_f64(v).flips_to_nan_exponent() as usize;
+        h[z.min(11)] += 1;
+    }
+    h
+}
+
+/// Generic-format NaN probability: a value stored in a format with
+/// `exp_bits` exponent bits and `frac_bits` fraction bits, whose exponent
+/// field currently has `exp_zeros` zero bits and whose fraction is
+/// non-zero, becomes NaN after one window at `ber` with probability
+/// `ber^z (1-ber)^(E-z)` (fraction-to-zero corner ignored: negligible for
+/// non-zero fractions).  Supports the paper's §2.2 short-bitwidth argument
+/// (fp16: E=5, bf16: E=8, f32: E=8, f64: E=11).
+pub fn p_nan_generic(exp_bits: u32, exp_zeros: u32, ber: f64) -> f64 {
+    assert!(exp_zeros <= exp_bits);
+    ber.powi(exp_zeros as i32) * (1.0 - ber).powi((exp_bits - exp_zeros) as i32)
+}
+
+/// Expected zero-bit count of the exponent field for values of magnitude
+/// near 1 in a format with `exp_bits` exponent bits: the biased exponent
+/// is `2^(E-1) - 1` = 0b0111…1, i.e. exactly one zero bit.
+pub fn unit_scale_exp_zeros(_exp_bits: u32) -> u32 {
+    1
+}
+
+/// Retention-window count until P(at least one NaN among n values) exceeds
+/// `threshold`, for homogeneous per-word NaN probability `p_word`.
+pub fn windows_until_nan(p_word: f64, n_words: usize, threshold: f64) -> f64 {
+    // P(no NaN after w windows) = (1-p_word)^(n*w)
+    let per_window_none = (1.0 - p_word).powi(n_words.min(i32::MAX as usize) as i32);
+    if per_window_none <= 0.0 {
+        return 1.0;
+    }
+    if per_window_none >= 1.0 {
+        return f64::INFINITY;
+    }
+    (1.0 - threshold).ln() / per_window_none.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p_nan_zero_ber_is_zero() {
+        assert_eq!(p_nan_f64(1.0, 0.0), 0.0);
+        assert_eq!(p_nan_f32(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn p_nan_already_nan_is_one() {
+        assert_eq!(p_nan_f64(f64::NAN, 1e-9), 1.0);
+    }
+
+    #[test]
+    fn p_nan_monotonic_in_ber_for_small_ber() {
+        // For BER << 1 the probability is dominated by ber^z, strictly
+        // increasing.
+        let mut last = 0.0;
+        for e in (4..12).rev() {
+            let ber = 10f64.powi(-e);
+            let p = p_nan_f64(1.0, ber);
+            assert!(p >= last, "ber={ber} p={p} last={last}");
+            last = p;
+        }
+    }
+
+    #[test]
+    fn p_nan_f64_close_form_single_zero_bit() {
+        // 1.5 needs exactly one exponent flip and has a non-zero fraction;
+        // for tiny ber, P ≈ ber * (1-ber)^10 ≈ ber.
+        let ber = 1e-8;
+        let p = p_nan_f64(1.5, ber);
+        assert!((p / ber - 1.0).abs() < 1e-4, "p={p}");
+    }
+
+    #[test]
+    fn p_nan_zero_fraction_value_mostly_becomes_inf() {
+        // 1.0 has an all-zero fraction: one exponent flip yields +Inf, not
+        // NaN — P(NaN) needs an additional fraction flip, so it is O(ber²).
+        let ber = 1e-8;
+        let p = p_nan_f64(1.0, ber);
+        assert!(p < 100.0 * ber * ber, "p={p}");
+        assert!(p > 0.0);
+    }
+
+    #[test]
+    fn f32_more_likely_than_f64_at_same_magnitude() {
+        // Paper §2.2: fewer exponent bits ⇒ NaN more likely. For values with
+        // a single zero exponent bit both need 1 flip, but f64 has more
+        // exponent bits that must *stay* set — the dominant effect shows for
+        // values needing multiple flips, e.g. 0.0 (8 vs 11 flips).
+        let ber = 1e-3;
+        assert!(p_nan_f32(0.0, ber) > p_nan_f64(0.0, ber));
+    }
+
+    #[test]
+    fn expected_nans_linear_in_population() {
+        let vals = vec![1.0f64; 1000];
+        let e1 = expected_nans_f64(&vals[..500], 1e-6);
+        let e2 = expected_nans_f64(&vals, 1e-6);
+        assert!((e2 / e1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p_any_nan_bounds() {
+        let vals: Vec<f64> = (1..100).map(|i| i as f64).collect();
+        let p = p_any_nan_f64(&vals, 1e-6);
+        assert!(p > 0.0 && p < 1.0);
+        // union bound: p_any <= sum of individual
+        assert!(p <= expected_nans_f64(&vals, 1e-6) + 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_all_values() {
+        let vals = vec![1.0, 0.0, f64::MAX, -2.5];
+        let h = flips_needed_histogram_f64(&vals);
+        assert_eq!(h.iter().sum::<usize>(), vals.len());
+        assert_eq!(h[11], 1); // 0.0: exponent all zeros
+        assert_eq!(h[1], 2); // 1.0 (0x3ff) and MAX (0x7fe): one zero bit
+        assert_eq!(h[10], 1); // -2.5: exponent 0x400 has ten zero bits
+    }
+
+    #[test]
+    fn windows_until_nan_sane() {
+        let w = windows_until_nan(1e-9, 1_000_000, 0.5);
+        assert!(w > 100.0 && w < 10_000.0, "w={w}");
+        assert!(windows_until_nan(0.0, 10, 0.5).is_infinite());
+    }
+}

@@ -1,0 +1,239 @@
+//! Bit-field views of IEEE-754 binary32 / binary64 values.
+//!
+//! Everything here is plain bit arithmetic — no FP operations — so it is
+//! async-signal-safe and usable from the `SIGFPE` handler.
+
+/// Field layout constants and accessors for `f64` (binary64).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct F64Bits(pub u64);
+
+impl F64Bits {
+    pub const SIGN_BIT: u32 = 63;
+    pub const EXP_BITS: u32 = 11;
+    pub const FRAC_BITS: u32 = 52;
+    pub const EXP_MASK: u64 = 0x7ff0_0000_0000_0000;
+    pub const FRAC_MASK: u64 = 0x000f_ffff_ffff_ffff;
+    /// The quiet bit: most-significant fraction bit.
+    pub const QUIET_BIT: u64 = 1 << 51;
+
+    #[inline]
+    pub fn from_f64(v: f64) -> Self {
+        Self(v.to_bits())
+    }
+
+    #[inline]
+    pub fn to_f64(self) -> f64 {
+        f64::from_bits(self.0)
+    }
+
+    #[inline]
+    pub fn sign(self) -> bool {
+        self.0 >> Self::SIGN_BIT != 0
+    }
+
+    /// Raw (biased) exponent field.
+    #[inline]
+    pub fn exponent(self) -> u16 {
+        ((self.0 & Self::EXP_MASK) >> Self::FRAC_BITS) as u16
+    }
+
+    #[inline]
+    pub fn fraction(self) -> u64 {
+        self.0 & Self::FRAC_MASK
+    }
+
+    /// `true` iff the exponent field is all ones (NaN or infinity).
+    #[inline]
+    pub fn exp_all_ones(self) -> bool {
+        self.0 & Self::EXP_MASK == Self::EXP_MASK
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        self.exp_all_ones() && self.fraction() != 0
+    }
+
+    #[inline]
+    pub fn is_inf(self) -> bool {
+        self.exp_all_ones() && self.fraction() == 0
+    }
+
+    /// Flip bit `i` (0 = LSB).
+    #[inline]
+    pub fn flip(self, i: u32) -> Self {
+        debug_assert!(i < 64);
+        Self(self.0 ^ (1u64 << i))
+    }
+
+    /// Number of exponent bits currently set.
+    #[inline]
+    pub fn exp_ones(self) -> u32 {
+        (self.0 & Self::EXP_MASK).count_ones()
+    }
+
+    /// Minimum number of single-bit flips that would turn this value into a
+    /// value with an all-ones exponent (the precondition for a NaN).
+    #[inline]
+    pub fn flips_to_nan_exponent(self) -> u32 {
+        Self::EXP_BITS - self.exp_ones()
+    }
+}
+
+/// Field layout constants and accessors for `f32` (binary32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct F32Bits(pub u32);
+
+impl F32Bits {
+    pub const SIGN_BIT: u32 = 31;
+    pub const EXP_BITS: u32 = 8;
+    pub const FRAC_BITS: u32 = 23;
+    pub const EXP_MASK: u32 = 0x7f80_0000;
+    pub const FRAC_MASK: u32 = 0x007f_ffff;
+    pub const QUIET_BIT: u32 = 1 << 22;
+
+    #[inline]
+    pub fn from_f32(v: f32) -> Self {
+        Self(v.to_bits())
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits(self.0)
+    }
+
+    #[inline]
+    pub fn sign(self) -> bool {
+        self.0 >> Self::SIGN_BIT != 0
+    }
+
+    #[inline]
+    pub fn exponent(self) -> u16 {
+        ((self.0 & Self::EXP_MASK) >> Self::FRAC_BITS) as u16
+    }
+
+    #[inline]
+    pub fn fraction(self) -> u32 {
+        self.0 & Self::FRAC_MASK
+    }
+
+    #[inline]
+    pub fn exp_all_ones(self) -> bool {
+        self.0 & Self::EXP_MASK == Self::EXP_MASK
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        self.exp_all_ones() && self.fraction() != 0
+    }
+
+    #[inline]
+    pub fn is_inf(self) -> bool {
+        self.exp_all_ones() && self.fraction() == 0
+    }
+
+    #[inline]
+    pub fn flip(self, i: u32) -> Self {
+        debug_assert!(i < 32);
+        Self(self.0 ^ (1u32 << i))
+    }
+
+    #[inline]
+    pub fn exp_ones(self) -> u32 {
+        (self.0 & Self::EXP_MASK).count_ones()
+    }
+
+    #[inline]
+    pub fn flips_to_nan_exponent(self) -> u32 {
+        Self::EXP_BITS - self.exp_ones()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_field_extraction() {
+        let b = F64Bits::from_f64(1.0);
+        assert_eq!(b.exponent(), 1023);
+        assert_eq!(b.fraction(), 0);
+        assert!(!b.sign());
+        assert!(!b.is_nan());
+        assert!(!b.is_inf());
+    }
+
+    #[test]
+    fn f64_nan_and_inf_detection() {
+        assert!(F64Bits::from_f64(f64::NAN).is_nan());
+        assert!(F64Bits::from_f64(f64::INFINITY).is_inf());
+        assert!(F64Bits::from_f64(f64::NEG_INFINITY).is_inf());
+        assert!(!F64Bits::from_f64(f64::MAX).is_nan());
+        // The paper's injected pattern is a NaN.
+        assert!(F64Bits(0x7ff0_4645_4443_4241).is_nan());
+    }
+
+    #[test]
+    fn f64_flip_roundtrip() {
+        let b = F64Bits::from_f64(3.25);
+        for i in 0..64 {
+            assert_eq!(b.flip(i).flip(i), b, "double flip of bit {i}");
+            if i != 63 {
+                assert_ne!(b.flip(i).to_f64(), 3.25);
+            }
+        }
+    }
+
+    #[test]
+    fn f64_sign_flip_only_changes_sign() {
+        let b = F64Bits::from_f64(2.5).flip(63);
+        assert_eq!(b.to_f64(), -2.5);
+    }
+
+    #[test]
+    fn f64_flips_to_nan_exponent() {
+        // 1.0 has exponent 0x3ff = 0b011_1111_1111 → one zero bit.
+        assert_eq!(F64Bits::from_f64(1.0).flips_to_nan_exponent(), 1);
+        // A NaN already has all exponent ones.
+        assert_eq!(F64Bits::from_f64(f64::NAN).flips_to_nan_exponent(), 0);
+        // Zero needs all 11.
+        assert_eq!(F64Bits::from_f64(0.0).flips_to_nan_exponent(), 11);
+    }
+
+    #[test]
+    fn f64_one_flip_from_huge_value_makes_inf_or_nan() {
+        // f64::MAX: exponent 0x7fe → flipping the LSB of the exponent makes
+        // exponent 0x7ff → becomes Inf/NaN depending on fraction.
+        let b = F64Bits::from_f64(f64::MAX);
+        assert_eq!(b.flips_to_nan_exponent(), 1);
+        let flipped = b.flip(F64Bits::FRAC_BITS); // lowest exponent bit
+        assert!(flipped.exp_all_ones());
+        assert!(flipped.is_nan()); // MAX has a non-zero fraction
+    }
+
+    #[test]
+    fn f32_field_extraction() {
+        let b = F32Bits::from_f32(1.0);
+        assert_eq!(b.exponent(), 127);
+        assert_eq!(b.fraction(), 0);
+        assert!(!b.is_nan());
+    }
+
+    #[test]
+    fn f32_nan_detection_and_flip() {
+        assert!(F32Bits::from_f32(f32::NAN).is_nan());
+        assert!(F32Bits::from_f32(f32::INFINITY).is_inf());
+        let b = F32Bits::from_f32(1.5);
+        for i in 0..32 {
+            assert_eq!(b.flip(i).flip(i), b);
+        }
+    }
+
+    #[test]
+    fn f32_fewer_exponent_bits_than_f64() {
+        // The paper (§2.2) notes short-bitwidth formats have smaller exponent
+        // fields, hence a *higher* chance that random flips produce NaNs.
+        assert!(F32Bits::EXP_BITS < F64Bits::EXP_BITS);
+        assert_eq!(F32Bits::from_f32(1.0).flips_to_nan_exponent(), 1);
+        assert_eq!(F32Bits::from_f32(0.0).flips_to_nan_exponent(), 8);
+    }
+}

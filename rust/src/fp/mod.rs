@@ -1,0 +1,10 @@
+//! IEEE-754 bit-level utilities: NaN taxonomy, bit-flip modelling, and the
+//! analytical probability model for "a random bit flip turns a float into a
+//! NaN" that motivates the paper (§2.2).
+
+pub mod analytics;
+pub mod bits;
+pub mod nan;
+
+pub use bits::{F32Bits, F64Bits};
+pub use nan::{classify_f32, classify_f64, NanClass};

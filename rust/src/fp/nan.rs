@@ -1,0 +1,149 @@
+//! NaN taxonomy.
+//!
+//! x86 raises the invalid-operation exception (`#IA` → `SIGFPE`) for
+//! arithmetic on **signaling** NaNs; quiet NaNs propagate silently until a
+//! comparison.  The distinction is the top fraction bit (set = quiet on
+//! x86/ARM).  The paper's injected pattern `0x7ff0464544434241` has that bit
+//! clear, i.e. it *is* an SNaN — which is why the gdb prototype traps at all.
+
+use super::bits::{F32Bits, F64Bits};
+
+/// The bit pattern the paper injects (Figure 4/5): ASCII "ABCDEF" packed
+/// under an all-ones exponent, quiet bit clear → signaling NaN.
+pub const PAPER_NAN_BITS: u64 = 0x7ff0_4645_4443_4241;
+
+/// Classification of a floating-point bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NanClass {
+    /// Not a NaN at all.
+    NotNan,
+    /// Quiet NaN: propagates through arithmetic without trapping.
+    Quiet,
+    /// Signaling NaN: arithmetic raises `#IA` when unmasked.
+    Signaling,
+}
+
+impl NanClass {
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        self != NanClass::NotNan
+    }
+
+    /// Whether arithmetic on this operand raises `SIGFPE` with `FE_INVALID`
+    /// unmasked.
+    #[inline]
+    pub fn traps_on_arith(self) -> bool {
+        self == NanClass::Signaling
+    }
+
+    /// Whether an ordered comparison on this operand raises `SIGFPE`
+    /// (`comisd`/`comiss` trap on *any* NaN; `ucomisd` only on SNaN).
+    #[inline]
+    pub fn traps_on_ordered_compare(self) -> bool {
+        self.is_nan()
+    }
+}
+
+/// Classify a 64-bit pattern.
+#[inline]
+pub fn classify_f64(bits: u64) -> NanClass {
+    let b = F64Bits(bits);
+    if !b.is_nan() {
+        NanClass::NotNan
+    } else if bits & F64Bits::QUIET_BIT != 0 {
+        NanClass::Quiet
+    } else {
+        NanClass::Signaling
+    }
+}
+
+/// Classify a 32-bit pattern.
+#[inline]
+pub fn classify_f32(bits: u32) -> NanClass {
+    let b = F32Bits(bits);
+    if !b.is_nan() {
+        NanClass::NotNan
+    } else if bits & F32Bits::QUIET_BIT != 0 {
+        NanClass::Quiet
+    } else {
+        NanClass::Signaling
+    }
+}
+
+/// Construct a canonical f64 SNaN carrying `payload` (truncated to 51 bits,
+/// forced non-zero so the value stays a NaN rather than +Inf).
+#[inline]
+pub fn snan_f64(payload: u64) -> u64 {
+    let p = payload & (F64Bits::FRAC_MASK >> 1);
+    F64Bits::EXP_MASK | if p == 0 { 1 } else { p }
+}
+
+/// Construct a canonical f64 QNaN carrying `payload`.
+#[inline]
+pub fn qnan_f64(payload: u64) -> u64 {
+    F64Bits::EXP_MASK | F64Bits::QUIET_BIT | (payload & (F64Bits::FRAC_MASK >> 1))
+}
+
+/// Construct a canonical f32 SNaN carrying `payload`.
+#[inline]
+pub fn snan_f32(payload: u32) -> u32 {
+    let p = payload & (F32Bits::FRAC_MASK >> 1);
+    F32Bits::EXP_MASK | if p == 0 { 1 } else { p }
+}
+
+/// Construct a canonical f32 QNaN carrying `payload`.
+#[inline]
+pub fn qnan_f32(payload: u32) -> u32 {
+    F32Bits::EXP_MASK | F32Bits::QUIET_BIT | (payload & (F32Bits::FRAC_MASK >> 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_pattern_is_signaling() {
+        assert_eq!(classify_f64(PAPER_NAN_BITS), NanClass::Signaling);
+        assert!(classify_f64(PAPER_NAN_BITS).traps_on_arith());
+    }
+
+    #[test]
+    fn default_rust_nan_is_quiet() {
+        assert_eq!(classify_f64(f64::NAN.to_bits()), NanClass::Quiet);
+        assert_eq!(classify_f32(f32::NAN.to_bits()), NanClass::Quiet);
+        assert!(!classify_f64(f64::NAN.to_bits()).traps_on_arith());
+    }
+
+    #[test]
+    fn infinities_and_normals_are_not_nan() {
+        for v in [0.0, -0.0, 1.0, f64::MAX, f64::MIN_POSITIVE, f64::INFINITY] {
+            assert_eq!(classify_f64(v.to_bits()), NanClass::NotNan, "{v}");
+        }
+    }
+
+    #[test]
+    fn constructed_snan_qnan_classify_correctly() {
+        for payload in [0u64, 1, 0xdead, u64::MAX] {
+            assert_eq!(classify_f64(snan_f64(payload)), NanClass::Signaling);
+            assert_eq!(classify_f64(qnan_f64(payload)), NanClass::Quiet);
+        }
+        for payload in [0u32, 1, 0xbeef, u32::MAX] {
+            assert_eq!(classify_f32(snan_f32(payload)), NanClass::Signaling);
+            assert_eq!(classify_f32(qnan_f32(payload)), NanClass::Quiet);
+        }
+    }
+
+    #[test]
+    fn snan_is_actually_nan_for_the_fpu() {
+        assert!(f64::from_bits(snan_f64(0x42)).is_nan());
+        assert!(f64::from_bits(qnan_f64(0x42)).is_nan());
+        assert!(f32::from_bits(snan_f32(0x42)).is_nan());
+    }
+
+    #[test]
+    fn compare_trap_semantics() {
+        assert!(classify_f64(qnan_f64(1)).traps_on_ordered_compare());
+        assert!(classify_f64(snan_f64(1)).traps_on_ordered_compare());
+        assert!(!classify_f64(1.0f64.to_bits()).traps_on_ordered_compare());
+    }
+}

@@ -1,0 +1,263 @@
+//! EXT-POLICY: repair-value ablation (paper §5.2) and EXT-PROT: overhead
+//! of every protection scheme at equal fault pressure.
+
+use std::time::Instant;
+
+use crate::abft::AbftMatmul;
+use crate::approxmem::ecc::EccBuf;
+use crate::approxmem::injector::InjectionSpec;
+use crate::approxmem::pool::ApproxPool;
+use crate::approxmem::scrubber::Scrubber;
+use crate::coordinator::campaign::{Campaign, CampaignConfig};
+use crate::coordinator::protection::Protection;
+use crate::repair::policy::RepairPolicy;
+use crate::trap::{TrapConfig, TrapGuard};
+use crate::util::rng::Pcg64;
+use crate::util::table::{fmt_secs, Table};
+use crate::workloads::{kernels, WorkloadKind};
+
+/// EXT-POLICY: run each repair policy over workloads with one injected
+/// NaN; report output quality (and the LU ÷0 hazard).
+pub fn policy_ablation(n: usize, trials: usize, seed: u64) -> anyhow::Result<Table> {
+    let policies = [
+        RepairPolicy::Zero,
+        RepairPolicy::One,
+        RepairPolicy::Constant(0.5),
+        RepairPolicy::NeighborMean,
+    ];
+    let kinds = [
+        WorkloadKind::MatMul { n },
+        WorkloadKind::Jacobi { n, iters: 40 },
+        WorkloadKind::Lu { n },
+        WorkloadKind::Stencil { n, steps: 20 },
+    ];
+    let mut t = Table::new(
+        &format!("EXT-POLICY — repair-value ablation (n={n}, {trials} trials)"),
+        &["workload", "policy", "mean rel err", "corrupted"],
+    );
+    for kind in kinds {
+        for policy in policies {
+            let mut err = 0.0;
+            let mut corrupted = 0usize;
+            for trial in 0..trials {
+                let cfg = CampaignConfig {
+                    workload: kind,
+                    protection: Protection::RegisterMemory,
+                    injection: InjectionSpec::ExactNaNs { count: 1 },
+                    policy,
+                    reps: 1,
+                    warmup: 0,
+                    seed: seed.wrapping_add(trial as u64 * 7919),
+                    check_quality: true,
+                };
+                let rep = Campaign::new(cfg).run()?;
+                let q = rep.quality.unwrap();
+                if q.corrupted {
+                    corrupted += 1;
+                } else {
+                    err += q.rel_l2_error;
+                }
+            }
+            let clean = trials - corrupted;
+            t.row(&[
+                kind.name().to_string(),
+                policy.name(),
+                if clean > 0 {
+                    format!("{:.3e}", err / clean as f64)
+                } else {
+                    "-".into()
+                },
+                format!("{corrupted}/{trials}"),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// ECC-protected matmul: every A/B element is stored SECDED-encoded and
+/// decoded on each access — the §2.2 throughput tax, measured.
+pub fn ecc_matmul(n: usize, seed: u64) -> (f64, u64) {
+    let mut rng = Pcg64::seed(seed);
+    let mut a = EccBuf::new(n * n);
+    let mut b = EccBuf::new(n * n);
+    for i in 0..n * n {
+        a.store(i, rng.range_f64(-1.0, 1.0));
+        b.store(i, rng.range_f64(-1.0, 1.0));
+    }
+    let mut c = vec![0.0f64; n * n];
+    let t0 = Instant::now();
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += a.load(i * n + k) * b.load(j * n + k);
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    (secs, a.corrected + b.corrected)
+}
+
+/// EXT-PROT: wall-clock of one matmul run under every protection scheme,
+/// one injected NaN (where meaningful).
+pub fn protection_compare(n: usize, seed: u64) -> anyhow::Result<Table> {
+    let _lock = crate::trap::test_lock();
+    let mut t = Table::new(
+        &format!("EXT-PROT — matmul n={n}, one injected NaN"),
+        &["protection", "elapsed", "vs normal", "notes"],
+    );
+
+    // shared data
+    let mut rng = Pcg64::seed(seed);
+    let nn = n * n;
+    let pool = ApproxPool::new();
+    let mut a = pool.alloc_f64(nn);
+    let mut bt = pool.alloc_f64(nn);
+    a.fill_with(|_| rng.range_f64(-1.0, 1.0));
+    bt.fill_with(|_| rng.range_f64(-1.0, 1.0));
+    let mut c = vec![0.0f64; nn];
+    let nan_idx = rng.index(nn);
+
+    let matmul = |a: &[f64], bt: &[f64], c: &mut [f64]| {
+        for i in 0..n {
+            for j in 0..n {
+                c[i * n + j] =
+                    unsafe { kernels::ddot_raw(a[i * n..].as_ptr(), bt[j * n..].as_ptr(), n) };
+            }
+        }
+    };
+
+    // normal (no NaN)
+    let t0 = Instant::now();
+    matmul(a.as_slice(), bt.as_slice(), &mut c);
+    let normal = t0.elapsed().as_secs_f64();
+    t.row(&["normal (no NaN)".into(), fmt_secs(normal), "1.000x".into(), "".into()]);
+
+    // reactive register+memory
+    {
+        a[nan_idx] = f64::from_bits(crate::fp::nan::PAPER_NAN_BITS);
+        let guard = TrapGuard::arm(
+            &pool,
+            &TrapConfig {
+                policy: RepairPolicy::Zero,
+                memory_repair: true,
+            },
+        );
+        guard.reset_stats();
+        let t0 = Instant::now();
+        matmul(a.as_slice(), bt.as_slice(), &mut c);
+        let secs = t0.elapsed().as_secs_f64();
+        let stats = guard.stats();
+        drop(guard);
+        t.row(&[
+            "reactive (reg+mem)".into(),
+            fmt_secs(secs),
+            format!("{:.3}x", secs / normal),
+            format!("{} SIGFPE", stats.sigfpe_total),
+        ]);
+    }
+
+    // reactive register-only
+    {
+        a[nan_idx] = f64::from_bits(crate::fp::nan::PAPER_NAN_BITS);
+        let guard = TrapGuard::arm(
+            &pool,
+            &TrapConfig {
+                policy: RepairPolicy::Zero,
+                memory_repair: false,
+            },
+        );
+        guard.reset_stats();
+        let t0 = Instant::now();
+        matmul(a.as_slice(), bt.as_slice(), &mut c);
+        let secs = t0.elapsed().as_secs_f64();
+        let stats = guard.stats();
+        drop(guard);
+        a[nan_idx] = 0.0; // clean up the poison for later phases
+        t.row(&[
+            "reactive (reg only)".into(),
+            fmt_secs(secs),
+            format!("{:.3}x", secs / normal),
+            format!("{} SIGFPE", stats.sigfpe_total),
+        ]);
+    }
+
+    // proactive scrub (scan whole pool, then run)
+    {
+        a[nan_idx] = f64::from_bits(crate::fp::nan::PAPER_NAN_BITS);
+        let scrubber = Scrubber::default();
+        let t0 = Instant::now();
+        let rep = scrubber.scrub(&pool);
+        matmul(a.as_slice(), bt.as_slice(), &mut c);
+        let secs = t0.elapsed().as_secs_f64();
+        t.row(&[
+            "proactive scrub".into(),
+            fmt_secs(secs),
+            format!("{:.3}x", secs / normal),
+            format!("{} words scanned, {} repaired", rep.words_scanned, rep.nans_repaired()),
+        ]);
+    }
+
+    // ECC on every access
+    {
+        let (secs, corrected) = ecc_matmul(n, seed);
+        t.row(&[
+            "ecc (SECDED/access)".into(),
+            fmt_secs(secs),
+            format!("{:.3}x", secs / normal),
+            format!("{corrected} corrected"),
+        ]);
+    }
+
+    // ABFT checksum + retry
+    {
+        a[nan_idx] = f64::from_bits(crate::fp::nan::PAPER_NAN_BITS);
+        let mut abft = AbftMatmul::new();
+        let t0 = Instant::now();
+        abft.multiply(n, a.as_slice(), bt.as_slice(), &mut c);
+        let secs = t0.elapsed().as_secs_f64();
+        a[nan_idx] = 0.0;
+        t.row(&[
+            "abft (checksum+retry)".into(),
+            fmt_secs(secs),
+            format!("{:.3}x", secs / normal),
+            format!(
+                "{} recomputed, {} failed",
+                abft.rows_recomputed, abft.rows_failed
+            ),
+        ]);
+    }
+
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_ablation_renders_all_cells() {
+        let t = policy_ablation(12, 2, 11).unwrap();
+        assert_eq!(t.n_rows(), 4 * 4);
+        let r = t.render();
+        assert!(r.contains("neighbor-mean") && r.contains("lu"));
+    }
+
+    #[test]
+    fn ecc_matmul_runs_and_corrects_nothing_clean() {
+        let (secs, corrected) = ecc_matmul(24, 3);
+        assert!(secs > 0.0);
+        assert_eq!(corrected, 0);
+    }
+
+    #[test]
+    fn protection_compare_has_all_schemes() {
+        let t = protection_compare(32, 5).unwrap();
+        assert_eq!(t.n_rows(), 6);
+        let r = t.render();
+        for s in ["normal", "reg+mem", "reg only", "scrub", "ecc", "abft"] {
+            assert!(r.contains(s), "missing {s} in\n{r}");
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Figure-6 corpus builder.
+//!
+//! The paper analyzes SPEC CPU 2006 FP binaries built with gcc -O2.  SPEC
+//! is licensed and unavailable; we substitute a corpus of classic FP
+//! kernels (dgemm, stencil, nbody, LU, CG, dot/axpy) compiled from C with
+//! the same compiler family at several optimization levels — the metric
+//! (static back-traceability of FP arithmetic operands) is a property of
+//! compiler idiom, not of benchmark licensing (DESIGN.md §1).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use anyhow::{bail, Context, Result};
+
+/// One corpus program: name + C source.
+pub struct CorpusProgram {
+    pub name: &'static str,
+    pub source: &'static str,
+}
+
+pub const PROGRAMS: &[CorpusProgram] = &[
+    CorpusProgram {
+        name: "dgemm",
+        source: r#"
+#include <stdlib.h>
+#define N 64
+static double A[N][N], B[N][N], C[N][N];
+void dgemm(void) {
+    for (int i = 0; i < N; i++)
+        for (int j = 0; j < N; j++) {
+            double acc = 0.0;
+            for (int k = 0; k < N; k++)
+                acc += A[i][k] * B[k][j];
+            C[i][j] = acc;
+        }
+}
+int main(void) {
+    for (int i = 0; i < N; i++)
+        for (int j = 0; j < N; j++) { A[i][j] = i + j; B[i][j] = i - j; }
+    dgemm();
+    return (int)C[1][1];
+}
+"#,
+    },
+    CorpusProgram {
+        name: "stencil",
+        source: r#"
+#define N 128
+static double g[N][N], h[N][N];
+void sweep(void) {
+    for (int i = 1; i < N-1; i++)
+        for (int j = 1; j < N-1; j++)
+            h[i][j] = g[i][j] + 0.2 * (g[i-1][j] + g[i+1][j] + g[i][j-1] + g[i][j+1] - 4.0*g[i][j]);
+}
+int main(void) {
+    for (int i = 0; i < N; i++) for (int j = 0; j < N; j++) g[i][j] = i*0.5 + j;
+    for (int t = 0; t < 10; t++) { sweep(); for (int i=0;i<N;i++) for(int j=0;j<N;j++) g[i][j]=h[i][j]; }
+    return (int)g[2][2];
+}
+"#,
+    },
+    CorpusProgram {
+        name: "nbody",
+        source: r#"
+#include <math.h>
+#define N 256
+static double px[N], py[N], pz[N], vx[N], vy[N], vz[N], m[N];
+void step(double dt) {
+    for (int i = 0; i < N; i++) {
+        double ax = 0, ay = 0, az = 0;
+        for (int j = 0; j < N; j++) {
+            if (j == i) continue;
+            double dx = px[j]-px[i], dy = py[j]-py[i], dz = pz[j]-pz[i];
+            double r2 = dx*dx + dy*dy + dz*dz + 1e-9;
+            double inv = m[j] / (r2 * sqrt(r2));
+            ax += dx*inv; ay += dy*inv; az += dz*inv;
+        }
+        vx[i] += ax*dt; vy[i] += ay*dt; vz[i] += az*dt;
+    }
+    for (int i = 0; i < N; i++) { px[i]+=vx[i]*dt; py[i]+=vy[i]*dt; pz[i]+=vz[i]*dt; }
+}
+int main(void) {
+    for (int i = 0; i < N; i++) { px[i]=i; py[i]=i*2; pz[i]=i*3; m[i]=1.0; }
+    for (int t = 0; t < 5; t++) step(0.01);
+    return (int)px[1];
+}
+"#,
+    },
+    CorpusProgram {
+        name: "lu",
+        source: r#"
+#include <math.h>
+#define N 96
+static double A[N][N];
+void lu(void) {
+    for (int k = 0; k < N; k++) {
+        for (int i = k+1; i < N; i++) {
+            double mult = A[i][k] / A[k][k];
+            A[i][k] = mult;
+            for (int j = k+1; j < N; j++)
+                A[i][j] -= mult * A[k][j];
+        }
+    }
+}
+int main(void) {
+    for (int i = 0; i < N; i++) for (int j = 0; j < N; j++)
+        A[i][j] = (i == j) ? N : 1.0/(1+i+j);
+    lu();
+    return (int)A[1][1];
+}
+"#,
+    },
+    CorpusProgram {
+        name: "cg",
+        source: r#"
+#define N 128
+static double A[N][N], b[N], x[N], r[N], p[N], Ap[N];
+static double dot(const double *u, const double *v) {
+    double s = 0; for (int i = 0; i < N; i++) s += u[i]*v[i]; return s;
+}
+void cg(int iters) {
+    for (int i = 0; i < N; i++) { x[i] = 0; r[i] = b[i]; p[i] = b[i]; }
+    double rs = dot(r, r);
+    for (int it = 0; it < iters; it++) {
+        for (int i = 0; i < N; i++) {
+            double s = 0;
+            for (int j = 0; j < N; j++) s += A[i][j]*p[j];
+            Ap[i] = s;
+        }
+        double alpha = rs / dot(p, Ap);
+        for (int i = 0; i < N; i++) { x[i] += alpha*p[i]; r[i] -= alpha*Ap[i]; }
+        double rs2 = dot(r, r);
+        double beta = rs2 / rs;
+        for (int i = 0; i < N; i++) p[i] = r[i] + beta*p[i];
+        rs = rs2;
+    }
+}
+int main(void) {
+    for (int i = 0; i < N; i++) { b[i] = 1; for (int j = 0; j < N; j++) A[i][j] = (i==j)? N : 0.5; }
+    cg(20);
+    return (int)x[0];
+}
+"#,
+    },
+    CorpusProgram {
+        name: "blas1",
+        source: r#"
+#define N 4096
+static double xv[N], yv[N];
+double ddot(void) { double s = 0; for (int i = 0; i < N; i++) s += xv[i]*yv[i]; return s; }
+void daxpy(double a) { for (int i = 0; i < N; i++) yv[i] += a*xv[i]; }
+void dscal(double a) { for (int i = 0; i < N; i++) xv[i] *= a; }
+int main(void) {
+    for (int i = 0; i < N; i++) { xv[i] = i*0.5; yv[i] = 1.0 - i; }
+    daxpy(2.0); dscal(0.5);
+    return (int)ddot();
+}
+"#,
+    },
+];
+
+pub const OPT_LEVELS: &[&str] = &["-O0", "-O1", "-O2", "-O3"];
+
+/// Compile the corpus into `dir`; returns the produced binary paths.
+/// Skips work if binaries already exist (make-style).
+pub fn build(dir: impl AsRef<Path>) -> Result<Vec<PathBuf>> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let mut out = Vec::new();
+    for prog in PROGRAMS {
+        let src = dir.join(format!("{}.c", prog.name));
+        std::fs::write(&src, prog.source)?;
+        for opt in OPT_LEVELS {
+            let bin = dir.join(format!("{}{}", prog.name, opt.replace('-', "_")));
+            if !bin.exists() {
+                let status = Command::new("gcc")
+                    .arg(opt)
+                    // the paper's setup: gcc, no special flags beyond -O2;
+                    // -fno-tree-vectorize keeps -O3 scalar like the paper's
+                    // era gcc on SSE2 baseline (AVX encodings are outside
+                    // the Table-1 instruction set)
+                    .arg("-fno-tree-vectorize")
+                    .arg("-o")
+                    .arg(&bin)
+                    .arg(&src)
+                    .arg("-lm")
+                    .status()
+                    .context("running gcc (corpus build)")?;
+                if !status.success() {
+                    bail!("gcc failed for {} {}", prog.name, opt);
+                }
+            }
+            out.push(bin);
+        }
+    }
+    Ok(out)
+}
+
+/// Default corpus directory.
+pub fn default_dir() -> PathBuf {
+    PathBuf::from("target/corpus")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_builds_and_is_elf() {
+        let dir = std::env::temp_dir().join("nanrepair_corpus_test");
+        let bins = build(&dir).expect("corpus build");
+        assert_eq!(bins.len(), PROGRAMS.len() * OPT_LEVELS.len());
+        for b in &bins {
+            let img = crate::disasm::elf::ElfImage::load(b).expect("parse");
+            assert!(!img.funcs.is_empty(), "{b:?} has no symbols");
+        }
+        // rebuild is a no-op (cache)
+        let again = build(&dir).unwrap();
+        assert_eq!(again.len(), bins.len());
+    }
+}

@@ -1,0 +1,59 @@
+//! Figure 1: the motivation demo — a single NaN corrupts a whole matmul
+//! row, and the determinant of a matrix containing one NaN is NaN.
+
+use crate::approxmem::pool::ApproxPool;
+use crate::util::table::Table;
+use crate::workloads::{lu::Lu, matmul::MatMul, Workload as _};
+
+pub struct Fig1Report {
+    pub table: Table,
+    pub matmul_row_nans: usize,
+    pub det_is_nan: bool,
+}
+
+pub fn run(n: usize) -> Fig1Report {
+    let pool = ApproxPool::new();
+
+    // top of Fig. 1: NaN in A[0][0] → whole row 0 of C is NaN
+    let mut mm = MatMul::new(&pool, n, 1);
+    mm.a_mut()[0] = f64::NAN;
+    mm.run();
+    let row_nans = mm.c()[..n].iter().filter(|v| v.is_nan()).count();
+    let other_nans = mm.c()[n..].iter().filter(|v| v.is_nan()).count();
+
+    // bottom of Fig. 1: determinant with one NaN
+    let mut lu = Lu::new(&pool, n, 2);
+    lu.a_mut()[(n / 2) * n + n / 3] = f64::NAN;
+    lu.run();
+    let det = lu.determinant();
+
+    let mut table = Table::new(
+        "Figure 1 — NaN amplification",
+        &["case", "effect"],
+    );
+    table.row(&[
+        format!("matmul {n}x{n}, NaN at A[0][0]"),
+        format!("{row_nans}/{n} of row 0 NaN; {other_nans} elsewhere"),
+    ]);
+    table.row(&[
+        format!("det of {n}x{n} with one NaN"),
+        format!("det = {det}"),
+    ]);
+
+    Fig1Report {
+        table,
+        matmul_row_nans: row_nans,
+        det_is_nan: det.is_nan(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn amplification_reproduced() {
+        let rep = super::run(16);
+        assert_eq!(rep.matmul_row_nans, 16, "whole row must be NaN");
+        assert!(rep.det_is_nan, "determinant must be NaN");
+        assert_eq!(rep.table.n_rows(), 2);
+    }
+}

@@ -1,0 +1,104 @@
+//! Figure 6: fraction of FP arithmetic instructions whose feeding `mov` is
+//! statically back-traceable, per binary (paper: >95 % on SPEC FP at -O2).
+
+use std::path::PathBuf;
+
+use crate::disasm::analyze::{analyze_corpus, failure_histogram, AnalyzeReport};
+use crate::util::table::{fmt_pct, Table};
+
+use super::corpus;
+
+pub struct Fig6Report {
+    pub table: Table,
+    pub reports: Vec<AnalyzeReport>,
+    /// Found-ratio over -O2 binaries only (the paper's configuration).
+    pub o2_ratio: f64,
+}
+
+/// Analyze `paths` (defaults to the built-in corpus when empty).
+pub fn run(paths: Vec<PathBuf>) -> anyhow::Result<Fig6Report> {
+    let paths = if paths.is_empty() {
+        corpus::build(corpus::default_dir())?
+    } else {
+        paths
+    };
+    let reports = analyze_corpus(&paths);
+
+    let mut table = Table::new(
+        "Figure 6 — backtraceable-mov ratio per binary",
+        &["binary", "fp arith", "found", "ratio", "direct-mem", "no-mov", "branch", "clobber"],
+    );
+    let mut o2_found = 0u64;
+    let mut o2_total = 0u64;
+    for r in &reports {
+        let name = std::path::Path::new(&r.binary)
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| r.binary.clone());
+        if name.ends_with("_O2") {
+            o2_found += r.found;
+            o2_total += r.arith_total;
+        }
+        table.row(&[
+            name,
+            r.arith_total.to_string(),
+            r.found.to_string(),
+            fmt_pct(r.found_ratio()),
+            r.direct_mem.to_string(),
+            r.fail_no_mov.to_string(),
+            r.fail_branch.to_string(),
+            r.fail_clobber.to_string(),
+        ]);
+    }
+    let hist = failure_histogram(&reports);
+    log::info!("fig6 failure histogram: {hist:?}");
+
+    Ok(Fig6Report {
+        table,
+        o2_ratio: if o2_total == 0 {
+            0.0
+        } else {
+            o2_found as f64 / o2_total as f64
+        },
+        reports,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn corpus_analysis_matches_paper_shape() {
+        let rep = super::run(Vec::new()).expect("fig6");
+        assert!(!rep.reports.is_empty());
+        // Paper's claim: the corresponding mov is found for >95 % of FP
+        // arith instructions "we deal with" — measured on SPEC FP, and the
+        // runtime evaluation is matmul.  Our substitute corpus is
+        // deliberately branchier (nbody's gcc sqrt-guard branches, blas1's
+        // live-in scalar args are genuine §3.4 failure cases), so:
+        //  * the matrix-kernel class (the paper's workload) must be ≥95 %;
+        //  * the whole corpus at -O2 must stay ≥70 %.
+        let matrix: Vec<_> = rep
+            .reports
+            .iter()
+            .filter(|r| {
+                r.binary.ends_with("_O2")
+                    && ["dgemm", "lu", "stencil"]
+                        .iter()
+                        .any(|k| r.binary.contains(k))
+            })
+            .collect();
+        let found: u64 = matrix.iter().map(|r| r.found).sum();
+        let total: u64 = matrix.iter().map(|r| r.arith_total).sum();
+        assert!(total >= 10, "too few matrix-kernel sites: {total}");
+        let matrix_ratio = found as f64 / total as f64;
+        assert!(
+            matrix_ratio >= 0.95,
+            "paper-shape violated: matrix-kernel O2 ratio {matrix_ratio}"
+        );
+        assert!(
+            rep.o2_ratio >= 0.70,
+            "whole-corpus O2 ratio degraded: {}",
+            rep.o2_ratio
+        );
+    }
+}

@@ -1,0 +1,14 @@
+//! Experiment drivers — one per paper table/figure plus the extension
+//! studies (DESIGN.md §5 experiment index).  Each driver returns printable
+//! tables so the CLI, tests, and EXPERIMENTS.md generation share one code
+//! path.
+
+pub mod ablation;
+pub mod corpus;
+pub mod fig1;
+pub mod fig6;
+pub mod fig7;
+pub mod montecarlo;
+pub mod pipeline;
+pub mod sweeps;
+pub mod trapcost;

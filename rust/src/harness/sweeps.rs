@@ -1,0 +1,249 @@
+//! Extension sweeps: EXT-BER (NaN probability vs BER / refresh interval),
+//! EXT-ENERGY (refresh savings vs operating point), EXT-QUALITY (output
+//! quality vs BER under each protection).
+
+use crate::approxmem::energy::DramEnergyModel;
+use crate::approxmem::injector::InjectionSpec;
+use crate::approxmem::retention::RetentionModel;
+use crate::coordinator::campaign::{Campaign, CampaignConfig};
+use crate::coordinator::protection::Protection;
+use crate::fp::analytics;
+use crate::util::rng::Pcg64;
+use crate::util::table::{fmt_pct, Table};
+use crate::workloads::WorkloadKind;
+
+/// EXT-BER: analytical P(NaN) for a population of typical values, per BER
+/// and the refresh interval that produces it.
+pub fn ber_sweep(n_values: usize, seed: u64) -> Table {
+    let retention = RetentionModel::default();
+    let mut rng = Pcg64::seed(seed);
+    let values: Vec<f64> = (0..n_values).map(|_| rng.range_f64(-10.0, 10.0)).collect();
+
+    let mut t = Table::new(
+        "EXT-BER — P(NaN) per retention window",
+        &["BER", "refresh (s)", "E[NaN] per 1M f64", "P(≥1 NaN) this set", "windows to P=0.5"],
+    );
+    for exp in [-10i32, -9, -8, -7, -6, -5] {
+        let ber = 10f64.powi(exp);
+        let interval = retention
+            .interval_for_ber(ber)
+            .map(|s| format!("{s:.2}"))
+            .unwrap_or_else(|| "-".into());
+        let e_per_word = analytics::expected_nans_f64(&values, ber) / values.len() as f64;
+        let p_any = analytics::p_any_nan_f64(&values, ber);
+        let windows = analytics::windows_until_nan(e_per_word, 1_000_000, 0.5);
+        t.row(&[
+            format!("1e{exp}"),
+            interval,
+            format!("{:.3}", e_per_word * 1e6),
+            format!("{p_any:.3e}"),
+            format!("{windows:.1}"),
+        ]);
+    }
+    t
+}
+
+/// EXT-ENERGY: DRAM / server energy savings vs refresh interval, with the
+/// BER (and NaN pressure) each point implies — the trade-off the paper's
+/// §1–2 motivates.
+pub fn energy_sweep() -> Table {
+    let energy = DramEnergyModel::default();
+    let retention = RetentionModel::default();
+    let mut t = Table::new(
+        "EXT-ENERGY — refresh relaxation operating points",
+        &["refresh (s)", "BER/window", "mem energy saved", "server saved (30% share)"],
+    );
+    for interval in [0.064, 0.128, 0.256, 0.512, 1.0, 2.0, 5.0, 10.0] {
+        let p = energy.evaluate(interval);
+        t.row(&[
+            format!("{interval}"),
+            format!("{:.2e}", retention.ber(interval)),
+            fmt_pct(p.savings),
+            fmt_pct(energy.server_savings(interval, 0.30)),
+        ]);
+    }
+    t
+}
+
+/// EXT-WIDTH (paper §2.2 last ¶): shorter formats have smaller exponent
+/// fields, so a random bit flip is *more* likely to land the exponent on
+/// all-ones — NaN risk grows as bit width shrinks, exactly when AI
+/// workloads move to fp16/bf16.  Analytic, for unit-scale values (one
+/// zero exponent bit) and for the format-average over random exponents.
+pub fn width_sweep(ber: f64) -> Table {
+    let formats: [(&str, u32, u32); 4] = [
+        ("f64", 11, 52),
+        ("f32", 8, 23),
+        ("bf16", 8, 7),
+        ("fp16", 5, 10),
+    ];
+    let mut t = Table::new(
+        &format!("EXT-WIDTH — NaN pressure per GiB per window at BER {ber:.0e}"),
+        &["format", "exp bits", "P(NaN)/value", "values/GiB", "E[NaN]/GiB", "vs f64"],
+    );
+    let gib = (1u64 << 30) as f64;
+    let base = {
+        let p = analytics::p_nan_generic(11, 1, ber);
+        p * gib / 8.0
+    };
+    for (name, e, f) in formats {
+        let p = analytics::p_nan_generic(e, analytics::unit_scale_exp_zeros(e), ber);
+        let bytes = (e + f + 1) as f64 / 8.0;
+        let per_gib = p * gib / bytes;
+        t.row(&[
+            name.to_string(),
+            e.to_string(),
+            format!("{p:.3e}"),
+            format!("{:.2e}", gib / bytes),
+            format!("{per_gib:.1}"),
+            format!("{:.2}x", per_gib / base),
+        ]);
+    }
+    t
+}
+
+#[derive(Debug, Clone)]
+pub struct QualityCell {
+    pub protection: &'static str,
+    pub ber: f64,
+    pub rel_err: f64,
+    pub corrupted_frac: f64,
+    pub mean_traps: f64,
+}
+
+/// EXT-QUALITY: output quality vs BER for one workload under each
+/// protection (Monte-Carlo over `trials` seeds).
+pub fn quality_sweep(
+    kind: WorkloadKind,
+    bers: &[f64],
+    trials: usize,
+    seed: u64,
+) -> anyhow::Result<(Table, Vec<QualityCell>)> {
+    let protections = [
+        Protection::None,
+        Protection::RegisterMemory,
+        Protection::Scrub { period_runs: 1 },
+    ];
+    let mut cells = Vec::new();
+    for &ber in bers {
+        for &protection in &protections {
+            let mut err_sum = 0.0;
+            let mut corrupted = 0usize;
+            let mut traps = 0u64;
+            for trial in 0..trials {
+                let cfg = CampaignConfig {
+                    workload: kind,
+                    protection,
+                    // background drift at `ber` + one paper-pattern NaN:
+                    // separates the protections (NaN kills `none`, drift
+                    // is amortized under all of them)
+                    injection: InjectionSpec::BerPlusNans { ber, nans: 1 },
+                    reps: 1,
+                    warmup: 0,
+                    seed: seed ^ (trial as u64) << 8,
+                    check_quality: true,
+                    ..Default::default()
+                };
+                let rep = Campaign::new(cfg).run()?;
+                let q = rep.quality.unwrap();
+                if q.corrupted {
+                    corrupted += 1;
+                } else {
+                    err_sum += q.rel_l2_error;
+                }
+                traps += rep.traps.sigfpe_total;
+            }
+            let clean_trials = trials - corrupted;
+            cells.push(QualityCell {
+                protection: protection.name(),
+                ber,
+                rel_err: if clean_trials > 0 {
+                    err_sum / clean_trials as f64
+                } else {
+                    f64::NAN
+                },
+                corrupted_frac: corrupted as f64 / trials as f64,
+                mean_traps: traps as f64 / trials as f64,
+            });
+        }
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "EXT-QUALITY — {} quality vs BER ({} trials each)",
+            kind.name(),
+            trials
+        ),
+        &["BER", "protection", "rel L2 err", "corrupted", "traps/run"],
+    );
+    for c in &cells {
+        t.row(&[
+            format!("{:.0e}", c.ber),
+            c.protection.to_string(),
+            if c.rel_err.is_nan() {
+                "-".into()
+            } else {
+                format!("{:.2e}", c.rel_err)
+            },
+            fmt_pct(c.corrupted_frac),
+            format!("{:.1}", c.mean_traps),
+        ]);
+    }
+    Ok((t, cells))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ber_table_renders() {
+        let t = ber_sweep(500, 1);
+        assert_eq!(t.n_rows(), 6);
+        let r = t.render();
+        assert!(r.contains("1e-6"));
+    }
+
+    #[test]
+    fn energy_table_shape() {
+        let t = energy_sweep();
+        assert_eq!(t.n_rows(), 8);
+        let tsv = t.render_tsv();
+        // savings at 10 s: 0.2·(1 − 0.064/10) ≈ 19.87 %
+        assert!(tsv.contains("19.87"), "{tsv}");
+    }
+
+    #[test]
+    fn width_sweep_shorter_formats_riskier_per_gib() {
+        let t = width_sweep(1e-6);
+        assert_eq!(t.n_rows(), 4);
+        // paper §2.2: at fixed memory budget, short formats hold more
+        // values, each one flip away from NaN at unit scale → fp16 sees
+        // ~4× the NaN pressure of f64 per GiB per window
+        let tsv = t.render_tsv();
+        let rows: Vec<&str> = tsv.lines().skip(1).collect();
+        assert!(rows[0].starts_with("f64"));
+        assert!(rows[3].starts_with("fp16"));
+        let fp16_ratio: f64 = rows[3]
+            .split('\t')
+            .nth(5)
+            .unwrap()
+            .trim_end_matches('x')
+            .parse()
+            .unwrap();
+        assert!((fp16_ratio - 4.0).abs() < 0.1, "{tsv}");
+    }
+
+    #[test]
+    fn quality_sweep_protected_beats_unprotected() {
+        let kind = WorkloadKind::Stencil { n: 16, steps: 10 };
+        let (_, cells) = quality_sweep(kind, &[3e-6], 4, 42).unwrap();
+        let none = cells.iter().find(|c| c.protection == "none").unwrap();
+        let mem = cells.iter().find(|c| c.protection == "memory").unwrap();
+        let scrub = cells.iter().find(|c| c.protection == "scrub").unwrap();
+        // reactive + proactive must never corrupt; unprotected may
+        assert_eq!(mem.corrupted_frac, 0.0, "{mem:?}");
+        assert_eq!(scrub.corrupted_frac, 0.0, "{scrub:?}");
+        assert!(none.corrupted_frac >= mem.corrupted_frac);
+    }
+}

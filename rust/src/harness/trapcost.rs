@@ -1,0 +1,104 @@
+//! EXT-TRAP: per-trap cost anatomy.
+//!
+//! The paper's overhead claim rests on the trap being rare *and* cheap
+//! enough.  This harness measures the in-process trap round-trip (signal
+//! delivery → decode → repair → resume) in isolation, and contrasts the
+//! paper's gdb approach via the ptrace supervisor example (a separate
+//! binary, see examples/ptrace_supervisor.rs).
+
+use crate::approxmem::pool::ApproxPool;
+use crate::fp::nan::PAPER_NAN_BITS;
+use crate::repair::policy::RepairPolicy;
+use crate::trap::{TrapConfig, TrapGuard};
+use crate::util::stats::Summary;
+use crate::util::table::{fmt_secs, Table};
+use crate::util::timing;
+
+pub struct TrapCostReport {
+    pub table: Table,
+    /// Mean seconds per full trap round-trip (wall clock).
+    pub roundtrip_secs: f64,
+    /// Mean cycles spent *inside* the handler (rdtsc instrumentation).
+    pub handler_cycles: f64,
+}
+
+/// Measure `trials` single-trap round trips.
+pub fn run(trials: usize) -> TrapCostReport {
+    let _lock = crate::trap::test_lock();
+    let pool = ApproxPool::new();
+    let mut buf = pool.alloc_f64(2);
+    buf[1] = 3.0;
+
+    let cfg = TrapConfig {
+        policy: RepairPolicy::Constant(1.0),
+        memory_repair: true,
+    };
+    let guard = TrapGuard::arm(&pool, &cfg);
+    guard.reset_stats();
+
+    let mut roundtrips = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        buf[0] = f64::from_bits(PAPER_NAN_BITS);
+        let ones = [1.0f64; 2];
+        let t0 = std::time::Instant::now();
+        // exactly one trap: ddot touches the SNaN once, memory repair fixes it
+        let s = crate::workloads::kernels::ddot(buf.as_slice(), &ones, 2);
+        roundtrips.push(t0.elapsed().as_secs_f64());
+        assert!(s.is_finite());
+    }
+    let stats = guard.stats();
+    drop(guard);
+
+    // subtract the no-trap baseline of the same kernel call
+    let mut baseline = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let ones = [1.0f64; 2];
+        let t0 = std::time::Instant::now();
+        let _ = crate::workloads::kernels::ddot(buf.as_slice(), &ones, 2);
+        baseline.push(t0.elapsed().as_secs_f64());
+    }
+
+    let rt = Summary::of(&roundtrips);
+    let base = Summary::of(&baseline);
+    let net = (rt.mean - base.mean).max(0.0);
+    let handler_cycles = stats.mean_cycles();
+    let handler_secs = timing::tsc_to_secs(handler_cycles as u64);
+
+    let mut table = Table::new(
+        &format!("EXT-TRAP — single-trap cost ({trials} trials)"),
+        &["component", "cost"],
+    );
+    table.row(&["full round-trip (kernel incl. trap)".into(), fmt_secs(rt.mean)]);
+    table.row(&["same kernel, no trap".into(), fmt_secs(base.mean)]);
+    table.row(&["net trap cost".into(), fmt_secs(net)]);
+    table.row(&[
+        "handler body (rdtsc)".into(),
+        format!("{} ({:.0} cycles)", fmt_secs(handler_secs), handler_cycles),
+    ]);
+    table.row(&[
+        "kernel-mode delivery (net − body)".into(),
+        fmt_secs((net - handler_secs).max(0.0)),
+    ]);
+
+    TrapCostReport {
+        table,
+        roundtrip_secs: net,
+        handler_cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn trap_cost_is_microseconds_not_milliseconds() {
+        let rep = super::run(200);
+        // the paper's gdb path costs ~ms per signal; in-process must be
+        // orders cheaper — allow generous slack for CI noise
+        assert!(
+            rep.roundtrip_secs < 500e-6,
+            "net trap cost {} too high",
+            rep.roundtrip_secs
+        );
+        assert!(rep.handler_cycles > 0.0);
+    }
+}

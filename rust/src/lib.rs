@@ -1,0 +1,69 @@
+//! # nanrepair — Reactive NaN Repair for Approximate Memory
+//!
+//! Full-system reproduction of *"Reactive NaN Repair for Applying
+//! Approximate Memory to Numerical Applications"* (Hamada, Akiyama,
+//! Namiki, 2018).
+//!
+//! The paper's idea: approximate DRAM (relaxed refresh) saves energy but
+//! flips bits; numerical applications absorb value drift, yet a single
+//! NaN destroys the whole result (Fig. 1).  Instead of paying ECC or
+//! scrubbing costs on *every* access, repair NaNs **reactively** — catch
+//! the floating-point exception the CPU raises when an instruction
+//! touches a NaN, patch the register (§3.3) *and* the main-memory origin
+//! (§3.4), and resume, so each NaN costs exactly one trap.
+//!
+//! ## Layers (see DESIGN.md)
+//!
+//! * **L3** — this crate: the in-process `SIGFPE` trap path ([`trap`])
+//!   decoding the faulting x86-64 instruction ([`disasm`]) and repairing
+//!   NaNs ([`repair`]), driven by an experiment coordinator
+//!   ([`coordinator`]) over a software approximate-memory substrate
+//!   ([`approxmem`]) with native workloads ([`workloads`]) and baselines
+//!   ([`abft`], ECC, scrubbing).
+//! * **L2/L1** — build-time Python (never on the request path): a JAX
+//!   model whose matvec/matmul runs a Pallas NaN-repair kernel, AOT-
+//!   lowered to HLO text and executed via PJRT ([`runtime`]).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use nanrepair::prelude::*;
+//! use nanrepair::approxmem::injector::InjectionSpec;
+//!
+//! let mut cfg = CampaignConfig::default();
+//! cfg.workload = WorkloadKind::MatMul { n: 256 };
+//! cfg.protection = Protection::RegisterMemory;       // the paper's mechanism
+//! cfg.injection = InjectionSpec::ExactNaNs { count: 1 };
+//! let report = Campaign::new(cfg).run().unwrap();
+//! assert_eq!(report.traps.sigfpe_total, 10);         // 1 trap × 10 reps
+//! ```
+
+pub mod abft;
+pub mod approxmem;
+pub mod bench;
+pub mod coordinator;
+pub mod disasm;
+pub mod fp;
+pub mod harness;
+pub mod repair;
+pub mod runtime;
+pub mod testutil;
+pub mod trap;
+pub mod util;
+pub mod workloads;
+
+/// Convenience re-exports covering the common experiment-driving API.
+pub mod prelude {
+    pub use crate::approxmem::{
+        energy::DramEnergyModel, injector::InjectionSpec, pool::ApproxPool,
+        retention::RetentionModel,
+    };
+    pub use crate::coordinator::{
+        campaign::{Campaign, CampaignConfig, CampaignReport},
+        protection::Protection,
+    };
+    pub use crate::fp::nan::{NanClass, PAPER_NAN_BITS};
+    pub use crate::repair::policy::RepairPolicy;
+    pub use crate::trap::guard::{TrapConfig, TrapGuard};
+    pub use crate::workloads::{Workload, WorkloadKind};
+}

@@ -1,0 +1,276 @@
+//! `nanrepair` — CLI launcher for the reactive-NaN-repair system.
+//!
+//! One subcommand per paper table/figure plus the extension experiments
+//! (DESIGN.md §5). `nanrepair help` lists everything.
+
+use anyhow::Result;
+use nanrepair::approxmem::injector::InjectionSpec;
+use nanrepair::coordinator::campaign::{Campaign, CampaignConfig};
+use nanrepair::coordinator::protection::Protection;
+use nanrepair::harness;
+use nanrepair::repair::policy::RepairPolicy;
+use nanrepair::util::cli::{App, CmdSpec};
+use nanrepair::util::config::Config;
+use nanrepair::util::table::fmt_secs;
+use nanrepair::workloads::WorkloadKind;
+
+fn app() -> App {
+    App::new("nanrepair", "reactive NaN repair for approximate memory — paper reproduction")
+        .cmd(
+            CmdSpec::new("run", "run one campaign cell (workload × protection × injection)")
+                .opt("workload", Some("matmul:512"), "workload spec name:size[:extra]")
+                .opt("protection", Some("memory"), "none|register|memory|scrub:K")
+                .opt("nans", Some("1"), "exact NaNs injected per rep")
+                .opt("ber", None, "per-bit flip rate (overrides --nans)")
+                .opt("policy", Some("zero"), "repair value: zero|one|neighbor|<float>")
+                .opt("reps", Some("10"), "measured repetitions")
+                .opt("seed", Some("42"), "PRNG seed")
+                .opt("config", None, "load options from a key=value file")
+                .flag("quality", "compare output against the clean reference"),
+        )
+        .cmd(CmdSpec::new("fig1", "NaN amplification demo (paper Fig. 1)")
+            .opt("n", Some("8"), "matrix size"))
+        .cmd(
+            CmdSpec::new("fig6", "backtraceable-mov ratio per binary (paper Fig. 6)")
+                .opt("corpus", Some(""), "comma-separated binaries (default: built-in corpus)"),
+        )
+        .cmd(
+            CmdSpec::new("fig7", "matmul elapsed time normal/register/memory (paper Fig. 7 + Tab. 3)")
+                .opt("sizes", Some("1000,2000,3000"), "matrix sizes")
+                .opt("reps", Some("10"), "repetitions per point (paper: 10)")
+                .opt("workload", Some("matmul"), "matmul|matvec")
+                .opt("seed", Some("42"), "PRNG seed"),
+        )
+        .cmd(CmdSpec::new("ber-sweep", "P(NaN) vs BER / refresh interval (EXT-BER)")
+            .opt("values", Some("10000"), "population size"))
+        .cmd(CmdSpec::new("energy", "DRAM energy savings operating points (EXT-ENERGY)"))
+        .cmd(CmdSpec::new("width-sweep", "NaN risk vs FP bit width (EXT-WIDTH, paper §2.2)")
+            .opt("ber", Some("1e-6"), "per-bit flip rate"))
+        .cmd(
+            CmdSpec::new("quality-sweep", "output quality vs BER per protection (EXT-QUALITY)")
+                .opt("workload", Some("stencil:32:20"), "workload spec")
+                .opt("bers", Some("1e-6,1e-5,1e-4"), "BER list")
+                .opt("trials", Some("10"), "Monte-Carlo trials per cell")
+                .opt("seed", Some("42"), "PRNG seed"),
+        )
+        .cmd(
+            CmdSpec::new("policy-ablation", "repair-value ablation incl. LU hazard (EXT-POLICY)")
+                .opt("n", Some("48"), "problem size")
+                .opt("trials", Some("10"), "trials per cell")
+                .opt("seed", Some("42"), "PRNG seed"),
+        )
+        .cmd(
+            CmdSpec::new("protection-compare", "all protection schemes head-to-head (EXT-PROT)")
+                .opt("n", Some("256"), "matrix size")
+                .opt("seed", Some("42"), "PRNG seed"),
+        )
+        .cmd(CmdSpec::new("trap-cost", "per-trap cost anatomy (EXT-TRAP)")
+            .opt("trials", Some("1000"), "measured traps"))
+        .cmd(
+            CmdSpec::new("montecarlo", "analytic vs empirical NaN rate (EXT-MC)")
+                .opt("words", Some("4096"), "buffer size (f64)")
+                .opt("trials", Some("50"), "injection trials per BER")
+                .opt("bers", Some("1e-4,1e-3,1e-2"), "BER list"),
+        )
+        .cmd(
+            CmdSpec::new("pipeline", "e2e PJRT jacobi under injection (E2E)")
+                .opt("steps", Some("60"), "solver steps")
+                .opt("faults", Some("nan:5"), "none | nan:K (plant every K) | ber:RATE")
+                .opt("artifacts", Some("artifacts"), "artifacts directory")
+                .opt("seed", Some("42"), "PRNG seed"),
+        )
+        .cmd(CmdSpec::new("artifacts", "list available PJRT artifacts")
+            .opt("dir", Some("artifacts"), "artifacts directory"))
+}
+
+fn cmd_run(m: &nanrepair::util::cli::Matches) -> Result<()> {
+    // optional config file, CLI overrides
+    let file_cfg = match m.get("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::new(),
+    };
+    let get = |key: &str, cli: Option<&str>| -> Option<String> {
+        cli.map(str::to_string)
+            .or_else(|| file_cfg.get(key).map(str::to_string))
+    };
+    let workload = WorkloadKind::parse(&get("workload", m.get("workload")).unwrap())?;
+    let protection = Protection::parse(&get("protection", m.get("protection")).unwrap())?;
+    let policy = RepairPolicy::parse(&get("policy", m.get("policy")).unwrap())?;
+    let injection = match m.get("ber") {
+        Some(b) => InjectionSpec::Ber(b.parse()?),
+        None => InjectionSpec::ExactNaNs {
+            count: m.get_parse("nans")?,
+        },
+    };
+    let cfg = CampaignConfig {
+        workload,
+        protection,
+        injection,
+        policy,
+        reps: m.get_parse("reps")?,
+        warmup: 1,
+        seed: m.get_parse("seed")?,
+        check_quality: m.flag("quality"),
+    };
+    let rep = Campaign::new(cfg).run()?;
+    println!("campaign {}", rep.config_label);
+    println!(
+        "  elapsed: {} ± {} over {} reps ({:.2} GFLOP/s)",
+        fmt_secs(rep.elapsed.mean),
+        fmt_secs(rep.elapsed.ci95()),
+        rep.elapsed.n,
+        rep.gflops()
+    );
+    println!(
+        "  traps: {} sigfpe, {} register repairs, {} memory repairs ({} direct / {} backtraced), {} emulated",
+        rep.traps.sigfpe_total,
+        rep.traps.register_repairs,
+        rep.traps.memory_repairs(),
+        rep.traps.memory_repairs_direct,
+        rep.traps.memory_repairs_backtraced,
+        rep.traps.emulated_skips,
+    );
+    if rep.scrub_passes > 0 {
+        println!("  scrub: {} passes, {} repairs", rep.scrub_passes, rep.scrub_repairs);
+    }
+    if let Some(q) = rep.quality {
+        println!(
+            "  quality: rel-L2 {:.3e}, corrupted: {}",
+            q.rel_l2_error, q.corrupted
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    env_logger();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    let Some(m) = app.parse(&argv)? else {
+        return Ok(());
+    };
+
+    match m.cmd.as_str() {
+        "run" => cmd_run(&m)?,
+        "fig1" => harness::fig1::run(m.get_parse("n")?).table.print(),
+        "fig6" => {
+            let paths: Vec<std::path::PathBuf> = m
+                .get("corpus")
+                .unwrap_or("")
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(Into::into)
+                .collect();
+            let rep = harness::fig6::run(paths)?;
+            rep.table.print();
+            println!("O2 found ratio: {:.2} %", rep.o2_ratio * 100.0);
+        }
+        "fig7" => {
+            let rep = harness::fig7::run(
+                m.get_str("workload")?,
+                &m.get_list::<usize>("sizes")?,
+                m.get_parse("reps")?,
+                m.get_parse("seed")?,
+            )?;
+            rep.time_table.print();
+            println!();
+            rep.sigfpe_table.print();
+        }
+        "ber-sweep" => harness::sweeps::ber_sweep(m.get_parse("values")?, 42).print(),
+        "energy" => harness::sweeps::energy_sweep().print(),
+        "width-sweep" => harness::sweeps::width_sweep(m.get_parse("ber")?).print(),
+        "quality-sweep" => {
+            let kind = WorkloadKind::parse(m.get_str("workload")?)?;
+            let (table, _) = harness::sweeps::quality_sweep(
+                kind,
+                &m.get_list::<f64>("bers")?,
+                m.get_parse("trials")?,
+                m.get_parse("seed")?,
+            )?;
+            table.print();
+        }
+        "policy-ablation" => harness::ablation::policy_ablation(
+            m.get_parse("n")?,
+            m.get_parse("trials")?,
+            m.get_parse("seed")?,
+        )?
+        .print(),
+        "protection-compare" => {
+            harness::ablation::protection_compare(m.get_parse("n")?, m.get_parse("seed")?)?
+                .print()
+        }
+        "trap-cost" => {
+            harness::trapcost::run(m.get_parse("trials")?).table.print();
+            println!("\nlast traps:\n{}", nanrepair::trap::diagnostics::render(5));
+        }
+        "montecarlo" => harness::montecarlo::run(
+            m.get_parse("words")?,
+            m.get_parse("trials")?,
+            &m.get_list::<f64>("bers")?,
+            42,
+        )
+        .table
+        .print(),
+        "pipeline" => {
+            let faults = parse_faults(m.get_str("faults")?)?;
+            let rep = harness::pipeline::run_jacobi(
+                m.get_str("artifacts")?,
+                m.get_parse("steps")?,
+                faults,
+                m.get_parse("seed")?,
+                5,
+            )?;
+            rep.table.print();
+            println!(
+                "final residual {:.3e}, total repairs {}, corrupted: {}",
+                rep.final_residual, rep.total_repairs, rep.corrupted
+            );
+        }
+        "artifacts" => {
+            let engine = nanrepair::runtime::Engine::cpu(m.get_str("dir")?)?;
+            println!("platform: {}", engine.platform());
+            for a in engine.available() {
+                println!("  {a}");
+            }
+        }
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+    Ok(())
+}
+
+fn parse_faults(s: &str) -> Result<harness::pipeline::FaultSpec> {
+    use harness::pipeline::FaultSpec;
+    let mut it = s.split(':');
+    Ok(match it.next().unwrap_or("") {
+        "none" => FaultSpec::None,
+        "nan" => FaultSpec::PlantNan {
+            every: it.next().unwrap_or("5").parse()?,
+        },
+        "ber" => FaultSpec::Ber(it.next().unwrap_or("1e-7").parse()?),
+        other => anyhow::bail!("unknown fault spec {other:?}"),
+    })
+}
+
+/// Minimal env_logger substitute: RUST_LOG=debug|info|warn enables stderr
+/// logging through the `log` facade.
+fn env_logger() {
+    struct L(log::LevelFilter);
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= self.0
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    let level = match std::env::var("RUST_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("info") => log::LevelFilter::Info,
+        Ok("warn") => log::LevelFilter::Warn,
+        _ => log::LevelFilter::Error,
+    };
+    let _ = log::set_boxed_logger(Box::new(L(level))).map(|()| log::set_max_level(level));
+}

@@ -1,0 +1,184 @@
+//! Memory-repairing mechanism (paper §3.4): patch the NaN at its
+//! main-memory origin so it faults at most once.
+//!
+//! Safety discipline: a memory patch happens only if (1) the target range
+//! lies wholly inside the armed approximate-region snapshot — never
+//! arbitrary process memory — and (2) the value there actually *is* a NaN
+//! of the expected width.  A failed back-trace or a stale effective address
+//! therefore degrades to register-only repair (the paper's 5 % case), never
+//! to corruption.
+
+use crate::approxmem::pool::Region;
+use crate::disasm::insn::FpWidth;
+use crate::fp::nan::{classify_f32, classify_f64};
+
+/// Result of a memory-repair attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemRepair {
+    /// `n` NaN elements repaired at the address.
+    Repaired { lanes: u32 },
+    /// Address not covered by any armed approximate region.
+    OutsidePool,
+    /// Covered, but the value there is not a NaN (stale address or already
+    /// repaired).
+    NotNan,
+}
+
+#[inline]
+fn covered(regions: &[Region], addr: u64, size: usize) -> bool {
+    let a = addr as usize;
+    regions.iter().any(|r| r.contains(a) && a + size <= r.end())
+}
+
+/// Repair the NaN(s) at `addr` (width-dependent element count), writing
+/// `value`. Async-signal-safe.
+pub fn repair_at(regions: &[Region], addr: u64, width: FpWidth, value: f64) -> MemRepair {
+    let bytes = width.mem_bytes();
+    if !covered(regions, addr, bytes) {
+        return MemRepair::OutsidePool;
+    }
+    let mut lanes = 0u32;
+    match width {
+        FpWidth::S64 => unsafe {
+            let p = addr as *mut u64;
+            if classify_f64(p.read_unaligned()).is_nan() {
+                p.write_unaligned(value.to_bits());
+                lanes += 1;
+            }
+        },
+        FpWidth::P64 => unsafe {
+            for i in 0..2 {
+                let p = (addr as *mut u64).add(i);
+                if classify_f64(p.read_unaligned()).is_nan() {
+                    p.write_unaligned(value.to_bits());
+                    lanes += 1;
+                }
+            }
+        },
+        FpWidth::S32 => unsafe {
+            let p = addr as *mut u32;
+            if classify_f32(p.read_unaligned()).is_nan() {
+                p.write_unaligned((value as f32).to_bits());
+                lanes += 1;
+            }
+        },
+        FpWidth::P32 => unsafe {
+            for i in 0..4 {
+                let p = (addr as *mut u32).add(i);
+                if classify_f32(p.read_unaligned()).is_nan() {
+                    p.write_unaligned((value as f32).to_bits());
+                    lanes += 1;
+                }
+            }
+        },
+        FpWidth::Int => {}
+    }
+    if lanes == 0 {
+        MemRepair::NotNan
+    } else {
+        MemRepair::Repaired { lanes }
+    }
+}
+
+/// Does memory at `addr` hold a NaN (width-aware)? Returns `None` when the
+/// address is not covered by the snapshot (must not be dereferenced).
+pub fn nan_at(regions: &[Region], addr: u64, width: FpWidth) -> Option<bool> {
+    let bytes = width.mem_bytes();
+    if !covered(regions, addr, bytes) {
+        return None;
+    }
+    let has = match width {
+        FpWidth::S64 => unsafe { classify_f64((addr as *const u64).read_unaligned()).is_nan() },
+        FpWidth::P64 => unsafe {
+            (0..2).any(|i| classify_f64((addr as *const u64).add(i).read_unaligned()).is_nan())
+        },
+        FpWidth::S32 => unsafe { classify_f32((addr as *const u32).read_unaligned()).is_nan() },
+        FpWidth::P32 => unsafe {
+            (0..4).any(|i| classify_f32((addr as *const u32).add(i).read_unaligned()).is_nan())
+        },
+        FpWidth::Int => false,
+    };
+    Some(has)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approxmem::pool::ApproxPool;
+    use crate::fp::nan::{snan_f32, PAPER_NAN_BITS};
+
+    #[test]
+    fn repairs_f64_nan_in_pool() {
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f64(4);
+        buf[2] = f64::from_bits(PAPER_NAN_BITS);
+        let regions = pool.regions();
+        let addr = buf.addr() as u64 + 16;
+        assert_eq!(nan_at(&regions, addr, FpWidth::S64), Some(true));
+        let r = repair_at(&regions, addr, FpWidth::S64, 7.5);
+        assert_eq!(r, MemRepair::Repaired { lanes: 1 });
+        assert_eq!(buf[2], 7.5);
+        // idempotence: second attempt reports NotNan
+        assert_eq!(repair_at(&regions, addr, FpWidth::S64, 7.5), MemRepair::NotNan);
+    }
+
+    #[test]
+    fn refuses_outside_pool() {
+        let pool = ApproxPool::new();
+        let _buf = pool.alloc_f64(4);
+        let regions = pool.regions();
+        let stack_nan = f64::NAN;
+        let addr = &stack_nan as *const f64 as u64;
+        assert_eq!(repair_at(&regions, addr, FpWidth::S64, 0.0), MemRepair::OutsidePool);
+        assert_eq!(nan_at(&regions, addr, FpWidth::S64), None);
+        assert!(stack_nan.is_nan(), "stack value untouched");
+    }
+
+    #[test]
+    fn refuses_range_straddling_region_end() {
+        let pool = ApproxPool::new();
+        let buf = pool.alloc_f64(4);
+        let regions = pool.regions();
+        // last valid f64 starts at +24; a P64 (16 bytes) there straddles
+        let addr = buf.addr() as u64 + 24;
+        assert_eq!(
+            repair_at(&regions, addr, FpWidth::P64, 0.0),
+            MemRepair::OutsidePool
+        );
+        // but S64 is fine
+        assert_eq!(repair_at(&regions, addr, FpWidth::S64, 0.0), MemRepair::NotNan);
+    }
+
+    #[test]
+    fn packed_f64_repairs_both_lanes() {
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f64(4);
+        buf[0] = f64::from_bits(PAPER_NAN_BITS);
+        buf[1] = f64::NAN;
+        let r = repair_at(&pool.regions(), buf.addr() as u64, FpWidth::P64, 1.0);
+        assert_eq!(r, MemRepair::Repaired { lanes: 2 });
+        assert_eq!(buf[0], 1.0);
+        assert_eq!(buf[1], 1.0);
+    }
+
+    #[test]
+    fn f32_repair() {
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f32(8);
+        buf[3] = f32::from_bits(snan_f32(0x7));
+        let addr = buf.addr() as u64 + 12;
+        let r = repair_at(&pool.regions(), addr, FpWidth::S32, 2.0);
+        assert_eq!(r, MemRepair::Repaired { lanes: 1 });
+        assert_eq!(buf[3], 2.0);
+    }
+
+    #[test]
+    fn non_nan_left_alone() {
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f64(2);
+        buf[0] = 42.0;
+        let r = repair_at(&pool.regions(), buf.addr() as u64, FpWidth::S64, 0.0);
+        assert_eq!(r, MemRepair::NotNan);
+        assert_eq!(buf[0], 42.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! NaN repair: policies for the replacement value (paper §5.2 leaves the
+//! choice open — we implement the candidates it discusses), plus the
+//! register- and memory-patching primitives used by the trap handler.
+
+pub mod memory;
+pub mod policy;
+pub mod register;
+
+pub use policy::RepairPolicy;

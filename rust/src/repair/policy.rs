@@ -1,0 +1,182 @@
+//! Repair-value policies (paper §5.2).
+//!
+//! The paper fixes NaNs to a constant and defers the choice: LetGo-style 0
+//! "makes many HPC applications converge" but breaks divisions (the LU
+//! pivot hazard); Li et al. suggest workload-dependent values.  We
+//! implement the discussed space so the policy ablation (EXT-POLICY) can
+//! quantify it.  Everything here is async-signal-safe: no allocation, no
+//! locking — `NeighborMean` reads adjacent elements directly through the
+//! armed region snapshot.
+
+use crate::approxmem::pool::Region;
+use crate::fp::nan::classify_f64;
+
+/// How to choose the value a NaN is repaired to.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RepairPolicy {
+    /// LetGo's choice: 0.0 (hazardous under division).
+    Zero,
+    /// 1.0 — division-safe multiplicative identity.
+    One,
+    /// A fixed constant.
+    Constant(f64),
+    /// Mean of the non-NaN immediate neighbours (addr ± 8 bytes) within the
+    /// same approximate region; falls back to 0.0 when no neighbour exists.
+    /// Exploits value locality of numerical grids/matrices.
+    NeighborMean,
+}
+
+impl RepairPolicy {
+    /// Resolve the replacement value for a NaN.
+    ///
+    /// `addr` is the main-memory location of the NaN when known (memory
+    /// repair); register-only repairs pass `None` and positional policies
+    /// degrade to their fallback.
+    ///
+    /// `regions` is the armed snapshot of approximate regions — the *only*
+    /// memory this function will read.
+    pub fn resolve(&self, addr: Option<u64>, regions: &[Region]) -> f64 {
+        match *self {
+            RepairPolicy::Zero => 0.0,
+            RepairPolicy::One => 1.0,
+            RepairPolicy::Constant(c) => c,
+            RepairPolicy::NeighborMean => {
+                let Some(addr) = addr else { return 0.0 };
+                let Some(region) = regions.iter().find(|r| r.contains(addr as usize)) else {
+                    return 0.0;
+                };
+                let mut sum = 0.0;
+                let mut n = 0u32;
+                for cand in [addr.wrapping_sub(8), addr.wrapping_add(8)] {
+                    let c = cand as usize;
+                    if region.contains(c) && c + 8 <= region.end() {
+                        // Safety: c..c+8 inside a live registered region.
+                        let bits = unsafe { (c as *const u64).read_unaligned() };
+                        if !classify_f64(bits).is_nan() {
+                            let v = f64::from_bits(bits);
+                            if v.is_finite() {
+                                sum += v;
+                                n += 1;
+                            }
+                        }
+                    }
+                }
+                if n == 0 {
+                    0.0
+                } else {
+                    sum / n as f64
+                }
+            }
+        }
+    }
+
+    /// Parse from a CLI string: `zero`, `one`, `neighbor`, or a float.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "zero" => Ok(RepairPolicy::Zero),
+            "one" => Ok(RepairPolicy::One),
+            "neighbor" | "neighbor-mean" => Ok(RepairPolicy::NeighborMean),
+            other => other
+                .parse::<f64>()
+                .map(RepairPolicy::Constant)
+                .map_err(|_| anyhow::anyhow!("unknown repair policy {other:?}")),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            RepairPolicy::Zero => "zero".into(),
+            RepairPolicy::One => "one".into(),
+            RepairPolicy::Constant(c) => format!("const({c})"),
+            RepairPolicy::NeighborMean => "neighbor-mean".into(),
+        }
+    }
+}
+
+impl Default for RepairPolicy {
+    fn default() -> Self {
+        RepairPolicy::Zero
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approxmem::pool::ApproxPool;
+    use crate::fp::nan::PAPER_NAN_BITS;
+
+    #[test]
+    fn constants() {
+        assert_eq!(RepairPolicy::Zero.resolve(None, &[]), 0.0);
+        assert_eq!(RepairPolicy::One.resolve(None, &[]), 1.0);
+        assert_eq!(RepairPolicy::Constant(2.5).resolve(None, &[]), 2.5);
+    }
+
+    #[test]
+    fn neighbor_mean_averages_both_sides() {
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f64(3);
+        buf[0] = 2.0;
+        buf[1] = f64::from_bits(PAPER_NAN_BITS);
+        buf[2] = 4.0;
+        let regions = pool.regions();
+        let addr = buf.addr() as u64 + 8;
+        let v = RepairPolicy::NeighborMean.resolve(Some(addr), &regions);
+        assert_eq!(v, 3.0);
+    }
+
+    #[test]
+    fn neighbor_mean_skips_nan_neighbors() {
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f64(3);
+        buf[0] = f64::NAN;
+        buf[1] = f64::from_bits(PAPER_NAN_BITS);
+        buf[2] = 10.0;
+        let regions = pool.regions();
+        let v = RepairPolicy::NeighborMean.resolve(Some(buf.addr() as u64 + 8), &regions);
+        assert_eq!(v, 10.0);
+    }
+
+    #[test]
+    fn neighbor_mean_edges_and_fallbacks() {
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f64(2);
+        buf[0] = f64::from_bits(PAPER_NAN_BITS);
+        buf[1] = 6.0;
+        let regions = pool.regions();
+        // first element: only right neighbour
+        let v = RepairPolicy::NeighborMean.resolve(Some(buf.addr() as u64), &regions);
+        assert_eq!(v, 6.0);
+        // address outside any region → fallback
+        let v = RepairPolicy::NeighborMean.resolve(Some(0x10), &regions);
+        assert_eq!(v, 0.0);
+        // no address → fallback
+        assert_eq!(RepairPolicy::NeighborMean.resolve(None, &regions), 0.0);
+    }
+
+    #[test]
+    fn neighbor_mean_skips_inf() {
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f64(3);
+        buf[0] = f64::INFINITY;
+        buf[1] = f64::from_bits(PAPER_NAN_BITS);
+        buf[2] = 8.0;
+        let v = RepairPolicy::NeighborMean.resolve(Some(buf.addr() as u64 + 8), &pool.regions());
+        assert_eq!(v, 8.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(RepairPolicy::parse("zero").unwrap(), RepairPolicy::Zero);
+        assert_eq!(RepairPolicy::parse("one").unwrap(), RepairPolicy::One);
+        assert_eq!(
+            RepairPolicy::parse("neighbor").unwrap(),
+            RepairPolicy::NeighborMean
+        );
+        assert_eq!(
+            RepairPolicy::parse("3.25").unwrap(),
+            RepairPolicy::Constant(3.25)
+        );
+        assert!(RepairPolicy::parse("bogus").is_err());
+    }
+}

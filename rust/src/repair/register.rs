@@ -1,0 +1,85 @@
+//! Register-repairing mechanism (paper §3.3): patch NaN lanes of the
+//! faulting XMM register in the saved signal context.
+
+use crate::disasm::insn::FpWidth;
+use crate::fp::nan::{classify_f32, classify_f64};
+use crate::trap::context::SigContext;
+
+/// Repair every NaN lane of xmm `r` (width-dependent lane interpretation),
+/// writing `value`. Returns the number of lanes repaired.
+pub fn repair_xmm(ctx: &SigContext, r: u8, width: FpWidth, value: f64) -> u32 {
+    let Some(lanes) = ctx.xmm(r) else {
+        return 0;
+    };
+    let mut repaired = 0;
+    match width {
+        FpWidth::S64 => {
+            if classify_f64(lanes[0]).is_nan() && ctx.set_xmm_lane64(r, 0, value.to_bits()) {
+                repaired += 1;
+            }
+        }
+        FpWidth::P64 => {
+            for lane in 0..2 {
+                if classify_f64(lanes[lane]).is_nan()
+                    && ctx.set_xmm_lane64(r, lane, value.to_bits())
+                {
+                    repaired += 1;
+                }
+            }
+        }
+        FpWidth::S32 => {
+            let bits32 = lanes[0] as u32;
+            if classify_f32(bits32).is_nan()
+                && ctx.set_xmm_lane32(r, 0, (value as f32).to_bits())
+            {
+                repaired += 1;
+            }
+        }
+        FpWidth::P32 => {
+            for lane in 0..4 {
+                let word = if lane < 2 { lanes[0] } else { lanes[1] };
+                let bits32 = (word >> ((lane & 1) * 32)) as u32;
+                if classify_f32(bits32).is_nan()
+                    && ctx.set_xmm_lane32(r, lane, (value as f32).to_bits())
+                {
+                    repaired += 1;
+                }
+            }
+        }
+        FpWidth::Int => {}
+    }
+    repaired
+}
+
+/// Does xmm `r` hold a NaN in any lane relevant for `width`?
+pub fn xmm_has_nan(ctx: &SigContext, r: u8, width: FpWidth) -> bool {
+    let Some(lanes) = ctx.xmm(r) else {
+        return false;
+    };
+    match width {
+        FpWidth::S64 => classify_f64(lanes[0]).is_nan(),
+        FpWidth::P64 => lanes.iter().any(|&l| classify_f64(l).is_nan()),
+        FpWidth::S32 => classify_f32(lanes[0] as u32).is_nan(),
+        FpWidth::P32 => {
+            let words = [
+                lanes[0] as u32,
+                (lanes[0] >> 32) as u32,
+                lanes[1] as u32,
+                (lanes[1] >> 32) as u32,
+            ];
+            words.iter().any(|&w| classify_f32(w).is_nan())
+        }
+        FpWidth::Int => false,
+    }
+}
+
+/// Last-resort sweep: repair NaNs in *all* 16 xmm registers at width
+/// `width` (used when instruction decode fails; keeps the workload alive
+/// at the cost of precision).
+pub fn repair_all_xmm(ctx: &SigContext, width: FpWidth, value: f64) -> u32 {
+    let mut n = 0;
+    for r in 0..16 {
+        n += repair_xmm(ctx, r, width, value);
+    }
+    n
+}

@@ -1,0 +1,200 @@
+//! PJRT engine: compile HLO-text artifacts once, execute many times.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::tensor::Tensor;
+
+/// Wraps the PJRT CPU client and a cache of compiled artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: HashMap<String, LoadedModelInner>,
+}
+
+struct LoadedModelInner {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Handle to a compiled model in the engine cache.
+pub struct LoadedModel<'a> {
+    inner: &'a LoadedModelInner,
+    pub name: String,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine rooted at `artifacts_dir`.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Default artifacts directory: `$NANREPAIR_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("NANREPAIR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Load + compile (cached) an artifact by stem, e.g. `matmul_f32_256`.
+    pub fn load(&mut self, stem: &str) -> Result<LoadedModel<'_>> {
+        if !self.cache.contains_key(stem) {
+            let path = self.artifacts_dir.join(format!("{stem}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {stem}"))?;
+            self.cache
+                .insert(stem.to_string(), LoadedModelInner { exe });
+        }
+        Ok(LoadedModel {
+            inner: &self.cache[stem],
+            name: stem.to_string(),
+        })
+    }
+
+    /// Artifacts available on disk.
+    pub fn available(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if let Ok(dir) = std::fs::read_dir(&self.artifacts_dir) {
+            for e in dir.flatten() {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                    out.push(stem.to_string());
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+}
+
+impl LoadedModel<'_> {
+    /// Execute with the given inputs; returns all tuple outputs.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.inner.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → always a tuple
+        let parts = result.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn engine() -> Engine {
+        // tests run from the workspace root
+        Engine::cpu("artifacts").expect("pjrt cpu client")
+    }
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seed(seed);
+        (0..n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn lists_artifacts() {
+        let e = engine();
+        let avail = e.available();
+        assert!(avail.iter().any(|a| a == "matmul_f32_256"), "{avail:?}");
+    }
+
+    #[test]
+    fn matmul_artifact_correct_and_counts_zero() {
+        let mut e = engine();
+        let m = e.load("matmul_f32_256").unwrap();
+        let a = Tensor::new(&[256, 256], rand_vec(256 * 256, 1));
+        let b = Tensor::new(&[256, 256], rand_vec(256 * 256, 2));
+        let out = m.run(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(out.len(), 2, "expected (C, count)");
+        let c = &out[0];
+        assert_eq!(c.dims, vec![256, 256]);
+        assert_eq!(out[1].data[0], 0.0, "clean inputs → zero repairs");
+        // spot-check one element against host math
+        let want: f32 = (0..256).map(|k| a.data[k] * b.data[k * 256]).sum();
+        assert!((c.data[0] - want).abs() < 1e-2 * want.abs().max(1.0));
+    }
+
+    #[test]
+    fn matmul_artifact_repairs_nan_and_counts() {
+        let mut e = engine();
+        let m = e.load("matmul_f32_256").unwrap();
+        let mut a = Tensor::new(&[256, 256], rand_vec(256 * 256, 3));
+        let b = Tensor::new(&[256, 256], rand_vec(256 * 256, 4));
+        a.poison(256 * 3 + 10); // A[3][10]
+        let out = m.run(&[a, b]).unwrap();
+        assert_eq!(out[0].nan_count(), 0, "kernel must repair the NaN");
+        // count = n/bn touches of the poisoned a-tile = 256/128 = 2
+        assert_eq!(out[1].data[0], 2.0);
+    }
+
+    #[test]
+    fn nan_scan_artifact() {
+        let mut e = engine();
+        let m = e.load("nan_scan_f32_256").unwrap();
+        let mut x = Tensor::new(&[256 * 256], rand_vec(256 * 256, 5));
+        x.poison(77);
+        x.poison(1000);
+        let out = m.run(&[x]).unwrap();
+        assert_eq!(out[0].nan_count(), 0);
+        assert_eq!(out[1].data[0], 2.0);
+    }
+
+    #[test]
+    fn jacobi_artifact_converges() {
+        let mut e = engine();
+        let m = e.load("jacobi_step_f32_256").unwrap();
+        let n = 256;
+        // diagonally dominant system
+        let mut a = rand_vec(n * n, 6).iter().map(|x| x * 0.5).collect::<Vec<_>>();
+        for i in 0..n {
+            let row_sum: f32 = (0..n)
+                .filter(|&j| j != i)
+                .map(|j| a[i * n + j].abs())
+                .sum();
+            a[i * n + i] = row_sum + 1.0;
+        }
+        let a = Tensor::new(&[n as i64, n as i64], a);
+        let b = Tensor::new(&[n as i64], rand_vec(n, 7));
+        let mut x = Tensor::zeros(&[n as i64]);
+        for _ in 0..50 {
+            let out = m.run(&[a.clone(), b.clone(), x.clone()]).unwrap();
+            x = out[0].clone();
+        }
+        // residual ‖Ax−b‖∞ small
+        let mut worst = 0.0f32;
+        for i in 0..n {
+            let ax: f32 = (0..n).map(|j| a.data[i * n + j] * x.data[j]).sum();
+            worst = worst.max((ax - b.data[i]).abs());
+        }
+        assert!(worst < 1e-3, "residual {worst}");
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let mut e = engine();
+        assert!(e.load("nonexistent_f32_1").is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! A minimal host tensor (f32, row-major) bridging approximate memory and
+//! PJRT literals.
+
+use anyhow::Result;
+
+/// Row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: &[i64], data: Vec<f32>) -> Self {
+        let expect: i64 = dims.iter().product();
+        assert_eq!(expect as usize, data.len(), "shape/data mismatch");
+        Self {
+            dims: dims.to_vec(),
+            data,
+        }
+    }
+
+    pub fn zeros(dims: &[i64]) -> Self {
+        let n: i64 = dims.iter().product();
+        Self::new(dims, vec![0.0; n as usize])
+    }
+
+    pub fn scalar_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Convert to an xla literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        Ok(lit.reshape(&self.dims)?)
+    }
+
+    /// Read back from a literal (f32 or i32 — i32 is widened).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        let data: Vec<f32> = match lit.ty()? {
+            xla::ElementType::F32 => lit.to_vec::<f32>()?,
+            xla::ElementType::S32 => lit
+                .to_vec::<i32>()?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect(),
+            other => anyhow::bail!("unsupported artifact output type {other:?}"),
+        };
+        Ok(Self { dims, data })
+    }
+
+    /// Count NaNs in the payload.
+    pub fn nan_count(&self) -> usize {
+        self.data.iter().filter(|x| x.is_nan()).count()
+    }
+
+    /// Inject the f32 SNaN pattern at `idx` (bit-level, like the paper's
+    /// injection but 32-bit: exponent all ones, quiet bit clear).
+    pub fn poison(&mut self, idx: usize) {
+        self.data[idx] = f32::from_bits(crate::fp::nan::snan_f32(0x4241));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        let t = Tensor::new(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.scalar_count(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn mismatch_panics() {
+        Tensor::new(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn poison_makes_nan() {
+        let mut t = Tensor::zeros(&[4]);
+        t.poison(2);
+        assert_eq!(t.nan_count(), 1);
+        assert!(t.data[2].is_nan());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+}

@@ -1,0 +1,203 @@
+//! In-repo property-testing helper (proptest is unavailable offline).
+//!
+//! [`prop::check`] runs a predicate over `cases` generated inputs; on
+//! failure it performs greedy shrinking via the input's [`prop::Shrink`]
+//! implementation and reports the minimal counterexample.
+
+pub mod prop {
+    use crate::util::rng::Pcg64;
+
+    /// Types that can propose smaller versions of themselves.
+    pub trait Shrink: Sized + Clone + std::fmt::Debug {
+        /// Candidate strictly-smaller values (empty when minimal).
+        fn shrink(&self) -> Vec<Self>;
+    }
+
+    impl Shrink for u64 {
+        fn shrink(&self) -> Vec<Self> {
+            if *self == 0 {
+                return Vec::new();
+            }
+            let mut v = vec![0, self / 2];
+            if *self > 1 {
+                v.push(self - 1);
+            }
+            v.dedup();
+            v
+        }
+    }
+
+    impl Shrink for usize {
+        fn shrink(&self) -> Vec<Self> {
+            (*self as u64).shrink().into_iter().map(|x| x as usize).collect()
+        }
+    }
+
+    impl Shrink for f64 {
+        fn shrink(&self) -> Vec<Self> {
+            if *self == 0.0 {
+                return Vec::new();
+            }
+            vec![0.0, self / 2.0, self.trunc()]
+                .into_iter()
+                .filter(|x| x != self)
+                .collect()
+        }
+    }
+
+    impl<T: Shrink> Shrink for Vec<T> {
+        fn shrink(&self) -> Vec<Self> {
+            let mut out = Vec::new();
+            if self.is_empty() {
+                return out;
+            }
+            // halve
+            out.push(self[..self.len() / 2].to_vec());
+            // drop one element
+            if self.len() > 1 {
+                let mut v = self.clone();
+                v.pop();
+                out.push(v);
+            }
+            // shrink one element
+            for (i, x) in self.iter().enumerate().take(4) {
+                for s in x.shrink().into_iter().take(2) {
+                    let mut v = self.clone();
+                    v[i] = s;
+                    out.push(v);
+                }
+            }
+            out
+        }
+    }
+
+    impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+        fn shrink(&self) -> Vec<Self> {
+            let mut out: Vec<Self> = self
+                .0
+                .shrink()
+                .into_iter()
+                .map(|a| (a, self.1.clone()))
+                .collect();
+            out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+            out
+        }
+    }
+
+    /// Outcome of a property check.
+    #[derive(Debug)]
+    pub enum PropResult<T> {
+        Ok { cases: usize },
+        Failed { minimal: T, original: T, shrinks: usize },
+    }
+
+    /// Run `predicate` over `cases` inputs drawn from `gen(rng)`; shrink on
+    /// the first failure.
+    pub fn check<T: Shrink>(
+        seed: u64,
+        cases: usize,
+        mut gen: impl FnMut(&mut Pcg64) -> T,
+        mut predicate: impl FnMut(&T) -> bool,
+    ) -> PropResult<T> {
+        let mut rng = Pcg64::seed(seed);
+        for _ in 0..cases {
+            let input = gen(&mut rng);
+            if predicate(&input) {
+                continue;
+            }
+            // shrink greedily
+            let original = input.clone();
+            let mut current = input;
+            let mut shrinks = 0;
+            'outer: loop {
+                for cand in current.shrink() {
+                    if !predicate(&cand) {
+                        current = cand;
+                        shrinks += 1;
+                        if shrinks > 1000 {
+                            break 'outer;
+                        }
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            return PropResult::Failed {
+                minimal: current,
+                original,
+                shrinks,
+            };
+        }
+        PropResult::Ok { cases }
+    }
+
+    /// Assert-style wrapper: panics with the minimal counterexample.
+    #[track_caller]
+    pub fn assert_prop<T: Shrink>(
+        name: &str,
+        seed: u64,
+        cases: usize,
+        gen: impl FnMut(&mut Pcg64) -> T,
+        predicate: impl FnMut(&T) -> bool,
+    ) {
+        match check(seed, cases, gen, predicate) {
+            PropResult::Ok { .. } => {}
+            PropResult::Failed {
+                minimal,
+                original,
+                shrinks,
+            } => panic!(
+                "property {name:?} failed\n  minimal counterexample ({shrinks} shrinks): {minimal:?}\n  original: {original:?}"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::prop::{assert_prop, check, PropResult};
+
+    #[test]
+    fn passing_property() {
+        assert_prop(
+            "sum-commutes",
+            1,
+            200,
+            |rng| (rng.below(1000), rng.below(1000)),
+            |(a, b)| a + b == b + a,
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        // property "x < 100" fails; minimal counterexample should be 100
+        let r = check(3, 500, |rng| rng.below(10_000), |&x| x < 100);
+        match r {
+            PropResult::Failed { minimal, .. } => assert_eq!(minimal, 100),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn vec_shrinking_reduces_length() {
+        let r = check(
+            5,
+            200,
+            |rng| (0..rng.index(50) + 1).map(|_| rng.below(10)).collect::<Vec<u64>>(),
+            |v| v.iter().sum::<u64>() < 5, // fails for big vectors
+        );
+        match r {
+            PropResult::Failed { minimal, .. } => {
+                assert!(minimal.iter().sum::<u64>() >= 5);
+                assert!(minimal.len() <= 3, "not shrunk: {minimal:?}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn assert_prop_panics_with_counterexample() {
+        assert_prop("always-false", 7, 10, |rng| rng.below(5), |_| false);
+    }
+}

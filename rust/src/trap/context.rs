@@ -1,0 +1,152 @@
+//! Safe accessors over the `ucontext_t` saved at signal delivery.
+//!
+//! The x86-64 ModRM register numbering (0=rax … 7=rdi, 8..15=r8..r15) does
+//! not match glibc's `gregs` array order; [`SigContext::gprs`] produces the
+//! encoder-ordered file the effective-address computation needs.
+
+use libc::{
+    REG_R10, REG_R11, REG_R12, REG_R13, REG_R14, REG_R15, REG_R8, REG_R9, REG_RAX, REG_RBP,
+    REG_RBX, REG_RCX, REG_RDI, REG_RDX, REG_RIP, REG_RSI, REG_RSP,
+};
+
+/// Wrapper around the raw `ucontext_t` pointer passed to a SA_SIGINFO
+/// handler.
+pub struct SigContext {
+    uc: *mut libc::ucontext_t,
+}
+
+impl SigContext {
+    /// # Safety
+    /// `uc` must be the ucontext pointer passed by the kernel to a signal
+    /// handler currently executing on this thread.
+    pub unsafe fn from_raw(uc: *mut libc::c_void) -> Self {
+        Self {
+            uc: uc as *mut libc::ucontext_t,
+        }
+    }
+
+    #[inline]
+    fn mctx(&self) -> &mut libc::mcontext_t {
+        unsafe { &mut (*self.uc).uc_mcontext }
+    }
+
+    #[inline]
+    fn fpstate(&self) -> Option<&mut libc::_libc_fpstate> {
+        let p = self.mctx().fpregs;
+        if p.is_null() {
+            None
+        } else {
+            Some(unsafe { &mut *p })
+        }
+    }
+
+    /// Instruction pointer at the fault.
+    #[inline]
+    pub fn rip(&self) -> u64 {
+        self.mctx().gregs[REG_RIP as usize] as u64
+    }
+
+    #[inline]
+    pub fn set_rip(&self, v: u64) {
+        self.mctx().gregs[REG_RIP as usize] = v as i64;
+    }
+
+    /// GPR file in x86 encoder order (0=rax, 1=rcx, 2=rdx, 3=rbx, 4=rsp,
+    /// 5=rbp, 6=rsi, 7=rdi, 8..15 = r8..r15).
+    pub fn gprs(&self) -> [u64; 16] {
+        let g = &self.mctx().gregs;
+        [
+            g[REG_RAX as usize] as u64,
+            g[REG_RCX as usize] as u64,
+            g[REG_RDX as usize] as u64,
+            g[REG_RBX as usize] as u64,
+            g[REG_RSP as usize] as u64,
+            g[REG_RBP as usize] as u64,
+            g[REG_RSI as usize] as u64,
+            g[REG_RDI as usize] as u64,
+            g[REG_R8 as usize] as u64,
+            g[REG_R9 as usize] as u64,
+            g[REG_R10 as usize] as u64,
+            g[REG_R11 as usize] as u64,
+            g[REG_R12 as usize] as u64,
+            g[REG_R13 as usize] as u64,
+            g[REG_R14 as usize] as u64,
+            g[REG_R15 as usize] as u64,
+        ]
+    }
+
+    /// Read xmm register `r` (two 64-bit lanes).
+    #[inline]
+    pub fn xmm(&self, r: u8) -> Option<[u64; 2]> {
+        let fp = self.fpstate()?;
+        let e = &fp._xmm[r as usize & 15].element;
+        Some([
+            (e[0] as u64) | ((e[1] as u64) << 32),
+            (e[2] as u64) | ((e[3] as u64) << 32),
+        ])
+    }
+
+    /// Overwrite one 64-bit lane (0 or 1) of xmm register `r`.
+    #[inline]
+    pub fn set_xmm_lane64(&self, r: u8, lane: usize, bits: u64) -> bool {
+        let Some(fp) = self.fpstate() else {
+            return false;
+        };
+        let e = &mut fp._xmm[r as usize & 15].element;
+        e[lane * 2] = bits as u32;
+        e[lane * 2 + 1] = (bits >> 32) as u32;
+        true
+    }
+
+    /// Overwrite one 32-bit lane (0..=3) of xmm register `r`.
+    #[inline]
+    pub fn set_xmm_lane32(&self, r: u8, lane: usize, bits: u32) -> bool {
+        let Some(fp) = self.fpstate() else {
+            return false;
+        };
+        fp._xmm[r as usize & 15].element[lane] = bits;
+        true
+    }
+
+    /// Saved MXCSR (restored on sigreturn).
+    #[inline]
+    pub fn mxcsr(&self) -> Option<u32> {
+        self.fpstate().map(|fp| fp.mxcsr)
+    }
+
+    #[inline]
+    pub fn set_mxcsr(&self, v: u32) -> bool {
+        match self.fpstate() {
+            Some(fp) => {
+                fp.mxcsr = v;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Clear the sticky invalid flag in the saved MXCSR.
+    #[inline]
+    pub fn clear_invalid_flag(&self) -> bool {
+        match self.fpstate() {
+            Some(fp) => {
+                fp.mxcsr &= !super::mxcsr::MXCSR_IE;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Mask the invalid exception in the saved MXCSR (the give-up path: the
+    /// thread resumes without trapping again).
+    #[inline]
+    pub fn mask_invalid(&self) -> bool {
+        match self.fpstate() {
+            Some(fp) => {
+                fp.mxcsr |= super::mxcsr::MXCSR_IM;
+                true
+            }
+            None => false,
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Trap diagnostics ring: the last K traps with their faulting context —
+//! what gdb showed the paper's authors (Figures 3–5), available
+//! programmatically and in reports.
+//!
+//! Lock-free fixed-size ring: the handler writes a compact record (no
+//! allocation, relaxed atomics); readers render it lazily with the
+//! disassembly formatter.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Ring capacity (power of two).
+pub const RING: usize = 64;
+
+/// Action taken by the handler (bitmask).
+pub mod action {
+    pub const REG_REPAIR: u32 = 1 << 0;
+    pub const MEM_DIRECT: u32 = 1 << 1;
+    pub const MEM_BACKTRACED: u32 = 1 << 2;
+    pub const EMULATED: u32 = 1 << 3;
+    pub const FALLBACK_SWEEP: u32 = 1 << 4;
+    pub const GAVE_UP: u32 = 1 << 5;
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TrapRecord {
+    /// Sequence number (monotonic).
+    pub seq: u64,
+    /// Faulting instruction pointer.
+    pub rip: u64,
+    /// First 8 instruction bytes at RIP.
+    pub insn_bytes: [u8; 8],
+    /// Memory address repaired (0 if none).
+    pub repaired_addr: u64,
+    /// Action bitmask (see [`action`]).
+    pub actions: u32,
+}
+
+struct Slot {
+    seq: AtomicU64,
+    rip: AtomicU64,
+    bytes: AtomicU64,
+    addr: AtomicU64,
+    actions: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const EMPTY: Slot = Slot {
+    seq: AtomicU64::new(0),
+    rip: AtomicU64::new(0),
+    bytes: AtomicU64::new(0),
+    addr: AtomicU64::new(0),
+    actions: AtomicU64::new(0),
+};
+
+static SLOTS: [Slot; RING] = [EMPTY; RING];
+static NEXT: AtomicUsize = AtomicUsize::new(0);
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Record one trap (called from the signal handler; async-signal-safe).
+pub fn record(rip: u64, insn_bytes: [u8; 8], repaired_addr: u64, actions: u32) {
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed) + 1;
+    let i = NEXT.fetch_add(1, Ordering::Relaxed) & (RING - 1);
+    let s = &SLOTS[i];
+    s.seq.store(seq, Ordering::Relaxed);
+    s.rip.store(rip, Ordering::Relaxed);
+    s.bytes
+        .store(u64::from_le_bytes(insn_bytes), Ordering::Relaxed);
+    s.addr.store(repaired_addr, Ordering::Relaxed);
+    s.actions.store(actions as u64, Ordering::Relaxed);
+}
+
+/// Snapshot the ring, newest first.
+pub fn snapshot() -> Vec<TrapRecord> {
+    let mut out: Vec<TrapRecord> = SLOTS
+        .iter()
+        .filter_map(|s| {
+            let seq = s.seq.load(Ordering::Relaxed);
+            (seq != 0).then(|| TrapRecord {
+                seq,
+                rip: s.rip.load(Ordering::Relaxed),
+                insn_bytes: s.bytes.load(Ordering::Relaxed).to_le_bytes(),
+                repaired_addr: s.addr.load(Ordering::Relaxed),
+                actions: s.actions.load(Ordering::Relaxed) as u32,
+            })
+        })
+        .collect();
+    out.sort_by_key(|r| std::cmp::Reverse(r.seq));
+    out
+}
+
+/// Clear the ring (between campaigns).
+pub fn clear() {
+    for s in &SLOTS {
+        s.seq.store(0, Ordering::Relaxed);
+    }
+    NEXT.store(0, Ordering::Relaxed);
+}
+
+/// Render the newest `limit` records paper-Figure-3 style.
+pub fn render(limit: usize) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for r in snapshot().into_iter().take(limit) {
+        let text = match crate::disasm::decode_insn(&r.insn_bytes) {
+            Some(i) => crate::disasm::fmt::fmt_insn(&i),
+            None => "<undecoded>".to_string(),
+        };
+        let mut acts = Vec::new();
+        if r.actions & action::REG_REPAIR != 0 {
+            acts.push("reg");
+        }
+        if r.actions & action::MEM_DIRECT != 0 {
+            acts.push("mem-direct");
+        }
+        if r.actions & action::MEM_BACKTRACED != 0 {
+            acts.push("mem-backtraced");
+        }
+        if r.actions & action::EMULATED != 0 {
+            acts.push("emulated");
+        }
+        if r.actions & action::FALLBACK_SWEEP != 0 {
+            acts.push("sweep");
+        }
+        if r.actions & action::GAVE_UP != 0 {
+            acts.push("GAVE-UP");
+        }
+        let _ = writeln!(
+            out,
+            "#{:<5} rip={:#014x}  {:<40} [{}]{}",
+            r.seq,
+            r.rip,
+            text,
+            acts.join("+"),
+            if r.repaired_addr != 0 {
+                format!("  repaired @{:#x}", r.repaired_addr)
+            } else {
+                String::new()
+            }
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_records_and_renders() {
+        let _l = crate::trap::test_lock();
+        clear();
+        record(
+            0x4000,
+            [0xf2, 0x0f, 0x59, 0xc1, 0, 0, 0, 0],
+            0xdead0,
+            action::REG_REPAIR | action::MEM_BACKTRACED,
+        );
+        record(0x5000, [0x90; 8], 0, action::GAVE_UP);
+        let snap = snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].rip, 0x5000, "newest first");
+        let text = render(10);
+        assert!(text.contains("mulsd  xmm0, xmm1"), "{text}");
+        assert!(text.contains("reg+mem-backtraced"), "{text}");
+        assert!(text.contains("GAVE-UP"), "{text}");
+        clear();
+        assert!(snapshot().is_empty());
+    }
+
+    #[test]
+    fn ring_wraps_without_growing() {
+        let _l = crate::trap::test_lock();
+        clear();
+        for i in 0..RING * 2 {
+            record(i as u64, [0; 8], 0, 0);
+        }
+        let snap = snapshot();
+        assert_eq!(snap.len(), RING);
+        // newest RING entries survive
+        assert_eq!(snap[0].rip, (RING * 2 - 1) as u64);
+        clear();
+    }
+
+    #[test]
+    fn live_trap_populates_ring() {
+        let _l = crate::trap::test_lock();
+        clear();
+        let pool = crate::approxmem::pool::ApproxPool::new();
+        let mut a = pool.alloc_f64(8);
+        let mut b = pool.alloc_f64(8);
+        a.fill_with(|_| 1.0);
+        b.fill_with(|_| 1.0);
+        a[2] = f64::from_bits(crate::fp::nan::PAPER_NAN_BITS);
+        let guard = crate::trap::TrapGuard::arm(
+            &pool,
+            &crate::trap::TrapConfig::default(),
+        );
+        let _ = crate::workloads::kernels::ddot(a.as_slice(), b.as_slice(), 8);
+        drop(guard);
+        let snap = snapshot();
+        assert!(!snap.is_empty(), "handler must record into the ring");
+        let r = &snap[0];
+        assert!(r.actions & (action::REG_REPAIR | action::MEM_DIRECT | action::MEM_BACKTRACED) != 0);
+        let text = render(3);
+        assert!(text.contains("mulsd"), "{text}");
+        clear();
+    }
+}

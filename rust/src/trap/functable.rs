@@ -1,0 +1,141 @@
+//! In-process function table for the back-trace.
+//!
+//! Built once (outside any signal context) from `/proc/self/exe`; the
+//! SIGFPE handler then performs only a read-only binary search plus direct
+//! reads of mapped `.text` bytes — both async-signal-safe.
+//!
+//! PIE note: runtime addresses differ from ELF virtual addresses by the
+//! load bias, computed from a marker symbol whose runtime address we can
+//! take directly.
+
+use once_cell::sync::OnceCell;
+
+use crate::disasm::elf::ElfImage;
+
+/// A function's *runtime* address range.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FuncRange {
+    pub start: u64,
+    pub end: u64,
+}
+
+impl FuncRange {
+    #[inline]
+    pub fn contains(&self, addr: u64) -> bool {
+        addr >= self.start && addr < self.end
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        (self.end - self.start) as usize
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.end <= self.start
+    }
+}
+
+/// Marker used to compute the PIE load bias: its ELF vaddr vs runtime
+/// address.
+#[no_mangle]
+#[inline(never)]
+pub extern "C" fn nanrepair_bias_marker() -> u64 {
+    // Body is irrelevant; the symbol's address is what matters. Return
+    // something data-dependent so it cannot be merged with another symbol.
+    0x6e616e7265706169 // "nanrepai"
+}
+
+static TABLE: OnceCell<Vec<FuncRange>> = OnceCell::new();
+
+/// Build (once) and return the sorted runtime function table.
+pub fn table() -> &'static [FuncRange] {
+    TABLE.get_or_init(|| match build() {
+        Ok(t) => t,
+        Err(e) => {
+            log::warn!("functable unavailable: {e} (memory repair via backtrace disabled)");
+            Vec::new()
+        }
+    })
+}
+
+/// Force initialization outside signal context. Returns the table size.
+pub fn init() -> usize {
+    table().len()
+}
+
+fn build() -> anyhow::Result<Vec<FuncRange>> {
+    let img = ElfImage::load("/proc/self/exe")?;
+    let marker_runtime = nanrepair_bias_marker as *const () as usize as u64;
+    let marker_elf = img
+        .func_named("nanrepair_bias_marker")
+        .map(|f| f.addr)
+        .ok_or_else(|| anyhow::anyhow!("bias marker symbol not found"))?;
+    let bias = marker_runtime.wrapping_sub(marker_elf);
+
+    let mut table: Vec<FuncRange> = img
+        .funcs
+        .iter()
+        .map(|f| FuncRange {
+            start: f.addr.wrapping_add(bias),
+            end: f.addr.wrapping_add(bias).wrapping_add(f.size),
+        })
+        .collect();
+    table.sort_by_key(|f| f.start);
+    // drop overlapping aliases (keep the widest at each start)
+    table.dedup_by_key(|f| f.start);
+    Ok(table)
+}
+
+/// Find the function containing `addr`. Async-signal-safe (read-only
+/// search over the initialized table; returns None if the table was never
+/// initialized).
+pub fn find(addr: u64) -> Option<FuncRange> {
+    let t = TABLE.get()?;
+    let idx = t.partition_point(|f| f.start <= addr);
+    let f = *t.get(idx.checked_sub(1)?)?;
+    f.contains(addr).then_some(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_finds_marker() {
+        let n = init();
+        assert!(n > 100, "function table too small: {n}");
+        let addr = nanrepair_bias_marker as *const () as usize as u64;
+        let f = find(addr).expect("marker not found in table");
+        assert!(f.contains(addr));
+        assert!(f.len() > 0 && f.len() < 4096);
+    }
+
+    #[test]
+    fn find_miss_outside_text() {
+        init();
+        assert!(find(0).is_none());
+        assert!(find(0x10).is_none());
+    }
+
+    #[test]
+    fn table_sorted_nonoverlapping_starts() {
+        init();
+        let t = table();
+        for w in t.windows(2) {
+            assert!(w[0].start < w[1].start);
+        }
+    }
+
+    #[test]
+    fn find_resolves_own_test_function() {
+        init();
+        // address inside this very test function
+        let here = find_resolves_own_test_function_marker as *const () as usize as u64;
+        let f = find(here);
+        assert!(f.is_some(), "test fn not in table");
+    }
+
+    #[inline(never)]
+    fn find_resolves_own_test_function_marker() {}
+}

@@ -1,0 +1,234 @@
+//! RAII arming of the trap path around a protected compute region.
+
+use crate::approxmem::pool::ApproxPool;
+use crate::repair::policy::RepairPolicy;
+
+use super::{handler, mxcsr};
+
+/// Configuration for one armed window.
+#[derive(Debug, Clone)]
+pub struct TrapConfig {
+    pub policy: RepairPolicy,
+    /// Enable the memory-repairing mechanism (paper §3.4). With this off,
+    /// only registers are repaired — the paper's "register" configuration.
+    pub memory_repair: bool,
+}
+
+impl Default for TrapConfig {
+    fn default() -> Self {
+        Self {
+            policy: RepairPolicy::Zero,
+            memory_repair: true,
+        }
+    }
+}
+
+/// Arms the SIGFPE repair path for the current thread; disarms on drop.
+///
+/// The handler and armed snapshot are process-global, while the MXCSR
+/// unmasking is per-thread: campaigns arm once on the compute thread and
+/// run one protected window at a time (serialized via
+/// [`crate::trap::test_lock`] in tests).
+pub struct TrapGuard {
+    saved_mxcsr: u32,
+}
+
+impl TrapGuard {
+    /// Install the handler (idempotent), snapshot `pool`'s regions into the
+    /// armed state, and unmask the invalid-operation exception on this
+    /// thread.
+    pub fn arm(pool: &ApproxPool, cfg: &TrapConfig) -> Self {
+        handler::install();
+        let regions = pool.regions();
+        assert!(
+            regions.len() <= handler::MAX_REGIONS,
+            "too many approximate regions for the armed snapshot"
+        );
+        handler::arm_state(&regions, cfg.policy, cfg.memory_repair);
+        let saved_mxcsr = mxcsr::unmask_invalid();
+        Self { saved_mxcsr }
+    }
+
+    /// Re-snapshot regions (after new allocations) without re-arming MXCSR.
+    pub fn refresh_regions(&self, pool: &ApproxPool, cfg: &TrapConfig) {
+        handler::arm_state(&pool.regions(), cfg.policy, cfg.memory_repair);
+    }
+
+    /// Counters accumulated since the last reset.
+    pub fn stats(&self) -> handler::TrapStats {
+        handler::stats_snapshot()
+    }
+
+    /// Zero the counters (e.g. between measured repetitions).
+    pub fn reset_stats(&self) {
+        handler::stats_reset();
+    }
+}
+
+impl Drop for TrapGuard {
+    fn drop(&mut self) {
+        handler::disarm_state();
+        mxcsr::restore(self.saved_mxcsr);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approxmem::injector::{InjectionSpec, Injector};
+    use crate::fp::nan::PAPER_NAN_BITS;
+    use crate::trap::test_lock;
+
+    /// The fundamental end-to-end check, same shape as the C prototype:
+    /// multiply by an SNaN under the guard; expect exactly one trap, a
+    /// repaired register, and a live process.
+    #[test]
+    fn snan_multiply_survives_and_repairs() {
+        let _lock = test_lock();
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f64(2);
+        buf[0] = f64::from_bits(PAPER_NAN_BITS);
+        buf[1] = 3.0;
+
+        let cfg = TrapConfig {
+            policy: RepairPolicy::Constant(2.0),
+            memory_repair: true,
+        };
+        let guard = TrapGuard::arm(&pool, &cfg);
+        guard.reset_stats();
+
+        // volatile reads force the load from approximate memory
+        let a = unsafe { std::ptr::read_volatile(buf.as_ptr()) };
+        let b = unsafe { std::ptr::read_volatile(buf.as_ptr().add(1)) };
+        let c = a * b;
+
+        let stats = guard.stats();
+        drop(guard);
+
+        assert!(stats.sigfpe_total >= 1, "no trap fired");
+        assert!(stats.register_repairs >= 1, "register not repaired");
+        assert_eq!(c, 6.0, "NaN repaired to 2.0 → 2*3=6");
+    }
+
+    #[test]
+    fn no_nan_no_trap_no_overhead() {
+        let _lock = test_lock();
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f64(64);
+        buf.fill_with(|i| i as f64 + 1.0);
+
+        let guard = TrapGuard::arm(&pool, &TrapConfig::default());
+        guard.reset_stats();
+        let mut acc = 0.0;
+        for i in 0..64 {
+            acc += buf[i] * 2.0;
+        }
+        let stats = guard.stats();
+        drop(guard);
+        assert_eq!(stats.sigfpe_total, 0);
+        assert_eq!(acc, (1..=64).map(|x| x as f64).sum::<f64>() * 2.0);
+    }
+
+    #[test]
+    fn guard_restores_mxcsr() {
+        let _lock = test_lock();
+        let before = mxcsr::read();
+        let pool = ApproxPool::new();
+        {
+            let _g = TrapGuard::arm(&pool, &TrapConfig::default());
+            assert!(mxcsr::invalid_unmasked());
+        }
+        assert_eq!(mxcsr::read() & mxcsr::MXCSR_IM, before & mxcsr::MXCSR_IM);
+    }
+
+    #[test]
+    fn injected_nan_in_pool_repaired_in_memory() {
+        let _lock = test_lock();
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f64(16);
+        buf.fill_with(|i| (i + 1) as f64);
+        let mut inj = Injector::new(42);
+        let rep = inj.inject(&pool, InjectionSpec::ExactNaNs { count: 1 });
+        let nan_addr = rep.nan_addrs[0];
+        let idx = (nan_addr - buf.addr()) / 8;
+
+        let cfg = TrapConfig {
+            policy: RepairPolicy::Constant(9.0),
+            memory_repair: true,
+        };
+        let guard = TrapGuard::arm(&pool, &cfg);
+        guard.reset_stats();
+
+        // run the pinned asm dot kernel over the buffer: the NaN traps at
+        // the paper's movsd/mulsd pattern and must be repaired in register
+        // AND at its memory origin
+        let ones = [1.0f64; 16];
+        let acc = crate::workloads::kernels::ddot(buf.as_slice(), &ones, 16);
+        let stats = guard.stats();
+        drop(guard);
+
+        assert!(stats.sigfpe_total >= 1);
+        assert!(stats.memory_repairs() >= 1, "{stats:#?}");
+        assert!(!buf[idx].is_nan(), "memory not repaired");
+        assert_eq!(buf[idx], 9.0);
+        assert!(acc.is_finite());
+        // every non-injected element untouched
+        for i in 0..16 {
+            if i != idx {
+                assert_eq!(buf[i], (i + 1) as f64);
+            }
+        }
+    }
+
+    /// Paper Table 3's mechanism distinction, on the asm ddot kernel:
+    /// register-only repair re-traps on every re-read of the same NaN;
+    /// memory repair traps exactly once.
+    #[test]
+    fn register_only_retraps_memory_repair_traps_once() {
+        let _lock = test_lock();
+        let pool = ApproxPool::new();
+        let mut a = pool.alloc_f64(32);
+        let mut b = pool.alloc_f64(32);
+        a.fill_with(|i| i as f64 + 1.0);
+        b.fill_with(|_| 1.0);
+
+        // --- register-only: N reps → N traps --------------------------------
+        a[7] = f64::from_bits(PAPER_NAN_BITS);
+        let cfg = TrapConfig {
+            policy: RepairPolicy::Constant(0.5),
+            memory_repair: false,
+        };
+        let guard = TrapGuard::arm(&pool, &cfg);
+        guard.reset_stats();
+        let reps = 5;
+        for _ in 0..reps {
+            let _ = crate::workloads::kernels::ddot(a.as_slice(), b.as_slice(), 32);
+        }
+        let reg_stats = guard.stats();
+        drop(guard);
+        assert_eq!(
+            reg_stats.sigfpe_total, reps as u64,
+            "register-only must trap once per rep: {reg_stats:#?}"
+        );
+        assert!(a[7].is_nan(), "register-only must leave memory poisoned");
+
+        // --- register+memory: 1 trap regardless of reps ---------------------
+        a[7] = f64::from_bits(PAPER_NAN_BITS);
+        let cfg = TrapConfig {
+            policy: RepairPolicy::Constant(0.5),
+            memory_repair: true,
+        };
+        let guard = TrapGuard::arm(&pool, &cfg);
+        guard.reset_stats();
+        for _ in 0..reps {
+            let _ = crate::workloads::kernels::ddot(a.as_slice(), b.as_slice(), 32);
+        }
+        let mem_stats = guard.stats();
+        drop(guard);
+        assert_eq!(
+            mem_stats.sigfpe_total, 1,
+            "memory repair must trap exactly once: {mem_stats:#?}"
+        );
+        assert_eq!(a[7], 0.5, "NaN repaired in memory");
+    }
+}

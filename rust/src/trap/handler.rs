@@ -1,0 +1,480 @@
+//! The SIGFPE repair handler — the paper's Figure 2 without gdb.
+//!
+//! Flow on each `SIGFPE` (`FPE_FLTINV`):
+//!  1. decode the instruction at the saved RIP ([`crate::disasm::decode_insn`]);
+//!  2. **register repair** (paper §3.3): patch NaN lanes of the xmm
+//!     operand(s) in the saved FP state;
+//!  3. **memory repair** (paper §3.4):
+//!     * memory operand → its effective address is recomputed directly
+//!       from ModRM/SIB + saved GPRs (no back-trace needed);
+//!     * register operand → back-trace the enclosing function for the
+//!       feeding `mov` ([`crate::disasm::backtrace_mov`]) and recompute its
+//!       address from the saved GPRs;
+//!     every patch is gated on the armed approximate-region snapshot and a
+//!     bit-level NaN check (never corrupts non-approximate memory);
+//!  4. clear the sticky IE flag in the saved MXCSR and return — the
+//!     instruction re-executes with legal operands.
+//!
+//! Async-signal-safety: the handler allocates nothing, takes no locks, and
+//! touches only (a) the ucontext, (b) immutable statics initialized before
+//! arming ([`super::functable`], the armed snapshot), and (c) approximate
+//! memory through the snapshot bounds.
+//!
+//! A give-up valve bounds pathological loops: if the same RIP faults
+//! repeatedly without forward progress (e.g. a QNaN produced by a masked
+//! path, or an operand we cannot see), the handler masks the invalid
+//! exception in the saved MXCSR so the thread continues un-trapped, and
+//! records the event.
+
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+use crate::approxmem::pool::Region;
+use crate::disasm::backtrace::BacktraceOutcome;
+use crate::disasm::decode::decode_insn;
+use crate::disasm::insn::{FpWidth, Operand};
+use crate::repair::memory::{self, MemRepair};
+use crate::repair::policy::RepairPolicy;
+use crate::repair::register;
+use crate::trap::context::SigContext;
+use crate::trap::diagnostics::{self, action};
+use crate::trap::functable;
+use crate::util::timing::rdtsc;
+
+/// Max regions in the armed snapshot (fixed-size: no allocation in or near
+/// the signal path).
+pub const MAX_REGIONS: usize = 256;
+
+/// Consecutive traps *without any repair action* before the give-up valve
+/// opens (masks the exception so the thread continues un-trapped).
+pub const GIVE_UP_THRESHOLD: u64 = 8;
+
+// ---- armed state (written by TrapGuard outside signal context) -----------
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static MEMORY_REPAIR_ENABLED: AtomicBool = AtomicBool::new(true);
+static POLICY_KIND: AtomicU32 = AtomicU32::new(0); // 0=zero 1=one 2=const 3=neighbor
+static POLICY_CONST: AtomicU64 = AtomicU64::new(0);
+static N_REGIONS: AtomicUsize = AtomicUsize::new(0);
+static REGION_START: [AtomicUsize; MAX_REGIONS] = {
+    #[allow(clippy::declare_interior_mutable_const)]
+    const Z: AtomicUsize = AtomicUsize::new(0);
+    [Z; MAX_REGIONS]
+};
+static REGION_LEN: [AtomicUsize; MAX_REGIONS] = {
+    #[allow(clippy::declare_interior_mutable_const)]
+    const Z: AtomicUsize = AtomicUsize::new(0);
+    [Z; MAX_REGIONS]
+};
+
+pub(super) fn arm_state(regions: &[Region], policy: RepairPolicy, memory_repair: bool) {
+    let n = regions.len().min(MAX_REGIONS);
+    for (i, r) in regions.iter().take(n).enumerate() {
+        REGION_START[i].store(r.start, Ordering::Relaxed);
+        REGION_LEN[i].store(r.len, Ordering::Relaxed);
+    }
+    N_REGIONS.store(n, Ordering::Relaxed);
+    let (kind, cval) = match policy {
+        RepairPolicy::Zero => (0, 0.0),
+        RepairPolicy::One => (1, 0.0),
+        RepairPolicy::Constant(c) => (2, c),
+        RepairPolicy::NeighborMean => (3, 0.0),
+    };
+    POLICY_KIND.store(kind, Ordering::Relaxed);
+    POLICY_CONST.store(cval.to_bits(), Ordering::Relaxed);
+    MEMORY_REPAIR_ENABLED.store(memory_repair, Ordering::Relaxed);
+    LAST_RIP.store(0, Ordering::Relaxed);
+    SAME_RIP_STREAK.store(0, Ordering::Relaxed);
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+pub(super) fn disarm_state() {
+    ARMED.store(false, Ordering::SeqCst);
+}
+
+/// Copy the armed snapshot into a caller buffer; returns the region count.
+/// (Signal path only — ordinary code should use the pool directly.)
+fn snapshot_regions(buf: &mut [MaybeUninit<Region>; MAX_REGIONS]) -> usize {
+    let n = N_REGIONS.load(Ordering::Relaxed);
+    for i in 0..n {
+        buf[i].write(Region {
+            start: REGION_START[i].load(Ordering::Relaxed),
+            len: REGION_LEN[i].load(Ordering::Relaxed),
+            id: i,
+        });
+    }
+    n
+}
+
+fn armed_policy() -> RepairPolicy {
+    match POLICY_KIND.load(Ordering::Relaxed) {
+        0 => RepairPolicy::Zero,
+        1 => RepairPolicy::One,
+        2 => RepairPolicy::Constant(f64::from_bits(POLICY_CONST.load(Ordering::Relaxed))),
+        _ => RepairPolicy::NeighborMean,
+    }
+}
+
+// ---- statistics -----------------------------------------------------------
+
+macro_rules! counters {
+    ($($name:ident),* $(,)?) => {
+        $(
+            #[allow(non_upper_case_globals)]
+            static $name: AtomicU64 = AtomicU64::new(0);
+        )*
+
+        /// Snapshot of all trap-path counters.
+        #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+        #[allow(non_snake_case)]
+        pub struct TrapStats {
+            $(pub $name: u64,)*
+        }
+
+        /// Read a consistent-enough snapshot of the counters.
+        pub fn stats_snapshot() -> TrapStats {
+            TrapStats {
+                $($name: $name.load(Ordering::Relaxed),)*
+            }
+        }
+
+        /// Reset all counters (between campaign runs).
+        pub fn stats_reset() {
+            $($name.store(0, Ordering::Relaxed);)*
+        }
+    };
+}
+
+counters!(
+    sigfpe_total,
+    register_repairs,
+    memory_repairs_direct,
+    memory_repairs_backtraced,
+    backtrace_not_found,
+    backtrace_found_not_nan,
+    backtrace_outside_pool,
+    decode_failures,
+    fallback_sweep_repairs,
+    emulated_skips,
+    gave_up,
+    unexpected_si_code,
+    trap_cycles_total,
+);
+
+impl TrapStats {
+    pub fn memory_repairs(&self) -> u64 {
+        self.memory_repairs_direct + self.memory_repairs_backtraced
+    }
+
+    /// Mean cycles per trap (0 if no traps).
+    pub fn mean_cycles(&self) -> f64 {
+        if self.sigfpe_total == 0 {
+            0.0
+        } else {
+            self.trap_cycles_total as f64 / self.sigfpe_total as f64
+        }
+    }
+}
+
+static LAST_RIP: AtomicU64 = AtomicU64::new(0);
+static SAME_RIP_STREAK: AtomicU64 = AtomicU64::new(0);
+
+// ---- installation ---------------------------------------------------------
+
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+/// Install the SIGFPE handler (idempotent). Must be called outside signal
+/// context; also forces function-table initialization.
+pub fn install() {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    functable::init();
+    unsafe {
+        let mut sa: libc::sigaction = std::mem::zeroed();
+        sa.sa_sigaction = sigfpe_handler as *const () as usize;
+        sa.sa_flags = libc::SA_SIGINFO;
+        libc::sigemptyset(&mut sa.sa_mask);
+        if libc::sigaction(libc::SIGFPE, &sa, std::ptr::null_mut()) != 0 {
+            panic!("sigaction(SIGFPE) failed: {}", std::io::Error::last_os_error());
+        }
+    }
+}
+
+// ---- the handler ----------------------------------------------------------
+
+/// First 8 instruction bytes (for the diagnostics ring).
+#[inline]
+fn first8(code: &[u8]) -> [u8; 8] {
+    let mut out = [0u8; 8];
+    out.copy_from_slice(&code[..8]);
+    out
+}
+
+extern "C" fn sigfpe_handler(
+    _sig: libc::c_int,
+    info: *mut libc::siginfo_t,
+    uc: *mut libc::c_void,
+) {
+    let t0 = rdtsc();
+    sigfpe_total.fetch_add(1, Ordering::Relaxed);
+
+    // Safety: kernel-provided pointers for this delivery.
+    let ctx = unsafe { SigContext::from_raw(uc) };
+
+    if !ARMED.load(Ordering::Relaxed) {
+        // Not our window (e.g. an integer division fault from unrelated
+        // code): restore default disposition and re-raise.
+        unexpected_si_code.fetch_add(1, Ordering::Relaxed);
+        unsafe {
+            let mut sa: libc::sigaction = std::mem::zeroed();
+            sa.sa_sigaction = libc::SIG_DFL;
+            libc::sigaction(libc::SIGFPE, &sa, std::ptr::null_mut());
+        }
+        return;
+    }
+
+    /// `FPE_FLTINV` (asm-generic/siginfo.h) — libc does not re-export it.
+    const FPE_FLTINV: libc::c_int = 7;
+    let si_code = unsafe { (*info).si_code };
+    // FPE_INTDIV etc. are not NaN events; only FPE_FLTINV is ours.
+    if si_code != FPE_FLTINV {
+        unexpected_si_code.fetch_add(1, Ordering::Relaxed);
+    }
+
+    let rip = ctx.rip();
+    LAST_RIP.store(rip, Ordering::Relaxed);
+
+    let mut region_buf: [MaybeUninit<Region>; MAX_REGIONS] =
+        unsafe { MaybeUninit::uninit().assume_init() };
+    let n = snapshot_regions(&mut region_buf);
+    // Safety: first n entries were just written.
+    let regions: &[Region] =
+        unsafe { std::slice::from_raw_parts(region_buf.as_ptr() as *const Region, n) };
+    let policy = armed_policy();
+    let mem_repair_on = MEMORY_REPAIR_ENABLED.load(Ordering::Relaxed);
+
+    // Read instruction bytes at RIP. Safety: RIP points into mapped,
+    // executing code of this process.
+    let code: &[u8] = unsafe { std::slice::from_raw_parts(rip as *const u8, 16) };
+
+    // give-up valve input: did this invocation repair/emulate anything?
+    let mut acted = false;
+    let mut act_mask: u32 = 0;
+    let mut repaired_addr: u64 = 0;
+
+    match decode_insn(code) {
+        Some(insn) => {
+            let width = insn.width;
+            // -- memory operand ------------------------------------------------
+            if let Some(mem) = insn.mem_operand() {
+                let ea = mem.effective_addr(&ctx.gprs(), rip + insn.len as u64);
+                // resolve policy value with the memory address for locality
+                let value = policy.resolve(Some(ea), regions);
+                if mem_repair_on {
+                    // direct repair at the recomputed effective address
+                    match memory::repair_at(regions, ea, width, value) {
+                        MemRepair::Repaired { lanes } => {
+                            memory_repairs_direct
+                                .fetch_add(lanes as u64, Ordering::Relaxed);
+                            acted = true;
+                            act_mask |= action::MEM_DIRECT;
+                            repaired_addr = ea;
+                        }
+                        MemRepair::OutsidePool | MemRepair::NotNan => {}
+                    }
+                } else if memory::nan_at(regions, ea, width) == Some(true) {
+                    // Register-only mode with the NaN *behind the memory
+                    // operand*: there is no register to repair, and the
+                    // paper's gdb prototype does not discuss this case.
+                    // We emulate the scalar op with the policy value and
+                    // skip the instruction — memory stays poisoned, so the
+                    // next read traps again (Table 3's "register" row).
+                    if emulate_and_skip(&ctx, &insn, value) {
+                        emulated_skips.fetch_add(1, Ordering::Relaxed);
+                        SAME_RIP_STREAK.store(0, Ordering::Relaxed);
+                        diagnostics::record(
+                            rip,
+                            first8(code),
+                            0,
+                            action::EMULATED,
+                        );
+                        ctx.clear_invalid_flag();
+                        trap_cycles_total
+                            .fetch_add(rdtsc().wrapping_sub(t0), Ordering::Relaxed);
+                        return;
+                    }
+                }
+            }
+            // -- register operands: repair + back-traced memory repair --------
+            for operand in [insn.dst, insn.src] {
+                let Operand::Xmm(r) = operand else { continue };
+                if !register::xmm_has_nan(&ctx, r, width) {
+                    continue;
+                }
+                // memory repair first (while the register still holds the
+                // NaN bits, in case the policy is positional)
+                if mem_repair_on {
+                    if let Some(addr) =
+                        backtraced_memory_repair(&ctx, rip, r, width, policy, regions)
+                    {
+                        act_mask |= action::MEM_BACKTRACED;
+                        repaired_addr = addr;
+                    }
+                }
+                let value = policy.resolve(None, regions);
+                let lanes = register::repair_xmm(&ctx, r, width, value);
+                register_repairs.fetch_add(lanes as u64, Ordering::Relaxed);
+                if lanes > 0 {
+                    acted = true;
+                    act_mask |= action::REG_REPAIR;
+                }
+            }
+        }
+        None => {
+            // Unknown instruction (e.g. AVX from a library): sweep all xmm
+            // registers for signaling NaNs at both widths.
+            decode_failures.fetch_add(1, Ordering::Relaxed);
+            let value = policy.resolve(None, regions);
+            let n64 = register::repair_all_xmm(&ctx, FpWidth::P64, value);
+            let n32 = if n64 == 0 {
+                register::repair_all_xmm(&ctx, FpWidth::P32, value)
+            } else {
+                0
+            };
+            fallback_sweep_repairs.fetch_add((n64 + n32) as u64, Ordering::Relaxed);
+            if n64 + n32 > 0 {
+                acted = true;
+                act_mask |= action::FALLBACK_SWEEP;
+            }
+        }
+    }
+
+    // Give-up valve: repeated traps *without any repair action* mean the
+    // NaN is invisible to us (e.g. an operand outside the armed pool, or
+    // an x87 path).  Mask the exception in the saved MXCSR so the thread
+    // continues un-trapped, and record it.  Successful repairs reset the
+    // streak — N legitimate traps at one instruction (register-only mode)
+    // are fine.
+    if acted {
+        SAME_RIP_STREAK.store(0, Ordering::Relaxed);
+    } else {
+        let streak = SAME_RIP_STREAK.fetch_add(1, Ordering::Relaxed) + 1;
+        if streak >= GIVE_UP_THRESHOLD {
+            gave_up.fetch_add(1, Ordering::Relaxed);
+            SAME_RIP_STREAK.store(0, Ordering::Relaxed);
+            ctx.mask_invalid();
+            act_mask |= action::GAVE_UP;
+        }
+    }
+    diagnostics::record(rip, first8(code), repaired_addr, act_mask);
+
+    ctx.clear_invalid_flag();
+    trap_cycles_total.fetch_add(rdtsc().wrapping_sub(t0), Ordering::Relaxed);
+}
+
+/// Register-only fallback for a NaN behind a memory operand: compute the
+/// scalar operation with `value` substituted for the memory operand, write
+/// the result to the destination register, and advance RIP past the
+/// instruction.  Returns false when the shape is not emulatable (packed,
+/// compare, non-xmm destination) — the give-up valve then bounds the loop.
+fn emulate_and_skip(ctx: &SigContext, insn: &crate::disasm::insn::Insn, value: f64) -> bool {
+    use crate::disasm::insn::FpOp;
+    let Operand::Xmm(dst) = insn.dst else {
+        return false;
+    };
+    let Some(lanes) = ctx.xmm(dst) else {
+        return false;
+    };
+    // run the substituted op under a default (all-masked) MXCSR so the
+    // emulation itself cannot fault (e.g. 0-policy + div → Inf, masked)
+    let saved = super::mxcsr::read();
+    super::mxcsr::write(super::mxcsr::MXCSR_DEFAULT);
+    let ok = match insn.width {
+        crate::disasm::insn::FpWidth::S64 => {
+            let a = f64::from_bits(lanes[0]);
+            let r = match insn.op {
+                FpOp::Add => a + value,
+                FpOp::Sub => a - value,
+                FpOp::Mul => a * value,
+                FpOp::Div => a / value,
+                FpOp::Min => a.min(value),
+                FpOp::Max => a.max(value),
+                FpOp::Sqrt => value.sqrt(),
+                FpOp::Mov => value,
+                _ => {
+                    super::mxcsr::write(saved);
+                    return false;
+                }
+            };
+            ctx.set_xmm_lane64(dst, 0, r.to_bits())
+        }
+        crate::disasm::insn::FpWidth::S32 => {
+            let a = f32::from_bits(lanes[0] as u32);
+            let v = value as f32;
+            let r = match insn.op {
+                FpOp::Add => a + v,
+                FpOp::Sub => a - v,
+                FpOp::Mul => a * v,
+                FpOp::Div => a / v,
+                FpOp::Min => a.min(v),
+                FpOp::Max => a.max(v),
+                FpOp::Sqrt => v.sqrt(),
+                FpOp::Mov => v,
+                _ => {
+                    super::mxcsr::write(saved);
+                    return false;
+                }
+            };
+            ctx.set_xmm_lane32(dst, 0, r.to_bits())
+        }
+        _ => false,
+    };
+    super::mxcsr::write(saved);
+    if ok {
+        ctx.set_rip(ctx.rip() + insn.len as u64);
+    }
+    ok
+}
+
+/// Paper §3.4: the NaN sits in a register; find its memory origin by
+/// back-tracing the enclosing function and patch it there.
+fn backtraced_memory_repair(
+    ctx: &SigContext,
+    rip: u64,
+    nan_xmm: u8,
+    // NB: the *mov*'s width (not the faulting op's) decides the patch size.
+    _fault_width: FpWidth,
+    policy: RepairPolicy,
+    regions: &[Region],
+) -> Option<u64> {
+    let Some(func) = functable::find(rip) else {
+        backtrace_not_found.fetch_add(1, Ordering::Relaxed);
+        return None;
+    };
+    // Safety: the function body is mapped executable memory.
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(func.start as *const u8, func.len()) };
+    match crate::disasm::backtrace_mov(bytes, func.start, rip, nan_xmm) {
+        BacktraceOutcome::Found { mov, mov_vaddr, mem } => {
+            let ea = mem.effective_addr(&ctx.gprs(), mov_vaddr + mov.len as u64);
+            let value = policy.resolve(Some(ea), regions);
+            match memory::repair_at(regions, ea, mov.width, value) {
+                MemRepair::Repaired { lanes } => {
+                    memory_repairs_backtraced.fetch_add(lanes as u64, Ordering::Relaxed);
+                    return Some(ea);
+                }
+                MemRepair::OutsidePool => {
+                    backtrace_outside_pool.fetch_add(1, Ordering::Relaxed);
+                }
+                MemRepair::NotNan => {
+                    backtrace_found_not_nan.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        BacktraceOutcome::NotFound(_) => {
+            backtrace_not_found.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    None
+}

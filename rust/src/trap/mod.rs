@@ -1,0 +1,43 @@
+//! In-process `SIGFPE` trap path — the paper's mechanism (Fig. 2) without
+//! the gdb middleman.
+//!
+//! The paper prototypes NaN repair by attaching gdb and stealing `SIGFPE`
+//! signals, noting (§3.2) that "this choice is not mandatory but for
+//! simplicity, and one can choose more general mechanisms such as the
+//! ptrace system call or modifying signal handlers of the OS".  This module
+//! is that production mechanism: a `sigaction(SA_SIGINFO)` handler in the
+//! workload process itself.
+//!
+//! * [`mxcsr`] — unmask the SSE invalid-operation exception so arithmetic
+//!   on a signaling NaN delivers `SIGFPE` (per-thread state).
+//! * [`context`] — safe accessors over the saved `ucontext_t` (GPRs, XMM
+//!   registers, MXCSR).
+//! * [`handler`] — the async-signal-safe repair handler: decode the
+//!   faulting instruction, repair NaN operands in registers
+//!   (paper §3.3) and at their main-memory origin (paper §3.4), resume.
+//! * [`guard`] — RAII arming/disarming around a protected compute region.
+//! * [`functable`] — the in-process function table (from `/proc/self/exe`)
+//!   used by the back-trace.
+
+pub mod context;
+pub mod diagnostics;
+pub mod functable;
+pub mod guard;
+pub mod handler;
+pub mod mxcsr;
+pub mod watchdog;
+
+pub use guard::{TrapConfig, TrapGuard};
+pub use handler::{stats_snapshot, TrapStats};
+
+use std::sync::{Mutex, MutexGuard};
+
+/// The SIGFPE handler and its armed state are process-global; tests and
+/// campaigns that arm the trap serialize on this lock.
+pub fn test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    match LOCK.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}

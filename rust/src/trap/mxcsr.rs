@@ -1,0 +1,85 @@
+//! MXCSR control: unmask/mask the SSE invalid-operation exception.
+//!
+//! MXCSR layout (Intel SDM):
+//! * bits 0..=5  — exception flags (IE, DE, ZE, OE, UE, PE)
+//! * bits 7..=12 — exception masks (IM, DM, ZM, OM, UM, PM); 1 = masked
+//!
+//! Unmasking IM (bit 7) makes any SSE instruction with an SNaN operand (or
+//! other invalid operation) raise `#IA` → `SIGFPE` with `FPE_FLTINV`.
+//! MXCSR is per-thread; arming only affects the calling thread.
+
+/// Invalid-operation flag (sticky status bit).
+pub const MXCSR_IE: u32 = 1 << 0;
+/// Invalid-operation mask bit (1 = masked / no trap).
+pub const MXCSR_IM: u32 = 1 << 7;
+/// Power-on default: all exceptions masked, no flags.
+pub const MXCSR_DEFAULT: u32 = 0x1f80;
+
+/// Read the current thread's MXCSR.
+#[inline]
+pub fn read() -> u32 {
+    let mut v: u32 = 0;
+    unsafe {
+        std::arch::asm!("stmxcsr [{}]", in(reg) &mut v, options(nostack));
+    }
+    v
+}
+
+/// Write the current thread's MXCSR.
+#[inline]
+pub fn write(v: u32) {
+    unsafe {
+        std::arch::asm!("ldmxcsr [{}]", in(reg) &v, options(nostack));
+    }
+}
+
+/// Unmask the invalid-operation exception (clears any pending IE flag
+/// first so stale status cannot fault). Returns the previous MXCSR.
+pub fn unmask_invalid() -> u32 {
+    let old = read();
+    write((old & !(MXCSR_IM | MXCSR_IE)) & !MXCSR_IE);
+    old
+}
+
+/// Restore a previously saved MXCSR value.
+pub fn restore(saved: u32) {
+    write(saved);
+}
+
+/// Whether invalid-operation traps are currently enabled on this thread.
+pub fn invalid_unmasked() -> bool {
+    read() & MXCSR_IM == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_roundtrip() {
+        let _guard = crate::trap::test_lock();
+        let orig = read();
+        // flip the underflow mask bit (harmless) and read back
+        write(orig ^ (1 << 11));
+        assert_eq!(read(), orig ^ (1 << 11));
+        write(orig);
+        assert_eq!(read(), orig);
+    }
+
+    #[test]
+    fn unmask_restore_cycle() {
+        let _guard = crate::trap::test_lock();
+        let orig = read();
+        let saved = unmask_invalid();
+        assert_eq!(saved & MXCSR_IM, orig & MXCSR_IM);
+        assert!(invalid_unmasked());
+        restore(saved);
+        assert_eq!(read() & MXCSR_IM, orig & MXCSR_IM);
+    }
+
+    #[test]
+    fn default_masks_all() {
+        assert_eq!(MXCSR_DEFAULT & MXCSR_IM, MXCSR_IM);
+        assert_eq!(MXCSR_DEFAULT & 0x3f, 0);
+    }
+}

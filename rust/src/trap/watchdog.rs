@@ -1,0 +1,200 @@
+//! Jolt-style progress watchdog (paper §6, Carbin et al. \[4\]).
+//!
+//! The paper names infinite loops as "another possible failure of programs
+//! by approximate computing besides occurrences of NaNs" and calls Jolt "a
+//! good candidate" for mitigating them.  This is that candidate,
+//! implemented for our campaigns: a monitor thread hashes a registered
+//! progress window (output buffer + an iteration counter) at a fixed
+//! period; if the hash is unchanged for `stall_periods` consecutive
+//! samples while the workload is still marked running, the run is declared
+//! stalled and a flag is raised that the workload's loop can poll (and the
+//! coordinator records).
+//!
+//! Unlike Jolt we do not force an escape (no safe way to longjmp a
+//! paused thread in general); the contract is cooperative: hot loops call
+//! [`WatchdogHandle::should_abort`] at iteration boundaries — free when
+//! the watchdog is quiet, exactly one atomic load.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// FNV-1a over a byte window — cheap, good enough for change detection.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Shared state between the monitored loop and the watchdog thread.
+#[derive(Debug)]
+struct Shared {
+    /// Address/len of the progress window (the workload's output buffer).
+    addr: AtomicU64,
+    len: AtomicU64,
+    /// Iteration ticker the loop bumps (also hashed).
+    ticks: AtomicU64,
+    running: AtomicBool,
+    stalled: AtomicBool,
+}
+
+/// Handle given to the monitored workload.
+#[derive(Debug, Clone)]
+pub struct WatchdogHandle {
+    shared: Arc<Shared>,
+}
+
+impl WatchdogHandle {
+    /// Bump the progress ticker (call once per outer iteration).
+    #[inline]
+    pub fn tick(&self) {
+        self.shared.ticks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Has the watchdog declared this run stalled?
+    #[inline]
+    pub fn should_abort(&self) -> bool {
+        self.shared.stalled.load(Ordering::Relaxed)
+    }
+}
+
+/// The watchdog: owns the monitor thread.
+pub struct Watchdog {
+    shared: Arc<Shared>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Watchdog {
+    /// Start monitoring `window` (read-only) every `period`; declare a
+    /// stall after `stall_periods` unchanged samples.
+    ///
+    /// # Safety contract
+    /// `window` must stay valid until the watchdog is stopped/dropped.
+    pub fn start(window: &[f64], period: Duration, stall_periods: u32) -> (Self, WatchdogHandle) {
+        let shared = Arc::new(Shared {
+            addr: AtomicU64::new(window.as_ptr() as u64),
+            len: AtomicU64::new((window.len() * 8) as u64),
+            ticks: AtomicU64::new(0),
+            running: AtomicBool::new(true),
+            stalled: AtomicBool::new(false),
+        });
+        let handle = WatchdogHandle {
+            shared: shared.clone(),
+        };
+        let shared2 = shared.clone();
+        let thread = std::thread::spawn(move || {
+            let mut last_hash = 0u64;
+            let mut unchanged = 0u32;
+            while shared2.running.load(Ordering::Relaxed) {
+                std::thread::sleep(period);
+                if !shared2.running.load(Ordering::Relaxed) {
+                    break;
+                }
+                let addr = shared2.addr.load(Ordering::Relaxed) as *const u8;
+                let len = shared2.len.load(Ordering::Relaxed) as usize;
+                // Safety: caller's contract — window outlives the watchdog.
+                let bytes = unsafe { std::slice::from_raw_parts(addr, len) };
+                let mut h = fnv1a(bytes);
+                h ^= shared2.ticks.load(Ordering::Relaxed).wrapping_mul(0x9e37_79b9);
+                if h == last_hash {
+                    unchanged += 1;
+                    if unchanged >= stall_periods {
+                        shared2.stalled.store(true, Ordering::Relaxed);
+                    }
+                } else {
+                    unchanged = 0;
+                    last_hash = h;
+                }
+            }
+        });
+        (
+            Self {
+                shared,
+                thread: Some(thread),
+            },
+            handle,
+        )
+    }
+
+    pub fn stalled(&self) -> bool {
+        self.shared.stalled.load(Ordering::Relaxed)
+    }
+
+    /// Stop the monitor thread.
+    pub fn stop(mut self) -> bool {
+        let stalled = self.stalled();
+        self.shared.running.store(false, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        stalled
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.shared.running.store(false, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn progressing_loop_not_flagged() {
+        let mut buf = vec![0.0f64; 64];
+        let (dog, handle) = Watchdog::start(&buf, Duration::from_millis(5), 3);
+        for i in 0..20 {
+            buf[i % 64] += 1.0;
+            handle.tick();
+            std::thread::sleep(Duration::from_millis(2));
+            assert!(!handle.should_abort(), "iteration {i}");
+        }
+        assert!(!dog.stop());
+    }
+
+    #[test]
+    fn stalled_loop_detected() {
+        let buf = vec![1.5f64; 64];
+        let (dog, handle) = Watchdog::start(&buf, Duration::from_millis(4), 4);
+        // simulate a stuck loop: no ticks, no buffer writes
+        let t0 = std::time::Instant::now();
+        while !handle.should_abort() {
+            std::thread::sleep(Duration::from_millis(2));
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "watchdog never fired"
+            );
+        }
+        assert!(dog.stop());
+    }
+
+    #[test]
+    fn ticks_alone_count_as_progress() {
+        // an iteration counter advancing without output changes (e.g. a
+        // solver in a plateau) is still progress
+        let buf = vec![2.0f64; 16];
+        let (dog, handle) = Watchdog::start(&buf, Duration::from_millis(4), 4);
+        for _ in 0..30 {
+            handle.tick();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(!handle.should_abort());
+        assert!(!dog.stop());
+    }
+
+    #[test]
+    fn fnv_distinguishes_buffers() {
+        let a = [0u8, 1, 2, 3];
+        let b = [0u8, 1, 2, 4];
+        assert_ne!(super::fnv1a(&a), super::fnv1a(&b));
+        assert_eq!(super::fnv1a(&a), super::fnv1a(&a));
+    }
+}

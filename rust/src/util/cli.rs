@@ -1,0 +1,309 @@
+//! Minimal declarative CLI parser (clap is unavailable offline).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] [--key=value]
+//! [positional...]` with typed accessors, defaults, and generated help.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Specification of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Specification of a subcommand.
+#[derive(Debug, Clone)]
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl CmdSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default,
+        });
+        self
+    }
+}
+
+/// Parsed arguments of a matched subcommand.
+#[derive(Debug, Clone)]
+pub struct Matches {
+    pub cmd: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get_str(name)?;
+        raw.parse::<T>()
+            .map_err(|e| anyhow!("--{name}={raw}: {e}"))
+    }
+
+    /// Parse a comma-separated list.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get_str(name)?;
+        raw.split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse::<T>()
+                    .map_err(|e| anyhow!("--{name} item {s:?}: {e}"))
+            })
+            .collect()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// An application: a set of subcommands.
+#[derive(Debug, Clone)]
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub cmds: Vec<CmdSpec>,
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            cmds: Vec::new(),
+        }
+    }
+
+    pub fn cmd(mut self, c: CmdSpec) -> Self {
+        self.cmds.push(c);
+        self
+    }
+
+    pub fn help(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(out, "USAGE: {} <command> [options]\n", self.name);
+        let _ = writeln!(out, "COMMANDS:");
+        let w = self.cmds.iter().map(|c| c.name.len()).max().unwrap_or(0);
+        for c in &self.cmds {
+            let _ = writeln!(out, "  {:<w$}  {}", c.name, c.about, w = w);
+        }
+        let _ = writeln!(out, "\nRun '{} <command> --help' for options.", self.name);
+        out
+    }
+
+    pub fn cmd_help(&self, cmd: &CmdSpec) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} {} — {}\n", self.name, cmd.name, cmd.about);
+        let _ = writeln!(out, "OPTIONS:");
+        for o in &cmd.opts {
+            let mut left = format!("--{}", o.name);
+            if o.takes_value {
+                left.push_str(" <v>");
+            }
+            let _ = write!(out, "  {:<24} {}", left, o.help);
+            if let Some(d) = o.default {
+                let _ = write!(out, " [default: {d}]");
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+
+    /// Parse argv (not including argv\[0\]). Returns Err with a help/usage
+    /// message on any problem; `Ok(None)` means help was requested.
+    pub fn parse(&self, argv: &[String]) -> Result<Option<Matches>> {
+        let Some(cmd_name) = argv.first() else {
+            bail!("{}", self.help());
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            print!("{}", self.help());
+            return Ok(None);
+        }
+        let cmd = self
+            .cmds
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .with_context(|| format!("unknown command {cmd_name:?}\n{}", self.help()))?;
+
+        let mut m = Matches {
+            cmd: cmd.name.to_string(),
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            positionals: Vec::new(),
+        };
+        for o in &cmd.opts {
+            if let Some(d) = o.default {
+                m.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                print!("{}", self.cmd_help(cmd));
+                return Ok(None);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .with_context(|| {
+                        format!("unknown option --{key} for {}\n{}", cmd.name, self.cmd_help(cmd))
+                    })?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow!("--{key} requires a value"))?
+                        }
+                    };
+                    m.values.insert(key.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        bail!("--{key} does not take a value");
+                    }
+                    m.flags.insert(key.to_string(), true);
+                }
+            } else {
+                m.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Some(m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("t", "test app").cmd(
+            CmdSpec::new("run", "run something")
+                .opt("n", Some("100"), "size")
+                .opt("name", None, "a name")
+                .flag("verbose", "talk more"),
+        )
+    }
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let m = app().parse(&args(&["run"])).unwrap().unwrap();
+        assert_eq!(m.get_parse::<usize>("n").unwrap(), 100);
+        assert!(!m.flag("verbose"));
+
+        let m = app()
+            .parse(&args(&["run", "--n", "5", "--verbose"]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(m.get_parse::<usize>("n").unwrap(), 5);
+        assert!(m.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form_and_positionals() {
+        let m = app()
+            .parse(&args(&["run", "--n=7", "pos1", "pos2"]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(m.get_parse::<usize>("n").unwrap(), 7);
+        assert_eq!(m.positionals, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn missing_required_option_errors_on_access() {
+        let m = app().parse(&args(&["run"])).unwrap().unwrap();
+        assert!(m.get_str("name").is_err());
+    }
+
+    #[test]
+    fn unknown_command_and_option_error() {
+        assert!(app().parse(&args(&["zap"])).is_err());
+        assert!(app().parse(&args(&["run", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = App::new("t", "x").cmd(CmdSpec::new("s", "s").opt(
+            "sizes",
+            Some("1,2,3"),
+            "sizes",
+        ));
+        let m = a.parse(&args(&["s"])).unwrap().unwrap();
+        assert_eq!(m.get_list::<usize>("sizes").unwrap(), vec![1, 2, 3]);
+        let m = a.parse(&args(&["s", "--sizes", "10, 20"])).unwrap().unwrap();
+        assert_eq!(m.get_list::<usize>("sizes").unwrap(), vec![10, 20]);
+    }
+
+    #[test]
+    fn value_flag_misuse() {
+        assert!(app().parse(&args(&["run", "--verbose=1"])).is_err());
+        assert!(app().parse(&args(&["run", "--n"])).is_err());
+    }
+}

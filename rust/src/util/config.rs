@@ -1,0 +1,173 @@
+//! Key = value configuration files (serde/toml unavailable offline).
+//!
+//! Format: one `key = value` per line, `#` comments, `[section]` headers
+//! flatten to `section.key`.  Typed accessors mirror [`super::cli::Matches`].
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A flat, typed view of a config file.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                section = name.to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{}.{}", section, k.trim())
+            };
+            if values
+                .insert(key.clone(), v.trim().trim_matches('"').to_string())
+                .is_some()
+            {
+                return Err(anyhow!("line {}: duplicate key {key}", lineno + 1));
+            }
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing config {}", path.display()))
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|e| anyhow!("config {key}={raw}: {e}")),
+        }
+    }
+
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .get(key)
+            .ok_or_else(|| anyhow!("config key {key} is required"))?;
+        raw.parse::<T>()
+            .map_err(|e| anyhow!("config {key}={raw}: {e}"))
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") | Some("on") => Ok(true),
+            Some("false") | Some("0") | Some("no") | Some("off") => Ok(false),
+            Some(x) => Err(anyhow!("config {key}={x}: expected a boolean")),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# campaign config
+seed = 42
+ber = 1e-7
+
+[workload]
+kind = "matmul"   # trailing comment
+n = 2048
+
+[energy]
+refresh_ms = 256
+"#;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.require::<u64>("seed").unwrap(), 42);
+        assert_eq!(c.require::<f64>("ber").unwrap(), 1e-7);
+        assert_eq!(c.get("workload.kind"), Some("matmul"));
+        assert_eq!(c.require::<usize>("workload.n").unwrap(), 2048);
+        assert_eq!(c.require::<u64>("energy.refresh_ms").unwrap(), 256);
+        assert_eq!(c.len(), 5);
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let c = Config::parse("a = 1").unwrap();
+        assert_eq!(c.get_or("missing", 7usize).unwrap(), 7);
+        assert!(c.require::<usize>("missing").is_err());
+    }
+
+    #[test]
+    fn bools() {
+        let c = Config::parse("x = true\ny = off\nz = banana").unwrap();
+        assert!(c.get_bool("x", false).unwrap());
+        assert!(!c.get_bool("y", true).unwrap());
+        assert!(c.get_bool("z", true).is_err());
+        assert!(c.get_bool("none", true).unwrap());
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn type_errors_carry_key() {
+        let c = Config::parse("n = notanumber").unwrap();
+        let err = c.require::<usize>("n").unwrap_err().to_string();
+        assert!(err.contains("n=notanumber"), "{err}");
+    }
+}

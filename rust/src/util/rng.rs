@@ -1,0 +1,298 @@
+//! Deterministic, seedable PRNG (PCG-XSH-RR 64/32 and a 64-bit output
+//! variant) implementing `rand_core::RngCore`.
+//!
+//! Fault-injection campaigns must be exactly reproducible from a seed; the
+//! full `rand` crate is unavailable offline, so this is our own PCG
+//! implementation (O'Neill 2014) on top of `rand_core`.
+
+use rand_core::{impls, Error, RngCore, SeedableRng};
+
+const MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+const INC: u128 = 0x5851_f42d_4c95_7f2d_1405_7b7e_f767_814f;
+
+/// PCG-XSL-RR 128/64: 128-bit state, 64-bit output. Passes BigCrush.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+}
+
+impl Pcg64 {
+    /// Create from a 64-bit seed (stream fixed).
+    pub fn seed(seed: u64) -> Self {
+        let mut rng = Self {
+            state: (seed as u128).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        };
+        // burn a few to decorrelate trivially-related seeds
+        rng.state = rng.state.wrapping_add(INC);
+        rng.next_u64();
+        rng.next_u64();
+        rng
+    }
+
+    #[inline]
+    fn step(&mut self) -> u128 {
+        let s = self.state;
+        self.state = s.wrapping_mul(MULT).wrapping_add(INC);
+        s
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform u64 in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize index in [0, n).
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Sample from Binomial(n, p). Exact inversion for small n·p, normal
+    /// approximation with continuity correction for large (campaigns flip
+    /// millions of bits; exact sampling would dominate runtime).
+    pub fn binomial(&mut self, n: u64, p: f64) -> u64 {
+        if p <= 0.0 || n == 0 {
+            return 0;
+        }
+        if p >= 1.0 {
+            return n;
+        }
+        let mean = n as f64 * p;
+        if mean < 32.0 && n < 100_000 {
+            // BTRS-free simple inversion via repeated geometric skips
+            let mut count = 0u64;
+            let mut i = 0u64;
+            let log_q = (1.0 - p).ln();
+            loop {
+                let u = self.next_f64().max(f64::MIN_POSITIVE);
+                let skip = (u.ln() / log_q).floor() as u64;
+                i = i.saturating_add(skip).saturating_add(1);
+                if i > n {
+                    return count;
+                }
+                count += 1;
+            }
+        } else {
+            // normal approximation
+            let sd = (mean * (1.0 - p)).sqrt();
+            let g = self.gaussian();
+            let x = (mean + sd * g + 0.5).floor();
+            x.clamp(0.0, n as f64) as u64
+        }
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = self.next_f64().max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (k << n assumed; rejection).
+    pub fn distinct_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        if k * 3 > n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            return all;
+        }
+        let mut seen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        while out.len() < k {
+            let i = self.index(n);
+            if seen.insert(i) {
+                out.push(i);
+            }
+        }
+        out
+    }
+}
+
+impl RngCore for Pcg64 {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        self.next_u64() as u32
+    }
+
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        let s = self.step();
+        // XSL-RR output function
+        let xored = ((s >> 64) as u64) ^ (s as u64);
+        let rot = (s >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    fn fill_bytes(&mut self, dest: &mut [u8]) {
+        impls::fill_bytes_via_next(self, dest)
+    }
+
+    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), Error> {
+        self.fill_bytes(dest);
+        Ok(())
+    }
+}
+
+impl SeedableRng for Pcg64 {
+    type Seed = [u8; 8];
+
+    fn from_seed(seed: Self::Seed) -> Self {
+        Self::seed(u64::from_le_bytes(seed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Pcg64::seed(42);
+        let mut b = Pcg64::seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg64::seed(1);
+        let mut b = Pcg64::seed(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::seed(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Pcg64::seed(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10);
+            assert!(x < 10);
+            seen[x as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues hit");
+    }
+
+    #[test]
+    fn chance_frequency() {
+        let mut r = Pcg64::seed(11);
+        let hits = (0..100_000).filter(|_| r.chance(0.25)).count();
+        let freq = hits as f64 / 100_000.0;
+        assert!((freq - 0.25).abs() < 0.01, "freq={freq}");
+    }
+
+    #[test]
+    fn binomial_mean_small_regime() {
+        let mut r = Pcg64::seed(5);
+        let n = 1000u64;
+        let p = 0.01;
+        let trials = 2000;
+        let total: u64 = (0..trials).map(|_| r.binomial(n, p)).sum();
+        let mean = total as f64 / trials as f64;
+        assert!((mean - 10.0).abs() < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn binomial_mean_large_regime() {
+        let mut r = Pcg64::seed(6);
+        let n = 10_000_000u64;
+        let p = 1e-4; // mean 1000 → normal path
+        let trials = 500;
+        let total: u64 = (0..trials).map(|_| r.binomial(n, p)).sum();
+        let mean = total as f64 / trials as f64;
+        assert!((mean - 1000.0).abs() < 10.0, "mean={mean}");
+    }
+
+    #[test]
+    fn binomial_edges() {
+        let mut r = Pcg64::seed(9);
+        assert_eq!(r.binomial(100, 0.0), 0);
+        assert_eq!(r.binomial(100, 1.0), 100);
+        assert_eq!(r.binomial(0, 0.5), 0);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::seed(13);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seed(17);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn distinct_indices_distinct_and_bounded() {
+        let mut r = Pcg64::seed(19);
+        for (n, k) in [(100, 5), (10, 9), (1000, 0), (4, 4)] {
+            let idx = r.distinct_indices(n, k);
+            assert_eq!(idx.len(), k);
+            let set: std::collections::HashSet<_> = idx.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(idx.iter().all(|&i| i < n));
+        }
+    }
+}

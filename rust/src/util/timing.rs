@@ -1,0 +1,136 @@
+//! Timing helpers: wall clock, and serialized `rdtsc` for cycle-level
+//! measurement of the trap path (a single SIGFPE round trip is ~µs; Instant
+//! has enough resolution but rdtsc avoids the vDSO call inside handlers and
+//! is async-signal-safe).
+
+use std::time::Instant;
+
+/// Serialized timestamp counter read (lfence;rdtsc). Async-signal-safe.
+#[inline]
+pub fn rdtsc() -> u64 {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        let lo: u32;
+        let hi: u32;
+        std::arch::asm!(
+            "lfence",
+            "rdtsc",
+            out("eax") lo,
+            out("edx") hi,
+            options(nomem, nostack)
+        );
+        ((hi as u64) << 32) | lo as u64
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        // fallback: nanoseconds since an arbitrary epoch
+        use std::time::{SystemTime, UNIX_EPOCH};
+        SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .unwrap()
+            .as_nanos() as u64
+    }
+}
+
+/// Estimate the TSC frequency in Hz by spinning for ~20 ms.
+/// Cached after the first call.
+pub fn tsc_hz() -> f64 {
+    use std::sync::OnceLock;
+    static HZ: OnceLock<f64> = OnceLock::new();
+    *HZ.get_or_init(|| {
+        let t0 = Instant::now();
+        let c0 = rdtsc();
+        while t0.elapsed().as_millis() < 20 {
+            std::hint::spin_loop();
+        }
+        let cycles = rdtsc().wrapping_sub(c0) as f64;
+        cycles / t0.elapsed().as_secs_f64()
+    })
+}
+
+/// Convert a TSC delta to seconds.
+pub fn tsc_to_secs(delta: u64) -> f64 {
+    delta as f64 / tsc_hz()
+}
+
+/// Time a closure with the wall clock; returns (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// A scoped stopwatch accumulating into a named bucket; used by the
+/// coordinator's metrics registry.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    total_secs: f64,
+    laps: u64,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn lap<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let (out, secs) = time_it(f);
+        self.total_secs += secs;
+        self.laps += 1;
+        out
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.total_secs
+    }
+
+    pub fn laps(&self) -> u64 {
+        self.laps
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        if self.laps == 0 {
+            0.0
+        } else {
+            self.total_secs / self.laps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rdtsc_monotonic_nondecreasing() {
+        let a = rdtsc();
+        let b = rdtsc();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn tsc_hz_plausible() {
+        let hz = tsc_hz();
+        // Any machine this runs on is between 500 MHz and 10 GHz.
+        assert!(hz > 5e8 && hz < 1e10, "hz={hz}");
+    }
+
+    #[test]
+    fn tsc_measures_sleep_roughly() {
+        let c0 = rdtsc();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let dt = tsc_to_secs(rdtsc().wrapping_sub(c0));
+        assert!(dt > 0.008 && dt < 0.5, "dt={dt}");
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        let x = sw.lap(|| 21 * 2);
+        assert_eq!(x, 42);
+        sw.lap(|| std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert_eq!(sw.laps(), 2);
+        assert!(sw.total_secs() > 0.0005);
+        assert!(sw.mean_secs() > 0.0);
+    }
+}

@@ -1,0 +1,239 @@
+//! Conjugate-gradient solver — the second iterative-HPC workload class
+//! (the paper cites LetGo's HPC suite, which is CG-heavy).  CG is *less*
+//! NaN-tolerant than Jacobi: its α/β scalars are global dot-product
+//! ratios, so one NaN poisons the whole search direction within a single
+//! iteration — a sharper test for reactive repair than the stencil.
+
+use crate::approxmem::pool::{ApproxBuf, ApproxPool};
+use crate::util::rng::Pcg64;
+
+use super::{kernels, Workload};
+
+pub struct Cg {
+    n: usize,
+    iters: usize,
+    seed: u64,
+    a: ApproxBuf<f64>,
+    b: ApproxBuf<f64>,
+    x: ApproxBuf<f64>,
+    r: ApproxBuf<f64>,
+    p: ApproxBuf<f64>,
+    ap: ApproxBuf<f64>,
+}
+
+impl Cg {
+    pub fn new(pool: &ApproxPool, n: usize, iters: usize, seed: u64) -> Self {
+        let mut w = Self {
+            n,
+            iters,
+            seed,
+            a: pool.alloc_f64(n * n),
+            b: pool.alloc_f64(n),
+            x: pool.alloc_f64(n),
+            r: pool.alloc_f64(n),
+            p: pool.alloc_f64(n),
+            ap: pool.alloc_f64(n),
+        };
+        w.reset();
+        w
+    }
+
+    fn fill(seed: u64, n: usize, a: &mut [f64], b: &mut [f64]) {
+        // SPD matrix: A = M + n·I with M symmetric small
+        let mut rng = Pcg64::seed(seed ^ 0x6367000000000000);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.range_f64(-0.5, 0.5);
+                a[i * n + j] = v;
+                a[j * n + i] = v;
+            }
+        }
+        for i in 0..n {
+            a[i * n + i] += n as f64;
+        }
+        for v in b.iter_mut() {
+            *v = rng.range_f64(-1.0, 1.0);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn solve(
+        n: usize,
+        iters: usize,
+        a: &[f64],
+        b: &[f64],
+        x: &mut [f64],
+        r: &mut [f64],
+        p: &mut [f64],
+        ap: &mut [f64],
+    ) {
+        x.fill(0.0);
+        r.copy_from_slice(b);
+        p.copy_from_slice(b);
+        let mut rs = kernels::ddot(r, r, n);
+        for _ in 0..iters {
+            for i in 0..n {
+                ap[i] = unsafe { kernels::ddot_raw(a[i * n..].as_ptr(), p.as_ptr(), n) };
+            }
+            let denom = kernels::ddot(p, ap, n);
+            if denom == 0.0 || !denom.is_finite() {
+                break;
+            }
+            let alpha = rs / denom;
+            kernels::daxpy(alpha, p, x);
+            kernels::daxpy(-alpha, ap, r);
+            let rs2 = kernels::ddot(r, r, n);
+            if rs2 < 1e-24 {
+                break;
+            }
+            let beta = rs2 / rs;
+            for i in 0..n {
+                p[i] = r[i] + beta * p[i];
+            }
+            rs = rs2;
+        }
+    }
+
+    /// ‖A·x − b‖₂ of the current solution.
+    pub fn residual(&self) -> f64 {
+        let n = self.n;
+        let mut acc = 0.0;
+        for i in 0..n {
+            let ax = unsafe {
+                kernels::ddot_raw(self.a.as_slice()[i * n..].as_ptr(), self.x.as_ptr(), n)
+            };
+            let d = ax - self.b[i];
+            acc += d * d;
+        }
+        acc.sqrt()
+    }
+
+    pub fn a_buf_mut(&mut self) -> &mut ApproxBuf<f64> {
+        &mut self.a
+    }
+}
+
+impl Workload for Cg {
+    fn name(&self) -> &'static str {
+        "cg"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn reset(&mut self) {
+        let n = self.n;
+        Self::fill(self.seed, n, self.a.as_mut_slice(), self.b.as_mut_slice());
+        self.x.as_mut_slice().fill(0.0);
+    }
+
+    fn run(&mut self) {
+        let n = self.n;
+        let a = unsafe { std::slice::from_raw_parts(self.a.as_ptr(), n * n) };
+        let b = unsafe { std::slice::from_raw_parts(self.b.as_ptr(), n) };
+        let x = unsafe { std::slice::from_raw_parts_mut(self.x.as_mut_ptr(), n) };
+        let r = unsafe { std::slice::from_raw_parts_mut(self.r.as_mut_ptr(), n) };
+        let p = unsafe { std::slice::from_raw_parts_mut(self.p.as_mut_ptr(), n) };
+        Self::solve(n, self.iters, a, b, x, r, p, self.ap.as_mut_slice());
+    }
+
+    fn input_len(&self) -> usize {
+        self.n * self.n + self.n
+    }
+
+    fn poison_input(&mut self, flat_idx: usize, bits: u64) -> usize {
+        let nn = self.n * self.n;
+        if flat_idx < nn {
+            self.a[flat_idx] = f64::from_bits(bits);
+            self.a.addr() + flat_idx * 8
+        } else {
+            let i = (flat_idx - nn) % self.n;
+            self.b[i] = f64::from_bits(bits);
+            self.b.addr() + i * 8
+        }
+    }
+
+    fn output(&self) -> Vec<f64> {
+        self.x.as_slice().to_vec()
+    }
+
+    fn reference(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut a = vec![0.0; n * n];
+        let mut b = vec![0.0; n];
+        Self::fill(self.seed, n, &mut a, &mut b);
+        let mut x = vec![0.0; n];
+        let mut r = vec![0.0; n];
+        let mut p = vec![0.0; n];
+        let mut ap = vec![0.0; n];
+        Self::solve(n, self.iters, &a, &b, &mut x, &mut r, &mut p, &mut ap);
+        x
+    }
+
+    fn flops(&self) -> u64 {
+        (self.iters as u64) * (2 * (self.n as u64).pow(2) + 10 * self.n as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_spd_system() {
+        let pool = ApproxPool::new();
+        let mut w = Cg::new(&pool, 48, 60, 3);
+        w.run();
+        assert!(w.residual() < 1e-6, "residual {}", w.residual());
+    }
+
+    #[test]
+    fn nan_in_a_kills_unprotected_cg_in_one_iteration() {
+        let pool = ApproxPool::new();
+        let mut w = Cg::new(&pool, 24, 8, 5);
+        w.a_buf_mut()[3 * 24 + 7] = f64::NAN;
+        w.run();
+        // the alpha ratio poisons the very first iteration: either x is
+        // non-finite, or CG bailed at iteration 0 leaving a large/NaN
+        // residual (note: a NaN residual compares false with `>`).
+        let res = w.residual();
+        assert!(
+            w.output().iter().any(|v| !v.is_finite()) || !(res < 1.0),
+            "CG should be visibly damaged by an unrepaired NaN (residual {res})"
+        );
+    }
+
+    #[test]
+    fn survives_nan_under_guard() {
+        let _l = crate::trap::test_lock();
+        let pool = ApproxPool::new();
+        let mut w = Cg::new(&pool, 24, 40, 7);
+        use crate::workloads::Workload as _;
+        w.poison_input(3 * 24 + 7, crate::fp::nan::PAPER_NAN_BITS);
+        let guard = crate::trap::TrapGuard::arm(
+            &pool,
+            &crate::trap::TrapConfig {
+                policy: crate::repair::policy::RepairPolicy::Zero,
+                memory_repair: true,
+            },
+        );
+        guard.reset_stats();
+        w.run();
+        let stats = guard.stats();
+        drop(guard);
+        assert!(stats.sigfpe_total >= 1);
+        assert!(w.output().iter().all(|v| v.is_finite()));
+        assert!(w.residual() < 1e-4, "residual {}", w.residual());
+    }
+
+    #[test]
+    fn deterministic() {
+        let pool = ApproxPool::new();
+        let mut w1 = Cg::new(&pool, 32, 30, 9);
+        let mut w2 = Cg::new(&pool, 32, 30, 9);
+        w1.run();
+        w2.run();
+        assert_eq!(w1.output(), w2.output());
+    }
+}

@@ -1,0 +1,251 @@
+//! LU decomposition with partial pivoting — the paper's §5.2 hazard case:
+//! repairing a NaN to 0 can later put a 0 on the diagonal *after* pivot
+//! selection has already passed it, producing a division by zero.  The
+//! policy-ablation experiment uses this workload to quantify that hazard.
+
+use crate::approxmem::pool::{ApproxBuf, ApproxPool};
+use crate::util::rng::Pcg64;
+
+use super::{kernels, Workload};
+
+pub struct Lu {
+    n: usize,
+    seed: u64,
+    /// In-place LU factors (A is overwritten).
+    a: ApproxBuf<f64>,
+    /// Pivot permutation.
+    piv: Vec<usize>,
+}
+
+impl Lu {
+    pub fn new(pool: &ApproxPool, n: usize, seed: u64) -> Self {
+        let mut w = Self {
+            n,
+            seed,
+            a: pool.alloc_f64(n * n),
+            piv: (0..n).collect(),
+        };
+        w.reset();
+        w
+    }
+
+    fn fill(seed: u64, n: usize, a: &mut [f64]) {
+        let mut rng = Pcg64::seed(seed ^ 0x6c75000000000000);
+        for v in a.iter_mut() {
+            *v = rng.range_f64(-1.0, 1.0);
+        }
+        // nudge the diagonal away from 0 to keep condition numbers sane
+        for i in 0..n {
+            a[i * n + i] += if a[i * n + i] >= 0.0 { 2.0 } else { -2.0 };
+        }
+    }
+
+    fn factor(n: usize, a: &mut [f64], piv: &mut [usize]) {
+        for (i, p) in piv.iter_mut().enumerate() {
+            *p = i;
+        }
+        for k in 0..n {
+            // partial pivot: largest |a[i][k]| for i >= k
+            let mut best = k;
+            let mut best_val = a[k * n + k].abs();
+            for i in (k + 1)..n {
+                let v = a[i * n + k].abs();
+                if v > best_val {
+                    best = i;
+                    best_val = v;
+                }
+            }
+            if best != k {
+                piv.swap(k, best);
+                for j in 0..n {
+                    a.swap(k * n + j, best * n + j);
+                }
+            }
+            let pivot = a[k * n + k];
+            for i in (k + 1)..n {
+                let m = a[i * n + k] / pivot;
+                a[i * n + k] = m;
+                // row update: a[i][k+1..] -= m * a[k][k+1..] via daxpy
+                let (head, tail) = a.split_at_mut((i) * n);
+                let krow = &head[k * n + k + 1..k * n + n];
+                let irow = &mut tail[k + 1..n];
+                kernels::daxpy(-m, krow, irow);
+            }
+        }
+    }
+
+    /// Determinant from the factors (paper Fig. 1 uses the determinant as
+    /// its NaN-amplification example).
+    pub fn determinant(&self) -> f64 {
+        let mut det = 1.0;
+        for i in 0..self.n {
+            det *= self.a[i * self.n + i];
+        }
+        // sign from permutation parity
+        let mut seen = vec![false; self.n];
+        let mut swaps = 0;
+        for start in 0..self.n {
+            if seen[start] {
+                continue;
+            }
+            let mut len = 0;
+            let mut i = start;
+            while !seen[i] {
+                seen[i] = true;
+                i = self.piv[i];
+                len += 1;
+            }
+            swaps += len - 1;
+        }
+        if swaps % 2 == 1 {
+            -det
+        } else {
+            det
+        }
+    }
+
+    pub fn a_mut(&mut self) -> &mut ApproxBuf<f64> {
+        &mut self.a
+    }
+}
+
+impl Workload for Lu {
+    fn name(&self) -> &'static str {
+        "lu"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn reset(&mut self) {
+        Self::fill(self.seed, self.n, self.a.as_mut_slice());
+        self.piv = (0..self.n).collect();
+    }
+
+    fn run(&mut self) {
+        let n = self.n;
+        Self::factor(n, self.a.as_mut_slice(), &mut self.piv);
+    }
+
+    fn input_len(&self) -> usize {
+        self.n * self.n
+    }
+
+    fn poison_input(&mut self, flat_idx: usize, bits: u64) -> usize {
+        let i = flat_idx % (self.n * self.n);
+        self.a[i] = f64::from_bits(bits);
+        self.a.addr() + i * 8
+    }
+
+    fn output(&self) -> Vec<f64> {
+        self.a.as_slice().to_vec()
+    }
+
+    fn reference(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut a = vec![0.0; n * n];
+        Self::fill(self.seed, n, &mut a);
+        let mut piv: Vec<usize> = (0..n).collect();
+        Self::factor(n, &mut a, &mut piv);
+        a
+    }
+
+    fn flops(&self) -> u64 {
+        (2 * (self.n as u64).pow(3)) / 3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reconstruct P·A from L·U and compare to the original matrix.
+    fn check_factorization(n: usize, seed: u64) {
+        let pool = ApproxPool::new();
+        let mut w = Lu::new(&pool, n, seed);
+        let mut orig = vec![0.0; n * n];
+        Lu::fill(seed, n, &mut orig);
+        w.run();
+        let lu = w.output();
+        for i in 0..n {
+            for j in 0..n {
+                // (L·U)[i][j]
+                let mut acc = 0.0;
+                for k in 0..=i.min(j) {
+                    let l = if k == i { 1.0 } else { lu[i * n + k] };
+                    let u = lu[k * n + j];
+                    if k <= j && k <= i {
+                        acc += if k == i && k <= j { u } else { l * u };
+                    }
+                }
+                // standard: (LU)ij = Σ_k L[i][k]·U[k][j], L unit lower
+                let mut acc2 = 0.0;
+                for k in 0..n {
+                    let l = if k < i {
+                        lu[i * n + k]
+                    } else if k == i {
+                        1.0
+                    } else {
+                        0.0
+                    };
+                    let u = if k <= j { lu[k * n + j] } else { 0.0 };
+                    acc2 += l * u;
+                }
+                let _ = acc;
+                let want = orig[w.piv[i] * n + j];
+                assert!(
+                    (acc2 - want).abs() < 1e-9,
+                    "n={n} ({i},{j}): {acc2} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn factorization_correct_small() {
+        check_factorization(4, 1);
+        check_factorization(8, 2);
+        check_factorization(16, 3);
+    }
+
+    #[test]
+    fn determinant_of_identityish() {
+        // determinant of diag-dominant random is finite & non-zero
+        let pool = ApproxPool::new();
+        let mut w = Lu::new(&pool, 12, 5);
+        w.run();
+        let d = w.determinant();
+        assert!(d.is_finite() && d != 0.0);
+    }
+
+    #[test]
+    fn nan_poisons_determinant_figure1() {
+        // Paper Fig. 1 bottom: det of a matrix containing a NaN is NaN.
+        let pool = ApproxPool::new();
+        let mut w = Lu::new(&pool, 6, 7);
+        w.a_mut()[2 * 6 + 3] = f64::NAN;
+        w.run();
+        assert!(w.determinant().is_nan());
+    }
+
+    #[test]
+    fn zero_repair_can_divide_by_zero() {
+        // The §5.2 hazard distilled: a 1×2 system where the pivot column
+        // value was "repaired to 0" after pivoting — division produces Inf,
+        // exactly the failure LetGo-style 0-repair risks.
+        let pool = ApproxPool::new();
+        let mut w = Lu::new(&pool, 2, 9);
+        // craft: a[0][0]=0 (as if repaired), |a[1][0]| smaller → pivot
+        // selection keeps row 0... make both column-0 entries 0
+        w.a_mut()[0] = 0.0;
+        w.a_mut()[2] = 0.0;
+        w.run();
+        let lu = w.output();
+        // multiplier = a[1][0]/pivot = 0/0 = NaN
+        assert!(lu[2].is_nan() || lu[2].is_infinite() || lu[2] == 0.0);
+        // determinant with a zero pivot column must be 0 / NaN — singular
+        let d = w.determinant();
+        assert!(d == 0.0 || d.is_nan());
+    }
+}

@@ -1,0 +1,201 @@
+//! Matrix–matrix multiplication — the paper's primary evaluation workload
+//! (§4, Fig. 7, Tab. 3): C = A·B over N×N matrices in approximate memory.
+//!
+//! B is stored transposed so the inner product runs the pinned
+//! `movsd/mulsd/addsd` asm kernel over two contiguous rows, exactly the
+//! paper's Figure-3 access pattern.
+
+use crate::approxmem::pool::{ApproxBuf, ApproxPool};
+use crate::util::rng::Pcg64;
+
+use super::{kernels, Workload};
+
+pub struct MatMul {
+    n: usize,
+    seed: u64,
+    a: ApproxBuf<f64>,
+    /// B transposed (row j holds column j of B).
+    bt: ApproxBuf<f64>,
+    c: ApproxBuf<f64>,
+}
+
+impl MatMul {
+    pub fn new(pool: &ApproxPool, n: usize, seed: u64) -> Self {
+        let mut w = Self {
+            n,
+            seed,
+            a: pool.alloc_f64(n * n),
+            bt: pool.alloc_f64(n * n),
+            c: pool.alloc_f64(n * n),
+        };
+        w.reset();
+        w
+    }
+
+    fn fill(n: usize, seed: u64, a: &mut [f64], bt: &mut [f64]) {
+        let mut rng = Pcg64::seed(seed);
+        for v in a.iter_mut() {
+            *v = rng.range_f64(-1.0, 1.0);
+        }
+        for v in bt.iter_mut() {
+            *v = rng.range_f64(-1.0, 1.0);
+        }
+        let _ = n;
+    }
+
+    /// Row-block size: 64 A-rows (512 KiB) stay L2-resident while each
+    /// bt-row streams through L1 and is reused across the whole block.
+    const ROW_BLOCK: usize = 64;
+
+    /// The multiply kernel shared by `run` and `reference`.
+    ///
+    /// Perf notes (EXPERIMENTS.md §Perf):
+    /// * inner product = 4-way unrolled `ddot_fast` — same Table-1
+    ///   instruction set and identical trap/repair semantics as the
+    ///   paper-exact `ddot` (a NaN still traps once per touch and
+    ///   back-traces to its `movsd`);
+    /// * i-blocking turns the bt re-read from a per-row DRAM stream into
+    ///   an L1/L2 hit (≈60× less DRAM traffic at n=1000).
+    fn multiply(n: usize, a: &[f64], bt: &[f64], c: &mut [f64]) {
+        for ib in (0..n).step_by(Self::ROW_BLOCK) {
+            let iend = (ib + Self::ROW_BLOCK).min(n);
+            for j in 0..n {
+                let bcol = &bt[j * n..(j + 1) * n];
+                for i in ib..iend {
+                    let arow = &a[i * n..(i + 1) * n];
+                    // Safety: both rows are exactly n elements.
+                    c[i * n + j] =
+                        unsafe { kernels::ddot_fast_raw(arow.as_ptr(), bcol.as_ptr(), n) };
+                }
+            }
+        }
+    }
+
+    /// Direct access for the harness (e.g. checking which elements became
+    /// NaN).
+    pub fn c(&self) -> &[f64] {
+        self.c.as_slice()
+    }
+
+    pub fn a_mut(&mut self) -> &mut ApproxBuf<f64> {
+        &mut self.a
+    }
+}
+
+impl Workload for MatMul {
+    fn name(&self) -> &'static str {
+        "matmul"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn reset(&mut self) {
+        Self::fill(self.n, self.seed, self.a.as_mut_slice(), self.bt.as_mut_slice());
+        self.c.as_mut_slice().fill(0.0);
+    }
+
+    fn run(&mut self) {
+        let n = self.n;
+        // Safety of aliasing: a/bt are read, c written; disjoint buffers.
+        let a = self.a.as_slice();
+        let bt = self.bt.as_slice();
+        let c = self.c.as_mut_slice();
+        // The borrow checker cannot see the disjointness through &self
+        // split — use raw copies of the slices.
+        let a = unsafe { std::slice::from_raw_parts(a.as_ptr(), a.len()) };
+        let bt = unsafe { std::slice::from_raw_parts(bt.as_ptr(), bt.len()) };
+        Self::multiply(n, a, bt, c);
+    }
+
+    fn input_len(&self) -> usize {
+        2 * self.n * self.n
+    }
+
+    fn poison_input(&mut self, flat_idx: usize, bits: u64) -> usize {
+        let nn = self.n * self.n;
+        let buf = if flat_idx < nn { &mut self.a } else { &mut self.bt };
+        let i = flat_idx % nn;
+        buf[i] = f64::from_bits(bits);
+        buf.addr() + i * 8
+    }
+
+    fn output(&self) -> Vec<f64> {
+        self.c.as_slice().to_vec()
+    }
+
+    fn reference(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut a = vec![0.0; n * n];
+        let mut bt = vec![0.0; n * n];
+        Self::fill(n, self.seed, &mut a, &mut bt);
+        let mut c = vec![0.0; n * n];
+        Self::multiply(n, &a, &bt, &mut c);
+        c
+    }
+
+    fn flops(&self) -> u64 {
+        2 * (self.n as u64).pow(3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_naive() {
+        let pool = ApproxPool::new();
+        let mut w = MatMul::new(&pool, 16, 3);
+        w.run();
+        // naive re-computation
+        let mut a = vec![0.0; 256];
+        let mut bt = vec![0.0; 256];
+        MatMul::fill(16, 3, &mut a, &mut bt);
+        for i in 0..16 {
+            for j in 0..16 {
+                let want: f64 = (0..16).map(|k| a[i * 16 + k] * bt[j * 16 + k]).sum();
+                let got = w.c()[i * 16 + j];
+                assert!((got - want).abs() < 1e-12, "({i},{j}): {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_amplification_figure1() {
+        // Paper Fig. 1: one NaN in A row i → entire row i of C is NaN.
+        let pool = ApproxPool::new();
+        let mut w = MatMul::new(&pool, 8, 5);
+        w.a_mut()[2 * 8 + 4] = f64::NAN; // A[2][4]
+        w.run();
+        for j in 0..8 {
+            assert!(w.c()[2 * 8 + j].is_nan(), "C[2][{j}] must be NaN");
+        }
+        // other rows unaffected
+        for i in (0..8).filter(|&i| i != 2) {
+            for j in 0..8 {
+                assert!(!w.c()[i * 8 + j].is_nan());
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let pool = ApproxPool::new();
+        let mut w1 = MatMul::new(&pool, 12, 9);
+        let mut w2 = MatMul::new(&pool, 12, 9);
+        w1.run();
+        w2.run();
+        assert_eq!(w1.output(), w2.output());
+    }
+
+    #[test]
+    fn quality_perfect_without_faults() {
+        let pool = ApproxPool::new();
+        let mut w = MatMul::new(&pool, 10, 1);
+        w.run();
+        let q = w.quality();
+        assert_eq!(q.rel_l2_error, 0.0);
+    }
+}

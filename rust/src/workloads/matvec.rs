@@ -1,0 +1,153 @@
+//! Matrix–vector multiplication — the paper's second workload (§4: "We
+//! confirmed the same trend for a matrix-vector multiplication application
+//! as well"): y = A·x repeated `reps` times so the same NaN is re-read on
+//! every repetition — the scenario where register-only repair pays N times
+//! (Table 3) while memory repair pays once.
+
+use crate::approxmem::pool::{ApproxBuf, ApproxPool};
+use crate::util::rng::Pcg64;
+
+use super::{kernels, Workload};
+
+pub struct MatVec {
+    n: usize,
+    seed: u64,
+    a: ApproxBuf<f64>,
+    x: ApproxBuf<f64>,
+    y: ApproxBuf<f64>,
+}
+
+impl MatVec {
+    pub fn new(pool: &ApproxPool, n: usize, seed: u64) -> Self {
+        let mut w = Self {
+            n,
+            seed,
+            a: pool.alloc_f64(n * n),
+            x: pool.alloc_f64(n),
+            y: pool.alloc_f64(n),
+        };
+        w.reset();
+        w
+    }
+
+    fn fill(seed: u64, a: &mut [f64], x: &mut [f64]) {
+        let mut rng = Pcg64::seed(seed ^ 0x6d61747665630000);
+        for v in a.iter_mut() {
+            *v = rng.range_f64(-1.0, 1.0);
+        }
+        for v in x.iter_mut() {
+            *v = rng.range_f64(-1.0, 1.0);
+        }
+    }
+
+    fn multiply(n: usize, a: &[f64], x: &[f64], y: &mut [f64]) {
+        for i in 0..n {
+            y[i] = unsafe { kernels::ddot_raw(a[i * n..].as_ptr(), x.as_ptr(), n) };
+        }
+    }
+
+    pub fn a_mut(&mut self) -> &mut ApproxBuf<f64> {
+        &mut self.a
+    }
+
+    pub fn y(&self) -> &[f64] {
+        self.y.as_slice()
+    }
+}
+
+impl Workload for MatVec {
+    fn name(&self) -> &'static str {
+        "matvec"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn reset(&mut self) {
+        Self::fill(self.seed, self.a.as_mut_slice(), self.x.as_mut_slice());
+        self.y.as_mut_slice().fill(0.0);
+    }
+
+    fn run(&mut self) {
+        let n = self.n;
+        let a = unsafe { std::slice::from_raw_parts(self.a.as_ptr(), n * n) };
+        let x = unsafe { std::slice::from_raw_parts(self.x.as_ptr(), n) };
+        Self::multiply(n, a, x, self.y.as_mut_slice());
+    }
+
+    fn input_len(&self) -> usize {
+        self.n * self.n + self.n
+    }
+
+    fn poison_input(&mut self, flat_idx: usize, bits: u64) -> usize {
+        let nn = self.n * self.n;
+        if flat_idx < nn {
+            self.a[flat_idx] = f64::from_bits(bits);
+            self.a.addr() + flat_idx * 8
+        } else {
+            let i = (flat_idx - nn) % self.n;
+            self.x[i] = f64::from_bits(bits);
+            self.x.addr() + i * 8
+        }
+    }
+
+    fn output(&self) -> Vec<f64> {
+        self.y.as_slice().to_vec()
+    }
+
+    fn reference(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut a = vec![0.0; n * n];
+        let mut x = vec![0.0; n];
+        Self::fill(self.seed, &mut a, &mut x);
+        let mut y = vec![0.0; n];
+        Self::multiply(n, &a, &x, &mut y);
+        y
+    }
+
+    fn flops(&self) -> u64 {
+        2 * (self.n as u64).pow(2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_matches_naive() {
+        let pool = ApproxPool::new();
+        let mut w = MatVec::new(&pool, 20, 11);
+        w.run();
+        let mut a = vec![0.0; 400];
+        let mut x = vec![0.0; 20];
+        MatVec::fill(11, &mut a, &mut x);
+        for i in 0..20 {
+            let want: f64 = (0..20).map(|k| a[i * 20 + k] * x[k]).sum();
+            assert!((w.y()[i] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn nan_in_x_poisons_every_row() {
+        // x is read by every row's dot product: one NaN in x → all of y NaN
+        // (stronger amplification than the matmul case).
+        let pool = ApproxPool::new();
+        let mut w = MatVec::new(&pool, 8, 2);
+        w.x.as_mut_slice()[3] = f64::NAN;
+        w.run();
+        assert!(w.y().iter().all(|v| v.is_nan()));
+    }
+
+    #[test]
+    fn nan_in_a_poisons_one_row() {
+        let pool = ApproxPool::new();
+        let mut w = MatVec::new(&pool, 8, 2);
+        w.a_mut()[5 * 8 + 1] = f64::NAN;
+        w.run();
+        for i in 0..8 {
+            assert_eq!(w.y()[i].is_nan(), i == 5);
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Numerical workloads that run over approximate memory.
+//!
+//! Matmul and matvec are the paper's evaluation workloads (§4); jacobi, LU
+//! and stencil are the "iterative numerical applications" class the paper
+//! motivates (§1–2), used by the quality/policy extension experiments.
+//! Their hot loops run through the pinned asm kernels ([`kernels`]) so the
+//! instruction patterns — and therefore the trap/back-trace behaviour —
+//! are deterministic.
+
+pub mod cg;
+pub mod jacobi;
+pub mod kernels;
+pub mod lu;
+pub mod matmul;
+pub mod matvec;
+pub mod stencil;
+
+use crate::approxmem::pool::ApproxPool;
+
+/// Which workload to run (CLI/config-level description).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    MatMul { n: usize },
+    MatVec { n: usize },
+    Jacobi { n: usize, iters: usize },
+    Cg { n: usize, iters: usize },
+    Lu { n: usize },
+    Stencil { n: usize, steps: usize },
+}
+
+impl WorkloadKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::MatMul { .. } => "matmul",
+            WorkloadKind::MatVec { .. } => "matvec",
+            WorkloadKind::Jacobi { .. } => "jacobi",
+            WorkloadKind::Cg { .. } => "cg",
+            WorkloadKind::Lu { .. } => "lu",
+            WorkloadKind::Stencil { .. } => "stencil",
+        }
+    }
+
+    /// Parse `name:size[:extra]`, e.g. `matmul:1000`, `jacobi:256:50`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let size = |i: usize, default: Option<usize>| -> anyhow::Result<usize> {
+            match (parts.get(i), default) {
+                (Some(p), _) => Ok(p.parse()?),
+                (None, Some(d)) => Ok(d),
+                (None, None) => anyhow::bail!("missing size in workload spec {s:?}"),
+            }
+        };
+        match *parts.first().unwrap_or(&"") {
+            "matmul" => Ok(WorkloadKind::MatMul { n: size(1, None)? }),
+            "matvec" => Ok(WorkloadKind::MatVec { n: size(1, None)? }),
+            "jacobi" => Ok(WorkloadKind::Jacobi {
+                n: size(1, None)?,
+                iters: size(2, Some(100))?,
+            }),
+            "cg" => Ok(WorkloadKind::Cg {
+                n: size(1, None)?,
+                iters: size(2, Some(50))?,
+            }),
+            "lu" => Ok(WorkloadKind::Lu { n: size(1, None)? }),
+            "stencil" => Ok(WorkloadKind::Stencil {
+                n: size(1, None)?,
+                steps: size(2, Some(50))?,
+            }),
+            other => anyhow::bail!("unknown workload {other:?}"),
+        }
+    }
+
+    /// Construct the workload with buffers in `pool`.
+    pub fn build(&self, pool: &ApproxPool, seed: u64) -> Box<dyn Workload> {
+        match *self {
+            WorkloadKind::MatMul { n } => Box::new(matmul::MatMul::new(pool, n, seed)),
+            WorkloadKind::MatVec { n } => Box::new(matvec::MatVec::new(pool, n, seed)),
+            WorkloadKind::Jacobi { n, iters } => {
+                Box::new(jacobi::Jacobi::new(pool, n, iters, seed))
+            }
+            WorkloadKind::Cg { n, iters } => Box::new(cg::Cg::new(pool, n, iters, seed)),
+            WorkloadKind::Lu { n } => Box::new(lu::Lu::new(pool, n, seed)),
+            WorkloadKind::Stencil { n, steps } => {
+                Box::new(stencil::Stencil::new(pool, n, steps, seed))
+            }
+        }
+    }
+}
+
+/// How far the (possibly fault-injected) result is from the clean result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quality {
+    /// Relative L2 error vs the clean (fault-free) reference run.
+    pub rel_l2_error: f64,
+    /// Any NaN/Inf in the final output?
+    pub corrupted: bool,
+}
+
+impl Quality {
+    pub fn perfect() -> Self {
+        Self {
+            rel_l2_error: 0.0,
+            corrupted: false,
+        }
+    }
+
+    /// Compare `out` to `reference`.
+    pub fn compare(out: &[f64], reference: &[f64]) -> Self {
+        assert_eq!(out.len(), reference.len());
+        let corrupted = out.iter().any(|x| !x.is_finite());
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (o, r) in out.iter().zip(reference) {
+            if o.is_finite() && r.is_finite() {
+                num += (o - r) * (o - r);
+            } else if !o.is_finite() {
+                // count corrupted lanes as full-magnitude error
+                num += r * r;
+            }
+            den += r * r;
+        }
+        Quality {
+            rel_l2_error: if den == 0.0 { 0.0 } else { (num / den).sqrt() },
+            corrupted,
+        }
+    }
+}
+
+/// A runnable workload with buffers registered in an [`ApproxPool`].
+pub trait Workload: Send {
+    fn name(&self) -> &'static str;
+
+    /// Problem size (N).
+    fn n(&self) -> usize;
+
+    /// Reset inputs/outputs to the initial state (used between repetitions;
+    /// also clears any injected faults).
+    fn reset(&mut self);
+
+    /// Execute the computation over the approximate buffers.
+    fn run(&mut self);
+
+    /// Total number of f64 *input* elements (the space the paper injects
+    /// into: "a NaN is injected into one of the two matrices after their
+    /// initialization").
+    fn input_len(&self) -> usize;
+
+    /// Overwrite input element `flat_idx` (0..input_len) with `bits`;
+    /// returns the memory address poisoned (ground truth for verifying the
+    /// repair mechanism located it).
+    fn poison_input(&mut self, flat_idx: usize, bits: u64) -> usize;
+
+    /// Flat view of the output (for quality comparison).
+    fn output(&self) -> Vec<f64>;
+
+    /// Run the same computation on clean private buffers → reference.
+    fn reference(&self) -> Vec<f64>;
+
+    /// FLOP count per `run` (for throughput reporting).
+    fn flops(&self) -> u64;
+
+    /// Quality of the current output vs the clean reference.
+    fn quality(&self) -> Quality {
+        Quality::compare(&self.output(), &self.reference())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(
+            WorkloadKind::parse("matmul:100").unwrap(),
+            WorkloadKind::MatMul { n: 100 }
+        );
+        assert_eq!(
+            WorkloadKind::parse("jacobi:64:20").unwrap(),
+            WorkloadKind::Jacobi { n: 64, iters: 20 }
+        );
+        assert_eq!(
+            WorkloadKind::parse("jacobi:64").unwrap(),
+            WorkloadKind::Jacobi { n: 64, iters: 100 }
+        );
+        assert!(WorkloadKind::parse("matmul").is_err());
+        assert!(WorkloadKind::parse("bogus:1").is_err());
+    }
+
+    #[test]
+    fn quality_compare() {
+        let q = Quality::compare(&[1.0, 2.0], &[1.0, 2.0]);
+        assert_eq!(q.rel_l2_error, 0.0);
+        assert!(!q.corrupted);
+
+        let q = Quality::compare(&[1.0, f64::NAN], &[1.0, 2.0]);
+        assert!(q.corrupted);
+        assert!(q.rel_l2_error > 0.0);
+
+        let q = Quality::compare(&[1.1, 2.0], &[1.0, 2.0]);
+        assert!(!q.corrupted);
+        assert!((q.rel_l2_error - (0.01f64 / 5.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_kinds_build_and_run_small() {
+        let pool = ApproxPool::new();
+        for kind in [
+            WorkloadKind::MatMul { n: 8 },
+            WorkloadKind::MatVec { n: 8 },
+            WorkloadKind::Jacobi { n: 8, iters: 5 },
+            WorkloadKind::Cg { n: 8, iters: 8 },
+            WorkloadKind::Lu { n: 8 },
+            WorkloadKind::Stencil { n: 8, steps: 3 },
+        ] {
+            let mut w = kind.build(&pool, 7);
+            w.run();
+            let q = w.quality();
+            assert!(!q.corrupted, "{} corrupted", w.name());
+            assert!(q.rel_l2_error < 1e-9, "{} err={}", w.name(), q.rel_l2_error);
+            assert!(w.flops() > 0);
+            // reset + rerun reproduces
+            w.reset();
+            w.run();
+            assert!(!w.quality().corrupted);
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! 2-D five-point heat-diffusion stencil — the "ray shader"-class
+//! drift-robust workload the paper cites from Flikker (§2.1): local value
+//! errors diffuse away over steps, but a NaN spreads geometrically (one NaN
+//! infects its von-Neumann neighbourhood every step) — the starkest
+//! amplification among our workloads and the best showcase for reactive
+//! repair.
+
+use crate::approxmem::pool::{ApproxBuf, ApproxPool};
+use crate::util::rng::Pcg64;
+
+use super::Workload;
+
+pub struct Stencil {
+    n: usize,
+    steps: usize,
+    seed: u64,
+    grid: ApproxBuf<f64>,
+    next: ApproxBuf<f64>,
+}
+
+impl Stencil {
+    pub fn new(pool: &ApproxPool, n: usize, steps: usize, seed: u64) -> Self {
+        assert!(n >= 3);
+        let mut w = Self {
+            n,
+            steps,
+            seed,
+            grid: pool.alloc_f64(n * n),
+            next: pool.alloc_f64(n * n),
+        };
+        w.reset();
+        w
+    }
+
+    fn fill(seed: u64, grid: &mut [f64]) {
+        let mut rng = Pcg64::seed(seed ^ 0x7374656e63696c00);
+        for v in grid.iter_mut() {
+            *v = rng.range_f64(0.0, 100.0);
+        }
+    }
+
+    fn step(n: usize, src: &[f64], dst: &mut [f64]) {
+        // interior: 4-neighbour average blend (α = 0.2)
+        const ALPHA: f64 = 0.2;
+        for i in 1..n - 1 {
+            for j in 1..n - 1 {
+                let c = src[i * n + j];
+                let nb =
+                    src[(i - 1) * n + j] + src[(i + 1) * n + j] + src[i * n + j - 1]
+                        + src[i * n + j + 1];
+                dst[i * n + j] = c + ALPHA * (nb - 4.0 * c);
+            }
+        }
+        // boundary: copy (Dirichlet)
+        for j in 0..n {
+            dst[j] = src[j];
+            dst[(n - 1) * n + j] = src[(n - 1) * n + j];
+        }
+        for i in 0..n {
+            dst[i * n] = src[i * n];
+            dst[i * n + n - 1] = src[i * n + n - 1];
+        }
+    }
+
+    fn simulate(n: usize, steps: usize, grid: &mut [f64], next: &mut [f64]) {
+        for _ in 0..steps {
+            Self::step(n, grid, next);
+            grid.copy_from_slice(next);
+        }
+    }
+
+    pub fn grid_mut(&mut self) -> &mut ApproxBuf<f64> {
+        &mut self.grid
+    }
+
+    /// How many cells are NaN (amplification tracking).
+    pub fn nan_cells(&self) -> usize {
+        self.grid.as_slice().iter().filter(|v| v.is_nan()).count()
+    }
+}
+
+impl Workload for Stencil {
+    fn name(&self) -> &'static str {
+        "stencil"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn reset(&mut self) {
+        Self::fill(self.seed, self.grid.as_mut_slice());
+        self.next.as_mut_slice().fill(0.0);
+    }
+
+    fn run(&mut self) {
+        let n = self.n;
+        let grid = unsafe { std::slice::from_raw_parts_mut(self.grid.as_mut_ptr(), n * n) };
+        Self::simulate(n, self.steps, grid, self.next.as_mut_slice());
+    }
+
+    fn input_len(&self) -> usize {
+        self.n * self.n
+    }
+
+    fn poison_input(&mut self, flat_idx: usize, bits: u64) -> usize {
+        let i = flat_idx % (self.n * self.n);
+        self.grid[i] = f64::from_bits(bits);
+        self.grid.addr() + i * 8
+    }
+
+    fn output(&self) -> Vec<f64> {
+        self.grid.as_slice().to_vec()
+    }
+
+    fn reference(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut grid = vec![0.0; n * n];
+        Self::fill(self.seed, &mut grid);
+        let mut next = vec![0.0; n * n];
+        Self::simulate(n, self.steps, &mut grid, &mut next);
+        grid
+    }
+
+    fn flops(&self) -> u64 {
+        (self.steps as u64) * 7 * ((self.n as u64) - 2).pow(2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diffusion_conserves_rough_mean() {
+        let pool = ApproxPool::new();
+        let mut w = Stencil::new(&pool, 16, 30, 3);
+        let before: f64 =
+            w.grid.as_slice().iter().sum::<f64>() / (16.0 * 16.0);
+        w.run();
+        let after: f64 = w.grid.as_slice().iter().sum::<f64>() / (16.0 * 16.0);
+        assert!((before - after).abs() < before * 0.5);
+        assert!(!w.quality().corrupted);
+    }
+
+    #[test]
+    fn smoothing_reduces_variance() {
+        let pool = ApproxPool::new();
+        let mut w = Stencil::new(&pool, 16, 50, 5);
+        let var = |g: &[f64]| {
+            let m = g.iter().sum::<f64>() / g.len() as f64;
+            g.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / g.len() as f64
+        };
+        let v0 = var(w.grid.as_slice());
+        w.run();
+        let v1 = var(w.grid.as_slice());
+        assert!(v1 < v0);
+    }
+
+    #[test]
+    fn nan_spreads_geometrically() {
+        let pool = ApproxPool::new();
+        let mut w = Stencil::new(&pool, 33, 0, 7);
+        w.grid_mut()[16 * 33 + 16] = f64::NAN;
+        assert_eq!(w.nan_cells(), 1);
+        // 5 manual steps: NaN region grows every step
+        let n = 33;
+        let mut last = 1;
+        for _ in 0..5 {
+            let grid =
+                unsafe { std::slice::from_raw_parts_mut(w.grid.as_mut_ptr(), n * n) };
+            Stencil::simulate(n, 1, grid, w.next.as_mut_slice());
+            let now = w.nan_cells();
+            assert!(now > last, "NaN region must grow: {last} → {now}");
+            last = now;
+        }
+        assert!(last >= 25, "after 5 steps the NaN diamond has ≥25 cells");
+    }
+
+    #[test]
+    fn value_error_diffuses_away() {
+        // contrast with NaN: a value perturbation shrinks (robustness)
+        let pool = ApproxPool::new();
+        let mut w = Stencil::new(&pool, 17, 0, 9);
+        let reference = {
+            let mut w2 = Stencil::new(&pool, 17, 40, 9);
+            w2.run();
+            w2.output()
+        };
+        w.grid_mut()[8 * 17 + 8] += 1000.0;
+        let n = 17;
+        let grid = unsafe { std::slice::from_raw_parts_mut(w.grid.as_mut_ptr(), n * n) };
+        Stencil::simulate(n, 40, grid, w.next.as_mut_slice());
+        let q = super::super::Quality::compare(&w.output(), &reference);
+        assert!(!q.corrupted);
+        assert!(q.rel_l2_error < 0.2, "err={}", q.rel_l2_error);
+    }
+}

@@ -1,0 +1,213 @@
+//! Integration: the full trap→decode→backtrace→repair path over every
+//! workload and asm kernel, including the paper's exact scenarios.
+
+use nanrepair::approxmem::injector::{InjectionSpec, Injector};
+use nanrepair::prelude::*;
+use nanrepair::trap::{handler, test_lock};
+use nanrepair::workloads::kernels;
+
+fn snan() -> f64 {
+    f64::from_bits(PAPER_NAN_BITS)
+}
+
+/// Paper Figure 3/5 end to end: NaN loaded by movsd, fault at mulsd,
+/// memory origin found by back-trace and patched.
+#[test]
+fn figure3_scenario_backtraced_memory_repair() {
+    let _l = test_lock();
+    let pool = ApproxPool::new();
+    let mut a = pool.alloc_f64(64);
+    let mut b = pool.alloc_f64(64);
+    a.fill_with(|i| i as f64);
+    b.fill_with(|_| 2.0);
+    a[17] = snan();
+    let nan_addr = a.addr() + 17 * 8;
+
+    let guard = TrapGuard::arm(
+        &pool,
+        &TrapConfig {
+            policy: RepairPolicy::Constant(5.0),
+            memory_repair: true,
+        },
+    );
+    guard.reset_stats();
+    let dot = kernels::ddot(a.as_slice(), b.as_slice(), 64);
+    let stats = guard.stats();
+    drop(guard);
+
+    assert_eq!(stats.sigfpe_total, 1);
+    assert_eq!(stats.memory_repairs_backtraced, 1, "{stats:#?}");
+    assert_eq!(a[17], 5.0, "memory at {nan_addr:#x} must hold the repair value");
+    // Σ i*2 for i≠17, plus 5*2
+    let want: f64 = (0..64).filter(|&i| i != 17).map(|i| i as f64 * 2.0).sum::<f64>() + 10.0;
+    assert_eq!(dot, want);
+}
+
+/// NaN behind the memory operand of mulsd: repaired directly, no
+/// back-trace needed (our mechanism improves on the paper here).
+#[test]
+fn memory_operand_direct_repair() {
+    let _l = test_lock();
+    let pool = ApproxPool::new();
+    let mut a = pool.alloc_f64(32);
+    let mut b = pool.alloc_f64(32);
+    a.fill_with(|_| 1.0);
+    b.fill_with(|_| 3.0);
+    b[9] = snan();
+
+    let guard = TrapGuard::arm(
+        &pool,
+        &TrapConfig {
+            policy: RepairPolicy::Constant(7.0),
+            memory_repair: true,
+        },
+    );
+    guard.reset_stats();
+    let _ = kernels::ddot(a.as_slice(), b.as_slice(), 32);
+    let stats = guard.stats();
+    drop(guard);
+
+    assert_eq!(stats.sigfpe_total, 1);
+    assert_eq!(stats.memory_repairs_direct, 1, "{stats:#?}");
+    assert_eq!(stats.memory_repairs_backtraced, 0);
+    assert_eq!(b[9], 7.0);
+}
+
+/// daxpy / dscale / dsum kernels all survive NaNs under the guard.
+#[test]
+fn all_asm_kernels_survive_nans() {
+    let _l = test_lock();
+    let pool = ApproxPool::new();
+    let mut x = pool.alloc_f64(16);
+    let mut y = pool.alloc_f64(16);
+    x.fill_with(|i| i as f64);
+    y.fill_with(|_| 1.0);
+
+    let cfg = TrapConfig {
+        policy: RepairPolicy::Zero,
+        memory_repair: true,
+    };
+
+    {
+        x[3] = snan();
+        let guard = TrapGuard::arm(&pool, &cfg);
+        guard.reset_stats();
+        kernels::daxpy(2.0, x.as_slice(), y.as_mut_slice());
+        let s = guard.stats();
+        drop(guard);
+        assert!(s.sigfpe_total >= 1, "daxpy: {s:#?}");
+        assert!(y.as_slice().iter().all(|v| v.is_finite()));
+        assert_eq!(x[3], 0.0, "memory repaired");
+    }
+    {
+        x.fill_with(|i| i as f64 + 1.0);
+        x[7] = snan();
+        let guard = TrapGuard::arm(&pool, &cfg);
+        guard.reset_stats();
+        let s_val = kernels::dsum(x.as_slice());
+        let s = guard.stats();
+        drop(guard);
+        assert!(s.sigfpe_total >= 1, "dsum: {s:#?}");
+        assert!(s_val.is_finite());
+    }
+    {
+        x.fill_with(|i| i as f64 + 1.0);
+        x[11] = snan();
+        let guard = TrapGuard::arm(&pool, &cfg);
+        guard.reset_stats();
+        kernels::dscale(0.5, x.as_mut_slice());
+        let s = guard.stats();
+        drop(guard);
+        assert!(s.sigfpe_total >= 1, "dscale: {s:#?}");
+        assert!(x.as_slice().iter().all(|v| v.is_finite()));
+    }
+}
+
+/// Multiple NaNs in one buffer: every one repaired, exactly one trap each.
+#[test]
+fn many_nans_each_trap_once() {
+    let _l = test_lock();
+    let pool = ApproxPool::new();
+    let mut a = pool.alloc_f64(128);
+    let mut b = pool.alloc_f64(128);
+    a.fill_with(|i| (i as f64).sin());
+    b.fill_with(|_| 1.0);
+    let mut inj = Injector::new(99);
+    let rep = inj.inject(&pool, InjectionSpec::ExactNaNs { count: 6 });
+    let planted: std::collections::HashSet<usize> = rep.nan_addrs.iter().copied().collect();
+
+    let guard = TrapGuard::arm(
+        &pool,
+        &TrapConfig {
+            policy: RepairPolicy::Zero,
+            memory_repair: true,
+        },
+    );
+    guard.reset_stats();
+    let d1 = kernels::ddot(a.as_slice(), b.as_slice(), 128);
+    let mid = guard.stats().sigfpe_total;
+    let d2 = kernels::ddot(a.as_slice(), b.as_slice(), 128);
+    let stats = guard.stats();
+    drop(guard);
+
+    assert_eq!(mid, planted.len() as u64, "one trap per distinct NaN");
+    assert_eq!(stats.sigfpe_total, mid, "second pass must be trap-free");
+    assert!(d1.is_finite() && d2.is_finite());
+    assert_eq!(d1, d2);
+    assert!(a.as_slice().iter().chain(b.as_slice()).all(|v| !v.is_nan()));
+}
+
+/// QNaN caveat (DESIGN.md §1): quiet NaNs do not trap on arithmetic; the
+/// guard leaves them for the scrubber path.
+#[test]
+fn qnan_does_not_trap_on_arithmetic() {
+    let _l = test_lock();
+    let pool = ApproxPool::new();
+    let mut a = pool.alloc_f64(8);
+    let mut b = pool.alloc_f64(8);
+    a.fill_with(|_| 1.0);
+    b.fill_with(|_| 1.0);
+    a[2] = f64::from_bits(nanrepair::fp::nan::qnan_f64(0x7));
+
+    let guard = TrapGuard::arm(&pool, &TrapConfig::default());
+    guard.reset_stats();
+    let dot = kernels::ddot(a.as_slice(), b.as_slice(), 8);
+    let stats = guard.stats();
+    drop(guard);
+
+    assert_eq!(stats.sigfpe_total, 0, "QNaN must not raise #IA on mul/add");
+    assert!(dot.is_nan(), "QNaN propagates — the documented gap");
+    // the proactive scrubber closes it
+    let rep = nanrepair::approxmem::scrubber::Scrubber::default().scrub(&pool);
+    assert_eq!(rep.qnans_repaired, 1);
+}
+
+/// Nested guards/sequential arm-disarm leave MXCSR and handler state sane.
+#[test]
+fn repeated_arm_disarm_is_clean() {
+    let _l = test_lock();
+    let pool = ApproxPool::new();
+    let mut a = pool.alloc_f64(4);
+    a.fill_with(|_| 2.0);
+    for i in 0..10 {
+        a[1] = snan();
+        let guard = TrapGuard::arm(
+            &pool,
+            &TrapConfig {
+                policy: RepairPolicy::One,
+                memory_repair: true,
+            },
+        );
+        guard.reset_stats();
+        let ones = [1.0f64; 4];
+        let d = kernels::ddot(a.as_slice(), &ones, 4);
+        assert!(d.is_finite(), "iter {i}");
+        drop(guard);
+        assert!(
+            !nanrepair::trap::mxcsr::invalid_unmasked(),
+            "iter {i}: guard must restore the mask"
+        );
+    }
+    let stats = handler::stats_snapshot();
+    assert_eq!(stats.gave_up, 0, "{stats:#?}");
+}

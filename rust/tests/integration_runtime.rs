@@ -1,0 +1,121 @@
+//! Integration: PJRT artifacts (L1/L2) driven from the L3 coordinator —
+//! the cross-layer contracts.
+
+use nanrepair::harness::pipeline::{run_jacobi, FaultSpec};
+use nanrepair::runtime::{Engine, Tensor};
+use nanrepair::util::rng::Pcg64;
+
+fn artifacts() -> &'static str {
+    "artifacts"
+}
+
+#[test]
+fn manifest_artifacts_all_load_and_run() {
+    let mut engine = Engine::cpu(artifacts()).expect("client");
+    let avail = engine.available();
+    for stem in ["matmul_f32_256", "jacobi_step_f32_256", "power_iter_step_f32_256", "nan_scan_f32_256"] {
+        assert!(avail.iter().any(|a| a == stem), "{stem} missing from {avail:?}");
+    }
+
+    // matmul: identity sanity
+    let m = engine.load("matmul_f32_256").unwrap();
+    let n = 256;
+    let mut eye = vec![0.0f32; n * n];
+    for i in 0..n {
+        eye[i * n + i] = 1.0;
+    }
+    let mut rng = Pcg64::seed(4);
+    let x: Vec<f32> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let out = m
+        .run(&[
+            Tensor::new(&[n as i64, n as i64], eye),
+            Tensor::new(&[n as i64, n as i64], x.clone()),
+        ])
+        .unwrap();
+    for (a, b) in out[0].data.iter().zip(&x) {
+        assert!((a - b).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn power_iteration_artifact_converges_to_dominant_eigenpair() {
+    let mut engine = Engine::cpu(artifacts()).expect("client");
+    let m = engine.load("power_iter_step_f32_256").unwrap();
+    let n = 256usize;
+    // symmetric positive matrix with known dominant structure: A = I + u uᵀ
+    let mut rng = Pcg64::seed(8);
+    let u: Vec<f32> = (0..n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let unorm2: f32 = u.iter().map(|x| x * x).sum();
+    let mut a = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            a[i * n + j] = u[i] * u[j] + if i == j { 1.0 } else { 0.0 };
+        }
+    }
+    let a_t = Tensor::new(&[n as i64, n as i64], a);
+    let mut x = Tensor::new(&[n as i64], vec![1.0; n]);
+    let mut rayleigh = 0.0f32;
+    for _ in 0..60 {
+        let out = m.run(&[a_t.clone(), x.clone()]).unwrap();
+        x = out[0].clone();
+        rayleigh = out[1].data[0];
+        assert_eq!(out[2].data[0], 0.0, "clean input → no repairs");
+    }
+    // dominant eigenvalue of I + uuᵀ is 1 + ‖u‖²
+    let want = 1.0 + unorm2;
+    assert!(
+        (rayleigh - want).abs() < 0.05 * want,
+        "rayleigh {rayleigh} vs {want}"
+    );
+}
+
+#[test]
+fn power_iteration_with_nan_still_converges() {
+    let mut engine = Engine::cpu(artifacts()).expect("client");
+    let m = engine.load("power_iter_step_f32_256").unwrap();
+    let n = 256usize;
+    let mut a = vec![0.1f32; n * n];
+    for i in 0..n {
+        a[i * n + i] = 2.0;
+    }
+    let mut a_t = Tensor::new(&[n as i64, n as i64], a);
+    a_t.poison(5 * n + 9);
+    let mut x = Tensor::new(&[n as i64], vec![1.0; n]);
+    let mut repairs = 0.0;
+    for _ in 0..20 {
+        let out = m.run(&[a_t.clone(), x.clone()]).unwrap();
+        x = out[0].clone();
+        repairs += out[2].data[0];
+    }
+    assert!(repairs >= 20.0, "NaN repaired on every step: {repairs}");
+    assert!(x.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn pipeline_full_runs_deterministic() {
+    let a = run_jacobi(artifacts(), 25, FaultSpec::PlantNan { every: 4 }, 11, 0).unwrap();
+    let b = run_jacobi(artifacts(), 25, FaultSpec::PlantNan { every: 4 }, 11, 0).unwrap();
+    assert_eq!(a.total_repairs, b.total_repairs);
+    assert!((a.final_residual - b.final_residual).abs() < 1e-12);
+    assert!(!a.corrupted);
+}
+
+#[test]
+fn nan_scan_artifact_equals_host_scrubber_semantics() {
+    let mut engine = Engine::cpu(artifacts()).expect("client");
+    let m = engine.load("nan_scan_f32_256").unwrap();
+    let n = 256 * 256;
+    let mut rng = Pcg64::seed(21);
+    let mut x = Tensor::new(
+        &[n as i64],
+        (0..n).map(|_| rng.range_f64(-5.0, 5.0) as f32).collect(),
+    );
+    for _ in 0..17 {
+        let idx = rng.index(n);
+        x.poison(idx);
+    }
+    let planted = x.nan_count();
+    let out = m.run(&[x]).unwrap();
+    assert_eq!(out[0].nan_count(), 0);
+    assert_eq!(out[1].data[0] as usize, planted);
+}

@@ -1,0 +1,126 @@
+//! Decoder validation against binutils ground truth.
+//!
+//! objdump disassembles every corpus binary; for each instruction start it
+//! reports, our `decode_len` must either return the *same length* or
+//! `None` (honest "not covered" → the sweep aborts safely).  A wrong
+//! nonzero length would silently desynchronize the back-trace — the one
+//! failure mode the memory-repair safety argument cannot tolerate — so
+//! this test is the strongest guard in the suite.
+
+use std::collections::BTreeMap;
+use std::process::Command;
+
+use nanrepair::disasm::decode::decode_len;
+use nanrepair::harness::corpus;
+
+/// Parse `objdump -d` output: vaddr -> instruction byte count.
+fn objdump_lengths(path: &std::path::Path) -> BTreeMap<u64, (usize, String)> {
+    let out = Command::new("objdump")
+        .args(["-d", "--no-show-raw-insn"])
+        .arg(path)
+        .output()
+        .expect("objdump runs");
+    // second pass with raw bytes to count them reliably
+    let raw = Command::new("objdump")
+        .args(["-d"])
+        .arg(path)
+        .output()
+        .expect("objdump runs");
+    assert!(out.status.success() && raw.status.success());
+    let text = String::from_utf8_lossy(&raw.stdout).into_owned();
+
+    let mut map: BTreeMap<u64, (usize, String)> = BTreeMap::new();
+    let mut last_insn: Option<u64> = None;
+    for line in text.lines() {
+        // "    1144:\t f2 0f 10 04 f2 \tmovsd (%rdx,%rsi,8),%xmm0"
+        // continuation: "    1170:\t00 "            (no mnemonic column)
+        let Some((addr_part, rest)) = line.split_once(":\t") else {
+            continue;
+        };
+        let Ok(addr) = u64::from_str_radix(addr_part.trim(), 16) else {
+            continue;
+        };
+        let (bytes_part, mnem) = match rest.split_once('\t') {
+            Some((b, m)) => (b, m.trim().to_string()),
+            None => (rest, String::new()),
+        };
+        let n = bytes_part
+            .split_whitespace()
+            .filter(|t| t.len() == 2 && u8::from_str_radix(t, 16).is_ok())
+            .count();
+        if n == 0 {
+            continue;
+        }
+        if mnem.is_empty() {
+            // continuation of the previous instruction: extend it
+            if let Some(prev) = last_insn {
+                if let Some(e) = map.get_mut(&prev) {
+                    e.0 += n;
+                }
+            }
+        } else {
+            map.insert(addr, (n, mnem));
+            last_insn = Some(addr);
+        }
+    }
+    map
+}
+
+#[test]
+fn decode_len_agrees_with_objdump_on_corpus() {
+    let bins = corpus::build(corpus::default_dir()).expect("corpus");
+    let mut checked = 0usize;
+    let mut covered = 0usize;
+    let mut mismatches: Vec<String> = Vec::new();
+
+    for bin in &bins {
+        let img = nanrepair::disasm::elf::ElfImage::load(bin).unwrap();
+        let lens = objdump_lengths(bin);
+        for func in &img.funcs {
+            let Some(bytes) = img.func_bytes(func) else {
+                continue;
+            };
+            for (&addr, &(want_len, ref mnem)) in
+                lens.range(func.addr..func.addr + func.size)
+            {
+                let off = (addr - func.addr) as usize;
+                if off >= bytes.len() {
+                    continue;
+                }
+                checked += 1;
+                match decode_len(&bytes[off..]) {
+                    None => {} // honest "not covered" — safe
+                    Some(d) => {
+                        covered += 1;
+                        if d.len != want_len {
+                            mismatches.push(format!(
+                                "{}:{addr:#x} {mnem}: ours {} vs objdump {want_len}",
+                                bin.display(),
+                                d.len
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    assert!(checked > 2000, "too few instructions checked: {checked}");
+    let coverage = covered as f64 / checked as f64;
+    assert!(
+        coverage > 0.85,
+        "decoder coverage too low: {covered}/{checked}"
+    );
+    assert!(
+        mismatches.is_empty(),
+        "{} length mismatches (first 20):\n{}",
+        mismatches.len(),
+        mismatches
+            .iter()
+            .take(20)
+            .cloned()
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    println!("objdump cross-check: {covered}/{checked} covered, 0 mismatches");
+}

@@ -1,0 +1,225 @@
+//! Property tests (in-repo `testutil::prop`, proptest unavailable offline)
+//! over the substrate invariants DESIGN.md §6 calls out.
+
+use nanrepair::approxmem::ecc::{decode, encode, flip_codeword_bit, Decoded};
+use nanrepair::approxmem::injector::{InjectionSpec, Injector};
+use nanrepair::approxmem::pool::ApproxPool;
+use nanrepair::disasm::backtrace::{backtrace_mov, BacktraceOutcome};
+use nanrepair::disasm::decode::decode_len;
+use nanrepair::fp::analytics;
+use nanrepair::fp::bits::F64Bits;
+use nanrepair::fp::nan::{classify_f64, NanClass};
+use nanrepair::testutil::prop::assert_prop;
+use nanrepair::util::stats::Summary;
+use rand_core::RngCore;
+
+/// ECC: ∀ word, ∀ single-bit flip → corrected to the original.
+#[test]
+fn prop_ecc_corrects_every_single_flip() {
+    assert_prop(
+        "ecc-secded-corrects-1bit",
+        1,
+        300,
+        |rng| (rng.next_u64(), rng.below(72)),
+        |&(word, bit)| {
+            let cw = encode(word);
+            match decode(flip_codeword_bit(cw, bit as u32)) {
+                Decoded::Corrected { data, .. } => data == word,
+                _ => false,
+            }
+        },
+    );
+}
+
+/// ECC: ∀ word, ∀ distinct double flip → detected as uncorrectable.
+#[test]
+fn prop_ecc_detects_every_double_flip() {
+    assert_prop(
+        "ecc-secded-detects-2bit",
+        2,
+        300,
+        |rng| {
+            let b1 = rng.below(72);
+            let mut b2 = rng.below(72);
+            while b2 == b1 {
+                b2 = rng.below(72);
+            }
+            (rng.next_u64(), (b1, b2))
+        },
+        |&(word, (b1, b2))| {
+            let cw = encode(word);
+            let bad = flip_codeword_bit(flip_codeword_bit(cw, b1 as u32), b2 as u32);
+            decode(bad) == Decoded::Uncorrectable
+        },
+    );
+}
+
+/// NaN classification is exhaustive & consistent with the hardware view.
+#[test]
+fn prop_nan_classification_consistent() {
+    assert_prop(
+        "nan-class-consistent",
+        3,
+        2000,
+        |rng| rng.next_u64(),
+        |&bits| {
+            let c = classify_f64(bits);
+            let v = f64::from_bits(bits);
+            match c {
+                NanClass::NotNan => !v.is_nan(),
+                NanClass::Quiet => v.is_nan() && (bits & F64Bits::QUIET_BIT != 0),
+                NanClass::Signaling => v.is_nan() && (bits & F64Bits::QUIET_BIT == 0),
+            }
+        },
+    );
+}
+
+/// Bit flips: flip(flip(x)) == x and flip changes classification at most
+/// between the three classes (sanity of the injector's primitive).
+#[test]
+fn prop_flip_involution() {
+    assert_prop(
+        "flip-involution",
+        4,
+        2000,
+        |rng| (rng.next_u64(), rng.below(64)),
+        |&(bits, i)| F64Bits(bits).flip(i as u32).flip(i as u32) == F64Bits(bits),
+    );
+}
+
+/// Analytic P(NaN) stays a probability and is monotone in BER.
+#[test]
+fn prop_p_nan_bounds_and_monotone() {
+    assert_prop(
+        "p-nan-bounded-monotone",
+        5,
+        500,
+        |rng| (f64::from_bits(rng.next_u64()), rng.next_f64() * 0.1),
+        |&(v, ber)| {
+            if v.is_nan() {
+                return analytics::p_nan_f64(v, ber) == 1.0;
+            }
+            let p = analytics::p_nan_f64(v, ber);
+            let p2 = analytics::p_nan_f64(v, (ber * 0.5).min(ber));
+            (0.0..=1.0).contains(&p) && p2 <= p + 1e-15
+        },
+    );
+}
+
+/// Injector ground truth: every address it reports holds a NaN, inside a
+/// registered region.
+#[test]
+fn prop_injector_reports_are_ground_truth() {
+    assert_prop(
+        "injector-ground-truth",
+        6,
+        60,
+        |rng| (rng.below(6) + 1, rng.next_u64()),
+        |&(count, seed)| {
+            let pool = ApproxPool::new();
+            let mut buf = pool.alloc_f64(256);
+            buf.fill_with(|i| i as f64 * 0.25);
+            let mut inj = Injector::new(seed);
+            let rep = inj.inject(&pool, InjectionSpec::ExactNaNs { count: count as usize });
+            rep.nan_addrs.iter().all(|&addr| {
+                pool.covers(addr, 8)
+                    && classify_f64(unsafe { (addr as *const u64).read() }).is_nan()
+            })
+        },
+    );
+}
+
+/// Decoder: every decoded length is positive and ≤ 15 (x86 ISA max).
+#[test]
+fn prop_decoded_lengths_legal() {
+    assert_prop(
+        "decode-len-legal",
+        7,
+        3000,
+        |rng| (0..18).map(|_| rng.next_u64()).collect::<Vec<u64>>(),
+        |words| {
+            let bytes: Vec<u8> = words.iter().map(|&w| w as u8).collect();
+            match decode_len(&bytes) {
+                None => true,
+                Some(d) => d.len >= 1 && d.len <= 15,
+            }
+        },
+    );
+}
+
+/// Backtrace soundness on the ddot kernel: whatever GPR state is supplied,
+/// the mov it finds is the kernel's load and the effective address formula
+/// equals base + index*8 (the kernel's addressing).
+#[test]
+fn prop_backtrace_effective_address_formula() {
+    // bytes of the asm ddot inner block (see workloads::kernels)
+    let body: &[u8] = &[
+        0xf2, 0x0f, 0x10, 0x07, // movsd xmm0, [rdi]
+        0xf2, 0x0f, 0x10, 0x0e, // movsd xmm1, [rsi]
+        0xf2, 0x0f, 0x59, 0xc1, // mulsd xmm0, xmm1
+    ];
+    assert_prop(
+        "backtrace-ea-formula",
+        8,
+        500,
+        |rng| (rng.next_u64() >> 8, rng.next_u64() >> 8),
+        |&(rdi, rsi)| {
+            let mut gpr = [0u64; 16];
+            gpr[7] = rdi;
+            gpr[6] = rsi;
+            match backtrace_mov(body, 0x4000, 0x4000 + 8, 1) {
+                BacktraceOutcome::Found { mem, mov_vaddr, mov } => {
+                    mov_vaddr == 0x4004
+                        && mem.effective_addr(&gpr, mov_vaddr + mov.len as u64) == rsi
+                }
+                _ => false,
+            }
+        },
+    );
+}
+
+/// Summary statistics: mean within [min,max], percentiles ordered.
+#[test]
+fn prop_summary_orderings() {
+    assert_prop(
+        "summary-ordered",
+        9,
+        400,
+        |rng| {
+            let n = rng.below(200) + 1;
+            (0..n).map(|_| rng.next_f64() * 1e6 - 5e5).collect::<Vec<f64>>()
+        },
+        |xs| {
+            let s = Summary::of(xs);
+            s.min <= s.p50 + 1e-9
+                && s.p50 <= s.p90 + 1e-9
+                && s.p90 <= s.p99 + 1e-9
+                && s.p99 <= s.max + 1e-9
+                && s.mean >= s.min - 1e-9
+                && s.mean <= s.max + 1e-9
+        },
+    );
+}
+
+/// Linear sweep alignment: sweeping the ddot kernel from entry to any
+/// decoded boundary reports aligned=true; to any non-boundary, false.
+#[test]
+fn prop_sweep_alignment_consistency() {
+    let body: &[u8] = &[
+        0xf2, 0x0f, 0x10, 0x07, // 4
+        0xf2, 0x0f, 0x10, 0x0e, // 4
+        0xf2, 0x0f, 0x59, 0xc1, // 4
+        0xc3, // 1
+    ];
+    let boundaries = [0u64, 4, 8, 12, 13];
+    assert_prop(
+        "sweep-alignment",
+        10,
+        200,
+        |rng| rng.below(14),
+        |&stop| {
+            let (_, ok) = nanrepair::disasm::backtrace::sweep(body, 0, stop);
+            ok == boundaries.contains(&stop)
+        },
+    );
+}
