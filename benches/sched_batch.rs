@@ -1,0 +1,65 @@
+//! Scheduler throughput baseline: `run_batch` cells/sec at 1, 4, and 8
+//! workers, so future scheduler changes have a perf reference.
+//!
+//! Each batch is 16 non-trap matmul cells (the parallelizable case — trap
+//! cells serialize on the global trap lock and measure lock contention,
+//! not scheduler overhead).  The printed `cells/s` line is the headline
+//! number.
+//!
+//! `cargo bench --bench sched_batch` (env NANREPAIR_BENCH_QUICK=1 for CI,
+//! NANREPAIR_SCHED_CELLS=N to override the batch size).
+
+use nanrepair::approxmem::injector::InjectionSpec;
+use nanrepair::bench::{Bench, Runner};
+use nanrepair::coordinator::campaign::CampaignConfig;
+use nanrepair::coordinator::protection::Protection;
+use nanrepair::coordinator::scheduler;
+use nanrepair::workloads::WorkloadKind;
+
+fn batch(cells: usize, n: usize) -> Vec<CampaignConfig> {
+    (0..cells)
+        .map(|i| CampaignConfig {
+            workload: WorkloadKind::MatMul { n },
+            protection: Protection::None,
+            injection: InjectionSpec::ExactNaNs { count: 1 },
+            reps: 2,
+            warmup: 0,
+            seed: i as u64,
+            check_quality: false,
+            ..Default::default()
+        })
+        .collect()
+}
+
+fn main() {
+    let mut r = Runner::from_env("sched_batch");
+    let cells: usize = std::env::var("NANREPAIR_SCHED_CELLS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16);
+    let n = if r.is_quick() { 32 } else { 96 };
+
+    let mut throughput = Vec::new();
+    for workers in [1usize, 4, 8] {
+        let res = r.bench(
+            &format!("batch{cells}x{n}/workers{workers}"),
+            Bench::new(move || {
+                let out = scheduler::run_batch(batch(cells, n), workers);
+                assert!(out.iter().all(|c| c.is_ok()));
+            })
+            .samples(5)
+            .budget(2.0),
+        );
+        throughput.push((workers, cells as f64 / res.summary.mean));
+    }
+    r.finish();
+
+    println!("\nthroughput (cells/s):");
+    let (_, serial) = throughput[0];
+    for (workers, cps) in &throughput {
+        println!(
+            "  {workers} workers: {cps:8.1} cells/s  ({:.2}x vs 1 worker)",
+            cps / serial
+        );
+    }
+}

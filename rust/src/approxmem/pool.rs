@@ -106,6 +106,13 @@ impl ApproxPool {
         self.registry.lock().unwrap().regions.iter().map(|r| r.len).sum()
     }
 
+    /// Monotonic count of allocations ever made from this pool (freed
+    /// buffers still count).  The session layer's workload cache exists to
+    /// keep this flat across campaign cells — tests assert on it.
+    pub fn allocs_total(&self) -> usize {
+        self.next_id.load(Ordering::Relaxed)
+    }
+
     fn unregister(&self, id: usize) {
         let mut reg = self.registry.lock().unwrap();
         reg.regions.retain(|r| r.id != id);
@@ -180,6 +187,15 @@ impl<T: Copy> ApproxBuf<T> {
             *slot = f(i);
         }
     }
+
+    /// Zero the buffer in place (byte-level) — the reuse path's equivalent
+    /// of a fresh `alloc_zeroed` allocation, without touching the registry.
+    pub fn reset_zero(&mut self) {
+        // Safety: the allocation is `layout.size()` bytes, owned by self.
+        unsafe {
+            std::ptr::write_bytes(self.ptr as *mut u8, 0, self.layout.size());
+        }
+    }
 }
 
 impl<T: Copy> std::ops::Index<usize> for ApproxBuf<T> {
@@ -213,6 +229,28 @@ mod tests {
         assert_eq!(buf.len(), 1024);
         assert!(buf.as_slice().iter().all(|&x| x == 0.0));
         assert_eq!(buf.addr() % APPROX_ALIGN, 0);
+    }
+
+    #[test]
+    fn allocs_total_is_monotonic_across_frees() {
+        let pool = ApproxPool::new();
+        assert_eq!(pool.allocs_total(), 0);
+        let a = pool.alloc_f64(8);
+        drop(a);
+        let _b = pool.alloc_f64(8);
+        assert_eq!(pool.allocs_total(), 2, "frees must not decrement");
+    }
+
+    #[test]
+    fn reset_zero_clears_in_place() {
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f64(16);
+        buf.fill_with(|i| i as f64 + 1.0);
+        let addr = buf.addr();
+        buf.reset_zero();
+        assert_eq!(buf.addr(), addr, "reset must not reallocate");
+        assert!(buf.as_slice().iter().all(|&x| x == 0.0));
+        assert_eq!(pool.allocs_total(), 1);
     }
 
     #[test]

@@ -4,18 +4,22 @@
 //! memory, inject (exactly one paper-pattern NaN for Fig. 7/Tab. 3, or a
 //! BER draw for the extension sweeps), run under the protection scheme,
 //! time it, and collect trap statistics and output quality.
+//!
+//! The execution engine lives in [`super::session::ExperimentSession`];
+//! [`Campaign::run`] is a thin wrapper that executes one cell in a
+//! throwaway session.  Multi-cell harnesses go through
+//! [`super::scheduler::run_batch`] instead, which keeps one session per
+//! worker so cells share cached workload buffers.
 
-use std::time::Instant;
-
-use crate::approxmem::injector::{InjectionReport, InjectionSpec, Injector};
-use crate::approxmem::pool::ApproxPool;
-use crate::approxmem::scrubber::Scrubber;
+use crate::approxmem::injector::{InjectionReport, InjectionSpec};
 use crate::repair::policy::RepairPolicy;
-use crate::trap::{handler, TrapGuard};
+use crate::trap::handler;
+use crate::util::report::Record;
 use crate::util::stats::Summary;
 use crate::workloads::{Quality, WorkloadKind};
 
 use super::protection::Protection;
+use super::session::ExperimentSession;
 
 /// Full description of a campaign cell.
 #[derive(Debug, Clone)]
@@ -49,6 +53,18 @@ impl Default for CampaignConfig {
     }
 }
 
+impl CampaignConfig {
+    /// Short cell label, `workload:n/protection`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}:{}/{}",
+            self.workload.name(),
+            self.workload.size(),
+            self.protection.name()
+        )
+    }
+}
+
 /// What a campaign produced.
 #[derive(Debug, Clone)]
 pub struct CampaignReport {
@@ -69,6 +85,9 @@ pub struct CampaignReport {
     pub completed: bool,
     /// FLOPs per rep, for throughput derivation.
     pub flops: u64,
+    /// Wall-clock seconds of the whole cell (warmup + injection + reps) —
+    /// the scheduler's per-cell telemetry.
+    pub cell_secs: f64,
 }
 
 impl CampaignReport {
@@ -78,6 +97,48 @@ impl CampaignReport {
         } else {
             self.flops as f64 / self.elapsed.mean / 1e9
         }
+    }
+
+    /// The full structured record (timing included).
+    pub fn to_record(&self) -> Record {
+        self.record_deterministic()
+            .field("elapsed_mean_secs", self.elapsed.mean)
+            .field("elapsed_ci95_secs", self.elapsed.ci95())
+            .field("elapsed_min_secs", self.elapsed.min)
+            .field("elapsed_max_secs", self.elapsed.max)
+            .field("gflops", self.gflops())
+            .field("cell_secs", self.cell_secs)
+    }
+
+    /// The record without wall-clock fields: every field here is a pure
+    /// function of the [`CampaignConfig`], so serial and parallel sweeps
+    /// must produce byte-identical streams of these (asserted by the
+    /// scheduler's determinism test).
+    pub fn record_deterministic(&self) -> Record {
+        let mut rec = Record::new("campaign")
+            .field("label", self.config_label.as_str())
+            .field("reps", self.elapsed.n)
+            .field("sigfpe_total", self.traps.sigfpe_total)
+            .field("register_repairs", self.traps.register_repairs)
+            .field("memory_repairs_direct", self.traps.memory_repairs_direct)
+            .field(
+                "memory_repairs_backtraced",
+                self.traps.memory_repairs_backtraced,
+            )
+            .field("emulated_skips", self.traps.emulated_skips)
+            .field("bits_flipped", self.injection.bits_flipped)
+            .field("words_touched", self.injection.words_touched)
+            .field("nans_created", self.injection.nans_created())
+            .field("scrub_passes", self.scrub_passes)
+            .field("scrub_repairs", self.scrub_repairs)
+            .field("flops", self.flops)
+            .field("completed", self.completed);
+        if let Some(q) = self.quality {
+            rec = rec
+                .field("quality_rel_l2_error", q.rel_l2_error)
+                .field("quality_corrupted", q.corrupted);
+        }
+        rec
     }
 }
 
@@ -92,126 +153,13 @@ impl Campaign {
     }
 
     pub fn label(&self) -> String {
-        format!(
-            "{}:{}/{}",
-            self.cfg.workload.name(),
-            match self.cfg.workload {
-                WorkloadKind::MatMul { n }
-                | WorkloadKind::MatVec { n }
-                | WorkloadKind::Jacobi { n, .. }
-                | WorkloadKind::Cg { n, .. }
-                | WorkloadKind::Lu { n }
-                | WorkloadKind::Stencil { n, .. } => n,
-            },
-            self.cfg.protection.name()
-        )
+        self.cfg.label()
     }
 
-    /// Execute the campaign. Takes the global trap lock if the protection
-    /// scheme arms the trap.
+    /// Execute the campaign in a throwaway [`ExperimentSession`].  Takes
+    /// the global trap lock if the protection scheme arms the trap.
     pub fn run(&self) -> anyhow::Result<CampaignReport> {
-        let cfg = &self.cfg;
-        if matches!(cfg.protection, Protection::Ecc | Protection::Abft) {
-            anyhow::bail!(
-                "{} protection is workload-specific; use harness::protection_compare",
-                cfg.protection.name()
-            );
-        }
-        let _trap_serialize = cfg
-            .protection
-            .uses_trap()
-            .then(crate::trap::test_lock);
-
-        let pool = ApproxPool::new();
-        let mut workload = cfg.workload.build(&pool, cfg.seed);
-        let mut injector = Injector::new(cfg.seed ^ 0x696e6a6563740000);
-        let mut input_rng = crate::util::rng::Pcg64::seed(cfg.seed ^ 0x706f69736f6e);
-        let scrubber = Scrubber::new(match cfg.policy {
-            RepairPolicy::Constant(c) => c,
-            RepairPolicy::One => 1.0,
-            _ => 0.0,
-        });
-
-        // warmup (no injection): page in, stabilize frequency
-        for _ in 0..cfg.warmup {
-            workload.reset();
-            workload.run();
-        }
-
-        let guard = cfg
-            .protection
-            .trap_config(cfg.policy)
-            .map(|tc| TrapGuard::arm(&pool, &tc));
-        if let Some(g) = &guard {
-            g.reset_stats();
-        } else {
-            handler::stats_reset();
-        }
-
-        let mut elapsed = Vec::with_capacity(cfg.reps);
-        let mut last_injection = InjectionReport::default();
-        let mut scrub_passes = 0u64;
-        let mut scrub_repairs = 0u64;
-
-        for rep in 0..cfg.reps {
-            workload.reset();
-            // Paper §4 methodology: ExactNaNs targets the *input* matrices
-            // ("injected into one of the two matrices after their
-            // initialization"); statistical specs inject pool-wide.
-            last_injection = match cfg.injection {
-                InjectionSpec::ExactNaNs { count } => {
-                    let mut rep = InjectionReport::default();
-                    for _ in 0..count {
-                        let idx = input_rng.index(workload.input_len());
-                        let addr = workload
-                            .poison_input(idx, crate::fp::nan::PAPER_NAN_BITS);
-                        rep.bits_flipped += 64;
-                        rep.words_touched += 1;
-                        rep.snans_created += 1;
-                        rep.nan_addrs.push(addr);
-                    }
-                    rep
-                }
-                other => injector.inject(&pool, other),
-            };
-
-            // proactive scrub before compute (period in runs)
-            if let Protection::Scrub { period_runs } = cfg.protection {
-                if period_runs > 0 && (rep as u32) % period_runs == 0 {
-                    let t0 = Instant::now();
-                    let r = scrubber.scrub(&pool);
-                    scrub_passes += 1;
-                    scrub_repairs += r.nans_repaired();
-                    // scrub time *is* protection overhead: count it
-                    let scrub_secs = t0.elapsed().as_secs_f64();
-                    let t1 = Instant::now();
-                    workload.run();
-                    elapsed.push(scrub_secs + t1.elapsed().as_secs_f64());
-                    continue;
-                }
-            }
-
-            let t0 = Instant::now();
-            workload.run();
-            elapsed.push(t0.elapsed().as_secs_f64());
-        }
-
-        let traps = handler::stats_snapshot();
-        drop(guard);
-
-        let quality = cfg.check_quality.then(|| workload.quality());
-
-        Ok(CampaignReport {
-            config_label: self.label(),
-            elapsed: Summary::of(&elapsed),
-            traps,
-            injection: last_injection,
-            quality,
-            scrub_passes,
-            scrub_repairs,
-            completed: true,
-            flops: workload.flops(),
-        })
+        ExperimentSession::new().run_cell(&self.cfg)
     }
 }
 
@@ -293,5 +241,22 @@ mod tests {
         let rep = Campaign::new(cfg).run().unwrap();
         assert!(rep.gflops() > 0.0);
         assert_eq!(rep.elapsed.n, 3);
+    }
+
+    #[test]
+    fn report_records_round_trip_as_json() {
+        let rep = Campaign::new(base_cfg(16, Protection::RegisterMemory))
+            .run()
+            .unwrap();
+        for rec in [rep.to_record(), rep.record_deterministic()] {
+            let line = rec.render_jsonl();
+            let parsed = crate::util::report::Json::parse(&line).unwrap();
+            let back = crate::util::report::Record::from_json(&parsed).unwrap();
+            assert_eq!(back, rec, "{line}");
+            assert_eq!(
+                parsed.get("label").and_then(|v| v.as_str()),
+                Some("matmul:16/memory")
+            );
+        }
     }
 }

@@ -1,16 +1,22 @@
 //! The L3 coordinator: protection schemes, injection campaigns, the
-//! experiment scheduler, and metrics.
+//! experiment session/scheduler engine, and metrics.
 //!
 //! A [`campaign::Campaign`] is one (workload × protection × injection)
 //! cell: allocate in approximate memory, inject, run under the configured
-//! protection, measure.  The [`scheduler`] fans independent cells out over
-//! a worker pool (trap-armed cells serialize on the global trap state; the
-//! MXCSR unmasking itself is per-thread).
+//! protection, measure.  The [`session::ExperimentSession`] is the engine
+//! that actually executes cells — it caches workloads (buffer reuse across
+//! cells) and arms the trap domain.  The [`scheduler`] fans independent
+//! cells out over a worker pool, one session per worker (trap-armed cells
+//! serialize on the global trap state; the MXCSR unmasking itself is
+//! per-thread).  [`metrics`] collects cross-cutting counters, and results
+//! flow out as structured records (see [`crate::util::report`]).
 
 pub mod campaign;
 pub mod metrics;
 pub mod protection;
 pub mod scheduler;
+pub mod session;
 
 pub use campaign::{Campaign, CampaignConfig, CampaignReport};
 pub use protection::Protection;
+pub use session::ExperimentSession;

@@ -1,0 +1,346 @@
+//! The experiment session: the reusable execution engine behind every
+//! campaign cell.
+//!
+//! Before this layer existed, each harness hand-rolled a serial
+//! `Campaign::new(cfg).run()` loop that rebuilt the approximate-memory
+//! pool, the workload (two or three O(n²) buffer allocations + fills), and
+//! the injector for *every* cell of a sweep.  An [`ExperimentSession`]
+//! owns those resources instead:
+//!
+//! * a **workload cache** keyed by [`WorkloadKind`] — cells of the same
+//!   kind reuse the allocated buffers ([`Workload::reseed`] re-keys the
+//!   deterministic input generation), so a 30-cell sweep performs one
+//!   allocation set, not 30 (observable through
+//!   [`ApproxPool::allocs_total`]);
+//! * one **pool per cached workload**, so the injector's region view for a
+//!   cell is bit-identical to what a freshly-built campaign would see —
+//!   session reuse cannot change injection ground truth;
+//! * **trap-domain arming**: the session takes the global trap lock and
+//!   arms/disarms the SIGFPE window around each protected cell.
+//!
+//! `Campaign::run` is now a thin wrapper that runs one cell in a
+//! throwaway session; the scheduler gives each worker thread a long-lived
+//! session so batches amortize allocation across all cells it executes.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::approxmem::injector::{InjectionReport, InjectionSpec, Injector};
+use crate::approxmem::pool::ApproxPool;
+use crate::approxmem::scrubber::Scrubber;
+use crate::repair::policy::RepairPolicy;
+use crate::trap::{handler, TrapGuard};
+use crate::util::stats::Summary;
+use crate::workloads::{Workload, WorkloadKind};
+
+use super::campaign::{CampaignConfig, CampaignReport};
+use super::protection::Protection;
+
+/// A cached workload and the pool its buffers are registered in.
+struct CachedWorkload {
+    pool: ApproxPool,
+    workload: Box<dyn Workload>,
+}
+
+/// Soft byte budget for a session's cached workload buffers.  Admitting a
+/// *new* workload kind while the cache already holds more than this evicts
+/// the cached kinds first, so a worker sweeping large sizes (fig7 at
+/// n=1000..3000 ≈ 24–216 MB per kind) retains at most one big pool
+/// instead of one per size.  Same-kind reuse is never evicted by its own
+/// cells, and sweep-sized test workloads stay far below the budget.
+pub const CACHE_BYTES_BUDGET: usize = 64 << 20;
+
+/// Reusable executor for campaign cells (see module docs).
+#[derive(Default)]
+pub struct ExperimentSession {
+    cache: HashMap<WorkloadKind, CachedWorkload>,
+    cells_run: u64,
+}
+
+impl ExperimentSession {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of distinct workload kinds currently cached.
+    pub fn cached_kinds(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Cells executed by this session so far.
+    pub fn cells_run(&self) -> u64 {
+        self.cells_run
+    }
+
+    /// Total allocations ever made across the session's cached pools —
+    /// the quantity the workload cache keeps flat across cells.
+    pub fn pool_allocs_total(&self) -> usize {
+        self.cache.values().map(|c| c.pool.allocs_total()).sum()
+    }
+
+    /// Drop all cached workloads (frees their approximate memory).
+    pub fn clear_cache(&mut self) {
+        self.cache.clear();
+    }
+
+    /// Execute one campaign cell.  Identical semantics to a fresh
+    /// `Campaign::new(cfg.clone()).run()` — cell results depend only on
+    /// `cfg`, never on what the session ran before.
+    pub fn run_cell(&mut self, cfg: &CampaignConfig) -> Result<CampaignReport> {
+        if matches!(cfg.protection, Protection::Ecc | Protection::Abft) {
+            anyhow::bail!(
+                "{} protection is workload-specific; use harness::protection_compare",
+                cfg.protection.name()
+            );
+        }
+        // Trap-armed cells serialize on the global trap state; the session
+        // takes the lock for the whole cell (arm → measure → disarm).
+        let _trap_serialize = cfg.protection.uses_trap().then(crate::trap::test_lock);
+
+        let cell_t0 = Instant::now();
+
+        // Bound cache growth before admitting a kind we have not seen:
+        // without this, a worker that touches K large sizes keeps K pools
+        // live until the batch ends.
+        if !self.cache.contains_key(&cfg.workload) {
+            let cached_bytes: usize = self.cache.values().map(|c| c.pool.total_bytes()).sum();
+            if cached_bytes > CACHE_BYTES_BUDGET {
+                self.cache.clear();
+            }
+        }
+
+        let cached = self
+            .cache
+            .entry(cfg.workload)
+            .or_insert_with(|| {
+                let pool = ApproxPool::new();
+                let workload = cfg.workload.build(&pool, cfg.seed);
+                CachedWorkload { pool, workload }
+            });
+        let pool = cached.pool.clone();
+        let workload: &mut dyn Workload = cached.workload.as_mut();
+        // Re-key cached buffers to this cell's seed (no reallocation).
+        workload.reseed(cfg.seed);
+
+        let mut injector = Injector::new(cfg.seed ^ 0x696e6a6563740000);
+        let mut input_rng = crate::util::rng::Pcg64::seed(cfg.seed ^ 0x706f69736f6e);
+        let scrubber = Scrubber::new(match cfg.policy {
+            RepairPolicy::Constant(c) => c,
+            RepairPolicy::One => 1.0,
+            _ => 0.0,
+        });
+
+        // warmup (no injection): page in, stabilize frequency
+        for _ in 0..cfg.warmup {
+            workload.reset();
+            workload.run();
+        }
+
+        // Arm the trap domain for this cell (reactive protections only).
+        // Non-trap cells must not touch the process-global counters at all:
+        // they run concurrently with trap-armed cells on other workers and
+        // a reset here would clobber those cells' counts mid-measurement.
+        let guard = cfg
+            .protection
+            .trap_config(cfg.policy)
+            .map(|tc| TrapGuard::arm_reset(&pool, &tc));
+
+        let mut elapsed = Vec::with_capacity(cfg.reps);
+        let mut last_injection = InjectionReport::default();
+        let mut scrub_passes = 0u64;
+        let mut scrub_repairs = 0u64;
+
+        for rep in 0..cfg.reps {
+            workload.reset();
+            // Paper §4 methodology: ExactNaNs targets the *input* matrices
+            // ("injected into one of the two matrices after their
+            // initialization"); statistical specs inject pool-wide.
+            last_injection = match cfg.injection {
+                InjectionSpec::ExactNaNs { count } => {
+                    let mut rep = InjectionReport::default();
+                    for _ in 0..count {
+                        let idx = input_rng.index(workload.input_len());
+                        let addr =
+                            workload.poison_input(idx, crate::fp::nan::PAPER_NAN_BITS);
+                        rep.bits_flipped += 64;
+                        rep.words_touched += 1;
+                        rep.snans_created += 1;
+                        rep.nan_addrs.push(addr);
+                    }
+                    rep
+                }
+                other => injector.inject(&pool, other),
+            };
+
+            // proactive scrub before compute (period in runs)
+            if let Protection::Scrub { period_runs } = cfg.protection {
+                if period_runs > 0 && (rep as u32) % period_runs == 0 {
+                    let t0 = Instant::now();
+                    let r = scrubber.scrub(&pool);
+                    scrub_passes += 1;
+                    scrub_repairs += r.nans_repaired();
+                    // scrub time *is* protection overhead: count it
+                    let scrub_secs = t0.elapsed().as_secs_f64();
+                    let t1 = Instant::now();
+                    workload.run();
+                    elapsed.push(scrub_secs + t1.elapsed().as_secs_f64());
+                    continue;
+                }
+            }
+
+            let t0 = Instant::now();
+            workload.run();
+            elapsed.push(t0.elapsed().as_secs_f64());
+        }
+
+        // Non-trap cells by definition saw no traps; reading the global
+        // counters instead would leak another worker's numbers in.
+        let traps = if guard.is_some() {
+            handler::stats_snapshot()
+        } else {
+            handler::TrapStats::default()
+        };
+        drop(guard);
+
+        let quality = cfg.check_quality.then(|| workload.quality());
+        let flops = workload.flops();
+
+        self.cells_run += 1;
+
+        Ok(CampaignReport {
+            config_label: cfg.label(),
+            elapsed: Summary::of(&elapsed),
+            traps,
+            injection: last_injection,
+            quality,
+            scrub_passes,
+            scrub_repairs,
+            completed: true,
+            flops,
+            cell_secs: cell_t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::campaign::Campaign;
+
+    fn cfg(n: usize, seed: u64, protection: Protection) -> CampaignConfig {
+        CampaignConfig {
+            workload: WorkloadKind::MatMul { n },
+            protection,
+            injection: InjectionSpec::ExactNaNs { count: 1 },
+            policy: RepairPolicy::Zero,
+            reps: 2,
+            warmup: 0,
+            seed,
+            check_quality: true,
+        }
+    }
+
+    #[test]
+    fn session_reuses_buffers_across_same_kind_cells() {
+        let mut session = ExperimentSession::new();
+        for seed in 0..5 {
+            session.run_cell(&cfg(16, seed, Protection::None)).unwrap();
+        }
+        // matmul allocates 3 buffers (a, bt, c) exactly once
+        assert_eq!(session.cached_kinds(), 1);
+        assert_eq!(session.pool_allocs_total(), 3);
+        assert_eq!(session.cells_run(), 5);
+    }
+
+    #[test]
+    fn session_results_match_fresh_campaigns() {
+        let mut session = ExperimentSession::new();
+        for seed in [3u64, 9, 3] {
+            for protection in [Protection::RegisterMemory, Protection::None] {
+                let c = cfg(20, seed, protection);
+                let via_session = session.run_cell(&c).unwrap();
+                let fresh = Campaign::new(c).run().unwrap();
+                assert_eq!(via_session.traps.sigfpe_total, fresh.traps.sigfpe_total);
+                // injection ground truth matches except the (pool-specific)
+                // addresses
+                assert_eq!(
+                    via_session.injection.bits_flipped,
+                    fresh.injection.bits_flipped
+                );
+                assert_eq!(
+                    via_session.injection.snans_created,
+                    fresh.injection.snans_created
+                );
+                assert_eq!(
+                    via_session.quality.unwrap().rel_l2_error,
+                    fresh.quality.unwrap().rel_l2_error
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn session_mixed_kinds_cache_independently() {
+        let mut session = ExperimentSession::new();
+        let kinds = [
+            WorkloadKind::MatMul { n: 12 },
+            WorkloadKind::Stencil { n: 12, steps: 5 },
+            WorkloadKind::MatMul { n: 12 },
+            WorkloadKind::MatMul { n: 16 }, // different size → different cache slot
+        ];
+        for (i, kind) in kinds.into_iter().enumerate() {
+            let c = CampaignConfig {
+                workload: kind,
+                seed: i as u64,
+                reps: 1,
+                warmup: 0,
+                check_quality: true,
+                ..Default::default()
+            };
+            let rep = session.run_cell(&c).unwrap();
+            assert!(!rep.quality.unwrap().corrupted);
+        }
+        assert_eq!(session.cached_kinds(), 3);
+    }
+
+    #[test]
+    fn cache_evicts_other_kinds_past_byte_budget() {
+        // ~71 MB stencil pool (2 × 2100² × 8 B) exceeds the 64 MB budget
+        // at O(n²) compute cost, so admitting a different kind afterwards
+        // must evict it.
+        let mut session = ExperimentSession::new();
+        let big = CampaignConfig {
+            workload: WorkloadKind::Stencil { n: 2100, steps: 1 },
+            protection: Protection::None,
+            injection: InjectionSpec::None,
+            reps: 1,
+            warmup: 0,
+            check_quality: false,
+            ..Default::default()
+        };
+        session.run_cell(&big).unwrap();
+        assert_eq!(session.cached_kinds(), 1);
+        session.run_cell(&cfg(8, 1, Protection::None)).unwrap();
+        assert_eq!(
+            session.cached_kinds(),
+            1,
+            "big pool evicted when the new kind was admitted"
+        );
+    }
+
+    #[test]
+    fn session_rejects_workload_specific_protections() {
+        let mut session = ExperimentSession::new();
+        assert!(session.run_cell(&cfg(8, 1, Protection::Ecc)).is_err());
+        assert!(session.run_cell(&cfg(8, 1, Protection::Abft)).is_err());
+    }
+
+    #[test]
+    fn cell_secs_covers_the_reps() {
+        let mut session = ExperimentSession::new();
+        let rep = session.run_cell(&cfg(24, 7, Protection::None)).unwrap();
+        assert!(rep.cell_secs >= rep.elapsed.mean * rep.elapsed.n as f64 * 0.5);
+    }
+}

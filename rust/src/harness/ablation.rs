@@ -8,8 +8,9 @@ use crate::approxmem::ecc::EccBuf;
 use crate::approxmem::injector::InjectionSpec;
 use crate::approxmem::pool::ApproxPool;
 use crate::approxmem::scrubber::Scrubber;
-use crate::coordinator::campaign::{Campaign, CampaignConfig};
+use crate::coordinator::campaign::CampaignConfig;
 use crate::coordinator::protection::Protection;
+use crate::coordinator::scheduler;
 use crate::repair::policy::RepairPolicy;
 use crate::trap::{TrapConfig, TrapGuard};
 use crate::util::rng::Pcg64;
@@ -19,6 +20,19 @@ use crate::workloads::{kernels, WorkloadKind};
 /// EXT-POLICY: run each repair policy over workloads with one injected
 /// NaN; report output quality (and the LU ÷0 hazard).
 pub fn policy_ablation(n: usize, trials: usize, seed: u64) -> anyhow::Result<Table> {
+    policy_ablation_with_workers(n, trials, seed, scheduler::default_workers())
+}
+
+/// [`policy_ablation`] with an explicit scheduler worker count.  The
+/// (workload × policy × trial) matrix is one [`scheduler::run_batch`];
+/// every cell is seed-determined, so the table is identical at any worker
+/// count.
+pub fn policy_ablation_with_workers(
+    n: usize,
+    trials: usize,
+    seed: u64,
+    workers: usize,
+) -> anyhow::Result<Table> {
     let policies = [
         RepairPolicy::Zero,
         RepairPolicy::One,
@@ -31,16 +45,11 @@ pub fn policy_ablation(n: usize, trials: usize, seed: u64) -> anyhow::Result<Tab
         WorkloadKind::Lu { n },
         WorkloadKind::Stencil { n, steps: 20 },
     ];
-    let mut t = Table::new(
-        &format!("EXT-POLICY — repair-value ablation (n={n}, {trials} trials)"),
-        &["workload", "policy", "mean rel err", "corrupted"],
-    );
+    let mut configs = Vec::with_capacity(kinds.len() * policies.len() * trials);
     for kind in kinds {
         for policy in policies {
-            let mut err = 0.0;
-            let mut corrupted = 0usize;
             for trial in 0..trials {
-                let cfg = CampaignConfig {
+                configs.push(CampaignConfig {
                     workload: kind,
                     protection: Protection::RegisterMemory,
                     injection: InjectionSpec::ExactNaNs { count: 1 },
@@ -49,8 +58,22 @@ pub fn policy_ablation(n: usize, trials: usize, seed: u64) -> anyhow::Result<Tab
                     warmup: 0,
                     seed: seed.wrapping_add(trial as u64 * 7919),
                     check_quality: true,
-                };
-                let rep = Campaign::new(cfg).run()?;
+                });
+            }
+        }
+    }
+    let mut results = scheduler::run_batch(configs, workers).into_iter();
+
+    let mut t = Table::new(
+        &format!("EXT-POLICY — repair-value ablation (n={n}, {trials} trials)"),
+        &["workload", "policy", "mean rel err", "corrupted"],
+    );
+    for kind in kinds {
+        for policy in policies {
+            let mut err = 0.0;
+            let mut corrupted = 0usize;
+            for _ in 0..trials {
+                let rep = results.next().expect("one result per config")?;
                 let q = rep.quality.unwrap();
                 if q.corrupted {
                     corrupted += 1;

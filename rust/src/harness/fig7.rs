@@ -5,11 +5,17 @@
 //! configurations take essentially the same time (repair overhead is
 //! negligible), while the SIGFPE count is N for register-only vs exactly 1
 //! for register+memory.
+//!
+//! Cells execute through [`scheduler::run_batch`]: the three protections ×
+//! all sizes form one batch; the normal (non-trap) cells run concurrently
+//! while the two trap-armed cells per size serialize on the trap lock.
 
 use crate::approxmem::injector::InjectionSpec;
-use crate::coordinator::campaign::{Campaign, CampaignConfig};
+use crate::coordinator::campaign::CampaignConfig;
 use crate::coordinator::protection::Protection;
+use crate::coordinator::scheduler;
 use crate::repair::policy::RepairPolicy;
+use crate::util::report::Record;
 use crate::util::table::{fmt_secs, Table};
 use crate::workloads::WorkloadKind;
 
@@ -29,9 +35,42 @@ pub struct Fig7Report {
     pub rows: Vec<Fig7Row>,
 }
 
+impl Fig7Report {
+    /// Structured rows for the JSON-lines/CSV sinks.
+    pub fn records(&self, workload: &str) -> Vec<Record> {
+        self.rows
+            .iter()
+            .map(|r| {
+                Record::new("fig7_row")
+                    .field("workload", workload)
+                    .field("n", r.n)
+                    .field("normal_secs", r.normal_secs)
+                    .field("register_secs", r.register_secs)
+                    .field("memory_secs", r.memory_secs)
+                    .field("register_over_normal", r.register_secs / r.normal_secs)
+                    .field("memory_over_normal", r.memory_secs / r.normal_secs)
+                    .field("register_sigfpe", r.register_sigfpe)
+                    .field("memory_sigfpe", r.memory_sigfpe)
+            })
+            .collect()
+    }
+}
+
 /// `workload`: "matmul" (paper Fig. 7) or "matvec" (paper §4 last ¶).
 pub fn run(workload: &str, sizes: &[usize], reps: usize, seed: u64) -> anyhow::Result<Fig7Report> {
-    let mut rows = Vec::new();
+    run_with_workers(workload, sizes, reps, seed, scheduler::default_workers())
+}
+
+/// [`run`] with an explicit scheduler worker count.
+pub fn run_with_workers(
+    workload: &str,
+    sizes: &[usize],
+    reps: usize,
+    seed: u64,
+    workers: usize,
+) -> anyhow::Result<Fig7Report> {
+    // Three cells per size, in a fixed order the result indexing relies on.
+    let mut configs = Vec::with_capacity(sizes.len() * 3);
     for &n in sizes {
         let kind = match workload {
             "matvec" => WorkloadKind::MatVec { n },
@@ -47,17 +86,25 @@ pub fn run(workload: &str, sizes: &[usize], reps: usize, seed: u64) -> anyhow::R
             seed,
             check_quality: false,
         };
-        let normal = Campaign::new(mk(Protection::None, InjectionSpec::None)).run()?;
-        let register = Campaign::new(mk(
+        configs.push(mk(Protection::None, InjectionSpec::None));
+        configs.push(mk(
             Protection::RegisterOnly,
             InjectionSpec::ExactNaNs { count: 1 },
-        ))
-        .run()?;
-        let memory = Campaign::new(mk(
+        ));
+        configs.push(mk(
             Protection::RegisterMemory,
             InjectionSpec::ExactNaNs { count: 1 },
-        ))
-        .run()?;
+        ));
+    }
+
+    let mut results = scheduler::run_batch(configs, workers).into_iter();
+    let mut next = || results.next().expect("run_batch returns one result per config");
+
+    let mut rows = Vec::with_capacity(sizes.len());
+    for &n in sizes {
+        let normal = next()?;
+        let register = next()?;
+        let memory = next()?;
         rows.push(Fig7Row {
             n,
             normal_secs: normal.elapsed.mean,
@@ -141,5 +188,22 @@ mod tests {
             row.memory_secs,
             row.normal_secs
         );
+    }
+
+    #[test]
+    fn worker_count_does_not_change_counts() {
+        let serial = super::run_with_workers("matmul", &[16], 2, 3, 1).unwrap();
+        let parallel = super::run_with_workers("matmul", &[16], 2, 3, 4).unwrap();
+        assert_eq!(serial.rows[0].register_sigfpe, parallel.rows[0].register_sigfpe);
+        assert_eq!(serial.rows[0].memory_sigfpe, parallel.rows[0].memory_sigfpe);
+    }
+
+    #[test]
+    fn records_cover_every_row() {
+        let rep = super::run("matmul", &[16], 2, 3).unwrap();
+        let recs = rep.records("matmul");
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].kind(), "fig7_row");
+        assert!(recs[0].get("memory_sigfpe").is_some());
     }
 }

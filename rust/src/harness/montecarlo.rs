@@ -2,10 +2,18 @@
 //! (fp::analytics) against the actual bit-flip injector — the cross-check
 //! that the EXT-BER numbers motivating the paper's premise are not an
 //! artifact of either implementation.
+//!
+//! Every (BER × trial) injection is an independent cell fanned out through
+//! the scheduler's batch engine ([`scheduler::run_batch_fn`] — the same
+//! worker pool `run_batch` gives campaign cells); each trial's RNG is
+//! seeded from the trial index alone, so the aggregate is identical at any
+//! worker count.
 
 use crate::approxmem::injector::{InjectionSpec, Injector};
 use crate::approxmem::pool::ApproxPool;
+use crate::coordinator::scheduler;
 use crate::fp::analytics;
+use crate::util::report::Record;
 use crate::util::rng::Pcg64;
 use crate::util::table::Table;
 
@@ -15,14 +23,35 @@ pub struct McReport {
     pub rows: Vec<(f64, f64, f64)>,
 }
 
+impl McReport {
+    /// Structured rows for the JSON-lines/CSV sinks.
+    pub fn records(&self) -> Vec<Record> {
+        self.rows
+            .iter()
+            .map(|&(ber, analytic, empirical)| {
+                Record::new("montecarlo_row")
+                    .field("ber", ber)
+                    .field("analytic_expected_nans", analytic)
+                    .field("empirical_mean_nans", empirical)
+            })
+            .collect()
+    }
+}
+
 /// For each BER, inject into a buffer of `words` random values `trials`
 /// times and compare the empirical NaN count to the analytic expectation.
 pub fn run(words: usize, trials: usize, bers: &[f64], seed: u64) -> McReport {
-    let mut table = Table::new(
-        &format!("EXT-MC — analytic vs empirical NaN rate ({words} f64, {trials} trials)"),
-        &["BER", "analytic E[NaN]", "empirical mean", "ratio"],
-    );
-    let mut rows = Vec::new();
+    run_with_workers(words, trials, bers, seed, scheduler::default_workers())
+}
+
+/// [`run`] with an explicit scheduler worker count.
+pub fn run_with_workers(
+    words: usize,
+    trials: usize,
+    bers: &[f64],
+    seed: u64,
+    workers: usize,
+) -> McReport {
     // Mixed population: ordinary magnitudes (whose NaN probability is
     // astronomically small — the reason single flips rarely make NaNs)
     // plus near-overflow values one exponent flip away from NaN (the
@@ -38,16 +67,35 @@ pub fn run(words: usize, trials: usize, bers: &[f64], seed: u64) -> McReport {
         })
         .collect();
 
+    // one cell per (ber, trial): inject into a private buffer, count NaNs
+    let cells: Vec<(f64, u64)> = bers
+        .iter()
+        .flat_map(|&ber| (0..trials as u64).map(move |trial| (ber, trial)))
+        .collect();
+    let values_ref = &values;
+    let results = scheduler::run_batch_fn(cells, workers, move |(ber, trial), _session| {
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f64(words);
+        buf.as_mut_slice().copy_from_slice(values_ref);
+        let mut inj = Injector::new(seed ^ ((trial + 1) << 20));
+        inj.inject(&pool, InjectionSpec::Ber(ber));
+        Ok(buf.as_slice().iter().filter(|v| v.is_nan()).count() as u64)
+    });
+
+    let mut table = Table::new(
+        &format!("EXT-MC — analytic vs empirical NaN rate ({words} f64, {trials} trials)"),
+        &["BER", "analytic E[NaN]", "empirical mean", "ratio"],
+    );
+    let mut rows = Vec::new();
+    let mut results = results.into_iter();
     for &ber in bers {
         let analytic = analytics::expected_nans_f64(&values, ber);
         let mut total_nans = 0u64;
-        for trial in 0..trials {
-            let pool = ApproxPool::new();
-            let mut buf = pool.alloc_f64(words);
-            buf.as_mut_slice().copy_from_slice(&values);
-            let mut inj = Injector::new(seed ^ ((trial as u64 + 1) << 20));
-            inj.inject(&pool, InjectionSpec::Ber(ber));
-            total_nans += buf.as_slice().iter().filter(|v| v.is_nan()).count() as u64;
+        for _ in 0..trials {
+            total_nans += results
+                .next()
+                .expect("one result per cell")
+                .expect("injection cells cannot fail");
         }
         let empirical = total_nans as f64 / trials as f64;
         let ratio = if analytic > 0.0 {
@@ -89,5 +137,12 @@ mod tests {
     fn zero_ber_zero_nans() {
         let rep = super::run(512, 3, &[0.0], 9);
         assert_eq!(rep.rows[0].2, 0.0);
+    }
+
+    #[test]
+    fn worker_count_invariant() {
+        let a = super::run_with_workers(1024, 8, &[1e-3], 5, 1);
+        let b = super::run_with_workers(1024, 8, &[1e-3], 5, 4);
+        assert_eq!(a.rows, b.rows);
     }
 }

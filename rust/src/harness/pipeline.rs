@@ -10,7 +10,9 @@
 
 use anyhow::Result;
 
+use crate::coordinator::scheduler;
 use crate::runtime::{Engine, Tensor};
+use crate::util::report::Record;
 use crate::util::rng::Pcg64;
 use crate::util::table::Table;
 
@@ -20,6 +22,18 @@ pub struct PipelineReport {
     pub total_repairs: u64,
     pub steps: usize,
     pub corrupted: bool,
+}
+
+impl PipelineReport {
+    /// Structured summary record for the JSON-lines/CSV sinks.
+    pub fn record(&self, faults: FaultSpec) -> Record {
+        Record::new("pipeline_run")
+            .field("faults", format!("{faults:?}"))
+            .field("steps", self.steps)
+            .field("final_residual", self.final_residual)
+            .field("total_repairs", self.total_repairs)
+            .field("corrupted", self.corrupted)
+    }
 }
 
 /// Fault model for the pipeline run.
@@ -148,9 +162,43 @@ pub fn run_jacobi(
     })
 }
 
+/// Run the pipeline for several independent fault specs concurrently —
+/// the multi-cell `pipeline` entry point.  Each spec is one cell on the
+/// scheduler's worker pool (each solve is internally sequential); results
+/// come back in spec order.
+pub fn run_matrix(
+    artifacts_dir: &str,
+    steps: usize,
+    specs: &[FaultSpec],
+    seed: u64,
+    log_every: usize,
+    workers: usize,
+) -> Vec<Result<PipelineReport>> {
+    scheduler::run_batch_fn(specs.to_vec(), workers, move |spec, _session| {
+        run_jacobi(artifacts_dir, steps, spec, seed, log_every)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::FaultSpec;
+
+    #[test]
+    fn run_matrix_matches_individual_runs() {
+        let specs = [
+            FaultSpec::None,
+            FaultSpec::PlantNan { every: 5 },
+            FaultSpec::Ber(1e-7),
+        ];
+        let batch = super::run_matrix("artifacts", 12, &specs, 3, 0, 3);
+        assert_eq!(batch.len(), 3);
+        for (spec, got) in specs.iter().zip(batch) {
+            let got = got.unwrap();
+            let solo = super::run_jacobi("artifacts", 12, *spec, 3, 0).unwrap();
+            assert_eq!(got.total_repairs, solo.total_repairs, "{spec:?}");
+            assert_eq!(got.final_residual, solo.final_residual, "{spec:?}");
+        }
+    }
 
     #[test]
     fn pipeline_converges_without_faults() {

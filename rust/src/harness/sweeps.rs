@@ -5,9 +5,11 @@
 use crate::approxmem::energy::DramEnergyModel;
 use crate::approxmem::injector::InjectionSpec;
 use crate::approxmem::retention::RetentionModel;
-use crate::coordinator::campaign::{Campaign, CampaignConfig};
+use crate::coordinator::campaign::CampaignConfig;
 use crate::coordinator::protection::Protection;
+use crate::coordinator::scheduler;
 use crate::fp::analytics;
+use crate::util::report::Record;
 use crate::util::rng::Pcg64;
 use crate::util::table::{fmt_pct, Table};
 use crate::workloads::WorkloadKind;
@@ -119,19 +121,30 @@ pub fn quality_sweep(
     trials: usize,
     seed: u64,
 ) -> anyhow::Result<(Table, Vec<QualityCell>)> {
+    quality_sweep_with_workers(kind, bers, trials, seed, scheduler::default_workers())
+}
+
+/// [`quality_sweep`] with an explicit scheduler worker count.  Every
+/// (BER × protection × trial) campaign is an independent cell in one
+/// [`scheduler::run_batch`]; trial seeds are a pure function of the cell,
+/// so aggregation is identical at any worker count.
+pub fn quality_sweep_with_workers(
+    kind: WorkloadKind,
+    bers: &[f64],
+    trials: usize,
+    seed: u64,
+    workers: usize,
+) -> anyhow::Result<(Table, Vec<QualityCell>)> {
     let protections = [
         Protection::None,
         Protection::RegisterMemory,
         Protection::Scrub { period_runs: 1 },
     ];
-    let mut cells = Vec::new();
+    let mut configs = Vec::with_capacity(bers.len() * protections.len() * trials);
     for &ber in bers {
         for &protection in &protections {
-            let mut err_sum = 0.0;
-            let mut corrupted = 0usize;
-            let mut traps = 0u64;
             for trial in 0..trials {
-                let cfg = CampaignConfig {
+                configs.push(CampaignConfig {
                     workload: kind,
                     protection,
                     // background drift at `ber` + one paper-pattern NaN:
@@ -143,8 +156,20 @@ pub fn quality_sweep(
                     seed: seed ^ (trial as u64) << 8,
                     check_quality: true,
                     ..Default::default()
-                };
-                let rep = Campaign::new(cfg).run()?;
+                });
+            }
+        }
+    }
+
+    let mut results = scheduler::run_batch(configs, workers).into_iter();
+    let mut cells = Vec::new();
+    for &ber in bers {
+        for &protection in &protections {
+            let mut err_sum = 0.0;
+            let mut corrupted = 0usize;
+            let mut traps = 0u64;
+            for _ in 0..trials {
+                let rep = results.next().expect("one result per config")?;
                 let q = rep.quality.unwrap();
                 if q.corrupted {
                     corrupted += 1;
@@ -192,6 +217,22 @@ pub fn quality_sweep(
     Ok((t, cells))
 }
 
+/// Structured rows for the quality sweep.
+pub fn quality_records(kind: WorkloadKind, cells: &[QualityCell]) -> Vec<Record> {
+    cells
+        .iter()
+        .map(|c| {
+            Record::new("quality_cell")
+                .field("workload", kind.to_string())
+                .field("ber", c.ber)
+                .field("protection", c.protection)
+                .field("rel_l2_error", c.rel_err)
+                .field("corrupted_frac", c.corrupted_frac)
+                .field("mean_traps", c.mean_traps)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,6 +273,23 @@ mod tests {
             .parse()
             .unwrap();
         assert!((fp16_ratio - 4.0).abs() < 0.1, "{tsv}");
+    }
+
+    #[test]
+    fn quality_sweep_worker_count_invariant() {
+        let kind = WorkloadKind::Stencil { n: 12, steps: 5 };
+        let (_, serial) = quality_sweep_with_workers(kind, &[1e-5], 3, 11, 1).unwrap();
+        let (_, parallel) = quality_sweep_with_workers(kind, &[1e-5], 3, 11, 4).unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.protection, p.protection);
+            assert_eq!(s.corrupted_frac, p.corrupted_frac, "{s:?} vs {p:?}");
+            assert_eq!(s.mean_traps, p.mean_traps, "{s:?} vs {p:?}");
+            assert!(
+                (s.rel_err == p.rel_err) || (s.rel_err.is_nan() && p.rel_err.is_nan()),
+                "{s:?} vs {p:?}"
+            );
+        }
     }
 
     #[test]

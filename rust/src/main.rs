@@ -2,20 +2,32 @@
 //!
 //! One subcommand per paper table/figure plus the extension experiments
 //! (DESIGN.md §5). `nanrepair help` lists everything.
+//!
+//! Global options (every subcommand): `--json` / `--format json|csv|text`
+//! select the output encoding, `--out FILE` redirects it, and
+//! `--workers N` sets the scheduler worker count (0 = all cores; also
+//! settable via `NANREPAIR_WORKERS`).  Default text output on stdout is
+//! byte-identical to the pre-sink CLI.
 
 use anyhow::Result;
 use nanrepair::approxmem::injector::InjectionSpec;
-use nanrepair::coordinator::campaign::{Campaign, CampaignConfig};
+use nanrepair::coordinator::campaign::{Campaign, CampaignConfig, CampaignReport};
 use nanrepair::coordinator::protection::Protection;
+use nanrepair::coordinator::scheduler;
 use nanrepair::harness;
 use nanrepair::repair::policy::RepairPolicy;
-use nanrepair::util::cli::{App, CmdSpec};
+use nanrepair::util::cli::{App, CmdSpec, Matches};
 use nanrepair::util::config::Config;
+use nanrepair::util::report::{OutputFormat, Record, ResultSink};
 use nanrepair::util::table::fmt_secs;
 use nanrepair::workloads::WorkloadKind;
 
 fn app() -> App {
     App::new("nanrepair", "reactive NaN repair for approximate memory — paper reproduction")
+        .global_flag("json", "emit JSON-lines records (shorthand for --format json)")
+        .global_opt("format", Some("text"), "output encoding: text|json|csv")
+        .global_opt("out", None, "write output to this file instead of stdout")
+        .global_opt("workers", Some("0"), "scheduler worker threads (0 = all cores)")
         .cmd(
             CmdSpec::new("run", "run one campaign cell (workload × protection × injection)")
                 .opt("workload", Some("matmul:512"), "workload spec name:size[:extra]")
@@ -73,17 +85,36 @@ fn app() -> App {
                 .opt("bers", Some("1e-4,1e-3,1e-2"), "BER list"),
         )
         .cmd(
-            CmdSpec::new("pipeline", "e2e PJRT jacobi under injection (E2E)")
+            CmdSpec::new("pipeline", "e2e jacobi under injection (E2E)")
                 .opt("steps", Some("60"), "solver steps")
-                .opt("faults", Some("nan:5"), "none | nan:K (plant every K) | ber:RATE")
+                .opt(
+                    "faults",
+                    Some("nan:5"),
+                    "comma-separated specs: none | nan:K (plant every K) | ber:RATE",
+                )
                 .opt("artifacts", Some("artifacts"), "artifacts directory")
                 .opt("seed", Some("42"), "PRNG seed"),
         )
-        .cmd(CmdSpec::new("artifacts", "list available PJRT artifacts")
+        .cmd(CmdSpec::new("artifacts", "list available runtime artifacts")
             .opt("dir", Some("artifacts"), "artifacts directory"))
 }
 
-fn cmd_run(m: &nanrepair::util::cli::Matches) -> Result<()> {
+/// The output sink requested by the global options, or `None` when the
+/// legacy text-on-stdout path should run untouched.
+fn make_sink(m: &Matches) -> Result<Option<ResultSink>> {
+    let format = if m.flag("json") {
+        OutputFormat::JsonLines
+    } else {
+        OutputFormat::parse(m.get_str("format")?)?
+    };
+    Ok(match (format, m.get("out")) {
+        (OutputFormat::Text, None) => None,
+        (f, None) => Some(ResultSink::stdout(f)),
+        (f, Some(path)) => Some(ResultSink::to_path(f, path)?),
+    })
+}
+
+fn campaign_cfg(m: &Matches) -> Result<CampaignConfig> {
     // optional config file, CLI overrides
     let file_cfg = match m.get("config") {
         Some(path) => Config::load(path)?,
@@ -102,7 +133,7 @@ fn cmd_run(m: &nanrepair::util::cli::Matches) -> Result<()> {
             count: m.get_parse("nans")?,
         },
     };
-    let cfg = CampaignConfig {
+    Ok(CampaignConfig {
         workload,
         protection,
         injection,
@@ -111,8 +142,10 @@ fn cmd_run(m: &nanrepair::util::cli::Matches) -> Result<()> {
         warmup: 1,
         seed: m.get_parse("seed")?,
         check_quality: m.flag("quality"),
-    };
-    let rep = Campaign::new(cfg).run()?;
+    })
+}
+
+fn print_campaign_text(rep: &CampaignReport) {
     println!("campaign {}", rep.config_label);
     println!(
         "  elapsed: {} ± {} over {} reps ({:.2} GFLOP/s)",
@@ -139,103 +172,13 @@ fn cmd_run(m: &nanrepair::util::cli::Matches) -> Result<()> {
             q.rel_l2_error, q.corrupted
         );
     }
-    Ok(())
 }
 
-fn main() -> Result<()> {
-    env_logger();
-    let argv: Vec<String> = std::env::args().skip(1).collect();
-    let app = app();
-    let Some(m) = app.parse(&argv)? else {
-        return Ok(());
-    };
-
-    match m.cmd.as_str() {
-        "run" => cmd_run(&m)?,
-        "fig1" => harness::fig1::run(m.get_parse("n")?).table.print(),
-        "fig6" => {
-            let paths: Vec<std::path::PathBuf> = m
-                .get("corpus")
-                .unwrap_or("")
-                .split(',')
-                .filter(|s| !s.is_empty())
-                .map(Into::into)
-                .collect();
-            let rep = harness::fig6::run(paths)?;
-            rep.table.print();
-            println!("O2 found ratio: {:.2} %", rep.o2_ratio * 100.0);
-        }
-        "fig7" => {
-            let rep = harness::fig7::run(
-                m.get_str("workload")?,
-                &m.get_list::<usize>("sizes")?,
-                m.get_parse("reps")?,
-                m.get_parse("seed")?,
-            )?;
-            rep.time_table.print();
-            println!();
-            rep.sigfpe_table.print();
-        }
-        "ber-sweep" => harness::sweeps::ber_sweep(m.get_parse("values")?, 42).print(),
-        "energy" => harness::sweeps::energy_sweep().print(),
-        "width-sweep" => harness::sweeps::width_sweep(m.get_parse("ber")?).print(),
-        "quality-sweep" => {
-            let kind = WorkloadKind::parse(m.get_str("workload")?)?;
-            let (table, _) = harness::sweeps::quality_sweep(
-                kind,
-                &m.get_list::<f64>("bers")?,
-                m.get_parse("trials")?,
-                m.get_parse("seed")?,
-            )?;
-            table.print();
-        }
-        "policy-ablation" => harness::ablation::policy_ablation(
-            m.get_parse("n")?,
-            m.get_parse("trials")?,
-            m.get_parse("seed")?,
-        )?
-        .print(),
-        "protection-compare" => {
-            harness::ablation::protection_compare(m.get_parse("n")?, m.get_parse("seed")?)?
-                .print()
-        }
-        "trap-cost" => {
-            harness::trapcost::run(m.get_parse("trials")?).table.print();
-            println!("\nlast traps:\n{}", nanrepair::trap::diagnostics::render(5));
-        }
-        "montecarlo" => harness::montecarlo::run(
-            m.get_parse("words")?,
-            m.get_parse("trials")?,
-            &m.get_list::<f64>("bers")?,
-            42,
-        )
-        .table
-        .print(),
-        "pipeline" => {
-            let faults = parse_faults(m.get_str("faults")?)?;
-            let rep = harness::pipeline::run_jacobi(
-                m.get_str("artifacts")?,
-                m.get_parse("steps")?,
-                faults,
-                m.get_parse("seed")?,
-                5,
-            )?;
-            rep.table.print();
-            println!(
-                "final residual {:.3e}, total repairs {}, corrupted: {}",
-                rep.final_residual, rep.total_repairs, rep.corrupted
-            );
-        }
-        "artifacts" => {
-            let engine = nanrepair::runtime::Engine::cpu(m.get_str("dir")?)?;
-            println!("platform: {}", engine.platform());
-            for a in engine.available() {
-                println!("  {a}");
-            }
-        }
-        other => anyhow::bail!("unhandled command {other}"),
-    }
-    Ok(())
+fn parse_fault_list(s: &str) -> Result<Vec<harness::pipeline::FaultSpec>> {
+    s.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| parse_faults(p.trim()))
+        .collect()
 }
 
 fn parse_faults(s: &str) -> Result<harness::pipeline::FaultSpec> {
@@ -249,6 +192,234 @@ fn parse_faults(s: &str) -> Result<harness::pipeline::FaultSpec> {
         "ber" => FaultSpec::Ber(it.next().unwrap_or("1e-7").parse()?),
         other => anyhow::bail!("unknown fault spec {other:?}"),
     })
+}
+
+fn main() -> Result<()> {
+    env_logger();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    let Some(m) = app.parse(&argv)? else {
+        return Ok(());
+    };
+
+    // --workers N feeds scheduler::default_workers() through the
+    // environment so every harness entry point picks it up (0 = auto).
+    if let Some(w) = m.get("workers") {
+        if w.parse::<usize>()? > 0 {
+            std::env::set_var("NANREPAIR_WORKERS", w);
+        }
+    }
+    let workers = scheduler::default_workers();
+    let mut sink = make_sink(&m)?;
+
+    match m.cmd.as_str() {
+        "run" => {
+            let rep = Campaign::new(campaign_cfg(&m)?).run()?;
+            match &mut sink {
+                None => print_campaign_text(&rep),
+                Some(s) => s.record(&rep.to_record())?,
+            }
+        }
+        "fig1" => {
+            let rep = harness::fig1::run(m.get_parse("n")?);
+            match &mut sink {
+                None => rep.table.print(),
+                Some(s) => s.table(&rep.table, "fig1_row")?,
+            }
+        }
+        "fig6" => {
+            let paths: Vec<std::path::PathBuf> = m
+                .get("corpus")
+                .unwrap_or("")
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(Into::into)
+                .collect();
+            let rep = harness::fig6::run(paths)?;
+            match &mut sink {
+                None => {
+                    rep.table.print();
+                    println!("O2 found ratio: {:.2} %", rep.o2_ratio * 100.0);
+                }
+                Some(s) => {
+                    s.table(&rep.table, "fig6_row")?;
+                    s.record(
+                        &Record::new("fig6_summary").field("o2_found_ratio", rep.o2_ratio),
+                    )?;
+                }
+            }
+        }
+        "fig7" => {
+            let workload = m.get_str("workload")?;
+            let rep = harness::fig7::run_with_workers(
+                workload,
+                &m.get_list::<usize>("sizes")?,
+                m.get_parse("reps")?,
+                m.get_parse("seed")?,
+                workers,
+            )?;
+            match &mut sink {
+                None => {
+                    rep.time_table.print();
+                    println!();
+                    rep.sigfpe_table.print();
+                }
+                Some(s) => {
+                    for rec in rep.records(workload) {
+                        s.record(&rec)?;
+                    }
+                }
+            }
+        }
+        "ber-sweep" => {
+            let t = harness::sweeps::ber_sweep(m.get_parse("values")?, 42);
+            match &mut sink {
+                None => t.print(),
+                Some(s) => s.table(&t, "ber_sweep_row")?,
+            }
+        }
+        "energy" => {
+            let t = harness::sweeps::energy_sweep();
+            match &mut sink {
+                None => t.print(),
+                Some(s) => s.table(&t, "energy_row")?,
+            }
+        }
+        "width-sweep" => {
+            let t = harness::sweeps::width_sweep(m.get_parse("ber")?);
+            match &mut sink {
+                None => t.print(),
+                Some(s) => s.table(&t, "width_row")?,
+            }
+        }
+        "quality-sweep" => {
+            let kind = WorkloadKind::parse(m.get_str("workload")?)?;
+            let (table, cells) = harness::sweeps::quality_sweep_with_workers(
+                kind,
+                &m.get_list::<f64>("bers")?,
+                m.get_parse("trials")?,
+                m.get_parse("seed")?,
+                workers,
+            )?;
+            match &mut sink {
+                None => table.print(),
+                Some(s) => {
+                    for rec in harness::sweeps::quality_records(kind, &cells) {
+                        s.record(&rec)?;
+                    }
+                }
+            }
+        }
+        "policy-ablation" => {
+            let t = harness::ablation::policy_ablation_with_workers(
+                m.get_parse("n")?,
+                m.get_parse("trials")?,
+                m.get_parse("seed")?,
+                workers,
+            )?;
+            match &mut sink {
+                None => t.print(),
+                Some(s) => s.table(&t, "policy_ablation_row")?,
+            }
+        }
+        "protection-compare" => {
+            let t = harness::ablation::protection_compare(m.get_parse("n")?, m.get_parse("seed")?)?;
+            match &mut sink {
+                None => t.print(),
+                Some(s) => s.table(&t, "protection_compare_row")?,
+            }
+        }
+        "trap-cost" => {
+            let rep = harness::trapcost::run(m.get_parse("trials")?);
+            match &mut sink {
+                None => {
+                    rep.table.print();
+                    println!("\nlast traps:\n{}", nanrepair::trap::diagnostics::render(5));
+                }
+                Some(s) => {
+                    s.table(&rep.table, "trap_cost_row")?;
+                    s.record(
+                        &Record::new("trap_cost_summary")
+                            .field("roundtrip_secs", rep.roundtrip_secs)
+                            .field("handler_cycles", rep.handler_cycles),
+                    )?;
+                }
+            }
+        }
+        "montecarlo" => {
+            let rep = harness::montecarlo::run_with_workers(
+                m.get_parse("words")?,
+                m.get_parse("trials")?,
+                &m.get_list::<f64>("bers")?,
+                42,
+                workers,
+            );
+            match &mut sink {
+                None => rep.table.print(),
+                Some(s) => {
+                    for rec in rep.records() {
+                        s.record(&rec)?;
+                    }
+                }
+            }
+        }
+        "pipeline" => {
+            let specs = parse_fault_list(m.get_str("faults")?)?;
+            anyhow::ensure!(!specs.is_empty(), "--faults lists no specs");
+            let artifacts = m.get_str("artifacts")?;
+            let steps = m.get_parse("steps")?;
+            let seed = m.get_parse("seed")?;
+            let reports =
+                harness::pipeline::run_matrix(artifacts, steps, &specs, seed, 5, workers);
+            let reports: Vec<_> = reports.into_iter().collect::<anyhow::Result<_>>()?;
+            match &mut sink {
+                None => {
+                    for rep in &reports {
+                        rep.table.print();
+                        println!(
+                            "final residual {:.3e}, total repairs {}, corrupted: {}",
+                            rep.final_residual, rep.total_repairs, rep.corrupted
+                        );
+                    }
+                }
+                Some(s) => {
+                    // group by record kind (steps, then summaries) so the
+                    // CSV encoding stays one header per kind
+                    for rep in &reports {
+                        s.table(&rep.table, "pipeline_step")?;
+                    }
+                    for (spec, rep) in specs.iter().zip(&reports) {
+                        s.record(&rep.record(*spec))?;
+                    }
+                }
+            }
+        }
+        "artifacts" => {
+            let engine = nanrepair::runtime::Engine::cpu(m.get_str("dir")?)?;
+            match &mut sink {
+                None => {
+                    println!("platform: {}", engine.platform());
+                    for a in engine.available() {
+                        println!("  {a}");
+                    }
+                }
+                Some(s) => {
+                    for a in engine.available() {
+                        s.record(
+                            &Record::new("artifact")
+                                .field("name", a)
+                                .field("platform", engine.platform()),
+                        )?;
+                    }
+                }
+            }
+        }
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+    if let Some(s) = &mut sink {
+        s.flush()?;
+    }
+    Ok(())
 }
 
 /// Minimal env_logger substitute: RUST_LOG=debug|info|warn enables stderr

@@ -1,42 +1,88 @@
-//! PJRT engine: compile HLO-text artifacts once, execute many times.
+//! Artifact runtime: execute the L1/L2 models from the Rust request path.
+//!
+//! The original deployment compiles the Pallas kernels to HLO text
+//! (`artifacts/*.hlo.txt`, see `python/compile/aot.py`) and executes them
+//! through the PJRT C API.  PJRT bindings are unavailable in this offline
+//! build, so the engine ships a **native interpreter** for the four L2
+//! entry points instead: each model is evaluated in Rust with *exactly*
+//! the kernel semantics of `python/compile/` — tile-granular NaN-repair
+//! counts included — so every cross-layer contract (repair counts, shapes,
+//! convergence) is preserved bit-for-bit at the interface.
+//!
+//! Count semantics (mirroring `nan_repair_matmul.py` / `nan_scan.py`):
+//! the Pallas matmul sanitizes each operand *tile* as it streams to the
+//! MXU, so a NaN element of A is counted once per j-tile visit and a NaN
+//! element of B once per i-tile visit (`BLOCK` = 128).  `nan_scan` visits
+//! every element exactly once.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Result};
 
 use super::tensor::Tensor;
 
-/// Wraps the PJRT CPU client and a cache of compiled artifacts.
+/// MXU-shaped tile edge used by the L1 kernels (`DEFAULT_BLOCK` in
+/// `nan_repair_matmul.py`).
+pub const KERNEL_BLOCK: usize = 128;
+
+/// The L2 entry points the engine can interpret (`model.py::ENTRY_POINTS`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ModelKind {
+    Matmul,
+    JacobiStep,
+    PowerIterStep,
+    NanScan,
+}
+
+impl ModelKind {
+    fn parse(stem: &str) -> Option<(ModelKind, usize)> {
+        let (name, n) = stem.rsplit_once("_f32_")?;
+        let n: usize = n.parse().ok()?;
+        let kind = match name {
+            "matmul" => ModelKind::Matmul,
+            "jacobi_step" => ModelKind::JacobiStep,
+            "power_iter_step" => ModelKind::PowerIterStep,
+            "nan_scan" => ModelKind::NanScan,
+            _ => return None,
+        };
+        Some((kind, n))
+    }
+}
+
+/// Built-in interpretable artifacts (the AOT manifest's default set).
+const BUILTIN_STEMS: [&str; 4] = [
+    "jacobi_step_f32_256",
+    "matmul_f32_256",
+    "nan_scan_f32_256",
+    "power_iter_step_f32_256",
+];
+
+/// The artifact engine: resolves model stems and executes them natively.
 pub struct Engine {
-    client: xla::PjRtClient,
     artifacts_dir: PathBuf,
-    cache: HashMap<String, LoadedModelInner>,
+    cache: HashMap<String, LoadedModel>,
 }
 
-struct LoadedModelInner {
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// Handle to a compiled model in the engine cache.
-pub struct LoadedModel<'a> {
-    inner: &'a LoadedModelInner,
+/// Handle to a resolved model.
+#[derive(Debug, Clone)]
+pub struct LoadedModel {
+    kind: ModelKind,
+    n: usize,
     pub name: String,
 }
 
 impl Engine {
-    /// Create a CPU PJRT engine rooted at `artifacts_dir`.
+    /// Create a CPU engine rooted at `artifacts_dir`.
     pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Self {
-            client,
             artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
             cache: HashMap::new(),
         })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "cpu-native-interpreter".to_string()
     }
 
     /// Default artifacts directory: `$NANREPAIR_ARTIFACTS` or `./artifacts`.
@@ -46,31 +92,30 @@ impl Engine {
             .unwrap_or_else(|| PathBuf::from("artifacts"))
     }
 
-    /// Load + compile (cached) an artifact by stem, e.g. `matmul_f32_256`.
-    pub fn load(&mut self, stem: &str) -> Result<LoadedModel<'_>> {
-        if !self.cache.contains_key(stem) {
-            let path = self.artifacts_dir.join(format!("{stem}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {stem}"))?;
-            self.cache
-                .insert(stem.to_string(), LoadedModelInner { exe });
+    /// Resolve (cached) an artifact by stem, e.g. `matmul_f32_256`.
+    pub fn load(&mut self, stem: &str) -> Result<LoadedModel> {
+        if let Some(m) = self.cache.get(stem) {
+            return Ok(m.clone());
         }
-        Ok(LoadedModel {
-            inner: &self.cache[stem],
+        let Some((kind, n)) = ModelKind::parse(stem) else {
+            bail!(
+                "unknown artifact {stem:?} (no interpreter; available: {:?})",
+                self.available()
+            );
+        };
+        let model = LoadedModel {
+            kind,
+            n,
             name: stem.to_string(),
-        })
+        };
+        self.cache.insert(stem.to_string(), model.clone());
+        Ok(model)
     }
 
-    /// Artifacts available on disk.
+    /// Artifacts available: the built-in interpretable set plus any HLO
+    /// text files on disk (kept for operators inspecting AOT output).
     pub fn available(&self) -> Vec<String> {
-        let mut out = Vec::new();
+        let mut out: Vec<String> = BUILTIN_STEMS.iter().map(|s| s.to_string()).collect();
         if let Ok(dir) = std::fs::read_dir(&self.artifacts_dir) {
             for e in dir.flatten() {
                 let name = e.file_name().to_string_lossy().into_owned();
@@ -80,23 +125,159 @@ impl Engine {
             }
         }
         out.sort();
+        out.dedup();
         out
     }
 }
 
-impl LoadedModel<'_> {
-    /// Execute with the given inputs; returns all tuple outputs.
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let result = self.inner.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True → always a tuple
-        let parts = result.to_tuple()?;
-        parts.iter().map(Tensor::from_literal).collect()
+/// Sanitized (NaN→repair value) f32 read.
+#[inline]
+fn san(x: f32) -> f32 {
+    if x.is_nan() {
+        0.0
+    } else {
+        x
     }
+}
+
+/// Tile-touch count for the kernel's A operand: each NaN element of an
+/// (m×k) left operand is revisited once per j-tile of the (k×n) right
+/// operand.
+fn touches_lhs(nan_elems: usize, ncols_rhs: usize) -> u64 {
+    let bn = KERNEL_BLOCK.min(ncols_rhs).max(1);
+    let j_tiles = (ncols_rhs + bn - 1) / bn;
+    nan_elems as u64 * j_tiles as u64
+}
+
+/// Tile-touch count for the kernel's B operand: revisited once per i-tile
+/// of the left operand.
+fn touches_rhs(nan_elems: usize, nrows_lhs: usize) -> u64 {
+    let bm = KERNEL_BLOCK.min(nrows_lhs).max(1);
+    let i_tiles = (nrows_lhs + bm - 1) / bm;
+    nan_elems as u64 * i_tiles as u64
+}
+
+/// `C = sanitize(A)·sanitize(B)` with the kernel's per-tile-touch repair
+/// count; `a` is (m×k), `b` is (k×n), both row-major.
+fn matmul_repair(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> (Vec<f32>, u64) {
+    let nan_a = a.iter().filter(|x| x.is_nan()).count();
+    let nan_b = b.iter().filter(|x| x.is_nan()).count();
+    let count = touches_lhs(nan_a, n) + touches_rhs(nan_b, m);
+
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for kk in 0..k {
+                acc += san(a[i * k + kk]) as f64 * san(b[kk * n + j]) as f64;
+            }
+            c[i * n + j] = acc as f32;
+        }
+    }
+    (c, count)
+}
+
+impl LoadedModel {
+    /// Execute with the given inputs; returns all tuple outputs (the L2
+    /// convention: the last output is the NaN-repair count).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let n = self.n;
+        match self.kind {
+            ModelKind::Matmul => {
+                let [a, b] = expect_inputs::<2>(&self.name, inputs)?;
+                expect_len(&self.name, a, n * n)?;
+                expect_len(&self.name, b, n * n)?;
+                let (c, cnt) = matmul_repair(&a.data, &b.data, n, n, n);
+                Ok(vec![
+                    Tensor::new(&[n as i64, n as i64], c),
+                    count_tensor(cnt),
+                ])
+            }
+            ModelKind::NanScan => {
+                let [x] = expect_inputs::<1>(&self.name, inputs)?;
+                let cnt = x.data.iter().filter(|v| v.is_nan()).count() as u64;
+                let clean: Vec<f32> = x.data.iter().map(|&v| san(v)).collect();
+                Ok(vec![
+                    Tensor::new(&x.dims, clean),
+                    Tensor::new(&[1], vec![cnt as f32]),
+                ])
+            }
+            ModelKind::JacobiStep => {
+                let [a, b, x] = expect_inputs::<3>(&self.name, inputs)?;
+                expect_len(&self.name, a, n * n)?;
+                expect_len(&self.name, b, n)?;
+                expect_len(&self.name, x, n)?;
+                // model.py::jacobi_step — §5.2 divisor hazard: the diagonal
+                // is sanitized to 1.0 (division-safe), counted separately.
+                let mut diag = vec![0.0f32; n];
+                let mut diag_bad = 0u64;
+                for i in 0..n {
+                    let d = a.data[i * n + i];
+                    if d.is_nan() || d == 0.0 {
+                        diag[i] = 1.0;
+                        diag_bad += 1;
+                    } else {
+                        diag[i] = d;
+                    }
+                }
+                let (ax, mut cnt) = matmul_repair(&a.data, &x.data, n, n, 1);
+                cnt += diag_bad;
+                let mut x_next = vec![0.0f32; n];
+                for i in 0..n {
+                    let off = ax[i] - diag[i] * x.data[i];
+                    x_next[i] = (b.data[i] - off) / diag[i];
+                }
+                Ok(vec![Tensor::new(&[n as i64], x_next), count_tensor(cnt)])
+            }
+            ModelKind::PowerIterStep => {
+                let [a, x] = expect_inputs::<2>(&self.name, inputs)?;
+                expect_len(&self.name, a, n * n)?;
+                expect_len(&self.name, x, n)?;
+                let (ax, cnt) = matmul_repair(&a.data, &x.data, n, n, 1);
+                let norm = ax.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt();
+                let norm = (norm as f32).max(1e-30);
+                let y: Vec<f32> = ax.iter().map(|v| v / norm).collect();
+                let rayleigh: f64 = x
+                    .data
+                    .iter()
+                    .zip(&ax)
+                    .map(|(xi, axi)| *xi as f64 * *axi as f64)
+                    .sum();
+                Ok(vec![
+                    Tensor::new(&[n as i64], y),
+                    Tensor::new(&[1], vec![rayleigh as f32]),
+                    count_tensor(cnt),
+                ])
+            }
+        }
+    }
+}
+
+/// The kernel's (1,1) i32 count output, widened to f32 like the PJRT
+/// read-back did.
+fn count_tensor(cnt: u64) -> Tensor {
+    Tensor::new(&[1, 1], vec![cnt as f32])
+}
+
+fn expect_inputs<'a, const K: usize>(
+    name: &str,
+    inputs: &'a [Tensor],
+) -> Result<[&'a Tensor; K]> {
+    if inputs.len() != K {
+        bail!("{name}: expected {K} inputs, got {}", inputs.len());
+    }
+    let mut out = [&inputs[0]; K];
+    for (slot, t) in out.iter_mut().zip(inputs) {
+        *slot = t;
+    }
+    Ok(out)
+}
+
+fn expect_len(name: &str, t: &Tensor, want: usize) -> Result<()> {
+    if t.data.len() != want {
+        bail!("{name}: input has {} elements, expected {want}", t.data.len());
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -106,7 +287,7 @@ mod tests {
 
     fn engine() -> Engine {
         // tests run from the workspace root
-        Engine::cpu("artifacts").expect("pjrt cpu client")
+        Engine::cpu("artifacts").expect("engine")
     }
 
     fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
@@ -190,6 +371,25 @@ mod tests {
             worst = worst.max((ax - b.data[i]).abs());
         }
         assert!(worst < 1e-3, "residual {worst}");
+    }
+
+    #[test]
+    fn jacobi_counts_planted_nan_once_per_step() {
+        let mut e = engine();
+        let m = e.load("jacobi_step_f32_256").unwrap();
+        let n = 256;
+        let mut a = vec![0.01f32; n * n];
+        for i in 0..n {
+            a[i * n + i] = 4.0;
+        }
+        let mut a_t = Tensor::new(&[n as i64, n as i64], a);
+        a_t.poison(3 * n + 7); // off-diagonal NaN
+        let b = Tensor::new(&[n as i64], vec![1.0; n]);
+        let x = Tensor::zeros(&[n as i64]);
+        let out = m.run(&[a_t, b, x]).unwrap();
+        // column operand → a single j-tile → one touch per planted NaN
+        assert_eq!(out[1].data[0], 1.0);
+        assert_eq!(out[0].nan_count(), 0);
     }
 
     #[test]

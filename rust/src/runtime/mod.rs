@@ -1,10 +1,13 @@
-//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
-//! them from the Rust request path — Python never runs here.
+//! Artifact runtime: execute the L2 models from the Rust request path —
+//! Python never runs here.
 //!
-//! One [`Engine`] per process wraps the PJRT CPU client; each artifact
-//! compiles once into an [`LoadedModel`] and is executed with `f32`
-//! tensors.  Models follow the L2 convention: outputs are a tuple whose
-//! last (or second) element is the NaN-repair count from the L1 kernel.
+//! One [`Engine`] per process resolves artifact stems; each resolves once
+//! into a [`LoadedModel`] and is executed with `f32` tensors.  PJRT
+//! bindings are unavailable offline, so execution goes through a native
+//! interpreter that reproduces the Pallas kernels' semantics exactly (see
+//! [`engine`]).  Models follow the L2 convention: outputs are a tuple
+//! whose last (or second) element is the NaN-repair count from the L1
+//! kernel.
 
 pub mod engine;
 pub mod tensor;

@@ -1,7 +1,5 @@
 //! A minimal host tensor (f32, row-major) bridging approximate memory and
-//! PJRT literals.
-
-use anyhow::Result;
+//! the artifact runtime.
 
 /// Row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
@@ -27,28 +25,6 @@ impl Tensor {
 
     pub fn scalar_count(&self) -> usize {
         self.data.len()
-    }
-
-    /// Convert to an xla literal.
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = xla::Literal::vec1(&self.data);
-        Ok(lit.reshape(&self.dims)?)
-    }
-
-    /// Read back from a literal (f32 or i32 — i32 is widened).
-    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<i64> = shape.dims().to_vec();
-        let data: Vec<f32> = match lit.ty()? {
-            xla::ElementType::F32 => lit.to_vec::<f32>()?,
-            xla::ElementType::S32 => lit
-                .to_vec::<i32>()?
-                .into_iter()
-                .map(|x| x as f32)
-                .collect(),
-            other => anyhow::bail!("unsupported artifact output type {other:?}"),
-        };
-        Ok(Self { dims, data })
     }
 
     /// Count NaNs in the payload.
@@ -85,13 +61,5 @@ mod tests {
         t.poison(2);
         assert_eq!(t.nan_count(), 1);
         assert!(t.data[2].is_nan());
-    }
-
-    #[test]
-    fn literal_roundtrip() {
-        let t = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
-        let lit = t.to_literal().unwrap();
-        let back = Tensor::from_literal(&lit).unwrap();
-        assert_eq!(back, t);
     }
 }

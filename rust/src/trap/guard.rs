@@ -49,6 +49,14 @@ impl TrapGuard {
         Self { saved_mxcsr }
     }
 
+    /// Arm and zero the trap counters in one step — the session engine's
+    /// per-cell arming path (counters always start a cell from zero).
+    pub fn arm_reset(pool: &ApproxPool, cfg: &TrapConfig) -> Self {
+        let guard = Self::arm(pool, cfg);
+        guard.reset_stats();
+        guard
+    }
+
     /// Re-snapshot regions (after new allocations) without re-arming MXCSR.
     pub fn refresh_regions(&self, pool: &ApproxPool, cfg: &TrapConfig) {
         handler::arm_state(&pool.regions(), cfg.policy, cfg.memory_repair);

@@ -109,12 +109,14 @@ impl Matches {
     }
 }
 
-/// An application: a set of subcommands.
+/// An application: a set of subcommands plus options shared by all of
+/// them (e.g. the output-sink options `--json`/`--format`/`--out`).
 #[derive(Debug, Clone)]
 pub struct App {
     pub name: &'static str,
     pub about: &'static str,
     pub cmds: Vec<CmdSpec>,
+    pub globals: Vec<OptSpec>,
 }
 
 impl App {
@@ -123,11 +125,39 @@ impl App {
             name,
             about,
             cmds: Vec::new(),
+            globals: Vec::new(),
         }
     }
 
     pub fn cmd(mut self, c: CmdSpec) -> Self {
         self.cmds.push(c);
+        self
+    }
+
+    /// A value-taking option accepted by every subcommand.
+    pub fn global_opt(
+        mut self,
+        name: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
+        self.globals.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default,
+        });
+        self
+    }
+
+    /// A flag accepted by every subcommand.
+    pub fn global_flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.globals.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
         self
     }
 
@@ -140,8 +170,26 @@ impl App {
         for c in &self.cmds {
             let _ = writeln!(out, "  {:<w$}  {}", c.name, c.about, w = w);
         }
+        if !self.globals.is_empty() {
+            let _ = writeln!(out, "\nGLOBAL OPTIONS (all commands):");
+            for o in &self.globals {
+                Self::opt_help_line(&mut out, o);
+            }
+        }
         let _ = writeln!(out, "\nRun '{} <command> --help' for options.", self.name);
         out
+    }
+
+    fn opt_help_line(out: &mut String, o: &OptSpec) {
+        let mut left = format!("--{}", o.name);
+        if o.takes_value {
+            left.push_str(" <v>");
+        }
+        let _ = write!(out, "  {:<24} {}", left, o.help);
+        if let Some(d) = o.default {
+            let _ = write!(out, " [default: {d}]");
+        }
+        let _ = writeln!(out);
     }
 
     pub fn cmd_help(&self, cmd: &CmdSpec) -> String {
@@ -149,15 +197,13 @@ impl App {
         let _ = writeln!(out, "{} {} — {}\n", self.name, cmd.name, cmd.about);
         let _ = writeln!(out, "OPTIONS:");
         for o in &cmd.opts {
-            let mut left = format!("--{}", o.name);
-            if o.takes_value {
-                left.push_str(" <v>");
+            Self::opt_help_line(&mut out, o);
+        }
+        if !self.globals.is_empty() {
+            let _ = writeln!(out, "\nGLOBAL OPTIONS:");
+            for o in &self.globals {
+                Self::opt_help_line(&mut out, o);
             }
-            let _ = write!(out, "  {:<24} {}", left, o.help);
-            if let Some(d) = o.default {
-                let _ = write!(out, " [default: {d}]");
-            }
-            let _ = writeln!(out);
         }
         out
     }
@@ -184,7 +230,7 @@ impl App {
             flags: BTreeMap::new(),
             positionals: Vec::new(),
         };
-        for o in &cmd.opts {
+        for o in cmd.opts.iter().chain(&self.globals) {
             if let Some(d) = o.default {
                 m.values.insert(o.name.to_string(), d.to_string());
             }
@@ -205,6 +251,7 @@ impl App {
                 let spec = cmd
                     .opts
                     .iter()
+                    .chain(&self.globals)
                     .find(|o| o.name == key)
                     .with_context(|| {
                         format!("unknown option --{key} for {}\n{}", cmd.name, self.cmd_help(cmd))
@@ -299,6 +346,33 @@ mod tests {
         assert_eq!(m.get_list::<usize>("sizes").unwrap(), vec![1, 2, 3]);
         let m = a.parse(&args(&["s", "--sizes", "10, 20"])).unwrap().unwrap();
         assert_eq!(m.get_list::<usize>("sizes").unwrap(), vec![10, 20]);
+    }
+
+    #[test]
+    fn global_options_work_on_every_command() {
+        let a = App::new("t", "x")
+            .global_flag("json", "emit JSON-lines")
+            .global_opt("out", None, "output path")
+            .global_opt("workers", Some("0"), "worker count")
+            .cmd(CmdSpec::new("one", "1").opt("n", Some("5"), "size"))
+            .cmd(CmdSpec::new("two", "2"));
+
+        let m = a
+            .parse(&args(&["one", "--json", "--out", "r.jsonl", "--n", "9"]))
+            .unwrap()
+            .unwrap();
+        assert!(m.flag("json"));
+        assert_eq!(m.get("out"), Some("r.jsonl"));
+        assert_eq!(m.get_parse::<usize>("n").unwrap(), 9);
+        assert_eq!(m.get_parse::<usize>("workers").unwrap(), 0, "global default");
+
+        let m = a.parse(&args(&["two", "--json"])).unwrap().unwrap();
+        assert!(m.flag("json"));
+        assert!(m.get("out").is_none());
+
+        // globals show up in help
+        assert!(a.help().contains("GLOBAL OPTIONS"));
+        assert!(a.cmd_help(&a.cmds[1]).contains("--json"));
     }
 
     #[test]

@@ -1,16 +1,19 @@
 //! In-repo substrates that would normally come from crates unavailable in
 //! this offline environment: a seedable RNG ([`rng`]), descriptive
 //! statistics ([`stats`]), cycle-accurate timing ([`timing`]), ASCII report
-//! tables ([`table`]), a CLI argument parser ([`cli`]), and a key=value
+//! tables ([`table`]), structured result records and output sinks
+//! ([`report`]), a CLI argument parser ([`cli`]), and a key=value
 //! config-file loader ([`config`]).
 
 pub mod cli;
 pub mod config;
+pub mod report;
 pub mod rng;
 pub mod stats;
 pub mod table;
 pub mod timing;
 
+pub use report::{Json, OutputFormat, Record, ResultSink};
 pub use rng::Pcg64;
 pub use stats::Summary;
 pub use table::Table;

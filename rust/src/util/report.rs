@@ -1,0 +1,619 @@
+//! Structured experiment reports: machine-parseable records behind the
+//! human tables.
+//!
+//! Every harness result can be expressed as a stream of [`Record`]s (an
+//! ordered key→value map with a record kind).  A [`ResultSink`] writes
+//! that stream as the existing ASCII [`Table`]s (text), JSON-lines, or
+//! CSV, to stdout or a file — the `--json`/`--format`/`--out` options in
+//! `main.rs` construct one sink and route every subcommand through it.
+//!
+//! The [`Json`] value type includes a parser so tests can assert that
+//! emitted JSON-lines round-trip (serde is unavailable offline).
+
+use std::fmt::Write as _;
+use std::io::{self, Write};
+
+use super::table::Table;
+
+/// A JSON value (order-preserving objects for deterministic output).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl From<bool> for Json {
+    fn from(v: bool) -> Self {
+        Json::Bool(v)
+    }
+}
+
+impl From<i64> for Json {
+    fn from(v: i64) -> Self {
+        Json::Int(v)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(v: u64) -> Self {
+        match i64::try_from(v) {
+            Ok(i) => Json::Int(i),
+            Err(_) => Json::Num(v as f64),
+        }
+    }
+}
+
+impl From<usize> for Json {
+    fn from(v: usize) -> Self {
+        Json::from(v as u64)
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Self {
+        Json::Num(v)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(v: &str) -> Self {
+        Json::Str(v.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(v: String) -> Self {
+        Json::Str(v)
+    }
+}
+
+fn escape_into(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl Json {
+    /// Render to compact JSON text.  Non-finite numbers (not representable
+    /// in JSON) render as `null`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
+            Json::Num(x) => {
+                if !x.is_finite() {
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
+                    // keep a decimal point so Num re-parses as Num, not Int
+                    let _ = write!(out, "{x:.1}");
+                } else {
+                    let _ = write!(out, "{x}");
+                }
+            }
+            Json::Str(s) => escape_into(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    escape_into(out, k);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse JSON text (strict enough for round-trip tests of our own
+    /// output; numbers parse as `Int` when integral-without-exponent).
+    pub fn parse(s: &str) -> anyhow::Result<Json> {
+        let bytes = s.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(s, bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            anyhow::bail!("trailing bytes at offset {pos}");
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (None for non-objects/missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric view of `Int`/`Num`.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Int(i) => Some(*i as f64),
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(s: &str, b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    skip_ws(b, pos);
+    let Some(&c) = b.get(*pos) else {
+        anyhow::bail!("unexpected end of input");
+    };
+    match c {
+        b'n' => parse_lit(b, pos, "null", Json::Null),
+        b't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        b'"' => Ok(Json::Str(parse_string(s, b, pos)?)),
+        b'[' => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(s, b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    other => anyhow::bail!("expected ',' or ']', got {other:?}"),
+                }
+            }
+        }
+        b'{' => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(s, b, pos)?;
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    anyhow::bail!("expected ':' after object key {key:?}");
+                }
+                *pos += 1;
+                let val = parse_value(s, b, pos)?;
+                fields.push((key, val));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    other => anyhow::bail!("expected ',' or '}}', got {other:?}"),
+                }
+            }
+        }
+        b'-' | b'0'..=b'9' => parse_number(s, b, pos),
+        other => anyhow::bail!("unexpected byte {:?}", other as char),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, val: Json) -> anyhow::Result<Json> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(val)
+    } else {
+        anyhow::bail!("invalid literal at offset {pos}");
+    }
+}
+
+fn parse_string(s: &str, b: &[u8], pos: &mut usize) -> anyhow::Result<String> {
+    if b.get(*pos) != Some(&b'"') {
+        anyhow::bail!("expected string at offset {pos}");
+    }
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        let Some(&c) = b.get(*pos) else {
+            anyhow::bail!("unterminated string");
+        };
+        match c {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                let Some(&esc) = b.get(*pos) else {
+                    anyhow::bail!("unterminated escape");
+                };
+                *pos += 1;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        let hex = s
+                            .get(*pos..*pos + 4)
+                            .ok_or_else(|| anyhow::anyhow!("short \\u escape"))?;
+                        let code = u32::from_str_radix(hex, 16)?;
+                        *pos += 4;
+                        out.push(
+                            char::from_u32(code)
+                                .ok_or_else(|| anyhow::anyhow!("bad \\u{hex}"))?,
+                        );
+                    }
+                    other => anyhow::bail!("bad escape \\{}", other as char),
+                }
+            }
+            _ => {
+                // consume one UTF-8 char
+                let ch_len = s[*pos..]
+                    .chars()
+                    .next()
+                    .map(|c| c.len_utf8())
+                    .unwrap_or(1);
+                out.push_str(&s[*pos..*pos + ch_len]);
+                *pos += ch_len;
+            }
+        }
+    }
+}
+
+fn parse_number(s: &str, b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    let start = *pos;
+    if b.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    let mut is_float = false;
+    while let Some(&c) = b.get(*pos) {
+        match c {
+            b'0'..=b'9' => *pos += 1,
+            b'.' | b'e' | b'E' | b'+' | b'-' => {
+                is_float = true;
+                *pos += 1;
+            }
+            _ => break,
+        }
+    }
+    let text = &s[start..*pos];
+    if is_float {
+        Ok(Json::Num(text.parse()?))
+    } else {
+        Ok(Json::Int(text.parse()?))
+    }
+}
+
+/// One structured result row: a kind tag plus ordered fields.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    kind: String,
+    fields: Vec<(String, Json)>,
+}
+
+impl Record {
+    pub fn new(kind: &str) -> Self {
+        Self {
+            kind: kind.to_string(),
+            fields: Vec::new(),
+        }
+    }
+
+    /// Append a field (builder style).
+    pub fn field(mut self, key: &str, value: impl Into<Json>) -> Self {
+        self.fields.push((key.to_string(), value.into()));
+        self
+    }
+
+    pub fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    pub fn fields(&self) -> &[(String, Json)] {
+        &self.fields
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// The record as a JSON object (`"record"` tag first).
+    pub fn to_json(&self) -> Json {
+        let mut fields = Vec::with_capacity(self.fields.len() + 1);
+        fields.push(("record".to_string(), Json::Str(self.kind.clone())));
+        fields.extend(self.fields.iter().cloned());
+        Json::Obj(fields)
+    }
+
+    /// One JSON-lines line (no trailing newline).
+    pub fn render_jsonl(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Rebuild a record from a parsed JSON-lines object.
+    pub fn from_json(v: &Json) -> anyhow::Result<Record> {
+        let Json::Obj(fields) = v else {
+            anyhow::bail!("record line is not an object");
+        };
+        let mut it = fields.iter();
+        let Some((tag, Json::Str(kind))) = it.next() else {
+            anyhow::bail!("record line missing leading \"record\" tag");
+        };
+        anyhow::ensure!(tag == "record", "first key is {tag:?}, not \"record\"");
+        Ok(Record {
+            kind: kind.clone(),
+            fields: it.cloned().collect(),
+        })
+    }
+}
+
+/// CSV-escape one cell (RFC 4180 quoting).
+fn csv_cell(s: &str) -> String {
+    if s.contains(|c| matches!(c, ',' | '"' | '\n' | '\r')) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Output format of a [`ResultSink`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OutputFormat {
+    #[default]
+    Text,
+    JsonLines,
+    Csv,
+}
+
+impl OutputFormat {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "text" | "table" => Ok(OutputFormat::Text),
+            "json" | "jsonl" | "json-lines" => Ok(OutputFormat::JsonLines),
+            "csv" => Ok(OutputFormat::Csv),
+            other => anyhow::bail!("unknown output format {other:?} (text|json|csv)"),
+        }
+    }
+}
+
+/// Where experiment output goes: a format plus a writer.
+pub struct ResultSink {
+    format: OutputFormat,
+    out: Box<dyn Write>,
+    /// Kind of the last CSV record emitted (header dedup).
+    last_csv_kind: Option<String>,
+}
+
+impl ResultSink {
+    pub fn new(format: OutputFormat, out: Box<dyn Write>) -> Self {
+        Self {
+            format,
+            out,
+            last_csv_kind: None,
+        }
+    }
+
+    pub fn stdout(format: OutputFormat) -> Self {
+        Self::new(format, Box::new(io::stdout()))
+    }
+
+    pub fn to_path(format: OutputFormat, path: &str) -> io::Result<Self> {
+        Ok(Self::new(format, Box::new(std::fs::File::create(path)?)))
+    }
+
+    pub fn format(&self) -> OutputFormat {
+        self.format
+    }
+
+    /// Emit one table: rendered text, JSON-lines (one record per row), or
+    /// CSV (header + rows).
+    pub fn table(&mut self, table: &Table, kind: &str) -> io::Result<()> {
+        match self.format {
+            OutputFormat::Text => write!(self.out, "{}", table.render()),
+            OutputFormat::JsonLines => {
+                for rec in table.to_records(kind) {
+                    writeln!(self.out, "{}", rec.render_jsonl())?;
+                }
+                Ok(())
+            }
+            OutputFormat::Csv => {
+                for rec in table.to_records(kind) {
+                    self.write_csv_record(&rec)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Emit one structured record.  Text mode renders `kind key=value …`
+    /// on one line.
+    pub fn record(&mut self, rec: &Record) -> io::Result<()> {
+        match self.format {
+            OutputFormat::Text => {
+                write!(self.out, "{}", rec.kind())?;
+                for (k, v) in rec.fields() {
+                    let val = match v {
+                        Json::Str(s) => s.clone(),
+                        other => other.render(),
+                    };
+                    write!(self.out, " {k}={val}")?;
+                }
+                writeln!(self.out)
+            }
+            OutputFormat::JsonLines => writeln!(self.out, "{}", rec.render_jsonl()),
+            OutputFormat::Csv => self.write_csv_record(rec),
+        }
+    }
+
+    /// Free-form prose that only makes sense for humans; dropped from
+    /// machine formats so JSON/CSV streams stay parseable.
+    pub fn note(&mut self, text: &str) -> io::Result<()> {
+        match self.format {
+            OutputFormat::Text => writeln!(self.out, "{text}"),
+            _ => Ok(()),
+        }
+    }
+
+    pub fn flush(&mut self) -> io::Result<()> {
+        self.out.flush()
+    }
+
+    fn write_csv_record(&mut self, rec: &Record) -> io::Result<()> {
+        if self.last_csv_kind.as_deref() != Some(rec.kind()) {
+            let mut header = vec!["record".to_string()];
+            header.extend(rec.fields().iter().map(|(k, _)| csv_cell(k)));
+            writeln!(self.out, "{}", header.join(","))?;
+            self.last_csv_kind = Some(rec.kind().to_string());
+        }
+        let mut row = vec![csv_cell(rec.kind())];
+        for (_, v) in rec.fields() {
+            let cell = match v {
+                Json::Str(s) => csv_cell(s),
+                other => csv_cell(&other.render()),
+            };
+            row.push(cell);
+        }
+        writeln!(self.out, "{}", row.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_render_parse_round_trip() {
+        let v = Json::Obj(vec![
+            ("record".into(), Json::Str("x".into())),
+            ("n".into(), Json::Int(1000)),
+            ("secs".into(), Json::Num(0.125)),
+            ("label".into(), Json::Str("he said \"hi\"\n".into())),
+            ("ok".into(), Json::Bool(true)),
+            ("none".into(), Json::Null),
+            ("arr".into(), Json::Arr(vec![Json::Int(1), Json::Num(2.5)])),
+        ]);
+        let text = v.render();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v, "{text}");
+    }
+
+    #[test]
+    fn json_nonfinite_renders_null() {
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn record_round_trip() {
+        let rec = Record::new("fig7_row")
+            .field("n", 1000u64)
+            .field("normal_secs", 1.25)
+            .field("workload", "matmul");
+        let line = rec.render_jsonl();
+        assert!(line.starts_with("{\"record\":\"fig7_row\""), "{line}");
+        let back = Record::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn sink_jsonl_and_csv_and_text() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(&["a,b".into(), "1".into()]);
+        t.row(&["c\"d".into(), "2".into()]);
+
+        // capture sink output through a shared Vec adapter
+        struct Shared(std::rc::Rc<std::cell::RefCell<Vec<u8>>>);
+        impl std::io::Write for Shared {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.borrow_mut().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let capture = |format: OutputFormat| {
+            let buf = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+            let mut sink = ResultSink::new(format, Box::new(Shared(buf.clone())));
+            sink.table(&t, "demo_row").unwrap();
+            sink.note("human prose").unwrap();
+            drop(sink);
+            String::from_utf8(buf.borrow().clone()).unwrap()
+        };
+
+        let text = capture(OutputFormat::Text);
+        assert!(text.contains("== demo ==") && text.contains("human prose"));
+
+        let jsonl = capture(OutputFormat::JsonLines);
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2, "notes must not pollute JSON: {jsonl}");
+        for line in lines {
+            let v = Json::parse(line).unwrap();
+            assert_eq!(v.get("record").and_then(Json::as_str), Some("demo_row"));
+        }
+
+        let csv = capture(OutputFormat::Csv);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "record,name,value");
+        assert_eq!(lines[1], "demo_row,\"a,b\",1");
+        assert_eq!(lines[2], "demo_row,\"c\"\"d\",2");
+    }
+}

@@ -58,6 +58,33 @@ impl Table {
         self.rows.len()
     }
 
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+
+    pub fn header(&self) -> &[String] {
+        &self.header
+    }
+
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    /// Lower this table into structured [`Record`]s (one per row, keyed by
+    /// the header cells) for the JSON-lines/CSV sinks.
+    pub fn to_records(&self, kind: &str) -> Vec<crate::util::report::Record> {
+        self.rows
+            .iter()
+            .map(|row| {
+                let mut rec = crate::util::report::Record::new(kind);
+                for (key, cell) in self.header.iter().zip(row) {
+                    rec = rec.field(key, cell.as_str());
+                }
+                rec
+            })
+            .collect()
+    }
+
     /// Render to a string.
     pub fn render(&self) -> String {
         let ncol = self.header.len();

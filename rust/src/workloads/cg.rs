@@ -128,6 +128,11 @@ impl Workload for Cg {
         self.x.as_mut_slice().fill(0.0);
     }
 
+    fn reseed(&mut self, seed: u64) {
+        self.seed = seed;
+        self.reset();
+    }
+
     fn run(&mut self) {
         let n = self.n;
         let a = unsafe { std::slice::from_raw_parts(self.a.as_ptr(), n * n) };

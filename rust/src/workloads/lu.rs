@@ -123,6 +123,11 @@ impl Workload for Lu {
         self.piv = (0..self.n).collect();
     }
 
+    fn reseed(&mut self, seed: u64) {
+        self.seed = seed;
+        self.reset();
+    }
+
     fn run(&mut self) {
         let n = self.n;
         Self::factor(n, self.a.as_mut_slice(), &mut self.piv);

@@ -96,6 +96,11 @@ impl Workload for MatMul {
         self.c.as_mut_slice().fill(0.0);
     }
 
+    fn reseed(&mut self, seed: u64) {
+        self.seed = seed;
+        self.reset();
+    }
+
     fn run(&mut self) {
         let n = self.n;
         // Safety of aliasing: a/bt are read, c written; disjoint buffers.

@@ -18,7 +18,7 @@ pub mod stencil;
 use crate::approxmem::pool::ApproxPool;
 
 /// Which workload to run (CLI/config-level description).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum WorkloadKind {
     MatMul { n: usize },
     MatVec { n: usize },
@@ -70,6 +70,18 @@ impl WorkloadKind {
         }
     }
 
+    /// Problem size (the `n` every variant carries).
+    pub fn size(&self) -> usize {
+        match *self {
+            WorkloadKind::MatMul { n }
+            | WorkloadKind::MatVec { n }
+            | WorkloadKind::Jacobi { n, .. }
+            | WorkloadKind::Cg { n, .. }
+            | WorkloadKind::Lu { n }
+            | WorkloadKind::Stencil { n, .. } => n,
+        }
+    }
+
     /// Construct the workload with buffers in `pool`.
     pub fn build(&self, pool: &ApproxPool, seed: u64) -> Box<dyn Workload> {
         match *self {
@@ -83,6 +95,21 @@ impl WorkloadKind {
             WorkloadKind::Stencil { n, steps } => {
                 Box::new(stencil::Stencil::new(pool, n, steps, seed))
             }
+        }
+    }
+}
+
+/// `Display` renders the same `name:size[:extra]` spec [`WorkloadKind::parse`]
+/// accepts, so labels and parsing cannot drift apart.
+impl std::fmt::Display for WorkloadKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            WorkloadKind::MatMul { n } => write!(f, "matmul:{n}"),
+            WorkloadKind::MatVec { n } => write!(f, "matvec:{n}"),
+            WorkloadKind::Jacobi { n, iters } => write!(f, "jacobi:{n}:{iters}"),
+            WorkloadKind::Cg { n, iters } => write!(f, "cg:{n}:{iters}"),
+            WorkloadKind::Lu { n } => write!(f, "lu:{n}"),
+            WorkloadKind::Stencil { n, steps } => write!(f, "stencil:{n}:{steps}"),
         }
     }
 }
@@ -137,6 +164,12 @@ pub trait Workload: Send {
     /// also clears any injected faults).
     fn reset(&mut self);
 
+    /// Re-key the workload's deterministic input generation to `seed` and
+    /// reset.  Lets an [`crate::coordinator::session::ExperimentSession`]
+    /// reuse one allocated workload across campaign cells with different
+    /// seeds instead of reallocating its pool buffers per cell.
+    fn reseed(&mut self, seed: u64);
+
     /// Execute the computation over the approximate buffers.
     fn run(&mut self);
 
@@ -168,6 +201,60 @@ pub trait Workload: Send {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn parse_display_round_trips() {
+        // Display must render a spec parse() maps back to the same kind.
+        let kinds = [
+            WorkloadKind::MatMul { n: 100 },
+            WorkloadKind::MatVec { n: 7 },
+            WorkloadKind::Jacobi { n: 256, iters: 50 },
+            WorkloadKind::Cg { n: 64, iters: 9 },
+            WorkloadKind::Lu { n: 48 },
+            WorkloadKind::Stencil { n: 32, steps: 20 },
+        ];
+        for kind in kinds {
+            let spec = kind.to_string();
+            let back = WorkloadKind::parse(&spec)
+                .unwrap_or_else(|e| panic!("{spec:?} failed to re-parse: {e}"));
+            assert_eq!(back, kind, "round trip through {spec:?}");
+            // the label prefix stays in sync with name()
+            assert!(spec.starts_with(kind.name()), "{spec:?} vs {}", kind.name());
+        }
+    }
+
+    #[test]
+    fn parse_defaults_match_display_of_defaults() {
+        // specs that omit the extra field parse to documented defaults
+        assert_eq!(
+            WorkloadKind::parse("jacobi:64").unwrap().to_string(),
+            "jacobi:64:100"
+        );
+        assert_eq!(WorkloadKind::parse("cg:64").unwrap().to_string(), "cg:64:50");
+        assert_eq!(
+            WorkloadKind::parse("stencil:64").unwrap().to_string(),
+            "stencil:64:50"
+        );
+    }
+
+    #[test]
+    fn parse_malformed_specs_error() {
+        for bad in [
+            "",            // empty
+            "matmul",      // missing size
+            "matvec",      // missing size
+            "lu",          // missing size
+            "bogus:1",     // unknown workload
+            "matmul:abc",  // non-numeric size
+            "jacobi:8:xy", // non-numeric extra
+            "matmul:-4",   // negative size
+        ] {
+            assert!(
+                WorkloadKind::parse(bad).is_err(),
+                "{bad:?} should not parse"
+            );
+        }
+    }
 
     #[test]
     fn parse_specs() {

@@ -93,6 +93,11 @@ impl Workload for Stencil {
         self.next.as_mut_slice().fill(0.0);
     }
 
+    fn reseed(&mut self, seed: u64) {
+        self.seed = seed;
+        self.reset();
+    }
+
     fn run(&mut self) {
         let n = self.n;
         let grid = unsafe { std::slice::from_raw_parts_mut(self.grid.as_mut_ptr(), n * n) };

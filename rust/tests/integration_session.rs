@@ -1,0 +1,240 @@
+//! Integration: the session/scheduler/report engine — the PR's acceptance
+//! contracts.
+//!
+//! * parallel batches of non-trap cells produce **byte-identical**
+//!   deterministic report streams to a serial run;
+//! * the CLI's `--json` mode emits JSON-lines that round-trip through the
+//!   in-repo parser, while default text output is unchanged;
+//! * a session running N same-kind cells allocates fewer pool buffers
+//!   than N fresh campaigns (workload-cache reuse, observable through the
+//!   pool's allocation counter).
+
+use std::process::Command;
+
+use nanrepair::approxmem::injector::InjectionSpec;
+use nanrepair::coordinator::scheduler;
+use nanrepair::coordinator::session::ExperimentSession;
+use nanrepair::prelude::*;
+use nanrepair::util::report::{Json, Record};
+
+fn non_trap_cfg(i: usize) -> CampaignConfig {
+    CampaignConfig {
+        workload: if i % 2 == 0 {
+            WorkloadKind::MatMul { n: 12 + i }
+        } else {
+            WorkloadKind::Stencil { n: 12 + i, steps: 6 }
+        },
+        protection: if i % 3 == 0 {
+            Protection::Scrub { period_runs: 1 }
+        } else {
+            Protection::None
+        },
+        injection: InjectionSpec::ExactNaNs { count: 1 },
+        policy: RepairPolicy::Zero,
+        reps: 2,
+        warmup: 0,
+        seed: 1000 + i as u64,
+        check_quality: true,
+    }
+}
+
+/// Acceptance: a 4-worker batch of non-trap cells produces byte-identical
+/// deterministic reports to the serial run.
+#[test]
+fn parallel_batch_reports_byte_identical_to_serial() {
+    let configs: Vec<CampaignConfig> = (0..8).map(non_trap_cfg).collect();
+
+    let serial: String = configs
+        .iter()
+        .map(|cfg| {
+            let rep = Campaign::new(cfg.clone()).run().unwrap();
+            rep.record_deterministic().render_jsonl() + "\n"
+        })
+        .collect();
+
+    let parallel: String = scheduler::run_batch(configs, 4)
+        .into_iter()
+        .map(|r| r.unwrap().record_deterministic().render_jsonl() + "\n")
+        .collect();
+
+    assert_eq!(
+        serial.as_bytes(),
+        parallel.as_bytes(),
+        "serial:\n{serial}\nparallel:\n{parallel}"
+    );
+}
+
+/// Same contract through the trap-bearing protections: counts and quality
+/// stay equal at any worker count (cells serialize on the trap lock).
+#[test]
+fn parallel_trap_batch_matches_serial() {
+    let configs: Vec<CampaignConfig> = (0..4)
+        .map(|i| CampaignConfig {
+            workload: WorkloadKind::MatMul { n: 16 },
+            protection: Protection::RegisterMemory,
+            injection: InjectionSpec::ExactNaNs { count: 1 },
+            reps: 2,
+            warmup: 0,
+            seed: 7 + i,
+            check_quality: true,
+            ..Default::default()
+        })
+        .collect();
+    let serial = scheduler::run_batch(configs.clone(), 1);
+    let parallel = scheduler::run_batch(configs, 4);
+    for (s, p) in serial.iter().zip(&parallel) {
+        let (s, p) = (s.as_ref().unwrap(), p.as_ref().unwrap());
+        assert_eq!(
+            s.record_deterministic().render_jsonl(),
+            p.record_deterministic().render_jsonl()
+        );
+    }
+}
+
+/// Acceptance: one session running the same `WorkloadKind` for N cells
+/// performs fewer pool allocations than N fresh campaigns.
+#[test]
+fn session_workload_cache_allocates_less_than_fresh_campaigns() {
+    let n_cells = 6;
+    let cfgs: Vec<CampaignConfig> = (0..n_cells)
+        .map(|i| CampaignConfig {
+            workload: WorkloadKind::MatMul { n: 16 },
+            protection: Protection::None,
+            injection: InjectionSpec::ExactNaNs { count: 1 },
+            reps: 1,
+            warmup: 0,
+            seed: i as u64,
+            check_quality: false,
+            ..Default::default()
+        })
+        .collect();
+
+    // N fresh campaigns: each builds its own pool with 3 buffers
+    let fresh_allocs: usize = cfgs
+        .iter()
+        .map(|cfg| {
+            let pool = nanrepair::approxmem::pool::ApproxPool::new();
+            let _w = cfg.workload.build(&pool, cfg.seed);
+            pool.allocs_total()
+        })
+        .sum();
+
+    // one session: allocation happens once, later cells reuse it
+    let mut session = ExperimentSession::new();
+    for cfg in &cfgs {
+        session.run_cell(cfg).unwrap();
+    }
+    let session_allocs = session.pool_allocs_total();
+
+    assert!(
+        session_allocs < fresh_allocs,
+        "session {session_allocs} allocs vs fresh {fresh_allocs}"
+    );
+    assert_eq!(session_allocs, 3, "matmul's a/bt/c allocated exactly once");
+}
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_nanrepair"))
+}
+
+fn run_cli(args: &[&str]) -> (String, String, bool) {
+    let out = bin().args(args).output().expect("CLI runs");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+/// Acceptance: `nanrepair run --json` emits machine-parseable JSON-lines
+/// that round-trip through the parser.
+#[test]
+fn cli_run_json_round_trips() {
+    let (stdout, stderr, ok) = run_cli(&[
+        "run",
+        "--workload",
+        "matmul:16",
+        "--reps",
+        "2",
+        "--seed",
+        "3",
+        "--quality",
+        "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let lines: Vec<&str> = stdout.lines().filter(|l| !l.is_empty()).collect();
+    assert_eq!(lines.len(), 1, "one record for one campaign: {stdout}");
+    let parsed = Json::parse(lines[0]).unwrap_or_else(|e| panic!("{e}: {}", lines[0]));
+    let rec = Record::from_json(&parsed).unwrap();
+    assert_eq!(rec.kind(), "campaign");
+    assert_eq!(
+        parsed.get("label").and_then(Json::as_str),
+        Some("matmul:16/memory")
+    );
+    assert_eq!(
+        parsed.get("sigfpe_total").and_then(Json::as_f64),
+        Some(2.0),
+        "1 NaN × 2 reps under memory protection"
+    );
+    assert_eq!(rec.render_jsonl(), lines[0], "round-trip is byte-exact");
+}
+
+/// Acceptance: `nanrepair fig7 --json` emits one parseable record per
+/// size row; default text output still renders the two tables.
+#[test]
+fn cli_fig7_json_round_trips_and_text_unchanged() {
+    let common = ["fig7", "--sizes", "16", "--reps", "2", "--seed", "3"];
+
+    let mut json_args = common.to_vec();
+    json_args.push("--json");
+    let (stdout, stderr, ok) = run_cli(&json_args);
+    assert!(ok, "stderr: {stderr}");
+    let lines: Vec<&str> = stdout.lines().filter(|l| !l.is_empty()).collect();
+    assert_eq!(lines.len(), 1, "{stdout}");
+    let parsed = Json::parse(lines[0]).unwrap();
+    let rec = Record::from_json(&parsed).unwrap();
+    assert_eq!(rec.kind(), "fig7_row");
+    assert_eq!(parsed.get("n").and_then(Json::as_f64), Some(16.0));
+    assert_eq!(parsed.get("memory_sigfpe").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(
+        parsed.get("register_sigfpe").and_then(Json::as_f64),
+        Some(16.0)
+    );
+    assert_eq!(rec.render_jsonl(), lines[0]);
+
+    // default text output: the familiar tables, no JSON anywhere
+    let (stdout, stderr, ok) = run_cli(&common);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("Figure 7 —"), "{stdout}");
+    assert!(stdout.contains("Table 3 —"), "{stdout}");
+    assert!(!stdout.contains("{\"record\""), "{stdout}");
+}
+
+/// `--out` writes the records to a file; `--format csv` produces a header
+/// plus one line per record.
+#[test]
+fn cli_out_file_and_csv() {
+    let dir = std::env::temp_dir().join(format!("nanrepair_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mc.csv");
+    let (_, stderr, ok) = run_cli(&[
+        "montecarlo",
+        "--words",
+        "256",
+        "--trials",
+        "2",
+        "--bers",
+        "1e-3",
+        "--format",
+        "csv",
+        "--out",
+        path.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let content = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = content.lines().collect();
+    assert_eq!(lines.len(), 2, "{content}");
+    assert!(lines[0].starts_with("record,ber,"), "{content}");
+    assert!(lines[1].starts_with("montecarlo_row,"), "{content}");
+    std::fs::remove_dir_all(&dir).ok();
+}

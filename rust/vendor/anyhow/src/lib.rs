@@ -1,0 +1,193 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Implements the subset of the real API this workspace uses: [`Error`],
+//! [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`] macros, and the
+//! [`Context`] extension trait on `Result`/`Option`.  Errors carry a
+//! message plus an optional boxed source, and `Display`/`Debug` render the
+//! context chain the way callers expect (`Debug` shows `msg: source`).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamic error type carrying a message and an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Self {
+            msg: msg.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap an existing error with a context message.
+    pub fn context_of<M: fmt::Display>(msg: M, source: Error) -> Self {
+        Self {
+            msg: msg.to_string(),
+            source: Some(Box::new(Wrapped(source.to_string()))),
+        }
+    }
+
+    /// The root-cause chain rendered as `a: b: c`.
+    fn chain_string(&self) -> String {
+        let mut out = self.msg.clone();
+        let mut cur: Option<&(dyn StdError + 'static)> =
+            self.source.as_ref().map(|b| b.as_ref() as &(dyn StdError + 'static));
+        while let Some(e) = cur {
+            out.push_str(": ");
+            out.push_str(&e.to_string());
+            cur = e.source();
+        }
+        out
+    }
+}
+
+/// Internal leaf wrapper so a flattened chain can still be a `source`.
+#[derive(Debug)]
+struct Wrapped(String);
+
+impl fmt::Display for Wrapped {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for Wrapped {}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain_string())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain_string())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self {
+            msg: e.to_string(),
+            source: e.source().map(|s| {
+                Box::new(Wrapped(s.to_string())) as Box<dyn StdError + Send + Sync + 'static>
+            }),
+        }
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+///
+/// One non-overlapping impl covers both `Result<T, E: StdError>` and
+/// `Result<T, anyhow::Error>`: everything convertible into [`Error`]
+/// (std errors via the blanket `From`, `Error` via the identity `From`).
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::context_of(ctx, e.into()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::context_of(f(), e.into()))
+    }
+}
+
+impl<T> Context<T, ()> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Return early with an error if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = fails_io().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn context_chains_render() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let e2: Error = Err::<(), _>(e).with_context(|| "outermost").unwrap_err();
+        assert!(e2.to_string().starts_with("outermost: outer"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(-1).unwrap_err().to_string().contains("positive"));
+        assert!(f(200).unwrap_err().to_string().contains("too big"));
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+}

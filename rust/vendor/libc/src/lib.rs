@@ -1,0 +1,211 @@
+//! Minimal offline `libc` bindings for x86_64-unknown-linux-gnu.
+//!
+//! Only the symbols this workspace touches are declared: the
+//! `sigaction(SA_SIGINFO)` path with its saved `ucontext_t`/`mcontext_t`/
+//! `_libc_fpstate` layouts (glibc's, bit-for-bit — the trap handler
+//! patches xmm registers through them), `fork`/`waitpid`/`kill`/`raise`,
+//! and the `ptrace` FPREGS calls used by the out-of-process supervisor
+//! example.  Layouts follow glibc's `sys/ucontext.h` and
+//! `bits/sigcontext.h` for x86_64; changing them desynchronizes the
+//! signal path, so treat this file as ABI, not code.
+#![allow(non_camel_case_types)]
+#![allow(clippy::missing_safety_doc)]
+
+pub type c_int = i32;
+pub type c_uint = u32;
+pub type c_long = i64;
+pub type c_ulong = u64;
+pub type c_char = i8;
+pub type c_void = core::ffi::c_void;
+pub type pid_t = i32;
+pub type size_t = usize;
+pub type sighandler_t = usize;
+pub type greg_t = i64;
+
+pub const SIGFPE: c_int = 8;
+pub const SIGKILL: c_int = 9;
+pub const SIGSTOP: c_int = 19;
+pub const SA_SIGINFO: c_int = 4;
+pub const SIG_DFL: sighandler_t = 0;
+
+// glibc x86_64 `gregs` indices (sys/ucontext.h).
+pub const REG_R8: c_int = 0;
+pub const REG_R9: c_int = 1;
+pub const REG_R10: c_int = 2;
+pub const REG_R11: c_int = 3;
+pub const REG_R12: c_int = 4;
+pub const REG_R13: c_int = 5;
+pub const REG_R14: c_int = 6;
+pub const REG_R15: c_int = 7;
+pub const REG_RDI: c_int = 8;
+pub const REG_RSI: c_int = 9;
+pub const REG_RBP: c_int = 10;
+pub const REG_RBX: c_int = 11;
+pub const REG_RDX: c_int = 12;
+pub const REG_RAX: c_int = 13;
+pub const REG_RCX: c_int = 14;
+pub const REG_RSP: c_int = 15;
+pub const REG_RIP: c_int = 16;
+
+// ptrace requests (sys/ptrace.h).
+pub const PTRACE_TRACEME: c_uint = 0;
+pub const PTRACE_CONT: c_uint = 7;
+pub const PTRACE_GETFPREGS: c_uint = 14;
+pub const PTRACE_SETFPREGS: c_uint = 15;
+
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct sigset_t {
+    pub __val: [u64; 16],
+}
+
+#[repr(C)]
+pub struct sigaction {
+    pub sa_sigaction: sighandler_t,
+    pub sa_mask: sigset_t,
+    pub sa_flags: c_int,
+    pub sa_restorer: Option<unsafe extern "C" fn()>,
+}
+
+#[repr(C)]
+pub struct siginfo_t {
+    pub si_signo: c_int,
+    pub si_errno: c_int,
+    pub si_code: c_int,
+    // Payload union + padding up to glibc's 128-byte siginfo_t.
+    _pad: [c_int; 29],
+    _align: [u64; 0],
+}
+
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct stack_t {
+    pub ss_sp: *mut c_void,
+    pub ss_flags: c_int,
+    pub ss_size: size_t,
+}
+
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct _libc_fpxreg {
+    pub significand: [u16; 4],
+    pub exponent: u16,
+    pub __glibc_reserved1: [u16; 3],
+}
+
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct _libc_xmmreg {
+    pub element: [u32; 4],
+}
+
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct _libc_fpstate {
+    pub cwd: u16,
+    pub swd: u16,
+    pub ftw: u16,
+    pub fop: u16,
+    pub rip: u64,
+    pub rdp: u64,
+    pub mxcsr: u32,
+    pub mxcr_mask: u32,
+    pub _st: [_libc_fpxreg; 8],
+    pub _xmm: [_libc_xmmreg; 16],
+    pub __glibc_reserved1: [u32; 24],
+}
+
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct mcontext_t {
+    pub gregs: [greg_t; 23],
+    pub fpregs: *mut _libc_fpstate,
+    pub __reserved1: [u64; 8],
+}
+
+#[repr(C)]
+pub struct ucontext_t {
+    pub uc_flags: c_ulong,
+    pub uc_link: *mut ucontext_t,
+    pub uc_stack: stack_t,
+    pub uc_mcontext: mcontext_t,
+    pub uc_sigmask: sigset_t,
+    pub __fpregs_mem: _libc_fpstate,
+    pub __ssp: [u64; 4],
+}
+
+/// `user_fpregs_struct` from `sys/user.h` (x86_64) — the PTRACE_GETFPREGS
+/// payload.
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct user_fpregs_struct {
+    pub cwd: u16,
+    pub swd: u16,
+    pub ftw: u16,
+    pub fop: u16,
+    pub rip: u64,
+    pub rdp: u64,
+    pub mxcsr: u32,
+    pub mxcr_mask: u32,
+    pub st_space: [u32; 32],
+    pub xmm_space: [u32; 64],
+    pub padding: [u32; 24],
+}
+
+extern "C" {
+    pub fn sigaction(signum: c_int, act: *const sigaction, oldact: *mut sigaction) -> c_int;
+    pub fn sigemptyset(set: *mut sigset_t) -> c_int;
+    pub fn fork() -> pid_t;
+    pub fn kill(pid: pid_t, sig: c_int) -> c_int;
+    pub fn raise(sig: c_int) -> c_int;
+    pub fn waitpid(pid: pid_t, status: *mut c_int, options: c_int) -> pid_t;
+    pub fn ptrace(request: c_uint, ...) -> c_long;
+}
+
+/// `sys/wait.h` status decoding (glibc macro equivalents).
+#[allow(non_snake_case)]
+pub fn WIFEXITED(status: c_int) -> bool {
+    (status & 0x7f) == 0
+}
+
+#[allow(non_snake_case)]
+pub fn WEXITSTATUS(status: c_int) -> c_int {
+    (status >> 8) & 0xff
+}
+
+#[allow(non_snake_case)]
+pub fn WIFSTOPPED(status: c_int) -> bool {
+    (status & 0xff) == 0x7f
+}
+
+#[allow(non_snake_case)]
+pub fn WSTOPSIG(status: c_int) -> c_int {
+    (status >> 8) & 0xff
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The one property the trap path depends on: these layouts match
+    // glibc's sizes on x86_64 (any drift corrupts the saved FP state).
+    #[test]
+    fn abi_sizes_match_glibc() {
+        assert_eq!(std::mem::size_of::<sigset_t>(), 128);
+        assert_eq!(std::mem::size_of::<_libc_fpstate>(), 512);
+        assert_eq!(std::mem::size_of::<mcontext_t>(), 256);
+        assert_eq!(std::mem::size_of::<user_fpregs_struct>(), 512);
+        assert_eq!(std::mem::size_of::<siginfo_t>(), 128);
+    }
+
+    #[test]
+    fn wait_status_decoding() {
+        // exit(3) → status 0x0300
+        assert!(WIFEXITED(0x0300));
+        assert_eq!(WEXITSTATUS(0x0300), 3);
+        // stopped by SIGSTOP → 0x137f
+        assert!(WIFSTOPPED(0x137f));
+        assert_eq!(WSTOPSIG(0x137f), SIGSTOP);
+        assert!(!WIFEXITED(0x137f));
+    }
+}

@@ -1,0 +1,85 @@
+//! Minimal offline stand-in for `once_cell`: `sync::Lazy` and
+//! `sync::OnceCell`, built on `std::sync::OnceLock`.
+
+pub mod sync {
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub const fn new(init: F) -> Self {
+            Self {
+                cell: OnceLock::new(),
+                init,
+            }
+        }
+
+        pub fn force(this: &Self) -> &T {
+            this.cell.get_or_init(&this.init)
+        }
+    }
+
+    impl<T, F: Fn() -> T> std::ops::Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Self::force(self)
+        }
+    }
+
+    /// A thread-safe cell that can be written to once.
+    pub struct OnceCell<T> {
+        inner: OnceLock<T>,
+    }
+
+    impl<T> OnceCell<T> {
+        pub const fn new() -> Self {
+            Self {
+                inner: OnceLock::new(),
+            }
+        }
+
+        pub fn get(&self) -> Option<&T> {
+            self.inner.get()
+        }
+
+        pub fn set(&self, value: T) -> Result<(), T> {
+            self.inner.set(value)
+        }
+
+        pub fn get_or_init<F: FnOnce() -> T>(&self, f: F) -> &T {
+            self.inner.get_or_init(f)
+        }
+    }
+
+    impl<T> Default for OnceCell<T> {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::{Lazy, OnceCell};
+
+    #[test]
+    fn lazy_initializes_once() {
+        static L: Lazy<Vec<u32>> = Lazy::new(|| vec![1, 2, 3]);
+        assert_eq!(L.len(), 3);
+        assert_eq!(L[0], 1);
+    }
+
+    #[test]
+    fn once_cell_set_get() {
+        let c: OnceCell<u32> = OnceCell::new();
+        assert!(c.get().is_none());
+        assert!(c.set(5).is_ok());
+        assert_eq!(c.set(6), Err(6));
+        assert_eq!(*c.get_or_init(|| 9), 5);
+    }
+}
