@@ -1,13 +1,18 @@
 //! Scheduler throughput baseline: `run_batch` cells/sec at 1, 4, and 8
-//! workers, so future scheduler changes have a perf reference.
+//! workers, for both non-trap and **trap-armed** batches, so scheduler and
+//! trap-domain changes have a perf reference.
 //!
-//! Each batch is 16 non-trap matmul cells (the parallelizable case — trap
-//! cells serialize on the global trap lock and measure lock contention,
-//! not scheduler overhead).  The printed `cells/s` line is the headline
-//! number.
+//! Each batch is 16 matmul cells.  The non-trap variant isolates pure
+//! scheduler overhead; the trap variant (RegisterMemory protection, one
+//! injected NaN per rep) is the headline of the trap-domain sharding: with
+//! the old process-global armed snapshot these cells serialized on one
+//! lock and 8 workers ran at 1-worker throughput, while per-worker trap
+//! domains let them scale with the worker count.  The printed
+//! `throughput` blocks give the cells/s and the speedup vs 1 worker.
 //!
 //! `cargo bench --bench sched_batch` (env NANREPAIR_BENCH_QUICK=1 for CI,
-//! NANREPAIR_SCHED_CELLS=N to override the batch size).
+//! NANREPAIR_SCHED_CELLS=N to override the batch size,
+//! NANREPAIR_BENCH_JSON=FILE to write the records as a JSON baseline).
 
 use nanrepair::approxmem::injector::InjectionSpec;
 use nanrepair::bench::{Bench, Runner};
@@ -16,11 +21,11 @@ use nanrepair::coordinator::protection::Protection;
 use nanrepair::coordinator::scheduler;
 use nanrepair::workloads::WorkloadKind;
 
-fn batch(cells: usize, n: usize) -> Vec<CampaignConfig> {
+fn batch(cells: usize, n: usize, protection: Protection) -> Vec<CampaignConfig> {
     (0..cells)
         .map(|i| CampaignConfig {
             workload: WorkloadKind::MatMul { n },
-            protection: Protection::None,
+            protection,
             injection: InjectionSpec::ExactNaNs { count: 1 },
             reps: 2,
             warmup: 0,
@@ -31,6 +36,41 @@ fn batch(cells: usize, n: usize) -> Vec<CampaignConfig> {
         .collect()
 }
 
+/// Bench one batch shape at 1/4/8 workers; returns (workers, cells/s).
+fn sweep(
+    r: &mut Runner,
+    label: &str,
+    cells: usize,
+    n: usize,
+    protection: Protection,
+) -> Vec<(usize, f64)> {
+    let mut throughput = Vec::new();
+    for workers in [1usize, 4, 8] {
+        let res = r.bench(
+            &format!("{label}{cells}x{n}/workers{workers}"),
+            Bench::new(move || {
+                let out = scheduler::run_batch(batch(cells, n, protection), workers);
+                assert!(out.iter().all(|c| c.is_ok()));
+            })
+            .samples(5)
+            .budget(2.0),
+        );
+        throughput.push((workers, cells as f64 / res.summary.mean));
+    }
+    throughput
+}
+
+fn print_throughput(title: &str, throughput: &[(usize, f64)]) {
+    println!("\n{title} (cells/s):");
+    let (_, serial) = throughput[0];
+    for (workers, cps) in throughput {
+        println!(
+            "  {workers} workers: {cps:8.1} cells/s  ({:.2}x vs 1 worker)",
+            cps / serial
+        );
+    }
+}
+
 fn main() {
     let mut r = Runner::from_env("sched_batch");
     let cells: usize = std::env::var("NANREPAIR_SCHED_CELLS")
@@ -39,27 +79,22 @@ fn main() {
         .unwrap_or(16);
     let n = if r.is_quick() { 32 } else { 96 };
 
-    let mut throughput = Vec::new();
-    for workers in [1usize, 4, 8] {
-        let res = r.bench(
-            &format!("batch{cells}x{n}/workers{workers}"),
-            Bench::new(move || {
-                let out = scheduler::run_batch(batch(cells, n), workers);
-                assert!(out.iter().all(|c| c.is_ok()));
-            })
-            .samples(5)
-            .budget(2.0),
-        );
-        throughput.push((workers, cells as f64 / res.summary.mean));
-    }
+    // non-trap: pure scheduler/session overhead
+    let plain = sweep(&mut r, "batch", cells, n, Protection::None);
+    // trap-armed: every cell arms its own trap domain and takes one
+    // SIGFPE repair per rep — the reactive-protection sweep the paper's
+    // "negligible overhead" claim is about, at scale
+    let trap = sweep(&mut r, "trap_batch", cells, n, Protection::RegisterMemory);
     r.finish();
 
-    println!("\nthroughput (cells/s):");
-    let (_, serial) = throughput[0];
-    for (workers, cps) in &throughput {
+    print_throughput("non-trap throughput", &plain);
+    print_throughput("trap-armed throughput", &trap);
+    let (_, t1) = trap[0];
+    if let Some((w, cps)) = trap.iter().find(|(w, _)| *w == 4) {
         println!(
-            "  {workers} workers: {cps:8.1} cells/s  ({:.2}x vs 1 worker)",
-            cps / serial
+            "\nheadline: trap-armed batch at {w} workers runs {:.2}x the \
+             1-worker throughput ({cps:.1} vs {t1:.1} cells/s)",
+            cps / t1
         );
     }
 }

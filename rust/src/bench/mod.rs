@@ -11,9 +11,15 @@
 //!
 //! Measures wall time with warmup, adaptive iteration count targeting a
 //! fixed measurement budget, and reports mean ± ci95 / p50 / p99.
+//!
+//! Set `NANREPAIR_BENCH_JSON=<path>` to also write the suite's results as
+//! JSON-lines `bench` records through the structured-report sink (one
+//! object per benchmark) — CI uses this to keep a perf-baseline artifact
+//! per run.
 
 use std::time::Instant;
 
+use crate::util::report::{OutputFormat, Record, ResultSink};
 use crate::util::stats::Summary;
 use crate::util::table::{fmt_secs, Table};
 
@@ -131,7 +137,8 @@ impl Runner {
         self.results.last().unwrap()
     }
 
-    /// Print the final table; returns it for programmatic use.
+    /// Print the final table; returns it for programmatic use.  Also
+    /// writes the JSON-lines baseline when `NANREPAIR_BENCH_JSON` is set.
     pub fn finish(self) -> Vec<BenchResult> {
         let mut t = Table::new(
             &format!("suite {}", self.suite),
@@ -148,7 +155,34 @@ impl Runner {
             ]);
         }
         t.print();
+        if let Ok(path) = std::env::var("NANREPAIR_BENCH_JSON") {
+            if !path.is_empty() {
+                match self.write_json(&path) {
+                    Ok(()) => println!("wrote JSON baseline to {path}"),
+                    Err(e) => eprintln!("NANREPAIR_BENCH_JSON={path}: {e}"),
+                }
+            }
+        }
         self.results
+    }
+
+    /// Encode every result as a `bench` record through the report sink.
+    fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let mut sink = ResultSink::to_path(OutputFormat::JsonLines, path)?;
+        for r in &self.results {
+            sink.record(
+                &Record::new("bench")
+                    .field("suite", self.suite.as_str())
+                    .field("bench", r.name.as_str())
+                    .field("quick", self.quick)
+                    .field("mean_secs", r.summary.mean)
+                    .field("ci95_secs", r.summary.ci95())
+                    .field("p50_secs", r.summary.p50)
+                    .field("p99_secs", r.summary.p99)
+                    .field("n", r.summary.n),
+            )?;
+        }
+        sink.flush()
     }
 }
 

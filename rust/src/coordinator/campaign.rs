@@ -156,8 +156,9 @@ impl Campaign {
         self.cfg.label()
     }
 
-    /// Execute the campaign in a throwaway [`ExperimentSession`].  Takes
-    /// the global trap lock if the protection scheme arms the trap.
+    /// Execute the campaign in a throwaway [`ExperimentSession`].  If the
+    /// protection scheme arms the trap, the cell claims its own trap
+    /// domain — concurrent campaigns never share counters.
     pub fn run(&self) -> anyhow::Result<CampaignReport> {
         ExperimentSession::new().run_cell(&self.cfg)
     }

@@ -5,11 +5,12 @@
 //! cell: allocate in approximate memory, inject, run under the configured
 //! protection, measure.  The [`session::ExperimentSession`] is the engine
 //! that actually executes cells — it caches workloads (buffer reuse across
-//! cells) and arms the trap domain.  The [`scheduler`] fans independent
-//! cells out over a worker pool, one session per worker (trap-armed cells
-//! serialize on the global trap state; the MXCSR unmasking itself is
-//! per-thread).  [`metrics`] collects cross-cutting counters, and results
-//! flow out as structured records (see [`crate::util::report`]).
+//! cells) and arms a per-cell trap domain.  The [`scheduler`] fans
+//! independent cells out over a worker pool, one session per worker;
+//! trap-armed cells on different workers arm different domains and run
+//! concurrently (MXCSR unmasking and the domain binding are per-thread).
+//! [`metrics`] collects cross-cutting counters, and results flow out as
+//! structured records (see [`crate::util::report`]).
 
 pub mod campaign;
 pub mod metrics;

@@ -6,15 +6,17 @@
 //! policy-ablation, montecarlo, pipeline) executes through this module.
 //! Each worker thread owns a long-lived [`ExperimentSession`], so cells of
 //! the same workload kind reuse allocated buffers instead of rebuilding
-//! the pool per cell.  Cells whose protection arms the trap serialize
-//! internally on the global trap lock (taken inside
-//! [`ExperimentSession::run_cell`]), so mixing trap and non-trap cells in
-//! one batch is safe; non-trap cells genuinely run concurrently.
+//! the pool per cell.  Trap-armed cells claim per-worker **trap domains**
+//! (see [`crate::trap::handler`]), so an N-worker batch of reactive
+//! (RegisterMemory/RegisterOnly) cells runs at N-worker throughput — the
+//! old process-global armed snapshot that serialized them is gone, and
+//! mixed trap/non-trap batches need no special casing at all.
 //!
 //! Results come back in input order and are a pure function of each cell's
 //! config — worker count never changes what a batch returns, only how
 //! fast it returns it (asserted by the determinism tests).
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -32,6 +34,31 @@ pub struct CellTelemetry {
     pub worker: usize,
     /// Wall-clock seconds the cell spent executing.
     pub run_secs: f64,
+}
+
+// ---- telemetry capture (the CLI's --telemetry flag) ----------------------
+//
+// Harness entry points return tables/records, not telemetry, so the CLI
+// would otherwise have to thread a side channel through every harness
+// signature.  Instead the scheduler can be asked to log each batch's
+// telemetry here for the caller to drain after the command ran.
+
+static TELEMETRY_CAPTURE: AtomicBool = AtomicBool::new(false);
+static CAPTURED_TELEMETRY: Mutex<Vec<Vec<CellTelemetry>>> = Mutex::new(Vec::new());
+
+/// Enable/disable capture of per-batch telemetry for later draining.
+/// Disabling also clears anything captured.
+pub fn set_telemetry_capture(on: bool) {
+    TELEMETRY_CAPTURE.store(on, Ordering::Relaxed);
+    if !on {
+        CAPTURED_TELEMETRY.lock().unwrap().clear();
+    }
+}
+
+/// Telemetry of every batch run since capture was enabled — one entry per
+/// batch, cells sorted by index.  Draining empties the log.
+pub fn drain_captured_telemetry() -> Vec<Vec<CellTelemetry>> {
+    std::mem::take(&mut *CAPTURED_TELEMETRY.lock().unwrap())
 }
 
 /// Run every campaign config, `workers` at a time; results come back in
@@ -81,7 +108,12 @@ where
     if n == 0 {
         return (Vec::new(), Vec::new());
     }
-    let workers = workers.clamp(1, n);
+    // Cap at the trap-domain table size: every worker may arm a domain
+    // for a trap-armed cell, and claiming past NUM_DOMAINS panics.  On a
+    // >64-core host this bounds a batch to 64 concurrent cells, which is
+    // also past the point of memory-bandwidth saturation for our
+    // workloads.
+    let workers = workers.clamp(1, n).min(crate::trap::NUM_DOMAINS);
     let queue: Mutex<Vec<(usize, T)>> =
         Mutex::new(items.into_iter().enumerate().rev().collect());
     let (tx, rx) = mpsc::channel::<(usize, anyhow::Result<R>, CellTelemetry)>();
@@ -122,6 +154,9 @@ where
         }
         Metrics::global().incr("scheduler.batches");
         cells.sort_by_key(|c| c.index);
+        if TELEMETRY_CAPTURE.load(Ordering::Relaxed) {
+            CAPTURED_TELEMETRY.lock().unwrap().push(cells.clone());
+        }
         let results = results
             .into_iter()
             .map(|r| r.unwrap_or_else(|| Err(anyhow::anyhow!("worker died"))))
@@ -229,6 +264,27 @@ mod tests {
         // both workers should have participated in a 5-cell batch...
         // (not guaranteed under extreme scheduling, so only sanity-check
         // the range above)
+    }
+
+    #[test]
+    fn telemetry_capture_drains_batches() {
+        set_telemetry_capture(true);
+        let configs: Vec<_> = (0..3).map(|i| cfg(8, i as u64, Protection::None)).collect();
+        let _ = run_batch(configs, 2);
+        let batches = drain_captured_telemetry();
+        // concurrent tests may have contributed batches too; ours is the
+        // one with exactly 3 cells indexed 0..3
+        assert!(
+            batches.iter().any(|b| b.len() == 3
+                && b.iter().enumerate().all(|(i, c)| c.index == i)),
+            "{batches:?}"
+        );
+        set_telemetry_capture(false);
+        let _ = run_batch(vec![cfg(8, 9, Protection::None)], 1);
+        assert!(
+            drain_captured_telemetry().is_empty(),
+            "capture off must not log"
+        );
     }
 
     #[test]

@@ -15,8 +15,13 @@
 //! * one **pool per cached workload**, so the injector's region view for a
 //!   cell is bit-identical to what a freshly-built campaign would see —
 //!   session reuse cannot change injection ground truth;
-//! * **trap-domain arming**: the session takes the global trap lock and
-//!   arms/disarms the SIGFPE window around each protected cell.
+//! * **trap-domain arming**: each protected cell claims its own slot in
+//!   the trap-domain table ([`crate::trap::handler`]) for the
+//!   arm→measure→disarm window.  Sessions on different workers arm
+//!   different domains over their own cached pools, so trap-armed cells
+//!   run genuinely concurrently — no process-global lock, no shared
+//!   counters (each cell's [`crate::trap::TrapStats`] comes from its own
+//!   domain).
 //!
 //! `Campaign::run` is now a thin wrapper that runs one cell in a
 //! throwaway session; the scheduler gives each worker thread a long-lived
@@ -31,7 +36,7 @@ use crate::approxmem::injector::{InjectionReport, InjectionSpec, Injector};
 use crate::approxmem::pool::ApproxPool;
 use crate::approxmem::scrubber::Scrubber;
 use crate::repair::policy::RepairPolicy;
-use crate::trap::{handler, TrapGuard};
+use crate::trap::TrapGuard;
 use crate::util::stats::Summary;
 use crate::workloads::{Workload, WorkloadKind};
 
@@ -95,10 +100,6 @@ impl ExperimentSession {
                 cfg.protection.name()
             );
         }
-        // Trap-armed cells serialize on the global trap state; the session
-        // takes the lock for the whole cell (arm → measure → disarm).
-        let _trap_serialize = cfg.protection.uses_trap().then(crate::trap::test_lock);
-
         let cell_t0 = Instant::now();
 
         // Bound cache growth before admitting a kind we have not seen:
@@ -138,10 +139,10 @@ impl ExperimentSession {
             workload.run();
         }
 
-        // Arm the trap domain for this cell (reactive protections only).
-        // Non-trap cells must not touch the process-global counters at all:
-        // they run concurrently with trap-armed cells on other workers and
-        // a reset here would clobber those cells' counts mid-measurement.
+        // Arm a trap domain for this cell (reactive protections only).
+        // The guard claims its own slot in the domain table, so cells on
+        // other workers — trap-armed or not — cannot see or perturb this
+        // cell's counters.
         let guard = cfg
             .protection
             .trap_config(cfg.policy)
@@ -195,13 +196,9 @@ impl ExperimentSession {
             elapsed.push(t0.elapsed().as_secs_f64());
         }
 
-        // Non-trap cells by definition saw no traps; reading the global
-        // counters instead would leak another worker's numbers in.
-        let traps = if guard.is_some() {
-            handler::stats_snapshot()
-        } else {
-            handler::TrapStats::default()
-        };
+        // Per-domain counters: the guard reads exactly this cell's domain.
+        // Non-trap cells by definition saw no traps.
+        let traps = guard.as_ref().map(|g| g.stats()).unwrap_or_default();
         drop(guard);
 
         let quality = cfg.check_quality.then(|| workload.quality());

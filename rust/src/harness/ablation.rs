@@ -125,7 +125,6 @@ pub fn ecc_matmul(n: usize, seed: u64) -> (f64, u64) {
 /// EXT-PROT: wall-clock of one matmul run under every protection scheme,
 /// one injected NaN (where meaningful).
 pub fn protection_compare(n: usize, seed: u64) -> anyhow::Result<Table> {
-    let _lock = crate::trap::test_lock();
     let mut t = Table::new(
         &format!("EXT-PROT — matmul n={n}, one injected NaN"),
         &["protection", "elapsed", "vs normal", "notes"],

@@ -7,8 +7,9 @@
 //! for register+memory.
 //!
 //! Cells execute through [`scheduler::run_batch`]: the three protections ×
-//! all sizes form one batch; the normal (non-trap) cells run concurrently
-//! while the two trap-armed cells per size serialize on the trap lock.
+//! all sizes form one batch, and every cell — trap-armed or not — runs
+//! concurrently (each worker's trap-armed cells arm their own trap
+//! domain).
 
 use crate::approxmem::injector::InjectionSpec;
 use crate::coordinator::campaign::CampaignConfig;

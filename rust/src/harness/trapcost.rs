@@ -22,9 +22,9 @@ pub struct TrapCostReport {
     pub handler_cycles: f64,
 }
 
-/// Measure `trials` single-trap round trips.
+/// Measure `trials` single-trap round trips.  The guard's trap domain
+/// isolates these counters from any concurrently armed window.
 pub fn run(trials: usize) -> TrapCostReport {
-    let _lock = crate::trap::test_lock();
     let pool = ApproxPool::new();
     let mut buf = pool.alloc_f64(2);
     buf[1] = 3.0;

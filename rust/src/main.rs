@@ -4,10 +4,12 @@
 //! (DESIGN.md §5). `nanrepair help` lists everything.
 //!
 //! Global options (every subcommand): `--json` / `--format json|csv|text`
-//! select the output encoding, `--out FILE` redirects it, and
-//! `--workers N` sets the scheduler worker count (0 = all cores; also
-//! settable via `NANREPAIR_WORKERS`).  Default text output on stdout is
-//! byte-identical to the pre-sink CLI.
+//! select the output encoding, `--out FILE` redirects it, `--workers N`
+//! sets the scheduler worker count (0 = all cores; also settable via
+//! `NANREPAIR_WORKERS`), and `--telemetry` appends per-cell scheduler
+//! telemetry (which worker ran each cell, and for how long) after the
+//! results.  Default text output on stdout is byte-identical to the
+//! pre-sink CLI.
 
 use anyhow::Result;
 use nanrepair::approxmem::injector::InjectionSpec;
@@ -28,6 +30,7 @@ fn app() -> App {
         .global_opt("format", Some("text"), "output encoding: text|json|csv")
         .global_opt("out", None, "write output to this file instead of stdout")
         .global_opt("workers", Some("0"), "scheduler worker threads (0 = all cores)")
+        .global_flag("telemetry", "emit per-cell scheduler telemetry (worker, timing)")
         .cmd(
             CmdSpec::new("run", "run one campaign cell (workload × protection × injection)")
                 .opt("workload", Some("matmul:512"), "workload spec name:size[:extra]")
@@ -211,6 +214,11 @@ fn main() -> Result<()> {
     }
     let workers = scheduler::default_workers();
     let mut sink = make_sink(&m)?;
+    // --telemetry: ask the scheduler to log each batch's per-cell
+    // worker/timing records so we can emit them after the results.
+    if m.flag("telemetry") {
+        scheduler::set_telemetry_capture(true);
+    }
 
     match m.cmd.as_str() {
         "run" => {
@@ -416,8 +424,58 @@ fn main() -> Result<()> {
         }
         other => anyhow::bail!("unhandled command {other}"),
     }
+    if m.flag("telemetry") {
+        emit_telemetry(&mut sink)?;
+    }
     if let Some(s) = &mut sink {
         s.flush()?;
+    }
+    Ok(())
+}
+
+/// Emit the per-cell telemetry captured by the scheduler during this
+/// command: one `cell_telemetry` record per cell through the sink, or a
+/// table on stdout in default text mode.  Worker attribution makes the
+/// trap-domain scaling visible — every worker should carry cells of a
+/// trap-armed batch, not just one.
+fn emit_telemetry(sink: &mut Option<ResultSink>) -> Result<()> {
+    let batches = scheduler::drain_captured_telemetry();
+    if batches.is_empty() {
+        // command never ran a scheduler batch (e.g. `run`, `fig1`)
+        return Ok(());
+    }
+    match sink {
+        Some(s) => {
+            for (batch, cells) in batches.iter().enumerate() {
+                for c in cells {
+                    s.record(
+                        &Record::new("cell_telemetry")
+                            .field("batch", batch)
+                            .field("cell", c.index)
+                            .field("worker", c.worker)
+                            .field("run_secs", c.run_secs),
+                    )?;
+                }
+            }
+        }
+        None => {
+            let mut t = nanrepair::util::table::Table::new(
+                "scheduler telemetry — per-cell worker/timing",
+                &["batch", "cell", "worker", "secs"],
+            );
+            for (batch, cells) in batches.iter().enumerate() {
+                for c in cells {
+                    t.row(&[
+                        batch.to_string(),
+                        c.index.to_string(),
+                        c.worker.to_string(),
+                        fmt_secs(c.run_secs),
+                    ]);
+                }
+            }
+            println!();
+            t.print();
+        }
     }
     Ok(())
 }

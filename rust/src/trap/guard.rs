@@ -1,5 +1,7 @@
 //! RAII arming of the trap path around a protected compute region.
 
+use std::marker::PhantomData;
+
 use crate::approxmem::pool::ApproxPool;
 use crate::repair::policy::RepairPolicy;
 
@@ -25,57 +27,86 @@ impl Default for TrapConfig {
 
 /// Arms the SIGFPE repair path for the current thread; disarms on drop.
 ///
-/// The handler and armed snapshot are process-global, while the MXCSR
-/// unmasking is per-thread: campaigns arm once on the compute thread and
-/// run one protected window at a time (serialized via
-/// [`crate::trap::test_lock`] in tests).
+/// The guard owns one **trap domain** slot from the fixed table in
+/// [`handler`]: its own armed flag, policy, region snapshot, and counters.
+/// The slot index is recorded in a thread-local that the signal handler
+/// reads, so concurrent guards on different threads repair and count
+/// independently — no process-global serialization.  MXCSR unmasking is
+/// per-thread as before.  One guard per thread at a time (nested arming
+/// panics); the guard is `!Send` because both the MXCSR state and the
+/// domain binding belong to the arming thread.
 pub struct TrapGuard {
+    slot: usize,
     saved_mxcsr: u32,
+    /// MXCSR and the thread-local domain binding are thread state: keep
+    /// the guard (and its drop) on the arming thread.
+    _not_send: PhantomData<*const ()>,
 }
 
 impl TrapGuard {
-    /// Install the handler (idempotent), snapshot `pool`'s regions into the
-    /// armed state, and unmask the invalid-operation exception on this
-    /// thread.
+    /// Install the handler (idempotent), claim a free trap domain,
+    /// snapshot `pool`'s regions into it, and unmask the
+    /// invalid-operation exception on this thread.
     pub fn arm(pool: &ApproxPool, cfg: &TrapConfig) -> Self {
         handler::install();
+        assert!(
+            handler::current_domain().is_none(),
+            "nested TrapGuard arming on one thread"
+        );
         let regions = pool.regions();
         assert!(
             regions.len() <= handler::MAX_REGIONS,
-            "too many approximate regions for the armed snapshot"
+            "too many approximate regions for the armed snapshot ({} > {})",
+            regions.len(),
+            handler::MAX_REGIONS
         );
-        handler::arm_state(&regions, cfg.policy, cfg.memory_repair);
+        let slot = handler::claim_domain();
+        handler::arm_domain(slot, &regions, cfg.policy, cfg.memory_repair);
         let saved_mxcsr = mxcsr::unmask_invalid();
-        Self { saved_mxcsr }
+        Self {
+            slot,
+            saved_mxcsr,
+            _not_send: PhantomData,
+        }
     }
 
-    /// Arm and zero the trap counters in one step — the session engine's
-    /// per-cell arming path (counters always start a cell from zero).
+    /// Arm and zero the domain's counters in one step — the session
+    /// engine's per-cell arming path (counters always start a cell from
+    /// zero).
     pub fn arm_reset(pool: &ApproxPool, cfg: &TrapConfig) -> Self {
         let guard = Self::arm(pool, cfg);
         guard.reset_stats();
         guard
     }
 
-    /// Re-snapshot regions (after new allocations) without re-arming MXCSR.
+    /// The domain slot this guard armed (diagnostics attribution).
+    pub fn domain(&self) -> usize {
+        self.slot
+    }
+
+    /// Re-snapshot regions (after new allocations) without re-arming
+    /// MXCSR.  Enforces the same [`handler::MAX_REGIONS`] bound as
+    /// [`TrapGuard::arm`] — a silently truncated snapshot would let the
+    /// handler refuse repairs inside legitimately approximate regions.
     pub fn refresh_regions(&self, pool: &ApproxPool, cfg: &TrapConfig) {
-        handler::arm_state(&pool.regions(), cfg.policy, cfg.memory_repair);
+        handler::arm_domain(self.slot, &pool.regions(), cfg.policy, cfg.memory_repair);
     }
 
-    /// Counters accumulated since the last reset.
+    /// This domain's counters accumulated since the last reset.
     pub fn stats(&self) -> handler::TrapStats {
-        handler::stats_snapshot()
+        handler::domain_stats(self.slot)
     }
 
-    /// Zero the counters (e.g. between measured repetitions).
+    /// Zero this domain's counters (e.g. between measured repetitions).
     pub fn reset_stats(&self) {
-        handler::stats_reset();
+        handler::domain_stats_reset(self.slot);
     }
 }
 
 impl Drop for TrapGuard {
     fn drop(&mut self) {
-        handler::disarm_state();
+        handler::disarm_domain(self.slot);
+        handler::release_domain(self.slot);
         mxcsr::restore(self.saved_mxcsr);
     }
 }
@@ -85,14 +116,13 @@ mod tests {
     use super::*;
     use crate::approxmem::injector::{InjectionSpec, Injector};
     use crate::fp::nan::PAPER_NAN_BITS;
-    use crate::trap::test_lock;
 
     /// The fundamental end-to-end check, same shape as the C prototype:
     /// multiply by an SNaN under the guard; expect exactly one trap, a
-    /// repaired register, and a live process.
+    /// repaired register, and a live process.  No test lock: the domain
+    /// isolates this test's counters from every concurrently armed guard.
     #[test]
     fn snan_multiply_survives_and_repairs() {
-        let _lock = test_lock();
         let pool = ApproxPool::new();
         let mut buf = pool.alloc_f64(2);
         buf[0] = f64::from_bits(PAPER_NAN_BITS);
@@ -120,7 +150,6 @@ mod tests {
 
     #[test]
     fn no_nan_no_trap_no_overhead() {
-        let _lock = test_lock();
         let pool = ApproxPool::new();
         let mut buf = pool.alloc_f64(64);
         buf.fill_with(|i| i as f64 + 1.0);
@@ -139,7 +168,6 @@ mod tests {
 
     #[test]
     fn guard_restores_mxcsr() {
-        let _lock = test_lock();
         let before = mxcsr::read();
         let pool = ApproxPool::new();
         {
@@ -151,7 +179,6 @@ mod tests {
 
     #[test]
     fn injected_nan_in_pool_repaired_in_memory() {
-        let _lock = test_lock();
         let pool = ApproxPool::new();
         let mut buf = pool.alloc_f64(16);
         buf.fill_with(|i| (i + 1) as f64);
@@ -193,7 +220,6 @@ mod tests {
     /// memory repair traps exactly once.
     #[test]
     fn register_only_retraps_memory_repair_traps_once() {
-        let _lock = test_lock();
         let pool = ApproxPool::new();
         let mut a = pool.alloc_f64(32);
         let mut b = pool.alloc_f64(32);
@@ -238,5 +264,92 @@ mod tests {
             "memory repair must trap exactly once: {mem_stats:#?}"
         );
         assert_eq!(a[7], 0.5, "NaN repaired in memory");
+    }
+
+    /// The tentpole contract: four threads arm four domains at the same
+    /// time, each traps a *different* number of times, and each guard
+    /// reports exactly its own count.  With the old process-global
+    /// counters the totals would bleed across threads.
+    #[test]
+    fn concurrent_domains_isolate_counters() {
+        let barrier = std::sync::Barrier::new(4);
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let barrier = &barrier;
+                s.spawn(move || {
+                    let pool = ApproxPool::new();
+                    let mut a = pool.alloc_f64(32);
+                    let mut b = pool.alloc_f64(32);
+                    a.fill_with(|i| i as f64 + 1.0);
+                    b.fill_with(|_| 1.0);
+                    // distinct NaN count per thread → distinct expected
+                    // sigfpe_total per domain
+                    let nans = t + 1;
+                    for k in 0..nans {
+                        a[k * 5] = f64::from_bits(PAPER_NAN_BITS);
+                    }
+                    let guard = TrapGuard::arm_reset(
+                        &pool,
+                        &TrapConfig {
+                            policy: RepairPolicy::Constant(1.0),
+                            memory_repair: true,
+                        },
+                    );
+                    // all four domains armed before anyone traps
+                    barrier.wait();
+                    let d = crate::workloads::kernels::ddot(a.as_slice(), b.as_slice(), 32);
+                    let stats = guard.stats();
+                    drop(guard);
+                    assert_eq!(
+                        stats.sigfpe_total, nans as u64,
+                        "thread {t}: {stats:#?}"
+                    );
+                    assert!(stats.memory_repairs() >= nans as u64, "thread {t}");
+                    assert!(d.is_finite());
+                });
+            }
+        });
+    }
+
+    /// Concurrent guards own distinct domain slots.
+    #[test]
+    fn concurrent_guards_get_distinct_slots() {
+        let pool = ApproxPool::new();
+        let _buf = pool.alloc_f64(4);
+        let guard = TrapGuard::arm(&pool, &TrapConfig::default());
+        let mine = guard.domain();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let pool2 = ApproxPool::new();
+                let _b2 = pool2.alloc_f64(4);
+                let g2 = TrapGuard::arm(&pool2, &TrapConfig::default());
+                assert_ne!(g2.domain(), mine, "live guards must not share a slot");
+            });
+        });
+        drop(guard);
+    }
+
+    #[test]
+    #[should_panic(expected = "nested TrapGuard")]
+    fn nested_arm_on_one_thread_panics() {
+        let pool = ApproxPool::new();
+        let _buf = pool.alloc_f64(4);
+        let _g1 = TrapGuard::arm(&pool, &TrapConfig::default());
+        let _g2 = TrapGuard::arm(&pool, &TrapConfig::default());
+    }
+
+    /// The refresh path must enforce the same region-count bound as `arm`
+    /// instead of silently truncating the snapshot.
+    #[test]
+    #[should_panic(expected = "too many approximate regions")]
+    fn refresh_regions_rejects_region_overflow() {
+        let pool = ApproxPool::new();
+        let _first = pool.alloc_f64(1);
+        let guard = TrapGuard::arm(&pool, &TrapConfig::default());
+        // push the pool past MAX_REGIONS while armed
+        let _extra: Vec<_> = (0..handler::MAX_REGIONS)
+            .map(|_| pool.alloc_f64(1))
+            .collect();
+        guard.refresh_regions(&pool, &TrapConfig::default());
     }
 }

@@ -1,4 +1,5 @@
-//! The SIGFPE repair handler — the paper's Figure 2 without gdb.
+//! The SIGFPE repair handler — the paper's Figure 2 without gdb — sharded
+//! into **trap domains** so concurrent protected windows scale.
 //!
 //! Flow on each `SIGFPE` (`FPE_FLTINV`):
 //!  1. decode the instruction at the saved RIP ([`crate::disasm::decode_insn`]);
@@ -15,17 +16,35 @@
 //!  4. clear the sticky IE flag in the saved MXCSR and return — the
 //!     instruction re-executes with legal operands.
 //!
-//! Async-signal-safety: the handler allocates nothing, takes no locks, and
-//! touches only (a) the ucontext, (b) immutable statics initialized before
-//! arming ([`super::functable`], the armed snapshot), and (c) approximate
-//! memory through the snapshot bounds.
+//! ## Trap domains
 //!
-//! A give-up valve bounds pathological loops: if the same RIP faults
-//! repeatedly without forward progress (e.g. a QNaN produced by a masked
-//! path, or an operand we cannot see), the handler masks the invalid
-//! exception in the saved MXCSR so the thread continues un-trapped, and
-//! records the event.
+//! The armed state is a fixed table of [`NUM_DOMAINS`] slots.  Each slot
+//! holds its own armed flag, repair policy, region snapshot, give-up
+//! valve, and [`TrapStats`] counters.  A [`super::TrapGuard`] claims a
+//! free slot at arm time and records the slot index in a thread-local;
+//! the handler reads that thread-local to find its domain.  Concurrent
+//! protected windows on different threads therefore never share counters
+//! or snapshots — an 8-worker batch of trap-armed cells runs at 8-worker
+//! throughput instead of serializing on one process-global snapshot.
+//!
+//! Async-signal-safety of the domain lookup: SIGFPE is a synchronous
+//! hardware exception, delivered on the faulting thread, and the slot
+//! index was written by that same thread *before* unmasking the
+//! exception, so plain program order makes it visible.  The thread-local
+//! is const-initialized and holds a `Cell<usize>` (no destructor, no lazy
+//! allocation), so the access compiles to a plain thread-pointer load.
+//! Beyond that the handler allocates nothing, takes no locks, and touches
+//! only (a) the ucontext, (b) its own domain slot and the immutable
+//! [`super::functable`], and (c) approximate memory through the snapshot
+//! bounds.
+//!
+//! A give-up valve (per domain) bounds pathological loops: if the same RIP
+//! faults repeatedly without forward progress (e.g. a QNaN produced by a
+//! masked path, or an operand we cannot see), the handler masks the
+//! invalid exception in the saved MXCSR so the thread continues
+//! un-trapped, and records the event.
 
+use std::cell::Cell;
 use std::mem::MaybeUninit;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 
@@ -41,106 +60,68 @@ use crate::trap::diagnostics::{self, action};
 use crate::trap::functable;
 use crate::util::timing::rdtsc;
 
-/// Max regions in the armed snapshot (fixed-size: no allocation in or near
-/// the signal path).
+/// Max regions in one domain's armed snapshot (fixed-size: no allocation
+/// in or near the signal path).
 pub const MAX_REGIONS: usize = 256;
+
+/// Number of trap-domain slots.  Each concurrently armed [`super::TrapGuard`]
+/// owns one; sized well past any realistic worker count (the scheduler
+/// defaults to the core count).
+pub const NUM_DOMAINS: usize = 64;
+
+/// Thread-local sentinel for "no domain armed on this thread".
+const NO_DOMAIN: usize = usize::MAX;
 
 /// Consecutive traps *without any repair action* before the give-up valve
 /// opens (masks the exception so the thread continues un-trapped).
 pub const GIVE_UP_THRESHOLD: u64 = 8;
 
-// ---- armed state (written by TrapGuard outside signal context) -----------
-
-static ARMED: AtomicBool = AtomicBool::new(false);
-static MEMORY_REPAIR_ENABLED: AtomicBool = AtomicBool::new(true);
-static POLICY_KIND: AtomicU32 = AtomicU32::new(0); // 0=zero 1=one 2=const 3=neighbor
-static POLICY_CONST: AtomicU64 = AtomicU64::new(0);
-static N_REGIONS: AtomicUsize = AtomicUsize::new(0);
-static REGION_START: [AtomicUsize; MAX_REGIONS] = {
-    #[allow(clippy::declare_interior_mutable_const)]
-    const Z: AtomicUsize = AtomicUsize::new(0);
-    [Z; MAX_REGIONS]
-};
-static REGION_LEN: [AtomicUsize; MAX_REGIONS] = {
-    #[allow(clippy::declare_interior_mutable_const)]
-    const Z: AtomicUsize = AtomicUsize::new(0);
-    [Z; MAX_REGIONS]
-};
-
-pub(super) fn arm_state(regions: &[Region], policy: RepairPolicy, memory_repair: bool) {
-    let n = regions.len().min(MAX_REGIONS);
-    for (i, r) in regions.iter().take(n).enumerate() {
-        REGION_START[i].store(r.start, Ordering::Relaxed);
-        REGION_LEN[i].store(r.len, Ordering::Relaxed);
-    }
-    N_REGIONS.store(n, Ordering::Relaxed);
-    let (kind, cval) = match policy {
-        RepairPolicy::Zero => (0, 0.0),
-        RepairPolicy::One => (1, 0.0),
-        RepairPolicy::Constant(c) => (2, c),
-        RepairPolicy::NeighborMean => (3, 0.0),
-    };
-    POLICY_KIND.store(kind, Ordering::Relaxed);
-    POLICY_CONST.store(cval.to_bits(), Ordering::Relaxed);
-    MEMORY_REPAIR_ENABLED.store(memory_repair, Ordering::Relaxed);
-    LAST_RIP.store(0, Ordering::Relaxed);
-    SAME_RIP_STREAK.store(0, Ordering::Relaxed);
-    ARMED.store(true, Ordering::SeqCst);
-}
-
-pub(super) fn disarm_state() {
-    ARMED.store(false, Ordering::SeqCst);
-}
-
-/// Copy the armed snapshot into a caller buffer; returns the region count.
-/// (Signal path only — ordinary code should use the pool directly.)
-fn snapshot_regions(buf: &mut [MaybeUninit<Region>; MAX_REGIONS]) -> usize {
-    let n = N_REGIONS.load(Ordering::Relaxed);
-    for i in 0..n {
-        buf[i].write(Region {
-            start: REGION_START[i].load(Ordering::Relaxed),
-            len: REGION_LEN[i].load(Ordering::Relaxed),
-            id: i,
-        });
-    }
-    n
-}
-
-fn armed_policy() -> RepairPolicy {
-    match POLICY_KIND.load(Ordering::Relaxed) {
-        0 => RepairPolicy::Zero,
-        1 => RepairPolicy::One,
-        2 => RepairPolicy::Constant(f64::from_bits(POLICY_CONST.load(Ordering::Relaxed))),
-        _ => RepairPolicy::NeighborMean,
-    }
-}
-
 // ---- statistics -----------------------------------------------------------
 
 macro_rules! counters {
     ($($name:ident),* $(,)?) => {
-        $(
-            #[allow(non_upper_case_globals)]
-            static $name: AtomicU64 = AtomicU64::new(0);
-        )*
+        /// One domain's trap-path counters.  Written only by the handler
+        /// running on the thread that armed the domain; read/reset by the
+        /// owning guard.
+        struct Counters {
+            $($name: AtomicU64,)*
+        }
 
-        /// Snapshot of all trap-path counters.
+        impl Counters {
+            const fn zero() -> Self {
+                Self { $($name: AtomicU64::new(0),)* }
+            }
+
+            fn snapshot(&self) -> TrapStats {
+                TrapStats { $($name: self.$name.load(Ordering::Relaxed),)* }
+            }
+
+            fn reset(&self) {
+                $(self.$name.store(0, Ordering::Relaxed);)*
+            }
+        }
+
+        /// Snapshot of one trap domain's counters.
         #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
         #[allow(non_snake_case)]
         pub struct TrapStats {
             $(pub $name: u64,)*
         }
 
-        /// Read a consistent-enough snapshot of the counters.
+        /// Aggregate snapshot summed over **all** trap domains.  A
+        /// best-effort process-wide view: claiming a domain (and
+        /// [`super::TrapGuard::reset_stats`]) zeroes that slot's counters,
+        /// so the aggregate is *current live windows + finished-but-
+        /// unreclaimed ones*, not a cumulative history — totals can
+        /// decrease as slots are recycled.  Per-cell numbers come from
+        /// [`super::TrapGuard::stats`], which reads only the guard's own
+        /// domain.
         pub fn stats_snapshot() -> TrapStats {
-            TrapStats {
-                $($name: $name.load(Ordering::Relaxed),)*
+            let mut out = TrapStats::default();
+            for d in DOMAINS.iter() {
+                $(out.$name = out.$name.wrapping_add(d.counters.$name.load(Ordering::Relaxed));)*
             }
-        }
-
-        /// Reset all counters (between campaign runs).
-        pub fn stats_reset() {
-            $($name.store(0, Ordering::Relaxed);)*
+            out
         }
     };
 }
@@ -176,8 +157,192 @@ impl TrapStats {
     }
 }
 
-static LAST_RIP: AtomicU64 = AtomicU64::new(0);
-static SAME_RIP_STREAK: AtomicU64 = AtomicU64::new(0);
+// ---- the domain table -----------------------------------------------------
+
+/// One trap domain: armed state + counters for a single protected window.
+struct TrapDomain {
+    /// Slot ownership (claimed by a guard); distinct from `armed` so a
+    /// guard can disarm/re-arm (refresh) without racing slot reuse.
+    in_use: AtomicBool,
+    armed: AtomicBool,
+    memory_repair: AtomicBool,
+    policy_kind: AtomicU32, // 0=zero 1=one 2=const 3=neighbor
+    policy_const: AtomicU64,
+    n_regions: AtomicUsize,
+    region_start: [AtomicUsize; MAX_REGIONS],
+    region_len: [AtomicUsize; MAX_REGIONS],
+    last_rip: AtomicU64,
+    same_rip_streak: AtomicU64,
+    counters: Counters,
+}
+
+impl TrapDomain {
+    const fn empty() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicUsize = AtomicUsize::new(0);
+        Self {
+            in_use: AtomicBool::new(false),
+            armed: AtomicBool::new(false),
+            memory_repair: AtomicBool::new(true),
+            policy_kind: AtomicU32::new(0),
+            policy_const: AtomicU64::new(0),
+            n_regions: AtomicUsize::new(0),
+            region_start: [Z; MAX_REGIONS],
+            region_len: [Z; MAX_REGIONS],
+            last_rip: AtomicU64::new(0),
+            same_rip_streak: AtomicU64::new(0),
+            counters: Counters::zero(),
+        }
+    }
+}
+
+static DOMAINS: [TrapDomain; NUM_DOMAINS] = {
+    #[allow(clippy::declare_interior_mutable_const)]
+    const D: TrapDomain = TrapDomain::empty();
+    [D; NUM_DOMAINS]
+};
+
+thread_local! {
+    /// Domain slot armed on this thread (`NO_DOMAIN` = none).  Written by
+    /// the guard before unmasking the exception; read by the handler (see
+    /// module docs for the async-signal-safety argument).
+    static CURRENT_DOMAIN: Cell<usize> = const { Cell::new(NO_DOMAIN) };
+}
+
+/// SIGFPEs delivered on threads with **no** armed domain — the handler
+/// restores the default disposition and lets the signal kill the process,
+/// exactly as if it had never been installed.  The only process-global
+/// trap counter left.
+static ORPHAN_SIGFPE: AtomicU64 = AtomicU64::new(0);
+
+/// Total SIGFPEs that arrived outside any armed domain.
+pub fn orphan_sigfpe_total() -> u64 {
+    ORPHAN_SIGFPE.load(Ordering::Relaxed)
+}
+
+/// Claim a free domain slot (outside signal context) and zero its
+/// counters — a freshly claimed domain never leaks the previous owner's
+/// counts, even via plain [`super::TrapGuard::arm`].  Panics if all
+/// [`NUM_DOMAINS`] slots are armed concurrently — that means more
+/// simultaneous protected windows than the table was sized for, which is
+/// a deployment bug, not a runtime condition to paper over (the scheduler
+/// caps its worker count at `NUM_DOMAINS` for exactly this reason).
+pub(super) fn claim_domain() -> usize {
+    for (i, d) in DOMAINS.iter().enumerate() {
+        if d.in_use
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+        {
+            d.counters.reset();
+            return i;
+        }
+    }
+    panic!("all {NUM_DOMAINS} trap domains claimed concurrently");
+}
+
+/// Return a slot to the free pool (after disarming).
+pub(super) fn release_domain(slot: usize) {
+    DOMAINS[slot].in_use.store(false, Ordering::Release);
+}
+
+/// Write `regions`/`policy` into `slot`, arm it, and bind it to the
+/// calling thread.  Also the refresh path: re-invoking on an armed slot
+/// atomically swaps the snapshot.
+pub(super) fn arm_domain(
+    slot: usize,
+    regions: &[Region],
+    policy: RepairPolicy,
+    memory_repair: bool,
+) {
+    assert!(
+        regions.len() <= MAX_REGIONS,
+        "too many approximate regions for the armed snapshot ({} > {MAX_REGIONS})",
+        regions.len()
+    );
+    let d = &DOMAINS[slot];
+    for (i, r) in regions.iter().enumerate() {
+        d.region_start[i].store(r.start, Ordering::Relaxed);
+        d.region_len[i].store(r.len, Ordering::Relaxed);
+    }
+    d.n_regions.store(regions.len(), Ordering::Relaxed);
+    let (kind, cval) = match policy {
+        RepairPolicy::Zero => (0, 0.0),
+        RepairPolicy::One => (1, 0.0),
+        RepairPolicy::Constant(c) => (2, c),
+        RepairPolicy::NeighborMean => (3, 0.0),
+    };
+    d.policy_kind.store(kind, Ordering::Relaxed);
+    d.policy_const.store(cval.to_bits(), Ordering::Relaxed);
+    d.memory_repair.store(memory_repair, Ordering::Relaxed);
+    d.last_rip.store(0, Ordering::Relaxed);
+    d.same_rip_streak.store(0, Ordering::Relaxed);
+    d.armed.store(true, Ordering::SeqCst);
+    CURRENT_DOMAIN.with(|c| {
+        let prev = c.get();
+        assert!(
+            prev == NO_DOMAIN || prev == slot,
+            "nested TrapGuard arming on one thread (slot {prev} still armed)"
+        );
+        c.set(slot);
+    });
+}
+
+/// Disarm `slot` and unbind it from the calling thread.
+pub(super) fn disarm_domain(slot: usize) {
+    DOMAINS[slot].armed.store(false, Ordering::SeqCst);
+    CURRENT_DOMAIN.with(|c| {
+        if c.get() == slot {
+            c.set(NO_DOMAIN);
+        }
+    });
+}
+
+/// The domain slot armed on the current thread, if any.
+pub fn current_domain() -> Option<usize> {
+    let slot = CURRENT_DOMAIN.try_with(Cell::get).unwrap_or(NO_DOMAIN);
+    (slot != NO_DOMAIN).then_some(slot)
+}
+
+/// Counters of one domain slot.
+pub fn domain_stats(slot: usize) -> TrapStats {
+    DOMAINS[slot].counters.snapshot()
+}
+
+/// Zero one domain's counters.
+pub(super) fn domain_stats_reset(slot: usize) {
+    DOMAINS[slot].counters.reset();
+}
+
+/// Number of currently claimed domains (metrics/tests).
+pub fn domains_in_use() -> usize {
+    DOMAINS
+        .iter()
+        .filter(|d| d.in_use.load(Ordering::Relaxed))
+        .count()
+}
+
+/// Copy a domain's armed snapshot into a caller buffer; returns the region
+/// count.  (Signal path only — ordinary code should use the pool directly.)
+fn snapshot_regions(d: &TrapDomain, buf: &mut [MaybeUninit<Region>; MAX_REGIONS]) -> usize {
+    let n = d.n_regions.load(Ordering::Relaxed);
+    for i in 0..n {
+        buf[i].write(Region {
+            start: d.region_start[i].load(Ordering::Relaxed),
+            len: d.region_len[i].load(Ordering::Relaxed),
+            id: i,
+        });
+    }
+    n
+}
+
+fn armed_policy(d: &TrapDomain) -> RepairPolicy {
+    match d.policy_kind.load(Ordering::Relaxed) {
+        0 => RepairPolicy::Zero,
+        1 => RepairPolicy::One,
+        2 => RepairPolicy::Constant(f64::from_bits(d.policy_const.load(Ordering::Relaxed))),
+        _ => RepairPolicy::NeighborMean,
+    }
+}
 
 // ---- installation ---------------------------------------------------------
 
@@ -217,15 +382,18 @@ extern "C" fn sigfpe_handler(
     uc: *mut libc::c_void,
 ) {
     let t0 = rdtsc();
-    sigfpe_total.fetch_add(1, Ordering::Relaxed);
+
+    // Domain lookup: a plain TLS load (module docs argue signal-safety).
+    let slot = CURRENT_DOMAIN.try_with(Cell::get).unwrap_or(NO_DOMAIN);
 
     // Safety: kernel-provided pointers for this delivery.
     let ctx = unsafe { SigContext::from_raw(uc) };
 
-    if !ARMED.load(Ordering::Relaxed) {
+    if slot == NO_DOMAIN || !DOMAINS[slot].armed.load(Ordering::Relaxed) {
         // Not our window (e.g. an integer division fault from unrelated
-        // code): restore default disposition and re-raise.
-        unexpected_si_code.fetch_add(1, Ordering::Relaxed);
+        // code, or a thread that never armed): restore default disposition
+        // and let the re-executed instruction deliver it fatally.
+        ORPHAN_SIGFPE.fetch_add(1, Ordering::Relaxed);
         unsafe {
             let mut sa: libc::sigaction = std::mem::zeroed();
             sa.sa_sigaction = libc::SIG_DFL;
@@ -233,26 +401,28 @@ extern "C" fn sigfpe_handler(
         }
         return;
     }
+    let d = &DOMAINS[slot];
+    d.counters.sigfpe_total.fetch_add(1, Ordering::Relaxed);
 
     /// `FPE_FLTINV` (asm-generic/siginfo.h) — libc does not re-export it.
     const FPE_FLTINV: libc::c_int = 7;
     let si_code = unsafe { (*info).si_code };
     // FPE_INTDIV etc. are not NaN events; only FPE_FLTINV is ours.
     if si_code != FPE_FLTINV {
-        unexpected_si_code.fetch_add(1, Ordering::Relaxed);
+        d.counters.unexpected_si_code.fetch_add(1, Ordering::Relaxed);
     }
 
     let rip = ctx.rip();
-    LAST_RIP.store(rip, Ordering::Relaxed);
+    d.last_rip.store(rip, Ordering::Relaxed);
 
     let mut region_buf: [MaybeUninit<Region>; MAX_REGIONS] =
         unsafe { MaybeUninit::uninit().assume_init() };
-    let n = snapshot_regions(&mut region_buf);
+    let n = snapshot_regions(d, &mut region_buf);
     // Safety: first n entries were just written.
     let regions: &[Region] =
         unsafe { std::slice::from_raw_parts(region_buf.as_ptr() as *const Region, n) };
-    let policy = armed_policy();
-    let mem_repair_on = MEMORY_REPAIR_ENABLED.load(Ordering::Relaxed);
+    let policy = armed_policy(d);
+    let mem_repair_on = d.memory_repair.load(Ordering::Relaxed);
 
     // Read instruction bytes at RIP. Safety: RIP points into mapped,
     // executing code of this process.
@@ -275,7 +445,8 @@ extern "C" fn sigfpe_handler(
                     // direct repair at the recomputed effective address
                     match memory::repair_at(regions, ea, width, value) {
                         MemRepair::Repaired { lanes } => {
-                            memory_repairs_direct
+                            d.counters
+                                .memory_repairs_direct
                                 .fetch_add(lanes as u64, Ordering::Relaxed);
                             acted = true;
                             act_mask |= action::MEM_DIRECT;
@@ -291,16 +462,18 @@ extern "C" fn sigfpe_handler(
                     // skip the instruction — memory stays poisoned, so the
                     // next read traps again (Table 3's "register" row).
                     if emulate_and_skip(&ctx, &insn, value) {
-                        emulated_skips.fetch_add(1, Ordering::Relaxed);
-                        SAME_RIP_STREAK.store(0, Ordering::Relaxed);
+                        d.counters.emulated_skips.fetch_add(1, Ordering::Relaxed);
+                        d.same_rip_streak.store(0, Ordering::Relaxed);
                         diagnostics::record(
                             rip,
                             first8(code),
                             0,
                             action::EMULATED,
+                            slot,
                         );
                         ctx.clear_invalid_flag();
-                        trap_cycles_total
+                        d.counters
+                            .trap_cycles_total
                             .fetch_add(rdtsc().wrapping_sub(t0), Ordering::Relaxed);
                         return;
                     }
@@ -316,7 +489,7 @@ extern "C" fn sigfpe_handler(
                 // NaN bits, in case the policy is positional)
                 if mem_repair_on {
                     if let Some(addr) =
-                        backtraced_memory_repair(&ctx, rip, r, width, policy, regions)
+                        backtraced_memory_repair(d, &ctx, rip, r, width, policy, regions)
                     {
                         act_mask |= action::MEM_BACKTRACED;
                         repaired_addr = addr;
@@ -324,7 +497,9 @@ extern "C" fn sigfpe_handler(
                 }
                 let value = policy.resolve(None, regions);
                 let lanes = register::repair_xmm(&ctx, r, width, value);
-                register_repairs.fetch_add(lanes as u64, Ordering::Relaxed);
+                d.counters
+                    .register_repairs
+                    .fetch_add(lanes as u64, Ordering::Relaxed);
                 if lanes > 0 {
                     acted = true;
                     act_mask |= action::REG_REPAIR;
@@ -334,7 +509,7 @@ extern "C" fn sigfpe_handler(
         None => {
             // Unknown instruction (e.g. AVX from a library): sweep all xmm
             // registers for signaling NaNs at both widths.
-            decode_failures.fetch_add(1, Ordering::Relaxed);
+            d.counters.decode_failures.fetch_add(1, Ordering::Relaxed);
             let value = policy.resolve(None, regions);
             let n64 = register::repair_all_xmm(&ctx, FpWidth::P64, value);
             let n32 = if n64 == 0 {
@@ -342,7 +517,9 @@ extern "C" fn sigfpe_handler(
             } else {
                 0
             };
-            fallback_sweep_repairs.fetch_add((n64 + n32) as u64, Ordering::Relaxed);
+            d.counters
+                .fallback_sweep_repairs
+                .fetch_add((n64 + n32) as u64, Ordering::Relaxed);
             if n64 + n32 > 0 {
                 acted = true;
                 act_mask |= action::FALLBACK_SWEEP;
@@ -357,20 +534,22 @@ extern "C" fn sigfpe_handler(
     // streak — N legitimate traps at one instruction (register-only mode)
     // are fine.
     if acted {
-        SAME_RIP_STREAK.store(0, Ordering::Relaxed);
+        d.same_rip_streak.store(0, Ordering::Relaxed);
     } else {
-        let streak = SAME_RIP_STREAK.fetch_add(1, Ordering::Relaxed) + 1;
+        let streak = d.same_rip_streak.fetch_add(1, Ordering::Relaxed) + 1;
         if streak >= GIVE_UP_THRESHOLD {
-            gave_up.fetch_add(1, Ordering::Relaxed);
-            SAME_RIP_STREAK.store(0, Ordering::Relaxed);
+            d.counters.gave_up.fetch_add(1, Ordering::Relaxed);
+            d.same_rip_streak.store(0, Ordering::Relaxed);
             ctx.mask_invalid();
             act_mask |= action::GAVE_UP;
         }
     }
-    diagnostics::record(rip, first8(code), repaired_addr, act_mask);
+    diagnostics::record(rip, first8(code), repaired_addr, act_mask, slot);
 
     ctx.clear_invalid_flag();
-    trap_cycles_total.fetch_add(rdtsc().wrapping_sub(t0), Ordering::Relaxed);
+    d.counters
+        .trap_cycles_total
+        .fetch_add(rdtsc().wrapping_sub(t0), Ordering::Relaxed);
 }
 
 /// Register-only fallback for a NaN behind a memory operand: compute the
@@ -440,6 +619,7 @@ fn emulate_and_skip(ctx: &SigContext, insn: &crate::disasm::insn::Insn, value: f
 /// Paper §3.4: the NaN sits in a register; find its memory origin by
 /// back-tracing the enclosing function and patch it there.
 fn backtraced_memory_repair(
+    d: &TrapDomain,
     ctx: &SigContext,
     rip: u64,
     nan_xmm: u8,
@@ -449,7 +629,7 @@ fn backtraced_memory_repair(
     regions: &[Region],
 ) -> Option<u64> {
     let Some(func) = functable::find(rip) else {
-        backtrace_not_found.fetch_add(1, Ordering::Relaxed);
+        d.counters.backtrace_not_found.fetch_add(1, Ordering::Relaxed);
         return None;
     };
     // Safety: the function body is mapped executable memory.
@@ -461,19 +641,25 @@ fn backtraced_memory_repair(
             let value = policy.resolve(Some(ea), regions);
             match memory::repair_at(regions, ea, mov.width, value) {
                 MemRepair::Repaired { lanes } => {
-                    memory_repairs_backtraced.fetch_add(lanes as u64, Ordering::Relaxed);
+                    d.counters
+                        .memory_repairs_backtraced
+                        .fetch_add(lanes as u64, Ordering::Relaxed);
                     return Some(ea);
                 }
                 MemRepair::OutsidePool => {
-                    backtrace_outside_pool.fetch_add(1, Ordering::Relaxed);
+                    d.counters
+                        .backtrace_outside_pool
+                        .fetch_add(1, Ordering::Relaxed);
                 }
                 MemRepair::NotNan => {
-                    backtrace_found_not_nan.fetch_add(1, Ordering::Relaxed);
+                    d.counters
+                        .backtrace_found_not_nan
+                        .fetch_add(1, Ordering::Relaxed);
                 }
             }
         }
         BacktraceOutcome::NotFound(_) => {
-            backtrace_not_found.fetch_add(1, Ordering::Relaxed);
+            d.counters.backtrace_not_found.fetch_add(1, Ordering::Relaxed);
         }
     }
     None

@@ -15,9 +15,16 @@
 //! * [`handler`] — the async-signal-safe repair handler: decode the
 //!   faulting instruction, repair NaN operands in registers
 //!   (paper §3.3) and at their main-memory origin (paper §3.4), resume.
-//! * [`guard`] — RAII arming/disarming around a protected compute region.
+//!   The armed state is **sharded into trap domains**: a fixed table of
+//!   slots, each with its own armed flag, policy, region snapshot, and
+//!   counters, bound to the arming thread through a thread-local the
+//!   handler reads.  Concurrent protected windows never share state.
+//! * [`guard`] — RAII claim/arm/disarm of one trap domain around a
+//!   protected compute region.
 //! * [`functable`] — the in-process function table (from `/proc/self/exe`)
 //!   used by the back-trace.
+//! * [`watchdog`] — Jolt-style progress monitor, with trap-domain
+//!   attribution for stalled runs.
 
 pub mod context;
 pub mod diagnostics;
@@ -28,12 +35,15 @@ pub mod mxcsr;
 pub mod watchdog;
 
 pub use guard::{TrapConfig, TrapGuard};
-pub use handler::{stats_snapshot, TrapStats};
+pub use handler::{current_domain, stats_snapshot, TrapStats, NUM_DOMAINS};
 
 use std::sync::{Mutex, MutexGuard};
 
-/// The SIGFPE handler and its armed state are process-global; tests and
-/// campaigns that arm the trap serialize on this lock.
+/// Serialization for tests that assert on the few remaining
+/// **process-global** trap facilities: the diagnostics ring and exact
+/// MXCSR expectations.  The armed state and counters themselves are
+/// per-domain since the trap-domain refactor and need no lock — guards on
+/// different threads arm, trap, and count independently.
 pub fn test_lock() -> MutexGuard<'static, ()> {
     static LOCK: Mutex<()> = Mutex::new(());
     match LOCK.lock() {

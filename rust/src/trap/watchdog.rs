@@ -14,10 +14,18 @@
 //! paused thread in general); the contract is cooperative: hot loops call
 //! [`WatchdogHandle::should_abort`] at iteration boundaries — free when
 //! the watchdog is quiet, exactly one atomic load.
+//!
+//! When the monitored thread has a trap domain armed (a
+//! [`crate::trap::TrapGuard`] window), the watchdog captures the slot
+//! index at start so a stall report can name the domain whose repair
+//! policy was live — with many concurrent trap-armed cells, "which cell
+//! hung" is otherwise guesswork.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
+
+use super::handler;
 
 /// FNV-1a over a byte window — cheap, good enough for change detection.
 fn fnv1a(bytes: &[u8]) -> u64 {
@@ -39,6 +47,9 @@ struct Shared {
     ticks: AtomicU64,
     running: AtomicBool,
     stalled: AtomicBool,
+    /// Trap-domain slot armed on the monitored thread at start
+    /// (`usize::MAX` = none) — stall attribution.
+    domain: AtomicUsize,
 }
 
 /// Handle given to the monitored workload.
@@ -58,6 +69,12 @@ impl WatchdogHandle {
     #[inline]
     pub fn should_abort(&self) -> bool {
         self.shared.stalled.load(Ordering::Relaxed)
+    }
+
+    /// Trap domain armed on the monitored thread when monitoring started.
+    pub fn domain(&self) -> Option<usize> {
+        let d = self.shared.domain.load(Ordering::Relaxed);
+        (d != usize::MAX).then_some(d)
     }
 }
 
@@ -80,6 +97,7 @@ impl Watchdog {
             ticks: AtomicU64::new(0),
             running: AtomicBool::new(true),
             stalled: AtomicBool::new(false),
+            domain: AtomicUsize::new(handler::current_domain().unwrap_or(usize::MAX)),
         });
         let handle = WatchdogHandle {
             shared: shared.clone(),
@@ -121,6 +139,13 @@ impl Watchdog {
 
     pub fn stalled(&self) -> bool {
         self.shared.stalled.load(Ordering::Relaxed)
+    }
+
+    /// Trap domain armed on the monitored thread when monitoring started
+    /// (stall-report attribution).
+    pub fn domain(&self) -> Option<usize> {
+        let d = self.shared.domain.load(Ordering::Relaxed);
+        (d != usize::MAX).then_some(d)
     }
 
     /// Stop the monitor thread.
@@ -188,6 +213,24 @@ mod tests {
         }
         assert!(!handle.should_abort());
         assert!(!dog.stop());
+    }
+
+    #[test]
+    fn watchdog_attributes_armed_trap_domain() {
+        let buf = vec![0.0f64; 8];
+        let (dog, handle) = Watchdog::start(&buf, Duration::from_millis(50), 100);
+        assert_eq!(dog.domain(), None, "no guard armed on this thread");
+        assert_eq!(handle.domain(), None);
+        dog.stop();
+
+        let pool = crate::approxmem::pool::ApproxPool::new();
+        let _mem = pool.alloc_f64(4);
+        let guard = crate::trap::TrapGuard::arm(&pool, &crate::trap::TrapConfig::default());
+        let (dog, handle) = Watchdog::start(&buf, Duration::from_millis(50), 100);
+        assert_eq!(dog.domain(), Some(guard.domain()));
+        assert_eq!(handle.domain(), Some(guard.domain()));
+        dog.stop();
+        drop(guard);
     }
 
     #[test]

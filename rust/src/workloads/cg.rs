@@ -211,7 +211,6 @@ mod tests {
 
     #[test]
     fn survives_nan_under_guard() {
-        let _l = crate::trap::test_lock();
         let pool = ApproxPool::new();
         let mut w = Cg::new(&pool, 24, 40, 7);
         use crate::workloads::Workload as _;

@@ -1,9 +1,13 @@
 //! Integration: the full trap→decode→backtrace→repair path over every
 //! workload and asm kernel, including the paper's exact scenarios.
+//!
+//! No global test lock anywhere here: each guard owns a trap domain, so
+//! these tests assert exact per-guard counts while running concurrently
+//! with every other trap-arming test — itself a standing regression test
+//! for domain isolation.
 
 use nanrepair::approxmem::injector::{InjectionSpec, Injector};
 use nanrepair::prelude::*;
-use nanrepair::trap::{handler, test_lock};
 use nanrepair::workloads::kernels;
 
 fn snan() -> f64 {
@@ -14,7 +18,6 @@ fn snan() -> f64 {
 /// memory origin found by back-trace and patched.
 #[test]
 fn figure3_scenario_backtraced_memory_repair() {
-    let _l = test_lock();
     let pool = ApproxPool::new();
     let mut a = pool.alloc_f64(64);
     let mut b = pool.alloc_f64(64);
@@ -47,7 +50,6 @@ fn figure3_scenario_backtraced_memory_repair() {
 /// back-trace needed (our mechanism improves on the paper here).
 #[test]
 fn memory_operand_direct_repair() {
-    let _l = test_lock();
     let pool = ApproxPool::new();
     let mut a = pool.alloc_f64(32);
     let mut b = pool.alloc_f64(32);
@@ -76,7 +78,6 @@ fn memory_operand_direct_repair() {
 /// daxpy / dscale / dsum kernels all survive NaNs under the guard.
 #[test]
 fn all_asm_kernels_survive_nans() {
-    let _l = test_lock();
     let pool = ApproxPool::new();
     let mut x = pool.alloc_f64(16);
     let mut y = pool.alloc_f64(16);
@@ -126,7 +127,6 @@ fn all_asm_kernels_survive_nans() {
 /// Multiple NaNs in one buffer: every one repaired, exactly one trap each.
 #[test]
 fn many_nans_each_trap_once() {
-    let _l = test_lock();
     let pool = ApproxPool::new();
     let mut a = pool.alloc_f64(128);
     let mut b = pool.alloc_f64(128);
@@ -161,7 +161,6 @@ fn many_nans_each_trap_once() {
 /// guard leaves them for the scrubber path.
 #[test]
 fn qnan_does_not_trap_on_arithmetic() {
-    let _l = test_lock();
     let pool = ApproxPool::new();
     let mut a = pool.alloc_f64(8);
     let mut b = pool.alloc_f64(8);
@@ -182,10 +181,10 @@ fn qnan_does_not_trap_on_arithmetic() {
     assert_eq!(rep.qnans_repaired, 1);
 }
 
-/// Nested guards/sequential arm-disarm leave MXCSR and handler state sane.
+/// Sequential arm-disarm cycles leave MXCSR and domain state sane: every
+/// cycle claims, arms, and releases a trap domain cleanly.
 #[test]
 fn repeated_arm_disarm_is_clean() {
-    let _l = test_lock();
     let pool = ApproxPool::new();
     let mut a = pool.alloc_f64(4);
     a.fill_with(|_| 2.0);
@@ -202,12 +201,16 @@ fn repeated_arm_disarm_is_clean() {
         let ones = [1.0f64; 4];
         let d = kernels::ddot(a.as_slice(), &ones, 4);
         assert!(d.is_finite(), "iter {i}");
+        let stats = guard.stats();
+        assert_eq!(stats.gave_up, 0, "iter {i}: {stats:#?}");
         drop(guard);
         assert!(
             !nanrepair::trap::mxcsr::invalid_unmasked(),
             "iter {i}: guard must restore the mask"
         );
+        assert!(
+            nanrepair::trap::current_domain().is_none(),
+            "iter {i}: drop must unbind the domain from this thread"
+        );
     }
-    let stats = handler::stats_snapshot();
-    assert_eq!(stats.gave_up, 0, "{stats:#?}");
 }

@@ -65,7 +65,9 @@ fn parallel_batch_reports_byte_identical_to_serial() {
 }
 
 /// Same contract through the trap-bearing protections: counts and quality
-/// stay equal at any worker count (cells serialize on the trap lock).
+/// stay equal at any worker count.  Since the trap-domain sharding,
+/// trap-armed cells run genuinely concurrently (each worker arms its own
+/// domain) — this asserts the parallelism cannot change results.
 #[test]
 fn parallel_trap_batch_matches_serial() {
     let configs: Vec<CampaignConfig> = (0..4)
@@ -87,6 +89,58 @@ fn parallel_trap_batch_matches_serial() {
         assert_eq!(
             s.record_deterministic().render_jsonl(),
             p.record_deterministic().render_jsonl()
+        );
+    }
+}
+
+/// Trap-domain counter isolation (the tentpole's acceptance contract):
+/// a parallel batch of trap-armed cells — mixed RegisterMemory and
+/// RegisterOnly, varying NaN counts, more cells than workers so domains
+/// are claimed, released, and re-claimed mid-batch — reports per-cell
+/// `TrapStats` identical to a serial run of the same configs.  With any
+/// cross-domain bleed (a shared counter, a stale snapshot, a mis-bound
+/// thread-local) the per-cell counts could not all match.
+#[test]
+fn parallel_trap_counters_isolated_per_cell() {
+    let configs: Vec<CampaignConfig> = (0..12)
+        .map(|i| CampaignConfig {
+            // distinct sizes → distinct expected trap counts for the
+            // register-only cells (one trap per NaN re-read)
+            workload: WorkloadKind::MatMul { n: 12 + (i % 3) * 4 },
+            protection: if i % 2 == 0 {
+                Protection::RegisterMemory
+            } else {
+                Protection::RegisterOnly
+            },
+            injection: InjectionSpec::ExactNaNs { count: 1 + (i % 2) },
+            reps: 2,
+            warmup: 0,
+            seed: 500 + i as u64,
+            check_quality: true,
+            ..Default::default()
+        })
+        .collect();
+
+    let serial = scheduler::run_batch(configs.clone(), 1);
+    let parallel = scheduler::run_batch(configs, 4);
+    assert_eq!(serial.len(), parallel.len());
+    for (i, (s, p)) in serial.iter().zip(&parallel).enumerate() {
+        let (s, p) = (s.as_ref().unwrap(), p.as_ref().unwrap());
+        // counters must be byte-identical modulo the rdtsc cycle tally
+        // (pure timing, not a count)
+        let mut st = s.traps;
+        let mut pt = p.traps;
+        st.trap_cycles_total = 0;
+        pt.trap_cycles_total = 0;
+        assert_eq!(st, pt, "cell {i}: per-cell trap counters must match serial");
+        assert!(
+            st.sigfpe_total >= 1,
+            "cell {i}: trap-armed cell must have trapped"
+        );
+        assert_eq!(
+            s.quality.unwrap().rel_l2_error,
+            p.quality.unwrap().rel_l2_error,
+            "cell {i}"
         );
     }
 }
@@ -208,6 +262,39 @@ fn cli_fig7_json_round_trips_and_text_unchanged() {
     assert!(stdout.contains("Figure 7 —"), "{stdout}");
     assert!(stdout.contains("Table 3 —"), "{stdout}");
     assert!(!stdout.contains("{\"record\""), "{stdout}");
+}
+
+/// Acceptance: `--telemetry --json` appends one `cell_telemetry` record
+/// per batch cell (worker attribution + timing) after the results —
+/// the ROADMAP's "surface run_batch_telemetry in the CLI" item.
+#[test]
+fn cli_telemetry_emits_cell_records() {
+    let (stdout, stderr, ok) = run_cli(&[
+        "fig7", "--sizes", "16", "--reps", "1", "--seed", "3", "--workers", "2", "--json",
+        "--telemetry",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let mut fig7_rows = 0;
+    let mut telemetry = 0;
+    for line in stdout.lines().filter(|l| !l.is_empty()) {
+        let parsed = Json::parse(line).unwrap_or_else(|e| panic!("{e}: {line}"));
+        match parsed.get("record").and_then(Json::as_str) {
+            Some("fig7_row") => fig7_rows += 1,
+            Some("cell_telemetry") => {
+                telemetry += 1;
+                let worker = parsed.get("worker").and_then(Json::as_f64).unwrap();
+                assert!(worker == 0.0 || worker == 1.0, "{line}");
+                assert!(parsed.get("run_secs").and_then(Json::as_f64).unwrap() >= 0.0);
+                assert!(parsed.get("cell").and_then(Json::as_f64).is_some());
+            }
+            other => panic!("unexpected record kind {other:?}: {line}"),
+        }
+    }
+    assert_eq!(fig7_rows, 1);
+    assert_eq!(
+        telemetry, 3,
+        "one record per cell: 3 protections × 1 size\n{stdout}"
+    );
 }
 
 /// `--out` writes the records to a file; `--format csv` produces a header
