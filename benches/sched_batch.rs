@@ -1,14 +1,17 @@
-//! Scheduler throughput baseline: `run_batch` cells/sec at 1, 4, and 8
-//! workers, for both non-trap and **trap-armed** batches, so scheduler and
-//! trap-domain changes have a perf reference.
+//! Scheduler + serving throughput baseline: `run_batch` cells/sec and
+//! `serve` requests/sec at 1, 4, and 8 workers, so scheduler, trap-domain,
+//! and server changes have a perf reference.
 //!
 //! Each batch is 16 matmul cells.  The non-trap variant isolates pure
 //! scheduler overhead; the trap variant (RegisterMemory protection, one
 //! injected NaN per rep) is the headline of the trap-domain sharding: with
 //! the old process-global armed snapshot these cells serialized on one
 //! lock and 8 workers ran at 1-worker throughput, while per-worker trap
-//! domains let them scale with the worker count.  The printed
-//! `throughput` blocks give the cells/s and the speedup vs 1 worker.
+//! domains let them scale with the worker count.  The serve variant runs a
+//! closed-loop trap-armed serving campaign (resident weights, per-request
+//! NaN doses) through `coordinator::server` — the `nanrepair serve`
+//! request path.  The printed `throughput` blocks give the cells/s (or
+//! req/s) and the speedup vs 1 worker.
 //!
 //! `cargo bench --bench sched_batch` (env NANREPAIR_BENCH_QUICK=1 for CI,
 //! NANREPAIR_SCHED_CELLS=N to override the batch size,
@@ -19,6 +22,7 @@ use nanrepair::bench::{Bench, Runner};
 use nanrepair::coordinator::campaign::CampaignConfig;
 use nanrepair::coordinator::protection::Protection;
 use nanrepair::coordinator::scheduler;
+use nanrepair::coordinator::server::{self, Arrival, ServeConfig};
 use nanrepair::workloads::WorkloadKind;
 
 fn batch(cells: usize, n: usize, protection: Protection) -> Vec<CampaignConfig> {
@@ -60,12 +64,41 @@ fn sweep(
     throughput
 }
 
-fn print_throughput(title: &str, throughput: &[(usize, f64)]) {
-    println!("\n{title} (cells/s):");
+/// Bench the serving path at 1/4/8 workers; returns (workers, req/s).
+fn serve_sweep(r: &mut Runner, requests: usize, n: usize) -> Vec<(usize, f64)> {
+    let mut throughput = Vec::new();
+    for workers in [1usize, 4, 8] {
+        let res = r.bench(
+            &format!("serve{requests}x{n}/workers{workers}"),
+            Bench::new(move || {
+                let rep = server::serve(&ServeConfig {
+                    workload: WorkloadKind::MatMul { n },
+                    protection: Protection::RegisterMemory,
+                    requests,
+                    workers,
+                    queue_depth: 16,
+                    fault_rate: 1e-3,
+                    seed: 42,
+                    arrival: Arrival::Closed,
+                    ..Default::default()
+                })
+                .expect("serve runs");
+                assert_eq!(rep.output_nans_total(), 0);
+            })
+            .samples(5)
+            .budget(2.0),
+        );
+        throughput.push((workers, requests as f64 / res.summary.mean));
+    }
+    throughput
+}
+
+fn print_throughput(title: &str, unit: &str, throughput: &[(usize, f64)]) {
+    println!("\n{title} ({unit}):");
     let (_, serial) = throughput[0];
     for (workers, cps) in throughput {
         println!(
-            "  {workers} workers: {cps:8.1} cells/s  ({:.2}x vs 1 worker)",
+            "  {workers} workers: {cps:8.1} {unit}  ({:.2}x vs 1 worker)",
             cps / serial
         );
     }
@@ -85,16 +118,32 @@ fn main() {
     // SIGFPE repair per rep — the reactive-protection sweep the paper's
     // "negligible overhead" claim is about, at scale
     let trap = sweep(&mut r, "trap_batch", cells, n, Protection::RegisterMemory);
+    // serve: closed-loop trap-armed requests against resident weights
+    // through the bounded queue — the `nanrepair serve` request path.
+    // Each sample times a whole serve() run, which includes per-worker
+    // session setup (resident build + one warm run); the request count is
+    // sized to keep that fixed cost a small fraction of the sample.
+    let serve_requests = if r.is_quick() { 32 } else { 64 };
+    let served = serve_sweep(&mut r, serve_requests, n);
     r.finish();
 
-    print_throughput("non-trap throughput", &plain);
-    print_throughput("trap-armed throughput", &trap);
+    print_throughput("non-trap throughput", "cells/s", &plain);
+    print_throughput("trap-armed throughput", "cells/s", &trap);
+    print_throughput("serve throughput", "req/s", &served);
     let (_, t1) = trap[0];
     if let Some((w, cps)) = trap.iter().find(|(w, _)| *w == 4) {
         println!(
             "\nheadline: trap-armed batch at {w} workers runs {:.2}x the \
              1-worker throughput ({cps:.1} vs {t1:.1} cells/s)",
             cps / t1
+        );
+    }
+    let (_, s1) = served[0];
+    if let Some((w, rps)) = served.iter().find(|(w, _)| *w == 4) {
+        println!(
+            "serve: {w} workers sustain {:.2}x the 1-worker request rate \
+             ({rps:.1} vs {s1:.1} req/s)",
+            rps / s1
         );
     }
 }

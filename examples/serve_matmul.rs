@@ -1,113 +1,52 @@
-//! Serving-style driver: a request loop over the AOT artifacts.
+//! Serving-style demo: a thin shim over the real serving engine.
 //!
-//! Models the deployment the paper's introduction motivates (AI/HPC
-//! services on approximate-memory nodes): a dispatcher hands matmul
-//! requests to worker threads; each worker executes the L1/L2
-//! NaN-repair artifact via PJRT; a fault process corrupts the resident
-//! weight matrix between requests at a configurable rate.  Reports
-//! throughput, latency percentiles, and the repair ledger — demonstrating
-//! that the reactive design keeps tail latency flat under fault pressure
-//! (repairs ride along in the kernel instead of stalling for scrubs).
+//! `nanrepair serve` promoted this example into a first-class subcommand
+//! (`coordinator::server`, DESIGN.md §4): a bounded request queue feeds
+//! per-worker `ExperimentSession`s whose cached workload is the resident
+//! approximate-memory weights, every request runs trap-armed in the
+//! worker's own trap domain, and a deterministic fault injector stamps
+//! each request with a NaN dose.  This example just runs a small
+//! closed-loop campaign through that library path and prints the text
+//! report — the runtime is the crate's native interpreter and workloads
+//! (DESIGN.md §2); no PJRT bindings or prebuilt artifacts are required.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_matmul`
+//! Run: `cargo run --release --example serve_matmul`
+//!
+//! For the full harness (workers, arrival processes, SLO targets,
+//! JSON-lines records) use the subcommand:
+//! `cargo run --release -- serve --requests 500 --fault-rate 1e-4 --json`
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::time::Instant;
-
-use nanrepair::runtime::{Engine, Tensor};
-use nanrepair::util::rng::Pcg64;
-use nanrepair::util::stats::Summary;
-use nanrepair::util::table::{fmt_secs, Table};
-
-const N: usize = 256;
-const REQUESTS: usize = 60;
-const WORKERS: usize = 2;
+use nanrepair::coordinator::server::{serve, Arrival, ServeConfig};
+use nanrepair::coordinator::Protection;
+use nanrepair::workloads::WorkloadKind;
 
 fn main() -> anyhow::Result<()> {
-    let dir = Engine::default_dir();
+    let cfg = ServeConfig {
+        workload: WorkloadKind::MatMul { n: 128 },
+        protection: Protection::RegisterMemory,
+        requests: 60,
+        workers: 2,
+        queue_depth: 8,
+        // ≈ 8 NaN upsets per request over the 2·128² resident words
+        fault_rate: 2.5e-4,
+        seed: 1,
+        arrival: Arrival::Closed,
+        ..Default::default()
+    };
+    let rep = serve(&cfg)?;
+    rep.table().print();
 
-    // shared "model weights" living in approximate memory: faulted between
-    // requests by the dispatcher
-    let weights = Mutex::new({
-        let mut rng = Pcg64::seed(1);
-        Tensor::new(
-            &[N as i64, N as i64],
-            (0..N * N).map(|_| rng.range_f64(-0.1, 0.1) as f32).collect(),
-        )
-    });
-    let next_req = AtomicUsize::new(0);
-    let total_repairs = AtomicU64::new(0);
-    let latencies = Mutex::new(Vec::with_capacity(REQUESTS));
-
-    let t0 = Instant::now();
-    std::thread::scope(|scope| -> anyhow::Result<()> {
-        for w in 0..WORKERS {
-            let dir = dir.clone();
-            let weights = &weights;
-            let next_req = &next_req;
-            let total_repairs = &total_repairs;
-            let latencies = &latencies;
-            scope.spawn(move || {
-                // one PJRT engine per worker (compiled executable cached)
-                let mut engine = Engine::cpu(&dir).expect("pjrt");
-                let model = engine.load(&format!("matmul_f32_{N}")).expect("artifact");
-                let mut rng = Pcg64::seed(100 + w as u64);
-                loop {
-                    let req = next_req.fetch_add(1, Ordering::Relaxed);
-                    if req >= REQUESTS {
-                        break;
-                    }
-                    // dispatcher-side fault process: every 4th request a
-                    // bit-flip NaN lands in the resident weights
-                    let input = {
-                        let mut wts = weights.lock().unwrap();
-                        if req % 4 == 3 {
-                            let idx = rng.index(N * N);
-                            wts.poison(idx);
-                        }
-                        wts.clone()
-                    };
-                    let activation = Tensor::new(
-                        &[N as i64, N as i64],
-                        (0..N * N).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect(),
-                    );
-                    let t_req = Instant::now();
-                    let out = model.run(&[input, activation]).expect("exec");
-                    let lat = t_req.elapsed().as_secs_f64();
-                    let repairs = out[1].data[0] as u64;
-                    total_repairs.fetch_add(repairs, Ordering::Relaxed);
-                    assert_eq!(out[0].nan_count(), 0, "response must be NaN-free");
-                    if repairs > 0 {
-                        // memory-repair the resident weights (Table 3's
-                        // "once per NaN" — later requests trap zero times)
-                        let mut wts = weights.lock().unwrap();
-                        for v in wts.data.iter_mut() {
-                            if v.is_nan() {
-                                *v = 0.0;
-                            }
-                        }
-                    }
-                    latencies.lock().unwrap().push(lat);
-                }
-            });
-        }
-        Ok(())
-    })?;
-    let wall = t0.elapsed().as_secs_f64();
-
-    let lats = latencies.into_inner().unwrap();
-    let s = Summary::of(&lats);
-    let mut t = Table::new("serve_matmul — request loop over PJRT artifacts", &["metric", "value"]);
-    t.row(&["requests".into(), REQUESTS.to_string()]);
-    t.row(&["workers".into(), WORKERS.to_string()]);
-    t.row(&["throughput".into(), format!("{:.1} req/s", REQUESTS as f64 / wall)]);
-    t.row(&["latency p50".into(), fmt_secs(s.p50)]);
-    t.row(&["latency p99".into(), fmt_secs(s.p99)]);
-    t.row(&["kernel NaN repairs".into(), total_repairs.load(Ordering::Relaxed).to_string()]);
-    t.print();
-
-    anyhow::ensure!(total_repairs.load(Ordering::Relaxed) > 0, "fault process never hit");
-    println!("\nserve OK: every response NaN-free; repairs rode along in the kernel.");
+    anyhow::ensure!(rep.dose_total() > 0, "fault process never hit");
+    anyhow::ensure!(rep.repairs_total() > 0, "no NaN was repaired");
+    anyhow::ensure!(
+        rep.output_nans_total() == 0,
+        "responses must be NaN-free under reactive repair"
+    );
+    println!(
+        "\nserve OK: {} requests, every response NaN-free; {} repairs rode \
+         along in the trap path.",
+        rep.results.len(),
+        rep.repairs_total()
+    );
     Ok(())
 }

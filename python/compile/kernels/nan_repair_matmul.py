@@ -1,6 +1,6 @@
 """L1 Pallas kernel: tiled matmul with fused reactive NaN repair.
 
-Hardware adaptation of the paper (DESIGN.md §4): TPUs have no precise
+Hardware adaptation of the paper (DESIGN.md §5): TPUs have no precise
 per-instruction FP exceptions, so "react to the NaN when it is touched"
 becomes "sanitize the operand tile as it streams from (approximate) HBM
 into VMEM, on its way to the MXU".  The NaN mask is fused into the tile

@@ -1,5 +1,5 @@
 //! The L3 coordinator: protection schemes, injection campaigns, the
-//! experiment session/scheduler engine, and metrics.
+//! experiment session/scheduler engine, the serving engine, and metrics.
 //!
 //! A [`campaign::Campaign`] is one (workload × protection × injection)
 //! cell: allocate in approximate memory, inject, run under the configured
@@ -9,15 +9,19 @@
 //! independent cells out over a worker pool, one session per worker;
 //! trap-armed cells on different workers arm different domains and run
 //! concurrently (MXCSR unmasking and the domain binding are per-thread).
-//! [`metrics`] collects cross-cutting counters, and results flow out as
-//! structured records (see [`crate::util::report`]).
+//! The [`server`] drives the same sessions as long-lived serving workers
+//! behind a bounded request queue (the `nanrepair serve` subcommand,
+//! DESIGN.md §4).  [`metrics`] collects cross-cutting counters, and
+//! results flow out as structured records (see [`crate::util::report`]).
 
 pub mod campaign;
 pub mod metrics;
 pub mod protection;
 pub mod scheduler;
+pub mod server;
 pub mod session;
 
 pub use campaign::{Campaign, CampaignConfig, CampaignReport};
 pub use protection::Protection;
+pub use server::{ServeConfig, ServeReport};
 pub use session::ExperimentSession;

@@ -15,6 +15,10 @@
 //! Results come back in input order and are a pure function of each cell's
 //! config — worker count never changes what a batch returns, only how
 //! fast it returns it (asserted by the determinism tests).
+//!
+//! Batches are finite fan-outs; for a continuous stream of requests over
+//! *resident* state, the serving engine ([`super::server`]) drives the
+//! same per-worker sessions behind a bounded request queue instead.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;

@@ -1,0 +1,842 @@
+//! `nanrepair serve` — the serving engine behind the CLI's `serve`
+//! subcommand (DESIGN.md §4).
+//!
+//! The paper motivates reactive NaN repair for long-running AI/HPC
+//! *services* on approximate-memory nodes: model weights stay resident in
+//! energy-cheap DRAM, bit flips keep arriving, and a single NaN that
+//! reaches a response corrupts it completely.  This module turns that
+//! deployment into a reproducible harness:
+//!
+//! * a **bounded MPMC request queue** ([`ServeConfig::queue_depth`])
+//!   connects a load-generator/fault-injector thread to `workers`
+//!   serving threads;
+//! * each worker owns an [`ExperimentSession`] whose cached workload is
+//!   the **resident weights** — allocated once, never reseeded — and
+//!   every request runs trap-armed in the worker's own trap domain
+//!   (DESIGN.md §3.1), so reactive requests execute genuinely
+//!   concurrently with no global serialization; a readiness barrier
+//!   starts the arrival clocks only after every worker is
+//!   resident-ready, so setup cost is never charged to the tail;
+//! * the **fault injector** models the approximate-memory upset process:
+//!   for request *i* it draws a NaN dose from
+//!   `Binomial(resident_words, fault_rate)` and stamps the request with
+//!   it; the serving worker plants the dose into its resident weights
+//!   just before the protected window.  Doses and placements are derived
+//!   from the seed and the request index alone, so under the paper's
+//!   register+memory protection — which repairs every NaN at first touch
+//!   — the repair ledger of a run is identical at any worker count (the
+//!   integration tests assert serial vs 4-worker equality; register-only
+//!   and scrub cadences accumulate per-worker resident state, so their
+//!   ledgers legitimately depend on request placement).  Routing the
+//!   poison through the request stream instead of scribbling on live
+//!   buffers keeps the injector data-race-free — a worker's buffers are
+//!   only ever written by that worker — while modelling the same
+//!   physical process;
+//! * every request yields one [`RequestResult`] (a `serve_request`
+//!   [`Record`] through the sink), and the run ends with a bucketed
+//!   latency distribution plus a `serve_slo` summary: throughput,
+//!   p50/p99/p999 latency, the repair ledger, and violations against a
+//!   `--slo-p99` target — the paper's headline (flat tail latency under
+//!   fault pressure) as a measurable verdict.
+//!
+//! Load generation is either **closed-loop** ([`Arrival::Closed`]: the
+//! queue is kept full; the latency clock starts at the offer instant, so
+//! latency ≈ backpressure wait + queue wait + service) or **open-loop**
+//! ([`Arrival::Open`]: requests
+//! arrive on a fixed schedule; the latency clock starts at the scheduled
+//! arrival instant, so queue buildup under overload is charged to the
+//! tail — coordinated omission is not hidden).
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Barrier, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::repair::policy::RepairPolicy;
+use crate::trap::{TrapStats, NUM_DOMAINS};
+use crate::util::report::{LatencyHistogram, Record};
+use crate::util::rng::Pcg64;
+use crate::util::stats::percentile_sorted;
+use crate::util::table::{fmt_secs, Table};
+use crate::workloads::WorkloadKind;
+
+use super::protection::Protection;
+use super::session::{ExperimentSession, ServeCell};
+
+/// Seed domain separator for the fault-injector's dose draws.
+const FAULT_SEED: u64 = 0x6661756c745f7271; // "fault_rq"
+
+/// How requests arrive at the queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// Closed loop: the generator keeps the bounded queue full, so the
+    /// next request is offered as soon as capacity frees up.  Measures
+    /// peak throughput; the latency clock starts at the *offer* instant
+    /// (stamped just before the enqueue, so time blocked on a full queue
+    /// counts too — offered concurrency is effectively `queue_depth`
+    /// plus the one request waiting to enter).
+    Closed,
+    /// Open loop: requests arrive on a fixed schedule at `rps` requests
+    /// per second regardless of completions.  Measures tail latency under
+    /// a target load; the latency clock starts at the *scheduled* arrival
+    /// instant, so backpressure delays count against the tail.
+    Open {
+        /// Target arrival rate, requests per second.
+        rps: f64,
+    },
+}
+
+impl Arrival {
+    /// Parse `closed` or `open:RPS` (trailing tokens are rejected — a
+    /// mistyped load shape must not silently run as something else).
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut it = s.split(':');
+        let arrival = match it.next().unwrap_or("") {
+            "closed" => Arrival::Closed,
+            "open" => {
+                let rps: f64 = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("open arrival needs a rate: open:RPS"))?
+                    .parse()?;
+                anyhow::ensure!(
+                    rps > 0.0 && rps.is_finite(),
+                    "open-loop arrival rate must be positive and finite"
+                );
+                Arrival::Open { rps }
+            }
+            other => anyhow::bail!("unknown arrival process {other:?} (closed | open:RPS)"),
+        };
+        anyhow::ensure!(
+            it.next().is_none(),
+            "trailing tokens in arrival spec {s:?} (closed | open:RPS)"
+        );
+        Ok(arrival)
+    }
+
+    /// The spec string [`Arrival::parse`] accepts.
+    pub fn label(&self) -> String {
+        match self {
+            Arrival::Closed => "closed".to_string(),
+            Arrival::Open { rps } => format!("open:{rps}"),
+        }
+    }
+}
+
+/// Full description of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Resident workload — its inputs are the model weights that live in
+    /// approximate memory for the whole run.
+    pub workload: WorkloadKind,
+    /// Protection scheme per request window (reactive schemes arm one
+    /// trap domain per worker; `Ecc`/`Abft` are rejected).
+    pub protection: Protection,
+    /// Repair-value policy for trap repairs and scrub sweeps.
+    pub policy: RepairPolicy,
+    /// Measured requests.
+    pub requests: usize,
+    /// Serving worker threads (clamped to `1..=NUM_DOMAINS` and to the
+    /// request count).
+    pub workers: usize,
+    /// Bounded request-queue capacity — the offered concurrency of a
+    /// closed-loop run, the backpressure valve of an open-loop one.
+    pub queue_depth: usize,
+    /// Per-word NaN-upset probability per request interval over the
+    /// resident weights (the word-granular compression of the paper's
+    /// bit-level process: a random bit flip almost never forms a NaN
+    /// directly, so the injector plants the paper's NaN pattern at the
+    /// target word rate).
+    pub fault_rate: f64,
+    /// PRNG seed: resident weights, doses, and placements all derive
+    /// from it.
+    pub seed: u64,
+    /// Arrival process (closed or open loop).
+    pub arrival: Arrival,
+    /// p99 end-to-end latency target in seconds; sets the `serve_slo`
+    /// verdict and the per-request violation count.
+    pub slo_p99: Option<f64>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workload: WorkloadKind::MatMul { n: 256 },
+            protection: Protection::RegisterMemory,
+            policy: RepairPolicy::Zero,
+            requests: 500,
+            workers: 4,
+            queue_depth: 32,
+            fault_rate: 1e-4,
+            seed: 42,
+            arrival: Arrival::Closed,
+            slo_p99: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Short run label, `workload/protection@arrival`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}@{}",
+            self.workload,
+            self.protection.name(),
+            self.arrival.label()
+        )
+    }
+}
+
+/// One queued request: identity, fault dose, and the latency-clock
+/// origin (scheduled arrival for open loop, offer instant otherwise).
+struct ServeRequest {
+    index: usize,
+    dose: u64,
+    arrival: Instant,
+}
+
+/// Bounded blocking MPMC queue between the load generator and the
+/// serving workers.  `push` blocks while the queue is at capacity
+/// (backpressure); `pop` blocks while it is empty and returns `None`
+/// once the queue is closed and drained.
+struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct QueueState<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+    highwater: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    fn new(cap: usize) -> Self {
+        Self {
+            state: Mutex::new(QueueState {
+                buf: VecDeque::with_capacity(cap),
+                closed: false,
+                highwater: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+        }
+    }
+
+    fn push(&self, item: T) {
+        let mut s = self.state.lock().unwrap();
+        while s.buf.len() >= self.cap && !s.closed {
+            s = self.not_full.wait(s).unwrap();
+        }
+        if s.closed {
+            return;
+        }
+        s.buf.push_back(item);
+        s.highwater = s.highwater.max(s.buf.len());
+        drop(s);
+        self.not_empty.notify_one();
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.buf.pop_front() {
+                drop(s);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    fn highwater(&self) -> usize {
+        self.state.lock().unwrap().highwater
+    }
+}
+
+/// Closes the queue when dropped.  Both the load generator and every
+/// worker hold one, so a panicking thread can never leave its
+/// counterpart blocked on an open queue (push with no consumers, pop
+/// with no producer) — the queue closes during unwinding, every thread
+/// drains out, and `thread::scope` propagates the original panic
+/// instead of deadlocking.
+struct CloseOnDrop<'a, T>(&'a BoundedQueue<T>);
+
+impl<T> Drop for CloseOnDrop<'_, T> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// Waits on the readiness barrier when dropped, so a worker releases the
+/// load generator exactly once — at the end of its preparation block on
+/// the normal path, or during unwinding if preparation panics (the
+/// generator must never block forever on a barrier a dead worker will
+/// not reach).
+struct ReadyOnDrop<'a>(&'a Barrier);
+
+impl Drop for ReadyOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+/// Everything measured about one served request.
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    /// Request index (arrival order).
+    pub index: usize,
+    /// Worker thread that served it.
+    pub worker: usize,
+    /// NaN dose the fault injector stamped on the request.
+    pub dose: u64,
+    /// Distinct NaN words actually planted (dose draws may collide).
+    pub nans_planted: u64,
+    /// Trap counters of the request's armed window.
+    pub traps: TrapStats,
+    /// NaNs repaired by a proactive scrub sweep (Scrub protection only).
+    pub scrub_repairs: u64,
+    /// Seconds inside the protected window (arming + scrub + compute).
+    pub service_secs: f64,
+    /// Seconds from the latency-clock origin to completion (queue wait
+    /// included).
+    pub latency_secs: f64,
+    /// Non-finite values in the response (zero under reactive repair).
+    pub output_nans: u64,
+}
+
+impl RequestResult {
+    /// The per-request `serve_request` record.
+    pub fn to_record(&self) -> Record {
+        Record::new("serve_request")
+            .field("index", self.index)
+            .field("worker", self.worker)
+            .field("dose", self.dose)
+            .field("nans_planted", self.nans_planted)
+            .field("sigfpe", self.traps.sigfpe_total)
+            .field("register_repairs", self.traps.register_repairs)
+            .field("memory_repairs", self.traps.memory_repairs())
+            .field("scrub_repairs", self.scrub_repairs)
+            .field("service_secs", self.service_secs)
+            .field("latency_secs", self.latency_secs)
+            .field("output_nans", self.output_nans)
+    }
+}
+
+/// What a serving run produced: per-request results (in request order),
+/// the latency distribution, and the SLO ledger.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// `workload/protection@arrival` label of the run.
+    pub config_label: String,
+    /// Worker threads that served (after clamping).
+    pub workers: usize,
+    /// Bounded queue capacity of the run.
+    pub queue_depth: usize,
+    /// Highest queue occupancy observed.
+    pub queue_highwater: usize,
+    /// Wall-clock seconds of the serving window: from the readiness
+    /// barrier (all workers resident-ready) to the last completion —
+    /// per-worker setup cost is excluded.
+    pub wall_secs: f64,
+    /// Per-request results, ordered by request index.
+    pub results: Vec<RequestResult>,
+    /// Log-bucketed end-to-end latency distribution.
+    pub latency_hist: LatencyHistogram,
+    /// p99 latency target in seconds (if set).
+    pub slo_p99: Option<f64>,
+}
+
+impl ServeReport {
+    /// Completed requests per wall-clock second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_secs == 0.0 {
+            0.0
+        } else {
+            self.results.len() as f64 / self.wall_secs
+        }
+    }
+
+    /// Exact end-to-end latency quantile over all requests.  For several
+    /// quantiles at once, sort once via [`ServeReport::sorted_latencies`].
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        quantile_of(&self.sorted_latencies(), q)
+    }
+
+    /// Exact service-time quantile over all requests.
+    pub fn service_quantile(&self, q: f64) -> f64 {
+        quantile_of(&self.sorted_services(), q)
+    }
+
+    /// All end-to-end latencies, ascending (for exact quantile reads).
+    pub fn sorted_latencies(&self) -> Vec<f64> {
+        self.sorted_by(|r| r.latency_secs)
+    }
+
+    /// All service times, ascending.
+    pub fn sorted_services(&self) -> Vec<f64> {
+        self.sorted_by(|r| r.service_secs)
+    }
+
+    fn sorted_by(&self, f: impl Fn(&RequestResult) -> f64) -> Vec<f64> {
+        let mut v: Vec<f64> = self.results.iter().map(f).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    /// Total NaN dose the fault injector issued.
+    pub fn dose_total(&self) -> u64 {
+        self.results.iter().map(|r| r.dose).sum()
+    }
+
+    /// Total distinct NaN words planted into resident weights.
+    pub fn nans_planted_total(&self) -> u64 {
+        self.results.iter().map(|r| r.nans_planted).sum()
+    }
+
+    /// Total SIGFPE traps taken across all requests.
+    pub fn sigfpe_total(&self) -> u64 {
+        self.results.iter().map(|r| r.traps.sigfpe_total).sum()
+    }
+
+    /// Total repairs: trap-driven register + memory repairs plus scrub
+    /// sweeps — the run's repair ledger.
+    pub fn repairs_total(&self) -> u64 {
+        self.results
+            .iter()
+            .map(|r| r.traps.register_repairs + r.traps.memory_repairs() + r.scrub_repairs)
+            .sum()
+    }
+
+    /// Total non-finite values that reached responses (must be zero under
+    /// reactive protection).
+    pub fn output_nans_total(&self) -> u64 {
+        self.results.iter().map(|r| r.output_nans).sum()
+    }
+
+    /// Requests whose end-to-end latency exceeded the SLO target (0 when
+    /// no target is set).
+    pub fn slo_violations(&self) -> u64 {
+        match self.slo_p99 {
+            None => 0,
+            Some(t) => self.results.iter().filter(|r| r.latency_secs > t).count() as u64,
+        }
+    }
+
+    /// SLO verdict: is the exact p99 at or under the target?
+    pub fn slo_met(&self) -> Option<bool> {
+        self.slo_met_given(&self.sorted_latencies())
+    }
+
+    /// The single verdict rule, over pre-sorted latencies —
+    /// `slo_record()` and `table()` reuse their own sorted vector.
+    fn slo_met_given(&self, sorted_latencies: &[f64]) -> Option<bool> {
+        self.slo_p99.map(|t| quantile_of(sorted_latencies, 0.99) <= t)
+    }
+
+    /// The final `serve_slo` summary record.
+    pub fn slo_record(&self) -> Record {
+        let lat = self.sorted_latencies();
+        let svc = self.sorted_services();
+        let mut rec = Record::new("serve_slo")
+            .field("label", self.config_label.as_str())
+            .field("requests", self.results.len())
+            .field("workers", self.workers)
+            .field("queue_depth", self.queue_depth)
+            .field("queue_highwater", self.queue_highwater)
+            .field("wall_secs", self.wall_secs)
+            .field("throughput_rps", self.throughput_rps())
+            .field("latency_p50_secs", quantile_of(&lat, 0.50))
+            .field("latency_p99_secs", quantile_of(&lat, 0.99))
+            .field("latency_p999_secs", quantile_of(&lat, 0.999))
+            .field("service_p50_secs", quantile_of(&svc, 0.50))
+            .field("service_p99_secs", quantile_of(&svc, 0.99))
+            .field("dose_total", self.dose_total())
+            .field("nans_planted", self.nans_planted_total())
+            .field("sigfpe_total", self.sigfpe_total())
+            .field("repairs_total", self.repairs_total())
+            .field("output_nans", self.output_nans_total());
+        if let Some(t) = self.slo_p99 {
+            rec = rec
+                .field("slo_p99_secs", t)
+                .field("slo_violations", self.slo_violations())
+                .field("slo_met", self.slo_met_given(&lat).unwrap_or(false));
+        }
+        rec
+    }
+
+    /// The full record stream: one `serve_request` per request (in
+    /// request order), the `serve_latency` histogram, then `serve_slo`.
+    pub fn records(&self) -> Vec<Record> {
+        let mut out: Vec<Record> = self.results.iter().map(RequestResult::to_record).collect();
+        out.push(self.latency_hist.to_record("serve_latency"));
+        out.push(self.slo_record());
+        out
+    }
+
+    /// The human summary table (default text output).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&format!("serve — {}", self.config_label), &["metric", "value"]);
+        t.row(&["requests".into(), self.results.len().to_string()]);
+        t.row(&["workers".into(), self.workers.to_string()]);
+        t.row(&[
+            "queue depth (highwater)".into(),
+            format!("{} ({})", self.queue_depth, self.queue_highwater),
+        ]);
+        t.row(&["wall time".into(), fmt_secs(self.wall_secs)]);
+        t.row(&["throughput".into(), format!("{:.1} req/s", self.throughput_rps())]);
+        let lat = self.sorted_latencies();
+        t.row(&["latency p50".into(), fmt_secs(quantile_of(&lat, 0.50))]);
+        t.row(&["latency p99".into(), fmt_secs(quantile_of(&lat, 0.99))]);
+        t.row(&["latency p999".into(), fmt_secs(quantile_of(&lat, 0.999))]);
+        t.row(&["service p99".into(), fmt_secs(self.service_quantile(0.99))]);
+        t.row(&["NaN dose issued".into(), self.dose_total().to_string()]);
+        t.row(&["NaN words planted".into(), self.nans_planted_total().to_string()]);
+        t.row(&["SIGFPE traps".into(), self.sigfpe_total().to_string()]);
+        t.row(&["repairs (reg+mem+scrub)".into(), self.repairs_total().to_string()]);
+        t.row(&["NaNs in responses".into(), self.output_nans_total().to_string()]);
+        if let Some(t_slo) = self.slo_p99 {
+            t.row(&["SLO p99 target".into(), fmt_secs(t_slo)]);
+            t.row(&["SLO violations".into(), self.slo_violations().to_string()]);
+            let verdict = if self.slo_met_given(&lat) == Some(true) { "yes" } else { "NO" };
+            t.row(&["SLO met".into(), verdict.to_string()]);
+        }
+        t
+    }
+}
+
+/// [`percentile_sorted`] with the empty case mapped to 0.
+fn quantile_of(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        0.0
+    } else {
+        percentile_sorted(sorted, q)
+    }
+}
+
+/// Placement seed for request `index`: independent of worker assignment,
+/// decorrelated across indices.
+fn request_seed(seed: u64, index: usize) -> u64 {
+    (seed ^ 0x73657276655f7271) // "serve_rq"
+        .wrapping_add((index as u64).wrapping_mul(0x9e3779b97f4a7c15))
+}
+
+/// Run one serving campaign: spawn the workers and the
+/// load-generator/fault-injector thread, serve every request, and
+/// assemble the [`ServeReport`].
+pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
+    anyhow::ensure!(cfg.requests > 0, "serve needs at least one request");
+    anyhow::ensure!(cfg.queue_depth > 0, "queue depth must be >= 1");
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&cfg.fault_rate),
+        "--fault-rate is a per-word probability in [0, 1]"
+    );
+    super::session::ensure_servable(cfg.workload, cfg.protection)?;
+    if let Arrival::Open { rps } = cfg.arrival {
+        anyhow::ensure!(
+            rps > 0.0 && rps.is_finite(),
+            "open-loop arrival rate must be positive and finite"
+        );
+    }
+    if let Some(t) = cfg.slo_p99 {
+        anyhow::ensure!(
+            t > 0.0 && t.is_finite(),
+            "--slo-p99 target must be positive and finite"
+        );
+    }
+    let workers = cfg.workers.clamp(1, NUM_DOMAINS).min(cfg.requests);
+    // Size of the fault process's target: the resident input word count.
+    let input_words = cfg.workload.input_words();
+
+    let queue = BoundedQueue::new(cfg.queue_depth);
+    let queue = &queue;
+    let (tx, rx) = mpsc::channel::<Result<RequestResult>>();
+    // Workers must finish building their resident weights before the
+    // arrival clocks start, or setup cost would be charged to the first
+    // wave of request latencies.  Participants: workers + generator +
+    // the collecting thread (which stamps the wall clock).
+    let ready = Barrier::new(workers + 2);
+    let ready = &ready;
+
+    let (t0, results, first_err) = std::thread::scope(|scope| {
+        // Load generator + fault injector: stamps each request with its
+        // deterministic NaN dose and paces arrivals.
+        scope.spawn(move || {
+            let _close = CloseOnDrop(queue);
+            ready.wait();
+            let mut dose_rng = Pcg64::seed(cfg.seed ^ FAULT_SEED);
+            let start = Instant::now();
+            for index in 0..cfg.requests {
+                let arrival = match cfg.arrival {
+                    Arrival::Closed => Instant::now(),
+                    Arrival::Open { rps } => {
+                        let due = start + Duration::from_secs_f64(index as f64 / rps);
+                        loop {
+                            let now = Instant::now();
+                            if now >= due {
+                                break;
+                            }
+                            std::thread::sleep(due - now);
+                        }
+                        due
+                    }
+                };
+                let dose = dose_rng.binomial(input_words as u64, cfg.fault_rate);
+                queue.push(ServeRequest { index, dose, arrival });
+            }
+            // _close drops here, closing the queue (also on panic above)
+        });
+
+        for worker in 0..workers {
+            let tx = tx.clone();
+            scope.spawn(move || {
+                // On a worker panic the queue closes so the generator's
+                // push can never block forever; on normal exit the queue
+                // is already closed and this is a no-op.
+                let _close = CloseOnDrop(queue);
+                let mut session = ExperimentSession::new();
+                {
+                    let _ready = ReadyOnDrop(ready);
+                    session.prepare_resident(cfg.workload, cfg.seed);
+                    // _ready drops here: barrier released exactly once,
+                    // during unwinding too if preparation panics
+                }
+                let mut served = 0u64;
+                while let Some(req) = queue.pop() {
+                    let out = session.serve_request(&ServeCell {
+                        workload: cfg.workload,
+                        resident_seed: cfg.seed,
+                        protection: cfg.protection,
+                        policy: cfg.policy,
+                        dose: req.dose,
+                        placement_seed: request_seed(cfg.seed, req.index),
+                        served_before: served,
+                    });
+                    served += 1;
+                    let done = Instant::now();
+                    let msg = out.map(|o| RequestResult {
+                        index: req.index,
+                        worker,
+                        dose: req.dose,
+                        nans_planted: o.nans_planted,
+                        traps: o.traps,
+                        scrub_repairs: o.scrub_repairs,
+                        service_secs: o.service_secs,
+                        latency_secs: done.saturating_duration_since(req.arrival).as_secs_f64(),
+                        output_nans: o.output_nans,
+                    });
+                    if tx.send(msg).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+        ready.wait();
+        let t0 = Instant::now();
+
+        let mut results: Vec<Option<RequestResult>> = (0..cfg.requests).map(|_| None).collect();
+        let mut first_err = None;
+        for msg in rx {
+            match msg {
+                Ok(r) => {
+                    let index = r.index;
+                    results[index] = Some(r);
+                }
+                Err(e) => {
+                    // keep draining so every worker can exit cleanly
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        (t0, results, first_err)
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let results: Vec<RequestResult> = results
+        .into_iter()
+        .map(|r| r.expect("every request produced a result"))
+        .collect();
+
+    let mut latency_hist = LatencyHistogram::new();
+    for r in &results {
+        latency_hist.observe(r.latency_secs);
+    }
+
+    Ok(ServeReport {
+        config_label: cfg.label(),
+        workers,
+        queue_depth: cfg.queue_depth,
+        queue_highwater: queue.highwater(),
+        wall_secs,
+        results,
+        latency_hist,
+        slo_p99: cfg.slo_p99,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::report::Json;
+
+    fn small_cfg(workers: usize) -> ServeConfig {
+        ServeConfig {
+            workload: WorkloadKind::MatMul { n: 12 },
+            requests: 6,
+            workers,
+            queue_depth: 4,
+            // E[dose] ≈ 288 × 0.02 ≈ 5.8 NaNs per request
+            fault_rate: 0.02,
+            seed: 11,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn arrival_parse_round_trips() {
+        assert_eq!(Arrival::parse("closed").unwrap(), Arrival::Closed);
+        assert_eq!(Arrival::parse("open:250").unwrap(), Arrival::Open { rps: 250.0 });
+        let bad = [
+            "", "open", "open:0", "open:-1", "open:x", "open:inf", "poisson:5",
+            "closed:200", "open:200:burst",
+        ];
+        for bad in bad {
+            assert!(Arrival::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+        let a = Arrival::parse("open:250").unwrap();
+        assert_eq!(Arrival::parse(&a.label()).unwrap(), a);
+    }
+
+    #[test]
+    fn bounded_queue_orders_bounds_and_closes() {
+        let q = BoundedQueue::new(2);
+        std::thread::scope(|scope| {
+            let q = &q;
+            scope.spawn(move || {
+                for i in 0..50 {
+                    q.push(i);
+                }
+                q.close();
+            });
+            let mut got = Vec::new();
+            while let Some(v) = q.pop() {
+                got.push(v);
+            }
+            assert_eq!(got, (0..50).collect::<Vec<i32>>());
+        });
+        assert!(q.highwater() <= 2, "bounded: {}", q.highwater());
+        assert!(q.pop().is_none(), "closed and drained");
+    }
+
+    #[test]
+    fn serve_closed_loop_repairs_and_reports() {
+        let rep = serve(&small_cfg(2)).unwrap();
+        assert_eq!(rep.results.len(), 6);
+        for (i, r) in rep.results.iter().enumerate() {
+            assert_eq!(r.index, i, "results in request order");
+            assert!(r.worker < 2);
+            assert!(r.latency_secs >= r.service_secs, "latency includes service");
+        }
+        assert_eq!(rep.output_nans_total(), 0, "responses are NaN-free");
+        assert!(rep.dose_total() > 0, "fault process landed");
+        assert!(rep.repairs_total() > 0);
+        assert!(rep.sigfpe_total() > 0);
+        assert!(rep.throughput_rps() > 0.0);
+        assert_eq!(rep.latency_hist.count(), 6);
+
+        let recs = rep.records();
+        assert_eq!(recs.len(), 6 + 2);
+        assert!(recs[..6].iter().all(|r| r.kind() == "serve_request"));
+        assert_eq!(recs[6].kind(), "serve_latency");
+        assert_eq!(recs[7].kind(), "serve_slo");
+    }
+
+    #[test]
+    fn serve_is_deterministic_in_doses_and_repairs() {
+        let a = serve(&small_cfg(1)).unwrap();
+        let b = serve(&small_cfg(1)).unwrap();
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.dose, y.dose);
+            assert_eq!(x.nans_planted, y.nans_planted);
+            let (mut xt, mut yt) = (x.traps, y.traps);
+            xt.trap_cycles_total = 0;
+            yt.trap_cycles_total = 0;
+            assert_eq!(xt, yt);
+        }
+    }
+
+    #[test]
+    fn serve_zero_fault_rate_is_trap_free() {
+        let cfg = ServeConfig { fault_rate: 0.0, ..small_cfg(2) };
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.dose_total(), 0);
+        assert_eq!(rep.sigfpe_total(), 0);
+        assert_eq!(rep.repairs_total(), 0);
+        assert_eq!(rep.output_nans_total(), 0);
+    }
+
+    #[test]
+    fn serve_open_loop_completes_with_arrival_latency() {
+        let cfg = ServeConfig { arrival: Arrival::Open { rps: 500.0 }, ..small_cfg(2) };
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.results.len(), 6);
+        // last arrival is scheduled at 5/500 = 10 ms after the
+        // generator's clock origin; the generous 5 ms slack absorbs
+        // scheduler skew between the generator's and collector's
+        // barrier wake-ups on loaded CI machines
+        assert!(rep.wall_secs >= 5.0 / 1000.0, "paced by the schedule");
+        assert_eq!(rep.output_nans_total(), 0);
+    }
+
+    #[test]
+    fn serve_slo_verdict_and_violations() {
+        // a 10-second p99 target is unmissable for 6 tiny matmuls
+        let cfg = ServeConfig { slo_p99: Some(10.0), ..small_cfg(2) };
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.slo_met(), Some(true));
+        assert_eq!(rep.slo_violations(), 0);
+        let rec = rep.slo_record();
+        assert_eq!(rec.get("slo_met").and_then(|v| v.as_f64()), None);
+        assert!(matches!(rec.get("slo_met"), Some(Json::Bool(true))), "{rec:?}");
+
+        // a zero-width target is unmeetable
+        let rep = ServeReport { slo_p99: Some(0.0), ..rep };
+        assert_eq!(rep.slo_met(), Some(false));
+        assert_eq!(rep.slo_violations(), rep.results.len() as u64);
+    }
+
+    #[test]
+    fn serve_rejects_bad_configs() {
+        assert!(serve(&ServeConfig { requests: 0, ..small_cfg(1) }).is_err());
+        assert!(serve(&ServeConfig { queue_depth: 0, ..small_cfg(1) }).is_err());
+        assert!(serve(&ServeConfig { fault_rate: 1.5, ..small_cfg(1) }).is_err());
+        assert!(serve(&ServeConfig { protection: Protection::Ecc, ..small_cfg(1) }).is_err());
+        let never_scrubs = Protection::Scrub { period_runs: 0 };
+        assert!(serve(&ServeConfig { protection: never_scrubs, ..small_cfg(1) }).is_err());
+        assert!(serve(&ServeConfig { slo_p99: Some(f64::NAN), ..small_cfg(1) }).is_err());
+        assert!(serve(&ServeConfig { slo_p99: Some(-0.1), ..small_cfg(1) }).is_err());
+        // input-mutating / division-bearing workloads void the
+        // resident-weights serving contract
+        let lu = WorkloadKind::Lu { n: 8 };
+        assert!(serve(&ServeConfig { workload: lu, ..small_cfg(1) }).is_err());
+        let jacobi = WorkloadKind::Jacobi { n: 8, iters: 3 };
+        assert!(serve(&ServeConfig { workload: jacobi, ..small_cfg(1) }).is_err());
+    }
+}

@@ -36,7 +36,7 @@ use crate::approxmem::injector::{InjectionReport, InjectionSpec, Injector};
 use crate::approxmem::pool::ApproxPool;
 use crate::approxmem::scrubber::Scrubber;
 use crate::repair::policy::RepairPolicy;
-use crate::trap::TrapGuard;
+use crate::trap::{TrapGuard, TrapStats};
 use crate::util::stats::Summary;
 use crate::workloads::{Workload, WorkloadKind};
 
@@ -57,6 +57,98 @@ struct CachedWorkload {
 /// cells, and sweep-sized test workloads stay far below the budget.
 pub const CACHE_BYTES_BUDGET: usize = 64 << 20;
 
+/// The repair value a [`RepairPolicy`] resolves to for scrub sweeps (the
+/// scrubber patches words directly, so the address-sensitive
+/// `NeighborMean` policy degrades to 0.0 like the trap path's fallback).
+fn scrub_value(policy: RepairPolicy) -> f64 {
+    match policy {
+        RepairPolicy::Constant(c) => c,
+        RepairPolicy::One => 1.0,
+        _ => 0.0,
+    }
+}
+
+/// Fail fast when a (workload, protection) pair cannot serve requests:
+/// the workload-specific protection baselines (ECC, ABFT) need
+/// per-workload harness support; input-mutating workloads
+/// ([`WorkloadKind::mutates_inputs`]) would destroy the resident
+/// weights on their first run; and division-bearing workloads
+/// ([`WorkloadKind::servable`]) can turn a repaired-to-policy-value
+/// divisor into Inf responses.  One rule shared by
+/// [`crate::coordinator::server::serve`] (config validation) and
+/// [`ExperimentSession::serve_request`].
+pub(crate) fn ensure_servable(workload: WorkloadKind, protection: Protection) -> Result<()> {
+    if matches!(protection, Protection::Ecc | Protection::Abft) {
+        anyhow::bail!(
+            "{} protection is workload-specific; serve supports none/register/memory/scrub",
+            protection.name()
+        );
+    }
+    anyhow::ensure!(
+        !workload.mutates_inputs(),
+        "{workload} mutates its inputs in place and cannot act as resident serving \
+         weights; serve supports matmul/matvec"
+    );
+    anyhow::ensure!(
+        workload.servable(),
+        "{workload} divides by values the repair policy may have patched (the paper's \
+         policy-ablation hazard), so responses can go non-finite; serve supports \
+         matmul/matvec"
+    );
+    if let Protection::Scrub { period_runs } = protection {
+        // `run_cell` treats scrub:0 as "never sweep" (a valid campaign
+        // baseline); a *serving* run labeled scrub that never scrubs
+        // would just be unprotected data under a misleading label.
+        anyhow::ensure!(
+            period_runs > 0,
+            "scrub:0 never sweeps; serving needs a scrub period of at least 1"
+        );
+    }
+    Ok(())
+}
+
+/// Per-request inputs to [`ExperimentSession::serve_request`] — one
+/// serving request against the session's resident workload (built by
+/// [`crate::coordinator::server`], the `nanrepair serve` engine).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeCell {
+    /// Resident workload kind (built once per session, never reseeded).
+    pub workload: WorkloadKind,
+    /// Seed the resident weights are built from on first touch.
+    pub resident_seed: u64,
+    /// Protection scheme covering the request window.
+    pub protection: Protection,
+    /// Repair-value policy for trap repairs and scrub sweeps.
+    pub policy: RepairPolicy,
+    /// NaN words the fault process planted for this request.
+    pub dose: u64,
+    /// Seed for the dose-placement draws (derived from the request index,
+    /// so placement is independent of which worker serves the request).
+    pub placement_seed: u64,
+    /// Requests this session served before this one — drives the scrub
+    /// cadence for [`Protection::Scrub`].
+    pub served_before: u64,
+}
+
+/// What [`ExperimentSession::serve_request`] measured for one request.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequestOutcome {
+    /// Distinct NaN words actually planted (dose draws may collide).
+    pub nans_planted: u64,
+    /// Trap counters of this request's armed window (zero for non-trap
+    /// protections — the domain is claimed and read per request).
+    pub traps: TrapStats,
+    /// NaNs repaired by a proactive scrub sweep before the compute
+    /// ([`Protection::Scrub`] only).
+    pub scrub_repairs: u64,
+    /// Wall-clock seconds of the protected window (arming + any scrub
+    /// sweep + the compute itself).
+    pub service_secs: f64,
+    /// Non-finite values in the response — zero under reactive
+    /// protection, the paper's Fig. 1 catastrophe without it.
+    pub output_nans: u64,
+}
+
 /// Reusable executor for campaign cells (see module docs).
 #[derive(Default)]
 pub struct ExperimentSession {
@@ -65,6 +157,7 @@ pub struct ExperimentSession {
 }
 
 impl ExperimentSession {
+    /// An empty session: nothing cached, no cells run.
     pub fn new() -> Self {
         Self::default()
     }
@@ -112,14 +205,7 @@ impl ExperimentSession {
             }
         }
 
-        let cached = self
-            .cache
-            .entry(cfg.workload)
-            .or_insert_with(|| {
-                let pool = ApproxPool::new();
-                let workload = cfg.workload.build(&pool, cfg.seed);
-                CachedWorkload { pool, workload }
-            });
+        let cached = self.resident_entry(cfg.workload, cfg.seed);
         let pool = cached.pool.clone();
         let workload: &mut dyn Workload = cached.workload.as_mut();
         // Re-key cached buffers to this cell's seed (no reallocation).
@@ -127,11 +213,7 @@ impl ExperimentSession {
 
         let mut injector = Injector::new(cfg.seed ^ 0x696e6a6563740000);
         let mut input_rng = crate::util::rng::Pcg64::seed(cfg.seed ^ 0x706f69736f6e);
-        let scrubber = Scrubber::new(match cfg.policy {
-            RepairPolicy::Constant(c) => c,
-            RepairPolicy::One => 1.0,
-            _ => 0.0,
-        });
+        let scrubber = Scrubber::new(scrub_value(cfg.policy));
 
         // warmup (no injection): page in, stabilize frequency
         for _ in 0..cfg.warmup {
@@ -217,6 +299,105 @@ impl ExperimentSession {
             completed: true,
             flops,
             cell_secs: cell_t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// The cached workload for `kind`, built from `seed` on first touch —
+    /// the single construction path `run_cell`, `prepare_resident`, and
+    /// `serve_request` all share.
+    fn resident_entry(&mut self, kind: WorkloadKind, seed: u64) -> &mut CachedWorkload {
+        self.cache.entry(kind).or_insert_with(|| {
+            let pool = ApproxPool::new();
+            let workload = kind.build(&pool, seed);
+            CachedWorkload { pool, workload }
+        })
+    }
+
+    /// Build (or reuse) the resident workload for `kind`, seeded with
+    /// `seed`, and run it once unmeasured — a serving worker pays
+    /// allocation and page-in before its first measured request instead of
+    /// inside a service window.
+    pub fn prepare_resident(&mut self, kind: WorkloadKind, seed: u64) {
+        self.resident_entry(kind, seed).workload.run();
+    }
+
+    /// Serve one request against the resident workload (the
+    /// [`crate::coordinator::server`] worker path): plant the request's
+    /// NaN dose at seeded positions in the resident inputs, execute one
+    /// protected run, and scan the response for NaNs.
+    ///
+    /// Unlike [`ExperimentSession::run_cell`], the resident buffers are
+    /// **not** reseeded between requests — the weights stay resident for
+    /// the worker's lifetime exactly like model weights in a serving
+    /// process, so repairs patch them in place (a repaired word keeps its
+    /// policy value afterwards).  Under [`Protection::RegisterMemory`]
+    /// every planted NaN therefore traps exactly once, in the request that
+    /// first touches it, and total repairs across a serve run depend only
+    /// on the planted doses — not on worker count or request placement
+    /// (asserted by `rust/tests/integration_serve.rs`).  Under
+    /// [`Protection::RegisterOnly`] NaNs persist in resident memory and
+    /// re-trap on every later request that touches them, and under
+    /// [`Protection::None`] they silently corrupt every later response.
+    ///
+    /// The cache is keyed by [`WorkloadKind`] alone: the first build wins,
+    /// so `resident_seed` only matters on a session's first touch of a
+    /// kind, and a session that previously ran [`ExperimentSession::run_cell`]
+    /// for the same kind serves against those (reseeded) buffers.  Serving
+    /// also pins the resident kind — no byte-budget eviction runs here.
+    /// Dedicate a session to serving (as `coordinator::server` does) when
+    /// exact resident-weight provenance matters.
+    pub fn serve_request(&mut self, cell: &ServeCell) -> Result<RequestOutcome> {
+        ensure_servable(cell.workload, cell.protection)?;
+        let cached = self.resident_entry(cell.workload, cell.resident_seed);
+        let pool = cached.pool.clone();
+        let workload: &mut dyn Workload = cached.workload.as_mut();
+
+        // The fault process acts between requests: plant the dose as
+        // paper-pattern NaN words at placement-seed-derived positions.
+        let mut planted = 0u64;
+        if cell.dose > 0 {
+            let mut rng = crate::util::rng::Pcg64::seed(cell.placement_seed);
+            let mut idxs: Vec<usize> = (0..cell.dose)
+                .map(|_| rng.index(workload.input_len()))
+                .collect();
+            idxs.sort_unstable();
+            idxs.dedup();
+            planted = idxs.len() as u64;
+            for idx in idxs {
+                workload.poison_input(idx, crate::fp::nan::PAPER_NAN_BITS);
+            }
+        }
+
+        // Arming, proactive scrubbing, and the compute are all inside the
+        // service window — protection overhead is what the latency SLO is
+        // about.
+        let t0 = Instant::now();
+        let guard = cell
+            .protection
+            .trap_config(cell.policy)
+            .map(|tc| TrapGuard::arm_reset(&pool, &tc));
+        let mut scrub_repairs = 0u64;
+        if let Protection::Scrub { period_runs } = cell.protection {
+            if period_runs > 0 && cell.served_before % period_runs as u64 == 0 {
+                scrub_repairs = Scrubber::new(scrub_value(cell.policy))
+                    .scrub(&pool)
+                    .nans_repaired();
+            }
+        }
+        workload.run();
+        let service_secs = t0.elapsed().as_secs_f64();
+        let traps = guard.as_ref().map(|g| g.stats()).unwrap_or_default();
+        drop(guard);
+
+        let output_nans = workload.output_nonfinite();
+        self.cells_run += 1;
+
+        Ok(RequestOutcome {
+            nans_planted: planted,
+            traps,
+            scrub_repairs,
+            service_secs,
+            output_nans,
         })
     }
 }
@@ -339,5 +520,92 @@ mod tests {
         let mut session = ExperimentSession::new();
         let rep = session.run_cell(&cfg(24, 7, Protection::None)).unwrap();
         assert!(rep.cell_secs >= rep.elapsed.mean * rep.elapsed.n as f64 * 0.5);
+    }
+
+    fn serve_cell(dose: u64, idx: u64, protection: Protection) -> ServeCell {
+        ServeCell {
+            workload: WorkloadKind::MatMul { n: 16 },
+            resident_seed: 9,
+            protection,
+            policy: RepairPolicy::Zero,
+            dose,
+            placement_seed: 0x5eed ^ idx,
+            served_before: idx,
+        }
+    }
+
+    #[test]
+    fn serve_requests_reuse_resident_buffers_and_repair() {
+        let mut s = ExperimentSession::new();
+        s.prepare_resident(WorkloadKind::MatMul { n: 16 }, 9);
+        for i in 0..5 {
+            let out = s
+                .serve_request(&serve_cell(2, i, Protection::RegisterMemory))
+                .unwrap();
+            assert_eq!(out.output_nans, 0, "reactive responses are NaN-free");
+            assert!(out.nans_planted >= 1 && out.nans_planted <= 2);
+            assert!(out.traps.sigfpe_total >= 1);
+            assert!(out.traps.memory_repairs() >= 1);
+            assert!(out.service_secs >= 0.0);
+        }
+        assert_eq!(s.pool_allocs_total(), 3, "weights stay resident");
+        assert_eq!(s.cached_kinds(), 1);
+    }
+
+    #[test]
+    fn serve_without_protection_corrupts_responses() {
+        let mut s = ExperimentSession::new();
+        let out = s.serve_request(&serve_cell(3, 0, Protection::None)).unwrap();
+        assert_eq!(out.traps.sigfpe_total, 0);
+        assert!(
+            out.output_nans > 0,
+            "Fig. 1: unprotected NaNs reach the response"
+        );
+    }
+
+    #[test]
+    fn serve_scrub_sweeps_on_cadence() {
+        let mut s = ExperimentSession::new();
+        let out = s
+            .serve_request(&serve_cell(3, 0, Protection::Scrub { period_runs: 1 }))
+            .unwrap();
+        assert_eq!(out.traps.sigfpe_total, 0);
+        assert!(out.scrub_repairs >= 1, "planted NaNs scrubbed before compute");
+        assert_eq!(out.output_nans, 0);
+        // served_before = 1, period 2 → no sweep this request: the planted
+        // NaNs survive into the response (the scrub-gap vulnerability)
+        let out = s
+            .serve_request(&serve_cell(3, 1, Protection::Scrub { period_runs: 2 }))
+            .unwrap();
+        assert_eq!(out.scrub_repairs, 0);
+        assert!(out.output_nans > 0);
+    }
+
+    #[test]
+    fn serve_rejects_workload_specific_protections() {
+        let mut s = ExperimentSession::new();
+        assert!(s.serve_request(&serve_cell(0, 0, Protection::Ecc)).is_err());
+        assert!(s.serve_request(&serve_cell(0, 0, Protection::Abft)).is_err());
+    }
+
+    #[test]
+    fn serve_rejects_unservable_workloads() {
+        // LU factors its matrix in place; jacobi divides by diagonal
+        // words a repaired NaN may have zeroed (the policy-ablation
+        // hazard) — both void the resident-weights serving contract.
+        let mut s = ExperimentSession::new();
+        for workload in [
+            WorkloadKind::Lu { n: 8 },
+            WorkloadKind::Stencil { n: 8, steps: 2 },
+            WorkloadKind::Jacobi { n: 8, iters: 3 },
+            WorkloadKind::Cg { n: 8, iters: 3 },
+        ] {
+            let cell = ServeCell {
+                workload,
+                ..serve_cell(0, 0, Protection::RegisterMemory)
+            };
+            assert!(s.serve_request(&cell).is_err(), "{workload} must be rejected");
+        }
+        assert_eq!(s.cached_kinds(), 0, "rejected before building anything");
     }
 }

@@ -1,5 +1,5 @@
 //! Experiment drivers — one per paper table/figure plus the extension
-//! studies (DESIGN.md §5 experiment index).  Each driver returns printable
+//! studies (DESIGN.md §6 experiment index).  Each driver returns printable
 //! tables so the CLI, tests, and EXPERIMENTS.md generation share one code
 //! path.
 

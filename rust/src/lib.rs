@@ -19,7 +19,9 @@
 //!   NaNs ([`repair`]), driven by an experiment coordinator
 //!   ([`coordinator`]) over a software approximate-memory substrate
 //!   ([`approxmem`]) with native workloads ([`workloads`]) and baselines
-//!   ([`abft`], ECC, scrubbing).
+//!   ([`abft`], ECC, scrubbing).  The same engine serves continuous
+//!   request traffic against resident approximate-memory weights
+//!   ([`coordinator::server`], the `nanrepair serve` subcommand).
 //! * **L2/L1** — build-time Python (never on the request path): a JAX
 //!   model whose matvec/matmul runs a Pallas NaN-repair kernel, AOT-
 //!   lowered to HLO text and executed via PJRT ([`runtime`]).

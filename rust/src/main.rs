@@ -1,7 +1,8 @@
 //! `nanrepair` — CLI launcher for the reactive-NaN-repair system.
 //!
 //! One subcommand per paper table/figure plus the extension experiments
-//! (DESIGN.md §5). `nanrepair help` lists everything.
+//! (DESIGN.md §6) and the serving harness (`serve`, DESIGN.md §4).
+//! `nanrepair help` lists everything.
 //!
 //! Global options (every subcommand): `--json` / `--format json|csv|text`
 //! select the output encoding, `--out FILE` redirects it, `--workers N`
@@ -16,6 +17,7 @@ use nanrepair::approxmem::injector::InjectionSpec;
 use nanrepair::coordinator::campaign::{Campaign, CampaignConfig, CampaignReport};
 use nanrepair::coordinator::protection::Protection;
 use nanrepair::coordinator::scheduler;
+use nanrepair::coordinator::server;
 use nanrepair::harness;
 use nanrepair::repair::policy::RepairPolicy;
 use nanrepair::util::cli::{App, CmdSpec, Matches};
@@ -100,6 +102,26 @@ fn app() -> App {
         )
         .cmd(CmdSpec::new("artifacts", "list available runtime artifacts")
             .opt("dir", Some("artifacts"), "artifacts directory"))
+        .cmd(
+            CmdSpec::new("serve", "serve requests over resident approximate-memory weights (SLO)")
+                .opt(
+                    "workload",
+                    Some("matmul:256"),
+                    "resident workload spec (matmul|matvec, name:size)",
+                )
+                .opt("protection", Some("memory"), "none|register|memory|scrub:K")
+                .opt("requests", Some("500"), "measured requests")
+                .opt(
+                    "fault-rate",
+                    Some("1e-4"),
+                    "per-word NaN-upset probability per request over resident weights",
+                )
+                .opt("policy", Some("zero"), "repair value: zero|one|neighbor|<float>")
+                .opt("queue-depth", Some("32"), "bounded request-queue capacity")
+                .opt("arrival", Some("closed"), "arrival process: closed | open:RPS")
+                .opt("slo-p99", None, "p99 latency target in ms (verdict + violation count)")
+                .opt("seed", Some("42"), "PRNG seed"),
+        )
 }
 
 /// The output sink requested by the global options, or `None` when the
@@ -398,6 +420,33 @@ fn main() -> Result<()> {
                     }
                     for (spec, rep) in specs.iter().zip(&reports) {
                         s.record(&rep.record(*spec))?;
+                    }
+                }
+            }
+        }
+        "serve" => {
+            let cfg = server::ServeConfig {
+                workload: WorkloadKind::parse(m.get_str("workload")?)?,
+                protection: Protection::parse(m.get_str("protection")?)?,
+                policy: RepairPolicy::parse(m.get_str("policy")?)?,
+                requests: m.get_parse("requests")?,
+                workers,
+                queue_depth: m.get_parse("queue-depth")?,
+                fault_rate: m.get_parse("fault-rate")?,
+                seed: m.get_parse("seed")?,
+                arrival: server::Arrival::parse(m.get_str("arrival")?)?,
+                slo_p99: m
+                    .get("slo-p99")
+                    .map(|v| v.parse::<f64>())
+                    .transpose()?
+                    .map(|ms| ms / 1e3),
+            };
+            let rep = server::serve(&cfg)?;
+            match &mut sink {
+                None => rep.table().print(),
+                Some(s) => {
+                    for rec in rep.records() {
+                        s.record(&rec)?;
                     }
                 }
             }

@@ -172,6 +172,7 @@ impl Json {
         }
     }
 
+    /// String view of `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -350,6 +351,7 @@ pub struct Record {
 }
 
 impl Record {
+    /// A record of kind `kind` with no fields yet.
     pub fn new(kind: &str) -> Self {
         Self {
             kind: kind.to_string(),
@@ -363,14 +365,17 @@ impl Record {
         self
     }
 
+    /// The record's kind tag.
     pub fn kind(&self) -> &str {
         &self.kind
     }
 
+    /// All fields, in insertion order.
     pub fn fields(&self) -> &[(String, Json)] {
         &self.fields
     }
 
+    /// First field named `key`, if any.
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
     }
@@ -405,6 +410,154 @@ impl Record {
     }
 }
 
+/// Log-bucketed latency histogram that renders as a [`Record`].
+///
+/// The serving path ([`crate::coordinator::server`]) accumulates one of
+/// these per run so tail percentiles survive without keeping every
+/// sample.  Buckets are geometric — [`LatencyHistogram::BUCKETS_PER_DECADE`]
+/// per decade from a 1 µs floor up to 1000 s, plus an underflow bucket —
+/// and a quantile reports the upper bound of the bucket holding the
+/// requested rank, clamped to the observed min/max (at 10 buckets per
+/// decade the estimate overshoots by at most ~26 %; exact per-sample SLO
+/// accounting stays with the caller, which sees every latency as it is
+/// recorded).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Lower edge of the first finite bucket (seconds).
+    pub const FLOOR: f64 = 1e-6;
+    /// Geometric resolution: buckets per factor-of-ten of latency.
+    pub const BUCKETS_PER_DECADE: usize = 10;
+    /// Decades covered above [`Self::FLOOR`] (1 µs … 1000 s).
+    pub const DECADES: usize = 9;
+    const NBUCKETS: usize = Self::DECADES * Self::BUCKETS_PER_DECADE + 1;
+
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; Self::NBUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(secs: f64) -> usize {
+        if secs <= Self::FLOOR {
+            0
+        } else {
+            let b = ((secs / Self::FLOOR).log10() * Self::BUCKETS_PER_DECADE as f64).floor();
+            (b as usize + 1).min(Self::NBUCKETS - 1)
+        }
+    }
+
+    /// Upper latency bound (seconds) of bucket `i`.
+    fn bucket_le(i: usize) -> f64 {
+        Self::FLOOR * 10f64.powf(i as f64 / Self::BUCKETS_PER_DECADE as f64)
+    }
+
+    /// Record one latency sample (negative values count as zero).
+    pub fn observe(&mut self, secs: f64) {
+        let secs = secs.max(0.0);
+        self.counts[Self::bucket_of(secs)] += 1;
+        self.count += 1;
+        self.sum += secs;
+        self.min = self.min.min(secs);
+        self.max = self.max.max(secs);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean of all samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Smallest sample (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest sample (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Bucketed quantile estimate: the upper bound of the bucket holding
+    /// rank `ceil(q·count)`, clamped to the observed extremes.  Returns 0
+    /// for an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_le(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// The distribution as one record: count, mean/min/max, p50/p99/p999
+    /// estimates, and the non-empty buckets as `{le, n}` objects (sparse,
+    /// so wide-but-empty latency ranges cost nothing on the wire).
+    pub fn to_record(&self, kind: &str) -> Record {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c > 0)
+            .map(|(i, c)| {
+                Json::Obj(vec![
+                    ("le".to_string(), Json::from(Self::bucket_le(i))),
+                    ("n".to_string(), Json::from(*c)),
+                ])
+            })
+            .collect();
+        Record::new(kind)
+            .field("count", self.count)
+            .field("mean_secs", self.mean())
+            .field("min_secs", self.min())
+            .field("max_secs", self.max())
+            .field("p50_secs", self.quantile(0.50))
+            .field("p99_secs", self.quantile(0.99))
+            .field("p999_secs", self.quantile(0.999))
+            .field("buckets", Json::Arr(buckets))
+    }
+}
+
 /// CSV-escape one cell (RFC 4180 quoting).
 fn csv_cell(s: &str) -> String {
     if s.contains(|c| matches!(c, ',' | '"' | '\n' | '\r')) {
@@ -424,6 +577,7 @@ pub enum OutputFormat {
 }
 
 impl OutputFormat {
+    /// Parse a `--format` value: `text`/`table`, `json`/`jsonl`, or `csv`.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
             "text" | "table" => Ok(OutputFormat::Text),
@@ -443,6 +597,7 @@ pub struct ResultSink {
 }
 
 impl ResultSink {
+    /// A sink writing `format` to an arbitrary writer.
     pub fn new(format: OutputFormat, out: Box<dyn Write>) -> Self {
         Self {
             format,
@@ -451,14 +606,17 @@ impl ResultSink {
         }
     }
 
+    /// A sink writing `format` to standard output.
     pub fn stdout(format: OutputFormat) -> Self {
         Self::new(format, Box::new(io::stdout()))
     }
 
+    /// A sink writing `format` to a freshly created file.
     pub fn to_path(format: OutputFormat, path: &str) -> io::Result<Self> {
         Ok(Self::new(format, Box::new(std::fs::File::create(path)?)))
     }
 
+    /// The sink's output format.
     pub fn format(&self) -> OutputFormat {
         self.format
     }
@@ -512,6 +670,7 @@ impl ResultSink {
         }
     }
 
+    /// Flush the underlying writer.
     pub fn flush(&mut self) -> io::Result<()> {
         self.out.flush()
     }
@@ -615,5 +774,70 @@ mod tests {
         assert_eq!(lines[0], "record,name,value");
         assert_eq!(lines[1], "demo_row,\"a,b\",1");
         assert_eq!(lines[2], "demo_row,\"c\"\"d\",2");
+    }
+
+    #[test]
+    fn latency_histogram_quantiles_bracket_samples() {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..99 {
+            h.observe(1e-3);
+        }
+        h.observe(1.0);
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - (99.0 * 1e-3 + 1.0) / 100.0).abs() < 1e-12);
+        // p50/p99 land in the 1 ms bucket: within one bucket width above
+        let p50 = h.quantile(0.50);
+        assert!((1e-3..1.3e-3).contains(&p50), "{p50}");
+        let p99 = h.quantile(0.99);
+        assert!((1e-3..1.3e-3).contains(&p99), "{p99}");
+        // p999 needs rank 100 → the 1 s sample, clamped to the exact max
+        assert_eq!(h.quantile(0.999), 1.0);
+        assert_eq!(h.max(), 1.0);
+        assert_eq!(h.min(), 1e-3);
+    }
+
+    #[test]
+    fn latency_histogram_empty_and_extremes() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+
+        let mut h = LatencyHistogram::new();
+        h.observe(-1.0); // clamps to zero, lands in the underflow bucket
+        h.observe(1e9); // beyond the last bucket, lands in its top one
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 1e9);
+        let top = h.quantile(1.0);
+        assert!(
+            (999.0..=1e9).contains(&top),
+            "top bucket bound, inside the observed range: {top}"
+        );
+    }
+
+    #[test]
+    fn latency_histogram_record_round_trips() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=50 {
+            h.observe(i as f64 * 1e-4);
+        }
+        let rec = h.to_record("serve_latency");
+        let line = rec.render_jsonl();
+        let parsed = Json::parse(&line).unwrap();
+        assert_eq!(parsed.get("count").and_then(Json::as_f64), Some(50.0));
+        let Some(Json::Arr(buckets)) = parsed.get("buckets") else {
+            panic!("buckets missing: {line}");
+        };
+        assert!(!buckets.is_empty());
+        let total: f64 = buckets
+            .iter()
+            .map(|b| b.get("n").and_then(Json::as_f64).unwrap())
+            .sum();
+        assert_eq!(total, 50.0, "sparse buckets cover every sample");
+        let back = Record::from_json(&parsed).unwrap();
+        assert_eq!(back, rec);
     }
 }

@@ -90,11 +90,16 @@ impl Pcg64 {
             return n;
         }
         let mean = n as f64 * p;
-        if mean < 32.0 && n < 100_000 {
-            // BTRS-free simple inversion via repeated geometric skips
+        if mean < 32.0 {
+            // BTRS-free simple inversion via repeated geometric skips —
+            // O(successes) regardless of n, so the low-mean/huge-n regime
+            // (serve doses over 10^5+ resident words, low-BER sweeps over
+            // millions of bits) stays exactly binomial.  ln_1p keeps
+            // log_q nonzero for p below ~1e-16, where (1.0 - p).ln()
+            // would round to 0 and turn every draw into n successes.
             let mut count = 0u64;
             let mut i = 0u64;
-            let log_q = (1.0 - p).ln();
+            let log_q = (-p).ln_1p();
             loop {
                 let u = self.next_f64().max(f64::MIN_POSITIVE);
                 let skip = (u.ln() / log_q).floor() as u64;
@@ -255,11 +260,29 @@ mod tests {
     }
 
     #[test]
+    fn binomial_mean_low_mean_huge_n_stays_exact() {
+        // mean < 32 with n past any size cutoff must use the exact
+        // inversion path (the serve fault injector's regime)
+        let mut r = Pcg64::seed(7);
+        let n = 1_000_000u64;
+        let p = 1e-5; // mean 10
+        let trials = 2000;
+        let total: u64 = (0..trials).map(|_| r.binomial(n, p)).sum();
+        let mean = total as f64 / trials as f64;
+        assert!((mean - 10.0).abs() < 0.5, "mean={mean}");
+    }
+
+    #[test]
     fn binomial_edges() {
         let mut r = Pcg64::seed(9);
         assert_eq!(r.binomial(100, 0.0), 0);
         assert_eq!(r.binomial(100, 1.0), 100);
         assert_eq!(r.binomial(0, 0.5), 0);
+        // sub-epsilon p must not degenerate to all-successes (ln_1p
+        // keeps the geometric skip finite); mean 131072 × 1e-17 ≈ 0
+        for _ in 0..50 {
+            assert_eq!(r.binomial(131_072, 1e-17), 0);
+        }
     }
 
     #[test]

@@ -101,6 +101,11 @@ impl Workload for MatVec {
         self.y.as_slice().to_vec()
     }
 
+    fn output_nonfinite(&self) -> u64 {
+        // serving hot path: count in place, no clone
+        self.y.as_slice().iter().filter(|x| !x.is_finite()).count() as u64
+    }
+
     fn reference(&self) -> Vec<f64> {
         let n = self.n;
         let mut a = vec![0.0; n * n];

@@ -70,6 +70,42 @@ impl WorkloadKind {
         }
     }
 
+    /// Does `run()` mutate the workload's *input* buffers in place (LU
+    /// factors its matrix, the stencil evolves its grid)?  Such kinds
+    /// cannot act as resident serving weights — each run would serve a
+    /// different computation than the one before — so the serving engine
+    /// ([`crate::coordinator::server`]) rejects them.
+    pub fn mutates_inputs(&self) -> bool {
+        matches!(self, WorkloadKind::Lu { .. } | WorkloadKind::Stencil { .. })
+    }
+
+    /// Can this kind act as resident serving weights?  Requires inputs
+    /// the kernel never mutates ([`Self::mutates_inputs`]) *and*
+    /// division-free compute: jacobi/cg divide by diagonal entries, so a
+    /// NaN there repaired to the zero policy's 0.0 (the paper's
+    /// policy-ablation hazard) would send Inf into responses and make
+    /// trap ledgers value-dependent — voiding the serving invariants
+    /// (NaN-free responses, worker-count-invariant repairs).
+    pub fn servable(&self) -> bool {
+        matches!(self, WorkloadKind::MatMul { .. } | WorkloadKind::MatVec { .. })
+    }
+
+    /// Number of f64 *input* words the built workload exposes
+    /// ([`Workload::input_len`]), computable without building — e.g. the
+    /// serving fault injector sizes its dose distribution from this
+    /// instead of constructing a throwaway workload.  Kept in lock-step
+    /// with every `input_len` implementation by the
+    /// `input_words_matches_built_workloads` test.
+    pub fn input_words(&self) -> usize {
+        match *self {
+            WorkloadKind::MatMul { n } => 2 * n * n,
+            WorkloadKind::MatVec { n }
+            | WorkloadKind::Jacobi { n, .. }
+            | WorkloadKind::Cg { n, .. } => n * n + n,
+            WorkloadKind::Lu { n } | WorkloadKind::Stencil { n, .. } => n * n,
+        }
+    }
+
     /// Problem size (the `n` every variant carries).
     pub fn size(&self) -> usize {
         match *self {
@@ -186,6 +222,14 @@ pub trait Workload: Send {
     /// Flat view of the output (for quality comparison).
     fn output(&self) -> Vec<f64>;
 
+    /// Non-finite values in the current output — the serving path's
+    /// per-request response scan.  The default goes through
+    /// [`Workload::output`] (one allocation + copy); workloads with
+    /// large outputs should count over their buffer in place.
+    fn output_nonfinite(&self) -> u64 {
+        self.output().iter().filter(|x| !x.is_finite()).count() as u64
+    }
+
     /// Run the same computation on clean private buffers → reference.
     fn reference(&self) -> Vec<f64>;
 
@@ -290,6 +334,26 @@ mod tests {
     }
 
     #[test]
+    fn input_words_matches_built_workloads() {
+        let pool = ApproxPool::new();
+        for kind in [
+            WorkloadKind::MatMul { n: 9 },
+            WorkloadKind::MatVec { n: 9 },
+            WorkloadKind::Jacobi { n: 9, iters: 3 },
+            WorkloadKind::Cg { n: 9, iters: 3 },
+            WorkloadKind::Lu { n: 9 },
+            WorkloadKind::Stencil { n: 9, steps: 3 },
+        ] {
+            let w = kind.build(&pool, 1);
+            assert_eq!(
+                kind.input_words(),
+                w.input_len(),
+                "{kind}: input_words out of lock-step with the built workload"
+            );
+        }
+    }
+
+    #[test]
     fn all_kinds_build_and_run_small() {
         let pool = ApproxPool::new();
         for kind in [
@@ -304,6 +368,7 @@ mod tests {
             w.run();
             let q = w.quality();
             assert!(!q.corrupted, "{} corrupted", w.name());
+            assert_eq!(w.output_nonfinite(), 0, "{} non-finite output", w.name());
             assert!(q.rel_l2_error < 1e-9, "{} err={}", w.name(), q.rel_l2_error);
             assert!(w.flops() > 0);
             // reset + rerun reproduces

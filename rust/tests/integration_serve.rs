@@ -1,0 +1,180 @@
+//! Integration: the serving subsystem (`coordinator::server` + the
+//! `nanrepair serve` subcommand) — this PR's acceptance contracts.
+//!
+//! * a short serve run under deterministic fault injection ends with
+//!   **zero NaNs in responses** and **repairs > 0**;
+//! * the repair ledger is **worker-count invariant**: a serial run and a
+//!   4-worker run agree on per-request trap counters (and therefore on
+//!   total repairs) because doses and placements derive from the seed and
+//!   request index alone;
+//! * `nanrepair serve --json` emits one valid JSON-lines `serve_request`
+//!   record per request plus `serve_latency` and `serve_slo` summaries.
+
+use std::collections::HashSet;
+use std::process::Command;
+
+use nanrepair::coordinator::protection::Protection;
+use nanrepair::coordinator::server::{serve, Arrival, ServeConfig};
+use nanrepair::util::report::{Json, Record};
+use nanrepair::workloads::WorkloadKind;
+
+fn cfg(workers: usize) -> ServeConfig {
+    ServeConfig {
+        workload: WorkloadKind::MatMul { n: 48 },
+        protection: Protection::RegisterMemory,
+        requests: 60,
+        workers,
+        queue_depth: 8,
+        // E[dose] ≈ 4608 words × 2e-3 ≈ 9 NaNs per request
+        fault_rate: 2e-3,
+        seed: 7,
+        arrival: Arrival::Closed,
+        ..Default::default()
+    }
+}
+
+/// Acceptance: reactive serving under fault pressure returns NaN-free
+/// responses while actually repairing (the fault process demonstrably
+/// landed).
+#[test]
+fn serve_run_is_nan_free_with_repairs() {
+    let rep = serve(&cfg(2)).unwrap();
+    assert_eq!(rep.results.len(), 60);
+    assert_eq!(rep.output_nans_total(), 0, "every response NaN-free");
+    assert!(rep.dose_total() > 0, "fault injector issued doses");
+    assert!(rep.repairs_total() > 0, "NaNs were repaired reactively");
+    assert!(rep.sigfpe_total() > 0);
+    assert!(rep.latency_quantile(0.999) >= rep.latency_quantile(0.50));
+}
+
+/// Acceptance: serial vs 4-worker runs agree on the repair ledger —
+/// per-request trap counters are byte-identical modulo the rdtsc cycle
+/// tally, so totals match exactly.  Also asserts the 4-worker run really
+/// spread requests across workers (per-worker trap domains, no global
+/// serialization).
+#[test]
+fn serve_serial_vs_parallel_repair_ledger_identical() {
+    let serial = serve(&cfg(1)).unwrap();
+    let parallel = serve(&cfg(4)).unwrap();
+    assert_eq!(serial.results.len(), parallel.results.len());
+    for (s, p) in serial.results.iter().zip(&parallel.results) {
+        assert_eq!(s.index, p.index);
+        assert_eq!(s.dose, p.dose, "request {}: dose differs", s.index);
+        assert_eq!(s.nans_planted, p.nans_planted);
+        assert_eq!(s.output_nans, 0);
+        assert_eq!(p.output_nans, 0);
+        let (mut st, mut pt) = (s.traps, p.traps);
+        st.trap_cycles_total = 0;
+        pt.trap_cycles_total = 0;
+        assert_eq!(st, pt, "request {}: per-request trap counters", s.index);
+    }
+    assert_eq!(serial.repairs_total(), parallel.repairs_total());
+    assert_eq!(serial.sigfpe_total(), parallel.sigfpe_total());
+
+    let workers_used: HashSet<usize> = parallel.results.iter().map(|r| r.worker).collect();
+    assert!(
+        workers_used.len() >= 2,
+        "a 60-request 4-worker run must use multiple workers: {workers_used:?}"
+    );
+}
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_nanrepair"))
+}
+
+fn run_cli(args: &[&str]) -> (String, String, bool) {
+    let out = bin().args(args).output().expect("CLI runs");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+/// Acceptance: `nanrepair serve --json` emits one parseable record per
+/// request plus the latency histogram and the SLO summary, in that order.
+#[test]
+fn cli_serve_json_emits_requests_and_slo() {
+    let (stdout, stderr, ok) = run_cli(&[
+        "serve",
+        "--workload",
+        "matmul:16",
+        "--requests",
+        "12",
+        "--fault-rate",
+        "1e-2",
+        "--queue-depth",
+        "4",
+        "--slo-p99",
+        "10000",
+        "--seed",
+        "5",
+        "--workers",
+        "2",
+        "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let lines: Vec<&str> = stdout.lines().filter(|l| !l.is_empty()).collect();
+    assert_eq!(lines.len(), 12 + 2, "{stdout}");
+    for (i, line) in lines[..12].iter().enumerate() {
+        let parsed = Json::parse(line).unwrap_or_else(|e| panic!("{e}: {line}"));
+        let rec = Record::from_json(&parsed).unwrap();
+        assert_eq!(rec.kind(), "serve_request");
+        assert_eq!(parsed.get("index").and_then(Json::as_f64), Some(i as f64));
+        assert_eq!(parsed.get("output_nans").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(rec.render_jsonl(), *line, "round-trip is byte-exact");
+    }
+    let hist = Json::parse(lines[12]).unwrap();
+    assert_eq!(hist.get("record").and_then(Json::as_str), Some("serve_latency"));
+    assert_eq!(hist.get("count").and_then(Json::as_f64), Some(12.0));
+
+    let slo = Json::parse(lines[13]).unwrap();
+    assert_eq!(slo.get("record").and_then(Json::as_str), Some("serve_slo"));
+    assert_eq!(slo.get("requests").and_then(Json::as_f64), Some(12.0));
+    assert_eq!(slo.get("output_nans").and_then(Json::as_f64), Some(0.0));
+    assert!(slo.get("throughput_rps").and_then(Json::as_f64).unwrap() > 0.0);
+    assert_eq!(
+        slo.get("slo_p99_secs").and_then(Json::as_f64),
+        Some(10.0),
+        "10000 ms target parsed to seconds"
+    );
+    assert!(matches!(slo.get("slo_met"), Some(Json::Bool(true))), "{stdout}");
+}
+
+/// Default text mode renders the summary table (no JSON anywhere), and
+/// the README quickstart's flag set is accepted.
+#[test]
+fn cli_serve_text_table() {
+    let (stdout, stderr, ok) = run_cli(&[
+        "serve",
+        "--workload",
+        "matmul:16",
+        "--requests",
+        "8",
+        "--fault-rate",
+        "1e-2",
+        "--workers",
+        "2",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("serve — matmul:16/memory@closed"), "{stdout}");
+    assert!(stdout.contains("throughput"), "{stdout}");
+    assert!(!stdout.contains("{\"record\""), "{stdout}");
+}
+
+/// Open-loop arrivals pace the run and keep responses clean.
+#[test]
+fn serve_open_loop_arrivals() {
+    let mut c = cfg(2);
+    c.workload = WorkloadKind::MatMul { n: 16 };
+    c.requests = 10;
+    c.fault_rate = 1e-2;
+    c.arrival = Arrival::Open { rps: 250.0 };
+    let rep = serve(&c).unwrap();
+    assert_eq!(rep.results.len(), 10);
+    // last arrival is scheduled 9/250 = 36 ms after the generator's
+    // clock origin; the 12 ms slack absorbs scheduler skew between the
+    // generator's and collector's barrier wake-ups on loaded CI runners
+    assert!(rep.wall_secs >= 24.0 / 1000.0, "paced by the arrival schedule");
+    assert_eq!(rep.output_nans_total(), 0);
+}

@@ -1,5 +1,5 @@
 //! Property tests (in-repo `testutil::prop`, proptest unavailable offline)
-//! over the substrate invariants DESIGN.md §6 calls out.
+//! over the substrate invariants DESIGN.md §2's layer map calls out.
 
 use nanrepair::approxmem::ecc::{decode, encode, flip_codeword_bit, Decoded};
 use nanrepair::approxmem::injector::{InjectionSpec, Injector};
