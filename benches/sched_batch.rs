@@ -13,13 +13,24 @@
 //! request path.  The printed `throughput` blocks give the cells/s (or
 //! req/s) and the speedup vs 1 worker.
 //!
+//! Two overload/planning variants ride along: `serve_shed` saturates the
+//! server against a tight deadline (shed + graceful-drain path) and
+//! `capacity_model/knee` times one full deterministic knee search
+//! (`nanrepair capacity`'s model mode).
+//!
 //! `cargo bench --bench sched_batch` (env NANREPAIR_BENCH_QUICK=1 for CI,
 //! NANREPAIR_SCHED_CELLS=N to override the batch size,
 //! NANREPAIR_BENCH_JSON=FILE to write the records as a JSON baseline).
+//! CI diffs the emitted baseline against the committed
+//! `benches/BENCH_sched.baseline.json` via `nanrepair bench-diff` and
+//! fails on a >30 % mean-time slowdown per bench; refresh the committed
+//! file from the CI artifact when the suite or the hardware profile
+//! changes.
 
 use nanrepair::approxmem::injector::InjectionSpec;
 use nanrepair::bench::{Bench, Runner};
 use nanrepair::coordinator::campaign::CampaignConfig;
+use nanrepair::coordinator::capacity::{self, CapacityConfig};
 use nanrepair::coordinator::protection::Protection;
 use nanrepair::coordinator::scheduler;
 use nanrepair::coordinator::server::{self, Arrival, ServeConfig};
@@ -125,6 +136,53 @@ fn main() {
     // sized to keep that fixed cost a small fraction of the sample.
     let serve_requests = if r.is_quick() { 32 } else { 64 };
     let served = serve_sweep(&mut r, serve_requests, n);
+    // overload control: the same serve path saturated by an open-loop
+    // burst against a tight deadline, so every sample exercises the
+    // shed (plant + patch-back) and graceful-drain machinery
+    r.bench(
+        &format!("serve_shed{serve_requests}x{n}/workers4"),
+        Bench::new(move || {
+            let rep = server::serve(&ServeConfig {
+                workload: WorkloadKind::MatMul { n },
+                protection: Protection::RegisterMemory,
+                requests: serve_requests,
+                workers: 4,
+                queue_depth: 8,
+                fault_rate: 1e-3,
+                seed: 42,
+                arrival: Arrival::Open { rps: 1e6 },
+                deadline: Some(100e-6),
+                ..Default::default()
+            })
+            .expect("shed serve runs");
+            assert_eq!(rep.queue_residue, 0);
+        })
+        .samples(5)
+        .budget(2.0),
+    );
+    // capacity: one full knee search in deterministic model mode — the
+    // planning path is pure virtual-time simulation, so this times the
+    // search machinery itself (ramp + bisection + record assembly)
+    r.bench(
+        "capacity_model/knee",
+        Bench::new(|| {
+            let rep = capacity::plan(
+                &CapacityConfig {
+                    workloads: vec![WorkloadKind::MatMul { n: 64 }],
+                    requests: 200,
+                    warmup: 20,
+                    serve_workers: 2,
+                    fault_rates: vec![1e-3],
+                    ..Default::default()
+                },
+                1,
+            )
+            .expect("capacity plan runs");
+            assert!(rep.outcomes[0].knee_rps > 0.0);
+        })
+        .samples(5)
+        .budget(1.0),
+    );
     r.finish();
 
     print_throughput("non-trap throughput", "cells/s", &plain);

@@ -19,7 +19,9 @@
 
 use std::time::Instant;
 
-use crate::util::report::{OutputFormat, Record, ResultSink};
+use anyhow::Result;
+
+use crate::util::report::{Json, OutputFormat, Record, ResultSink};
 use crate::util::stats::Summary;
 use crate::util::table::{fmt_secs, Table};
 
@@ -186,6 +188,181 @@ impl Runner {
     }
 }
 
+// ---- baseline diffing (CI's perf-regression gate) ------------------------
+
+/// One bench's baseline-vs-current comparison.
+#[derive(Debug, Clone)]
+pub struct BenchDelta {
+    /// Bench name (the record's `bench` field).
+    pub bench: String,
+    /// Committed baseline mean seconds.
+    pub baseline_secs: f64,
+    /// Freshly measured mean seconds.
+    pub current_secs: f64,
+    /// `current / baseline` mean-time ratio — above 1 is slower, and
+    /// time-per-op slowing by X is exactly throughput (cells/s, req/s)
+    /// dropping by X/(1+X).
+    pub ratio: f64,
+    /// Did the slowdown exceed the tolerance?
+    pub regressed: bool,
+}
+
+/// Result of comparing a fresh bench JSON-lines file against a committed
+/// baseline (see [`diff_baselines`]).
+#[derive(Debug, Clone)]
+pub struct BenchDiff {
+    /// Per-bench comparisons, in baseline order.
+    pub deltas: Vec<BenchDelta>,
+    /// Baseline benches the current run did not produce — a dropped
+    /// bench fails the gate (silent coverage loss looks like a pass).
+    pub missing_in_current: Vec<String>,
+    /// Current benches with no baseline yet (fine: commit a refreshed
+    /// baseline to start tracking them).
+    pub new_in_current: Vec<String>,
+    /// Tolerated relative slowdown before a delta counts as regressed.
+    pub max_regress: f64,
+}
+
+impl BenchDiff {
+    /// Deltas that exceeded the tolerance.
+    pub fn regressions(&self) -> Vec<&BenchDelta> {
+        self.deltas.iter().filter(|d| d.regressed).collect()
+    }
+
+    /// Should the CI gate fail?
+    pub fn failed(&self) -> bool {
+        !self.regressions().is_empty() || !self.missing_in_current.is_empty()
+    }
+
+    /// One `bench_diff` record per compared bench plus a
+    /// `bench_diff_summary`.
+    pub fn records(&self) -> Vec<Record> {
+        let mut out: Vec<Record> = self
+            .deltas
+            .iter()
+            .map(|d| {
+                Record::new("bench_diff")
+                    .field("bench", d.bench.as_str())
+                    .field("baseline_secs", d.baseline_secs)
+                    .field("current_secs", d.current_secs)
+                    .field("ratio", d.ratio)
+                    .field("regressed", d.regressed)
+            })
+            .collect();
+        out.push(
+            Record::new("bench_diff_summary")
+                .field("compared", self.deltas.len())
+                .field("regressions", self.regressions().len())
+                .field("missing_in_current", self.missing_in_current.len())
+                .field("new_in_current", self.new_in_current.len())
+                .field("max_regress", self.max_regress)
+                .field("failed", self.failed()),
+        );
+        out
+    }
+
+    /// Human summary table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "bench baseline diff (fail above {:.0} % slowdown)",
+                self.max_regress * 100.0
+            ),
+            &["bench", "baseline", "current", "ratio", "verdict"],
+        );
+        for d in &self.deltas {
+            t.row(&[
+                d.bench.clone(),
+                fmt_secs(d.baseline_secs),
+                fmt_secs(d.current_secs),
+                format!("{:.2}x", d.ratio),
+                if d.regressed { "REGRESSED".into() } else { "ok".into() },
+            ]);
+        }
+        for m in &self.missing_in_current {
+            t.row(&[m.clone(), "-".into(), "MISSING".into(), "-".into(), "FAIL".into()]);
+        }
+        for n in &self.new_in_current {
+            t.row(&[n.clone(), "NEW".into(), "-".into(), "-".into(), "ok".into()]);
+        }
+        t
+    }
+}
+
+/// Load `(bench, mean_secs)` pairs from a JSON-lines bench file (the
+/// format [`Runner::finish`] writes under `NANREPAIR_BENCH_JSON`).
+pub fn load_bench_json(path: &str) -> Result<Vec<(String, f64)>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading bench baseline {path}: {e}"))?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let rec = Record::from_json(&Json::parse(line).map_err(|e| {
+            anyhow::anyhow!("{path}:{}: {e}", lineno + 1)
+        })?)?;
+        if rec.kind() != "bench" {
+            continue;
+        }
+        let bench = rec
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("{path}:{}: bench record without a name", lineno + 1))?
+            .to_string();
+        let mean = rec
+            .get("mean_secs")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("{path}:{}: bench record without mean_secs", lineno + 1))?;
+        anyhow::ensure!(
+            mean.is_finite() && mean >= 0.0,
+            "{path}:{}: mean_secs must be a non-negative number",
+            lineno + 1
+        );
+        out.push((bench, mean));
+    }
+    anyhow::ensure!(!out.is_empty(), "{path}: no bench records");
+    Ok(out)
+}
+
+/// Compare a fresh run against the committed baseline: a bench regresses
+/// when its mean time slows down by more than `max_regress` (relative),
+/// i.e. its throughput drops below `1/(1+max_regress)` of the baseline.
+pub fn diff_baselines(
+    baseline: &[(String, f64)],
+    current: &[(String, f64)],
+    max_regress: f64,
+) -> BenchDiff {
+    let mut deltas = Vec::new();
+    let mut missing = Vec::new();
+    for (bench, base_secs) in baseline {
+        match current.iter().find(|(b, _)| b == bench) {
+            None => missing.push(bench.clone()),
+            Some((_, cur_secs)) => {
+                let ratio = cur_secs / base_secs;
+                deltas.push(BenchDelta {
+                    bench: bench.clone(),
+                    baseline_secs: *base_secs,
+                    current_secs: *cur_secs,
+                    ratio,
+                    regressed: ratio > 1.0 + max_regress,
+                });
+            }
+        }
+    }
+    let new_in_current = current
+        .iter()
+        .filter(|(b, _)| !baseline.iter().any(|(bb, _)| bb == b))
+        .map(|(b, _)| b.clone())
+        .collect();
+    BenchDiff {
+        deltas,
+        missing_in_current: missing,
+        new_in_current,
+        max_regress,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,5 +388,57 @@ mod tests {
         let t0 = Instant::now();
         r.bench("noop", Bench::new(|| {}).budget(10.0));
         assert!(t0.elapsed().as_secs_f64() < 2.0, "quick mode must cap");
+    }
+
+    fn named(pairs: &[(&str, f64)]) -> Vec<(String, f64)> {
+        pairs.iter().map(|(b, s)| (b.to_string(), *s)).collect()
+    }
+
+    #[test]
+    fn diff_flags_only_real_regressions() {
+        let base = named(&[("a/1", 1.0), ("b/1", 0.5), ("gone", 0.1)]);
+        let cur = named(&[("a/1", 1.2), ("b/1", 0.9), ("fresh", 0.2)]);
+        let d = diff_baselines(&base, &cur, 0.30);
+        assert_eq!(d.deltas.len(), 2);
+        assert!(!d.deltas[0].regressed, "20 % slower is inside a 30 % budget");
+        assert!(d.deltas[1].regressed, "80 % slower is a regression");
+        assert_eq!(d.missing_in_current, vec!["gone".to_string()]);
+        assert_eq!(d.new_in_current, vec!["fresh".to_string()]);
+        assert!(d.failed());
+
+        let fine = diff_baselines(&base[..2], &cur[..1], 0.30);
+        assert!(fine.failed(), "dropped bench b/1 must fail the gate");
+        let ok = diff_baselines(&base[..1], &cur, 0.30);
+        assert!(!ok.failed(), "speedups and new benches pass");
+
+        let recs = d.records();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].kind(), "bench_diff");
+        assert_eq!(recs[2].kind(), "bench_diff_summary");
+        assert_eq!(recs[2].get("failed").and_then(Json::as_bool), Some(true));
+        assert_eq!(d.table().n_rows(), 4, "2 compared + 1 missing + 1 new");
+    }
+
+    #[test]
+    fn bench_json_round_trips_through_the_runner_sink() {
+        // write_json is called directly instead of through the
+        // NANREPAIR_BENCH_JSON env hook: mutating the process environment
+        // would race concurrent tests' getenv on glibc.
+        let path = std::env::temp_dir().join(format!(
+            "nanrepair_bench_diff_{}.jsonl",
+            std::process::id()
+        ));
+        let path_str = path.to_str().unwrap().to_string();
+        let mut r = Runner::new("difftest", true);
+        r.bench("noop/1", Bench::new(|| {}).samples(3).budget(0.01));
+        r.write_json(&path_str).unwrap();
+
+        let loaded = load_bench_json(&path_str).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].0, "noop/1");
+        assert!(loaded[0].1 >= 0.0);
+
+        assert!(load_bench_json("/nonexistent/bench.jsonl").is_err());
     }
 }

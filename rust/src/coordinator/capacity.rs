@@ -1,0 +1,1039 @@
+//! Capacity planning: find the **SLO knee** — the maximum open-loop
+//! arrival rate at which a serving configuration still meets its p99 and
+//! shed-rate targets — per `(workload, protection, fault_rate)` cell
+//! (the `nanrepair capacity` subcommand, DESIGN.md §4.1).
+//!
+//! "Negligible overhead" only means something relative to a sustainable
+//! operating point: EDEN-style approximate-DRAM serving lives or dies on
+//! picking the right error-rate/performance point per configuration, and
+//! for a server that point is the knee of the latency-vs-load curve.
+//! This module answers the production question the serve harness alone
+//! cannot: *how much traffic can this protection policy carry?*
+//!
+//! ## Search
+//!
+//! For each configuration cell the planner probes an arrival-rate
+//! schedule: a **geometric ramp** (rate doubles from
+//! [`CapacityConfig::min_rps`] until the SLO first fails or
+//! [`CapacityConfig::max_rps`] is reached) followed by **geometric-mean
+//! bisection** of the pass/fail bracket until its relative width is
+//! within [`CapacityConfig::tolerance`].  Every probe emits a
+//! `capacity_point` record; the per-cell verdict is a `capacity_knee`
+//! record whose knee is, by construction, bracketed by a passing probe
+//! at the knee rate and a failing probe above it.
+//!
+//! ## Probes: deterministic model vs live
+//!
+//! A probe at rate *R* replays the exact request stream a live
+//! `serve` run at *R* would see: doses from the fault injector's
+//! `server::dose_stream` and placements from the same per-request
+//! seeds, derived from `(seed, rate_index, request_index)` — so the
+//! fault ledger of probe *k* is identical at any worker count and in
+//! both probe modes.
+//!
+//! * [`ProbeMode::Model`] (default): a discrete-event simulation of the
+//!   server in **virtual time** — same bounded queue with generator
+//!   backpressure, same FIFO multi-worker dequeue, same
+//!   deadline-shedding rule — with per-request service times from a
+//!   deterministic [`ServiceModel`].  Same seed ⇒ byte-identical
+//!   records, at any `--workers`, on any machine load; this is what
+//!   makes capacity planning reproducible and testable.
+//! * [`ProbeMode::Live`]: each probe drives a real
+//!   [`crate::coordinator::server::serve`] run (wall-clock latencies,
+//!   real trap costs).  Verdicts inherit machine noise; use it to
+//!   calibrate or validate the model on target hardware.
+//!
+//! Warmup requests are excluded from the measured quantiles in both
+//! modes.  The configuration matrix itself fans out through
+//! [`crate::coordinator::scheduler::run_batch_fn`], so a
+//! protections × fault-rates × workloads sweep uses every scheduler
+//! worker while each cell's knee search stays sequential (probe *k+1*'s
+//! rate depends on probe *k*'s verdict).
+
+use anyhow::Result;
+
+use crate::repair::policy::RepairPolicy;
+use crate::util::report::Record;
+use crate::util::stats::percentile_sorted;
+use crate::util::table::Table;
+use crate::workloads::WorkloadKind;
+
+use super::protection::Protection;
+use super::scheduler;
+use super::server::{self, Arrival, ServeConfig};
+use super::session::ensure_servable;
+
+/// Hard cap on probes per cell: a ramp over 10 decades plus a bisection
+/// to sub-percent tolerance stays well under it, and it bounds the cost
+/// of a live-mode search.
+const MAX_PROBES: usize = 40;
+
+/// How a capacity probe measures a rate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeMode {
+    /// Virtual-time discrete-event simulation with a deterministic
+    /// [`ServiceModel`] — byte-identical results from the seed alone.
+    Model,
+    /// Real `serve` runs — wall-clock truth, machine-dependent verdicts.
+    Live,
+}
+
+impl ProbeMode {
+    /// The mode's record label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProbeMode::Model => "model",
+            ProbeMode::Live => "live",
+        }
+    }
+}
+
+/// Open-loop arrival shape the knee is measured under (the probe supplies
+/// the rate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalShape {
+    /// Uniform schedule (`open:RPS`).
+    Uniform,
+    /// Poisson process (`poisson:RPS`) — bursty, the honest shape for
+    /// uncoordinated client traffic.
+    Poisson,
+}
+
+impl ArrivalShape {
+    /// Parse `open`/`uniform` or `poisson`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "open" | "uniform" => Ok(ArrivalShape::Uniform),
+            "poisson" => Ok(ArrivalShape::Poisson),
+            other => anyhow::bail!("unknown arrival shape {other:?} (open | poisson)"),
+        }
+    }
+
+    /// The shape's record label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalShape::Uniform => "open",
+            ArrivalShape::Poisson => "poisson",
+        }
+    }
+
+    /// The [`Arrival`] process at `rps`.
+    pub fn arrival(&self, rps: f64) -> Arrival {
+        match self {
+            ArrivalShape::Uniform => Arrival::Open { rps },
+            ArrivalShape::Poisson => Arrival::Poisson { rps },
+        }
+    }
+}
+
+/// Deterministic per-request service-time model for [`ProbeMode::Model`]
+/// probes: a fixed dispatch overhead, compute at a nominal FLOP rate, a
+/// per-trap cost, and a per-word scrub-sweep cost.  The constants are
+/// deliberately round placeholders for a mid-range core — the knee's
+/// *shape* (where queueing blows the tail, how protections rank) is what
+/// the model reproduces; calibrate against a [`ProbeMode::Live`] run
+/// when absolute rates matter.
+///
+/// The model is protection-aware with the same mechanics as the real
+/// trap layer: `none` pays no trap cost (NaNs propagate silently),
+/// `memory` traps once per planted NaN, `register` re-traps every
+/// resident NaN on every later request (they persist in memory), and
+/// `scrub:K` pays a full-pool sweep every K served requests per worker.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceModel {
+    /// Modeled compute rate in GFLOP/s.
+    pub gflops: f64,
+    /// Fixed per-request dispatch overhead (arming, queue hand-off), in
+    /// seconds.
+    pub base_secs: f64,
+    /// Cost per trap round-trip (decode, repair, resume), in seconds.
+    pub trap_secs: f64,
+    /// Fixed cost of the shed path (plant + patch bookkeeping), in
+    /// seconds, on top of `trap_secs` per planted word.
+    pub shed_base_secs: f64,
+    /// Scrub-sweep cost per resident word, in seconds (paid every
+    /// `scrub:K` cadence hit).
+    pub scrub_word_secs: f64,
+}
+
+impl Default for ServiceModel {
+    fn default() -> Self {
+        Self {
+            gflops: 1.0,
+            base_secs: 20e-6,
+            trap_secs: 4e-6,
+            shed_base_secs: 2e-6,
+            scrub_word_secs: 2e-9,
+        }
+    }
+}
+
+impl ServiceModel {
+    /// Modeled protected-window seconds for one served request that
+    /// takes `traps` traps plus `scrub_words` swept words.
+    pub fn service_secs(&self, workload: WorkloadKind, traps: u64, scrub_words: u64) -> f64 {
+        self.base_secs
+            + workload.flops() as f64 / (self.gflops * 1e9)
+            + traps as f64 * self.trap_secs
+            + scrub_words as f64 * self.scrub_word_secs
+    }
+
+    /// Modeled seconds for the shed path (O(dose) plant-and-patch).
+    pub fn shed_secs(&self, planted: u64) -> f64 {
+        self.shed_base_secs + planted as f64 * self.trap_secs
+    }
+}
+
+/// Full description of one capacity-planning run: the configuration
+/// matrix plus the shared probe/SLO knobs.
+#[derive(Debug, Clone)]
+pub struct CapacityConfig {
+    /// Resident workloads to plan for (matmul/matvec — the servable set).
+    pub workloads: Vec<WorkloadKind>,
+    /// Protection schemes to plan for.
+    pub protections: Vec<Protection>,
+    /// Per-word NaN-upset probabilities per request interval.
+    pub fault_rates: Vec<f64>,
+    /// Repair-value policy for trap repairs and shed patch-backs.
+    pub policy: RepairPolicy,
+    /// Requests per probe, warmup included.
+    pub requests: usize,
+    /// Leading requests excluded from each probe's measured quantiles.
+    pub warmup: usize,
+    /// Serving workers inside each probe (a *fixed* per-probe knob — the
+    /// CLI's global `--workers` parallelizes the configuration matrix,
+    /// never the probes, so knees are comparable across invocations).
+    pub serve_workers: usize,
+    /// Bounded request-queue capacity inside each probe.
+    pub queue_depth: usize,
+    /// PRNG seed; every probe derives its doses/placements/arrivals from
+    /// `(seed, rate_index, request_index)`.
+    pub seed: u64,
+    /// p99 latency target in seconds (the knee's first axis).
+    pub slo_p99: f64,
+    /// Maximum tolerable shed fraction (the knee's second axis — without
+    /// it a shedding server could "meet" any latency target).
+    pub slo_shed: f64,
+    /// Per-request deadline in seconds; `None` defaults to the SLO
+    /// budget (`slo_p99`).
+    pub deadline: Option<f64>,
+    /// Lowest rate probed (the ramp's origin).
+    pub min_rps: f64,
+    /// Ramp ceiling: a knee reported at this rate means the search hit
+    /// the ceiling without failing (`ceiling = true` on the record).
+    pub max_rps: f64,
+    /// Relative bracket width at which bisection stops.
+    pub tolerance: f64,
+    /// Arrival shape probes are paced with.
+    pub arrival: ArrivalShape,
+    /// Deterministic model or live wall-clock probes.
+    pub mode: ProbeMode,
+    /// Service-time model for [`ProbeMode::Model`] probes.
+    pub model: ServiceModel,
+}
+
+impl Default for CapacityConfig {
+    fn default() -> Self {
+        Self {
+            workloads: vec![WorkloadKind::MatMul { n: 64 }],
+            protections: vec![Protection::RegisterMemory],
+            fault_rates: vec![1e-4],
+            policy: RepairPolicy::Zero,
+            requests: 200,
+            warmup: 20,
+            serve_workers: 2,
+            queue_depth: 32,
+            seed: 42,
+            slo_p99: 0.005,
+            slo_shed: 0.01,
+            deadline: None,
+            min_rps: 50.0,
+            max_rps: 100_000.0,
+            tolerance: 0.05,
+            arrival: ArrivalShape::Uniform,
+            mode: ProbeMode::Model,
+        }
+    }
+}
+
+impl CapacityConfig {
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.workloads.is_empty(), "capacity needs at least one workload");
+        anyhow::ensure!(
+            !self.protections.is_empty(),
+            "capacity needs at least one protection"
+        );
+        anyhow::ensure!(
+            !self.fault_rates.is_empty(),
+            "capacity needs at least one fault rate"
+        );
+        for &w in &self.workloads {
+            for &p in &self.protections {
+                ensure_servable(w, p)?;
+            }
+        }
+        for &f in &self.fault_rates {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&f),
+                "fault rate {f} is a per-word probability in [0, 1]"
+            );
+        }
+        anyhow::ensure!(self.requests > 0, "capacity needs at least one request per probe");
+        anyhow::ensure!(
+            self.warmup < self.requests,
+            "warmup ({}) must leave at least one measured request of {}",
+            self.warmup,
+            self.requests
+        );
+        anyhow::ensure!(self.serve_workers >= 1, "probes need at least one serving worker");
+        anyhow::ensure!(self.queue_depth >= 1, "queue depth must be >= 1");
+        anyhow::ensure!(
+            self.slo_p99 > 0.0 && self.slo_p99.is_finite(),
+            "--slo-p99 target must be positive and finite"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.slo_shed),
+            "--slo-shed is a fraction in [0, 1]"
+        );
+        if let Some(d) = self.deadline {
+            anyhow::ensure!(d > 0.0 && d.is_finite(), "--deadline must be positive and finite");
+        }
+        anyhow::ensure!(
+            self.min_rps > 0.0 && self.min_rps.is_finite(),
+            "--min-rps must be positive and finite"
+        );
+        anyhow::ensure!(
+            self.max_rps >= self.min_rps && self.max_rps.is_finite(),
+            "--max-rps must be finite and >= --min-rps"
+        );
+        anyhow::ensure!(
+            self.tolerance > 0.0 && self.tolerance < 1.0,
+            "--tolerance is a relative bracket width in (0, 1)"
+        );
+        Ok(())
+    }
+
+    /// Per-request deadline: explicit, or the SLO budget.
+    fn effective_deadline(&self) -> f64 {
+        self.deadline.unwrap_or(self.slo_p99)
+    }
+
+    /// The configuration matrix, in deterministic
+    /// workload-major × protection × fault-rate order.
+    fn cells(&self) -> Vec<CapacityCell> {
+        let mut cells = Vec::new();
+        for &workload in &self.workloads {
+            for &protection in &self.protections {
+                for &fault_rate in &self.fault_rates {
+                    cells.push(CapacityCell {
+                        workload,
+                        protection,
+                        fault_rate,
+                        shared: self.clone(),
+                    });
+                }
+            }
+        }
+        cells
+    }
+}
+
+/// One cell of the capacity matrix: a concrete
+/// `(workload, protection, fault_rate)` triple plus the shared knobs.
+#[derive(Debug, Clone)]
+struct CapacityCell {
+    workload: WorkloadKind,
+    protection: Protection,
+    fault_rate: f64,
+    shared: CapacityConfig,
+}
+
+impl CapacityCell {
+    /// `workload/protection@shape×rate`-style label shared by all of the
+    /// cell's records.
+    fn label(&self) -> String {
+        format!(
+            "{}/{}/f{:e}@{}",
+            self.workload,
+            self.protection.name(),
+            self.fault_rate,
+            self.shared.arrival.name()
+        )
+    }
+}
+
+/// What one probe measured at one arrival rate.
+#[derive(Debug, Clone)]
+pub struct ProbePoint {
+    /// Position in the cell's probe schedule (doses derive from it).
+    pub rate_index: usize,
+    /// Offered arrival rate, requests/second.
+    pub rps: f64,
+    /// Requests served (measured window).
+    pub served: u64,
+    /// Requests shed (measured window).
+    pub shed: u64,
+    /// Shed fraction over the measured window.
+    pub shed_frac: f64,
+    /// Exact p99 latency over measured served requests, seconds.
+    pub p99_secs: f64,
+    /// Served requests per second over the probe's serving window.
+    pub throughput_rps: f64,
+    /// Total NaN dose the fault process issued (whole probe).
+    pub dose_total: u64,
+    /// Total distinct NaN words planted (whole probe).
+    pub nans_planted: u64,
+    /// Highest queue occupancy observed.
+    pub queue_highwater: usize,
+    /// Did the probe meet the SLO (p99 and shed budget)?
+    pub pass: bool,
+}
+
+impl ProbePoint {
+    fn to_record(&self, label: &str, mode: ProbeMode) -> Record {
+        Record::new("capacity_point")
+            .field("label", label)
+            .field("mode", mode.name())
+            .field("rate_index", self.rate_index)
+            .field("rps", self.rps)
+            .field("served", self.served)
+            .field("shed", self.shed)
+            .field("shed_frac", self.shed_frac)
+            .field("p99_secs", self.p99_secs)
+            .field("throughput_rps", self.throughput_rps)
+            .field("dose_total", self.dose_total)
+            .field("nans_planted", self.nans_planted)
+            .field("queue_highwater", self.queue_highwater)
+            .field("pass", self.pass)
+    }
+}
+
+/// The knee search's result for one configuration cell.
+#[derive(Debug, Clone)]
+pub struct CapacityOutcome {
+    /// The cell's record label.
+    pub label: String,
+    /// Resident workload of the cell.
+    pub workload: WorkloadKind,
+    /// Protection scheme of the cell.
+    pub protection: Protection,
+    /// Fault rate of the cell.
+    pub fault_rate: f64,
+    /// Every probe, in schedule order.
+    pub points: Vec<ProbePoint>,
+    /// The knee: highest probed rate that met the SLO (0 when even
+    /// `min_rps` failed).
+    pub knee_rps: f64,
+    /// Lowest probed rate that failed the SLO (`None` when the search
+    /// hit `max_rps` without failing).
+    pub fail_rps: Option<f64>,
+    /// True when the knee equals `max_rps` because nothing failed — the
+    /// real knee is above the ramp ceiling.
+    pub ceiling: bool,
+}
+
+impl CapacityOutcome {
+    /// The probe that measured the knee rate (absent when `knee_rps` is
+    /// 0 — nothing passed).
+    pub fn knee_point(&self) -> Option<&ProbePoint> {
+        self.points.iter().find(|p| p.pass && p.rps == self.knee_rps)
+    }
+
+    /// The cell's `capacity_knee` summary record.
+    pub fn knee_record(&self, cfg: &CapacityConfig) -> Record {
+        let mut rec = Record::new("capacity_knee")
+            .field("label", self.label.as_str())
+            .field("workload", self.workload.to_string())
+            .field("protection", self.protection.name())
+            .field("fault_rate", self.fault_rate)
+            .field("arrival", cfg.arrival.name())
+            .field("mode", cfg.mode.name())
+            .field("serve_workers", cfg.serve_workers)
+            .field("queue_depth", cfg.queue_depth)
+            .field("requests", cfg.requests)
+            .field("warmup", cfg.warmup)
+            .field("seed", cfg.seed)
+            .field("slo_p99_secs", cfg.slo_p99)
+            .field("slo_shed", cfg.slo_shed)
+            .field("deadline_secs", cfg.effective_deadline())
+            .field("probes", self.points.len())
+            .field("knee_rps", self.knee_rps)
+            .field("ceiling", self.ceiling);
+        if let Some(f) = self.fail_rps {
+            rec = rec.field("fail_rps", f);
+        }
+        if let Some(p) = self.knee_point() {
+            rec = rec
+                .field("knee_p99_secs", p.p99_secs)
+                .field("knee_shed_frac", p.shed_frac)
+                .field("knee_throughput_rps", p.throughput_rps);
+        }
+        rec
+    }
+}
+
+/// What a capacity-planning run produced: one outcome per configuration
+/// cell, in matrix order.
+#[derive(Debug, Clone)]
+pub struct CapacityReport {
+    /// The planning configuration the run used.
+    pub config: CapacityConfig,
+    /// Per-cell outcomes (workload-major matrix order).
+    pub outcomes: Vec<CapacityOutcome>,
+}
+
+impl CapacityReport {
+    /// The full record stream: per cell, every `capacity_point` in probe
+    /// order followed by its `capacity_knee`.
+    pub fn records(&self) -> Vec<Record> {
+        let mut out = Vec::new();
+        for o in &self.outcomes {
+            for p in &o.points {
+                out.push(p.to_record(&o.label, self.config.mode));
+            }
+            out.push(o.knee_record(&self.config));
+        }
+        out
+    }
+
+    /// The human knee table (default text output).
+    pub fn knee_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "capacity knees — slo p99 {:.3} ms, shed <= {:.2} % ({} probes)",
+                self.config.slo_p99 * 1e3,
+                self.config.slo_shed * 100.0,
+                self.config.mode.name()
+            ),
+            &["config", "knee rps", "p99 @ knee", "shed @ knee", "probes", "ceiling"],
+        );
+        for o in &self.outcomes {
+            let (p99, shed) = o
+                .knee_point()
+                .map(|p| {
+                    (
+                        format!("{:.3} ms", p.p99_secs * 1e3),
+                        format!("{:.2} %", p.shed_frac * 100.0),
+                    )
+                })
+                .unwrap_or_else(|| ("-".into(), "-".into()));
+            t.row(&[
+                o.label.clone(),
+                format!("{:.1}", o.knee_rps),
+                p99,
+                shed,
+                o.points.len().to_string(),
+                if o.ceiling { "yes".into() } else { "no".into() },
+            ]);
+        }
+        t
+    }
+}
+
+/// Seed for probe `rate_index` of a run seeded `seed`: every probe gets
+/// an independent, reproducible dose/placement/arrival stream.
+fn probe_seed(seed: u64, rate_index: usize) -> u64 {
+    seed.wrapping_add((rate_index as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+}
+
+/// Run the capacity-planning matrix; `matrix_workers` parallelizes the
+/// configuration cells (never the probes inside a cell).
+pub fn plan(cfg: &CapacityConfig, matrix_workers: usize) -> Result<CapacityReport> {
+    cfg.validate()?;
+    // In live mode every concurrent cell's probe spawns `serve_workers`
+    // trap-arming threads, so unchecked matrix parallelism could claim
+    // more than the NUM_DOMAINS trap-domain slots at once (the scheduler
+    // cap assumes one domain per worker) and panic mid-search.  Clamp so
+    // concurrent domain claims stay within the table; model probes arm
+    // nothing and keep full matrix parallelism.
+    let matrix_workers = match cfg.mode {
+        ProbeMode::Model => matrix_workers,
+        ProbeMode::Live => {
+            matrix_workers.clamp(1, (crate::trap::NUM_DOMAINS / cfg.serve_workers).max(1))
+        }
+    };
+    let cells = cfg.cells();
+    let outcomes = scheduler::run_batch_fn(cells, matrix_workers, |cell, _session| {
+        find_knee(&cell)
+    });
+    let outcomes: Vec<CapacityOutcome> = outcomes.into_iter().collect::<Result<_>>()?;
+    Ok(CapacityReport {
+        config: cfg.clone(),
+        outcomes,
+    })
+}
+
+/// Knee search for one cell: geometric ramp, then geometric-mean
+/// bisection of the pass/fail bracket.
+fn find_knee(cell: &CapacityCell) -> Result<CapacityOutcome> {
+    let cfg = &cell.shared;
+    let mut points: Vec<ProbePoint> = Vec::new();
+    let mut pass_rps: Option<f64> = None;
+    let mut fail_rps: Option<f64> = None;
+
+    // Geometric ramp: double until the first failure or the ceiling.
+    let mut rate = cfg.min_rps;
+    loop {
+        let p = probe(cell, rate, points.len())?;
+        let passed = p.pass;
+        points.push(p);
+        if passed {
+            pass_rps = Some(rate);
+            if rate >= cfg.max_rps {
+                break;
+            }
+            rate = (rate * 2.0).min(cfg.max_rps);
+        } else {
+            fail_rps = Some(rate);
+            break;
+        }
+        if points.len() >= MAX_PROBES {
+            break;
+        }
+    }
+
+    // Bisection: geometric midpoints (rates live on a log scale) until
+    // the bracket is relatively tight.
+    while let (Some(lo), Some(hi)) = (pass_rps, fail_rps) {
+        if points.len() >= MAX_PROBES || hi - lo <= cfg.tolerance * hi {
+            break;
+        }
+        let mid = (lo * hi).sqrt();
+        if mid <= lo || mid >= hi {
+            break; // bracket narrower than f64 resolution
+        }
+        let p = probe(cell, mid, points.len())?;
+        if p.pass {
+            pass_rps = Some(mid);
+        } else {
+            fail_rps = Some(mid);
+        }
+        points.push(p);
+    }
+
+    let knee_rps = pass_rps.unwrap_or(0.0);
+    Ok(CapacityOutcome {
+        label: cell.label(),
+        workload: cell.workload,
+        protection: cell.protection,
+        fault_rate: cell.fault_rate,
+        points,
+        knee_rps,
+        fail_rps,
+        ceiling: fail_rps.is_none() && pass_rps.is_some(),
+    })
+}
+
+/// One probe at `rps`, in the configured mode.
+fn probe(cell: &CapacityCell, rps: f64, rate_index: usize) -> Result<ProbePoint> {
+    match cell.shared.mode {
+        ProbeMode::Model => Ok(probe_model(cell, rps, rate_index)),
+        ProbeMode::Live => probe_live(cell, rps, rate_index),
+    }
+}
+
+/// Distinct planted words for request `index` of a probe — the exact
+/// placement draw the session's plant path performs
+/// ([`crate::coordinator::session`]'s `dose_indices`), so the model
+/// probe's fault ledger matches a live run's by construction.
+fn planted_words(seed: u64, index: usize, dose: u64, input_words: usize) -> u64 {
+    super::session::dose_indices(input_words, dose, server::request_seed(seed, index)).len() as u64
+}
+
+/// Virtual-time probe: discrete-event simulation of the serving engine
+/// (bounded queue with generator backpressure, FIFO multi-worker
+/// dequeue, deadline shedding) with [`ServiceModel`] service times.
+fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
+    let cfg = &cell.shared;
+    let n = cfg.requests;
+    let seed = probe_seed(cfg.seed, rate_index);
+    let input_words = cell.workload.input_words();
+    let doses = server::dose_stream(seed, input_words as u64, cell.fault_rate, n);
+    let offsets = cfg
+        .arrival
+        .arrival(rps)
+        .offsets(seed, n)
+        .expect("capacity probes are open-loop");
+    let deadline = cfg.effective_deadline();
+    let workers = cfg.serve_workers;
+    let depth = cfg.queue_depth;
+
+    // Virtual clocks: when each serving worker frees up, when each
+    // request was dequeued (the queue slot it occupied frees then), and
+    // when the generator can offer the next request.  Per-worker
+    // resident-NaN and served counters mirror the session state the
+    // protections differ on (register-only NaNs persist and re-trap;
+    // scrub sweeps run on a per-worker served cadence).
+    let mut worker_free = vec![0.0f64; workers];
+    let mut resident_nans = vec![0u64; workers];
+    let mut served_before = vec![0u64; workers];
+    let mut dequeue_at = vec![0.0f64; n];
+    let mut gen_free = 0.0f64;
+
+    let mut served = 0u64;
+    let mut shed = 0u64;
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut dose_total = 0u64;
+    let mut planted_total = 0u64;
+    let mut served_total_all = 0u64;
+    let mut makespan = 0.0f64;
+    let mut highwater = 0usize;
+
+    for i in 0..n {
+        let due = offsets[i];
+        // The generator is sequential and blocks while the queue is at
+        // capacity: request i cannot be offered before request i-depth's
+        // slot was freed by its dequeue.
+        let mut offer = due.max(gen_free);
+        if i >= depth {
+            offer = offer.max(dequeue_at[i - depth]);
+        }
+        gen_free = offer;
+        // Queue occupancy right after this push (offered, not dequeued).
+        let occupancy = (i.saturating_sub(depth)..=i)
+            .filter(|&j| dequeue_at[j] > offer || j == i)
+            .count();
+        highwater = highwater.max(occupancy);
+
+        // FIFO dequeue by the earliest-free worker.
+        let (wi, wfree) = worker_free
+            .iter()
+            .copied()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .expect("at least one worker");
+        let dequeue = offer.max(wfree);
+        dequeue_at[i] = dequeue;
+
+        let dose = doses[i];
+        let planted = planted_words(seed, i, dose, input_words);
+        dose_total += dose;
+        planted_total += planted;
+
+        // The server's shedding rule: deadline already blown at dequeue.
+        // Shedding plants and immediately patches its own dose, so the
+        // worker's resident-NaN count is unchanged.
+        let blown = dequeue - due > deadline;
+        let busy = if blown {
+            cfg.model.shed_secs(planted)
+        } else {
+            let (traps, scrub_words) = match cell.protection {
+                Protection::RegisterMemory => (planted, 0),
+                Protection::RegisterOnly => {
+                    // register-only repairs never reach memory: every
+                    // resident NaN re-traps on every later request
+                    resident_nans[wi] += planted;
+                    (resident_nans[wi], 0)
+                }
+                Protection::Scrub { period_runs } => {
+                    let sweep = period_runs > 0
+                        && served_before[wi] % period_runs as u64 == 0;
+                    (0, if sweep { input_words as u64 } else { 0 })
+                }
+                // None pays nothing (NaNs propagate silently); Ecc/Abft
+                // are rejected by validation before any probe runs.
+                _ => (0, 0),
+            };
+            served_before[wi] += 1;
+            cfg.model.service_secs(cell.workload, traps, scrub_words)
+        };
+        let done = dequeue + busy;
+        worker_free[wi] = done;
+        makespan = makespan.max(done);
+        if !blown {
+            served_total_all += 1;
+        }
+
+        if i >= cfg.warmup {
+            if blown {
+                shed += 1;
+            } else {
+                served += 1;
+                latencies.push(done - due);
+            }
+        }
+    }
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = if latencies.is_empty() {
+        0.0
+    } else {
+        percentile_sorted(&latencies, 0.99)
+    };
+    let measured = served + shed;
+    let shed_frac = if measured == 0 { 0.0 } else { shed as f64 / measured as f64 };
+    let throughput = if makespan > 0.0 {
+        served_total_all as f64 / makespan
+    } else {
+        0.0
+    };
+    let pass = served > 0 && p99 <= cfg.slo_p99 && shed_frac <= cfg.slo_shed;
+
+    ProbePoint {
+        rate_index,
+        rps,
+        served,
+        shed,
+        shed_frac,
+        p99_secs: p99,
+        throughput_rps: throughput,
+        dose_total,
+        nans_planted: planted_total,
+        queue_highwater: highwater,
+        pass,
+    }
+}
+
+/// Live probe: one real `serve` run at `rps`.
+fn probe_live(cell: &CapacityCell, rps: f64, rate_index: usize) -> Result<ProbePoint> {
+    let cfg = &cell.shared;
+    let report = server::serve(&ServeConfig {
+        workload: cell.workload,
+        protection: cell.protection,
+        policy: cfg.policy,
+        requests: cfg.requests,
+        workers: cfg.serve_workers,
+        queue_depth: cfg.queue_depth,
+        fault_rate: cell.fault_rate,
+        seed: probe_seed(cfg.seed, rate_index),
+        arrival: cfg.arrival.arrival(rps),
+        slo_p99: Some(cfg.slo_p99),
+        deadline: Some(cfg.effective_deadline()),
+        warmup: cfg.warmup,
+        slo_shed: Some(cfg.slo_shed),
+    })?;
+    let measured = report.measured();
+    let shed = measured.iter().filter(|r| r.is_shed()).count() as u64;
+    let served = measured.len() as u64 - shed;
+    Ok(ProbePoint {
+        rate_index,
+        rps,
+        served,
+        shed,
+        shed_frac: report.shed_frac(),
+        p99_secs: report.latency_quantile(0.99),
+        throughput_rps: report.throughput_rps(),
+        dose_total: report.dose_total(),
+        nans_planted: report.nans_planted_total(),
+        queue_highwater: report.queue_highwater,
+        pass: report.slo_met() == Some(true),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model_cfg() -> CapacityConfig {
+        CapacityConfig {
+            workloads: vec![WorkloadKind::MatMul { n: 32 }],
+            requests: 80,
+            warmup: 10,
+            serve_workers: 2,
+            queue_depth: 8,
+            min_rps: 100.0,
+            max_rps: 1_000_000.0,
+            fault_rates: vec![1e-3],
+            slo_p99: 0.002,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn model_knee_is_bracketed_and_deterministic() {
+        let a = plan(&model_cfg(), 1).unwrap();
+        let b = plan(&model_cfg(), 4).unwrap();
+        let ra: Vec<String> = a.records().iter().map(Record::render_jsonl).collect();
+        let rb: Vec<String> = b.records().iter().map(Record::render_jsonl).collect();
+        assert_eq!(ra, rb, "matrix worker count must not change a single byte");
+
+        let o = &a.outcomes[0];
+        assert!(o.knee_rps > 0.0, "a 2-worker matmul:32 model carries some load");
+        assert!(!o.ceiling, "1M rps must overload the model");
+        let fail = o.fail_rps.expect("a failing probe above the knee");
+        assert!(fail > o.knee_rps);
+        assert!(
+            o.points.iter().any(|p| p.pass && p.rps == o.knee_rps),
+            "knee measured by a passing probe"
+        );
+        assert!(
+            o.points.iter().any(|p| !p.pass && p.rps == fail),
+            "bracket closed by a failing probe"
+        );
+        // bisection converged
+        assert!(fail - o.knee_rps <= model_cfg().tolerance * fail);
+        // probe doses are per-rate-index deterministic and non-trivial
+        assert!(o.points.iter().all(|p| p.dose_total > 0));
+    }
+
+    #[test]
+    fn model_knee_scales_with_workers_and_budget() {
+        let base = plan(&model_cfg(), 1).unwrap().outcomes[0].knee_rps;
+        let more_workers = plan(
+            &CapacityConfig { serve_workers: 4, ..model_cfg() },
+            1,
+        )
+        .unwrap()
+        .outcomes[0]
+            .knee_rps;
+        assert!(
+            more_workers > base,
+            "4 workers must carry more than 2 ({more_workers} vs {base})"
+        );
+        let tighter = plan(
+            &CapacityConfig { slo_p99: 0.0005, ..model_cfg() },
+            1,
+        )
+        .unwrap()
+        .outcomes[0]
+            .knee_rps;
+        assert!(
+            tighter <= base,
+            "a tighter SLO cannot raise the knee ({tighter} vs {base})"
+        );
+    }
+
+    #[test]
+    fn saturating_model_probe_sheds_and_saturates_the_queue() {
+        let cfg = model_cfg();
+        let cells = cfg.cells();
+        let cell = &cells[0];
+        let p = probe(cell, 1e6, 0).unwrap();
+        assert!(!p.pass);
+        assert!(p.shed > 0, "far past the knee the deadline sheds");
+        assert_eq!(
+            p.queue_highwater, cfg.queue_depth,
+            "overload saturates the bounded queue"
+        );
+        let calm = probe(cell, cfg.min_rps, 1).unwrap();
+        assert!(calm.pass);
+        assert_eq!(calm.shed, 0);
+    }
+
+    #[test]
+    fn poisson_shape_finds_a_deterministic_knee() {
+        let cfg = CapacityConfig { arrival: ArrivalShape::Poisson, ..model_cfg() };
+        let a = plan(&cfg, 1).unwrap();
+        let b = plan(&cfg, 4).unwrap();
+        let ra: Vec<String> = a.records().iter().map(Record::render_jsonl).collect();
+        let rb: Vec<String> = b.records().iter().map(Record::render_jsonl).collect();
+        assert_eq!(ra, rb, "bursty arrivals are still seed-deterministic");
+        let o = &a.outcomes[0];
+        assert!(o.knee_rps > 0.0 && !o.ceiling);
+        assert!(o.fail_rps.unwrap() > o.knee_rps);
+    }
+
+    #[test]
+    fn protection_order_shows_in_the_knees() {
+        // Same probe ladder, protection-only differences in modeled
+        // service time: no protection can't fall below register+memory
+        // (one trap per NaN), which can't fall below register-only
+        // (resident NaNs re-trap on every later request).  The 1e-3
+        // fault rate keeps register-only's accumulating trap bill below
+        // the SLO at low rates, so its knee stays nonzero.
+        let cfg = |p: Protection| CapacityConfig {
+            protections: vec![p],
+            ..model_cfg()
+        };
+        let knee = |p| plan(&cfg(p), 1).unwrap().outcomes[0].knee_rps;
+        let none = knee(Protection::None);
+        let memory = knee(Protection::RegisterMemory);
+        let register = knee(Protection::RegisterOnly);
+        assert!(none >= memory, "trap-free baseline carries the most ({none} vs {memory})");
+        assert!(
+            memory >= register,
+            "re-trapping register-only cannot beat one-trap-per-NaN ({memory} vs {register})"
+        );
+        assert!(register > 0.0);
+    }
+
+    #[test]
+    fn matrix_emits_points_then_knee_per_cell() {
+        let cfg = CapacityConfig {
+            protections: vec![Protection::RegisterMemory, Protection::None],
+            fault_rates: vec![0.0, 1e-3],
+            ..model_cfg()
+        };
+        let rep = plan(&cfg, 2).unwrap();
+        assert_eq!(rep.outcomes.len(), 4, "2 protections × 2 fault rates");
+        // multi-cell determinism: a 4-worker matrix interleaves cell
+        // execution, but the record stream must not move a byte
+        let serial = plan(&cfg, 1).unwrap();
+        let ra: Vec<String> = rep.records().iter().map(Record::render_jsonl).collect();
+        let rb: Vec<String> = serial.records().iter().map(Record::render_jsonl).collect();
+        assert_eq!(ra, rb);
+        let recs = rep.records();
+        let mut knees = 0;
+        let mut last_kind = "";
+        for r in &recs {
+            if r.kind() == "capacity_knee" {
+                knees += 1;
+                assert_eq!(last_kind, "capacity_point", "points precede their knee");
+            }
+            last_kind = r.kind();
+        }
+        assert_eq!(knees, 4);
+        assert_eq!(rep.knee_table().n_rows(), 4);
+    }
+
+    #[test]
+    fn arrival_shape_parses_and_labels() {
+        assert_eq!(ArrivalShape::parse("open").unwrap(), ArrivalShape::Uniform);
+        assert_eq!(ArrivalShape::parse("uniform").unwrap(), ArrivalShape::Uniform);
+        assert_eq!(ArrivalShape::parse("poisson").unwrap(), ArrivalShape::Poisson);
+        assert!(ArrivalShape::parse("closed").is_err());
+        assert_eq!(
+            ArrivalShape::Poisson.arrival(7.0),
+            Arrival::Poisson { rps: 7.0 }
+        );
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let ok = model_cfg();
+        assert!(plan(&CapacityConfig { workloads: vec![], ..ok.clone() }, 1).is_err());
+        assert!(plan(
+            &CapacityConfig { workloads: vec![WorkloadKind::Lu { n: 8 }], ..ok.clone() },
+            1
+        )
+        .is_err());
+        assert!(plan(
+            &CapacityConfig { protections: vec![Protection::Ecc], ..ok.clone() },
+            1
+        )
+        .is_err());
+        assert!(plan(&CapacityConfig { fault_rates: vec![1.5], ..ok.clone() }, 1).is_err());
+        assert!(plan(&CapacityConfig { slo_p99: 0.0, ..ok.clone() }, 1).is_err());
+        assert!(plan(&CapacityConfig { slo_shed: 1.5, ..ok.clone() }, 1).is_err());
+        assert!(plan(&CapacityConfig { warmup: 80, ..ok.clone() }, 1).is_err());
+        assert!(plan(&CapacityConfig { min_rps: 0.0, ..ok.clone() }, 1).is_err());
+        assert!(plan(&CapacityConfig { max_rps: 1.0, ..ok.clone() }, 1).is_err());
+        assert!(plan(&CapacityConfig { tolerance: 0.0, ..ok.clone() }, 1).is_err());
+        assert!(plan(&CapacityConfig { deadline: Some(-1.0), ..ok }, 1).is_err());
+    }
+
+    #[test]
+    fn live_probe_mode_finds_a_knee_on_a_tiny_cell() {
+        // Keep it minimal: one cell, few requests, a generous SLO so the
+        // ramp passes at least once on any CI machine.  This exercises
+        // the live path end to end; determinism claims are model-only.
+        let cfg = CapacityConfig {
+            workloads: vec![WorkloadKind::MatMul { n: 12 }],
+            fault_rates: vec![1e-2],
+            requests: 16,
+            warmup: 4,
+            serve_workers: 2,
+            queue_depth: 4,
+            min_rps: 50.0,
+            max_rps: 200.0,
+            slo_p99: 10.0,
+            slo_shed: 1.0,
+            mode: ProbeMode::Live,
+            ..Default::default()
+        };
+        let rep = plan(&cfg, 1).unwrap();
+        let o = &rep.outcomes[0];
+        assert!(o.knee_rps >= 50.0, "10 s p99 budget passes the ramp");
+        assert!(o.points.iter().all(|p| p.dose_total > 0));
+    }
+}

@@ -11,10 +11,15 @@
 //! concurrently (MXCSR unmasking and the domain binding are per-thread).
 //! The [`server`] drives the same sessions as long-lived serving workers
 //! behind a bounded request queue (the `nanrepair serve` subcommand,
-//! DESIGN.md §4).  [`metrics`] collects cross-cutting counters, and
-//! results flow out as structured records (see [`crate::util::report`]).
+//! DESIGN.md §4), with deadline shedding and graceful drain as overload
+//! control; [`capacity`] probes that server over an arrival-rate
+//! schedule to find each configuration's SLO knee (the `nanrepair
+//! capacity` subcommand, DESIGN.md §4.1).  [`metrics`] collects
+//! cross-cutting counters, and results flow out as structured records
+//! (see [`crate::util::report`]).
 
 pub mod campaign;
+pub mod capacity;
 pub mod metrics;
 pub mod protection;
 pub mod scheduler;
@@ -22,6 +27,7 @@ pub mod server;
 pub mod session;
 
 pub use campaign::{Campaign, CampaignConfig, CampaignReport};
+pub use capacity::{CapacityConfig, CapacityReport};
 pub use protection::Protection;
 pub use server::{ServeConfig, ServeReport};
 pub use session::ExperimentSession;

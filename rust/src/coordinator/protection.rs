@@ -58,7 +58,20 @@ impl Protection {
     pub fn uses_trap(&self) -> bool {
         matches!(self, Protection::RegisterOnly | Protection::RegisterMemory)
     }
+}
 
+/// `FromStr` delegates to [`Protection::parse`], so comma-separated CLI
+/// lists (`Matches::get_list`) parse protection specs like any other
+/// typed option.
+impl std::str::FromStr for Protection {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::parse(s)
+    }
+}
+
+impl Protection {
     /// Trap configuration for the reactive schemes.
     pub fn trap_config(&self, policy: RepairPolicy) -> Option<crate::trap::TrapConfig> {
         match self {
@@ -91,6 +104,9 @@ mod tests {
         assert_eq!(Protection::parse("ecc").unwrap(), Protection::Ecc);
         assert_eq!(Protection::parse("abft").unwrap(), Protection::Abft);
         assert!(Protection::parse("wat").is_err());
+        // FromStr delegates to parse (the CLI's comma-list path)
+        assert_eq!("memory".parse::<Protection>().unwrap(), Protection::RegisterMemory);
+        assert!("wat".parse::<Protection>().is_err());
     }
 
     #[test]

@@ -42,10 +42,22 @@
 //! Load generation is either **closed-loop** ([`Arrival::Closed`]: the
 //! queue is kept full; the latency clock starts at the offer instant, so
 //! latency ≈ backpressure wait + queue wait + service) or **open-loop**
-//! ([`Arrival::Open`]: requests
-//! arrive on a fixed schedule; the latency clock starts at the scheduled
-//! arrival instant, so queue buildup under overload is charged to the
-//! tail — coordinated omission is not hidden).
+//! ([`Arrival::Open`] on a uniform schedule, [`Arrival::Poisson`] with
+//! deterministic exponential gaps: the latency clock starts at the
+//! scheduled arrival instant, so queue buildup under overload is charged
+//! to the tail — coordinated omission is not hidden).
+//!
+//! **Overload control** (DESIGN.md §4.1): with a per-request
+//! [`ServeConfig::deadline`], a worker **sheds** any request whose
+//! deadline is already blown at dequeue time — the request's fault dose
+//! is still planted (and immediately patched back, keeping the repair
+//! ledger closed), but no compute runs and nothing is served late.  When
+//! the generator offers its last request, admission stops and the
+//! **graceful drain** phase serves or sheds the backlog; its duration,
+//! the queue high-water mark, the post-drain residue (always zero), and
+//! the served/shed/violation counts are all fields on the `serve_slo`
+//! record, so a capacity probe ([`crate::coordinator::capacity`]) can
+//! assert queue saturation at the knee.
 
 use std::collections::VecDeque;
 use std::sync::{mpsc, Barrier, Condvar, Mutex};
@@ -62,10 +74,13 @@ use crate::util::table::{fmt_secs, Table};
 use crate::workloads::WorkloadKind;
 
 use super::protection::Protection;
-use super::session::{ExperimentSession, ServeCell};
+use super::session::{ExperimentSession, RequestOutcome, ServeCell};
 
 /// Seed domain separator for the fault-injector's dose draws.
-const FAULT_SEED: u64 = 0x6661756c745f7271; // "fault_rq"
+pub(crate) const FAULT_SEED: u64 = 0x6661756c745f7271; // "fault_rq"
+
+/// Seed domain separator for the Poisson inter-arrival gap draws.
+const ARRIVAL_SEED: u64 = 0x6172726976616c73; // "arrivals"
 
 /// How requests arrive at the queue.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -85,31 +100,49 @@ pub enum Arrival {
         /// Target arrival rate, requests per second.
         rps: f64,
     },
+    /// Open loop with Poisson arrivals: exponential inter-arrival gaps at
+    /// mean rate `rps`, drawn deterministically from the run seed.  Same
+    /// latency-clock rule as [`Arrival::Open`], but the schedule is
+    /// bursty — the memoryless process stresses the queue with arrival
+    /// clumps a uniform schedule never produces, so a knee measured under
+    /// `poisson:RPS` is the honest one for uncoordinated client traffic.
+    Poisson {
+        /// Mean arrival rate, requests per second.
+        rps: f64,
+    },
 }
 
 impl Arrival {
-    /// Parse `closed` or `open:RPS` (trailing tokens are rejected — a
-    /// mistyped load shape must not silently run as something else).
+    /// Parse `closed`, `open:RPS`, or `poisson:RPS` (trailing tokens are
+    /// rejected — a mistyped load shape must not silently run as
+    /// something else).
     pub fn parse(s: &str) -> Result<Self> {
         let mut it = s.split(':');
-        let arrival = match it.next().unwrap_or("") {
+        let shape = it.next().unwrap_or("");
+        let arrival = match shape {
             "closed" => Arrival::Closed,
-            "open" => {
+            "open" | "poisson" => {
                 let rps: f64 = it
                     .next()
-                    .ok_or_else(|| anyhow::anyhow!("open arrival needs a rate: open:RPS"))?
+                    .ok_or_else(|| anyhow::anyhow!("{shape} arrival needs a rate: {shape}:RPS"))?
                     .parse()?;
                 anyhow::ensure!(
                     rps > 0.0 && rps.is_finite(),
                     "open-loop arrival rate must be positive and finite"
                 );
-                Arrival::Open { rps }
+                if shape == "open" {
+                    Arrival::Open { rps }
+                } else {
+                    Arrival::Poisson { rps }
+                }
             }
-            other => anyhow::bail!("unknown arrival process {other:?} (closed | open:RPS)"),
+            other => {
+                anyhow::bail!("unknown arrival process {other:?} (closed | open:RPS | poisson:RPS)")
+            }
         };
         anyhow::ensure!(
             it.next().is_none(),
-            "trailing tokens in arrival spec {s:?} (closed | open:RPS)"
+            "trailing tokens in arrival spec {s:?} (closed | open:RPS | poisson:RPS)"
         );
         Ok(arrival)
     }
@@ -119,6 +152,44 @@ impl Arrival {
         match self {
             Arrival::Closed => "closed".to_string(),
             Arrival::Open { rps } => format!("open:{rps}"),
+            Arrival::Poisson { rps } => format!("poisson:{rps}"),
+        }
+    }
+
+    /// Target arrival rate of an open-loop shape (`None` for closed loop).
+    pub fn rate(&self) -> Option<f64> {
+        match self {
+            Arrival::Closed => None,
+            Arrival::Open { rps } | Arrival::Poisson { rps } => Some(*rps),
+        }
+    }
+
+    /// Scheduled arrival offsets (seconds from the run origin) for `n`
+    /// requests, or `None` for closed loop (arrivals are completion-
+    /// driven).  Deterministic from `seed`: the load generator and the
+    /// capacity planner's virtual-time probe
+    /// ([`crate::coordinator::capacity`]) both pace from this exact
+    /// schedule.  Poisson gaps are inverse-CDF exponential draws from the
+    /// run's PCG stream.
+    pub fn offsets(&self, seed: u64, n: usize) -> Option<Vec<f64>> {
+        match *self {
+            Arrival::Closed => None,
+            Arrival::Open { rps } => Some((0..n).map(|i| i as f64 / rps).collect()),
+            Arrival::Poisson { rps } => {
+                let mut rng = Pcg64::seed(seed ^ ARRIVAL_SEED);
+                let mut t = 0.0;
+                Some(
+                    (0..n)
+                        .map(|_| {
+                            // u ∈ [MIN_POSITIVE, 1) keeps ln finite
+                            let u = rng.next_f64().max(f64::MIN_POSITIVE);
+                            let at = t;
+                            t += -u.ln() / rps;
+                            at
+                        })
+                        .collect(),
+                )
+            }
         }
     }
 }
@@ -156,6 +227,23 @@ pub struct ServeConfig {
     /// p99 end-to-end latency target in seconds; sets the `serve_slo`
     /// verdict and the per-request violation count.
     pub slo_p99: Option<f64>,
+    /// Per-request deadline in seconds, measured from the latency-clock
+    /// origin.  A request whose deadline is already blown when a worker
+    /// dequeues it is **shed** (planted dose patched back, no compute, no
+    /// late response) instead of silently served past its budget.  `None`
+    /// disables shedding (every request is served however late).
+    pub deadline: Option<f64>,
+    /// Leading requests excluded from the measured quantiles, the SLO
+    /// verdict, and the latency histogram (cache/branch warmup — the
+    /// capacity planner's probes set this so cold-start noise never
+    /// decides a knee).  They are still served, recorded, and counted in
+    /// the fault ledger.
+    pub warmup: usize,
+    /// Maximum tolerable shed fraction over the measured window; when
+    /// set, the SLO verdict also requires `shed/measured <= slo_shed`
+    /// (otherwise a server could "meet" any latency target by shedding
+    /// everything).
+    pub slo_shed: Option<f64>,
 }
 
 impl Default for ServeConfig {
@@ -171,6 +259,9 @@ impl Default for ServeConfig {
             seed: 42,
             arrival: Arrival::Closed,
             slo_p99: None,
+            deadline: None,
+            warmup: 0,
+            slo_shed: None,
         }
     }
 }
@@ -264,6 +355,12 @@ impl<T> BoundedQueue<T> {
     fn highwater(&self) -> usize {
         self.state.lock().unwrap().highwater
     }
+
+    /// Items still queued (the post-drain residue check: must be zero
+    /// once every worker has exited).
+    fn len(&self) -> usize {
+        self.state.lock().unwrap().buf.len()
+    }
 }
 
 /// Closes the queue when dropped.  Both the load generator and every
@@ -293,50 +390,83 @@ impl Drop for ReadyOnDrop<'_> {
     }
 }
 
-/// Everything measured about one served request.
+/// Everything measured about one handled request (served or shed).
 #[derive(Debug, Clone)]
 pub struct RequestResult {
     /// Request index (arrival order).
     pub index: usize,
-    /// Worker thread that served it.
+    /// Worker thread that handled it.
     pub worker: usize,
     /// NaN dose the fault injector stamped on the request.
     pub dose: u64,
-    /// Distinct NaN words actually planted (dose draws may collide).
-    pub nans_planted: u64,
-    /// Trap counters of the request's armed window.
-    pub traps: TrapStats,
-    /// NaNs repaired by a proactive scrub sweep (Scrub protection only).
-    pub scrub_repairs: u64,
-    /// Seconds inside the protected window (arming + scrub + compute).
-    pub service_secs: f64,
+    /// What the worker did with it (served compute or overload shed) and
+    /// what that cost.
+    pub outcome: RequestOutcome,
     /// Seconds from the latency-clock origin to completion (queue wait
-    /// included).
+    /// included); for a shed request, to the shed decision + handling.
     pub latency_secs: f64,
-    /// Non-finite values in the response (zero under reactive repair).
-    pub output_nans: u64,
 }
 
 impl RequestResult {
+    /// Was this request shed instead of served?
+    pub fn is_shed(&self) -> bool {
+        self.outcome.is_shed()
+    }
+
+    /// Distinct NaN words planted for this request.
+    pub fn nans_planted(&self) -> u64 {
+        self.outcome.nans_planted()
+    }
+
+    /// Trap counters of the request's armed window (zero when shed).
+    pub fn traps(&self) -> TrapStats {
+        self.outcome.traps()
+    }
+
+    /// Repairs attributable to this request: trap-driven register +
+    /// memory repairs, scrub sweeps, and the shed path's patch-backs.
+    pub fn repairs(&self) -> u64 {
+        let t = self.outcome.traps();
+        t.register_repairs
+            + t.memory_repairs()
+            + self.outcome.scrub_repairs()
+            + self.outcome.shed_repairs()
+    }
+
+    /// Seconds the worker spent on the request (protected window when
+    /// served, plant-and-patch when shed).
+    pub fn service_secs(&self) -> f64 {
+        self.outcome.service_secs()
+    }
+
+    /// Non-finite values in the response (zero when shed — no response).
+    pub fn output_nans(&self) -> u64 {
+        self.outcome.output_nans()
+    }
+
     /// The per-request `serve_request` record.
     pub fn to_record(&self) -> Record {
+        let traps = self.outcome.traps();
         Record::new("serve_request")
             .field("index", self.index)
             .field("worker", self.worker)
+            .field("outcome", if self.is_shed() { "shed" } else { "served" })
             .field("dose", self.dose)
-            .field("nans_planted", self.nans_planted)
-            .field("sigfpe", self.traps.sigfpe_total)
-            .field("register_repairs", self.traps.register_repairs)
-            .field("memory_repairs", self.traps.memory_repairs())
-            .field("scrub_repairs", self.scrub_repairs)
-            .field("service_secs", self.service_secs)
+            .field("nans_planted", self.outcome.nans_planted())
+            .field("sigfpe", traps.sigfpe_total)
+            .field("register_repairs", traps.register_repairs)
+            .field("memory_repairs", traps.memory_repairs())
+            .field("scrub_repairs", self.outcome.scrub_repairs())
+            .field("shed_repairs", self.outcome.shed_repairs())
+            .field("service_secs", self.outcome.service_secs())
             .field("latency_secs", self.latency_secs)
-            .field("output_nans", self.output_nans)
+            .field("output_nans", self.outcome.output_nans())
     }
 }
 
 /// What a serving run produced: per-request results (in request order),
-/// the latency distribution, and the SLO ledger.
+/// the latency distribution, the overload-control ledger, and the SLO
+/// verdict.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     /// `workload/protection@arrival` label of the run.
@@ -347,103 +477,163 @@ pub struct ServeReport {
     pub queue_depth: usize,
     /// Highest queue occupancy observed.
     pub queue_highwater: usize,
+    /// Requests still queued after every worker exited — always zero on a
+    /// clean drain (reported so tests and capacity probes can assert it).
+    pub queue_residue: usize,
     /// Wall-clock seconds of the serving window: from the readiness
     /// barrier (all workers resident-ready) to the last completion —
     /// per-worker setup cost is excluded.
     pub wall_secs: f64,
+    /// Seconds of the graceful-drain phase: from the instant admission
+    /// stopped (last request offered, queue closed to new work) until the
+    /// backlog was fully served or shed.
+    pub drain_secs: f64,
+    /// Leading requests excluded from the measured quantiles/verdict.
+    pub warmup: usize,
+    /// Per-request deadline in seconds (if shedding was enabled).
+    pub deadline: Option<f64>,
     /// Per-request results, ordered by request index.
     pub results: Vec<RequestResult>,
-    /// Log-bucketed end-to-end latency distribution.
+    /// Log-bucketed end-to-end latency distribution (measured served
+    /// requests — warmup and shed excluded).
     pub latency_hist: LatencyHistogram,
     /// p99 latency target in seconds (if set).
     pub slo_p99: Option<f64>,
+    /// Maximum tolerable measured shed fraction (if set).
+    pub slo_shed: Option<f64>,
 }
 
 impl ServeReport {
-    /// Completed requests per wall-clock second.
+    /// The measured window: every result past the warmup prefix.
+    pub fn measured(&self) -> &[RequestResult] {
+        &self.results[self.warmup.min(self.results.len())..]
+    }
+
+    /// Requests served (whole run, warmup included).
+    pub fn served_total(&self) -> u64 {
+        self.results.iter().filter(|r| !r.is_shed()).count() as u64
+    }
+
+    /// Requests shed (whole run, warmup included).
+    pub fn shed_total(&self) -> u64 {
+        self.results.iter().filter(|r| r.is_shed()).count() as u64
+    }
+
+    /// Shed fraction over the measured window (the knee search's second
+    /// SLO axis).
+    pub fn shed_frac(&self) -> f64 {
+        let m = self.measured();
+        if m.is_empty() {
+            0.0
+        } else {
+            m.iter().filter(|r| r.is_shed()).count() as f64 / m.len() as f64
+        }
+    }
+
+    /// Served requests per wall-clock second (goodput — shed requests
+    /// are not throughput).
     pub fn throughput_rps(&self) -> f64 {
         if self.wall_secs == 0.0 {
             0.0
         } else {
-            self.results.len() as f64 / self.wall_secs
+            self.served_total() as f64 / self.wall_secs
         }
     }
 
-    /// Exact end-to-end latency quantile over all requests.  For several
-    /// quantiles at once, sort once via [`ServeReport::sorted_latencies`].
+    /// Exact end-to-end latency quantile over measured served requests.
+    /// For several quantiles at once, sort once via
+    /// [`ServeReport::sorted_latencies`].
     pub fn latency_quantile(&self, q: f64) -> f64 {
         quantile_of(&self.sorted_latencies(), q)
     }
 
-    /// Exact service-time quantile over all requests.
+    /// Exact service-time quantile over measured served requests.
     pub fn service_quantile(&self, q: f64) -> f64 {
         quantile_of(&self.sorted_services(), q)
     }
 
-    /// All end-to-end latencies, ascending (for exact quantile reads).
+    /// Measured served end-to-end latencies, ascending (for exact
+    /// quantile reads).  Warmup and shed requests are excluded: warmup is
+    /// cold-start noise, and a shed request's short-circuit time is not a
+    /// response latency.
     pub fn sorted_latencies(&self) -> Vec<f64> {
         self.sorted_by(|r| r.latency_secs)
     }
 
-    /// All service times, ascending.
+    /// Measured served service times, ascending.
     pub fn sorted_services(&self) -> Vec<f64> {
-        self.sorted_by(|r| r.service_secs)
+        self.sorted_by(|r| r.service_secs())
     }
 
     fn sorted_by(&self, f: impl Fn(&RequestResult) -> f64) -> Vec<f64> {
-        let mut v: Vec<f64> = self.results.iter().map(f).collect();
+        let mut v: Vec<f64> = self
+            .measured()
+            .iter()
+            .filter(|r| !r.is_shed())
+            .map(f)
+            .collect();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         v
     }
 
-    /// Total NaN dose the fault injector issued.
+    /// Total NaN dose the fault injector issued (whole run).
     pub fn dose_total(&self) -> u64 {
         self.results.iter().map(|r| r.dose).sum()
     }
 
-    /// Total distinct NaN words planted into resident weights.
+    /// Total distinct NaN words planted into resident weights (served and
+    /// shed requests both plant — the fault process doesn't stop for
+    /// admission control).
     pub fn nans_planted_total(&self) -> u64 {
-        self.results.iter().map(|r| r.nans_planted).sum()
+        self.results.iter().map(|r| r.nans_planted()).sum()
     }
 
     /// Total SIGFPE traps taken across all requests.
     pub fn sigfpe_total(&self) -> u64 {
-        self.results.iter().map(|r| r.traps.sigfpe_total).sum()
+        self.results.iter().map(|r| r.traps().sigfpe_total).sum()
     }
 
-    /// Total repairs: trap-driven register + memory repairs plus scrub
-    /// sweeps — the run's repair ledger.
+    /// Total repairs: trap-driven register + memory repairs, scrub
+    /// sweeps, and shed patch-backs — the run's repair ledger.
     pub fn repairs_total(&self) -> u64 {
-        self.results
-            .iter()
-            .map(|r| r.traps.register_repairs + r.traps.memory_repairs() + r.scrub_repairs)
-            .sum()
+        self.results.iter().map(RequestResult::repairs).sum()
     }
 
     /// Total non-finite values that reached responses (must be zero under
     /// reactive protection).
     pub fn output_nans_total(&self) -> u64 {
-        self.results.iter().map(|r| r.output_nans).sum()
+        self.results.iter().map(|r| r.output_nans()).sum()
     }
 
-    /// Requests whose end-to-end latency exceeded the SLO target (0 when
-    /// no target is set).
+    /// Measured served requests whose end-to-end latency exceeded the SLO
+    /// target (0 when no target is set).
     pub fn slo_violations(&self) -> u64 {
         match self.slo_p99 {
             None => 0,
-            Some(t) => self.results.iter().filter(|r| r.latency_secs > t).count() as u64,
+            Some(t) => self
+                .measured()
+                .iter()
+                .filter(|r| !r.is_shed() && r.latency_secs > t)
+                .count() as u64,
         }
     }
 
-    /// SLO verdict: is the exact p99 at or under the target?
+    /// SLO verdict: is the exact measured p99 at or under the target —
+    /// and, when a shed budget is set, is the shed fraction within it?
     pub fn slo_met(&self) -> Option<bool> {
         self.slo_met_given(&self.sorted_latencies())
     }
 
-    /// The single verdict rule, over pre-sorted latencies —
-    /// `slo_record()` and `table()` reuse their own sorted vector.
+    /// The single verdict rule, over pre-sorted measured-served latencies
+    /// — `slo_record()` and `table()` reuse their own sorted vector.  An
+    /// empty served set never passes: shedding everything is not meeting
+    /// an SLO.
     fn slo_met_given(&self, sorted_latencies: &[f64]) -> Option<bool> {
-        self.slo_p99.map(|t| quantile_of(sorted_latencies, 0.99) <= t)
+        self.slo_p99.map(|t| {
+            let p99_ok = !sorted_latencies.is_empty() && quantile_of(sorted_latencies, 0.99) <= t;
+            let shed_ok = self.slo_shed.map_or(true, |s| self.shed_frac() <= s);
+            p99_ok && shed_ok
+        })
     }
 
     /// The final `serve_slo` summary record.
@@ -453,11 +643,17 @@ impl ServeReport {
         let mut rec = Record::new("serve_slo")
             .field("label", self.config_label.as_str())
             .field("requests", self.results.len())
+            .field("warmup", self.warmup)
             .field("workers", self.workers)
             .field("queue_depth", self.queue_depth)
             .field("queue_highwater", self.queue_highwater)
+            .field("queue_residue", self.queue_residue)
             .field("wall_secs", self.wall_secs)
+            .field("drain_secs", self.drain_secs)
             .field("throughput_rps", self.throughput_rps())
+            .field("served", self.served_total())
+            .field("shed", self.shed_total())
+            .field("shed_frac", self.shed_frac())
             .field("latency_p50_secs", quantile_of(&lat, 0.50))
             .field("latency_p99_secs", quantile_of(&lat, 0.99))
             .field("latency_p999_secs", quantile_of(&lat, 0.999))
@@ -468,6 +664,12 @@ impl ServeReport {
             .field("sigfpe_total", self.sigfpe_total())
             .field("repairs_total", self.repairs_total())
             .field("output_nans", self.output_nans_total());
+        if let Some(d) = self.deadline {
+            rec = rec.field("deadline_secs", d);
+        }
+        if let Some(s) = self.slo_shed {
+            rec = rec.field("slo_shed", s);
+        }
         if let Some(t) = self.slo_p99 {
             rec = rec
                 .field("slo_p99_secs", t)
@@ -490,13 +692,21 @@ impl ServeReport {
     pub fn table(&self) -> Table {
         let mut t = Table::new(&format!("serve — {}", self.config_label), &["metric", "value"]);
         t.row(&["requests".into(), self.results.len().to_string()]);
+        if self.warmup > 0 {
+            t.row(&["warmup (excluded)".into(), self.warmup.to_string()]);
+        }
         t.row(&["workers".into(), self.workers.to_string()]);
         t.row(&[
             "queue depth (highwater)".into(),
             format!("{} ({})", self.queue_depth, self.queue_highwater),
         ]);
         t.row(&["wall time".into(), fmt_secs(self.wall_secs)]);
+        t.row(&["drain time".into(), fmt_secs(self.drain_secs)]);
         t.row(&["throughput".into(), format!("{:.1} req/s", self.throughput_rps())]);
+        t.row(&[
+            "served / shed".into(),
+            format!("{} / {}", self.served_total(), self.shed_total()),
+        ]);
         let lat = self.sorted_latencies();
         t.row(&["latency p50".into(), fmt_secs(quantile_of(&lat, 0.50))]);
         t.row(&["latency p99".into(), fmt_secs(quantile_of(&lat, 0.99))]);
@@ -505,8 +715,14 @@ impl ServeReport {
         t.row(&["NaN dose issued".into(), self.dose_total().to_string()]);
         t.row(&["NaN words planted".into(), self.nans_planted_total().to_string()]);
         t.row(&["SIGFPE traps".into(), self.sigfpe_total().to_string()]);
-        t.row(&["repairs (reg+mem+scrub)".into(), self.repairs_total().to_string()]);
+        t.row(&[
+            "repairs (reg+mem+scrub+shed)".into(),
+            self.repairs_total().to_string(),
+        ]);
         t.row(&["NaNs in responses".into(), self.output_nans_total().to_string()]);
+        if let Some(d) = self.deadline {
+            t.row(&["deadline".into(), fmt_secs(d)]);
+        }
         if let Some(t_slo) = self.slo_p99 {
             t.row(&["SLO p99 target".into(), fmt_secs(t_slo)]);
             t.row(&["SLO violations".into(), self.slo_violations().to_string()]);
@@ -527,10 +743,21 @@ fn quantile_of(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// Placement seed for request `index`: independent of worker assignment,
-/// decorrelated across indices.
-fn request_seed(seed: u64, index: usize) -> u64 {
+/// decorrelated across indices.  Shared with the capacity planner's
+/// virtual-time probe so model-mode planted counts match a live run's.
+pub(crate) fn request_seed(seed: u64, index: usize) -> u64 {
     (seed ^ 0x73657276655f7271) // "serve_rq"
         .wrapping_add((index as u64).wrapping_mul(0x9e3779b97f4a7c15))
+}
+
+/// The fault injector's dose sequence: request `i` of a run seeded `seed`
+/// carries `dose_stream(seed, words, fault_rate, n)[i]` NaN words.  One
+/// derivation shared by the live load generator and the capacity
+/// planner's virtual-time probe ([`crate::coordinator::capacity`]), so a
+/// probe's fault ledger is identical in both modes.
+pub(crate) fn dose_stream(seed: u64, words: u64, fault_rate: f64, n: usize) -> Vec<u64> {
+    let mut rng = Pcg64::seed(seed ^ FAULT_SEED);
+    (0..n).map(|_| rng.binomial(words, fault_rate)).collect()
 }
 
 /// Run one serving campaign: spawn the workers and the
@@ -544,7 +771,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         "--fault-rate is a per-word probability in [0, 1]"
     );
     super::session::ensure_servable(cfg.workload, cfg.protection)?;
-    if let Arrival::Open { rps } = cfg.arrival {
+    if let Some(rps) = cfg.arrival.rate() {
         anyhow::ensure!(
             rps > 0.0 && rps.is_finite(),
             "open-loop arrival rate must be positive and finite"
@@ -556,9 +783,28 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
             "--slo-p99 target must be positive and finite"
         );
     }
+    if let Some(d) = cfg.deadline {
+        anyhow::ensure!(
+            d > 0.0 && d.is_finite(),
+            "--deadline must be positive and finite"
+        );
+    }
+    if let Some(s) = cfg.slo_shed {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&s),
+            "--slo-shed is a fraction in [0, 1]"
+        );
+    }
+    anyhow::ensure!(
+        cfg.warmup < cfg.requests,
+        "warmup ({}) must leave at least one measured request of {}",
+        cfg.warmup,
+        cfg.requests
+    );
     let workers = cfg.workers.clamp(1, NUM_DOMAINS).min(cfg.requests);
     // Size of the fault process's target: the resident input word count.
     let input_words = cfg.workload.input_words();
+    let deadline = cfg.deadline.map(Duration::from_secs_f64);
 
     let queue = BoundedQueue::new(cfg.queue_depth);
     let queue = &queue;
@@ -569,20 +815,25 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
     // the collecting thread (which stamps the wall clock).
     let ready = Barrier::new(workers + 2);
     let ready = &ready;
+    // The instant admission stopped (last request offered): the drain
+    // phase runs from here to the last completion.
+    let admission_closed: Mutex<Option<Instant>> = Mutex::new(None);
+    let admission_closed = &admission_closed;
 
-    let (t0, results, first_err) = std::thread::scope(|scope| {
+    let (t0, last_done, results, first_err) = std::thread::scope(|scope| {
         // Load generator + fault injector: stamps each request with its
         // deterministic NaN dose and paces arrivals.
         scope.spawn(move || {
             let _close = CloseOnDrop(queue);
+            let doses = dose_stream(cfg.seed, input_words as u64, cfg.fault_rate, cfg.requests);
+            let offsets = cfg.arrival.offsets(cfg.seed, cfg.requests);
             ready.wait();
-            let mut dose_rng = Pcg64::seed(cfg.seed ^ FAULT_SEED);
             let start = Instant::now();
-            for index in 0..cfg.requests {
-                let arrival = match cfg.arrival {
-                    Arrival::Closed => Instant::now(),
-                    Arrival::Open { rps } => {
-                        let due = start + Duration::from_secs_f64(index as f64 / rps);
+            for (index, dose) in doses.into_iter().enumerate() {
+                let arrival = match &offsets {
+                    None => Instant::now(),
+                    Some(offs) => {
+                        let due = start + Duration::from_secs_f64(offs[index]);
                         loop {
                             let now = Instant::now();
                             if now >= due {
@@ -593,9 +844,11 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                         due
                     }
                 };
-                let dose = dose_rng.binomial(input_words as u64, cfg.fault_rate);
                 queue.push(ServeRequest { index, dose, arrival });
             }
+            // Admission stops here: everything still queued is backlog
+            // the drain phase must serve or shed.
+            *admission_closed.lock().unwrap() = Some(Instant::now());
             // _close drops here, closing the queue (also on panic above)
         });
 
@@ -615,7 +868,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                 }
                 let mut served = 0u64;
                 while let Some(req) = queue.pop() {
-                    let out = session.serve_request(&ServeCell {
+                    let cell = ServeCell {
                         workload: cfg.workload,
                         resident_seed: cfg.seed,
                         protection: cfg.protection,
@@ -623,19 +876,27 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                         dose: req.dose,
                         placement_seed: request_seed(cfg.seed, req.index),
                         served_before: served,
-                    });
-                    served += 1;
+                    };
+                    // Overload control: a request whose deadline is
+                    // already blown at dequeue time is shed — its dose is
+                    // planted and patched back, but no compute runs and
+                    // no response is served late.
+                    let blown = deadline
+                        .map(|d| Instant::now().saturating_duration_since(req.arrival) > d)
+                        .unwrap_or(false);
+                    let out = if blown {
+                        session.shed_request(&cell)
+                    } else {
+                        served += 1;
+                        session.serve_request(&cell)
+                    };
                     let done = Instant::now();
-                    let msg = out.map(|o| RequestResult {
+                    let msg = out.map(|outcome| RequestResult {
                         index: req.index,
                         worker,
                         dose: req.dose,
-                        nans_planted: o.nans_planted,
-                        traps: o.traps,
-                        scrub_repairs: o.scrub_repairs,
-                        service_secs: o.service_secs,
+                        outcome,
                         latency_secs: done.saturating_duration_since(req.arrival).as_secs_f64(),
-                        output_nans: o.output_nans,
                     });
                     if tx.send(msg).is_err() {
                         break;
@@ -649,7 +910,9 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
 
         let mut results: Vec<Option<RequestResult>> = (0..cfg.requests).map(|_| None).collect();
         let mut first_err = None;
+        let mut last_done = t0;
         for msg in rx {
+            last_done = Instant::now();
             match msg {
                 Ok(r) => {
                     let index = r.index;
@@ -663,9 +926,14 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                 }
             }
         }
-        (t0, results, first_err)
+        (t0, last_done, results, first_err)
     });
-    let wall_secs = t0.elapsed().as_secs_f64();
+    let wall_secs = last_done.saturating_duration_since(t0).as_secs_f64();
+    let drain_secs = admission_closed
+        .lock()
+        .unwrap()
+        .map(|closed| last_done.saturating_duration_since(closed).as_secs_f64())
+        .unwrap_or(0.0);
     if let Some(e) = first_err {
         return Err(e);
     }
@@ -675,8 +943,10 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         .collect();
 
     let mut latency_hist = LatencyHistogram::new();
-    for r in &results {
-        latency_hist.observe(r.latency_secs);
+    for r in &results[cfg.warmup..] {
+        if !r.is_shed() {
+            latency_hist.observe(r.latency_secs);
+        }
     }
 
     Ok(ServeReport {
@@ -684,10 +954,15 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         workers,
         queue_depth: cfg.queue_depth,
         queue_highwater: queue.highwater(),
+        queue_residue: queue.len(),
         wall_secs,
+        drain_secs,
+        warmup: cfg.warmup,
+        deadline: cfg.deadline,
         results,
         latency_hist,
         slo_p99: cfg.slo_p99,
+        slo_shed: cfg.slo_shed,
     })
 }
 
@@ -713,15 +988,41 @@ mod tests {
     fn arrival_parse_round_trips() {
         assert_eq!(Arrival::parse("closed").unwrap(), Arrival::Closed);
         assert_eq!(Arrival::parse("open:250").unwrap(), Arrival::Open { rps: 250.0 });
+        assert_eq!(Arrival::parse("poisson:5").unwrap(), Arrival::Poisson { rps: 5.0 });
         let bad = [
-            "", "open", "open:0", "open:-1", "open:x", "open:inf", "poisson:5",
-            "closed:200", "open:200:burst",
+            "", "open", "open:0", "open:-1", "open:x", "open:inf", "closed:200",
+            "open:200:burst", "poisson", "poisson:0", "poisson:-2", "poisson:x",
+            "poisson:5:9",
         ];
         for bad in bad {
             assert!(Arrival::parse(bad).is_err(), "{bad:?} should not parse");
         }
-        let a = Arrival::parse("open:250").unwrap();
-        assert_eq!(Arrival::parse(&a.label()).unwrap(), a);
+        for spec in ["open:250", "poisson:250"] {
+            let a = Arrival::parse(spec).unwrap();
+            assert_eq!(Arrival::parse(&a.label()).unwrap(), a);
+            assert_eq!(a.rate(), Some(250.0));
+        }
+        assert_eq!(Arrival::Closed.rate(), None);
+    }
+
+    #[test]
+    fn arrival_offsets_pace_deterministically() {
+        assert!(Arrival::Closed.offsets(1, 5).is_none());
+
+        let open = Arrival::Open { rps: 100.0 }.offsets(1, 4).unwrap();
+        assert_eq!(open, vec![0.0, 0.01, 0.02, 0.03]);
+
+        let a = Arrival::Poisson { rps: 100.0 }.offsets(7, 2000).unwrap();
+        let b = Arrival::Poisson { rps: 100.0 }.offsets(7, 2000).unwrap();
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_ne!(a, Arrival::Poisson { rps: 100.0 }.offsets(8, 2000).unwrap());
+        assert_eq!(a[0], 0.0, "first arrival at the origin");
+        assert!(a.windows(2).all(|w| w[1] >= w[0]), "offsets ascend");
+        // mean gap of 2000 exponential draws ≈ 1/rps within ~10 %
+        let mean_gap = a.last().unwrap() / (a.len() - 1) as f64;
+        assert!((mean_gap - 0.01).abs() < 1e-3, "mean gap {mean_gap}");
+        // bursty: some gap is well below half the mean (uniform never is)
+        assert!(a.windows(2).any(|w| w[1] - w[0] < 0.005));
     }
 
     #[test]
@@ -752,13 +1053,19 @@ mod tests {
         for (i, r) in rep.results.iter().enumerate() {
             assert_eq!(r.index, i, "results in request order");
             assert!(r.worker < 2);
-            assert!(r.latency_secs >= r.service_secs, "latency includes service");
+            assert!(!r.is_shed(), "no deadline set, nothing sheds");
+            assert!(r.latency_secs >= r.service_secs(), "latency includes service");
         }
         assert_eq!(rep.output_nans_total(), 0, "responses are NaN-free");
         assert!(rep.dose_total() > 0, "fault process landed");
         assert!(rep.repairs_total() > 0);
         assert!(rep.sigfpe_total() > 0);
         assert!(rep.throughput_rps() > 0.0);
+        assert_eq!(rep.served_total(), 6);
+        assert_eq!(rep.shed_total(), 0);
+        assert_eq!(rep.shed_frac(), 0.0);
+        assert_eq!(rep.queue_residue, 0);
+        assert!(rep.drain_secs >= 0.0);
         assert_eq!(rep.latency_hist.count(), 6);
 
         let recs = rep.records();
@@ -766,6 +1073,12 @@ mod tests {
         assert!(recs[..6].iter().all(|r| r.kind() == "serve_request"));
         assert_eq!(recs[6].kind(), "serve_latency");
         assert_eq!(recs[7].kind(), "serve_slo");
+        let slo = &recs[7];
+        assert!(matches!(slo.get("shed"), Some(Json::Int(0))), "{slo:?}");
+        assert!(matches!(slo.get("served"), Some(Json::Int(6))), "{slo:?}");
+        assert!(slo.get("queue_highwater").is_some());
+        assert!(slo.get("queue_residue").is_some());
+        assert!(slo.get("drain_secs").is_some());
     }
 
     #[test]
@@ -774,12 +1087,63 @@ mod tests {
         let b = serve(&small_cfg(1)).unwrap();
         for (x, y) in a.results.iter().zip(&b.results) {
             assert_eq!(x.dose, y.dose);
-            assert_eq!(x.nans_planted, y.nans_planted);
-            let (mut xt, mut yt) = (x.traps, y.traps);
+            assert_eq!(x.nans_planted(), y.nans_planted());
+            let (mut xt, mut yt) = (x.traps(), y.traps());
             xt.trap_cycles_total = 0;
             yt.trap_cycles_total = 0;
             assert_eq!(xt, yt);
         }
+    }
+
+    #[test]
+    fn serve_warmup_excluded_from_measured_quantiles() {
+        let cfg = ServeConfig { warmup: 2, ..small_cfg(1) };
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.results.len(), 6, "warmup requests still run and record");
+        assert_eq!(rep.measured().len(), 4);
+        assert_eq!(rep.latency_hist.count(), 4, "histogram covers the measured window");
+        assert_eq!(rep.sorted_latencies().len(), 4);
+        let slo = rep.slo_record();
+        assert!(matches!(slo.get("warmup"), Some(Json::Int(2))), "{slo:?}");
+        assert!(matches!(slo.get("requests"), Some(Json::Int(6))), "{slo:?}");
+    }
+
+    #[test]
+    fn serve_sheds_blown_deadlines_and_drains_clean() {
+        // A 1 µs deadline under an instantaneous burst (open loop at
+        // 10^6 rps) is blown for essentially every request by the time a
+        // worker dequeues it: sheds must happen, the backlog must still
+        // drain to zero residue, and the fault ledger must stay closed.
+        let cfg = ServeConfig {
+            arrival: Arrival::Open { rps: 1e6 },
+            deadline: Some(1e-6),
+            requests: 12,
+            queue_depth: 3,
+            ..small_cfg(2)
+        };
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.results.len(), 12);
+        assert_eq!(rep.served_total() + rep.shed_total(), 12);
+        assert!(rep.shed_total() > 0, "tight deadline must shed");
+        assert_eq!(rep.queue_residue, 0, "backlog fully served or shed");
+        assert_eq!(rep.output_nans_total(), 0);
+        for r in &rep.results {
+            if r.is_shed() {
+                assert_eq!(r.outcome.shed_repairs(), r.nans_planted());
+                assert_eq!(r.traps().sigfpe_total, 0);
+            }
+        }
+        // every planted NaN was repaired by some path (trap or shed patch)
+        assert!(rep.repairs_total() >= rep.nans_planted_total());
+    }
+
+    #[test]
+    fn serve_poisson_arrivals_complete_clean() {
+        let cfg = ServeConfig { arrival: Arrival::Poisson { rps: 2000.0 }, ..small_cfg(2) };
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.results.len(), 6);
+        assert_eq!(rep.output_nans_total(), 0);
+        assert_eq!(rep.shed_total(), 0, "no deadline, nothing sheds");
     }
 
     #[test]
@@ -823,6 +1187,33 @@ mod tests {
     }
 
     #[test]
+    fn serve_slo_shed_budget_gates_the_verdict() {
+        // generous latency target, but a zero shed budget with shedding
+        // present must fail the verdict — shedding everything is not
+        // meeting an SLO
+        let cfg = ServeConfig {
+            arrival: Arrival::Open { rps: 1e6 },
+            deadline: Some(1e-6),
+            slo_p99: Some(10.0),
+            slo_shed: Some(0.0),
+            requests: 12,
+            queue_depth: 3,
+            ..small_cfg(2)
+        };
+        let rep = serve(&cfg).unwrap();
+        assert!(rep.shed_total() > 0);
+        assert_eq!(rep.slo_met(), Some(false), "shed budget exceeded");
+        // with a budget of 1.0 the same run passes on the latency axis
+        // unless literally everything was shed
+        let relaxed = ServeReport { slo_shed: Some(1.0), ..rep.clone() };
+        assert_eq!(
+            relaxed.slo_met(),
+            Some(rep.served_total() > 0),
+            "all-shed runs can never pass"
+        );
+    }
+
+    #[test]
     fn serve_rejects_bad_configs() {
         assert!(serve(&ServeConfig { requests: 0, ..small_cfg(1) }).is_err());
         assert!(serve(&ServeConfig { queue_depth: 0, ..small_cfg(1) }).is_err());
@@ -832,6 +1223,11 @@ mod tests {
         assert!(serve(&ServeConfig { protection: never_scrubs, ..small_cfg(1) }).is_err());
         assert!(serve(&ServeConfig { slo_p99: Some(f64::NAN), ..small_cfg(1) }).is_err());
         assert!(serve(&ServeConfig { slo_p99: Some(-0.1), ..small_cfg(1) }).is_err());
+        assert!(serve(&ServeConfig { deadline: Some(0.0), ..small_cfg(1) }).is_err());
+        assert!(serve(&ServeConfig { deadline: Some(f64::NAN), ..small_cfg(1) }).is_err());
+        assert!(serve(&ServeConfig { slo_shed: Some(1.5), ..small_cfg(1) }).is_err());
+        assert!(serve(&ServeConfig { slo_shed: Some(-0.1), ..small_cfg(1) }).is_err());
+        assert!(serve(&ServeConfig { warmup: 6, ..small_cfg(1) }).is_err());
         // input-mutating / division-bearing workloads void the
         // resident-weights serving contract
         let lu = WorkloadKind::Lu { n: 8 };

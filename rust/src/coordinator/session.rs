@@ -130,9 +130,28 @@ pub struct ServeCell {
     pub served_before: u64,
 }
 
-/// What [`ExperimentSession::serve_request`] measured for one request.
+/// What a serving worker did with one request: ran it inside a protected
+/// window ([`RequestOutcome::Served`]) or shed it because its deadline was
+/// already blown at dequeue time ([`RequestOutcome::Shed`], the server's
+/// overload-control path — DESIGN.md §4.1).
+#[derive(Debug, Clone, Copy)]
+pub enum RequestOutcome {
+    /// The request executed inside a protected window.
+    Served(ServedOutcome),
+    /// The request was shed: its fault dose was still planted (the upset
+    /// process acted on resident memory during the request's interval
+    /// regardless of admission control) and then immediately patched back
+    /// to the repair-policy value — under register+memory protection the
+    /// resident-weight trajectory is identical to serving, only the
+    /// compute is skipped (see [`ExperimentSession::shed_request`] for
+    /// the other protections).
+    Shed(ShedOutcome),
+}
+
+/// What [`ExperimentSession::serve_request`] measured for one served
+/// request.
 #[derive(Debug, Clone, Copy, Default)]
-pub struct RequestOutcome {
+pub struct ServedOutcome {
     /// Distinct NaN words actually planted (dose draws may collide).
     pub nans_planted: u64,
     /// Trap counters of this request's armed window (zero for non-trap
@@ -147,6 +166,78 @@ pub struct RequestOutcome {
     /// Non-finite values in the response — zero under reactive
     /// protection, the paper's Fig. 1 catastrophe without it.
     pub output_nans: u64,
+}
+
+/// What [`ExperimentSession::shed_request`] did for one shed request.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShedOutcome {
+    /// Distinct NaN words planted by the request's fault dose.
+    pub nans_planted: u64,
+    /// Words patched back by the shed path's hygiene sweep — always equal
+    /// to `nans_planted`, so shedding closes its own fault ledger.
+    pub shed_repairs: u64,
+    /// Wall-clock seconds of the shed handling (plant + patch; O(dose)).
+    pub shed_secs: f64,
+}
+
+impl RequestOutcome {
+    /// Was this request shed instead of served?
+    pub fn is_shed(&self) -> bool {
+        matches!(self, RequestOutcome::Shed(_))
+    }
+
+    /// Distinct NaN words the fault process planted for this request
+    /// (served or shed — the dose lands either way).
+    pub fn nans_planted(&self) -> u64 {
+        match self {
+            RequestOutcome::Served(o) => o.nans_planted,
+            RequestOutcome::Shed(o) => o.nans_planted,
+        }
+    }
+
+    /// Trap counters of the request's armed window (zero when shed — no
+    /// protected window ran).
+    pub fn traps(&self) -> TrapStats {
+        match self {
+            RequestOutcome::Served(o) => o.traps,
+            RequestOutcome::Shed(_) => TrapStats::default(),
+        }
+    }
+
+    /// Proactive scrub-sweep repairs (served requests under
+    /// [`Protection::Scrub`] only).
+    pub fn scrub_repairs(&self) -> u64 {
+        match self {
+            RequestOutcome::Served(o) => o.scrub_repairs,
+            RequestOutcome::Shed(_) => 0,
+        }
+    }
+
+    /// Words the shed path patched back (zero when served).
+    pub fn shed_repairs(&self) -> u64 {
+        match self {
+            RequestOutcome::Served(_) => 0,
+            RequestOutcome::Shed(o) => o.shed_repairs,
+        }
+    }
+
+    /// Seconds the worker spent on the request: the protected window when
+    /// served, the plant-and-patch handling when shed.
+    pub fn service_secs(&self) -> f64 {
+        match self {
+            RequestOutcome::Served(o) => o.service_secs,
+            RequestOutcome::Shed(o) => o.shed_secs,
+        }
+    }
+
+    /// Non-finite values in the response (a shed request returns no
+    /// response, so zero).
+    pub fn output_nans(&self) -> u64 {
+        match self {
+            RequestOutcome::Served(o) => o.output_nans,
+            RequestOutcome::Shed(_) => 0,
+        }
+    }
 }
 
 /// Reusable executor for campaign cells (see module docs).
@@ -354,19 +445,7 @@ impl ExperimentSession {
 
         // The fault process acts between requests: plant the dose as
         // paper-pattern NaN words at placement-seed-derived positions.
-        let mut planted = 0u64;
-        if cell.dose > 0 {
-            let mut rng = crate::util::rng::Pcg64::seed(cell.placement_seed);
-            let mut idxs: Vec<usize> = (0..cell.dose)
-                .map(|_| rng.index(workload.input_len()))
-                .collect();
-            idxs.sort_unstable();
-            idxs.dedup();
-            planted = idxs.len() as u64;
-            for idx in idxs {
-                workload.poison_input(idx, crate::fp::nan::PAPER_NAN_BITS);
-            }
-        }
+        let planted = plant_dose(workload, cell.dose, cell.placement_seed).len() as u64;
 
         // Arming, proactive scrubbing, and the compute are all inside the
         // service window — protection overhead is what the latency SLO is
@@ -392,14 +471,88 @@ impl ExperimentSession {
         let output_nans = workload.output_nonfinite();
         self.cells_run += 1;
 
-        Ok(RequestOutcome {
+        Ok(RequestOutcome::Served(ServedOutcome {
             nans_planted: planted,
             traps,
             scrub_repairs,
             service_secs,
             output_nans,
-        })
+        }))
     }
+
+    /// Shed one request whose deadline is already blown (the server's
+    /// overload-control path, DESIGN.md §4.1): the fault interval's dose
+    /// is planted exactly as [`ExperimentSession::serve_request`] would
+    /// plant it — admission control cannot undo the upset process — and
+    /// then immediately patched back to the repair-policy value at the
+    /// same addresses, at O(dose) cost instead of a compute.
+    ///
+    /// Under [`Protection::RegisterMemory`] planting and patching both
+    /// resolve to the policy value — exactly what the trap path would
+    /// have left behind had the request been served — so the worker's
+    /// resident weights follow the *same trajectory* whether a request
+    /// was served or shed.  That preserves the invariant the serving
+    /// ledger proof rests on (every request closes its own plants before
+    /// the next one starts), which is what keeps `dose`/`nans_planted`
+    /// per request — and repairs in total — worker-count invariant even
+    /// when shed patterns differ between runs (asserted by
+    /// `rust/tests/integration_serve.rs`).  Under the other protections
+    /// the hygiene patch *repairs* corruption a served request would
+    /// have left resident (register-only never writes memory; none and
+    /// scrub-between-sweeps leave NaNs in place), so their trap/output
+    /// ledgers depend on which requests shed — those ledgers were
+    /// already placement-dependent without shedding (see the
+    /// [`crate::coordinator::server`] module docs); only the per-request
+    /// `dose`/`nans_planted` stream stays invariant for them.
+    pub fn shed_request(&mut self, cell: &ServeCell) -> Result<RequestOutcome> {
+        ensure_servable(cell.workload, cell.protection)?;
+        let cached = self.resident_entry(cell.workload, cell.resident_seed);
+        let workload: &mut dyn Workload = cached.workload.as_mut();
+
+        let t0 = Instant::now();
+        let idxs = plant_dose(workload, cell.dose, cell.placement_seed);
+        let repair_bits = scrub_value(cell.policy).to_bits();
+        for &idx in &idxs {
+            workload.poison_input(idx, repair_bits);
+        }
+        let shed_secs = t0.elapsed().as_secs_f64();
+        self.cells_run += 1;
+
+        Ok(RequestOutcome::Shed(ShedOutcome {
+            nans_planted: idxs.len() as u64,
+            shed_repairs: idxs.len() as u64,
+            shed_secs,
+        }))
+    }
+}
+
+/// The distinct input indices a request's dose lands on: `dose` draws
+/// from the placement-seeded PCG over `len` words, deduplicated (draws
+/// may collide).  The single derivation shared by the serving plant path
+/// below and the capacity planner's virtual-time probe
+/// ([`crate::coordinator::capacity`]) — model-mode planted counts match
+/// live runs because both call exactly this.
+pub(crate) fn dose_indices(len: usize, dose: u64, placement_seed: u64) -> Vec<usize> {
+    if dose == 0 {
+        return Vec::new();
+    }
+    let mut rng = crate::util::rng::Pcg64::seed(placement_seed);
+    let mut idxs: Vec<usize> = (0..dose).map(|_| rng.index(len)).collect();
+    idxs.sort_unstable();
+    idxs.dedup();
+    idxs
+}
+
+/// Plant `dose` paper-pattern NaN words at placement-seed-derived input
+/// positions; returns the distinct indices poisoned.  The single
+/// planting path `serve_request` and `shed_request` share, so a
+/// request's fault footprint is identical either way.
+fn plant_dose(workload: &mut dyn Workload, dose: u64, placement_seed: u64) -> Vec<usize> {
+    let idxs = dose_indices(workload.input_len(), dose, placement_seed);
+    for &idx in &idxs {
+        workload.poison_input(idx, crate::fp::nan::PAPER_NAN_BITS);
+    }
+    idxs
 }
 
 #[cfg(test)]
@@ -542,11 +695,12 @@ mod tests {
             let out = s
                 .serve_request(&serve_cell(2, i, Protection::RegisterMemory))
                 .unwrap();
-            assert_eq!(out.output_nans, 0, "reactive responses are NaN-free");
-            assert!(out.nans_planted >= 1 && out.nans_planted <= 2);
-            assert!(out.traps.sigfpe_total >= 1);
-            assert!(out.traps.memory_repairs() >= 1);
-            assert!(out.service_secs >= 0.0);
+            assert!(!out.is_shed());
+            assert_eq!(out.output_nans(), 0, "reactive responses are NaN-free");
+            assert!(out.nans_planted() >= 1 && out.nans_planted() <= 2);
+            assert!(out.traps().sigfpe_total >= 1);
+            assert!(out.traps().memory_repairs() >= 1);
+            assert!(out.service_secs() >= 0.0);
         }
         assert_eq!(s.pool_allocs_total(), 3, "weights stay resident");
         assert_eq!(s.cached_kinds(), 1);
@@ -556,9 +710,9 @@ mod tests {
     fn serve_without_protection_corrupts_responses() {
         let mut s = ExperimentSession::new();
         let out = s.serve_request(&serve_cell(3, 0, Protection::None)).unwrap();
-        assert_eq!(out.traps.sigfpe_total, 0);
+        assert_eq!(out.traps().sigfpe_total, 0);
         assert!(
-            out.output_nans > 0,
+            out.output_nans() > 0,
             "Fig. 1: unprotected NaNs reach the response"
         );
     }
@@ -569,16 +723,83 @@ mod tests {
         let out = s
             .serve_request(&serve_cell(3, 0, Protection::Scrub { period_runs: 1 }))
             .unwrap();
-        assert_eq!(out.traps.sigfpe_total, 0);
-        assert!(out.scrub_repairs >= 1, "planted NaNs scrubbed before compute");
-        assert_eq!(out.output_nans, 0);
+        assert_eq!(out.traps().sigfpe_total, 0);
+        assert!(out.scrub_repairs() >= 1, "planted NaNs scrubbed before compute");
+        assert_eq!(out.output_nans(), 0);
         // served_before = 1, period 2 → no sweep this request: the planted
         // NaNs survive into the response (the scrub-gap vulnerability)
         let out = s
             .serve_request(&serve_cell(3, 1, Protection::Scrub { period_runs: 2 }))
             .unwrap();
-        assert_eq!(out.scrub_repairs, 0);
-        assert!(out.output_nans > 0);
+        assert_eq!(out.scrub_repairs(), 0);
+        assert!(out.output_nans() > 0);
+    }
+
+    #[test]
+    fn shed_request_closes_its_own_fault_ledger() {
+        let mut s = ExperimentSession::new();
+        s.prepare_resident(WorkloadKind::MatMul { n: 16 }, 9);
+        let out = s
+            .shed_request(&serve_cell(3, 0, Protection::RegisterMemory))
+            .unwrap();
+        assert!(out.is_shed());
+        assert!(out.nans_planted() >= 1 && out.nans_planted() <= 3);
+        assert_eq!(
+            out.shed_repairs(),
+            out.nans_planted(),
+            "every planted word patched back"
+        );
+        assert_eq!(out.traps().sigfpe_total, 0, "no protected window ran");
+        assert_eq!(out.output_nans(), 0);
+
+        // The shed path left no NaNs behind: a dose-free served request
+        // right after it must be completely trap-free.
+        let clean = s
+            .serve_request(&serve_cell(0, 1, Protection::RegisterMemory))
+            .unwrap();
+        assert_eq!(clean.traps().sigfpe_total, 0, "resident weights are clean");
+        assert_eq!(clean.output_nans(), 0);
+    }
+
+    #[test]
+    fn shed_then_serve_matches_serve_only_trap_ledger() {
+        // Shedding is state-equivalent to serving: a later request's trap
+        // counters depend only on its own dose, not on whether earlier
+        // requests were served or shed.
+        let mut served_only = ExperimentSession::new();
+        served_only.prepare_resident(WorkloadKind::MatMul { n: 16 }, 9);
+        served_only
+            .serve_request(&serve_cell(2, 0, Protection::RegisterMemory))
+            .unwrap();
+        let a = served_only
+            .serve_request(&serve_cell(2, 1, Protection::RegisterMemory))
+            .unwrap();
+
+        let mut shed_first = ExperimentSession::new();
+        shed_first.prepare_resident(WorkloadKind::MatMul { n: 16 }, 9);
+        shed_first
+            .shed_request(&serve_cell(2, 0, Protection::RegisterMemory))
+            .unwrap();
+        let b = shed_first
+            .serve_request(&serve_cell(2, 1, Protection::RegisterMemory))
+            .unwrap();
+
+        let (mut at, mut bt) = (a.traps(), b.traps());
+        at.trap_cycles_total = 0;
+        bt.trap_cycles_total = 0;
+        assert_eq!(at, bt, "request 1's ledger is independent of request 0's fate");
+        assert_eq!(a.nans_planted(), b.nans_planted());
+    }
+
+    #[test]
+    fn shed_rejects_unservable_configs() {
+        let mut s = ExperimentSession::new();
+        assert!(s.shed_request(&serve_cell(1, 0, Protection::Ecc)).is_err());
+        let cell = ServeCell {
+            workload: WorkloadKind::Lu { n: 8 },
+            ..serve_cell(1, 0, Protection::RegisterMemory)
+        };
+        assert!(s.shed_request(&cell).is_err());
     }
 
     #[test]

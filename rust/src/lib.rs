@@ -21,7 +21,10 @@
 //!   ([`approxmem`]) with native workloads ([`workloads`]) and baselines
 //!   ([`abft`], ECC, scrubbing).  The same engine serves continuous
 //!   request traffic against resident approximate-memory weights
-//!   ([`coordinator::server`], the `nanrepair serve` subcommand).
+//!   ([`coordinator::server`], the `nanrepair serve` subcommand) with
+//!   deadline shedding and graceful drain, and a capacity planner
+//!   ([`coordinator::capacity`], `nanrepair capacity`) searches that
+//!   server for each configuration's SLO knee.
 //! * **L2/L1** — build-time Python (never on the request path): a JAX
 //!   model whose matvec/matmul runs a Pallas NaN-repair kernel, AOT-
 //!   lowered to HLO text and executed via PJRT ([`runtime`]).

@@ -1,8 +1,9 @@
 //! `nanrepair` — CLI launcher for the reactive-NaN-repair system.
 //!
 //! One subcommand per paper table/figure plus the extension experiments
-//! (DESIGN.md §6) and the serving harness (`serve`, DESIGN.md §4).
-//! `nanrepair help` lists everything.
+//! (DESIGN.md §6), the serving harness (`serve`, DESIGN.md §4), the
+//! capacity planner (`capacity`, DESIGN.md §4.1), and the CI perf gate
+//! (`bench-diff`).  `nanrepair help` lists everything.
 //!
 //! Global options (every subcommand): `--json` / `--format json|csv|text`
 //! select the output encoding, `--out FILE` redirects it, `--workers N`
@@ -14,7 +15,9 @@
 
 use anyhow::Result;
 use nanrepair::approxmem::injector::InjectionSpec;
+use nanrepair::bench;
 use nanrepair::coordinator::campaign::{Campaign, CampaignConfig, CampaignReport};
+use nanrepair::coordinator::capacity;
 use nanrepair::coordinator::protection::Protection;
 use nanrepair::coordinator::scheduler;
 use nanrepair::coordinator::server;
@@ -118,9 +121,67 @@ fn app() -> App {
                 )
                 .opt("policy", Some("zero"), "repair value: zero|one|neighbor|<float>")
                 .opt("queue-depth", Some("32"), "bounded request-queue capacity")
-                .opt("arrival", Some("closed"), "arrival process: closed | open:RPS")
+                .opt(
+                    "arrival",
+                    Some("closed"),
+                    "arrival process: closed | open:RPS | poisson:RPS",
+                )
                 .opt("slo-p99", None, "p99 latency target in ms (verdict + violation count)")
+                .opt(
+                    "deadline",
+                    None,
+                    "per-request deadline in ms; blown-at-dequeue requests are shed \
+                     (default: the --slo-p99 budget; 0 disables shedding)",
+                )
+                .opt("warmup", Some("0"), "leading requests excluded from measured quantiles")
+                .opt("slo-shed", None, "max shed fraction the SLO verdict tolerates")
                 .opt("seed", Some("42"), "PRNG seed"),
+        )
+        .cmd(
+            CmdSpec::new("capacity", "find the SLO knee (max sustainable RPS) per configuration")
+                .opt("workloads", Some("matmul:64"), "comma-separated resident workload specs")
+                .opt(
+                    "protections",
+                    Some("memory"),
+                    "comma-separated protections: none|register|memory|scrub:K",
+                )
+                .opt("fault-rates", Some("1e-4"), "comma-separated per-word fault rates")
+                .opt("policy", Some("zero"), "repair value: zero|one|neighbor|<float>")
+                .opt("requests", Some("200"), "requests per probe (warmup included)")
+                .opt("warmup", Some("20"), "leading requests excluded from probe quantiles")
+                .opt(
+                    "serve-workers",
+                    Some("2"),
+                    "serving workers inside each probe (--workers parallelizes the matrix)",
+                )
+                .opt("queue-depth", Some("32"), "bounded request-queue capacity per probe")
+                .opt("slo-p99", Some("5"), "p99 latency target in ms")
+                .opt("slo-shed", Some("0.01"), "max shed fraction at the knee")
+                .opt(
+                    "deadline",
+                    None,
+                    "per-request probe deadline in ms, must be > 0 — capacity probes always \
+                     shed doomed requests (default: the SLO budget)",
+                )
+                .opt("min-rps", Some("50"), "ramp origin (lowest rate probed)")
+                .opt("max-rps", Some("100000"), "ramp ceiling (highest rate probed)")
+                .opt("tolerance", Some("0.05"), "relative knee-bracket width to bisect to")
+                .opt("arrival", Some("open"), "arrival shape probes pace with: open | poisson")
+                .flag(
+                    "live",
+                    "probe with real serve runs (wall-clock) instead of the deterministic model",
+                )
+                .opt("seed", Some("42"), "PRNG seed"),
+        )
+        .cmd(
+            CmdSpec::new("bench-diff", "compare a fresh bench JSON file against a committed baseline")
+                .opt("baseline", None, "committed baseline (JSON-lines bench records)")
+                .opt("current", None, "freshly generated bench JSON-lines file")
+                .opt(
+                    "max-regress",
+                    Some("0.30"),
+                    "tolerated relative slowdown before failing (0.30 = 30 %)",
+                ),
         )
 }
 
@@ -425,6 +486,15 @@ fn main() -> Result<()> {
             }
         }
         "serve" => {
+            let slo_p99 = m.get_parse_opt::<f64>("slo-p99")?.map(|ms| ms / 1e3);
+            // --deadline defaults to the SLO budget: a request that can
+            // no longer meet the target is shed, not served late.  An
+            // explicit 0 disables shedding.
+            let deadline = match m.get_parse_opt::<f64>("deadline")? {
+                Some(ms) if ms == 0.0 => None,
+                Some(ms) => Some(ms / 1e3),
+                None => slo_p99,
+            };
             let cfg = server::ServeConfig {
                 workload: WorkloadKind::parse(m.get_str("workload")?)?,
                 protection: Protection::parse(m.get_str("protection")?)?,
@@ -435,11 +505,10 @@ fn main() -> Result<()> {
                 fault_rate: m.get_parse("fault-rate")?,
                 seed: m.get_parse("seed")?,
                 arrival: server::Arrival::parse(m.get_str("arrival")?)?,
-                slo_p99: m
-                    .get("slo-p99")
-                    .map(|v| v.parse::<f64>())
-                    .transpose()?
-                    .map(|ms| ms / 1e3),
+                slo_p99,
+                deadline,
+                warmup: m.get_parse("warmup")?,
+                slo_shed: m.get_parse_opt("slo-shed")?,
             };
             let rep = server::serve(&cfg)?;
             match &mut sink {
@@ -449,6 +518,68 @@ fn main() -> Result<()> {
                         s.record(&rec)?;
                     }
                 }
+            }
+        }
+        "capacity" => {
+            let cfg = capacity::CapacityConfig {
+                workloads: m.get_list("workloads")?,
+                protections: m.get_list("protections")?,
+                fault_rates: m.get_list("fault-rates")?,
+                policy: RepairPolicy::parse(m.get_str("policy")?)?,
+                requests: m.get_parse("requests")?,
+                warmup: m.get_parse("warmup")?,
+                serve_workers: m.get_parse("serve-workers")?,
+                queue_depth: m.get_parse("queue-depth")?,
+                seed: m.get_parse("seed")?,
+                slo_p99: m.get_parse::<f64>("slo-p99")? / 1e3,
+                slo_shed: m.get_parse("slo-shed")?,
+                deadline: m.get_parse_opt::<f64>("deadline")?.map(|ms| ms / 1e3),
+                min_rps: m.get_parse("min-rps")?,
+                max_rps: m.get_parse("max-rps")?,
+                tolerance: m.get_parse("tolerance")?,
+                arrival: capacity::ArrivalShape::parse(m.get_str("arrival")?)?,
+                mode: if m.flag("live") {
+                    capacity::ProbeMode::Live
+                } else {
+                    capacity::ProbeMode::Model
+                },
+                model: capacity::ServiceModel::default(),
+            };
+            // --workers parallelizes the configuration matrix; probe
+            // serve-worker counts stay pinned so knees are comparable.
+            let rep = capacity::plan(&cfg, workers)?;
+            match &mut sink {
+                None => rep.knee_table().print(),
+                Some(s) => {
+                    for rec in rep.records() {
+                        s.record(&rec)?;
+                    }
+                }
+            }
+        }
+        "bench-diff" => {
+            let baseline = bench::load_bench_json(m.get_str("baseline")?)?;
+            let current = bench::load_bench_json(m.get_str("current")?)?;
+            let diff = bench::diff_baselines(&baseline, &current, m.get_parse("max-regress")?);
+            match &mut sink {
+                None => diff.table().print(),
+                Some(s) => {
+                    for rec in diff.records() {
+                        s.record(&rec)?;
+                    }
+                }
+            }
+            if diff.failed() {
+                if let Some(s) = &mut sink {
+                    s.flush()?;
+                }
+                anyhow::bail!(
+                    "bench baseline regression: {} of {} benches slowed past the budget, \
+                     {} missing from the current run",
+                    diff.regressions().len(),
+                    diff.deltas.len(),
+                    diff.missing_in_current.len()
+                );
             }
         }
         "artifacts" => {

@@ -88,6 +88,22 @@ impl Matches {
             .map_err(|e| anyhow!("--{name}={raw}: {e}"))
     }
 
+    /// Typed view of an *optional* option: `None` when absent, parse
+    /// error (with the offending value) when present but malformed —
+    /// callers must not silently drop a mistyped `--deadline 5x`.
+    pub fn get_parse_opt<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{name}={raw}: {e}")),
+        }
+    }
+
     /// Parse a comma-separated list.
     pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>>
     where
@@ -327,6 +343,16 @@ mod tests {
     fn missing_required_option_errors_on_access() {
         let m = app().parse(&args(&["run"])).unwrap().unwrap();
         assert!(m.get_str("name").is_err());
+    }
+
+    #[test]
+    fn optional_typed_access() {
+        let m = app().parse(&args(&["run"])).unwrap().unwrap();
+        assert_eq!(m.get_parse_opt::<f64>("name").unwrap(), None, "absent is None");
+        let m = app().parse(&args(&["run", "--name", "2.5"])).unwrap().unwrap();
+        assert_eq!(m.get_parse_opt::<f64>("name").unwrap(), Some(2.5));
+        let m = app().parse(&args(&["run", "--name", "5x"])).unwrap().unwrap();
+        assert!(m.get_parse_opt::<f64>("name").is_err(), "malformed must error");
     }
 
     #[test]

@@ -179,6 +179,14 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Boolean view of `Bool`.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
 }
 
 fn skip_ws(b: &[u8], pos: &mut usize) {

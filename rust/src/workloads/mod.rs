@@ -106,6 +106,26 @@ impl WorkloadKind {
         }
     }
 
+    /// FLOP count of one `run()`, computable without building the
+    /// workload — e.g. the capacity planner's deterministic service-time
+    /// model ([`crate::coordinator::capacity`]) costs a probe request
+    /// from this.  Kept in lock-step with every [`Workload::flops`]
+    /// implementation by the `flops_matches_built_workloads` test.
+    pub fn flops(&self) -> u64 {
+        match *self {
+            WorkloadKind::MatMul { n } => 2 * (n as u64).pow(3),
+            WorkloadKind::MatVec { n } => 2 * (n as u64).pow(2),
+            WorkloadKind::Jacobi { n, iters } => (iters as u64) * 2 * (n as u64).pow(2),
+            WorkloadKind::Cg { n, iters } => {
+                (iters as u64) * (2 * (n as u64).pow(2) + 10 * n as u64)
+            }
+            WorkloadKind::Lu { n } => (2 * (n as u64).pow(3)) / 3,
+            WorkloadKind::Stencil { n, steps } => {
+                (steps as u64) * 7 * ((n as u64).saturating_sub(2)).pow(2)
+            }
+        }
+    }
+
     /// Problem size (the `n` every variant carries).
     pub fn size(&self) -> usize {
         match *self {
@@ -132,6 +152,17 @@ impl WorkloadKind {
                 Box::new(stencil::Stencil::new(pool, n, steps, seed))
             }
         }
+    }
+}
+
+/// `FromStr` delegates to [`WorkloadKind::parse`], so comma-separated
+/// CLI lists (`Matches::get_list`) parse workload specs like any other
+/// typed option.
+impl std::str::FromStr for WorkloadKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::parse(s)
     }
 }
 
@@ -316,6 +347,12 @@ mod tests {
         );
         assert!(WorkloadKind::parse("matmul").is_err());
         assert!(WorkloadKind::parse("bogus:1").is_err());
+        // FromStr delegates to parse (the CLI's comma-list path)
+        assert_eq!(
+            "matmul:8".parse::<WorkloadKind>().unwrap(),
+            WorkloadKind::MatMul { n: 8 }
+        );
+        assert!("bogus:1".parse::<WorkloadKind>().is_err());
     }
 
     #[test]
@@ -349,6 +386,26 @@ mod tests {
                 kind.input_words(),
                 w.input_len(),
                 "{kind}: input_words out of lock-step with the built workload"
+            );
+        }
+    }
+
+    #[test]
+    fn flops_matches_built_workloads() {
+        let pool = ApproxPool::new();
+        for kind in [
+            WorkloadKind::MatMul { n: 9 },
+            WorkloadKind::MatVec { n: 9 },
+            WorkloadKind::Jacobi { n: 9, iters: 3 },
+            WorkloadKind::Cg { n: 9, iters: 3 },
+            WorkloadKind::Lu { n: 9 },
+            WorkloadKind::Stencil { n: 9, steps: 3 },
+        ] {
+            let w = kind.build(&pool, 1);
+            assert_eq!(
+                kind.flops(),
+                w.flops(),
+                "{kind}: kind-level flops out of lock-step with the built workload"
             );
         }
     }

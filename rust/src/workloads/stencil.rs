@@ -128,7 +128,9 @@ impl Workload for Stencil {
     }
 
     fn flops(&self) -> u64 {
-        (self.steps as u64) * 7 * ((self.n as u64) - 2).pow(2)
+        // saturating: degenerate n < 2 grids have no interior points
+        // (kept in lock-step with `WorkloadKind::flops`)
+        (self.steps as u64) * 7 * ((self.n as u64).saturating_sub(2)).pow(2)
     }
 }
 

@@ -1,5 +1,6 @@
 //! Integration: the serving subsystem (`coordinator::server` + the
-//! `nanrepair serve` subcommand) — this PR's acceptance contracts.
+//! `nanrepair serve` subcommand) and the capacity planner on top of it —
+//! acceptance contracts.
 //!
 //! * a short serve run under deterministic fault injection ends with
 //!   **zero NaNs in responses** and **repairs > 0**;
@@ -7,8 +8,16 @@
 //!   4-worker run agree on per-request trap counters (and therefore on
 //!   total repairs) because doses and placements derive from the seed and
 //!   request index alone;
+//! * **overload control**: a saturating open-loop burst against a tight
+//!   `--deadline` sheds (never serves late), drains to zero queue
+//!   residue, and keeps the fault ledger worker-count invariant even
+//!   though *which* requests shed is timing-dependent;
 //! * `nanrepair serve --json` emits one valid JSON-lines `serve_request`
-//!   record per request plus `serve_latency` and `serve_slo` summaries.
+//!   record per request plus `serve_latency` and `serve_slo` summaries;
+//! * `nanrepair capacity` (model mode) emits **byte-identical**
+//!   `capacity_point`/`capacity_knee` streams at any `--workers`, with
+//!   the knee bracketed by a passing probe below and a failing probe
+//!   above it.
 
 use std::collections::HashSet;
 use std::process::Command;
@@ -60,10 +69,10 @@ fn serve_serial_vs_parallel_repair_ledger_identical() {
     for (s, p) in serial.results.iter().zip(&parallel.results) {
         assert_eq!(s.index, p.index);
         assert_eq!(s.dose, p.dose, "request {}: dose differs", s.index);
-        assert_eq!(s.nans_planted, p.nans_planted);
-        assert_eq!(s.output_nans, 0);
-        assert_eq!(p.output_nans, 0);
-        let (mut st, mut pt) = (s.traps, p.traps);
+        assert_eq!(s.nans_planted(), p.nans_planted());
+        assert_eq!(s.output_nans(), 0);
+        assert_eq!(p.output_nans(), 0);
+        let (mut st, mut pt) = (s.traps(), p.traps());
         st.trap_cycles_total = 0;
         pt.trap_cycles_total = 0;
         assert_eq!(st, pt, "request {}: per-request trap counters", s.index);
@@ -141,6 +150,135 @@ fn cli_serve_json_emits_requests_and_slo() {
     assert!(matches!(slo.get("slo_met"), Some(Json::Bool(true))), "{stdout}");
 }
 
+/// Acceptance (capacity planning): `nanrepair capacity` in model mode is
+/// byte-deterministic — same seed ⇒ identical record stream at
+/// `--workers 1` and `--workers 4` — and the reported knee is bracketed
+/// by a passing probe at the knee rate and a failing probe above it.
+#[test]
+fn cli_capacity_json_deterministic_across_workers() {
+    let args = |workers: &str| {
+        vec![
+            "capacity",
+            "--workloads",
+            "matmul:16",
+            "--protections",
+            "memory",
+            "--fault-rates",
+            "1e-3",
+            "--requests",
+            "60",
+            "--warmup",
+            "10",
+            "--serve-workers",
+            "2",
+            "--queue-depth",
+            "8",
+            // 0.2 ms: tight enough that the default 100k rps ceiling is
+            // far past the model's knee, so the ramp must fail and the
+            // bracket must close below the ceiling
+            "--slo-p99",
+            "0.2",
+            "--slo-shed",
+            "0.05",
+            "--min-rps",
+            "100",
+            "--seed",
+            "3",
+            "--workers",
+            workers,
+            "--json",
+        ]
+    };
+    let (serial, err1, ok1) = run_cli(&args("1"));
+    let (parallel, err2, ok2) = run_cli(&args("4"));
+    assert!(ok1, "stderr: {err1}");
+    assert!(ok2, "stderr: {err2}");
+    assert_eq!(serial, parallel, "matrix worker count changed the bytes");
+
+    let lines: Vec<&str> = serial.lines().filter(|l| !l.is_empty()).collect();
+    assert!(lines.len() >= 3, "{serial}");
+    let records: Vec<Record> = lines
+        .iter()
+        .map(|l| Record::from_json(&Json::parse(l).unwrap_or_else(|e| panic!("{e}: {l}"))).unwrap())
+        .collect();
+    let knee_rec = records.last().unwrap();
+    assert_eq!(knee_rec.kind(), "capacity_knee");
+    assert!(records[..records.len() - 1]
+        .iter()
+        .all(|r| r.kind() == "capacity_point"));
+
+    let knee = knee_rec.get("knee_rps").and_then(Json::as_f64).unwrap();
+    assert!(knee > 0.0, "{serial}");
+    let ceiling = knee_rec.get("ceiling").and_then(Json::as_bool).unwrap();
+    assert!(!ceiling, "a 0.2 ms SLO must fail below the 100k rps ceiling: {serial}");
+    let points: Vec<(f64, bool)> = records[..records.len() - 1]
+        .iter()
+        .map(|r| {
+            (
+                r.get("rps").and_then(Json::as_f64).unwrap(),
+                r.get("pass").and_then(Json::as_bool).unwrap(),
+            )
+        })
+        .collect();
+    assert!(
+        points.iter().any(|&(rps, pass)| pass && rps == knee),
+        "knee measured by a passing probe: {serial}"
+    );
+    if !ceiling {
+        let fail = knee_rec.get("fail_rps").and_then(Json::as_f64).unwrap();
+        assert!(fail > knee, "bracket above the knee");
+        assert!(
+            points.iter().any(|&(rps, pass)| !pass && rps == fail),
+            "bracket closed by a failing probe: {serial}"
+        );
+    }
+}
+
+/// `serve --deadline` sheds through the CLI and reports it on the
+/// `serve_slo` record (shed counted, never served late, zero residue).
+#[test]
+fn cli_serve_deadline_sheds_and_reports() {
+    let (stdout, stderr, ok) = run_cli(&[
+        "serve",
+        "--workload",
+        "matmul:16",
+        "--requests",
+        "12",
+        "--fault-rate",
+        "1e-2",
+        "--queue-depth",
+        "3",
+        "--arrival",
+        "open:1000000",
+        "--deadline",
+        "0.001",
+        "--seed",
+        "5",
+        "--workers",
+        "2",
+        "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let slo_line = stdout
+        .lines()
+        .rev()
+        .find(|l| !l.is_empty())
+        .expect("a final record");
+    let slo = Json::parse(slo_line).unwrap();
+    assert_eq!(slo.get("record").and_then(Json::as_str), Some("serve_slo"));
+    let shed = slo.get("shed").and_then(Json::as_f64).unwrap();
+    let served = slo.get("served").and_then(Json::as_f64).unwrap();
+    assert!(shed > 0.0, "1 µs deadline under a burst must shed: {stdout}");
+    assert_eq!(served + shed, 12.0);
+    assert_eq!(slo.get("queue_residue").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(slo.get("output_nans").and_then(Json::as_f64), Some(0.0));
+    let deadline = slo.get("deadline_secs").and_then(Json::as_f64).unwrap();
+    assert!(
+        (deadline - 1e-6).abs() < 1e-12,
+        "0.001 ms parsed to seconds, got {deadline}"
+    );
+}
+
 /// Default text mode renders the summary table (no JSON anywhere), and
 /// the README quickstart's flag set is accepted.
 #[test]
@@ -177,4 +315,87 @@ fn serve_open_loop_arrivals() {
     // generator's and collector's barrier wake-ups on loaded CI runners
     assert!(rep.wall_secs >= 24.0 / 1000.0, "paced by the arrival schedule");
     assert_eq!(rep.output_nans_total(), 0);
+}
+
+/// Poisson arrivals (the bursty open-loop shape) serve clean and follow
+/// the deterministic schedule the seed fixes.
+#[test]
+fn serve_poisson_arrivals() {
+    let mut c = cfg(2);
+    c.workload = WorkloadKind::MatMul { n: 16 };
+    c.requests = 10;
+    c.fault_rate = 1e-2;
+    c.arrival = Arrival::Poisson { rps: 500.0 };
+    let offsets = c.arrival.offsets(c.seed, c.requests).unwrap();
+    assert_eq!(
+        offsets,
+        Arrival::Poisson { rps: 500.0 }.offsets(c.seed, 10).unwrap(),
+        "schedule is a pure function of the seed"
+    );
+    let rep = serve(&c).unwrap();
+    assert_eq!(rep.results.len(), 10);
+    assert_eq!(rep.output_nans_total(), 0);
+    assert_eq!(rep.shed_total(), 0, "no deadline set");
+}
+
+fn shed_cfg(workers: usize) -> ServeConfig {
+    ServeConfig {
+        workload: WorkloadKind::MatMul { n: 48 },
+        protection: Protection::RegisterMemory,
+        requests: 40,
+        workers,
+        queue_depth: 4,
+        fault_rate: 2e-3,
+        seed: 13,
+        // the whole burst is due ~instantly; a 1 µs deadline is blown by
+        // the time any worker dequeues, so shedding must kick in
+        arrival: Arrival::Open { rps: 1e6 },
+        deadline: Some(1e-6),
+        ..Default::default()
+    }
+}
+
+/// Acceptance (overload control): a saturating probe against a tight
+/// deadline sheds, drains to zero residue, and the fault ledger —
+/// per-request doses and planted words, and repairs covering every
+/// plant — is identical serial vs 4 workers even though *which*
+/// requests shed is timing-dependent.
+#[test]
+fn serve_shed_drain_ledger_is_worker_count_invariant() {
+    let serial = serve(&shed_cfg(1)).unwrap();
+    let parallel = serve(&shed_cfg(4)).unwrap();
+    for rep in [&serial, &parallel] {
+        assert_eq!(rep.results.len(), 40);
+        assert_eq!(rep.served_total() + rep.shed_total(), 40);
+        assert!(rep.shed_total() > 0, "tight deadline must shed");
+        assert_eq!(rep.queue_residue, 0, "post-drain queue residue");
+        assert!(rep.drain_secs >= 0.0);
+        assert_eq!(rep.output_nans_total(), 0, "nothing served corrupt or late");
+        // shedding closes its own ledger: every planted word of a shed
+        // request is patched back by the shed path itself
+        for r in &rep.results {
+            if r.is_shed() {
+                assert_eq!(r.outcome.shed_repairs(), r.nans_planted());
+                assert_eq!(r.traps().sigfpe_total, 0);
+            }
+        }
+        assert!(
+            rep.repairs_total() >= rep.nans_planted_total(),
+            "every planted NaN was repaired by some path"
+        );
+    }
+    // the fault ledger rides the request stream, not the shed pattern:
+    // doses and planted words agree per request across worker counts
+    for (s, p) in serial.results.iter().zip(&parallel.results) {
+        assert_eq!(s.index, p.index);
+        assert_eq!(s.dose, p.dose, "request {}: dose differs", s.index);
+        assert_eq!(
+            s.nans_planted(),
+            p.nans_planted(),
+            "request {}: planted words differ",
+            s.index
+        );
+    }
+    assert_eq!(serial.dose_total(), parallel.dose_total());
+    assert_eq!(serial.nans_planted_total(), parallel.nans_planted_total());
 }

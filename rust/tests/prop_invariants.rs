@@ -223,3 +223,40 @@ fn prop_sweep_alignment_consistency() {
         },
     );
 }
+
+/// Latency histogram (the serving path's tail-latency record): bucketed
+/// quantile estimates are monotone in the requested quantile and always
+/// clamped to the observed extremes, for any sample set spanning the
+/// bucket range and beyond it.
+#[test]
+fn prop_latency_histogram_quantiles_monotone_and_clamped() {
+    use nanrepair::util::report::LatencyHistogram;
+    assert_prop(
+        "latency-hist-monotone-clamped",
+        11,
+        400,
+        |rng| {
+            let n = rng.index(60) + 1;
+            // log-uniform over 10^-8 .. 10^4 s: exercises the underflow
+            // bucket, the full geometric range, and the overflow bucket
+            let samples: Vec<f64> = (0..n)
+                .map(|_| 10f64.powf(rng.range_f64(-8.0, 4.0)))
+                .collect();
+            let qs: Vec<f64> = (0..8).map(|_| rng.next_f64()).collect();
+            (samples, qs)
+        },
+        |(samples, qs)| {
+            let mut h = LatencyHistogram::new();
+            for &s in samples {
+                h.observe(s);
+            }
+            let (lo, hi) = (h.min(), h.max());
+            let mut qs = qs.clone();
+            qs.extend([0.0, 0.5, 0.99, 1.0]);
+            qs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let estimates: Vec<f64> = qs.iter().map(|&q| h.quantile(q)).collect();
+            estimates.windows(2).all(|w| w[0] <= w[1])
+                && estimates.iter().all(|&e| e >= lo && e <= hi)
+        },
+    );
+}
