@@ -18,6 +18,14 @@
 //! `capacity_model/knee` times one full deterministic knee search
 //! (`nanrepair capacity`'s model mode).
 //!
+//! Mixed-workload variants cover the servability-contract path:
+//! `serve_mix` drives a 3-kind weighted mix (matmul + jacobi + cg under
+//! the division-safe `one` policy) at 1/4/8 workers, and
+//! `serve_restore` serves a stencil-heavy mix so the copy-on-serve
+//! restore cost is a bench column of its own (the run asserts
+//! `restore_secs_total > 0`, so the column really measures the restore
+//! path).
+//!
 //! `cargo bench --bench sched_batch` (env NANREPAIR_BENCH_QUICK=1 for CI,
 //! NANREPAIR_SCHED_CELLS=N to override the batch size,
 //! NANREPAIR_BENCH_JSON=FILE to write the records as a JSON baseline).
@@ -33,7 +41,8 @@ use nanrepair::coordinator::campaign::CampaignConfig;
 use nanrepair::coordinator::capacity::{self, CapacityConfig};
 use nanrepair::coordinator::protection::Protection;
 use nanrepair::coordinator::scheduler;
-use nanrepair::coordinator::server::{self, Arrival, ServeConfig};
+use nanrepair::coordinator::server::{self, Arrival, RequestMix, ServeConfig};
+use nanrepair::repair::policy::RepairPolicy;
 use nanrepair::workloads::WorkloadKind;
 
 fn batch(cells: usize, n: usize, protection: Protection) -> Vec<CampaignConfig> {
@@ -83,7 +92,7 @@ fn serve_sweep(r: &mut Runner, requests: usize, n: usize) -> Vec<(usize, f64)> {
             &format!("serve{requests}x{n}/workers{workers}"),
             Bench::new(move || {
                 let rep = server::serve(&ServeConfig {
-                    workload: WorkloadKind::MatMul { n },
+                    mix: RequestMix::single(WorkloadKind::MatMul { n }),
                     protection: Protection::RegisterMemory,
                     requests,
                     workers,
@@ -94,6 +103,40 @@ fn serve_sweep(r: &mut Runner, requests: usize, n: usize) -> Vec<(usize, f64)> {
                     ..Default::default()
                 })
                 .expect("serve runs");
+                assert_eq!(rep.output_nans_total(), 0);
+            })
+            .samples(5)
+            .budget(2.0),
+        );
+        throughput.push((workers, requests as f64 / res.summary.mean));
+    }
+    throughput
+}
+
+/// Bench a 3-kind weighted mix (the `serve --mix` request path: multiple
+/// residents per worker, division-safe policy for jacobi/cg) at 1/4/8
+/// workers; returns (workers, req/s).
+fn serve_mix_sweep(r: &mut Runner, requests: usize, n: usize) -> Vec<(usize, f64)> {
+    let mut throughput = Vec::new();
+    for workers in [1usize, 4, 8] {
+        let mix = RequestMix::parse(&format!("matmul:{n}:0.5,jacobi:{n}:10:0.3,cg:{n}:10:0.2"))
+            .expect("mix parses");
+        let res = r.bench(
+            &format!("serve_mix{requests}x{n}/workers{workers}"),
+            Bench::new(move || {
+                let rep = server::serve(&ServeConfig {
+                    mix: mix.clone(),
+                    protection: Protection::RegisterMemory,
+                    policy: RepairPolicy::One,
+                    requests,
+                    workers,
+                    queue_depth: 16,
+                    fault_rate: 1e-3,
+                    seed: 42,
+                    arrival: Arrival::Closed,
+                    ..Default::default()
+                })
+                .expect("mixed serve runs");
                 assert_eq!(rep.output_nans_total(), 0);
             })
             .samples(5)
@@ -136,6 +179,38 @@ fn main() {
     // sized to keep that fixed cost a small fraction of the sample.
     let serve_requests = if r.is_quick() { 32 } else { 64 };
     let served = serve_sweep(&mut r, serve_requests, n);
+    // mixed-workload serving: 3 kinds resident per worker, requests
+    // stamped by mix weight, division-safe policy for jacobi/cg
+    let served_mix = serve_mix_sweep(&mut r, serve_requests, n);
+    // copy-on-serve: a stencil-heavy mix pays a pristine restore per
+    // served stencil request — its own bench column, asserted non-zero
+    // so regressions in the restore path cannot hide
+    r.bench(
+        &format!("serve_restore{serve_requests}x{n}/workers4"),
+        Bench::new(move || {
+            let mix = RequestMix::parse(&format!("stencil:{n}:5:0.7,matmul:{n}:0.3"))
+                .expect("mix parses");
+            let rep = server::serve(&ServeConfig {
+                mix,
+                protection: Protection::RegisterMemory,
+                requests: serve_requests,
+                workers: 4,
+                queue_depth: 8,
+                fault_rate: 1e-3,
+                seed: 42,
+                arrival: Arrival::Closed,
+                ..Default::default()
+            })
+            .expect("restore serve runs");
+            assert_eq!(rep.output_nans_total(), 0);
+            assert!(
+                rep.restore_secs_total() > 0.0,
+                "stencil-heavy mix must exercise copy-on-serve restore"
+            );
+        })
+        .samples(5)
+        .budget(2.0),
+    );
     // overload control: the same serve path saturated by an open-loop
     // burst against a tight deadline, so every sample exercises the
     // shed (plant + patch-back) and graceful-drain machinery
@@ -143,7 +218,7 @@ fn main() {
         &format!("serve_shed{serve_requests}x{n}/workers4"),
         Bench::new(move || {
             let rep = server::serve(&ServeConfig {
-                workload: WorkloadKind::MatMul { n },
+                mix: RequestMix::single(WorkloadKind::MatMul { n }),
                 protection: Protection::RegisterMemory,
                 requests: serve_requests,
                 workers: 4,
@@ -168,7 +243,7 @@ fn main() {
         Bench::new(|| {
             let rep = capacity::plan(
                 &CapacityConfig {
-                    workloads: vec![WorkloadKind::MatMul { n: 64 }],
+                    mixes: vec![RequestMix::single(WorkloadKind::MatMul { n: 64 })],
                     requests: 200,
                     warmup: 20,
                     serve_workers: 2,
@@ -188,6 +263,7 @@ fn main() {
     print_throughput("non-trap throughput", "cells/s", &plain);
     print_throughput("trap-armed throughput", "cells/s", &trap);
     print_throughput("serve throughput", "req/s", &served);
+    print_throughput("serve-mix throughput (3 kinds)", "req/s", &served_mix);
     let (_, t1) = trap[0];
     if let Some((w, cps)) = trap.iter().find(|(w, _)| *w == 4) {
         println!(

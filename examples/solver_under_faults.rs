@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
             workload: WorkloadKind::Jacobi { n: 128, iters: 50 },
             protection: Protection::RegisterMemory,
             injection: InjectionSpec::Ber(ber),
-            policy: RepairPolicy::NeighborMean,
+            policy: nanrepair::repair::policy::NEIGHBOR_MEAN,
             reps: 3,
             warmup: 0,
             seed: 7,

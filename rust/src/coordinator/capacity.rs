@@ -1,7 +1,10 @@
 //! Capacity planning: find the **SLO knee** — the maximum open-loop
 //! arrival rate at which a serving configuration still meets its p99 and
-//! shed-rate targets — per `(workload, protection, fault_rate)` cell
-//! (the `nanrepair capacity` subcommand, DESIGN.md §4.1).
+//! shed-rate targets — per `(mix, protection, fault_rate)` cell
+//! (the `nanrepair capacity` subcommand, DESIGN.md §4.1).  A cell's
+//! workload axis is a full [`RequestMix`]: the model costs each request
+//! by its stamped kind's FLOPs, so knees are mix-weighted and directly
+//! comparable to `nanrepair serve --mix` runs.
 //!
 //! "Negligible overhead" only means something relative to a sustainable
 //! operating point: EDEN-style approximate-DRAM serving lives or dies on
@@ -25,11 +28,11 @@
 //! ## Probes: deterministic model vs live
 //!
 //! A probe at rate *R* replays the exact request stream a live
-//! `serve` run at *R* would see: doses from the fault injector's
-//! `server::dose_stream` and placements from the same per-request
-//! seeds, derived from `(seed, rate_index, request_index)` — so the
-//! fault ledger of probe *k* is identical at any worker count and in
-//! both probe modes.
+//! `serve` run at *R* would see: kinds and doses from the fault
+//! injector's `server::request_stamp` and placements from the same
+//! per-request seeds, derived from `(seed, rate_index, request_index)`
+//! — so the (per-kind) fault ledger of probe *k* is identical at any
+//! worker count and in both probe modes.
 //!
 //! * [`ProbeMode::Model`] (default): a discrete-event simulation of the
 //!   server in **virtual time** — same bounded queue with generator
@@ -60,7 +63,7 @@ use crate::workloads::WorkloadKind;
 
 use super::protection::Protection;
 use super::scheduler;
-use super::server::{self, Arrival, ServeConfig};
+use super::server::{self, Arrival, RequestMix, ServeConfig};
 use super::session::ensure_servable;
 
 /// Hard cap on probes per cell: a ramp over 10 decades plus a bisection
@@ -128,17 +131,23 @@ impl ArrivalShape {
 
 /// Deterministic per-request service-time model for [`ProbeMode::Model`]
 /// probes: a fixed dispatch overhead, compute at a nominal FLOP rate, a
-/// per-trap cost, and a per-word scrub-sweep cost.  The constants are
-/// deliberately round placeholders for a mid-range core — the knee's
-/// *shape* (where queueing blows the tail, how protections rank) is what
-/// the model reproduces; calibrate against a [`ProbeMode::Live`] run
-/// when absolute rates matter.
+/// per-trap cost, a per-word scrub-sweep cost, and a per-word
+/// copy-on-serve restore cost.  The constants are deliberately round
+/// placeholders for a mid-range core — the knee's *shape* (where
+/// queueing blows the tail, how protections and mix weights rank) is
+/// what the model reproduces; calibrate against a [`ProbeMode::Live`]
+/// run when absolute rates matter.
 ///
 /// The model is protection-aware with the same mechanics as the real
 /// trap layer: `none` pays no trap cost (NaNs propagate silently),
 /// `memory` traps once per planted NaN, `register` re-traps every
-/// resident NaN on every later request (they persist in memory), and
-/// `scrub:K` pays a full-pool sweep every K served requests per worker.
+/// resident NaN on every later request of the same kind on the same
+/// worker (they persist in that kind's resident memory — mutating kinds
+/// never accumulate, their restore wipes the residue), and `scrub:K`
+/// pays a full-pool sweep every K served requests per (worker, kind).
+/// Service time is **mix-weighted by construction**: each request costs
+/// its stamped kind's [`WorkloadKind::flops`], so a heterogeneous mix
+/// produces the bimodal service distribution a real mixed server shows.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ServiceModel {
     /// Modeled compute rate in GFLOP/s.
@@ -154,6 +163,9 @@ pub struct ServiceModel {
     /// Scrub-sweep cost per resident word, in seconds (paid every
     /// `scrub:K` cadence hit).
     pub scrub_word_secs: f64,
+    /// Copy-on-serve restore cost per input word, in seconds (paid by
+    /// every served request of an input-mutating kind).
+    pub restore_word_secs: f64,
 }
 
 impl Default for ServiceModel {
@@ -164,18 +176,26 @@ impl Default for ServiceModel {
             trap_secs: 4e-6,
             shed_base_secs: 2e-6,
             scrub_word_secs: 2e-9,
+            restore_word_secs: 1e-9,
         }
     }
 }
 
 impl ServiceModel {
-    /// Modeled protected-window seconds for one served request that
-    /// takes `traps` traps plus `scrub_words` swept words.
+    /// Modeled protected-window seconds for one served request of
+    /// `workload` that takes `traps` traps plus `scrub_words` swept
+    /// words, plus the copy-on-serve restore for mutating kinds.
     pub fn service_secs(&self, workload: WorkloadKind, traps: u64, scrub_words: u64) -> f64 {
+        let restore_words = if workload.mutates_inputs() {
+            workload.input_words() as u64
+        } else {
+            0
+        };
         self.base_secs
             + workload.flops() as f64 / (self.gflops * 1e9)
             + traps as f64 * self.trap_secs
             + scrub_words as f64 * self.scrub_word_secs
+            + restore_words as f64 * self.restore_word_secs
     }
 
     /// Modeled seconds for the shed path (O(dose) plant-and-patch).
@@ -188,8 +208,12 @@ impl ServiceModel {
 /// matrix plus the shared probe/SLO knobs.
 #[derive(Debug, Clone)]
 pub struct CapacityConfig {
-    /// Resident workloads to plan for (matmul/matvec — the servable set).
-    pub workloads: Vec<WorkloadKind>,
+    /// Resident request mixes to plan for — each mix is one matrix axis
+    /// entry (a classic single-workload plan is a list of
+    /// single-kind mixes).  Every kind of every mix must honour the
+    /// (workload, policy) servability contract under every planned
+    /// protection.
+    pub mixes: Vec<RequestMix>,
     /// Protection schemes to plan for.
     pub protections: Vec<Protection>,
     /// Per-word NaN-upset probabilities per request interval.
@@ -235,7 +259,7 @@ pub struct CapacityConfig {
 impl Default for CapacityConfig {
     fn default() -> Self {
         Self {
-            workloads: vec![WorkloadKind::MatMul { n: 64 }],
+            mixes: vec![RequestMix::single(WorkloadKind::MatMul { n: 64 })],
             protections: vec![Protection::RegisterMemory],
             fault_rates: vec![1e-4],
             policy: RepairPolicy::Zero,
@@ -258,7 +282,7 @@ impl Default for CapacityConfig {
 
 impl CapacityConfig {
     fn validate(&self) -> Result<()> {
-        anyhow::ensure!(!self.workloads.is_empty(), "capacity needs at least one workload");
+        anyhow::ensure!(!self.mixes.is_empty(), "capacity needs at least one workload mix");
         anyhow::ensure!(
             !self.protections.is_empty(),
             "capacity needs at least one protection"
@@ -267,9 +291,11 @@ impl CapacityConfig {
             !self.fault_rates.is_empty(),
             "capacity needs at least one fault rate"
         );
-        for &w in &self.workloads {
-            for &p in &self.protections {
-                ensure_servable(w, p)?;
+        for mix in &self.mixes {
+            for &(kind, _) in mix.entries() {
+                for &p in &self.protections {
+                    ensure_servable(kind, p, self.policy)?;
+                }
             }
         }
         for &f in &self.fault_rates {
@@ -319,14 +345,14 @@ impl CapacityConfig {
     }
 
     /// The configuration matrix, in deterministic
-    /// workload-major × protection × fault-rate order.
+    /// mix-major × protection × fault-rate order.
     fn cells(&self) -> Vec<CapacityCell> {
         let mut cells = Vec::new();
-        for &workload in &self.workloads {
+        for mix in &self.mixes {
             for &protection in &self.protections {
                 for &fault_rate in &self.fault_rates {
                     cells.push(CapacityCell {
-                        workload,
+                        mix: mix.clone(),
                         protection,
                         fault_rate,
                         shared: self.clone(),
@@ -339,26 +365,62 @@ impl CapacityConfig {
 }
 
 /// One cell of the capacity matrix: a concrete
-/// `(workload, protection, fault_rate)` triple plus the shared knobs.
+/// `(mix, protection, fault_rate)` triple plus the shared knobs.
 #[derive(Debug, Clone)]
 struct CapacityCell {
-    workload: WorkloadKind,
+    mix: RequestMix,
     protection: Protection,
     fault_rate: f64,
     shared: CapacityConfig,
 }
 
 impl CapacityCell {
-    /// `workload/protection@shape×rate`-style label shared by all of the
+    /// `mix/protection@shape×rate`-style label shared by all of the
     /// cell's records.
     fn label(&self) -> String {
         format!(
             "{}/{}/f{:e}@{}",
-            self.workload,
+            self.mix.label(),
             self.protection.name(),
             self.fault_rate,
             self.shared.arrival.name()
         )
+    }
+}
+
+/// Per-kind slice of one probe (multi-kind mixes): the per-kind fault
+/// ledger and tail, worker-count invariant in model mode by
+/// construction.
+#[derive(Debug, Clone)]
+pub struct KindPoint {
+    /// The mix kind this row covers.
+    pub kind: WorkloadKind,
+    /// Requests stamped with this kind (measured window).
+    pub requests: u64,
+    /// Of those, served.
+    pub served: u64,
+    /// Of those, shed.
+    pub shed: u64,
+    /// Total NaN dose issued against this kind (whole probe).
+    pub dose_total: u64,
+    /// Total distinct NaN words planted into this kind (whole probe).
+    pub nans_planted: u64,
+    /// Exact p99 latency over this kind's measured served requests.
+    pub p99_secs: f64,
+}
+
+impl KindPoint {
+    fn to_record(&self, label: &str, rps: f64) -> Record {
+        Record::new("capacity_kind")
+            .field("label", label)
+            .field("kind", self.kind.to_string())
+            .field("rps", rps)
+            .field("requests", self.requests)
+            .field("served", self.served)
+            .field("shed", self.shed)
+            .field("dose_total", self.dose_total)
+            .field("nans_planted", self.nans_planted)
+            .field("p99_secs", self.p99_secs)
     }
 }
 
@@ -387,6 +449,9 @@ pub struct ProbePoint {
     pub queue_highwater: usize,
     /// Did the probe meet the SLO (p99 and shed budget)?
     pub pass: bool,
+    /// Per-kind breakdown, in mix order (one entry per kind; trivially a
+    /// single entry for single-kind mixes).
+    pub per_kind: Vec<KindPoint>,
 }
 
 impl ProbePoint {
@@ -413,8 +478,8 @@ impl ProbePoint {
 pub struct CapacityOutcome {
     /// The cell's record label.
     pub label: String,
-    /// Resident workload of the cell.
-    pub workload: WorkloadKind,
+    /// Resident workload mix of the cell.
+    pub mix: RequestMix,
     /// Protection scheme of the cell.
     pub protection: Protection,
     /// Fault rate of the cell.
@@ -443,7 +508,7 @@ impl CapacityOutcome {
     pub fn knee_record(&self, cfg: &CapacityConfig) -> Record {
         let mut rec = Record::new("capacity_knee")
             .field("label", self.label.as_str())
-            .field("workload", self.workload.to_string())
+            .field("mix", self.mix.label())
             .field("protection", self.protection.name())
             .field("fault_rate", self.fault_rate)
             .field("arrival", cfg.arrival.name())
@@ -484,12 +549,21 @@ pub struct CapacityReport {
 
 impl CapacityReport {
     /// The full record stream: per cell, every `capacity_point` in probe
-    /// order followed by its `capacity_knee`.
+    /// order; for multi-kind mixes, the knee probe's per-kind
+    /// `capacity_kind` breakdown; then the cell's `capacity_knee`.
+    /// Single-kind cells keep the historical points-then-knee stream.
     pub fn records(&self) -> Vec<Record> {
         let mut out = Vec::new();
         for o in &self.outcomes {
             for p in &o.points {
                 out.push(p.to_record(&o.label, self.config.mode));
+            }
+            if !o.mix.is_single() {
+                if let Some(knee) = o.knee_point() {
+                    for k in &knee.per_kind {
+                        out.push(k.to_record(&o.label, knee.rps));
+                    }
+                }
             }
             out.push(o.knee_record(&self.config));
         }
@@ -614,7 +688,7 @@ fn find_knee(cell: &CapacityCell) -> Result<CapacityOutcome> {
     let knee_rps = pass_rps.unwrap_or(0.0);
     Ok(CapacityOutcome {
         label: cell.label(),
-        workload: cell.workload,
+        mix: cell.mix.clone(),
         protection: cell.protection,
         fault_rate: cell.fault_rate,
         points,
@@ -642,13 +716,19 @@ fn planted_words(seed: u64, index: usize, dose: u64, input_words: usize) -> u64 
 
 /// Virtual-time probe: discrete-event simulation of the serving engine
 /// (bounded queue with generator backpressure, FIFO multi-worker
-/// dequeue, deadline shedding) with [`ServiceModel`] service times.
+/// dequeue, deadline shedding, per-kind residents with copy-on-serve)
+/// with mix-weighted [`ServiceModel`] service times.
 fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
     let cfg = &cell.shared;
     let n = cfg.requests;
     let seed = probe_seed(cfg.seed, rate_index);
-    let input_words = cell.workload.input_words();
-    let doses = server::dose_stream(seed, input_words as u64, cell.fault_rate, n);
+    let kinds = cell.mix.kinds();
+    let kind_index = |kind: WorkloadKind| -> usize {
+        kinds
+            .iter()
+            .position(|&k| k == kind)
+            .expect("stamped kind is in the mix")
+    };
     let offsets = cfg
         .arrival
         .arrival(rps)
@@ -660,13 +740,15 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
 
     // Virtual clocks: when each serving worker frees up, when each
     // request was dequeued (the queue slot it occupied frees then), and
-    // when the generator can offer the next request.  Per-worker
-    // resident-NaN and served counters mirror the session state the
-    // protections differ on (register-only NaNs persist and re-trap;
-    // scrub sweeps run on a per-worker served cadence).
+    // when the generator can offer the next request.  Per-(worker, kind)
+    // resident-NaN and served counters mirror the resident-set state the
+    // protections differ on (register-only NaNs persist in a kind's
+    // resident memory and re-trap; scrub sweeps run on a per-kind served
+    // cadence; mutating kinds restore after every serve and never
+    // accumulate).
     let mut worker_free = vec![0.0f64; workers];
-    let mut resident_nans = vec![0u64; workers];
-    let mut served_before = vec![0u64; workers];
+    let mut resident_nans = vec![vec![0u64; kinds.len()]; workers];
+    let mut served_before = vec![vec![0u64; kinds.len()]; workers];
     let mut dequeue_at = vec![0.0f64; n];
     let mut gen_free = 0.0f64;
 
@@ -678,6 +760,16 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
     let mut served_total_all = 0u64;
     let mut makespan = 0.0f64;
     let mut highwater = 0usize;
+
+    // Per-kind ledgers (measured window for requests/served/shed and
+    // latencies, whole probe for doses — same windows as the overall
+    // tallies above).
+    let mut kind_requests = vec![0u64; kinds.len()];
+    let mut kind_served = vec![0u64; kinds.len()];
+    let mut kind_shed = vec![0u64; kinds.len()];
+    let mut kind_dose = vec![0u64; kinds.len()];
+    let mut kind_planted = vec![0u64; kinds.len()];
+    let mut kind_latencies: Vec<Vec<f64>> = vec![Vec::new(); kinds.len()];
 
     for i in 0..n {
         let due = offsets[i];
@@ -705,10 +797,15 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
         let dequeue = offer.max(wfree);
         dequeue_at[i] = dequeue;
 
-        let dose = doses[i];
+        // The same (kind, dose, placement) stamp a live run derives.
+        let (kind, dose) = server::request_stamp(seed, &cell.mix, cell.fault_rate, i);
+        let ki = kind_index(kind);
+        let input_words = kind.input_words();
         let planted = planted_words(seed, i, dose, input_words);
         dose_total += dose;
         planted_total += planted;
+        kind_dose[ki] += dose;
+        kind_planted[ki] += planted;
 
         // The server's shedding rule: deadline already blown at dequeue.
         // Shedding plants and immediately patches its own dose, so the
@@ -719,23 +816,29 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
         } else {
             let (traps, scrub_words) = match cell.protection {
                 Protection::RegisterMemory => (planted, 0),
+                Protection::RegisterOnly if kind.mutates_inputs() => {
+                    // the copy-on-serve restore wipes this request's
+                    // register-only memory residue — no accumulation
+                    (planted, 0)
+                }
                 Protection::RegisterOnly => {
                     // register-only repairs never reach memory: every
-                    // resident NaN re-traps on every later request
-                    resident_nans[wi] += planted;
-                    (resident_nans[wi], 0)
+                    // NaN resident in this kind's weights re-traps on
+                    // every later request of the kind on this worker
+                    resident_nans[wi][ki] += planted;
+                    (resident_nans[wi][ki], 0)
                 }
                 Protection::Scrub { period_runs } => {
                     let sweep = period_runs > 0
-                        && served_before[wi] % period_runs as u64 == 0;
+                        && served_before[wi][ki] % period_runs as u64 == 0;
                     (0, if sweep { input_words as u64 } else { 0 })
                 }
                 // None pays nothing (NaNs propagate silently); Ecc/Abft
                 // are rejected by validation before any probe runs.
                 _ => (0, 0),
             };
-            served_before[wi] += 1;
-            cfg.model.service_secs(cell.workload, traps, scrub_words)
+            served_before[wi][ki] += 1;
+            cfg.model.service_secs(kind, traps, scrub_words)
         };
         let done = dequeue + busy;
         worker_free[wi] = done;
@@ -745,11 +848,15 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
         }
 
         if i >= cfg.warmup {
+            kind_requests[ki] += 1;
             if blown {
                 shed += 1;
+                kind_shed[ki] += 1;
             } else {
                 served += 1;
+                kind_served[ki] += 1;
                 latencies.push(done - due);
+                kind_latencies[ki].push(done - due);
             }
         }
     }
@@ -769,6 +876,28 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
     };
     let pass = served > 0 && p99 <= cfg.slo_p99 && shed_frac <= cfg.slo_shed;
 
+    let per_kind = kinds
+        .iter()
+        .enumerate()
+        .map(|(ki, &kind)| {
+            let lat = &mut kind_latencies[ki];
+            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            KindPoint {
+                kind,
+                requests: kind_requests[ki],
+                served: kind_served[ki],
+                shed: kind_shed[ki],
+                dose_total: kind_dose[ki],
+                nans_planted: kind_planted[ki],
+                p99_secs: if lat.is_empty() {
+                    0.0
+                } else {
+                    percentile_sorted(lat, 0.99)
+                },
+            }
+        })
+        .collect();
+
     ProbePoint {
         rate_index,
         rps,
@@ -781,6 +910,7 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
         nans_planted: planted_total,
         queue_highwater: highwater,
         pass,
+        per_kind,
     }
 }
 
@@ -788,7 +918,7 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
 fn probe_live(cell: &CapacityCell, rps: f64, rate_index: usize) -> Result<ProbePoint> {
     let cfg = &cell.shared;
     let report = server::serve(&ServeConfig {
-        workload: cell.workload,
+        mix: cell.mix.clone(),
         protection: cell.protection,
         policy: cfg.policy,
         requests: cfg.requests,
@@ -805,6 +935,31 @@ fn probe_live(cell: &CapacityCell, rps: f64, rate_index: usize) -> Result<ProbeP
     let measured = report.measured();
     let shed = measured.iter().filter(|r| r.is_shed()).count() as u64;
     let served = measured.len() as u64 - shed;
+    let per_kind = report
+        .kind_summaries()
+        .into_iter()
+        .map(|ks| {
+            let measured_kind = measured.iter().filter(|r| r.kind == ks.kind);
+            let (mut req, mut srv, mut sh) = (0u64, 0u64, 0u64);
+            for r in measured_kind {
+                req += 1;
+                if r.is_shed() {
+                    sh += 1;
+                } else {
+                    srv += 1;
+                }
+            }
+            KindPoint {
+                kind: ks.kind,
+                requests: req,
+                served: srv,
+                shed: sh,
+                dose_total: ks.dose_total,
+                nans_planted: ks.nans_planted,
+                p99_secs: ks.latency_p99_secs,
+            }
+        })
+        .collect();
     Ok(ProbePoint {
         rate_index,
         rps,
@@ -817,6 +972,7 @@ fn probe_live(cell: &CapacityCell, rps: f64, rate_index: usize) -> Result<ProbeP
         nans_planted: report.nans_planted_total(),
         queue_highwater: report.queue_highwater,
         pass: report.slo_met() == Some(true),
+        per_kind,
     })
 }
 
@@ -826,7 +982,7 @@ mod tests {
 
     fn model_cfg() -> CapacityConfig {
         CapacityConfig {
-            workloads: vec![WorkloadKind::MatMul { n: 32 }],
+            mixes: vec![RequestMix::single(WorkloadKind::MatMul { n: 32 })],
             requests: 80,
             warmup: 10,
             serve_workers: 2,
@@ -991,9 +1147,22 @@ mod tests {
     #[test]
     fn rejects_bad_configs() {
         let ok = model_cfg();
-        assert!(plan(&CapacityConfig { workloads: vec![], ..ok.clone() }, 1).is_err());
+        assert!(plan(&CapacityConfig { mixes: vec![], ..ok.clone() }, 1).is_err());
+        // division-bearing kind under the default zero policy: the
+        // servability contract refuses the whole plan
         assert!(plan(
-            &CapacityConfig { workloads: vec![WorkloadKind::Lu { n: 8 }], ..ok.clone() },
+            &CapacityConfig {
+                mixes: vec![RequestMix::single(WorkloadKind::Lu { n: 8 })],
+                ..ok.clone()
+            },
+            1
+        )
+        .is_err());
+        assert!(plan(
+            &CapacityConfig {
+                mixes: vec![RequestMix::parse("matmul:16:0.5,jacobi:16:3:0.5").unwrap()],
+                ..ok.clone()
+            },
             1
         )
         .is_err());
@@ -1013,12 +1182,52 @@ mod tests {
     }
 
     #[test]
+    fn mixed_knee_is_deterministic_with_per_kind_breakdown() {
+        // A 3-kind mix under a division-safe policy: knee search works,
+        // records are byte-identical at any matrix worker count, and the
+        // knee probe carries a per-kind ledger that covers every request.
+        let cfg = CapacityConfig {
+            mixes: vec![
+                RequestMix::parse("matmul:32:0.5,jacobi:32:10:0.3,stencil:32:5:0.2").unwrap(),
+            ],
+            policy: RepairPolicy::One,
+            ..model_cfg()
+        };
+        let a = plan(&cfg, 1).unwrap();
+        let b = plan(&cfg, 4).unwrap();
+        let ra: Vec<String> = a.records().iter().map(Record::render_jsonl).collect();
+        let rb: Vec<String> = b.records().iter().map(Record::render_jsonl).collect();
+        assert_eq!(ra, rb, "mixed-cell records must not move a byte");
+
+        let o = &a.outcomes[0];
+        assert!(o.knee_rps > 0.0, "the mix carries some load");
+        let knee = o.knee_point().expect("knee measured by a passing probe");
+        assert_eq!(knee.per_kind.len(), 3, "one ledger row per mix kind");
+        assert_eq!(
+            knee.per_kind.iter().map(|k| k.requests).sum::<u64>(),
+            knee.served + knee.shed,
+            "per-kind rows partition the measured window"
+        );
+        assert_eq!(
+            knee.per_kind.iter().map(|k| k.dose_total).sum::<u64>(),
+            knee.dose_total
+        );
+        // record stream: points, then capacity_kind rows, then the knee
+        let recs = a.records();
+        let kinds: Vec<&str> = recs.iter().map(|r| r.kind()).collect();
+        let first_kind = kinds.iter().position(|&k| k == "capacity_kind").unwrap();
+        assert!(kinds[..first_kind].iter().all(|&k| k == "capacity_point"));
+        assert_eq!(kinds[first_kind..first_kind + 3], ["capacity_kind"; 3][..]);
+        assert_eq!(kinds[first_kind + 3..], ["capacity_knee"][..], "the knee is last");
+    }
+
+    #[test]
     fn live_probe_mode_finds_a_knee_on_a_tiny_cell() {
         // Keep it minimal: one cell, few requests, a generous SLO so the
         // ramp passes at least once on any CI machine.  This exercises
         // the live path end to end; determinism claims are model-only.
         let cfg = CapacityConfig {
-            workloads: vec![WorkloadKind::MatMul { n: 12 }],
+            mixes: vec![RequestMix::single(WorkloadKind::MatMul { n: 12 })],
             fault_rates: vec![1e-2],
             requests: 16,
             warmup: 4,

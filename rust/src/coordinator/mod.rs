@@ -29,5 +29,5 @@ pub mod session;
 pub use campaign::{Campaign, CampaignConfig, CampaignReport};
 pub use capacity::{CapacityConfig, CapacityReport};
 pub use protection::Protection;
-pub use server::{ServeConfig, ServeReport};
+pub use server::{RequestMix, ServeConfig, ServeReport};
 pub use session::ExperimentSession;

@@ -10,28 +10,38 @@
 //! * a **bounded MPMC request queue** ([`ServeConfig::queue_depth`])
 //!   connects a load-generator/fault-injector thread to `workers`
 //!   serving threads;
-//! * each worker owns an [`ExperimentSession`] whose cached workload is
-//!   the **resident weights** — allocated once, never reseeded — and
-//!   every request runs trap-armed in the worker's own trap domain
-//!   (DESIGN.md §3.1), so reactive requests execute genuinely
-//!   concurrently with no global serialization; a readiness barrier
-//!   starts the arrival clocks only after every worker is
-//!   resident-ready, so setup cost is never charged to the tail;
+//! * each worker owns an [`ExperimentSession`] whose
+//!   [`crate::coordinator::session::ResidentSet`] holds the **resident
+//!   weights** — one pinned workload per mix kind, allocated once, never
+//!   reseeded, with a pristine snapshot + copy-on-serve restore for
+//!   input-mutating kinds — and every request runs trap-armed in the
+//!   worker's own trap domain (DESIGN.md §3.1), so reactive requests
+//!   execute genuinely concurrently with no global serialization; a
+//!   readiness barrier starts the arrival clocks only after every worker
+//!   has every mix kind resident, so setup cost is never charged to the
+//!   tail;
+//! * requests arrive as a weighted **[`RequestMix`]** over resident
+//!   kinds (`--mix matmul:0.5,jacobi:0.3,cg:0.2`); every kind must
+//!   honour the (workload, policy) **servability contract**
+//!   (DESIGN.md §4.2): division-bearing kinds (jacobi/cg/LU) need a
+//!   division-safe repair policy, input-mutating kinds (LU/stencil) are
+//!   discharged by copy-on-serve;
 //! * the **fault injector** models the approximate-memory upset process:
-//!   for request *i* it draws a NaN dose from
-//!   `Binomial(resident_words, fault_rate)` and stamps the request with
-//!   it; the serving worker plants the dose into its resident weights
-//!   just before the protected window.  Doses and placements are derived
-//!   from the seed and the request index alone, so under the paper's
-//!   register+memory protection — which repairs every NaN at first touch
-//!   — the repair ledger of a run is identical at any worker count (the
-//!   integration tests assert serial vs 4-worker equality; register-only
-//!   and scrub cadences accumulate per-worker resident state, so their
-//!   ledgers legitimately depend on request placement).  Routing the
-//!   poison through the request stream instead of scribbling on live
-//!   buffers keeps the injector data-race-free — a worker's buffers are
-//!   only ever written by that worker — while modelling the same
-//!   physical process;
+//!   it stamps request *i* with a kind (a weight draw over the mix) and
+//!   a NaN dose from `Binomial(kind_input_words, fault_rate)`
+//!   (`request_stamp`); the serving worker plants the dose into that
+//!   kind's resident weights just before the protected window.  Kinds,
+//!   doses, and placements are derived from the seed and the request
+//!   index alone, so under the paper's register+memory protection —
+//!   which repairs every NaN at first touch — the repair ledger of a run
+//!   is identical, **per kind**, at any worker count (the integration
+//!   tests assert serial vs 4-worker equality; register-only and scrub
+//!   cadences accumulate per-worker resident state, so their ledgers
+//!   legitimately depend on request placement).  Routing the poison
+//!   through the request stream instead of scribbling on live buffers
+//!   keeps the injector data-race-free — a worker's buffers are only
+//!   ever written by that worker — while modelling the same physical
+//!   process;
 //! * every request yields one [`RequestResult`] (a `serve_request`
 //!   [`Record`] through the sink), and the run ends with a bucketed
 //!   latency distribution plus a `serve_slo` summary: throughput,
@@ -59,7 +69,7 @@
 //! record, so a capacity probe ([`crate::coordinator::capacity`]) can
 //! assert queue saturation at the knee.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::sync::{mpsc, Barrier, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -194,12 +204,135 @@ impl Arrival {
     }
 }
 
+/// Default problem size for a mix entry that names a workload without a
+/// size (`--mix matmul:0.5,jacobi:0.3,cg:0.2`).
+pub const DEFAULT_MIX_SIZE: usize = 256;
+
+/// A weighted request mix over resident workload kinds: each request of
+/// a serving run is stamped with one kind, drawn from these weights by
+/// the deterministic injector (`request_stamp`), and every worker
+/// keeps one resident per kind ([`crate::coordinator::session::ResidentSet`]).
+/// A classic single-workload run is a mix of one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestMix {
+    /// `(kind, weight)` entries in spec order; weights are normalized to
+    /// sum to 1 and kinds are unique.
+    entries: Vec<(WorkloadKind, f64)>,
+}
+
+impl RequestMix {
+    /// The trivial mix: every request is `kind`.
+    pub fn single(kind: WorkloadKind) -> Self {
+        Self {
+            entries: vec![(kind, 1.0)],
+        }
+    }
+
+    /// Build a mix from `(kind, weight)` entries: weights must be
+    /// positive and finite (they are normalized), kinds unique.
+    pub fn new(entries: Vec<(WorkloadKind, f64)>) -> Result<Self> {
+        anyhow::ensure!(!entries.is_empty(), "a request mix needs at least one workload");
+        let mut seen = HashSet::new();
+        for &(kind, w) in &entries {
+            anyhow::ensure!(
+                w > 0.0 && w.is_finite(),
+                "mix weight for {kind} must be positive and finite (got {w})"
+            );
+            anyhow::ensure!(seen.insert(kind), "duplicate workload {kind} in mix");
+        }
+        let total: f64 = entries.iter().map(|(_, w)| w).sum();
+        Ok(Self {
+            entries: entries.into_iter().map(|(k, w)| (k, w / total)).collect(),
+        })
+    }
+
+    /// Parse a comma-separated mix spec.  Each entry is
+    /// `name[:size[:extra]][:weight]`: the trailing token is a weight
+    /// when it is a float but not a plain integer (`matmul:0.5`,
+    /// `jacobi:64:20:0.3`); an omitted weight is 1 (normalized later),
+    /// and a bare name uses the default serving size
+    /// ([`DEFAULT_MIX_SIZE`]).
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+            entries.push(Self::parse_entry(part.trim())?);
+        }
+        Self::new(entries)
+    }
+
+    fn parse_entry(s: &str) -> Result<(WorkloadKind, f64)> {
+        let toks: Vec<&str> = s.split(':').collect();
+        let name = toks[0];
+        anyhow::ensure!(!name.is_empty(), "empty workload name in mix entry {s:?}");
+        let (spec_toks, weight) = match toks.last() {
+            Some(last) if toks.len() > 1 && last.parse::<usize>().is_err() => {
+                let w: f64 = last.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "trailing token {last:?} in mix entry {s:?} is neither a \
+                         size nor a weight"
+                    )
+                })?;
+                (&toks[..toks.len() - 1], w)
+            }
+            _ => (&toks[..], 1.0),
+        };
+        let kind = if spec_toks.len() == 1 {
+            WorkloadKind::parse(&format!("{name}:{DEFAULT_MIX_SIZE}"))?
+        } else {
+            WorkloadKind::parse(&spec_toks.join(":"))?
+        };
+        Ok((kind, weight))
+    }
+
+    /// `(kind, normalized weight)` entries, in spec order.
+    pub fn entries(&self) -> &[(WorkloadKind, f64)] {
+        &self.entries
+    }
+
+    /// The mix's kinds, in spec order.
+    pub fn kinds(&self) -> Vec<WorkloadKind> {
+        self.entries.iter().map(|&(k, _)| k).collect()
+    }
+
+    /// Is this a classic single-workload run?
+    pub fn is_single(&self) -> bool {
+        self.entries.len() == 1
+    }
+
+    /// Run label: the bare kind for a single-workload mix, else
+    /// `kind~weight+kind~weight+…`.
+    pub fn label(&self) -> String {
+        if let [(kind, _)] = self.entries.as_slice() {
+            return kind.to_string();
+        }
+        self.entries
+            .iter()
+            .map(|(k, w)| format!("{k}~{w:.2}"))
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// The kind a uniform draw `u ∈ [0, 1)` selects (cumulative weights;
+    /// the last entry absorbs rounding residue).
+    fn pick(&self, u: f64) -> WorkloadKind {
+        let mut acc = 0.0;
+        for &(kind, w) in &self.entries {
+            acc += w;
+            if u < acc {
+                return kind;
+            }
+        }
+        self.entries.last().expect("mix is non-empty").0
+    }
+}
+
 /// Full description of one serving run.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Resident workload — its inputs are the model weights that live in
-    /// approximate memory for the whole run.
-    pub workload: WorkloadKind,
+    /// Resident workload mix — each kind's inputs are model weights that
+    /// live in approximate memory for the whole run, resident on every
+    /// worker.
+    pub mix: RequestMix,
     /// Protection scheme per request window (reactive schemes arm one
     /// trap domain per worker; `Ecc`/`Abft` are rejected).
     pub protection: Protection,
@@ -249,7 +382,7 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         Self {
-            workload: WorkloadKind::MatMul { n: 256 },
+            mix: RequestMix::single(WorkloadKind::MatMul { n: DEFAULT_MIX_SIZE }),
             protection: Protection::RegisterMemory,
             policy: RepairPolicy::Zero,
             requests: 500,
@@ -267,21 +400,23 @@ impl Default for ServeConfig {
 }
 
 impl ServeConfig {
-    /// Short run label, `workload/protection@arrival`.
+    /// Short run label, `mix/protection@arrival`.
     pub fn label(&self) -> String {
         format!(
             "{}/{}@{}",
-            self.workload,
+            self.mix.label(),
             self.protection.name(),
             self.arrival.label()
         )
     }
 }
 
-/// One queued request: identity, fault dose, and the latency-clock
-/// origin (scheduled arrival for open loop, offer instant otherwise).
+/// One queued request: identity, stamped workload kind, fault dose, and
+/// the latency-clock origin (scheduled arrival for open loop, offer
+/// instant otherwise).
 struct ServeRequest {
     index: usize,
+    kind: WorkloadKind,
     dose: u64,
     arrival: Instant,
 }
@@ -397,6 +532,9 @@ pub struct RequestResult {
     pub index: usize,
     /// Worker thread that handled it.
     pub worker: usize,
+    /// Workload kind the injector stamped on the request (a pure
+    /// function of `(seed, index)`, like the dose).
+    pub kind: WorkloadKind,
     /// NaN dose the fault injector stamped on the request.
     pub dose: u64,
     /// What the worker did with it (served compute or overload shed) and
@@ -424,12 +562,14 @@ impl RequestResult {
     }
 
     /// Repairs attributable to this request: trap-driven register +
-    /// memory repairs, scrub sweeps, and the shed path's patch-backs.
+    /// memory repairs, scrub sweeps, post-run hygiene patches, and the
+    /// shed path's patch-backs.
     pub fn repairs(&self) -> u64 {
         let t = self.outcome.traps();
         t.register_repairs
             + t.memory_repairs()
             + self.outcome.scrub_repairs()
+            + self.outcome.hygiene_repairs()
             + self.outcome.shed_repairs()
     }
 
@@ -444,12 +584,19 @@ impl RequestResult {
         self.outcome.output_nans()
     }
 
+    /// Seconds the copy-on-serve restore took (zero for non-mutating
+    /// kinds and shed requests).
+    pub fn restore_secs(&self) -> f64 {
+        self.outcome.restore_secs()
+    }
+
     /// The per-request `serve_request` record.
     pub fn to_record(&self) -> Record {
         let traps = self.outcome.traps();
         Record::new("serve_request")
             .field("index", self.index)
             .field("worker", self.worker)
+            .field("kind", self.kind.to_string())
             .field("outcome", if self.is_shed() { "shed" } else { "served" })
             .field("dose", self.dose)
             .field("nans_planted", self.outcome.nans_planted())
@@ -457,10 +604,68 @@ impl RequestResult {
             .field("register_repairs", traps.register_repairs)
             .field("memory_repairs", traps.memory_repairs())
             .field("scrub_repairs", self.outcome.scrub_repairs())
+            .field("hygiene_repairs", self.outcome.hygiene_repairs())
             .field("shed_repairs", self.outcome.shed_repairs())
             .field("service_secs", self.outcome.service_secs())
+            .field("restore_secs", self.outcome.restore_secs())
             .field("latency_secs", self.latency_secs)
             .field("output_nans", self.outcome.output_nans())
+    }
+}
+
+/// Per-kind slice of a serving run — the multi-workload analogue of the
+/// `serve_slo` summary ([`ServeReport::kind_summaries`]).
+#[derive(Debug, Clone)]
+pub struct KindSummary {
+    /// The mix kind this row covers.
+    pub kind: WorkloadKind,
+    /// The kind's normalized mix weight.
+    pub weight: f64,
+    /// Requests stamped with this kind (whole run).
+    pub requests: u64,
+    /// Of those, served.
+    pub served: u64,
+    /// Of those, shed.
+    pub shed: u64,
+    /// Total NaN dose issued against this kind's residents.
+    pub dose_total: u64,
+    /// Total distinct NaN words planted into this kind's residents.
+    pub nans_planted: u64,
+    /// SIGFPE traps taken serving this kind.
+    pub sigfpe_total: u64,
+    /// Repairs attributable to this kind (register + memory + scrub +
+    /// shed patch-backs) — the per-kind repair ledger, worker-count
+    /// invariant under register+memory protection.
+    pub repairs_total: u64,
+    /// Non-finite values that reached this kind's responses.
+    pub output_nans: u64,
+    /// Seconds spent restoring this kind's residents (copy-on-serve;
+    /// zero for non-mutating kinds).
+    pub restore_secs: f64,
+    /// Exact p50 latency over this kind's measured served requests.
+    pub latency_p50_secs: f64,
+    /// Exact p99 latency over this kind's measured served requests.
+    pub latency_p99_secs: f64,
+}
+
+impl KindSummary {
+    /// The `serve_kind_slo` record.
+    pub fn to_record(&self, label: &str) -> Record {
+        Record::new("serve_kind_slo")
+            .field("label", label)
+            .field("kind", self.kind.to_string())
+            .field("weight", self.weight)
+            .field("requests", self.requests)
+            .field("served", self.served)
+            .field("shed", self.shed)
+            .field("dose_total", self.dose_total)
+            .field("nans_planted", self.nans_planted)
+            .field("sigfpe_total", self.sigfpe_total)
+            .field("repairs_total", self.repairs_total)
+            .field("output_nans", self.output_nans)
+            .field("restore_secs", self.restore_secs)
+            .field("latency_p50_secs", self.latency_p50_secs)
+            .field("latency_p99_secs", self.latency_p99_secs)
     }
 }
 
@@ -469,8 +674,11 @@ impl RequestResult {
 /// verdict.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
-    /// `workload/protection@arrival` label of the run.
+    /// `mix/protection@arrival` label of the run.
     pub config_label: String,
+    /// The request mix the run served (per-kind breakdowns derive from
+    /// it, in mix order).
+    pub mix: RequestMix,
     /// Worker threads that served (after clamping).
     pub workers: usize,
     /// Bounded queue capacity of the run.
@@ -605,6 +813,61 @@ impl ServeReport {
         self.results.iter().map(|r| r.output_nans()).sum()
     }
 
+    /// Total seconds spent in copy-on-serve restores (input-mutating
+    /// resident kinds only; zero for division-free/non-mutating mixes).
+    pub fn restore_secs_total(&self) -> f64 {
+        self.results.iter().map(|r| r.restore_secs()).sum()
+    }
+
+    /// Per-kind breakdown of the run, in mix order — the `serve_kind_slo`
+    /// record source.  Counts cover the whole run; latency quantiles
+    /// cover measured served requests of the kind (like the overall
+    /// quantiles).
+    pub fn kind_summaries(&self) -> Vec<KindSummary> {
+        self.mix
+            .entries()
+            .iter()
+            .map(|&(kind, weight)| {
+                let all: Vec<&RequestResult> =
+                    self.results.iter().filter(|r| r.kind == kind).collect();
+                let mut lat: Vec<f64> = self
+                    .measured()
+                    .iter()
+                    .filter(|r| r.kind == kind && !r.is_shed())
+                    .map(|r| r.latency_secs)
+                    .collect();
+                lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                KindSummary {
+                    kind,
+                    weight,
+                    requests: all.len() as u64,
+                    served: all.iter().filter(|r| !r.is_shed()).count() as u64,
+                    shed: all.iter().filter(|r| r.is_shed()).count() as u64,
+                    dose_total: all.iter().map(|r| r.dose).sum(),
+                    nans_planted: all.iter().map(|r| r.nans_planted()).sum(),
+                    sigfpe_total: all.iter().map(|r| r.traps().sigfpe_total).sum(),
+                    repairs_total: all.iter().map(|r| r.repairs()).sum(),
+                    output_nans: all.iter().map(|r| r.output_nans()).sum(),
+                    restore_secs: all.iter().map(|r| r.restore_secs()).sum(),
+                    latency_p50_secs: quantile_of(&lat, 0.50),
+                    latency_p99_secs: quantile_of(&lat, 0.99),
+                }
+            })
+            .collect()
+    }
+
+    /// Measured-served latency histogram of one kind (the per-kind
+    /// `serve_kind_latency` record source).
+    fn kind_latency_hist(&self, kind: WorkloadKind) -> LatencyHistogram {
+        let mut hist = LatencyHistogram::new();
+        for r in self.measured() {
+            if r.kind == kind && !r.is_shed() {
+                hist.observe(r.latency_secs);
+            }
+        }
+        hist
+    }
+
     /// Measured served requests whose end-to-end latency exceeded the SLO
     /// target (0 when no target is set).
     pub fn slo_violations(&self) -> u64 {
@@ -663,6 +926,7 @@ impl ServeReport {
             .field("nans_planted", self.nans_planted_total())
             .field("sigfpe_total", self.sigfpe_total())
             .field("repairs_total", self.repairs_total())
+            .field("restore_secs_total", self.restore_secs_total())
             .field("output_nans", self.output_nans_total());
         if let Some(d) = self.deadline {
             rec = rec.field("deadline_secs", d);
@@ -680,9 +944,26 @@ impl ServeReport {
     }
 
     /// The full record stream: one `serve_request` per request (in
-    /// request order), the `serve_latency` histogram, then `serve_slo`.
+    /// request order); for a multi-kind mix, per-kind
+    /// `serve_kind_latency` and `serve_kind_slo` breakdowns (grouped by
+    /// record kind, in mix order); then the overall `serve_latency`
+    /// histogram and `serve_slo` verdict.  Single-kind runs keep the
+    /// historical three-part stream.
     pub fn records(&self) -> Vec<Record> {
         let mut out: Vec<Record> = self.results.iter().map(RequestResult::to_record).collect();
+        if !self.mix.is_single() {
+            let summaries = self.kind_summaries();
+            for ks in &summaries {
+                out.push(
+                    self.kind_latency_hist(ks.kind)
+                        .to_record("serve_kind_latency")
+                        .field("kind", ks.kind.to_string()),
+                );
+            }
+            for ks in &summaries {
+                out.push(ks.to_record(&self.config_label));
+            }
+        }
         out.push(self.latency_hist.to_record("serve_latency"));
         out.push(self.slo_record());
         out
@@ -719,7 +1000,27 @@ impl ServeReport {
             "repairs (reg+mem+scrub+shed)".into(),
             self.repairs_total().to_string(),
         ]);
+        if self.restore_secs_total() > 0.0 {
+            t.row(&[
+                "copy-on-serve restore".into(),
+                fmt_secs(self.restore_secs_total()),
+            ]);
+        }
         t.row(&["NaNs in responses".into(), self.output_nans_total().to_string()]);
+        if !self.mix.is_single() {
+            for ks in self.kind_summaries() {
+                t.row(&[
+                    format!("[{}] served/shed", ks.kind),
+                    format!(
+                        "{} / {} (p99 {}, {} repairs)",
+                        ks.served,
+                        ks.shed,
+                        fmt_secs(ks.latency_p99_secs),
+                        ks.repairs_total
+                    ),
+                ]);
+            }
+        }
         if let Some(d) = self.deadline {
             t.row(&["deadline".into(), fmt_secs(d)]);
         }
@@ -750,14 +1051,24 @@ pub(crate) fn request_seed(seed: u64, index: usize) -> u64 {
         .wrapping_add((index as u64).wrapping_mul(0x9e3779b97f4a7c15))
 }
 
-/// The fault injector's dose sequence: request `i` of a run seeded `seed`
-/// carries `dose_stream(seed, words, fault_rate, n)[i]` NaN words.  One
-/// derivation shared by the live load generator and the capacity
-/// planner's virtual-time probe ([`crate::coordinator::capacity`]), so a
-/// probe's fault ledger is identical in both modes.
-pub(crate) fn dose_stream(seed: u64, words: u64, fault_rate: f64, n: usize) -> Vec<u64> {
-    let mut rng = Pcg64::seed(seed ^ FAULT_SEED);
-    (0..n).map(|_| rng.binomial(words, fault_rate)).collect()
+/// The fault injector's per-request stamp: the workload kind (a weight
+/// draw over the mix) and the NaN dose
+/// (`Binomial(kind.input_words(), fault_rate)`) of request `index`, as a
+/// pure function of `(seed, index)` — worker assignment can never change
+/// it.  One derivation shared by the live load generator and the
+/// capacity planner's virtual-time probe
+/// ([`crate::coordinator::capacity`]), so a probe's per-kind fault
+/// ledger is identical in both modes and at any worker count.
+pub(crate) fn request_stamp(
+    seed: u64,
+    mix: &RequestMix,
+    fault_rate: f64,
+    index: usize,
+) -> (WorkloadKind, u64) {
+    let mut rng = Pcg64::seed(request_seed(seed, index) ^ FAULT_SEED);
+    let kind = mix.pick(rng.next_f64());
+    let dose = rng.binomial(kind.input_words() as u64, fault_rate);
+    (kind, dose)
 }
 
 /// Run one serving campaign: spawn the workers and the
@@ -770,7 +1081,11 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         (0.0..=1.0).contains(&cfg.fault_rate),
         "--fault-rate is a per-word probability in [0, 1]"
     );
-    super::session::ensure_servable(cfg.workload, cfg.protection)?;
+    // Every kind of the mix must honour the (workload, policy)
+    // servability contract under this protection.
+    for &(kind, _) in cfg.mix.entries() {
+        super::session::ensure_servable(kind, cfg.protection, cfg.policy)?;
+    }
     if let Some(rps) = cfg.arrival.rate() {
         anyhow::ensure!(
             rps > 0.0 && rps.is_finite(),
@@ -802,8 +1117,6 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         cfg.requests
     );
     let workers = cfg.workers.clamp(1, NUM_DOMAINS).min(cfg.requests);
-    // Size of the fault process's target: the resident input word count.
-    let input_words = cfg.workload.input_words();
     let deadline = cfg.deadline.map(Duration::from_secs_f64);
 
     let queue = BoundedQueue::new(cfg.queue_depth);
@@ -825,11 +1138,11 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         // deterministic NaN dose and paces arrivals.
         scope.spawn(move || {
             let _close = CloseOnDrop(queue);
-            let doses = dose_stream(cfg.seed, input_words as u64, cfg.fault_rate, cfg.requests);
             let offsets = cfg.arrival.offsets(cfg.seed, cfg.requests);
             ready.wait();
             let start = Instant::now();
-            for (index, dose) in doses.into_iter().enumerate() {
+            for index in 0..cfg.requests {
+                let (kind, dose) = request_stamp(cfg.seed, &cfg.mix, cfg.fault_rate, index);
                 let arrival = match &offsets {
                     None => Instant::now(),
                     Some(offs) => {
@@ -844,7 +1157,12 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                         due
                     }
                 };
-                queue.push(ServeRequest { index, dose, arrival });
+                queue.push(ServeRequest {
+                    index,
+                    kind,
+                    dose,
+                    arrival,
+                });
             }
             // Admission stops here: everything still queued is backlog
             // the drain phase must serve or shed.
@@ -862,20 +1180,23 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                 let mut session = ExperimentSession::new();
                 {
                     let _ready = ReadyOnDrop(ready);
-                    session.prepare_resident(cfg.workload, cfg.seed);
+                    // Every mix kind becomes resident before the arrival
+                    // clocks start, so multi-kind setup cost is never
+                    // charged to the first wave of requests.
+                    for kind in cfg.mix.kinds() {
+                        session.prepare_resident(kind, cfg.seed);
+                    }
                     // _ready drops here: barrier released exactly once,
                     // during unwinding too if preparation panics
                 }
-                let mut served = 0u64;
                 while let Some(req) = queue.pop() {
                     let cell = ServeCell {
-                        workload: cfg.workload,
+                        workload: req.kind,
                         resident_seed: cfg.seed,
                         protection: cfg.protection,
                         policy: cfg.policy,
                         dose: req.dose,
                         placement_seed: request_seed(cfg.seed, req.index),
-                        served_before: served,
                     };
                     // Overload control: a request whose deadline is
                     // already blown at dequeue time is shed — its dose is
@@ -887,13 +1208,13 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                     let out = if blown {
                         session.shed_request(&cell)
                     } else {
-                        served += 1;
                         session.serve_request(&cell)
                     };
                     let done = Instant::now();
                     let msg = out.map(|outcome| RequestResult {
                         index: req.index,
                         worker,
+                        kind: req.kind,
                         dose: req.dose,
                         outcome,
                         latency_secs: done.saturating_duration_since(req.arrival).as_secs_f64(),
@@ -951,6 +1272,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
 
     Ok(ServeReport {
         config_label: cfg.label(),
+        mix: cfg.mix.clone(),
         workers,
         queue_depth: cfg.queue_depth,
         queue_highwater: queue.highwater(),
@@ -973,7 +1295,7 @@ mod tests {
 
     fn small_cfg(workers: usize) -> ServeConfig {
         ServeConfig {
-            workload: WorkloadKind::MatMul { n: 12 },
+            mix: RequestMix::single(WorkloadKind::MatMul { n: 12 }),
             requests: 6,
             workers,
             queue_depth: 4,
@@ -981,6 +1303,73 @@ mod tests {
             fault_rate: 0.02,
             seed: 11,
             ..Default::default()
+        }
+    }
+
+    #[test]
+    fn request_mix_parses_weights_sizes_and_defaults() {
+        // the acceptance-spec shape: bare names default to n=256
+        let mix = RequestMix::parse("matmul:0.5,jacobi:0.3,cg:0.2").unwrap();
+        assert_eq!(
+            mix.kinds(),
+            vec![
+                WorkloadKind::MatMul { n: 256 },
+                WorkloadKind::Jacobi { n: 256, iters: 100 },
+                WorkloadKind::Cg { n: 256, iters: 50 },
+            ]
+        );
+        let w: Vec<f64> = mix.entries().iter().map(|&(_, w)| w).collect();
+        assert!((w[0] - 0.5).abs() < 1e-12 && (w[1] - 0.3).abs() < 1e-12);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12, "normalized");
+        assert!(!mix.is_single());
+
+        // explicit sizes/extras keep their workload-spec meaning; an
+        // entry with no float tail defaults to weight 1 (pre-normalize)
+        let mix = RequestMix::parse("matmul:16,jacobi:16:5:0.5").unwrap();
+        assert_eq!(
+            mix.kinds(),
+            vec![
+                WorkloadKind::MatMul { n: 16 },
+                WorkloadKind::Jacobi { n: 16, iters: 5 },
+            ]
+        );
+        let w: Vec<f64> = mix.entries().iter().map(|&(_, w)| w).collect();
+        assert!((w[0] - 2.0 / 3.0).abs() < 1e-9, "1 : 0.5 normalizes to 2/3 : 1/3, got {w:?}");
+
+        // a single explicit entry is a single-kind mix with weight 1
+        let mix = RequestMix::parse("matvec:64").unwrap();
+        assert!(mix.is_single());
+        assert_eq!(mix.kinds(), vec![WorkloadKind::MatVec { n: 64 }]);
+        assert_eq!(mix.label(), "matvec:64");
+
+        // rejects: empty, bad weights, duplicates
+        assert!(RequestMix::parse("").is_err());
+        assert!(RequestMix::parse("matmul:16:0.0").is_err(), "zero weight");
+        assert!(RequestMix::parse("matmul:16:-1.5").is_err(), "negative weight");
+        assert!(RequestMix::parse("matmul:16:nan").is_err(), "non-finite weight");
+        assert!(RequestMix::parse("bogus:0.5").is_err(), "unknown workload");
+        assert!(
+            RequestMix::parse("matmul:16:0.5,matmul:16:0.5").is_err(),
+            "duplicate kind"
+        );
+    }
+
+    #[test]
+    fn request_stamp_is_index_pure_and_mix_weighted() {
+        let mix = RequestMix::parse("matmul:12:0.5,jacobi:12:5:0.5").unwrap();
+        // pure function of (seed, index)
+        for i in 0..20 {
+            assert_eq!(request_stamp(9, &mix, 0.01, i), request_stamp(9, &mix, 0.01, i));
+        }
+        // both kinds appear over a modest horizon
+        let kinds: HashSet<String> = (0..64)
+            .map(|i| request_stamp(9, &mix, 0.01, i).0.to_string())
+            .collect();
+        assert_eq!(kinds.len(), 2, "{kinds:?}");
+        // a single-kind mix always stamps that kind
+        let single = RequestMix::single(WorkloadKind::MatMul { n: 12 });
+        for i in 0..32 {
+            assert_eq!(request_stamp(9, &single, 0.01, i).0, single.kinds()[0]);
         }
     }
 
@@ -1228,11 +1617,77 @@ mod tests {
         assert!(serve(&ServeConfig { slo_shed: Some(1.5), ..small_cfg(1) }).is_err());
         assert!(serve(&ServeConfig { slo_shed: Some(-0.1), ..small_cfg(1) }).is_err());
         assert!(serve(&ServeConfig { warmup: 6, ..small_cfg(1) }).is_err());
-        // input-mutating / division-bearing workloads void the
-        // resident-weights serving contract
-        let lu = WorkloadKind::Lu { n: 8 };
-        assert!(serve(&ServeConfig { workload: lu, ..small_cfg(1) }).is_err());
-        let jacobi = WorkloadKind::Jacobi { n: 8, iters: 3 };
-        assert!(serve(&ServeConfig { workload: jacobi, ..small_cfg(1) }).is_err());
+        // the servability contract: division-bearing kinds are refused
+        // under the default zero policy — even buried inside a mix —
+        // and admitted under a division-safe one
+        let lu = RequestMix::single(WorkloadKind::Lu { n: 8 });
+        assert!(serve(&ServeConfig { mix: lu, ..small_cfg(1) }).is_err());
+        let jacobi = RequestMix::single(WorkloadKind::Jacobi { n: 8, iters: 3 });
+        assert!(serve(&ServeConfig { mix: jacobi.clone(), ..small_cfg(1) }).is_err());
+        let buried = RequestMix::parse("matmul:12:0.9,cg:8:3:0.1").unwrap();
+        let err = serve(&ServeConfig { mix: buried, ..small_cfg(1) })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("division-safe"), "actionable contract error: {err}");
+        assert!(serve(&ServeConfig {
+            mix: jacobi,
+            policy: RepairPolicy::One,
+            ..small_cfg(1)
+        })
+        .is_ok());
+    }
+
+    #[test]
+    fn serve_mixed_kinds_breaks_out_per_kind_records() {
+        let cfg = ServeConfig {
+            mix: RequestMix::parse("matmul:12:0.4,jacobi:12:5:0.3,stencil:12:3:0.3").unwrap(),
+            policy: RepairPolicy::One,
+            requests: 30,
+            workers: 2,
+            queue_depth: 4,
+            fault_rate: 0.02,
+            seed: 11,
+            ..Default::default()
+        };
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.results.len(), 30);
+        assert_eq!(rep.output_nans_total(), 0, "every kind's responses NaN-free");
+        assert!(rep.repairs_total() > 0);
+
+        let summaries = rep.kind_summaries();
+        assert_eq!(summaries.len(), 3, "one row per mix kind, in mix order");
+        assert_eq!(
+            summaries.iter().map(|k| k.requests).sum::<u64>(),
+            30,
+            "every request attributed to exactly one kind"
+        );
+        assert!(
+            summaries.iter().all(|k| k.requests > 0),
+            "30 requests over 0.4/0.3/0.3 weights reach every kind: {:?}",
+            summaries.iter().map(|k| (k.kind, k.requests)).collect::<Vec<_>>()
+        );
+        // the stencil slice of the mix pays the copy-on-serve restore;
+        // non-mutating kinds never do
+        let stencil = summaries
+            .iter()
+            .find(|k| k.kind == WorkloadKind::Stencil { n: 12, steps: 3 })
+            .unwrap();
+        assert!(stencil.restore_secs > 0.0);
+        let matmul = summaries
+            .iter()
+            .find(|k| k.kind == WorkloadKind::MatMul { n: 12 })
+            .unwrap();
+        assert_eq!(matmul.restore_secs, 0.0, "non-mutating kinds never restore");
+        assert!(rep.restore_secs_total() >= stencil.restore_secs);
+
+        // record stream: per-request, then per-kind latency + slo blocks,
+        // then the overall histogram and verdict
+        let recs = rep.records();
+        assert_eq!(recs.len(), 30 + 3 + 3 + 2);
+        assert!(recs[..30].iter().all(|r| r.kind() == "serve_request"));
+        assert!(recs[30..33].iter().all(|r| r.kind() == "serve_kind_latency"));
+        assert!(recs[33..36].iter().all(|r| r.kind() == "serve_kind_slo"));
+        assert_eq!(recs[36].kind(), "serve_latency");
+        assert_eq!(recs[37].kind(), "serve_slo");
     }
 }

@@ -26,6 +26,12 @@
 //! `Campaign::run` is now a thin wrapper that runs one cell in a
 //! throwaway session; the scheduler gives each worker thread a long-lived
 //! session so batches amortize allocation across all cells it executes.
+//!
+//! Serving requests run against a separate [`ResidentSet`] — one pinned
+//! resident workload per kind (multiple kinds per worker for request
+//! mixes), with a pristine input snapshot and copy-on-serve restore for
+//! input-mutating kinds — so campaign reseeding/eviction can never
+//! corrupt resident-weight provenance (DESIGN.md §4.2).
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -57,44 +63,28 @@ struct CachedWorkload {
 /// cells, and sweep-sized test workloads stay far below the budget.
 pub const CACHE_BYTES_BUDGET: usize = 64 << 20;
 
-/// The repair value a [`RepairPolicy`] resolves to for scrub sweeps (the
-/// scrubber patches words directly, so the address-sensitive
-/// `NeighborMean` policy degrades to 0.0 like the trap path's fallback).
-fn scrub_value(policy: RepairPolicy) -> f64 {
-    match policy {
-        RepairPolicy::Constant(c) => c,
-        RepairPolicy::One => 1.0,
-        _ => 0.0,
-    }
-}
-
-/// Fail fast when a (workload, protection) pair cannot serve requests:
-/// the workload-specific protection baselines (ECC, ABFT) need
-/// per-workload harness support; input-mutating workloads
-/// ([`WorkloadKind::mutates_inputs`]) would destroy the resident
-/// weights on their first run; and division-bearing workloads
-/// ([`WorkloadKind::servable`]) can turn a repaired-to-policy-value
-/// divisor into Inf responses.  One rule shared by
-/// [`crate::coordinator::server::serve`] (config validation) and
-/// [`ExperimentSession::serve_request`].
-pub(crate) fn ensure_servable(workload: WorkloadKind, protection: Protection) -> Result<()> {
+/// Fail fast when a (workload, protection, policy) triple cannot serve
+/// requests.  Servability is a **contract between the workload's hazards
+/// and the policy's safety class** (DESIGN.md §4.2), not a static
+/// workload blacklist: division-by-data requires a division-safe repair
+/// value ([`WorkloadKind::servable_with`]); input mutation is discharged
+/// by the resident set's copy-on-serve restore, so LU/stencil residents
+/// are admitted; the workload-specific protection baselines (ECC, ABFT)
+/// still need per-workload harness support and are refused.  One rule
+/// shared by [`crate::coordinator::server::serve`] (config validation),
+/// the capacity planner, and [`ExperimentSession::serve_request`].
+pub(crate) fn ensure_servable(
+    workload: WorkloadKind,
+    protection: Protection,
+    policy: RepairPolicy,
+) -> Result<()> {
     if matches!(protection, Protection::Ecc | Protection::Abft) {
         anyhow::bail!(
             "{} protection is workload-specific; serve supports none/register/memory/scrub",
             protection.name()
         );
     }
-    anyhow::ensure!(
-        !workload.mutates_inputs(),
-        "{workload} mutates its inputs in place and cannot act as resident serving \
-         weights; serve supports matmul/matvec"
-    );
-    anyhow::ensure!(
-        workload.servable(),
-        "{workload} divides by values the repair policy may have patched (the paper's \
-         policy-ablation hazard), so responses can go non-finite; serve supports \
-         matmul/matvec"
-    );
+    workload.servable_with(policy)?;
     if let Protection::Scrub { period_runs } = protection {
         // `run_cell` treats scrub:0 as "never sweep" (a valid campaign
         // baseline); a *serving* run labeled scrub that never scrubs
@@ -125,9 +115,6 @@ pub struct ServeCell {
     /// Seed for the dose-placement draws (derived from the request index,
     /// so placement is independent of which worker serves the request).
     pub placement_seed: u64,
-    /// Requests this session served before this one — drives the scrub
-    /// cadence for [`Protection::Scrub`].
-    pub served_before: u64,
 }
 
 /// What a serving worker did with one request: ran it inside a protected
@@ -166,6 +153,22 @@ pub struct ServedOutcome {
     /// Non-finite values in the response — zero under reactive
     /// protection, the paper's Fig. 1 catastrophe without it.
     pub output_nans: u64,
+    /// Planted words of *this request* that the compute never touched
+    /// with an FP instruction (so no trap could repair them — e.g. CG
+    /// only memcpy's its right-hand side, the stencil only copies its
+    /// boundary cells), patched to the policy value by the post-run
+    /// hygiene pass under [`Protection::RegisterMemory`].  Keeps the
+    /// paper-mechanism ledger closed per request — the invariance
+    /// argument the worker-count tests rest on — using exactly the
+    /// planted-index knowledge the shed path already uses.
+    pub hygiene_repairs: u64,
+    /// Input words written back from the pristine snapshot after the
+    /// compute (copy-on-serve restore; non-zero only for input-mutating
+    /// resident kinds).
+    pub restored_words: u64,
+    /// Wall-clock seconds of the copy-on-serve restore (outside the
+    /// protected window; the worker is still busy for its duration).
+    pub restore_secs: f64,
 }
 
 /// What [`ExperimentSession::shed_request`] did for one shed request.
@@ -213,6 +216,15 @@ impl RequestOutcome {
         }
     }
 
+    /// Planted-but-FP-untouched words patched by the post-run hygiene
+    /// pass (served requests under [`Protection::RegisterMemory`] only).
+    pub fn hygiene_repairs(&self) -> u64 {
+        match self {
+            RequestOutcome::Served(o) => o.hygiene_repairs,
+            RequestOutcome::Shed(_) => 0,
+        }
+    }
+
     /// Words the shed path patched back (zero when served).
     pub fn shed_repairs(&self) -> u64 {
         match self {
@@ -238,12 +250,127 @@ impl RequestOutcome {
             RequestOutcome::Shed(_) => 0,
         }
     }
+
+    /// Input words restored from the pristine snapshot after the compute
+    /// (copy-on-serve; zero for non-mutating kinds and shed requests —
+    /// a shed request never ran, so there is nothing to restore).
+    pub fn restored_words(&self) -> u64 {
+        match self {
+            RequestOutcome::Served(o) => o.restored_words,
+            RequestOutcome::Shed(_) => 0,
+        }
+    }
+
+    /// Seconds spent on the copy-on-serve restore (zero when nothing was
+    /// restored).
+    pub fn restore_secs(&self) -> f64 {
+        match self {
+            RequestOutcome::Served(o) => o.restore_secs,
+            RequestOutcome::Shed(_) => 0.0,
+        }
+    }
+}
+
+/// The serving residents of one session: one cached workload per
+/// [`WorkloadKind`], each acting as the worker's resident weights —
+/// allocated on admission, pinned for the session's lifetime (never
+/// evicted, never reseeded), with a **pristine input snapshot** for
+/// input-mutating kinds so the copy-on-serve restore can discharge the
+/// mutation hazard (DESIGN.md §4.2).  Kept separate from the campaign
+/// workload cache: campaign cells reseed and byte-budget-evict their
+/// buffers, either of which would corrupt resident-weight provenance.
+#[derive(Default)]
+pub struct ResidentSet {
+    entries: HashMap<WorkloadKind, Resident>,
+}
+
+/// One resident workload and its serving state.
+struct Resident {
+    pool: ApproxPool,
+    workload: Box<dyn Workload>,
+    /// Pristine input-word snapshot, captured at admission before any
+    /// compute ran — the copy-on-serve restore source.  Present exactly
+    /// for input-mutating kinds ([`WorkloadKind::mutates_inputs`]).
+    pristine: Option<Vec<u64>>,
+    /// Requests served against this resident (drives the per-kind scrub
+    /// cadence for [`Protection::Scrub`]).
+    served: u64,
+}
+
+impl ResidentSet {
+    /// Admit (or fetch) the resident for `kind`, built from `seed` on
+    /// first touch.  The first build wins: `seed` is ignored for a kind
+    /// that is already resident.
+    fn entry(&mut self, kind: WorkloadKind, seed: u64) -> &mut Resident {
+        self.entries.entry(kind).or_insert_with(|| {
+            let pool = ApproxPool::new();
+            let workload = kind.build(&pool, seed);
+            let pristine = kind.mutates_inputs().then(|| {
+                (0..workload.input_len())
+                    .map(|i| workload.input_bits(i))
+                    .collect()
+            });
+            Resident {
+                pool,
+                workload,
+                pristine,
+                served: 0,
+            }
+        })
+    }
+
+    /// Number of resident kinds.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// No residents admitted yet?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The resident kinds (arbitrary order).
+    pub fn kinds(&self) -> Vec<WorkloadKind> {
+        self.entries.keys().copied().collect()
+    }
+
+    /// Current input words of `kind`'s resident, as raw bits — the hook
+    /// tests use to assert copy-on-serve residents are byte-identical
+    /// after N requests.
+    pub fn input_bits(&self, kind: WorkloadKind) -> Option<Vec<u64>> {
+        self.entries.get(&kind).map(|r| {
+            (0..r.workload.input_len())
+                .map(|i| r.workload.input_bits(i))
+                .collect()
+        })
+    }
+
+    /// The pristine input snapshot of `kind`'s resident (input-mutating
+    /// kinds only).
+    pub fn pristine(&self, kind: WorkloadKind) -> Option<&[u64]> {
+        self.entries.get(&kind).and_then(|r| r.pristine.as_deref())
+    }
+
+    /// Total allocations across the resident pools.
+    fn allocs_total(&self) -> usize {
+        self.entries.values().map(|r| r.pool.allocs_total()).sum()
+    }
+}
+
+/// Write `pristine` back over the workload's input words (the
+/// copy-on-serve restore: one store per input word through the same
+/// flat-index path the injector uses).
+fn restore_pristine(workload: &mut dyn Workload, pristine: &[u64]) {
+    for (i, &bits) in pristine.iter().enumerate() {
+        workload.poison_input(i, bits);
+    }
 }
 
 /// Reusable executor for campaign cells (see module docs).
 #[derive(Default)]
 pub struct ExperimentSession {
     cache: HashMap<WorkloadKind, CachedWorkload>,
+    residents: ResidentSet,
     cells_run: u64,
 }
 
@@ -263,15 +390,24 @@ impl ExperimentSession {
         self.cells_run
     }
 
-    /// Total allocations ever made across the session's cached pools —
-    /// the quantity the workload cache keeps flat across cells.
+    /// Total allocations ever made across the session's cached pools
+    /// (campaign cache and serving residents) — the quantity the caches
+    /// keep flat across cells and requests.
     pub fn pool_allocs_total(&self) -> usize {
-        self.cache.values().map(|c| c.pool.allocs_total()).sum()
+        self.cache.values().map(|c| c.pool.allocs_total()).sum::<usize>()
+            + self.residents.allocs_total()
     }
 
-    /// Drop all cached workloads (frees their approximate memory).
+    /// Drop all cached campaign workloads (frees their approximate
+    /// memory).  Serving residents are pinned and unaffected.
     pub fn clear_cache(&mut self) {
         self.cache.clear();
+    }
+
+    /// The session's serving residents (admitted by
+    /// [`ExperimentSession::prepare_resident`] / first serve).
+    pub fn residents(&self) -> &ResidentSet {
+        &self.residents
     }
 
     /// Execute one campaign cell.  Identical semantics to a fresh
@@ -296,7 +432,7 @@ impl ExperimentSession {
             }
         }
 
-        let cached = self.resident_entry(cfg.workload, cfg.seed);
+        let cached = self.cache_entry(cfg.workload, cfg.seed);
         let pool = cached.pool.clone();
         let workload: &mut dyn Workload = cached.workload.as_mut();
         // Re-key cached buffers to this cell's seed (no reallocation).
@@ -304,7 +440,9 @@ impl ExperimentSession {
 
         let mut injector = Injector::new(cfg.seed ^ 0x696e6a6563740000);
         let mut input_rng = crate::util::rng::Pcg64::seed(cfg.seed ^ 0x706f69736f6e);
-        let scrubber = Scrubber::new(scrub_value(cfg.policy));
+        // The scrubber patches words directly, so the address-sensitive
+        // NeighborMean policy degrades to its fallback like the trap path.
+        let scrubber = Scrubber::new(cfg.policy.fallback_value());
 
         // warmup (no injection): page in, stabilize frequency
         for _ in 0..cfg.warmup {
@@ -393,10 +531,10 @@ impl ExperimentSession {
         })
     }
 
-    /// The cached workload for `kind`, built from `seed` on first touch —
-    /// the single construction path `run_cell`, `prepare_resident`, and
-    /// `serve_request` all share.
-    fn resident_entry(&mut self, kind: WorkloadKind, seed: u64) -> &mut CachedWorkload {
+    /// The cached campaign workload for `kind`, built from `seed` on
+    /// first touch (the `run_cell` path; serving uses the separate
+    /// [`ResidentSet`]).
+    fn cache_entry(&mut self, kind: WorkloadKind, seed: u64) -> &mut CachedWorkload {
         self.cache.entry(kind).or_insert_with(|| {
             let pool = ApproxPool::new();
             let workload = kind.build(&pool, seed);
@@ -404,48 +542,63 @@ impl ExperimentSession {
         })
     }
 
-    /// Build (or reuse) the resident workload for `kind`, seeded with
+    /// Admit (or reuse) the resident workload for `kind`, seeded with
     /// `seed`, and run it once unmeasured — a serving worker pays
     /// allocation and page-in before its first measured request instead of
-    /// inside a service window.
+    /// inside a service window.  For input-mutating kinds the pristine
+    /// snapshot is captured *before* the warm run and restored after it,
+    /// so the resident is byte-pristine when the first request arrives.
     pub fn prepare_resident(&mut self, kind: WorkloadKind, seed: u64) {
-        self.resident_entry(kind, seed).workload.run();
+        let resident = self.residents.entry(kind, seed);
+        resident.workload.run();
+        if let Some(pristine) = &resident.pristine {
+            restore_pristine(resident.workload.as_mut(), pristine);
+        }
     }
 
-    /// Serve one request against the resident workload (the
-    /// [`crate::coordinator::server`] worker path): plant the request's
-    /// NaN dose at seeded positions in the resident inputs, execute one
-    /// protected run, and scan the response for NaNs.
+    /// Serve one request against the resident workload for the request's
+    /// kind (the [`crate::coordinator::server`] worker path): plant the
+    /// request's NaN dose at seeded positions in the resident inputs,
+    /// execute one protected run, scan the response for NaNs, and — for
+    /// input-mutating kinds — restore the inputs from the pristine
+    /// snapshot (**copy-on-serve**), so the resident is byte-identical
+    /// before every request.
     ///
     /// Unlike [`ExperimentSession::run_cell`], the resident buffers are
     /// **not** reseeded between requests — the weights stay resident for
     /// the worker's lifetime exactly like model weights in a serving
-    /// process, so repairs patch them in place (a repaired word keeps its
-    /// policy value afterwards).  Under [`Protection::RegisterMemory`]
-    /// every planted NaN therefore traps exactly once, in the request that
-    /// first touches it, and total repairs across a serve run depend only
-    /// on the planted doses — not on worker count or request placement
-    /// (asserted by `rust/tests/integration_serve.rs`).  Under
-    /// [`Protection::RegisterOnly`] NaNs persist in resident memory and
-    /// re-trap on every later request that touches them, and under
-    /// [`Protection::None`] they silently corrupt every later response.
+    /// process.  For non-mutating kinds repairs patch them in place (a
+    /// repaired word keeps its policy value afterwards): under
+    /// [`Protection::RegisterMemory`] every planted NaN is closed by the
+    /// request that planted it — a trap at first FP touch, or the
+    /// post-run hygiene pass for words the compute never FP-touches —
+    /// so total repairs across a serve run depend only on the planted
+    /// doses, not on worker count or request placement (asserted by
+    /// `rust/tests/integration_serve.rs`).  For mutating kinds the
+    /// post-run restore wipes both the run's mutations and its repairs,
+    /// so each request's trap ledger depends only on its own dose —
+    /// per-kind ledgers stay worker-count invariant there too.  Under
+    /// [`Protection::RegisterOnly`] NaNs persist in non-mutating resident
+    /// memory and re-trap on every later request that touches them, and
+    /// under [`Protection::None`] they silently corrupt every later
+    /// response.
     ///
-    /// The cache is keyed by [`WorkloadKind`] alone: the first build wins,
-    /// so `resident_seed` only matters on a session's first touch of a
-    /// kind, and a session that previously ran [`ExperimentSession::run_cell`]
-    /// for the same kind serves against those (reseeded) buffers.  Serving
-    /// also pins the resident kind — no byte-budget eviction runs here.
-    /// Dedicate a session to serving (as `coordinator::server` does) when
-    /// exact resident-weight provenance matters.
+    /// The resident set is keyed by [`WorkloadKind`] alone: the first
+    /// build wins, so `resident_seed` only matters on a session's first
+    /// touch of a kind.  Residents are pinned — campaign byte-budget
+    /// eviction never touches them — and live apart from the campaign
+    /// cache, so interleaved [`ExperimentSession::run_cell`] calls cannot
+    /// corrupt resident-weight provenance.
     pub fn serve_request(&mut self, cell: &ServeCell) -> Result<RequestOutcome> {
-        ensure_servable(cell.workload, cell.protection)?;
-        let cached = self.resident_entry(cell.workload, cell.resident_seed);
-        let pool = cached.pool.clone();
-        let workload: &mut dyn Workload = cached.workload.as_mut();
+        ensure_servable(cell.workload, cell.protection, cell.policy)?;
+        let resident = self.residents.entry(cell.workload, cell.resident_seed);
+        let pool = resident.pool.clone();
+        let workload: &mut dyn Workload = resident.workload.as_mut();
 
         // The fault process acts between requests: plant the dose as
         // paper-pattern NaN words at placement-seed-derived positions.
-        let planted = plant_dose(workload, cell.dose, cell.placement_seed).len() as u64;
+        let plant_idxs = plant_dose(workload, cell.dose, cell.placement_seed);
+        let planted = plant_idxs.len() as u64;
 
         // Arming, proactive scrubbing, and the compute are all inside the
         // service window — protection overhead is what the latency SLO is
@@ -457,18 +610,58 @@ impl ExperimentSession {
             .map(|tc| TrapGuard::arm_reset(&pool, &tc));
         let mut scrub_repairs = 0u64;
         if let Protection::Scrub { period_runs } = cell.protection {
-            if period_runs > 0 && cell.served_before % period_runs as u64 == 0 {
-                scrub_repairs = Scrubber::new(scrub_value(cell.policy))
+            if period_runs > 0 && resident.served % period_runs as u64 == 0 {
+                scrub_repairs = Scrubber::new(cell.policy.fallback_value())
                     .scrub(&pool)
                     .nans_repaired();
             }
         }
         workload.run();
+
+        // Hygiene pass (full paper mechanism only): a planted word the
+        // compute never touched with an FP instruction took no trap, so
+        // reactive repair alone leaves it NaN in resident memory — CG
+        // only memcpy's its right-hand side into r/p, the stencil only
+        // copies its boundary cells.  Patch this request's leftover
+        // plants to the policy value (O(dose), same planted-index
+        // knowledge the shed path uses) so every request closes its own
+        // plants — the per-request ledger-invariance guarantee — and no
+        // stale NaN can corrupt a later response.  Register-only, none,
+        // and scrub keep their documented persistence semantics.
+        let mut hygiene_repairs = 0u64;
+        if matches!(cell.protection, Protection::RegisterMemory) {
+            let repair_bits = cell.policy.fallback_value().to_bits();
+            for &idx in &plant_idxs {
+                // Bit-level NaN test (like repair/memory.rs): the guard
+                // is still armed, and an FP `is_nan()` comparison on the
+                // paper's *signaling* NaN would itself trap — repairing
+                // the probe register and making the check read false.
+                if crate::fp::nan::classify_f64(workload.input_bits(idx)).is_nan() {
+                    workload.poison_input(idx, repair_bits);
+                    hygiene_repairs += 1;
+                }
+            }
+        }
         let service_secs = t0.elapsed().as_secs_f64();
         let traps = guard.as_ref().map(|g| g.stats()).unwrap_or_default();
         drop(guard);
 
         let output_nans = workload.output_nonfinite();
+
+        // Copy-on-serve: put a mutating resident back to its pristine
+        // bytes after the response was taken.  This also clears any NaNs
+        // the weaker protections left in the inputs, so mutating
+        // residents start every request clean by construction.
+        let (restored_words, restore_secs) = match &resident.pristine {
+            Some(pristine) => {
+                let t_restore = Instant::now();
+                restore_pristine(workload, pristine);
+                (pristine.len() as u64, t_restore.elapsed().as_secs_f64())
+            }
+            None => (0, 0.0),
+        };
+
+        resident.served += 1;
         self.cells_run += 1;
 
         Ok(RequestOutcome::Served(ServedOutcome {
@@ -477,6 +670,9 @@ impl ExperimentSession {
             scrub_repairs,
             service_secs,
             output_nans,
+            hygiene_repairs,
+            restored_words,
+            restore_secs,
         }))
     }
 
@@ -484,36 +680,49 @@ impl ExperimentSession {
     /// overload-control path, DESIGN.md §4.1): the fault interval's dose
     /// is planted exactly as [`ExperimentSession::serve_request`] would
     /// plant it — admission control cannot undo the upset process — and
-    /// then immediately patched back to the repair-policy value at the
-    /// same addresses, at O(dose) cost instead of a compute.
+    /// then immediately patched back at the same addresses, at O(dose)
+    /// cost instead of a compute.
     ///
-    /// Under [`Protection::RegisterMemory`] planting and patching both
-    /// resolve to the policy value — exactly what the trap path would
-    /// have left behind had the request been served — so the worker's
-    /// resident weights follow the *same trajectory* whether a request
-    /// was served or shed.  That preserves the invariant the serving
-    /// ledger proof rests on (every request closes its own plants before
-    /// the next one starts), which is what keeps `dose`/`nans_planted`
-    /// per request — and repairs in total — worker-count invariant even
-    /// when shed patterns differ between runs (asserted by
-    /// `rust/tests/integration_serve.rs`).  Under the other protections
-    /// the hygiene patch *repairs* corruption a served request would
-    /// have left resident (register-only never writes memory; none and
-    /// scrub-between-sweeps leave NaNs in place), so their trap/output
-    /// ledgers depend on which requests shed — those ledgers were
-    /// already placement-dependent without shedding (see the
+    /// The patch value is **state-equivalent to serving**: for
+    /// non-mutating kinds under [`Protection::RegisterMemory`] the trap
+    /// path would have left the policy's fallback value behind, so that
+    /// is what the patch writes; for input-mutating kinds the
+    /// copy-on-serve restore would have put the pristine bytes back, so
+    /// the patch writes the pristine bits instead.  Either way the
+    /// worker's resident weights follow the *same trajectory* whether a
+    /// request was served or shed.  That preserves the invariant the
+    /// serving ledger proof rests on (every request closes its own
+    /// plants before the next one starts), which is what keeps
+    /// `dose`/`nans_planted` per request — and repairs in total —
+    /// worker-count invariant even when shed patterns differ between
+    /// runs (asserted by `rust/tests/integration_serve.rs`).  Under the
+    /// other protections on non-mutating kinds the hygiene patch
+    /// *repairs* corruption a served request would have left resident
+    /// (register-only never writes memory; none and scrub-between-sweeps
+    /// leave NaNs in place), so their trap/output ledgers depend on
+    /// which requests shed — those ledgers were already
+    /// placement-dependent without shedding (see the
     /// [`crate::coordinator::server`] module docs); only the per-request
     /// `dose`/`nans_planted` stream stays invariant for them.
     pub fn shed_request(&mut self, cell: &ServeCell) -> Result<RequestOutcome> {
-        ensure_servable(cell.workload, cell.protection)?;
-        let cached = self.resident_entry(cell.workload, cell.resident_seed);
-        let workload: &mut dyn Workload = cached.workload.as_mut();
+        ensure_servable(cell.workload, cell.protection, cell.policy)?;
+        let resident = self.residents.entry(cell.workload, cell.resident_seed);
+        let workload: &mut dyn Workload = resident.workload.as_mut();
 
         let t0 = Instant::now();
         let idxs = plant_dose(workload, cell.dose, cell.placement_seed);
-        let repair_bits = scrub_value(cell.policy).to_bits();
-        for &idx in &idxs {
-            workload.poison_input(idx, repair_bits);
+        match &resident.pristine {
+            Some(pristine) => {
+                for &idx in idxs.iter() {
+                    workload.poison_input(idx, pristine[idx]);
+                }
+            }
+            None => {
+                let repair_bits = cell.policy.fallback_value().to_bits();
+                for &idx in idxs.iter() {
+                    workload.poison_input(idx, repair_bits);
+                }
+            }
         }
         let shed_secs = t0.elapsed().as_secs_f64();
         self.cells_run += 1;
@@ -683,7 +892,6 @@ mod tests {
             policy: RepairPolicy::Zero,
             dose,
             placement_seed: 0x5eed ^ idx,
-            served_before: idx,
         }
     }
 
@@ -701,8 +909,26 @@ mod tests {
             assert!(out.traps().sigfpe_total >= 1);
             assert!(out.traps().memory_repairs() >= 1);
             assert!(out.service_secs() >= 0.0);
+            assert_eq!(out.restored_words(), 0, "matmul needs no copy-on-serve");
         }
         assert_eq!(s.pool_allocs_total(), 3, "weights stay resident");
+        assert_eq!(s.residents().len(), 1);
+        assert_eq!(s.cached_kinds(), 0, "serving never touches the campaign cache");
+    }
+
+    #[test]
+    fn residents_survive_interleaved_campaign_cells() {
+        // The campaign cache reseeds and byte-budget-evicts; residents
+        // must be isolated from both.
+        let mut s = ExperimentSession::new();
+        let kind = WorkloadKind::MatMul { n: 16 };
+        s.prepare_resident(kind, 9);
+        let before = s.residents().input_bits(kind).unwrap();
+        // same kind through the campaign path, different seed
+        s.run_cell(&cfg(16, 77, Protection::None)).unwrap();
+        let after = s.residents().input_bits(kind).unwrap();
+        assert_eq!(before, after, "campaign reseed must not touch the resident");
+        assert_eq!(s.residents().len(), 1);
         assert_eq!(s.cached_kinds(), 1);
     }
 
@@ -726,8 +952,9 @@ mod tests {
         assert_eq!(out.traps().sigfpe_total, 0);
         assert!(out.scrub_repairs() >= 1, "planted NaNs scrubbed before compute");
         assert_eq!(out.output_nans(), 0);
-        // served_before = 1, period 2 → no sweep this request: the planted
-        // NaNs survive into the response (the scrub-gap vulnerability)
+        // the resident has served 1 request, period 2 → no sweep this
+        // request: the planted NaNs survive into the response (the
+        // scrub-gap vulnerability)
         let out = s
             .serve_request(&serve_cell(3, 1, Protection::Scrub { period_runs: 2 }))
             .unwrap();
@@ -810,14 +1037,14 @@ mod tests {
     }
 
     #[test]
-    fn serve_rejects_unservable_workloads() {
-        // LU factors its matrix in place; jacobi divides by diagonal
-        // words a repaired NaN may have zeroed (the policy-ablation
-        // hazard) — both void the resident-weights serving contract.
+    fn servability_is_a_workload_policy_contract() {
+        // Division-bearing kinds (jacobi/cg/LU) are refused under a
+        // zero-resolving policy — the §5.2 hazard — and admitted under a
+        // division-safe one; the stencil has no division hazard, so even
+        // the zero policy serves it (copy-on-serve discharges mutation).
         let mut s = ExperimentSession::new();
         for workload in [
             WorkloadKind::Lu { n: 8 },
-            WorkloadKind::Stencil { n: 8, steps: 2 },
             WorkloadKind::Jacobi { n: 8, iters: 3 },
             WorkloadKind::Cg { n: 8, iters: 3 },
         ] {
@@ -825,8 +1052,78 @@ mod tests {
                 workload,
                 ..serve_cell(0, 0, Protection::RegisterMemory)
             };
-            assert!(s.serve_request(&cell).is_err(), "{workload} must be rejected");
+            let err = s.serve_request(&cell).unwrap_err().to_string();
+            assert!(
+                err.contains("division-safe") || err.contains("--policy one"),
+                "{workload}: rejection must name the fix: {err}"
+            );
         }
-        assert_eq!(s.cached_kinds(), 0, "rejected before building anything");
+        assert!(
+            s.residents().is_empty(),
+            "rejected before building anything"
+        );
+
+        // the same kinds serve under a division-safe policy
+        for workload in [
+            WorkloadKind::Jacobi { n: 8, iters: 3 },
+            WorkloadKind::Cg { n: 8, iters: 3 },
+        ] {
+            let cell = ServeCell {
+                workload,
+                policy: RepairPolicy::One,
+                ..serve_cell(1, 0, Protection::RegisterMemory)
+            };
+            let out = s.serve_request(&cell).unwrap();
+            assert_eq!(out.output_nans(), 0, "{workload}: response must be finite");
+        }
+
+        // stencil + zero policy: mutation is discharged by copy-on-serve
+        let cell = ServeCell {
+            workload: WorkloadKind::Stencil { n: 8, steps: 2 },
+            ..serve_cell(1, 0, Protection::RegisterMemory)
+        };
+        let out = s.serve_request(&cell).unwrap();
+        assert_eq!(out.output_nans(), 0);
+        assert_eq!(out.restored_words(), 64, "8×8 grid restored after the run");
+        assert!(out.restore_secs() >= 0.0);
+    }
+
+    #[test]
+    fn mutating_residents_are_byte_identical_after_copy_on_serve() {
+        let mut s = ExperimentSession::new();
+        for (workload, policy) in [
+            // stencil: mutation only; LU: mutation + division (needs a
+            // division-safe policy to be admitted at all)
+            (WorkloadKind::Stencil { n: 10, steps: 3 }, RepairPolicy::Zero),
+            (WorkloadKind::Lu { n: 10 }, RepairPolicy::One),
+        ] {
+            s.prepare_resident(workload, 9);
+            let pristine = s.residents().pristine(workload).unwrap().to_vec();
+            assert_eq!(
+                s.residents().input_bits(workload).unwrap(),
+                pristine,
+                "{workload}: resident pristine right after prepare"
+            );
+            for i in 0..4 {
+                let cell = ServeCell {
+                    workload,
+                    policy,
+                    ..serve_cell(2, i, Protection::RegisterMemory)
+                };
+                s.serve_request(&cell).unwrap();
+                // a shed request must preserve byte-identity too
+                let cell = ServeCell {
+                    workload,
+                    policy,
+                    ..serve_cell(2, 100 + i, Protection::RegisterMemory)
+                };
+                s.shed_request(&cell).unwrap();
+            }
+            assert_eq!(
+                s.residents().input_bits(workload).unwrap(),
+                pristine,
+                "{workload}: resident byte-identical after 4 serve + 4 shed requests"
+            );
+        }
     }
 }

@@ -37,7 +37,7 @@ pub fn policy_ablation_with_workers(
         RepairPolicy::Zero,
         RepairPolicy::One,
         RepairPolicy::Constant(0.5),
-        RepairPolicy::NeighborMean,
+        crate::repair::policy::NEIGHBOR_MEAN,
     ];
     let kinds = [
         WorkloadKind::MatMul { n },
@@ -84,7 +84,7 @@ pub fn policy_ablation_with_workers(
             let clean = trials - corrupted;
             t.row(&[
                 kind.name().to_string(),
-                policy.name(),
+                policy.to_string(),
                 if clean > 0 {
                     format!("{:.3e}", err / clean as f64)
                 } else {
@@ -263,7 +263,7 @@ mod tests {
         let t = policy_ablation(12, 2, 11).unwrap();
         assert_eq!(t.n_rows(), 4 * 4);
         let r = t.render();
-        assert!(r.contains("neighbor-mean") && r.contains("lu"));
+        assert!(r.contains("neighbor") && r.contains("lu"));
     }
 
     #[test]

@@ -68,7 +68,7 @@ pub mod prelude {
         protection::Protection,
     };
     pub use crate::fp::nan::{NanClass, PAPER_NAN_BITS};
-    pub use crate::repair::policy::RepairPolicy;
+    pub use crate::repair::policy::{RepairPolicy, SafetyClass};
     pub use crate::trap::guard::{TrapConfig, TrapGuard};
     pub use crate::workloads::{Workload, WorkloadKind};
 }

@@ -42,7 +42,11 @@ fn app() -> App {
                 .opt("protection", Some("memory"), "none|register|memory|scrub:K")
                 .opt("nans", Some("1"), "exact NaNs injected per rep")
                 .opt("ber", None, "per-bit flip rate (overrides --nans)")
-                .opt("policy", Some("zero"), "repair value: zero|one|neighbor|<float>")
+                .opt(
+                    "policy",
+                    Some("zero"),
+                    "repair value: zero|one|neighbor[:FALLBACK]|const:V|<float>",
+                )
                 .opt("reps", Some("10"), "measured repetitions")
                 .opt("seed", Some("42"), "PRNG seed")
                 .opt("config", None, "load options from a key=value file")
@@ -110,7 +114,14 @@ fn app() -> App {
                 .opt(
                     "workload",
                     Some("matmul:256"),
-                    "resident workload spec (matmul|matvec, name:size)",
+                    "resident workload spec name:size[:extra] (any kind whose hazards the \
+                     policy discharges)",
+                )
+                .opt(
+                    "mix",
+                    None,
+                    "weighted request mix over resident kinds, overrides --workload: \
+                     name[:size[:extra]]:weight,… (e.g. matmul:0.5,jacobi:0.3,cg:0.2)",
                 )
                 .opt("protection", Some("memory"), "none|register|memory|scrub:K")
                 .opt("requests", Some("500"), "measured requests")
@@ -119,7 +130,12 @@ fn app() -> App {
                     Some("1e-4"),
                     "per-word NaN-upset probability per request over resident weights",
                 )
-                .opt("policy", Some("zero"), "repair value: zero|one|neighbor|<float>")
+                .opt(
+                    "policy",
+                    Some("zero"),
+                    "repair value: zero|one|neighbor[:FALLBACK]|const:V|<float> \
+                     (division-bearing kinds need a division-safe policy)",
+                )
                 .opt("queue-depth", Some("32"), "bounded request-queue capacity")
                 .opt(
                     "arrival",
@@ -141,12 +157,22 @@ fn app() -> App {
             CmdSpec::new("capacity", "find the SLO knee (max sustainable RPS) per configuration")
                 .opt("workloads", Some("matmul:64"), "comma-separated resident workload specs")
                 .opt(
+                    "mix",
+                    None,
+                    "weighted request mix as one matrix cell, overrides --workloads: \
+                     name[:size[:extra]]:weight,…",
+                )
+                .opt(
                     "protections",
                     Some("memory"),
                     "comma-separated protections: none|register|memory|scrub:K",
                 )
                 .opt("fault-rates", Some("1e-4"), "comma-separated per-word fault rates")
-                .opt("policy", Some("zero"), "repair value: zero|one|neighbor|<float>")
+                .opt(
+                    "policy",
+                    Some("zero"),
+                    "repair value: zero|one|neighbor[:FALLBACK]|const:V|<float>",
+                )
                 .opt("requests", Some("200"), "requests per probe (warmup included)")
                 .opt("warmup", Some("20"), "leading requests excluded from probe quantiles")
                 .opt(
@@ -495,8 +521,14 @@ fn main() -> Result<()> {
                 Some(ms) => Some(ms / 1e3),
                 None => slo_p99,
             };
+            // --mix overrides --workload; a bare --workload is the
+            // single-kind mix it always was.
+            let mix = match m.get("mix") {
+                Some(spec) => server::RequestMix::parse(spec)?,
+                None => server::RequestMix::single(WorkloadKind::parse(m.get_str("workload")?)?),
+            };
             let cfg = server::ServeConfig {
-                workload: WorkloadKind::parse(m.get_str("workload")?)?,
+                mix,
                 protection: Protection::parse(m.get_str("protection")?)?,
                 policy: RepairPolicy::parse(m.get_str("policy")?)?,
                 requests: m.get_parse("requests")?,
@@ -521,8 +553,18 @@ fn main() -> Result<()> {
             }
         }
         "capacity" => {
+            // --mix plans one mixed cell; --workloads is the classic list
+            // of single-kind cells.
+            let mixes = match m.get("mix") {
+                Some(spec) => vec![server::RequestMix::parse(spec)?],
+                None => m
+                    .get_list::<WorkloadKind>("workloads")?
+                    .into_iter()
+                    .map(server::RequestMix::single)
+                    .collect(),
+            };
             let cfg = capacity::CapacityConfig {
-                workloads: m.get_list("workloads")?,
+                mixes,
                 protections: m.get_list("protections")?,
                 fault_rates: m.get_list("fault-rates")?,
                 policy: RepairPolicy::parse(m.get_str("policy")?)?,

@@ -6,4 +6,4 @@ pub mod memory;
 pub mod policy;
 pub mod register;
 
-pub use policy::RepairPolicy;
+pub use policy::{RepairPolicy, SafetyClass, NEIGHBOR_MEAN};

@@ -1,15 +1,43 @@
-//! Repair-value policies (paper §5.2).
+//! Repair-value policies (paper §5.2) and their **safety classes**.
 //!
 //! The paper fixes NaNs to a constant and defers the choice: LetGo-style 0
 //! "makes many HPC applications converge" but breaks divisions (the LU
 //! pivot hazard); Li et al. suggest workload-dependent values.  We
 //! implement the discussed space so the policy ablation (EXT-POLICY) can
-//! quantify it.  Everything here is async-signal-safe: no allocation, no
-//! locking — `NeighborMean` reads adjacent elements directly through the
-//! armed region snapshot.
+//! quantify it, and expose each policy's [`SafetyClass`] so the serving
+//! stack can check the (workload, policy) servability contract
+//! (DESIGN.md §4.2): a workload whose hot loop divides by data words is
+//! only servable under a policy that can never resolve to 0.0.
+//!
+//! Everything here is async-signal-safe: no allocation, no locking —
+//! `NeighborMean` reads adjacent elements directly through the armed
+//! region snapshot.
 
 use crate::approxmem::pool::Region;
 use crate::fp::nan::classify_f64;
+
+/// What the serving contract needs to know about a repair policy: the
+/// guarantees [`RepairPolicy::resolve`] makes about the values it emits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SafetyClass {
+    /// `resolve` can never return exactly `0.0` (or a non-finite value):
+    /// positional policies clamp a zero mean to the fallback, and the
+    /// fallback itself is non-zero.  Required to serve workloads that
+    /// divide by data words (the paper's §5.2 LU-pivot hazard).
+    pub nonzero: bool,
+    /// The value positional policies degrade to when no address or no
+    /// usable neighbour exists — also the value scrub sweeps and shed
+    /// patch-backs write (the non-positional repair paths).
+    pub fallback: f64,
+}
+
+impl SafetyClass {
+    /// Can a workload that divides by repaired data safely run under this
+    /// policy?  True exactly when [`SafetyClass::nonzero`] holds.
+    pub fn division_safe(&self) -> bool {
+        self.nonzero
+    }
+}
 
 /// How to choose the value a NaN is repaired to.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -18,15 +46,61 @@ pub enum RepairPolicy {
     Zero,
     /// 1.0 — division-safe multiplicative identity.
     One,
-    /// A fixed constant.
+    /// A fixed (finite — enforced by [`RepairPolicy::parse`]) constant.
     Constant(f64),
     /// Mean of the non-NaN immediate neighbours (addr ± 8 bytes) within the
-    /// same approximate region; falls back to 0.0 when no neighbour exists.
+    /// same approximate region; degrades to `fallback` when no neighbour
+    /// exists (no address, address outside the armed regions, or both
+    /// neighbours unusable) and when the mean is exactly 0.0 — so a
+    /// non-zero fallback makes the whole policy division-safe.
     /// Exploits value locality of numerical grids/matrices.
-    NeighborMean,
+    NeighborMean {
+        /// Positional-fallback value (0.0 reproduces the historical
+        /// behaviour; parse spec `neighbor:VALUE` sets it).
+        fallback: f64,
+    },
 }
 
+/// The default positional policy: neighbour mean with the historical 0.0
+/// fallback (not division-safe — pass a non-zero fallback for serving
+/// division-bearing workloads).
+pub const NEIGHBOR_MEAN: RepairPolicy = RepairPolicy::NeighborMean { fallback: 0.0 };
+
 impl RepairPolicy {
+    /// The guarantees this policy makes about resolved values — the
+    /// policy half of the (workload, policy) servability contract.
+    pub fn safety_class(&self) -> SafetyClass {
+        match *self {
+            RepairPolicy::Zero => SafetyClass {
+                nonzero: false,
+                fallback: 0.0,
+            },
+            RepairPolicy::One => SafetyClass {
+                nonzero: true,
+                fallback: 1.0,
+            },
+            RepairPolicy::Constant(c) => SafetyClass {
+                nonzero: c != 0.0 && c.is_finite(),
+                fallback: c,
+            },
+            RepairPolicy::NeighborMean { fallback } => SafetyClass {
+                nonzero: fallback != 0.0 && fallback.is_finite(),
+                fallback,
+            },
+        }
+    }
+
+    /// Shorthand for [`SafetyClass::division_safe`].
+    pub fn division_safe(&self) -> bool {
+        self.safety_class().division_safe()
+    }
+
+    /// The non-positional repair value: what scrub sweeps and shed
+    /// patch-backs write, and what positional policies degrade to.
+    pub fn fallback_value(&self) -> f64 {
+        self.safety_class().fallback
+    }
+
     /// Resolve the replacement value for a NaN.
     ///
     /// `addr` is the main-memory location of the NaN when known (memory
@@ -40,10 +114,10 @@ impl RepairPolicy {
             RepairPolicy::Zero => 0.0,
             RepairPolicy::One => 1.0,
             RepairPolicy::Constant(c) => c,
-            RepairPolicy::NeighborMean => {
-                let Some(addr) = addr else { return 0.0 };
+            RepairPolicy::NeighborMean { fallback } => {
+                let Some(addr) = addr else { return fallback };
                 let Some(region) = regions.iter().find(|r| r.contains(addr as usize)) else {
-                    return 0.0;
+                    return fallback;
                 };
                 let mut sum = 0.0;
                 let mut n = 0u32;
@@ -61,34 +135,75 @@ impl RepairPolicy {
                         }
                     }
                 }
-                if n == 0 {
-                    0.0
+                let mean = if n == 0 { fallback } else { sum / n as f64 };
+                // A zero mean would silently void a division-safe
+                // contract — clamp to the fallback (a no-op when the
+                // fallback itself is 0.0).
+                if mean == 0.0 {
+                    fallback
                 } else {
-                    sum / n as f64
+                    mean
                 }
             }
         }
     }
 
-    /// Parse from a CLI string: `zero`, `one`, `neighbor`, or a float.
+    /// Parse from a CLI string: `zero`, `one`, `neighbor[:FALLBACK]`,
+    /// `const:VALUE`, or a bare float.  Constants and fallbacks must be
+    /// finite — repairing a NaN to NaN (or Inf) would defeat the whole
+    /// mechanism, so `nan`/`inf` specs are rejected.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let finite = |v: f64, what: &str| -> anyhow::Result<f64> {
+            anyhow::ensure!(
+                v.is_finite(),
+                "repair {what} must be finite (repairing a NaN to {v} would \
+                 reintroduce the corruption the repair exists to remove)"
+            );
+            Ok(v)
+        };
+        if let Some(rest) = s.strip_prefix("const:") {
+            let v: f64 = rest
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad const repair value {rest:?}"))?;
+            return Ok(RepairPolicy::Constant(finite(v, "constant")?));
+        }
+        for prefix in ["neighbor:", "neighbor-mean:"] {
+            if let Some(rest) = s.strip_prefix(prefix) {
+                let v: f64 = rest
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad neighbor fallback value {rest:?}"))?;
+                return Ok(RepairPolicy::NeighborMean {
+                    fallback: finite(v, "fallback")?,
+                });
+            }
+        }
         match s {
             "zero" => Ok(RepairPolicy::Zero),
             "one" => Ok(RepairPolicy::One),
-            "neighbor" | "neighbor-mean" => Ok(RepairPolicy::NeighborMean),
-            other => other
-                .parse::<f64>()
-                .map(RepairPolicy::Constant)
-                .map_err(|_| anyhow::anyhow!("unknown repair policy {other:?}")),
+            "neighbor" | "neighbor-mean" => Ok(NEIGHBOR_MEAN),
+            other => match other.parse::<f64>() {
+                Ok(v) => Ok(RepairPolicy::Constant(finite(v, "constant")?)),
+                Err(_) => anyhow::bail!(
+                    "unknown repair policy {other:?} (zero | one | neighbor[:FALLBACK] | \
+                     const:VALUE | <float>)"
+                ),
+            },
         }
     }
+}
 
-    pub fn name(&self) -> String {
-        match self {
-            RepairPolicy::Zero => "zero".into(),
-            RepairPolicy::One => "one".into(),
-            RepairPolicy::Constant(c) => format!("const({c})"),
-            RepairPolicy::NeighborMean => "neighbor-mean".into(),
+/// Renders the same spec [`RepairPolicy::parse`] accepts, so labels and
+/// parsing cannot drift apart (round-trip asserted in tests).
+impl std::fmt::Display for RepairPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            RepairPolicy::Zero => write!(f, "zero"),
+            RepairPolicy::One => write!(f, "one"),
+            RepairPolicy::Constant(c) => write!(f, "const:{c}"),
+            RepairPolicy::NeighborMean { fallback } if fallback == 0.0 => {
+                write!(f, "neighbor")
+            }
+            RepairPolicy::NeighborMean { fallback } => write!(f, "neighbor:{fallback}"),
         }
     }
 }
@@ -121,7 +236,7 @@ mod tests {
         buf[2] = 4.0;
         let regions = pool.regions();
         let addr = buf.addr() as u64 + 8;
-        let v = RepairPolicy::NeighborMean.resolve(Some(addr), &regions);
+        let v = NEIGHBOR_MEAN.resolve(Some(addr), &regions);
         assert_eq!(v, 3.0);
     }
 
@@ -133,7 +248,7 @@ mod tests {
         buf[1] = f64::from_bits(PAPER_NAN_BITS);
         buf[2] = 10.0;
         let regions = pool.regions();
-        let v = RepairPolicy::NeighborMean.resolve(Some(buf.addr() as u64 + 8), &regions);
+        let v = NEIGHBOR_MEAN.resolve(Some(buf.addr() as u64 + 8), &regions);
         assert_eq!(v, 10.0);
     }
 
@@ -145,13 +260,34 @@ mod tests {
         buf[1] = 6.0;
         let regions = pool.regions();
         // first element: only right neighbour
-        let v = RepairPolicy::NeighborMean.resolve(Some(buf.addr() as u64), &regions);
+        let v = NEIGHBOR_MEAN.resolve(Some(buf.addr() as u64), &regions);
         assert_eq!(v, 6.0);
         // address outside any region → fallback
-        let v = RepairPolicy::NeighborMean.resolve(Some(0x10), &regions);
+        let v = NEIGHBOR_MEAN.resolve(Some(0x10), &regions);
         assert_eq!(v, 0.0);
         // no address → fallback
-        assert_eq!(RepairPolicy::NeighborMean.resolve(None, &regions), 0.0);
+        assert_eq!(NEIGHBOR_MEAN.resolve(None, &regions), 0.0);
+        // a parameterized fallback flows through every degraded path
+        let nb1 = RepairPolicy::NeighborMean { fallback: 1.5 };
+        assert_eq!(nb1.resolve(Some(0x10), &regions), 1.5);
+        assert_eq!(nb1.resolve(None, &regions), 1.5);
+    }
+
+    #[test]
+    fn neighbor_mean_zero_mean_clamps_to_fallback() {
+        // Neighbours that sum to exactly zero would resolve to 0.0 and
+        // void a division-safe contract — the mean clamps to the fallback.
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f64(3);
+        buf[0] = -4.0;
+        buf[1] = f64::from_bits(PAPER_NAN_BITS);
+        buf[2] = 4.0;
+        let regions = pool.regions();
+        let addr = buf.addr() as u64 + 8;
+        let nb1 = RepairPolicy::NeighborMean { fallback: 1.0 };
+        assert_eq!(nb1.resolve(Some(addr), &regions), 1.0);
+        // zero fallback keeps the historical 0.0
+        assert_eq!(NEIGHBOR_MEAN.resolve(Some(addr), &regions), 0.0);
     }
 
     #[test]
@@ -161,22 +297,94 @@ mod tests {
         buf[0] = f64::INFINITY;
         buf[1] = f64::from_bits(PAPER_NAN_BITS);
         buf[2] = 8.0;
-        let v = RepairPolicy::NeighborMean.resolve(Some(buf.addr() as u64 + 8), &pool.regions());
+        let v = NEIGHBOR_MEAN.resolve(Some(buf.addr() as u64 + 8), &pool.regions());
         assert_eq!(v, 8.0);
     }
 
     #[test]
-    fn parse_roundtrip() {
+    fn safety_classes() {
+        assert!(!RepairPolicy::Zero.division_safe());
+        assert!(RepairPolicy::One.division_safe());
+        assert!(RepairPolicy::Constant(0.5).division_safe());
+        assert!(!RepairPolicy::Constant(0.0).division_safe());
+        // programmatically constructed non-finite constants never claim
+        // division safety
+        assert!(!RepairPolicy::Constant(f64::NAN).division_safe());
+        assert!(!RepairPolicy::Constant(f64::INFINITY).division_safe());
+        assert!(!NEIGHBOR_MEAN.division_safe());
+        assert!(RepairPolicy::NeighborMean { fallback: 1.0 }.division_safe());
+
+        assert_eq!(RepairPolicy::Zero.fallback_value(), 0.0);
+        assert_eq!(RepairPolicy::One.fallback_value(), 1.0);
+        assert_eq!(RepairPolicy::Constant(2.5).fallback_value(), 2.5);
+        assert_eq!(
+            RepairPolicy::NeighborMean { fallback: 3.0 }.fallback_value(),
+            3.0
+        );
+    }
+
+    #[test]
+    fn parse_accepts_the_documented_specs() {
         assert_eq!(RepairPolicy::parse("zero").unwrap(), RepairPolicy::Zero);
         assert_eq!(RepairPolicy::parse("one").unwrap(), RepairPolicy::One);
+        assert_eq!(RepairPolicy::parse("neighbor").unwrap(), NEIGHBOR_MEAN);
+        assert_eq!(RepairPolicy::parse("neighbor-mean").unwrap(), NEIGHBOR_MEAN);
         assert_eq!(
-            RepairPolicy::parse("neighbor").unwrap(),
-            RepairPolicy::NeighborMean
+            RepairPolicy::parse("neighbor:1.5").unwrap(),
+            RepairPolicy::NeighborMean { fallback: 1.5 }
+        );
+        assert_eq!(
+            RepairPolicy::parse("neighbor-mean:2").unwrap(),
+            RepairPolicy::NeighborMean { fallback: 2.0 }
+        );
+        assert_eq!(
+            RepairPolicy::parse("const:3.25").unwrap(),
+            RepairPolicy::Constant(3.25)
         );
         assert_eq!(
             RepairPolicy::parse("3.25").unwrap(),
             RepairPolicy::Constant(3.25)
         );
+        assert_eq!(
+            RepairPolicy::parse("-0.5").unwrap(),
+            RepairPolicy::Constant(-0.5)
+        );
         assert!(RepairPolicy::parse("bogus").is_err());
+        assert!(RepairPolicy::parse("const:").is_err());
+        assert!(RepairPolicy::parse("neighbor:x").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_non_finite_repair_values() {
+        // "nan" and "inf" parse as f64 — accepting them as constants
+        // would repair a NaN to NaN, defeating the whole mechanism.
+        for bad in [
+            "nan", "NaN", "inf", "-inf", "infinity", "const:nan", "const:inf",
+            "neighbor:nan", "neighbor:-inf",
+        ] {
+            assert!(
+                RepairPolicy::parse(bad).is_err(),
+                "{bad:?} must not parse to a repair policy"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_display_round_trips() {
+        for policy in [
+            RepairPolicy::Zero,
+            RepairPolicy::One,
+            RepairPolicy::Constant(3.25),
+            RepairPolicy::Constant(-2.0),
+            NEIGHBOR_MEAN,
+            RepairPolicy::NeighborMean { fallback: 1.5 },
+        ] {
+            let spec = policy.to_string();
+            let back = RepairPolicy::parse(&spec)
+                .unwrap_or_else(|e| panic!("{spec:?} failed to re-parse: {e}"));
+            assert_eq!(back, policy, "round trip through {spec:?}");
+        }
+        assert_eq!(RepairPolicy::Constant(3.25).to_string(), "const:3.25");
+        assert_eq!(NEIGHBOR_MEAN.to_string(), "neighbor");
     }
 }

@@ -269,7 +269,8 @@ pub(super) fn arm_domain(
         RepairPolicy::Zero => (0, 0.0),
         RepairPolicy::One => (1, 0.0),
         RepairPolicy::Constant(c) => (2, c),
-        RepairPolicy::NeighborMean => (3, 0.0),
+        // the positional fallback rides in the const slot
+        RepairPolicy::NeighborMean { fallback } => (3, fallback),
     };
     d.policy_kind.store(kind, Ordering::Relaxed);
     d.policy_const.store(cval.to_bits(), Ordering::Relaxed);
@@ -340,7 +341,9 @@ fn armed_policy(d: &TrapDomain) -> RepairPolicy {
         0 => RepairPolicy::Zero,
         1 => RepairPolicy::One,
         2 => RepairPolicy::Constant(f64::from_bits(d.policy_const.load(Ordering::Relaxed))),
-        _ => RepairPolicy::NeighborMean,
+        _ => RepairPolicy::NeighborMean {
+            fallback: f64::from_bits(d.policy_const.load(Ordering::Relaxed)),
+        },
     }
 }
 

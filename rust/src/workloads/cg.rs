@@ -159,6 +159,15 @@ impl Workload for Cg {
         }
     }
 
+    fn input_bits(&self, flat_idx: usize) -> u64 {
+        let nn = self.n * self.n;
+        if flat_idx < nn {
+            self.a[flat_idx].to_bits()
+        } else {
+            self.b[(flat_idx - nn) % self.n].to_bits()
+        }
+    }
+
     fn output(&self) -> Vec<f64> {
         self.x.as_slice().to_vec()
     }

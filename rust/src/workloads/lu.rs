@@ -143,6 +143,10 @@ impl Workload for Lu {
         self.a.addr() + i * 8
     }
 
+    fn input_bits(&self, flat_idx: usize) -> u64 {
+        self.a[flat_idx % (self.n * self.n)].to_bits()
+    }
+
     fn output(&self) -> Vec<f64> {
         self.a.as_slice().to_vec()
     }

@@ -126,6 +126,12 @@ impl Workload for MatMul {
         buf.addr() + i * 8
     }
 
+    fn input_bits(&self, flat_idx: usize) -> u64 {
+        let nn = self.n * self.n;
+        let buf = if flat_idx < nn { &self.a } else { &self.bt };
+        buf[flat_idx % nn].to_bits()
+    }
+
     fn output(&self) -> Vec<f64> {
         self.c.as_slice().to_vec()
     }

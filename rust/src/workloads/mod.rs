@@ -16,6 +16,27 @@ pub mod matvec;
 pub mod stencil;
 
 use crate::approxmem::pool::ApproxPool;
+use crate::repair::policy::RepairPolicy;
+
+/// What a workload's hot loop does that the serving stack must account
+/// for — the workload half of the (workload, policy) servability contract
+/// (DESIGN.md §4.2).  Each hazard must be discharged by the repair
+/// policy's [`crate::repair::policy::SafetyClass`] or by the serving
+/// engine itself (copy-on-serve restore for input mutation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hazards {
+    /// The kernel divides by values read from the (fault-exposed) input
+    /// buffers: a NaN there repaired to 0.0 turns into a zero divisor and
+    /// sends Inf into the output — the paper's §5.2 LU-pivot hazard.
+    /// Discharged by a division-safe repair policy.
+    pub divides_by_data: bool,
+    /// `run()` mutates the workload's *input* buffers in place (LU
+    /// factors its matrix, the stencil evolves its grid), so each run
+    /// computes over different data than the one before.  Discharged by
+    /// the resident set's pristine snapshot + copy-on-serve restore
+    /// ([`crate::coordinator::session::ResidentSet`]).
+    pub mutates_inputs: bool,
+}
 
 /// Which workload to run (CLI/config-level description).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -70,24 +91,56 @@ impl WorkloadKind {
         }
     }
 
-    /// Does `run()` mutate the workload's *input* buffers in place (LU
-    /// factors its matrix, the stencil evolves its grid)?  Such kinds
-    /// cannot act as resident serving weights — each run would serve a
-    /// different computation than the one before — so the serving engine
-    /// ([`crate::coordinator::server`]) rejects them.
-    pub fn mutates_inputs(&self) -> bool {
-        matches!(self, WorkloadKind::Lu { .. } | WorkloadKind::Stencil { .. })
+    /// The serving hazards this kind carries (see [`Hazards`]): jacobi
+    /// and cg divide by diagonal entries of their fault-exposed matrix,
+    /// LU divides by pivots *and* factors its matrix in place, the
+    /// stencil evolves its grid in place, and matmul/matvec do neither.
+    pub fn hazards(&self) -> Hazards {
+        match self {
+            WorkloadKind::MatMul { .. } | WorkloadKind::MatVec { .. } => Hazards {
+                divides_by_data: false,
+                mutates_inputs: false,
+            },
+            WorkloadKind::Jacobi { .. } | WorkloadKind::Cg { .. } => Hazards {
+                divides_by_data: true,
+                mutates_inputs: false,
+            },
+            WorkloadKind::Lu { .. } => Hazards {
+                divides_by_data: true,
+                mutates_inputs: true,
+            },
+            WorkloadKind::Stencil { .. } => Hazards {
+                divides_by_data: false,
+                mutates_inputs: true,
+            },
+        }
     }
 
-    /// Can this kind act as resident serving weights?  Requires inputs
-    /// the kernel never mutates ([`Self::mutates_inputs`]) *and*
-    /// division-free compute: jacobi/cg divide by diagonal entries, so a
-    /// NaN there repaired to the zero policy's 0.0 (the paper's
-    /// policy-ablation hazard) would send Inf into responses and make
-    /// trap ledgers value-dependent — voiding the serving invariants
-    /// (NaN-free responses, worker-count-invariant repairs).
-    pub fn servable(&self) -> bool {
-        matches!(self, WorkloadKind::MatMul { .. } | WorkloadKind::MatVec { .. })
+    /// Shorthand for [`Hazards::mutates_inputs`] — the kinds whose
+    /// residents need a pristine snapshot and copy-on-serve restore.
+    pub fn mutates_inputs(&self) -> bool {
+        self.hazards().mutates_inputs
+    }
+
+    /// The (workload, policy) servability contract: every hazard this
+    /// kind carries must be discharged.  Division-by-data needs a
+    /// division-safe repair value ([`RepairPolicy::division_safe`]);
+    /// input mutation is discharged by the resident set's copy-on-serve
+    /// restore, so it never rejects here.  The replaced static blacklist
+    /// (`matmul`/`matvec` only) treated servability as a property of the
+    /// workload alone — it is a property of the pair.
+    pub fn servable_with(&self, policy: RepairPolicy) -> anyhow::Result<()> {
+        let hazards = self.hazards();
+        if hazards.divides_by_data && !policy.division_safe() {
+            anyhow::bail!(
+                "{self} divides by data words the fault process can corrupt, and policy \
+                 \"{policy}\" can repair a NaN to 0.0 (the paper's §5.2 pivot/diagonal \
+                 hazard): a zero divisor sends Inf into responses. Serve {self} under a \
+                 division-safe policy instead: --policy one, --policy const:VALUE with a \
+                 non-zero VALUE, or --policy neighbor:FALLBACK with a non-zero FALLBACK"
+            );
+        }
+        Ok(())
     }
 
     /// Number of f64 *input* words the built workload exposes
@@ -250,6 +303,14 @@ pub trait Workload: Send {
     /// repair mechanism located it).
     fn poison_input(&mut self, flat_idx: usize, bits: u64) -> usize;
 
+    /// Read input element `flat_idx` (0..input_len) as raw bits — the
+    /// inverse of [`Workload::poison_input`]'s write (kept in lock-step by
+    /// the `input_bits_mirrors_poison_input` test).  The resident set
+    /// ([`crate::coordinator::session::ResidentSet`]) snapshots a
+    /// mutating workload's pristine inputs through this before its first
+    /// serve and restores them word-by-word afterwards (copy-on-serve).
+    fn input_bits(&self, flat_idx: usize) -> u64;
+
     /// Flat view of the output (for quality comparison).
     fn output(&self) -> Vec<f64>;
 
@@ -407,6 +468,93 @@ mod tests {
                 w.flops(),
                 "{kind}: kind-level flops out of lock-step with the built workload"
             );
+        }
+    }
+
+    #[test]
+    fn hazard_matrix_and_servability_contract() {
+        let kinds = [
+            WorkloadKind::MatMul { n: 8 },
+            WorkloadKind::MatVec { n: 8 },
+            WorkloadKind::Jacobi { n: 8, iters: 3 },
+            WorkloadKind::Cg { n: 8, iters: 3 },
+            WorkloadKind::Lu { n: 8 },
+            WorkloadKind::Stencil { n: 8, steps: 2 },
+        ];
+        for kind in kinds {
+            let h = kind.hazards();
+            assert_eq!(h.mutates_inputs, kind.mutates_inputs());
+            // division-safe policies serve every kind
+            assert!(kind.servable_with(RepairPolicy::One).is_ok(), "{kind}");
+            assert!(
+                kind.servable_with(RepairPolicy::Constant(0.5)).is_ok(),
+                "{kind}"
+            );
+            // zero-resolving policies serve exactly the division-free kinds
+            assert_eq!(
+                kind.servable_with(RepairPolicy::Zero).is_ok(),
+                !h.divides_by_data,
+                "{kind}"
+            );
+        }
+        // the matrix itself
+        assert!(!WorkloadKind::MatMul { n: 8 }.hazards().divides_by_data);
+        assert!(!WorkloadKind::MatMul { n: 8 }.hazards().mutates_inputs);
+        assert!(WorkloadKind::Jacobi { n: 8, iters: 3 }.hazards().divides_by_data);
+        assert!(WorkloadKind::Cg { n: 8, iters: 3 }.hazards().divides_by_data);
+        let lu = WorkloadKind::Lu { n: 8 }.hazards();
+        assert!(lu.divides_by_data && lu.mutates_inputs);
+        let st = WorkloadKind::Stencil { n: 8, steps: 2 }.hazards();
+        assert!(!st.divides_by_data && st.mutates_inputs);
+
+        // the rejection is actionable: it names the hazard and the fix
+        let err = WorkloadKind::Jacobi { n: 8, iters: 3 }
+            .servable_with(RepairPolicy::Zero)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("divides"), "{err}");
+        assert!(err.contains("--policy one"), "{err}");
+        // a zero constant and a zero-fallback neighbour mean are not safe
+        assert!(WorkloadKind::Cg { n: 8, iters: 3 }
+            .servable_with(RepairPolicy::Constant(0.0))
+            .is_err());
+        assert!(WorkloadKind::Cg { n: 8, iters: 3 }
+            .servable_with(crate::repair::policy::NEIGHBOR_MEAN)
+            .is_err());
+        assert!(WorkloadKind::Cg { n: 8, iters: 3 }
+            .servable_with(RepairPolicy::NeighborMean { fallback: 1.0 })
+            .is_ok());
+    }
+
+    #[test]
+    fn input_bits_mirrors_poison_input() {
+        let pool = ApproxPool::new();
+        for kind in [
+            WorkloadKind::MatMul { n: 9 },
+            WorkloadKind::MatVec { n: 9 },
+            WorkloadKind::Jacobi { n: 9, iters: 3 },
+            WorkloadKind::Cg { n: 9, iters: 3 },
+            WorkloadKind::Lu { n: 9 },
+            WorkloadKind::Stencil { n: 9, steps: 3 },
+        ] {
+            let mut w = kind.build(&pool, 5);
+            let len = w.input_len();
+            // every input word reads back finite on a clean build
+            for i in 0..len {
+                let v = f64::from_bits(w.input_bits(i));
+                assert!(v.is_finite(), "{kind}: input {i} reads {v}");
+            }
+            // poison_input's write is visible through input_bits at the
+            // same flat index (first, middle, last — covers every buffer)
+            for idx in [0, len / 3, len / 2, len - 1] {
+                let marker = 0x400921fb54442d18u64; // π
+                w.poison_input(idx, marker);
+                assert_eq!(
+                    w.input_bits(idx),
+                    marker,
+                    "{kind}: input_bits({idx}) out of lock-step with poison_input"
+                );
+            }
         }
     }
 

@@ -114,6 +114,10 @@ impl Workload for Stencil {
         self.grid.addr() + i * 8
     }
 
+    fn input_bits(&self, flat_idx: usize) -> u64 {
+        self.grid[flat_idx % (self.n * self.n)].to_bits()
+    }
+
     fn output(&self) -> Vec<f64> {
         self.grid.as_slice().to_vec()
     }

@@ -23,13 +23,14 @@ use std::collections::HashSet;
 use std::process::Command;
 
 use nanrepair::coordinator::protection::Protection;
-use nanrepair::coordinator::server::{serve, Arrival, ServeConfig};
+use nanrepair::coordinator::server::{serve, Arrival, RequestMix, ServeConfig};
+use nanrepair::repair::policy::RepairPolicy;
 use nanrepair::util::report::{Json, Record};
 use nanrepair::workloads::WorkloadKind;
 
 fn cfg(workers: usize) -> ServeConfig {
     ServeConfig {
-        workload: WorkloadKind::MatMul { n: 48 },
+        mix: RequestMix::single(WorkloadKind::MatMul { n: 48 }),
         protection: Protection::RegisterMemory,
         requests: 60,
         workers,
@@ -304,7 +305,7 @@ fn cli_serve_text_table() {
 #[test]
 fn serve_open_loop_arrivals() {
     let mut c = cfg(2);
-    c.workload = WorkloadKind::MatMul { n: 16 };
+    c.mix = RequestMix::single(WorkloadKind::MatMul { n: 16 });
     c.requests = 10;
     c.fault_rate = 1e-2;
     c.arrival = Arrival::Open { rps: 250.0 };
@@ -322,7 +323,7 @@ fn serve_open_loop_arrivals() {
 #[test]
 fn serve_poisson_arrivals() {
     let mut c = cfg(2);
-    c.workload = WorkloadKind::MatMul { n: 16 };
+    c.mix = RequestMix::single(WorkloadKind::MatMul { n: 16 });
     c.requests = 10;
     c.fault_rate = 1e-2;
     c.arrival = Arrival::Poisson { rps: 500.0 };
@@ -340,7 +341,7 @@ fn serve_poisson_arrivals() {
 
 fn shed_cfg(workers: usize) -> ServeConfig {
     ServeConfig {
-        workload: WorkloadKind::MatMul { n: 48 },
+        mix: RequestMix::single(WorkloadKind::MatMul { n: 48 }),
         protection: Protection::RegisterMemory,
         requests: 40,
         workers,
@@ -398,4 +399,239 @@ fn serve_shed_drain_ledger_is_worker_count_invariant() {
     }
     assert_eq!(serial.dose_total(), parallel.dose_total());
     assert_eq!(serial.nans_planted_total(), parallel.nans_planted_total());
+}
+
+/// Acceptance (servability contract): division-bearing solvers serve
+/// under a division-safe policy — finite, NaN-free responses with
+/// `repairs > 0` under deterministic injection — and are refused with an
+/// actionable error under a zero-resolving policy.
+#[test]
+fn serve_division_bearing_kinds_under_division_safe_policy() {
+    for kind in [
+        WorkloadKind::Jacobi { n: 24, iters: 20 },
+        WorkloadKind::Cg { n: 24, iters: 10 },
+    ] {
+        let cfg = ServeConfig {
+            mix: RequestMix::single(kind),
+            policy: RepairPolicy::One,
+            requests: 20,
+            workers: 2,
+            queue_depth: 4,
+            // E[dose] ≈ 600 words × 5e-3 ≈ 3 NaNs per request
+            fault_rate: 5e-3,
+            seed: 3,
+            ..Default::default()
+        };
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.results.len(), 20, "{kind}");
+        assert_eq!(rep.output_nans_total(), 0, "{kind}: responses must be finite");
+        assert!(rep.dose_total() > 0, "{kind}: fault process landed");
+        assert!(rep.repairs_total() > 0, "{kind}: NaNs repaired reactively");
+        assert!(rep.sigfpe_total() > 0, "{kind}");
+
+        // the same configuration under the zero policy is a contract
+        // violation, named as such
+        let zero = ServeConfig {
+            policy: RepairPolicy::Zero,
+            ..cfg
+        };
+        let err = serve(&zero).unwrap_err().to_string();
+        assert!(
+            err.contains("division-safe") && err.contains("--policy one"),
+            "{kind}: actionable contract error, got: {err}"
+        );
+    }
+}
+
+fn mix_cfg(workers: usize) -> ServeConfig {
+    ServeConfig {
+        mix: RequestMix::parse("matmul:24:0.4,jacobi:24:10:0.3,cg:24:8:0.3").unwrap(),
+        policy: RepairPolicy::One,
+        protection: Protection::RegisterMemory,
+        requests: 48,
+        workers,
+        queue_depth: 8,
+        fault_rate: 5e-3,
+        seed: 17,
+        arrival: Arrival::Closed,
+        ..Default::default()
+    }
+}
+
+/// Acceptance (mixes): a 3-kind weighted stream serves NaN-free, every
+/// request's (kind, dose, planted) stamp is a pure function of the seed
+/// and index, and the **per-kind repair ledgers** are identical serial
+/// vs 4 workers (trap counters compared modulo the rdtsc cycle tally).
+#[test]
+fn mixed_stream_per_kind_ledger_worker_count_invariant() {
+    let serial = serve(&mix_cfg(1)).unwrap();
+    let parallel = serve(&mix_cfg(4)).unwrap();
+    assert_eq!(serial.results.len(), 48);
+    for rep in [&serial, &parallel] {
+        assert_eq!(rep.output_nans_total(), 0);
+        assert!(rep.repairs_total() > 0);
+    }
+    for (s, p) in serial.results.iter().zip(&parallel.results) {
+        assert_eq!(s.index, p.index);
+        assert_eq!(s.kind, p.kind, "request {}: stamped kind differs", s.index);
+        assert_eq!(s.dose, p.dose, "request {}: dose differs", s.index);
+        assert_eq!(s.nans_planted(), p.nans_planted());
+        let (mut st, mut pt) = (s.traps(), p.traps());
+        st.trap_cycles_total = 0;
+        pt.trap_cycles_total = 0;
+        assert_eq!(st, pt, "request {}: per-request trap counters", s.index);
+    }
+    let (ks, kp) = (serial.kind_summaries(), parallel.kind_summaries());
+    assert_eq!(ks.len(), 3);
+    for (a, b) in ks.iter().zip(&kp) {
+        assert_eq!(a.kind, b.kind);
+        assert_eq!(a.requests, b.requests, "{}: request split", a.kind);
+        assert_eq!(a.dose_total, b.dose_total, "{}: per-kind dose", a.kind);
+        assert_eq!(a.nans_planted, b.nans_planted, "{}: per-kind plants", a.kind);
+        assert_eq!(a.sigfpe_total, b.sigfpe_total, "{}: per-kind traps", a.kind);
+        assert_eq!(
+            a.repairs_total, b.repairs_total,
+            "{}: per-kind repair ledger must be worker-count invariant",
+            a.kind
+        );
+        assert!(a.requests > 0, "{}: 48 requests reach every kind", a.kind);
+    }
+}
+
+/// Acceptance (CLI mixes): `nanrepair serve --mix … --policy one --json`
+/// succeeds and emits per-kind `serve_kind_latency`/`serve_kind_slo`
+/// breakdowns between the per-request records and the overall summary.
+#[test]
+fn cli_serve_mix_emits_per_kind_breakdowns() {
+    let (stdout, stderr, ok) = run_cli(&[
+        "serve",
+        "--mix",
+        "matmul:16:0.5,jacobi:16:5:0.3,cg:16:5:0.2",
+        "--policy",
+        "one",
+        "--requests",
+        "24",
+        "--fault-rate",
+        "1e-2",
+        "--queue-depth",
+        "4",
+        "--seed",
+        "5",
+        "--workers",
+        "2",
+        "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let records: Vec<Record> = stdout
+        .lines()
+        .filter(|l| !l.is_empty())
+        .map(|l| Record::from_json(&Json::parse(l).unwrap_or_else(|e| panic!("{e}: {l}"))).unwrap())
+        .collect();
+    assert_eq!(records.len(), 24 + 3 + 3 + 2, "{stdout}");
+    assert!(records[..24].iter().all(|r| r.kind() == "serve_request"));
+    assert!(records[24..27].iter().all(|r| r.kind() == "serve_kind_latency"));
+    let kind_slos = &records[27..30];
+    assert!(kind_slos.iter().all(|r| r.kind() == "serve_kind_slo"));
+    let kinds: Vec<String> = kind_slos
+        .iter()
+        .map(|r| r.get("kind").and_then(Json::as_str).unwrap().to_string())
+        .collect();
+    assert_eq!(kinds, ["matmul:16", "jacobi:16:5", "cg:16:5"], "{stdout}");
+    for r in kind_slos {
+        assert_eq!(
+            r.get("output_nans").and_then(Json::as_f64),
+            Some(0.0),
+            "every kind's responses NaN-free: {r:?}"
+        );
+    }
+    assert_eq!(records[30].kind(), "serve_latency");
+    assert_eq!(records[31].kind(), "serve_slo");
+    // every serve_request carries its stamped kind
+    for r in &records[..24] {
+        let kind = r.get("kind").and_then(Json::as_str).unwrap();
+        assert!(kinds.iter().any(|k| k == kind), "{kind} not in mix");
+    }
+}
+
+/// The servability contract at the CLI boundary: jacobi under the
+/// default zero policy is refused with an error that names the hazard
+/// and the fix; the same command under `--policy one` serves.
+#[test]
+fn cli_serve_contract_rejection_is_actionable() {
+    let (_, stderr, ok) = run_cli(&[
+        "serve", "--workload", "jacobi:16:5", "--requests", "4", "--workers", "1",
+    ]);
+    assert!(!ok, "zero policy + jacobi must be refused");
+    assert!(
+        stderr.contains("division-safe") && stderr.contains("--policy one"),
+        "actionable contract error on stderr: {stderr}"
+    );
+    let (_, stderr, ok) = run_cli(&[
+        "serve", "--workload", "jacobi:16:5", "--policy", "one", "--requests", "4",
+        "--workers", "1",
+    ]);
+    assert!(ok, "division-safe policy unlocks jacobi serving: {stderr}");
+}
+
+/// Acceptance (capacity on mixes): `nanrepair capacity --mix … --policy
+/// one` model probes are byte-identical at `--workers 1` vs `4`, and the
+/// knee probe's per-kind `capacity_kind` ledger rows ride between the
+/// points and the knee record.
+#[test]
+fn cli_capacity_mix_deterministic_with_per_kind_ledger() {
+    let args = |workers: &str| {
+        vec![
+            "capacity",
+            "--mix",
+            "matmul:16:0.5,jacobi:16:5:0.3,cg:16:5:0.2",
+            "--policy",
+            "one",
+            "--protections",
+            "memory",
+            "--fault-rates",
+            "1e-3",
+            "--requests",
+            "60",
+            "--warmup",
+            "10",
+            "--serve-workers",
+            "2",
+            "--queue-depth",
+            "8",
+            "--slo-p99",
+            "0.2",
+            "--slo-shed",
+            "0.05",
+            "--min-rps",
+            "100",
+            "--seed",
+            "3",
+            "--workers",
+            workers,
+            "--json",
+        ]
+    };
+    let (serial, err1, ok1) = run_cli(&args("1"));
+    let (parallel, err2, ok2) = run_cli(&args("4"));
+    assert!(ok1, "stderr: {err1}");
+    assert!(ok2, "stderr: {err2}");
+    assert_eq!(serial, parallel, "matrix worker count changed the bytes");
+
+    let records: Vec<Record> = serial
+        .lines()
+        .filter(|l| !l.is_empty())
+        .map(|l| Record::from_json(&Json::parse(l).unwrap_or_else(|e| panic!("{e}: {l}"))).unwrap())
+        .collect();
+    let knee = records.last().unwrap();
+    assert_eq!(knee.kind(), "capacity_knee");
+    assert!(knee.get("knee_rps").and_then(Json::as_f64).unwrap() > 0.0, "{serial}");
+    let kind_rows: Vec<&Record> = records
+        .iter()
+        .filter(|r| r.kind() == "capacity_kind")
+        .collect();
+    assert_eq!(kind_rows.len(), 3, "one ledger row per mix kind: {serial}");
+    let knee_rps = knee.get("knee_rps").and_then(Json::as_f64).unwrap();
+    for r in &kind_rows {
+        assert_eq!(r.get("rps").and_then(Json::as_f64), Some(knee_rps));
+    }
 }
