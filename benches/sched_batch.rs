@@ -26,6 +26,14 @@
 //! `restore_secs_total > 0`, so the column really measures the restore
 //! path).
 //!
+//! Batched-dispatch variants are the headline of the park/unpark serve
+//! core: `serve_batch` floods 8 workers through a 1024-deep lane queue at
+//! batch 1/8/32 (batch 1 is the old per-request path; the printed
+//! headline is the batch-8 vs batch-1 throughput ratio — the amortized
+//! trap-arm + handoff win), and `serve_p999` runs a Poisson open-loop
+//! stream through batch-8 windows and prints the p999 tail so batching
+//! regressions that trade tail latency for throughput cannot hide.
+//!
 //! `cargo bench --bench sched_batch` (env NANREPAIR_BENCH_QUICK=1 for CI,
 //! NANREPAIR_SCHED_CELLS=N to override the batch size,
 //! NANREPAIR_BENCH_JSON=FILE to write the records as a JSON baseline).
@@ -147,6 +155,48 @@ fn serve_mix_sweep(r: &mut Runner, requests: usize, n: usize) -> Vec<(usize, f64
     throughput
 }
 
+/// Bench the batched dispatch core: a closed-loop flood at 1024 offered
+/// concurrency across 8 workers, swept over the window-size knob;
+/// returns (batch, req/s).  Batch 1 reproduces the unbatched per-request
+/// path, so the batch-8 / batch-1 ratio is the amortization headline.
+fn serve_batch_sweep(r: &mut Runner, requests: usize, n: usize) -> Vec<(usize, f64)> {
+    let mut throughput = Vec::new();
+    for batch in [1usize, 8, 32] {
+        let res = r.bench(
+            &format!("serve_batch{requests}x{n}/batch{batch}"),
+            Bench::new(move || {
+                let rep = server::serve(&ServeConfig {
+                    mix: RequestMix::single(WorkloadKind::MatMul { n }),
+                    protection: Protection::RegisterMemory,
+                    requests,
+                    workers: 8,
+                    queue_depth: 1024,
+                    batch,
+                    fault_rate: 1e-3,
+                    seed: 42,
+                    arrival: Arrival::Closed,
+                    ..Default::default()
+                })
+                .expect("batched serve runs");
+                assert_eq!(rep.output_nans_total(), 0);
+                assert_eq!(rep.queue_residue, 0);
+                if batch > 1 {
+                    // the flood must actually form multi-request windows,
+                    // or the sweep measures nothing
+                    assert!(
+                        rep.batch_fills[1..].iter().sum::<u64>() > 0,
+                        "1024-deep flood must fill windows past 1 request"
+                    );
+                }
+            })
+            .samples(5)
+            .budget(2.0),
+        );
+        throughput.push((batch, requests as f64 / res.summary.mean));
+    }
+    throughput
+}
+
 fn print_throughput(title: &str, unit: &str, throughput: &[(usize, f64)]) {
     println!("\n{title} ({unit}):");
     let (_, serial) = throughput[0];
@@ -182,6 +232,53 @@ fn main() {
     // mixed-workload serving: 3 kinds resident per worker, requests
     // stamped by mix weight, division-safe policy for jacobi/cg
     let served_mix = serve_mix_sweep(&mut r, serve_requests, n);
+    // batched dispatch at 1k+ offered concurrency: the request count is
+    // sized so the 1024-deep closed-loop queue stays flooded and windows
+    // actually fill (quick mode keeps CI under the sample budget)
+    let batch_requests = if r.is_quick() { 512 } else { 2048 };
+    let batched = serve_batch_sweep(&mut r, batch_requests, n);
+    // tail latency under batching: a bursty Poisson open-loop stream
+    // through batch-8 windows; the p999 printed below is the guard
+    // against trading tail latency for amortized throughput
+    r.bench(
+        &format!("serve_p999{batch_requests}x{n}/batch8"),
+        Bench::new(move || {
+            let rep = server::serve(&ServeConfig {
+                mix: RequestMix::single(WorkloadKind::MatMul { n }),
+                protection: Protection::RegisterMemory,
+                requests: batch_requests,
+                workers: 8,
+                queue_depth: 1024,
+                batch: 8,
+                fault_rate: 1e-3,
+                seed: 42,
+                arrival: Arrival::Poisson { rps: 50_000.0 },
+                ..Default::default()
+            })
+            .expect("p999 serve runs");
+            assert_eq!(rep.output_nans_total(), 0);
+            assert_eq!(rep.queue_residue, 0);
+        })
+        .samples(5)
+        .budget(2.0),
+    );
+    let p999 = {
+        // one un-timed run for the printed tail figure
+        let rep = server::serve(&ServeConfig {
+            mix: RequestMix::single(WorkloadKind::MatMul { n }),
+            protection: Protection::RegisterMemory,
+            requests: batch_requests,
+            workers: 8,
+            queue_depth: 1024,
+            batch: 8,
+            fault_rate: 1e-3,
+            seed: 42,
+            arrival: Arrival::Poisson { rps: 50_000.0 },
+            ..Default::default()
+        })
+        .expect("p999 serve runs");
+        rep.latency_quantile(0.999)
+    };
     // copy-on-serve: a stencil-heavy mix pays a pristine restore per
     // served stencil request — its own bench column, asserted non-zero
     // so regressions in the restore path cannot hide
@@ -280,4 +377,21 @@ fn main() {
             rps / s1
         );
     }
+
+    println!("\nbatched dispatch at 8 workers / 1024 offered (req/s):");
+    let (_, b1) = batched[0];
+    for (batch, rps) in &batched {
+        println!(
+            "  batch {batch:2}: {rps:8.1} req/s  ({:.2}x vs batch 1)",
+            rps / b1
+        );
+    }
+    if let Some((_, b8)) = batched.iter().find(|(b, _)| *b == 8) {
+        println!(
+            "headline: batch-8 windows run {:.2}x the unbatched throughput \
+             ({b8:.1} vs {b1:.1} req/s; acceptance gate >= 1.30x)",
+            b8 / b1
+        );
+    }
+    println!("serve_p999: poisson open-loop tail at batch 8: p999 = {:.3} ms", p999 * 1e3);
 }

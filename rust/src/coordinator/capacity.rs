@@ -37,7 +37,10 @@
 //! * [`ProbeMode::Model`] (default): a discrete-event simulation of the
 //!   server in **virtual time** — same bounded queue with generator
 //!   backpressure, same FIFO multi-worker dequeue, same
-//!   deadline-shedding rule — with per-request service times from a
+//!   deadline-shedding rule, same batched dispatch (the per-window
+//!   `arm_secs` amortizes across same-kind backlog runs up to
+//!   [`CapacityConfig::batch`], so model knees track `--batch` the way
+//!   live ones do) — with per-request service times from a
 //!   deterministic [`ServiceModel`].  Same seed ⇒ byte-identical
 //!   records, at any `--workers`, on any machine load; this is what
 //!   makes capacity planning reproducible and testable.
@@ -152,9 +155,15 @@ impl ArrivalShape {
 pub struct ServiceModel {
     /// Modeled compute rate in GFLOP/s.
     pub gflops: f64,
-    /// Fixed per-request dispatch overhead (arming, queue hand-off), in
-    /// seconds.
+    /// Fixed per-request overhead that batching cannot amortize
+    /// (plant, hygiene, per-request bookkeeping), in seconds.
     pub base_secs: f64,
+    /// Fixed per-*window* overhead (trap-domain arm/disarm, MXCSR
+    /// round-trip, dispatch hand-off), in seconds — paid once per
+    /// dispatch window, so a full batch divides it by the fill
+    /// (`arm_secs + base_secs` at batch 1 equals the historical
+    /// 20 µs per-request dispatch constant).
+    pub arm_secs: f64,
     /// Cost per trap round-trip (decode, repair, resume), in seconds.
     pub trap_secs: f64,
     /// Fixed cost of the shed path (plant + patch bookkeeping), in
@@ -172,7 +181,8 @@ impl Default for ServiceModel {
     fn default() -> Self {
         Self {
             gflops: 1.0,
-            base_secs: 20e-6,
+            base_secs: 8e-6,
+            arm_secs: 12e-6,
             trap_secs: 4e-6,
             shed_base_secs: 2e-6,
             scrub_word_secs: 2e-9,
@@ -184,7 +194,10 @@ impl Default for ServiceModel {
 impl ServiceModel {
     /// Modeled protected-window seconds for one served request of
     /// `workload` that takes `traps` traps plus `scrub_words` swept
-    /// words, plus the copy-on-serve restore for mutating kinds.
+    /// words, plus the copy-on-serve restore for mutating kinds.  The
+    /// per-window `arm_secs` is *not* included — the probe charges it
+    /// to the request that opens a new dispatch window, mirroring the
+    /// live server's batch amortization.
     pub fn service_secs(&self, workload: WorkloadKind, traps: u64, scrub_words: u64) -> f64 {
         let restore_words = if workload.mutates_inputs() {
             workload.input_words() as u64
@@ -230,6 +243,10 @@ pub struct CapacityConfig {
     pub serve_workers: usize,
     /// Bounded request-queue capacity inside each probe.
     pub queue_depth: usize,
+    /// Dispatch-window size limit inside each probe
+    /// ([`super::server::ServeConfig::batch`]); the model amortizes the
+    /// per-window `arm_secs` the same way the live server does.
+    pub batch: usize,
     /// PRNG seed; every probe derives its doses/placements/arrivals from
     /// `(seed, rate_index, request_index)`.
     pub seed: u64,
@@ -267,6 +284,7 @@ impl Default for CapacityConfig {
             warmup: 20,
             serve_workers: 2,
             queue_depth: 32,
+            batch: 8,
             seed: 42,
             slo_p99: 0.005,
             slo_shed: 0.01,
@@ -313,6 +331,7 @@ impl CapacityConfig {
         );
         anyhow::ensure!(self.serve_workers >= 1, "probes need at least one serving worker");
         anyhow::ensure!(self.queue_depth >= 1, "queue depth must be >= 1");
+        anyhow::ensure!(self.batch >= 1, "--batch must be >= 1");
         anyhow::ensure!(
             self.slo_p99 > 0.0 && self.slo_p99.is_finite(),
             "--slo-p99 target must be positive and finite"
@@ -504,6 +523,27 @@ impl CapacityOutcome {
         self.points.iter().find(|p| p.pass && p.rps == self.knee_rps)
     }
 
+    /// Which mix kind **binds the knee**: the kind with the worst
+    /// per-kind p99 at the bracket's failing probe — the first latency
+    /// axis to blow as load crosses the knee, so the kind a per-kind SLO
+    /// or a mix rebalance should target.  `None` for single-kind mixes
+    /// (nothing to attribute) and for ceiling cells (nothing failed).
+    /// Ties go to mix order.
+    pub fn binding_kind(&self) -> Option<WorkloadKind> {
+        if self.mix.is_single() {
+            return None;
+        }
+        let fail = self.fail_rps?;
+        let p = self.points.iter().find(|p| !p.pass && p.rps == fail)?;
+        let mut best: Option<&KindPoint> = None;
+        for k in &p.per_kind {
+            if best.map_or(true, |b| k.p99_secs > b.p99_secs) {
+                best = Some(k);
+            }
+        }
+        best.map(|k| k.kind)
+    }
+
     /// The cell's `capacity_knee` summary record.
     pub fn knee_record(&self, cfg: &CapacityConfig) -> Record {
         let mut rec = Record::new("capacity_knee")
@@ -515,6 +555,7 @@ impl CapacityOutcome {
             .field("mode", cfg.mode.name())
             .field("serve_workers", cfg.serve_workers)
             .field("queue_depth", cfg.queue_depth)
+            .field("batch", cfg.batch)
             .field("requests", cfg.requests)
             .field("warmup", cfg.warmup)
             .field("seed", cfg.seed)
@@ -526,6 +567,9 @@ impl CapacityOutcome {
             .field("ceiling", self.ceiling);
         if let Some(f) = self.fail_rps {
             rec = rec.field("fail_rps", f);
+        }
+        if let Some(k) = self.binding_kind() {
+            rec = rec.field("binding_kind", k.to_string());
         }
         if let Some(p) = self.knee_point() {
             rec = rec
@@ -579,7 +623,7 @@ impl CapacityReport {
                 self.config.slo_shed * 100.0,
                 self.config.mode.name()
             ),
-            &["config", "knee rps", "p99 @ knee", "shed @ knee", "probes", "ceiling"],
+            &["config", "knee rps", "p99 @ knee", "shed @ knee", "binds", "probes", "ceiling"],
         );
         for o in &self.outcomes {
             let (p99, shed) = o
@@ -596,6 +640,9 @@ impl CapacityReport {
                 format!("{:.1}", o.knee_rps),
                 p99,
                 shed,
+                o.binding_kind()
+                    .map(|k| k.to_string())
+                    .unwrap_or_else(|| "-".into()),
                 o.points.len().to_string(),
                 if o.ceiling { "yes".into() } else { "no".into() },
             ]);
@@ -747,6 +794,13 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
     // cadence; mutating kinds restore after every serve and never
     // accumulate).
     let mut worker_free = vec![0.0f64; workers];
+    // Open dispatch window per worker: the kind it serves and how many
+    // requests have joined it.  A request extends the window (no arm
+    // cost) only when it was already queued when the worker freed up
+    // (`offer <= wfree` — the live server would have drained both in
+    // one `pop_batch`), the kind matches, and the window has room;
+    // otherwise it opens a new window and pays `arm_secs`.
+    let mut window: Vec<(Option<usize>, usize)> = vec![(None, 0); workers];
     let mut resident_nans = vec![vec![0u64; kinds.len()]; workers];
     let mut served_before = vec![vec![0u64; kinds.len()]; workers];
     let mut dequeue_at = vec![0.0f64; n];
@@ -812,8 +866,20 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
         // worker's resident-NaN count is unchanged.
         let blown = dequeue - due > deadline;
         let busy = if blown {
+            // The shed path neither arms nor disturbs the worker's open
+            // window (the live server sheds out of the popped window
+            // before the batched dispatch).
             cfg.model.shed_secs(planted)
         } else {
+            let (wkind, run_len) = window[wi];
+            let joins = offer <= wfree && wkind == Some(ki) && run_len < cfg.batch;
+            let arm = if joins {
+                window[wi].1 += 1;
+                0.0
+            } else {
+                window[wi] = (Some(ki), 1);
+                cfg.model.arm_secs
+            };
             let (traps, scrub_words) = match cell.protection {
                 Protection::RegisterMemory => (planted, 0),
                 Protection::RegisterOnly if kind.mutates_inputs() => {
@@ -838,7 +904,7 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
                 _ => (0, 0),
             };
             served_before[wi][ki] += 1;
-            cfg.model.service_secs(kind, traps, scrub_words)
+            arm + cfg.model.service_secs(kind, traps, scrub_words)
         };
         let done = dequeue + busy;
         worker_free[wi] = done;
@@ -924,10 +990,12 @@ fn probe_live(cell: &CapacityCell, rps: f64, rate_index: usize) -> Result<ProbeP
         requests: cfg.requests,
         workers: cfg.serve_workers,
         queue_depth: cfg.queue_depth,
+        batch: cfg.batch,
         fault_rate: cell.fault_rate,
         seed: probe_seed(cfg.seed, rate_index),
         arrival: cfg.arrival.arrival(rps),
         slo_p99: Some(cfg.slo_p99),
+        slo_kind_p99: Vec::new(),
         deadline: Some(cfg.effective_deadline()),
         warmup: cfg.warmup,
         slo_shed: Some(cfg.slo_shed),
@@ -1067,6 +1135,28 @@ mod tests {
     }
 
     #[test]
+    fn batching_lifts_the_knee_and_stays_deterministic() {
+        // matmul:12 is fixed-cost dominated (≈3.5 µs compute vs the
+        // 12 µs per-window arm), so amortizing the arm across batch-8
+        // windows must carry visibly more load than batch 1
+        let cfg = |batch: usize| CapacityConfig {
+            mixes: vec![RequestMix::single(WorkloadKind::MatMul { n: 12 })],
+            batch,
+            ..model_cfg()
+        };
+        let b1 = plan(&cfg(1), 1).unwrap().outcomes[0].knee_rps;
+        let b8 = plan(&cfg(8), 1).unwrap().outcomes[0].knee_rps;
+        assert!(b8 > b1, "batch 8 must beat batch 1 ({b8} vs {b1})");
+        // the batched model stays byte-deterministic across matrix
+        // worker counts
+        let a = plan(&cfg(8), 1).unwrap();
+        let b = plan(&cfg(8), 4).unwrap();
+        let ra: Vec<String> = a.records().iter().map(Record::render_jsonl).collect();
+        let rb: Vec<String> = b.records().iter().map(Record::render_jsonl).collect();
+        assert_eq!(ra, rb);
+    }
+
+    #[test]
     fn poisson_shape_finds_a_deterministic_knee() {
         let cfg = CapacityConfig { arrival: ArrivalShape::Poisson, ..model_cfg() };
         let a = plan(&cfg, 1).unwrap();
@@ -1172,6 +1262,7 @@ mod tests {
         )
         .is_err());
         assert!(plan(&CapacityConfig { fault_rates: vec![1.5], ..ok.clone() }, 1).is_err());
+        assert!(plan(&CapacityConfig { batch: 0, ..ok.clone() }, 1).is_err());
         assert!(plan(&CapacityConfig { slo_p99: 0.0, ..ok.clone() }, 1).is_err());
         assert!(plan(&CapacityConfig { slo_shed: 1.5, ..ok.clone() }, 1).is_err());
         assert!(plan(&CapacityConfig { warmup: 80, ..ok.clone() }, 1).is_err());
@@ -1212,6 +1303,26 @@ mod tests {
             knee.per_kind.iter().map(|k| k.dose_total).sum::<u64>(),
             knee.dose_total
         );
+        // the knee verdict names the kind that binds it: the worst
+        // per-kind p99 at the bracket's failing probe
+        let binds = o.binding_kind().expect("a failed bracket names the binding kind");
+        let fail = o
+            .points
+            .iter()
+            .find(|p| !p.pass && Some(p.rps) == o.fail_rps)
+            .unwrap();
+        let worst = fail
+            .per_kind
+            .iter()
+            .map(|k| k.p99_secs)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(
+            fail.per_kind.iter().find(|k| k.p99_secs == worst).unwrap().kind,
+            binds
+        );
+        let knee_rec = o.knee_record(&cfg);
+        assert!(knee_rec.get("binding_kind").is_some(), "{knee_rec:?}");
+
         // record stream: points, then capacity_kind rows, then the knee
         let recs = a.records();
         let kinds: Vec<&str> = recs.iter().map(|r| r.kind()).collect();

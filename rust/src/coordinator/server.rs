@@ -7,9 +7,24 @@
 //! reaches a response corrupts it completely.  This module turns that
 //! deployment into a reproducible harness:
 //!
-//! * a **bounded MPMC request queue** ([`ServeConfig::queue_depth`])
-//!   connects a load-generator/fault-injector thread to `workers`
-//!   serving threads;
+//! * a **bounded lane queue** ([`ServeConfig::queue_depth`] total
+//!   capacity) connects a load-generator/fault-injector thread to
+//!   `workers` serving threads: one injector lane per worker (requests
+//!   route round-robin by index), per-kind FIFO sub-queues inside each
+//!   lane, and a parker-based wait-list (`std::thread::park`/`unpark`)
+//!   instead of a shared Condvar — at 1k+ offered concurrency the
+//!   handoff touches one lane mutex plus a pair of atomics, not a
+//!   process-global hot lock;
+//! * each worker drains up to [`ServeConfig::batch`] queued requests of
+//!   one kind into a single **dispatch window**
+//!   ([`ExperimentSession::serve_batch`]): one trap-domain arm/disarm,
+//!   one servability check, and one resident lookup amortized across the
+//!   window, while doses, hygiene, and copy-on-serve restores stay
+//!   request-scoped — the repair ledger is batch-size invariant by
+//!   construction (DESIGN.md §4.3).  The dequeue is **weighted-fair**:
+//!   among the non-empty kind sub-queues a worker picks the kind
+//!   maximizing `weight/(served+1)`, so a heavy kind cannot starve a
+//!   light one and same-kind runs form naturally;
 //! * each worker owns an [`ExperimentSession`] whose
 //!   [`crate::coordinator::session::ResidentSet`] holds the **resident
 //!   weights** — one pinned workload per mix kind, allocated once, never
@@ -43,11 +58,16 @@
 //!   ever written by that worker — while modelling the same physical
 //!   process;
 //! * every request yields one [`RequestResult`] (a `serve_request`
-//!   [`Record`] through the sink), and the run ends with a bucketed
-//!   latency distribution plus a `serve_slo` summary: throughput,
-//!   p50/p99/p999 latency, the repair ledger, and violations against a
-//!   `--slo-p99` target — the paper's headline (flat tail latency under
-//!   fault pressure) as a measurable verdict.
+//!   [`Record`] through the sink) with its end-to-end latency **split
+//!   into queue wait and service time**, and the run ends with bucketed
+//!   queue-wait and latency distributions, a `batch_fill` record (the
+//!   dispatch-window size distribution — how much amortization actually
+//!   happened), and a `serve_slo` summary: throughput, p50/p99/p999
+//!   latency, the repair ledger, and violations against a `--slo-p99`
+//!   target — overall (`--slo-p99 2`) or per kind
+//!   (`--slo-p99 matmul=2,jacobi=10`, the verdict then requires every
+//!   targeted kind's own p99 to pass) — the paper's headline (flat tail
+//!   latency under fault pressure) as a measurable verdict.
 //!
 //! Load generation is either **closed-loop** ([`Arrival::Closed`]: the
 //! queue is kept full; the latency clock starts at the offer instant, so
@@ -70,14 +90,16 @@
 //! assert queue saturation at the knee.
 
 use std::collections::{HashSet, VecDeque};
-use std::sync::{mpsc, Barrier, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Barrier, Mutex};
+use std::thread::Thread;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::repair::policy::RepairPolicy;
 use crate::trap::{TrapStats, NUM_DOMAINS};
-use crate::util::report::{LatencyHistogram, Record};
+use crate::util::report::{Json, LatencyHistogram, Record};
 use crate::util::rng::Pcg64;
 use crate::util::stats::percentile_sorted;
 use crate::util::table::{fmt_secs, Table};
@@ -357,9 +379,19 @@ pub struct ServeConfig {
     pub seed: u64,
     /// Arrival process (closed or open loop).
     pub arrival: Arrival,
+    /// Maximum requests a worker drains into one dispatch window (same
+    /// kind, one trap-arm + servability check + resident lookup for the
+    /// whole window).  1 reproduces the unbatched per-request path; the
+    /// repair ledger is invariant in this knob either way.
+    pub batch: usize,
     /// p99 end-to-end latency target in seconds; sets the `serve_slo`
     /// verdict and the per-request violation count.
     pub slo_p99: Option<f64>,
+    /// Per-kind p99 targets in seconds, keyed by workload family name
+    /// (`matmul`, `jacobi`, …) — `--slo-p99 matmul=0.002,jacobi=0.010`.
+    /// Each named family must appear in the mix; the SLO verdict then
+    /// also requires every targeted kind's own measured p99 to pass.
+    pub slo_kind_p99: Vec<(String, f64)>,
     /// Per-request deadline in seconds, measured from the latency-clock
     /// origin.  A request whose deadline is already blown when a worker
     /// dequeues it is **shed** (planted dose patched back, no compute, no
@@ -391,12 +423,48 @@ impl Default for ServeConfig {
             fault_rate: 1e-4,
             seed: 42,
             arrival: Arrival::Closed,
+            batch: 8,
             slo_p99: None,
+            slo_kind_p99: Vec::new(),
             deadline: None,
             warmup: 0,
             slo_shed: None,
         }
     }
+}
+
+/// Parse a `--slo-p99` spec: a bare number is an overall p99 target;
+/// `kind=target[,kind=target…]` sets per-kind targets by workload family
+/// name.  Values are in the caller's unit (the CLI passes milliseconds)
+/// and are range-checked by [`serve`], not here.
+pub fn parse_slo_p99_spec(s: &str) -> Result<(Option<f64>, Vec<(String, f64)>)> {
+    if !s.contains('=') {
+        let t: f64 = s
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--slo-p99 {s:?} is neither a number nor kind=target pairs"))?;
+        return Ok((Some(t), Vec::new()));
+    }
+    let mut per_kind = Vec::new();
+    for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+        let (name, val) = part
+            .trim()
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("per-kind SLO entry {part:?} needs kind=target"))?;
+        let name = name.trim();
+        anyhow::ensure!(!name.is_empty(), "empty kind name in SLO entry {part:?}");
+        let t: f64 = val
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("per-kind SLO target {val:?} is not a number"))?;
+        anyhow::ensure!(
+            per_kind.iter().all(|(n, _): &(String, f64)| n != name),
+            "duplicate kind {name:?} in --slo-p99 spec"
+        );
+        per_kind.push((name.to_string(), t));
+    }
+    anyhow::ensure!(!per_kind.is_empty(), "--slo-p99 spec {s:?} names no kinds");
+    Ok((None, per_kind))
 }
 
 impl ServeConfig {
@@ -411,90 +479,257 @@ impl ServeConfig {
     }
 }
 
-/// One queued request: identity, stamped workload kind, fault dose, and
-/// the latency-clock origin (scheduled arrival for open loop, offer
-/// instant otherwise).
+/// One queued request: identity, stamped workload kind (plus its mix
+/// index, the lane sub-queue key), fault dose, and the latency-clock
+/// origin (scheduled arrival for open loop, offer instant otherwise).
 struct ServeRequest {
     index: usize,
     kind: WorkloadKind,
+    /// Position of `kind` in the mix (sub-queue routing key).
+    kind_idx: usize,
     dose: u64,
     arrival: Instant,
 }
 
-/// Bounded blocking MPMC queue between the load generator and the
-/// serving workers.  `push` blocks while the queue is at capacity
-/// (backpressure); `pop` blocks while it is empty and returns `None`
-/// once the queue is closed and drained.
-struct BoundedQueue<T> {
-    state: Mutex<QueueState<T>>,
-    not_empty: Condvar,
-    not_full: Condvar,
+/// One injector lane: per-kind FIFO sub-queues behind a lane-private
+/// mutex.  A worker's hot path touches only its own lane (stealing from
+/// other lanes only when its own is empty), so dequeue contention does
+/// not grow with the worker count the way a single shared queue's does.
+struct Lane {
+    state: Mutex<LaneState>,
+    /// Highest occupancy this lane ever reached (per-lane depth
+    /// high-water mark, reported alongside the aggregate).
+    highwater: AtomicUsize,
+}
+
+struct LaneState {
+    /// One FIFO per mix kind, in mix order — same-kind dispatch windows
+    /// form by construction instead of by scanning a mixed FIFO.
+    subs: Vec<VecDeque<ServeRequest>>,
+    len: usize,
+}
+
+/// Bounded multi-lane request queue between the load generator and the
+/// serving workers, with parker-based blocking: a thread that must wait
+/// registers itself (producer slot / sleeper list), re-checks the
+/// condition, and only then parks — `unpark` before `park` leaves the
+/// parker token set, so the register→re-check→park ordering closes every
+/// lost-wakeup race without a shared Condvar.  Capacity is global
+/// ([`ServeConfig::queue_depth`] across all lanes, tracked by one atomic
+/// occupancy counter), so the backpressure and offered-concurrency
+/// semantics of the old single queue are preserved exactly.
+struct LaneQueue {
+    lanes: Vec<Lane>,
     cap: usize,
+    /// Requests currently queued, across all lanes.
+    occupancy: AtomicUsize,
+    /// Highest aggregate occupancy ever reached.
+    highwater: AtomicUsize,
+    closed: AtomicBool,
+    /// Parked consumers, registered before parking.  Touched only on
+    /// idle/wake transitions — a busy worker never takes this lock.
+    sleepers: Mutex<Vec<Thread>>,
+    /// The (single) producer's parking slot while blocked on a full
+    /// queue.
+    producer: Mutex<Option<Thread>>,
 }
 
-struct QueueState<T> {
-    buf: VecDeque<T>,
-    closed: bool,
-    highwater: usize,
-}
-
-impl<T> BoundedQueue<T> {
-    fn new(cap: usize) -> Self {
+impl LaneQueue {
+    fn new(lanes: usize, kinds: usize, cap: usize) -> Self {
         Self {
-            state: Mutex::new(QueueState {
-                buf: VecDeque::with_capacity(cap),
-                closed: false,
-                highwater: 0,
-            }),
-            not_empty: Condvar::new(),
-            not_full: Condvar::new(),
+            lanes: (0..lanes)
+                .map(|_| Lane {
+                    state: Mutex::new(LaneState {
+                        subs: (0..kinds).map(|_| VecDeque::new()).collect(),
+                        len: 0,
+                    }),
+                    highwater: AtomicUsize::new(0),
+                })
+                .collect(),
             cap,
+            occupancy: AtomicUsize::new(0),
+            highwater: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            sleepers: Mutex::new(Vec::new()),
+            producer: Mutex::new(None),
         }
     }
 
-    fn push(&self, item: T) {
-        let mut s = self.state.lock().unwrap();
-        while s.buf.len() >= self.cap && !s.closed {
-            s = self.not_full.wait(s).unwrap();
+    /// Offer one request to `lane` (single producer).  Blocks while the
+    /// queue is at global capacity; returns silently once closed.
+    fn push(&self, lane: usize, item: ServeRequest) {
+        loop {
+            if self.closed.load(Ordering::Acquire) {
+                return;
+            }
+            if self.occupancy.load(Ordering::Acquire) < self.cap {
+                break;
+            }
+            // Register → re-check → park: a consumer that frees capacity
+            // after the re-check finds us in the slot and unparks us
+            // (token set even if we have not parked yet).
+            *self.producer.lock().unwrap() = Some(std::thread::current());
+            if self.closed.load(Ordering::Acquire)
+                || self.occupancy.load(Ordering::Acquire) < self.cap
+            {
+                *self.producer.lock().unwrap() = None;
+                continue;
+            }
+            std::thread::park();
+            *self.producer.lock().unwrap() = None;
         }
-        if s.closed {
-            return;
+        // Reserve occupancy *before* the lane insert: a consumer that
+        // sweeps the item out between insert and a late increment would
+        // drive the counter below zero (usize wrap).  The reserve-first
+        // order keeps `occupancy >= queued items` at every instant; a
+        // consumer that wakes inside the reserve→insert window sees an
+        // empty lane, re-checks, and retries.
+        let occ = self.occupancy.fetch_add(1, Ordering::AcqRel) + 1;
+        self.highwater.fetch_max(occ, Ordering::Relaxed);
+        let l = &self.lanes[lane];
+        let lane_len = {
+            let mut s = l.state.lock().unwrap();
+            s.subs[item.kind_idx].push_back(item);
+            s.len += 1;
+            s.len
+        };
+        l.highwater.fetch_max(lane_len, Ordering::Relaxed);
+        self.wake_one_consumer();
+    }
+
+    /// Drain up to `batch` same-kind requests for `worker`: its own lane
+    /// first, then the other lanes in ring order (work stealing).  The
+    /// kind is picked **weighted-fair** — among the non-empty sub-queues,
+    /// maximize `weights[k] / (credit[k] + 1)` (ties to the lower mix
+    /// index), where `credit` is the caller's served-by-kind counter
+    /// (updated here) — so a heavy kind cannot starve a light one while
+    /// same-kind runs still form.  Blocks (parked) while the queue is
+    /// empty; returns `None` once it is closed and fully drained.
+    fn pop_batch(
+        &self,
+        worker: usize,
+        batch: usize,
+        credit: &mut [u64],
+        weights: &[f64],
+    ) -> Option<Vec<ServeRequest>> {
+        loop {
+            if let Some(got) = self.try_sweep(worker, batch, credit, weights) {
+                return Some(got);
+            }
+            if self.closed.load(Ordering::Acquire) {
+                // Everything pushed before close is visible after the
+                // Acquire load: one final sweep settles whether the
+                // queue is truly drained.
+                return self.try_sweep(worker, batch, credit, weights);
+            }
+            // Register → re-check → park (see `push`).
+            self.sleepers.lock().unwrap().push(std::thread::current());
+            if self.occupancy.load(Ordering::Acquire) > 0 || self.closed.load(Ordering::Acquire) {
+                self.unregister_sleeper();
+                continue;
+            }
+            std::thread::park();
+            self.unregister_sleeper();
         }
-        s.buf.push_back(item);
-        s.highwater = s.highwater.max(s.buf.len());
-        drop(s);
-        self.not_empty.notify_one();
+    }
+
+    /// One non-blocking pass over all lanes starting at `worker`'s own.
+    fn try_sweep(
+        &self,
+        worker: usize,
+        batch: usize,
+        credit: &mut [u64],
+        weights: &[f64],
+    ) -> Option<Vec<ServeRequest>> {
+        for li in 0..self.lanes.len() {
+            let lane = &self.lanes[(worker + li) % self.lanes.len()];
+            let got = Self::drain_lane(lane, batch, credit, weights);
+            if !got.is_empty() {
+                self.occupancy.fetch_sub(got.len(), Ordering::AcqRel);
+                self.wake_producer();
+                return Some(got);
+            }
+        }
+        None
+    }
+
+    /// Weighted-fair same-kind drain of one lane (up to `batch` items).
+    fn drain_lane(
+        lane: &Lane,
+        batch: usize,
+        credit: &mut [u64],
+        weights: &[f64],
+    ) -> Vec<ServeRequest> {
+        let mut s = lane.state.lock().unwrap();
+        if s.len == 0 {
+            return Vec::new();
+        }
+        let mut pick = None;
+        let mut best = f64::NEG_INFINITY;
+        for (k, sub) in s.subs.iter().enumerate() {
+            if sub.is_empty() {
+                continue;
+            }
+            let score = weights[k] / (credit[k] + 1) as f64;
+            if score > best {
+                best = score;
+                pick = Some(k);
+            }
+        }
+        let k = pick.expect("non-zero lane length implies a non-empty sub-queue");
+        let take = batch.min(s.subs[k].len()).max(1);
+        let got: Vec<ServeRequest> = s.subs[k].drain(..take).collect();
+        s.len -= got.len();
+        credit[k] += got.len() as u64;
+        got
+    }
+
+    fn wake_one_consumer(&self) {
+        let t = self.sleepers.lock().unwrap().pop();
+        if let Some(t) = t {
+            t.unpark();
+        }
+    }
+
+    fn wake_producer(&self) {
+        if let Some(t) = self.producer.lock().unwrap().as_ref() {
+            t.unpark();
+        }
+    }
+
+    /// Remove the calling thread from the sleeper list if a waker has
+    /// not already done so (spurious park returns leave it registered).
+    fn unregister_sleeper(&self) {
+        let id = std::thread::current().id();
+        self.sleepers.lock().unwrap().retain(|t| t.id() != id);
     }
 
     fn close(&self) {
-        self.state.lock().unwrap().closed = true;
-        self.not_empty.notify_all();
-        self.not_full.notify_all();
-    }
-
-    fn pop(&self) -> Option<T> {
-        let mut s = self.state.lock().unwrap();
-        loop {
-            if let Some(item) = s.buf.pop_front() {
-                drop(s);
-                self.not_full.notify_one();
-                return Some(item);
-            }
-            if s.closed {
-                return None;
-            }
-            s = self.not_empty.wait(s).unwrap();
+        self.closed.store(true, Ordering::SeqCst);
+        self.wake_producer();
+        let sleepers = std::mem::take(&mut *self.sleepers.lock().unwrap());
+        for t in sleepers {
+            t.unpark();
         }
     }
 
+    /// Highest aggregate occupancy observed.
     fn highwater(&self) -> usize {
-        self.state.lock().unwrap().highwater
+        self.highwater.load(Ordering::Relaxed)
     }
 
-    /// Items still queued (the post-drain residue check: must be zero
+    /// Per-lane depth high-water marks, in lane (worker) order.
+    fn lane_highwaters(&self) -> Vec<usize> {
+        self.lanes
+            .iter()
+            .map(|l| l.highwater.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Requests still queued (the post-drain residue check: must be zero
     /// once every worker has exited).
     fn len(&self) -> usize {
-        self.state.lock().unwrap().buf.len()
+        self.occupancy.load(Ordering::Acquire)
     }
 }
 
@@ -504,9 +739,9 @@ impl<T> BoundedQueue<T> {
 /// with no producer) — the queue closes during unwinding, every thread
 /// drains out, and `thread::scope` propagates the original panic
 /// instead of deadlocking.
-struct CloseOnDrop<'a, T>(&'a BoundedQueue<T>);
+struct CloseOnDrop<'a>(&'a LaneQueue);
 
-impl<T> Drop for CloseOnDrop<'_, T> {
+impl Drop for CloseOnDrop<'_> {
     fn drop(&mut self) {
         self.0.close();
     }
@@ -540,6 +775,11 @@ pub struct RequestResult {
     /// What the worker did with it (served compute or overload shed) and
     /// what that cost.
     pub outcome: RequestOutcome,
+    /// Seconds from the latency-clock origin to the dispatch instant of
+    /// the window that handled this request — the queue-wait component
+    /// of `latency_secs` (what batching/scheduling changes; the service
+    /// component is what repair overhead changes).
+    pub queue_wait_secs: f64,
     /// Seconds from the latency-clock origin to completion (queue wait
     /// included); for a shed request, to the shed decision + handling.
     pub latency_secs: f64,
@@ -608,6 +848,7 @@ impl RequestResult {
             .field("shed_repairs", self.outcome.shed_repairs())
             .field("service_secs", self.outcome.service_secs())
             .field("restore_secs", self.outcome.restore_secs())
+            .field("queue_wait_secs", self.queue_wait_secs)
             .field("latency_secs", self.latency_secs)
             .field("output_nans", self.outcome.output_nans())
     }
@@ -646,12 +887,21 @@ pub struct KindSummary {
     pub latency_p50_secs: f64,
     /// Exact p99 latency over this kind's measured served requests.
     pub latency_p99_secs: f64,
+    /// This kind's own p99 target in seconds (`--slo-p99 kind=…`).
+    pub slo_p99: Option<f64>,
+    /// Measured served requests of this kind over its own target
+    /// (0 when no per-kind target is set).
+    pub slo_violations: u64,
+    /// Per-kind verdict: measured p99 at or under the kind's target
+    /// (`None` when no target is set for this kind; a targeted kind with
+    /// nothing served never passes).
+    pub slo_met: Option<bool>,
 }
 
 impl KindSummary {
     /// The `serve_kind_slo` record.
     pub fn to_record(&self, label: &str) -> Record {
-        Record::new("serve_kind_slo")
+        let mut rec = Record::new("serve_kind_slo")
             .field("label", label)
             .field("kind", self.kind.to_string())
             .field("weight", self.weight)
@@ -665,7 +915,14 @@ impl KindSummary {
             .field("output_nans", self.output_nans)
             .field("restore_secs", self.restore_secs)
             .field("latency_p50_secs", self.latency_p50_secs)
-            .field("latency_p99_secs", self.latency_p99_secs)
+            .field("latency_p99_secs", self.latency_p99_secs);
+        if let Some(t) = self.slo_p99 {
+            rec = rec
+                .field("slo_p99_secs", t)
+                .field("slo_violations", self.slo_violations)
+                .field("slo_met", self.slo_met.unwrap_or(false));
+        }
+        rec
     }
 }
 
@@ -681,10 +938,18 @@ pub struct ServeReport {
     pub mix: RequestMix,
     /// Worker threads that served (after clamping).
     pub workers: usize,
-    /// Bounded queue capacity of the run.
+    /// Bounded queue capacity of the run (global, across lanes).
     pub queue_depth: usize,
-    /// Highest queue occupancy observed.
+    /// Dispatch-window size limit of the run ([`ServeConfig::batch`]).
+    pub batch: usize,
+    /// Highest aggregate queue occupancy observed.
     pub queue_highwater: usize,
+    /// Per-lane depth high-water marks, in worker order.
+    pub lane_highwater: Vec<usize>,
+    /// Dispatch-window fill distribution: `batch_fills[i]` windows
+    /// drained exactly `i + 1` requests (how much the per-window costs
+    /// actually amortized).
+    pub batch_fills: Vec<u64>,
     /// Requests still queued after every worker exited — always zero on a
     /// clean drain (reported so tests and capacity probes can assert it).
     pub queue_residue: usize,
@@ -707,6 +972,9 @@ pub struct ServeReport {
     pub latency_hist: LatencyHistogram,
     /// p99 latency target in seconds (if set).
     pub slo_p99: Option<f64>,
+    /// Per-kind p99 targets (family name → seconds), validated against
+    /// the mix.
+    pub slo_kind_p99: Vec<(String, f64)>,
     /// Maximum tolerable measured shed fraction (if set).
     pub slo_shed: Option<f64>,
 }
@@ -773,6 +1041,17 @@ impl ServeReport {
         self.sorted_by(|r| r.service_secs())
     }
 
+    /// Measured served queue waits, ascending — the scheduling component
+    /// of the end-to-end latency (`latency ≈ queue_wait + service`).
+    pub fn sorted_queue_waits(&self) -> Vec<f64> {
+        self.sorted_by(|r| r.queue_wait_secs)
+    }
+
+    /// Exact queue-wait quantile over measured served requests.
+    pub fn queue_wait_quantile(&self, q: f64) -> f64 {
+        quantile_of(&self.sorted_queue_waits(), q)
+    }
+
     fn sorted_by(&self, f: impl Fn(&RequestResult) -> f64) -> Vec<f64> {
         let mut v: Vec<f64> = self
             .measured()
@@ -837,6 +1116,18 @@ impl ServeReport {
                     .map(|r| r.latency_secs)
                     .collect();
                 lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let latency_p99_secs = quantile_of(&lat, 0.99);
+                let target = self
+                    .slo_kind_p99
+                    .iter()
+                    .find(|(name, _)| name == kind.name())
+                    .map(|&(_, t)| t);
+                let slo_violations = target.map_or(0, |t| {
+                    lat.iter().filter(|&&l| l > t).count() as u64
+                });
+                // same rule as the overall verdict: a targeted kind with
+                // nothing served never passes
+                let slo_met = target.map(|t| !lat.is_empty() && latency_p99_secs <= t);
                 KindSummary {
                     kind,
                     weight,
@@ -850,10 +1141,57 @@ impl ServeReport {
                     output_nans: all.iter().map(|r| r.output_nans()).sum(),
                     restore_secs: all.iter().map(|r| r.restore_secs()).sum(),
                     latency_p50_secs: quantile_of(&lat, 0.50),
-                    latency_p99_secs: quantile_of(&lat, 0.99),
+                    latency_p99_secs,
+                    slo_p99: target,
+                    slo_violations,
+                    slo_met,
                 }
             })
             .collect()
+    }
+
+    /// Dispatch windows drained (total over all workers).
+    pub fn windows_total(&self) -> u64 {
+        self.batch_fills.iter().sum()
+    }
+
+    /// Mean dispatch-window fill (0 when no window was drained).
+    pub fn mean_fill(&self) -> f64 {
+        let windows = self.windows_total();
+        if windows == 0 {
+            return 0.0;
+        }
+        let reqs: u64 = self
+            .batch_fills
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| (i as u64 + 1) * n)
+            .sum();
+        reqs as f64 / windows as f64
+    }
+
+    /// The `batch_fill` record: the dispatch-window size distribution
+    /// (sparse `{fill, n}` buckets) plus per-lane depth high-water marks.
+    pub fn batch_fill_record(&self) -> Record {
+        let buckets: Vec<Json> = self
+            .batch_fills
+            .iter()
+            .enumerate()
+            .filter(|&(_, &n)| n > 0)
+            .map(|(i, &n)| {
+                Json::Obj(vec![
+                    ("fill".to_string(), Json::from(i as u64 + 1)),
+                    ("n".to_string(), Json::from(n)),
+                ])
+            })
+            .collect();
+        let lanes: Vec<Json> = self.lane_highwater.iter().map(|&h| Json::from(h)).collect();
+        Record::new("batch_fill")
+            .field("batch", self.batch)
+            .field("windows", self.windows_total())
+            .field("mean_fill", self.mean_fill())
+            .field("buckets", Json::Arr(buckets))
+            .field("lane_highwater", Json::Arr(lanes))
     }
 
     /// Measured-served latency histogram of one kind (the per-kind
@@ -883,6 +1221,8 @@ impl ServeReport {
 
     /// SLO verdict: is the exact measured p99 at or under the target —
     /// and, when a shed budget is set, is the shed fraction within it?
+    /// With per-kind targets, every targeted kind's own p99 must pass
+    /// too.  `None` when no target of either form is set.
     pub fn slo_met(&self) -> Option<bool> {
         self.slo_met_given(&self.sorted_latencies())
     }
@@ -892,23 +1232,33 @@ impl ServeReport {
     /// empty served set never passes: shedding everything is not meeting
     /// an SLO.
     fn slo_met_given(&self, sorted_latencies: &[f64]) -> Option<bool> {
-        self.slo_p99.map(|t| {
-            let p99_ok = !sorted_latencies.is_empty() && quantile_of(sorted_latencies, 0.99) <= t;
-            let shed_ok = self.slo_shed.map_or(true, |s| self.shed_frac() <= s);
-            p99_ok && shed_ok
-        })
+        if self.slo_p99.is_none() && self.slo_kind_p99.is_empty() {
+            return None;
+        }
+        let p99_ok = match self.slo_p99 {
+            None => true,
+            Some(t) => !sorted_latencies.is_empty() && quantile_of(sorted_latencies, 0.99) <= t,
+        };
+        let shed_ok = self.slo_shed.map_or(true, |s| self.shed_frac() <= s);
+        let kinds_ok = self
+            .kind_summaries()
+            .iter()
+            .all(|k| k.slo_met != Some(false));
+        Some(p99_ok && shed_ok && kinds_ok)
     }
 
     /// The final `serve_slo` summary record.
     pub fn slo_record(&self) -> Record {
         let lat = self.sorted_latencies();
         let svc = self.sorted_services();
+        let qw = self.sorted_queue_waits();
         let mut rec = Record::new("serve_slo")
             .field("label", self.config_label.as_str())
             .field("requests", self.results.len())
             .field("warmup", self.warmup)
             .field("workers", self.workers)
             .field("queue_depth", self.queue_depth)
+            .field("batch", self.batch)
             .field("queue_highwater", self.queue_highwater)
             .field("queue_residue", self.queue_residue)
             .field("wall_secs", self.wall_secs)
@@ -920,6 +1270,9 @@ impl ServeReport {
             .field("latency_p50_secs", quantile_of(&lat, 0.50))
             .field("latency_p99_secs", quantile_of(&lat, 0.99))
             .field("latency_p999_secs", quantile_of(&lat, 0.999))
+            .field("queue_wait_p50_secs", quantile_of(&qw, 0.50))
+            .field("queue_wait_p99_secs", quantile_of(&qw, 0.99))
+            .field("queue_wait_p999_secs", quantile_of(&qw, 0.999))
             .field("service_p50_secs", quantile_of(&svc, 0.50))
             .field("service_p99_secs", quantile_of(&svc, 0.99))
             .field("dose_total", self.dose_total())
@@ -937,8 +1290,10 @@ impl ServeReport {
         if let Some(t) = self.slo_p99 {
             rec = rec
                 .field("slo_p99_secs", t)
-                .field("slo_violations", self.slo_violations())
-                .field("slo_met", self.slo_met_given(&lat).unwrap_or(false));
+                .field("slo_violations", self.slo_violations());
+        }
+        if let Some(met) = self.slo_met_given(&lat) {
+            rec = rec.field("slo_met", met);
         }
         rec
     }
@@ -946,9 +1301,9 @@ impl ServeReport {
     /// The full record stream: one `serve_request` per request (in
     /// request order); for a multi-kind mix, per-kind
     /// `serve_kind_latency` and `serve_kind_slo` breakdowns (grouped by
-    /// record kind, in mix order); then the overall `serve_latency`
-    /// histogram and `serve_slo` verdict.  Single-kind runs keep the
-    /// historical three-part stream.
+    /// record kind, in mix order); then the overall `serve_queue_wait`
+    /// and `serve_latency` histograms, the `batch_fill` window-size
+    /// distribution, and the `serve_slo` verdict.
     pub fn records(&self) -> Vec<Record> {
         let mut out: Vec<Record> = self.results.iter().map(RequestResult::to_record).collect();
         if !self.mix.is_single() {
@@ -964,7 +1319,15 @@ impl ServeReport {
                 out.push(ks.to_record(&self.config_label));
             }
         }
+        let mut qw_hist = LatencyHistogram::new();
+        for r in self.measured() {
+            if !r.is_shed() {
+                qw_hist.observe(r.queue_wait_secs);
+            }
+        }
+        out.push(qw_hist.to_record("serve_queue_wait"));
         out.push(self.latency_hist.to_record("serve_latency"));
+        out.push(self.batch_fill_record());
         out.push(self.slo_record());
         out
     }
@@ -981,6 +1344,10 @@ impl ServeReport {
             "queue depth (highwater)".into(),
             format!("{} ({})", self.queue_depth, self.queue_highwater),
         ]);
+        t.row(&[
+            "batch (mean fill)".into(),
+            format!("{} ({:.2})", self.batch, self.mean_fill()),
+        ]);
         t.row(&["wall time".into(), fmt_secs(self.wall_secs)]);
         t.row(&["drain time".into(), fmt_secs(self.drain_secs)]);
         t.row(&["throughput".into(), format!("{:.1} req/s", self.throughput_rps())]);
@@ -992,6 +1359,7 @@ impl ServeReport {
         t.row(&["latency p50".into(), fmt_secs(quantile_of(&lat, 0.50))]);
         t.row(&["latency p99".into(), fmt_secs(quantile_of(&lat, 0.99))]);
         t.row(&["latency p999".into(), fmt_secs(quantile_of(&lat, 0.999))]);
+        t.row(&["queue wait p99".into(), fmt_secs(self.queue_wait_quantile(0.99))]);
         t.row(&["service p99".into(), fmt_secs(self.service_quantile(0.99))]);
         t.row(&["NaN dose issued".into(), self.dose_total().to_string()]);
         t.row(&["NaN words planted".into(), self.nans_planted_total().to_string()]);
@@ -1007,16 +1375,25 @@ impl ServeReport {
             ]);
         }
         t.row(&["NaNs in responses".into(), self.output_nans_total().to_string()]);
-        if !self.mix.is_single() {
+        if !self.mix.is_single() || !self.slo_kind_p99.is_empty() {
             for ks in self.kind_summaries() {
+                let target = match ks.slo_p99 {
+                    Some(t) => format!(
+                        ", target {} {}",
+                        fmt_secs(t),
+                        if ks.slo_met == Some(true) { "ok" } else { "MISSED" }
+                    ),
+                    None => String::new(),
+                };
                 t.row(&[
                     format!("[{}] served/shed", ks.kind),
                     format!(
-                        "{} / {} (p99 {}, {} repairs)",
+                        "{} / {} (p99 {}, {} repairs{})",
                         ks.served,
                         ks.shed,
                         fmt_secs(ks.latency_p99_secs),
-                        ks.repairs_total
+                        ks.repairs_total,
+                        target
                     ),
                 ]);
             }
@@ -1027,7 +1404,9 @@ impl ServeReport {
         if let Some(t_slo) = self.slo_p99 {
             t.row(&["SLO p99 target".into(), fmt_secs(t_slo)]);
             t.row(&["SLO violations".into(), self.slo_violations().to_string()]);
-            let verdict = if self.slo_met_given(&lat) == Some(true) { "yes" } else { "NO" };
+        }
+        if let Some(met) = self.slo_met_given(&lat) {
+            let verdict = if met { "yes" } else { "NO" };
             t.row(&["SLO met".into(), verdict.to_string()]);
         }
         t
@@ -1092,10 +1471,26 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
             "open-loop arrival rate must be positive and finite"
         );
     }
+    anyhow::ensure!(cfg.batch >= 1, "--batch must be >= 1");
     if let Some(t) = cfg.slo_p99 {
         anyhow::ensure!(
             t > 0.0 && t.is_finite(),
             "--slo-p99 target must be positive and finite"
+        );
+    }
+    for (name, t) in &cfg.slo_kind_p99 {
+        anyhow::ensure!(
+            *t > 0.0 && t.is_finite(),
+            "per-kind SLO target for {name:?} must be positive and finite"
+        );
+        anyhow::ensure!(
+            cfg.mix.kinds().iter().any(|k| k.name() == name),
+            "per-kind SLO names {name:?}, which is not in the mix ({})",
+            cfg.mix.label()
+        );
+        anyhow::ensure!(
+            cfg.slo_kind_p99.iter().filter(|(n, _)| n == name).count() == 1,
+            "duplicate per-kind SLO target for {name:?}"
         );
     }
     if let Some(d) = cfg.deadline {
@@ -1119,9 +1514,16 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
     let workers = cfg.workers.clamp(1, NUM_DOMAINS).min(cfg.requests);
     let deadline = cfg.deadline.map(Duration::from_secs_f64);
 
-    let queue = BoundedQueue::new(cfg.queue_depth);
+    let queue = LaneQueue::new(workers, cfg.mix.entries().len(), cfg.queue_depth);
     let queue = &queue;
-    let (tx, rx) = mpsc::channel::<Result<RequestResult>>();
+    // One message per dispatch window (not per request): a window's
+    // requests complete or fail together, and fewer sends keep the
+    // channel off the hot path at high batch sizes.
+    let (tx, rx) = mpsc::channel::<Result<Vec<RequestResult>>>();
+    // Per-window fill counts (index i = windows that drained i+1
+    // requests), merged from each worker's local tally at exit.
+    let batch_fills: Mutex<Vec<u64>> = Mutex::new(vec![0; cfg.batch]);
+    let batch_fills = &batch_fills;
     // Workers must finish building their resident weights before the
     // arrival clocks start, or setup cost would be charged to the first
     // wave of request latencies.  Participants: workers + generator +
@@ -1139,10 +1541,15 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         scope.spawn(move || {
             let _close = CloseOnDrop(queue);
             let offsets = cfg.arrival.offsets(cfg.seed, cfg.requests);
+            let kinds = cfg.mix.kinds();
             ready.wait();
             let start = Instant::now();
             for index in 0..cfg.requests {
                 let (kind, dose) = request_stamp(cfg.seed, &cfg.mix, cfg.fault_rate, index);
+                let kind_idx = kinds
+                    .iter()
+                    .position(|k| *k == kind)
+                    .expect("stamped kind comes from the mix");
                 let arrival = match &offsets {
                     None => Instant::now(),
                     Some(offs) => {
@@ -1157,12 +1564,18 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                         due
                     }
                 };
-                queue.push(ServeRequest {
-                    index,
-                    kind,
-                    dose,
-                    arrival,
-                });
+                // Round-robin lane routing: deterministic, balanced, and
+                // contention-free when workers mostly drain their own lane.
+                queue.push(
+                    index % workers,
+                    ServeRequest {
+                        index,
+                        kind,
+                        kind_idx,
+                        dose,
+                        arrival,
+                    },
+                );
             }
             // Admission stops here: everything still queued is backlog
             // the drain phase must serve or shed.
@@ -1189,39 +1602,86 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                     // _ready drops here: barrier released exactly once,
                     // during unwinding too if preparation panics
                 }
-                while let Some(req) = queue.pop() {
-                    let cell = ServeCell {
-                        workload: req.kind,
-                        resident_seed: cfg.seed,
-                        protection: cfg.protection,
-                        policy: cfg.policy,
-                        dose: req.dose,
-                        placement_seed: request_seed(cfg.seed, req.index),
-                    };
+                let weights: Vec<f64> = cfg.mix.entries().iter().map(|&(_, w)| w).collect();
+                let mut credit = vec![0u64; weights.len()];
+                let mut fills = vec![0u64; cfg.batch];
+                while let Some(reqs) = queue.pop_batch(worker, cfg.batch, &mut credit, &weights)
+                {
+                    fills[reqs.len() - 1] += 1;
+                    // Queue wait ends when the window is formed; service
+                    // time for every request in the window starts here.
+                    let dispatch = Instant::now();
                     // Overload control: a request whose deadline is
-                    // already blown at dequeue time is shed — its dose is
-                    // planted and patched back, but no compute runs and
-                    // no response is served late.
-                    let blown = deadline
-                        .map(|d| Instant::now().saturating_duration_since(req.arrival) > d)
-                        .unwrap_or(false);
-                    let out = if blown {
-                        session.shed_request(&cell)
-                    } else {
-                        session.serve_request(&cell)
-                    };
-                    let done = Instant::now();
-                    let msg = out.map(|outcome| RequestResult {
-                        index: req.index,
-                        worker,
-                        kind: req.kind,
-                        dose: req.dose,
-                        outcome,
-                        latency_secs: done.saturating_duration_since(req.arrival).as_secs_f64(),
-                    });
+                    // already blown at dispatch time is shed — its dose
+                    // is planted and patched back, but no compute runs
+                    // and no response is served late.  Shed requests
+                    // leave the window; the rest share one dispatch.
+                    let mut shed = Vec::new();
+                    let mut live = Vec::new();
+                    let mut cells = Vec::new();
+                    for req in reqs {
+                        let cell = ServeCell {
+                            workload: req.kind,
+                            resident_seed: cfg.seed,
+                            protection: cfg.protection,
+                            policy: cfg.policy,
+                            dose: req.dose,
+                            placement_seed: request_seed(cfg.seed, req.index),
+                        };
+                        let blown = deadline
+                            .map(|d| dispatch.saturating_duration_since(req.arrival) > d)
+                            .unwrap_or(false);
+                        if blown {
+                            shed.push((req, cell));
+                        } else {
+                            cells.push(cell);
+                            live.push(req);
+                        }
+                    }
+                    let msg = (|| {
+                        let mut out = Vec::with_capacity(shed.len() + live.len());
+                        for (req, cell) in &shed {
+                            let outcome = session.shed_request(cell)?;
+                            let done = Instant::now();
+                            out.push(RequestResult {
+                                index: req.index,
+                                worker,
+                                kind: req.kind,
+                                dose: req.dose,
+                                outcome,
+                                queue_wait_secs: dispatch
+                                    .saturating_duration_since(req.arrival)
+                                    .as_secs_f64(),
+                                latency_secs: done
+                                    .saturating_duration_since(req.arrival)
+                                    .as_secs_f64(),
+                            });
+                        }
+                        let served = session.serve_batch(&cells)?;
+                        for (req, (outcome, done)) in live.iter().zip(served) {
+                            out.push(RequestResult {
+                                index: req.index,
+                                worker,
+                                kind: req.kind,
+                                dose: req.dose,
+                                outcome,
+                                queue_wait_secs: dispatch
+                                    .saturating_duration_since(req.arrival)
+                                    .as_secs_f64(),
+                                latency_secs: done
+                                    .saturating_duration_since(req.arrival)
+                                    .as_secs_f64(),
+                            });
+                        }
+                        Ok(out)
+                    })();
                     if tx.send(msg).is_err() {
                         break;
                     }
+                }
+                let mut acc = batch_fills.lock().unwrap();
+                for (fill, n) in acc.iter_mut().zip(&fills) {
+                    *fill += n;
                 }
             });
         }
@@ -1235,9 +1695,11 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         for msg in rx {
             last_done = Instant::now();
             match msg {
-                Ok(r) => {
-                    let index = r.index;
-                    results[index] = Some(r);
+                Ok(window) => {
+                    for r in window {
+                        let index = r.index;
+                        results[index] = Some(r);
+                    }
                 }
                 Err(e) => {
                     // keep draining so every worker can exit cleanly
@@ -1275,8 +1737,11 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         mix: cfg.mix.clone(),
         workers,
         queue_depth: cfg.queue_depth,
+        batch: cfg.batch,
         queue_highwater: queue.highwater(),
+        lane_highwater: queue.lane_highwaters(),
         queue_residue: queue.len(),
+        batch_fills: batch_fills.lock().unwrap().clone(),
         wall_secs,
         drain_secs,
         warmup: cfg.warmup,
@@ -1284,6 +1749,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         results,
         latency_hist,
         slo_p99: cfg.slo_p99,
+        slo_kind_p99: cfg.slo_kind_p99.clone(),
         slo_shed: cfg.slo_shed,
     })
 }
@@ -1414,25 +1880,108 @@ mod tests {
         assert!(a.windows(2).any(|w| w[1] - w[0] < 0.005));
     }
 
+    /// Test request with everything but the routing identity defaulted.
+    fn req(index: usize, kind_idx: usize) -> ServeRequest {
+        ServeRequest {
+            index,
+            kind: WorkloadKind::MatMul { n: 12 },
+            kind_idx,
+            dose: 0,
+            arrival: Instant::now(),
+        }
+    }
+
     #[test]
-    fn bounded_queue_orders_bounds_and_closes() {
-        let q = BoundedQueue::new(2);
+    fn lane_queue_orders_bounds_and_closes() {
+        // single lane, single kind, cap 2, batch 1: the old BoundedQueue
+        // contract — FIFO order, bounded occupancy, drain after close
+        let q = LaneQueue::new(1, 1, 2);
         std::thread::scope(|scope| {
             let q = &q;
             scope.spawn(move || {
                 for i in 0..50 {
-                    q.push(i);
+                    q.push(0, req(i, 0));
                 }
                 q.close();
             });
             let mut got = Vec::new();
-            while let Some(v) = q.pop() {
-                got.push(v);
+            let (mut credit, weights) = (vec![0u64; 1], vec![1.0]);
+            while let Some(reqs) = q.pop_batch(0, 1, &mut credit, &weights) {
+                assert_eq!(reqs.len(), 1, "batch 1 windows are singletons");
+                got.extend(reqs.into_iter().map(|r| r.index));
             }
-            assert_eq!(got, (0..50).collect::<Vec<i32>>());
+            assert_eq!(got, (0..50).collect::<Vec<usize>>());
         });
         assert!(q.highwater() <= 2, "bounded: {}", q.highwater());
-        assert!(q.pop().is_none(), "closed and drained");
+        assert_eq!(q.lane_highwaters().len(), 1);
+        assert!(q.lane_highwaters()[0] <= 2);
+        let (mut credit, weights) = (vec![0u64; 1], vec![1.0]);
+        assert!(
+            q.pop_batch(0, 1, &mut credit, &weights).is_none(),
+            "closed and drained"
+        );
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn lane_queue_forms_same_kind_windows_and_steals() {
+        // two kinds interleaved in one lane: windows must be same-kind
+        // runs; a worker with an empty lane must steal from the other
+        let q = LaneQueue::new(2, 2, 64);
+        for i in 0..8 {
+            q.push(0, req(i, i % 2));
+        }
+        q.close();
+        let (mut credit, weights) = (vec![0u64; 2], vec![0.5, 0.5]);
+        let mut windows = Vec::new();
+        // worker 1's own lane is empty: every window below is stolen
+        while let Some(reqs) = q.pop_batch(1, 8, &mut credit, &weights) {
+            let kinds: HashSet<usize> = reqs.iter().map(|r| r.kind_idx).collect();
+            assert_eq!(kinds.len(), 1, "windows are same-kind");
+            windows.push(reqs.len());
+        }
+        assert_eq!(windows.iter().sum::<usize>(), 8, "nothing lost to stealing");
+        assert_eq!(windows.len(), 2, "one window per kind run: {windows:?}");
+        assert_eq!(credit, vec![4, 4]);
+    }
+
+    #[test]
+    fn lane_queue_dequeue_is_weighted_fair() {
+        // 3:1 weights with equal backlog: the heavy kind is picked first,
+        // but credit accumulation admits the light kind while heavy
+        // backlog still remains — a strict-priority queue never would
+        let q = LaneQueue::new(1, 2, 64);
+        for i in 0..12 {
+            q.push(0, req(i, usize::from(i >= 6)));
+        }
+        q.close();
+        let (mut credit, weights) = (vec![0u64; 2], vec![0.75, 0.25]);
+        let mut order = Vec::new();
+        while let Some(reqs) = q.pop_batch(0, 1, &mut credit, &weights) {
+            order.push(reqs[0].kind_idx);
+        }
+        assert_eq!(order[0], 0, "heavy kind wins the first window");
+        let first_light = order.iter().position(|&k| k == 1).unwrap();
+        assert!(
+            first_light < 6,
+            "light kind admitted before the heavy backlog drains: {order:?}"
+        );
+        assert_eq!(credit, vec![6, 6], "all twelve drained");
+    }
+
+    #[test]
+    fn slo_p99_spec_parses_scalar_and_per_kind_forms() {
+        let (overall, kinds) = parse_slo_p99_spec("2.5").unwrap();
+        assert_eq!(overall, Some(2.5));
+        assert!(kinds.is_empty());
+
+        let (overall, kinds) = parse_slo_p99_spec("matmul=2,jacobi=10").unwrap();
+        assert_eq!(overall, None);
+        assert_eq!(kinds, vec![("matmul".into(), 2.0), ("jacobi".into(), 10.0)]);
+
+        for bad in ["", "matmul=", "=2", "matmul=x", "matmul=2,matmul=3", "abc"] {
+            assert!(parse_slo_p99_spec(bad).is_err(), "{bad:?} should not parse");
+        }
     }
 
     #[test]
@@ -1458,16 +2007,34 @@ mod tests {
         assert_eq!(rep.latency_hist.count(), 6);
 
         let recs = rep.records();
-        assert_eq!(recs.len(), 6 + 2);
+        assert_eq!(recs.len(), 6 + 4);
         assert!(recs[..6].iter().all(|r| r.kind() == "serve_request"));
-        assert_eq!(recs[6].kind(), "serve_latency");
-        assert_eq!(recs[7].kind(), "serve_slo");
-        let slo = &recs[7];
+        assert_eq!(recs[6].kind(), "serve_queue_wait");
+        assert_eq!(recs[7].kind(), "serve_latency");
+        assert_eq!(recs[8].kind(), "batch_fill");
+        assert_eq!(recs[9].kind(), "serve_slo");
+        let fill = &recs[8];
+        assert!(matches!(fill.get("windows"), Some(Json::Int(n)) if *n > 0), "{fill:?}");
+        assert!(fill.get("mean_fill").is_some());
+        let slo = &recs[9];
         assert!(matches!(slo.get("shed"), Some(Json::Int(0))), "{slo:?}");
         assert!(matches!(slo.get("served"), Some(Json::Int(6))), "{slo:?}");
         assert!(slo.get("queue_highwater").is_some());
         assert!(slo.get("queue_residue").is_some());
         assert!(slo.get("drain_secs").is_some());
+        assert!(slo.get("queue_wait_p99_secs").is_some());
+        assert!(matches!(slo.get("batch"), Some(Json::Int(_))), "{slo:?}");
+        // queue wait is a component of latency: for every served request
+        // wait + service <= latency (modulo clock reads, so allow slack)
+        for r in &rep.results {
+            assert!(r.queue_wait_secs >= 0.0);
+            assert!(
+                r.queue_wait_secs <= r.latency_secs + 1e-9,
+                "wait {} > latency {}",
+                r.queue_wait_secs,
+                r.latency_secs
+            );
+        }
     }
 
     #[test]
@@ -1683,11 +2250,90 @@ mod tests {
         // record stream: per-request, then per-kind latency + slo blocks,
         // then the overall histogram and verdict
         let recs = rep.records();
-        assert_eq!(recs.len(), 30 + 3 + 3 + 2);
+        assert_eq!(recs.len(), 30 + 3 + 3 + 4);
         assert!(recs[..30].iter().all(|r| r.kind() == "serve_request"));
         assert!(recs[30..33].iter().all(|r| r.kind() == "serve_kind_latency"));
         assert!(recs[33..36].iter().all(|r| r.kind() == "serve_kind_slo"));
-        assert_eq!(recs[36].kind(), "serve_latency");
-        assert_eq!(recs[37].kind(), "serve_slo");
+        assert_eq!(recs[36].kind(), "serve_queue_wait");
+        assert_eq!(recs[37].kind(), "serve_latency");
+        assert_eq!(recs[38].kind(), "batch_fill");
+        assert_eq!(recs[39].kind(), "serve_slo");
+    }
+
+    #[test]
+    fn serve_per_kind_slo_targets_gate_the_verdict() {
+        // unmissable per-kind targets: verdict met, kind rows annotated
+        let mix = RequestMix::parse("matmul:12:0.5,jacobi:12:5:0.5").unwrap();
+        let cfg = ServeConfig {
+            mix: mix.clone(),
+            policy: RepairPolicy::One,
+            requests: 12,
+            workers: 2,
+            queue_depth: 4,
+            fault_rate: 0.02,
+            seed: 11,
+            slo_kind_p99: vec![("matmul".into(), 10.0), ("jacobi".into(), 10.0)],
+            ..Default::default()
+        };
+        let rep = serve(&cfg).unwrap();
+        assert_eq!(rep.slo_met(), Some(true), "10 s per-kind targets are unmissable");
+        for k in rep.kind_summaries() {
+            assert_eq!(k.slo_p99, Some(10.0));
+            assert_eq!(k.slo_violations, 0);
+            assert_eq!(k.slo_met, Some(true));
+        }
+
+        // a zero-width target on one kind fails the overall verdict even
+        // though the other kind (and no overall target) would pass
+        let rep = ServeReport {
+            slo_kind_p99: vec![("jacobi".into(), 1e-12)],
+            ..rep
+        };
+        assert_eq!(rep.slo_met(), Some(false), "binding kind fails the verdict");
+        let jacobi = rep
+            .kind_summaries()
+            .into_iter()
+            .find(|k| k.kind == WorkloadKind::Jacobi { n: 12, iters: 5 })
+            .unwrap();
+        assert!(jacobi.slo_violations > 0);
+        assert_eq!(jacobi.slo_met, Some(false));
+
+        // unknown kind names are rejected up front
+        let bad = ServeConfig {
+            slo_kind_p99: vec![("stencil".into(), 2.0)],
+            mix,
+            policy: RepairPolicy::One,
+            ..small_cfg(1)
+        };
+        assert!(serve(&bad).is_err(), "SLO for a kind outside the mix");
+    }
+
+    #[test]
+    fn serve_ledger_is_batch_size_invariant() {
+        // same offered load, batch 1 vs batch 5: per-request doses,
+        // plants, traps and repairs must be byte-identical — batching
+        // amortizes fixed costs, never changes repair outcomes
+        // one worker: while it serves a window the closed-loop generator
+        // refills the lane to capacity, so batch 5 reliably forms
+        // multi-request windows
+        let mk = |batch: usize| ServeConfig { batch, requests: 10, ..small_cfg(1) };
+        let a = serve(&mk(1)).unwrap();
+        let b = serve(&mk(5)).unwrap();
+        assert!(
+            b.batch_fills[1..].iter().sum::<u64>() > 0,
+            "batch 5 actually formed multi-request windows: {:?}",
+            b.batch_fills
+        );
+        assert_eq!(a.batch_fills.len(), 1, "batch 1 windows are singletons");
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.index, y.index);
+            assert_eq!(x.dose, y.dose);
+            assert_eq!(x.nans_planted(), y.nans_planted());
+            let (mut xt, mut yt) = (x.traps(), y.traps());
+            xt.trap_cycles_total = 0;
+            yt.trap_cycles_total = 0;
+            assert_eq!(xt, yt, "request {}", x.index);
+            assert_eq!(x.outcome.output_nans(), y.outcome.output_nans());
+        }
     }
 }

@@ -590,90 +590,168 @@ impl ExperimentSession {
     /// cache, so interleaved [`ExperimentSession::run_cell`] calls cannot
     /// corrupt resident-weight provenance.
     pub fn serve_request(&mut self, cell: &ServeCell) -> Result<RequestOutcome> {
-        ensure_servable(cell.workload, cell.protection, cell.policy)?;
-        let resident = self.residents.entry(cell.workload, cell.resident_seed);
+        let mut out = self.serve_batch(std::slice::from_ref(cell))?;
+        let (outcome, _done_at) = out.pop().expect("one-cell window yields one outcome");
+        Ok(outcome)
+    }
+
+    /// Serve a **dispatch window**: a run of requests against the *same*
+    /// resident under the *same* protection and policy, with the fixed
+    /// per-window costs paid once and amortized — one servability check,
+    /// one resident lookup, one trap-domain claim/arm and one
+    /// disarm/release for the whole run ([`crate::trap::TrapGuard`] held
+    /// across the window).  Returns each request's outcome plus the
+    /// instant its handling completed (the server stamps per-request
+    /// latency from it).
+    ///
+    /// Everything *state-bearing* stays strictly request-scoped, which is
+    /// what keeps the repair ledger batch-size invariant: each request
+    /// plants its own dose, runs, patches its own FP-untouched plants in
+    /// the hygiene pass, and (for mutating kinds) restores the pristine
+    /// snapshot — exactly the [`ExperimentSession::serve_request`]
+    /// sequence.  Deferring hygiene or the restore to the end of the
+    /// window would let request *j*'s leftover NaN re-trap inside request
+    /// *j+1*'s compute (CG's right-hand side is only memcpy'd; stencil
+    /// boundary cells are read by neighbor updates), making
+    /// `sigfpe_total` depend on the batch size — see DESIGN.md §4.3.
+    /// Per-request trap counters come from [`TrapGuard::take_stats`]
+    /// (snapshot+reset between requests); the window's arm cost is
+    /// charged to its first request's `service_secs`, so summed service
+    /// time still covers all worker busy time.  The give-up streak
+    /// ([`crate::trap::handler`]) is window-scoped rather than
+    /// request-scoped — under the full repair mechanism every trap acts,
+    /// so the streak resets on every repair either way.
+    ///
+    /// All cells must share one `(kind, protection, policy, seed)` — the
+    /// server's dequeue only forms same-kind windows — and an empty
+    /// window is a no-op.
+    pub fn serve_batch(
+        &mut self,
+        cells: &[ServeCell],
+    ) -> Result<Vec<(RequestOutcome, Instant)>> {
+        let Some(first) = cells.first() else {
+            return Ok(Vec::new());
+        };
+        anyhow::ensure!(
+            cells.iter().all(|c| c.workload == first.workload
+                && c.protection == first.protection
+                && c.policy == first.policy
+                && c.resident_seed == first.resident_seed),
+            "a dispatch window must share one (kind, protection, policy) triple"
+        );
+        ensure_servable(first.workload, first.protection, first.policy)?;
+        let resident = self.residents.entry(first.workload, first.resident_seed);
         let pool = resident.pool.clone();
         let workload: &mut dyn Workload = resident.workload.as_mut();
 
-        // The fault process acts between requests: plant the dose as
-        // paper-pattern NaN words at placement-seed-derived positions.
-        let plant_idxs = plant_dose(workload, cell.dose, cell.placement_seed);
-        let planted = plant_idxs.len() as u64;
-
-        // Arming, proactive scrubbing, and the compute are all inside the
-        // service window — protection overhead is what the latency SLO is
-        // about.
-        let t0 = Instant::now();
-        let guard = cell
+        // One arm for the whole window (reactive protections only); its
+        // cost lands on the first request below.
+        let arm_t0 = Instant::now();
+        let guard = first
             .protection
-            .trap_config(cell.policy)
+            .trap_config(first.policy)
             .map(|tc| TrapGuard::arm_reset(&pool, &tc));
-        let mut scrub_repairs = 0u64;
-        if let Protection::Scrub { period_runs } = cell.protection {
-            if period_runs > 0 && resident.served % period_runs as u64 == 0 {
-                scrub_repairs = Scrubber::new(cell.policy.fallback_value())
-                    .scrub(&pool)
-                    .nans_repaired();
-            }
-        }
-        workload.run();
+        let arm_secs = arm_t0.elapsed().as_secs_f64();
 
-        // Hygiene pass (full paper mechanism only): a planted word the
-        // compute never touched with an FP instruction took no trap, so
-        // reactive repair alone leaves it NaN in resident memory — CG
-        // only memcpy's its right-hand side into r/p, the stencil only
-        // copies its boundary cells.  Patch this request's leftover
-        // plants to the policy value (O(dose), same planted-index
-        // knowledge the shed path uses) so every request closes its own
-        // plants — the per-request ledger-invariance guarantee — and no
-        // stale NaN can corrupt a later response.  Register-only, none,
-        // and scrub keep their documented persistence semantics.
-        let mut hygiene_repairs = 0u64;
-        if matches!(cell.protection, Protection::RegisterMemory) {
-            let repair_bits = cell.policy.fallback_value().to_bits();
-            for &idx in &plant_idxs {
-                // Bit-level NaN test (like repair/memory.rs): the guard
-                // is still armed, and an FP `is_nan()` comparison on the
-                // paper's *signaling* NaN would itself trap — repairing
-                // the probe register and making the check read false.
-                if crate::fp::nan::classify_f64(workload.input_bits(idx)).is_nan() {
-                    workload.poison_input(idx, repair_bits);
-                    hygiene_repairs += 1;
+        let mut out = Vec::with_capacity(cells.len());
+        for (i, cell) in cells.iter().enumerate() {
+            // The fault process acts between requests: plant the dose as
+            // paper-pattern NaN words at placement-seed-derived positions.
+            let plant_idxs = plant_dose(workload, cell.dose, cell.placement_seed);
+            let planted = plant_idxs.len() as u64;
+
+            // Proactive scrubbing and the compute are inside the service
+            // window — protection overhead is what the latency SLO is
+            // about.
+            let t0 = Instant::now();
+            let mut scrub_repairs = 0u64;
+            if let Protection::Scrub { period_runs } = cell.protection {
+                if period_runs > 0 && resident.served % period_runs as u64 == 0 {
+                    scrub_repairs = Scrubber::new(cell.policy.fallback_value())
+                        .scrub(&pool)
+                        .nans_repaired();
                 }
             }
-        }
-        let service_secs = t0.elapsed().as_secs_f64();
-        let traps = guard.as_ref().map(|g| g.stats()).unwrap_or_default();
-        drop(guard);
+            workload.run();
 
-        let output_nans = workload.output_nonfinite();
-
-        // Copy-on-serve: put a mutating resident back to its pristine
-        // bytes after the response was taken.  This also clears any NaNs
-        // the weaker protections left in the inputs, so mutating
-        // residents start every request clean by construction.
-        let (restored_words, restore_secs) = match &resident.pristine {
-            Some(pristine) => {
-                let t_restore = Instant::now();
-                restore_pristine(workload, pristine);
-                (pristine.len() as u64, t_restore.elapsed().as_secs_f64())
+            // Hygiene pass (full paper mechanism only): a planted word
+            // the compute never touched with an FP instruction took no
+            // trap, so reactive repair alone leaves it NaN in resident
+            // memory — CG only memcpy's its right-hand side into r/p,
+            // the stencil only copies its boundary cells.  Patch this
+            // request's leftover plants to the policy value (O(dose),
+            // same planted-index knowledge the shed path uses) so every
+            // request closes its own plants — the per-request
+            // ledger-invariance guarantee — and no stale NaN can corrupt
+            // a later response (or trap inside a *later* request's slice
+            // of this window).  Register-only, none, and scrub keep
+            // their documented persistence semantics.
+            let mut hygiene_repairs = 0u64;
+            if matches!(cell.protection, Protection::RegisterMemory) {
+                let repair_bits = cell.policy.fallback_value().to_bits();
+                for &idx in &plant_idxs {
+                    // Bit-level NaN test (like repair/memory.rs): the
+                    // guard is still armed, and an FP `is_nan()`
+                    // comparison on the paper's *signaling* NaN would
+                    // itself trap — repairing the probe register and
+                    // making the check read false.
+                    if crate::fp::nan::classify_f64(workload.input_bits(idx)).is_nan() {
+                        workload.poison_input(idx, repair_bits);
+                        hygiene_repairs += 1;
+                    }
+                }
             }
-            None => (0, 0.0),
-        };
+            let mut service_secs = t0.elapsed().as_secs_f64();
+            if i == 0 {
+                service_secs += arm_secs;
+            }
+            let traps = guard.as_ref().map(|g| g.take_stats()).unwrap_or_default();
 
-        resident.served += 1;
-        self.cells_run += 1;
+            // Response NaN scan.  `output_nonfinite` uses FP
+            // comparisons, which trap on a signaling NaN left in an
+            // output buffer (e.g. a copied stencil boundary cell under
+            // register-only) — mask the exception around the scan so it
+            // runs in the same FP environment the unbatched path had
+            // after guard drop, and no scan-trap can leak into the next
+            // request's ledger.
+            let output_nans = match &guard {
+                Some(g) => g.with_masked(|| workload.output_nonfinite()),
+                None => workload.output_nonfinite(),
+            };
 
-        Ok(RequestOutcome::Served(ServedOutcome {
-            nans_planted: planted,
-            traps,
-            scrub_repairs,
-            service_secs,
-            output_nans,
-            hygiene_repairs,
-            restored_words,
-            restore_secs,
-        }))
+            // Copy-on-serve: put a mutating resident back to its
+            // pristine bytes after the response was taken.  This also
+            // clears any NaNs the weaker protections left in the inputs,
+            // so mutating residents start every request clean by
+            // construction.
+            let (restored_words, restore_secs) = match &resident.pristine {
+                Some(pristine) => {
+                    let t_restore = Instant::now();
+                    restore_pristine(workload, pristine);
+                    (pristine.len() as u64, t_restore.elapsed().as_secs_f64())
+                }
+                None => (0, 0.0),
+            };
+
+            resident.served += 1;
+            self.cells_run += 1;
+
+            out.push((
+                RequestOutcome::Served(ServedOutcome {
+                    nans_planted: planted,
+                    traps,
+                    scrub_repairs,
+                    service_secs,
+                    output_nans,
+                    hygiene_repairs,
+                    restored_words,
+                    restore_secs,
+                }),
+                Instant::now(),
+            ));
+        }
+        drop(guard);
+        Ok(out)
     }
 
     /// Shed one request whose deadline is already blown (the server's
@@ -1016,6 +1094,58 @@ mod tests {
         bt.trap_cycles_total = 0;
         assert_eq!(at, bt, "request 1's ledger is independent of request 0's fate");
         assert_eq!(a.nans_planted(), b.nans_planted());
+    }
+
+    #[test]
+    fn serve_batch_matches_per_request_ledgers() {
+        // One armed window over three requests must produce the same
+        // per-request ledger as three separately armed requests — the
+        // batch-size-invariance contract (CG exercises the hygiene path:
+        // its right-hand side is never FP-touched).
+        let kind = WorkloadKind::Cg { n: 12, iters: 4 };
+        let cell = |i: u64| ServeCell {
+            workload: kind,
+            resident_seed: 9,
+            protection: Protection::RegisterMemory,
+            policy: RepairPolicy::One,
+            dose: 3,
+            placement_seed: 0x5eed ^ i,
+        };
+
+        let mut one_by_one = ExperimentSession::new();
+        one_by_one.prepare_resident(kind, 9);
+        let solo: Vec<_> = (0..3)
+            .map(|i| one_by_one.serve_request(&cell(i)).unwrap())
+            .collect();
+
+        let mut batched = ExperimentSession::new();
+        batched.prepare_resident(kind, 9);
+        let cells: Vec<_> = (0..3).map(cell).collect();
+        let window = batched.serve_batch(&cells).unwrap();
+        assert_eq!(window.len(), 3);
+
+        for (a, (b, _done)) in solo.iter().zip(window.iter()) {
+            let (mut at, mut bt) = (a.traps(), b.traps());
+            at.trap_cycles_total = 0;
+            bt.trap_cycles_total = 0;
+            assert_eq!(at, bt, "per-request trap ledger must not see the batch");
+            assert_eq!(a.nans_planted(), b.nans_planted());
+            assert_eq!(a.hygiene_repairs(), b.hygiene_repairs());
+            assert_eq!(a.output_nans(), b.output_nans());
+            assert_eq!(a.output_nans(), 0);
+        }
+    }
+
+    #[test]
+    fn serve_batch_rejects_mixed_windows_and_allows_empty() {
+        let mut s = ExperimentSession::new();
+        assert!(s.serve_batch(&[]).unwrap().is_empty());
+        let a = serve_cell(1, 0, Protection::RegisterMemory);
+        let b = ServeCell {
+            workload: WorkloadKind::MatVec { n: 16 },
+            ..a
+        };
+        assert!(s.serve_batch(&[a, b]).is_err(), "mixed-kind window refused");
     }
 
     #[test]

@@ -138,11 +138,22 @@ fn app() -> App {
                 )
                 .opt("queue-depth", Some("32"), "bounded request-queue capacity")
                 .opt(
+                    "batch",
+                    Some("8"),
+                    "max same-kind requests a worker drains into one dispatch window \
+                     (1 = the unbatched per-request path)",
+                )
+                .opt(
                     "arrival",
                     Some("closed"),
                     "arrival process: closed | open:RPS | poisson:RPS",
                 )
-                .opt("slo-p99", None, "p99 latency target in ms (verdict + violation count)")
+                .opt(
+                    "slo-p99",
+                    None,
+                    "p99 latency target in ms — one number for the whole mix, or \
+                     per-kind pairs kind=MS,… (e.g. matmul=2,jacobi=10)",
+                )
                 .opt(
                     "deadline",
                     None,
@@ -181,6 +192,11 @@ fn app() -> App {
                     "serving workers inside each probe (--workers parallelizes the matrix)",
                 )
                 .opt("queue-depth", Some("32"), "bounded request-queue capacity per probe")
+                .opt(
+                    "batch",
+                    Some("8"),
+                    "dispatch-window size inside each probe (modeled and live)",
+                )
                 .opt("slo-p99", Some("5"), "p99 latency target in ms")
                 .opt("slo-shed", Some("0.01"), "max shed fraction at the knee")
                 .opt(
@@ -512,14 +528,35 @@ fn main() -> Result<()> {
             }
         }
         "serve" => {
-            let slo_p99 = m.get_parse_opt::<f64>("slo-p99")?.map(|ms| ms / 1e3);
-            // --deadline defaults to the SLO budget: a request that can
-            // no longer meet the target is shed, not served late.  An
-            // explicit 0 disables shedding.
+            // --slo-p99 is either one overall target or kind=MS pairs,
+            // both in milliseconds.
+            let (slo_p99, slo_kind_p99) = match m.get("slo-p99") {
+                None => (None, Vec::new()),
+                Some(spec) => {
+                    let (overall, kinds) = server::parse_slo_p99_spec(spec)?;
+                    (
+                        overall.map(|ms| ms / 1e3),
+                        kinds
+                            .into_iter()
+                            .map(|(kind, ms)| (kind, ms / 1e3))
+                            .collect::<Vec<_>>(),
+                    )
+                }
+            };
+            // --deadline defaults to the SLO budget — the overall target,
+            // or the loosest per-kind target when only those are set: a
+            // request that can no longer meet the target is shed, not
+            // served late.  An explicit 0 disables shedding.
+            let slo_budget = slo_p99.or_else(|| {
+                slo_kind_p99
+                    .iter()
+                    .map(|&(_, t)| t)
+                    .fold(None, |acc: Option<f64>, t| Some(acc.map_or(t, |a| a.max(t))))
+            });
             let deadline = match m.get_parse_opt::<f64>("deadline")? {
                 Some(ms) if ms == 0.0 => None,
                 Some(ms) => Some(ms / 1e3),
-                None => slo_p99,
+                None => slo_budget,
             };
             // --mix overrides --workload; a bare --workload is the
             // single-kind mix it always was.
@@ -534,10 +571,12 @@ fn main() -> Result<()> {
                 requests: m.get_parse("requests")?,
                 workers,
                 queue_depth: m.get_parse("queue-depth")?,
+                batch: m.get_parse("batch")?,
                 fault_rate: m.get_parse("fault-rate")?,
                 seed: m.get_parse("seed")?,
                 arrival: server::Arrival::parse(m.get_str("arrival")?)?,
                 slo_p99,
+                slo_kind_p99,
                 deadline,
                 warmup: m.get_parse("warmup")?,
                 slo_shed: m.get_parse_opt("slo-shed")?,
@@ -572,6 +611,7 @@ fn main() -> Result<()> {
                 warmup: m.get_parse("warmup")?,
                 serve_workers: m.get_parse("serve-workers")?,
                 queue_depth: m.get_parse("queue-depth")?,
+                batch: m.get_parse("batch")?,
                 seed: m.get_parse("seed")?,
                 slo_p99: m.get_parse::<f64>("slo-p99")? / 1e3,
                 slo_shed: m.get_parse("slo-shed")?,

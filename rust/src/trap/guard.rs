@@ -101,6 +101,30 @@ impl TrapGuard {
     pub fn reset_stats(&self) {
         handler::domain_stats_reset(self.slot);
     }
+
+    /// Snapshot and zero this domain's counters in one step — per-request
+    /// trap attribution when one guard stays armed across a batch of
+    /// requests.  Safe to call between requests: the handler only writes
+    /// counters while this thread is inside the protected compute, so no
+    /// trap can race the snapshot+reset pair.
+    pub fn take_stats(&self) -> handler::TrapStats {
+        handler::domain_stats_take(self.slot)
+    }
+
+    /// Run `f` with this thread's MXCSR restored to its pre-arm state
+    /// (invalid-operation masked again), re-unmasking on the way out.
+    /// FP bookkeeping *between* a batch window's requests — e.g. the
+    /// response NaN scan, whose `is_finite()` comparisons would trap on a
+    /// signaling NaN left in an output buffer — runs in exactly the FP
+    /// environment it would see after the guard dropped, without paying a
+    /// full disarm/re-arm.  The domain stays armed and bound; only the
+    /// exception mask toggles.
+    pub fn with_masked<R>(&self, f: impl FnOnce() -> R) -> R {
+        mxcsr::restore(self.saved_mxcsr);
+        let out = f();
+        let _ = mxcsr::unmask_invalid();
+        out
+    }
 }
 
 impl Drop for TrapGuard {
@@ -309,6 +333,37 @@ mod tests {
                 });
             }
         });
+    }
+
+    /// `take_stats` returns the counts accumulated since the previous
+    /// take and leaves the domain zeroed — the batched-serve attribution
+    /// contract (one armed window, per-request deltas).
+    #[test]
+    fn take_stats_attributes_per_window_deltas() {
+        let pool = ApproxPool::new();
+        let mut a = pool.alloc_f64(32);
+        let mut b = pool.alloc_f64(32);
+        a.fill_with(|i| i as f64 + 1.0);
+        b.fill_with(|_| 1.0);
+
+        let cfg = TrapConfig {
+            policy: RepairPolicy::Constant(1.0),
+            memory_repair: true,
+        };
+        let guard = TrapGuard::arm_reset(&pool, &cfg);
+
+        // "request 1": two NaNs
+        a[3] = f64::from_bits(PAPER_NAN_BITS);
+        a[9] = f64::from_bits(PAPER_NAN_BITS);
+        let _ = crate::workloads::kernels::ddot(a.as_slice(), b.as_slice(), 32);
+        let first = guard.take_stats();
+        assert_eq!(first.sigfpe_total, 2, "{first:#?}");
+
+        // "request 2": clean — the delta must not inherit request 1's traps
+        let _ = crate::workloads::kernels::ddot(a.as_slice(), b.as_slice(), 32);
+        let second = guard.take_stats();
+        drop(guard);
+        assert_eq!(second.sigfpe_total, 0, "{second:#?}");
     }
 
     /// Concurrent guards own distinct domain slots.

@@ -314,6 +314,20 @@ pub(super) fn domain_stats_reset(slot: usize) {
     DOMAINS[slot].counters.reset();
 }
 
+/// Snapshot one domain's counters and zero them in the same call — the
+/// per-request attribution primitive for a guard held across a batch
+/// window ([`super::TrapGuard::take_stats`]).  Not atomic as a pair, but
+/// race-free in practice: the handler only writes these counters while
+/// the arming thread is *inside* the protected compute, and this function
+/// runs on that same thread between requests, when no trap can be in
+/// flight.
+pub(super) fn domain_stats_take(slot: usize) -> TrapStats {
+    let d = &DOMAINS[slot];
+    let out = d.counters.snapshot();
+    d.counters.reset();
+    out
+}
+
 /// Number of currently claimed domains (metrics/tests).
 pub fn domains_in_use() -> usize {
     DOMAINS

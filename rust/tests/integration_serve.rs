@@ -24,6 +24,7 @@ use std::process::Command;
 
 use nanrepair::coordinator::protection::Protection;
 use nanrepair::coordinator::server::{serve, Arrival, RequestMix, ServeConfig};
+use nanrepair::coordinator::session::{ExperimentSession, ServeCell};
 use nanrepair::repair::policy::RepairPolicy;
 use nanrepair::util::report::{Json, Record};
 use nanrepair::workloads::WorkloadKind;
@@ -125,7 +126,7 @@ fn cli_serve_json_emits_requests_and_slo() {
     ]);
     assert!(ok, "stderr: {stderr}");
     let lines: Vec<&str> = stdout.lines().filter(|l| !l.is_empty()).collect();
-    assert_eq!(lines.len(), 12 + 2, "{stdout}");
+    assert_eq!(lines.len(), 12 + 4, "{stdout}");
     for (i, line) in lines[..12].iter().enumerate() {
         let parsed = Json::parse(line).unwrap_or_else(|e| panic!("{e}: {line}"));
         let rec = Record::from_json(&parsed).unwrap();
@@ -134,11 +135,20 @@ fn cli_serve_json_emits_requests_and_slo() {
         assert_eq!(parsed.get("output_nans").and_then(Json::as_f64), Some(0.0));
         assert_eq!(rec.render_jsonl(), *line, "round-trip is byte-exact");
     }
-    let hist = Json::parse(lines[12]).unwrap();
+    let qw = Json::parse(lines[12]).unwrap();
+    assert_eq!(
+        qw.get("record").and_then(Json::as_str),
+        Some("serve_queue_wait"),
+        "{stdout}"
+    );
+    let hist = Json::parse(lines[13]).unwrap();
     assert_eq!(hist.get("record").and_then(Json::as_str), Some("serve_latency"));
     assert_eq!(hist.get("count").and_then(Json::as_f64), Some(12.0));
+    let fill = Json::parse(lines[14]).unwrap();
+    assert_eq!(fill.get("record").and_then(Json::as_str), Some("batch_fill"));
+    assert!(fill.get("windows").and_then(Json::as_f64).unwrap() > 0.0, "{stdout}");
 
-    let slo = Json::parse(lines[13]).unwrap();
+    let slo = Json::parse(lines[15]).unwrap();
     assert_eq!(slo.get("record").and_then(Json::as_str), Some("serve_slo"));
     assert_eq!(slo.get("requests").and_then(Json::as_f64), Some(12.0));
     assert_eq!(slo.get("output_nans").and_then(Json::as_f64), Some(0.0));
@@ -527,7 +537,7 @@ fn cli_serve_mix_emits_per_kind_breakdowns() {
         .filter(|l| !l.is_empty())
         .map(|l| Record::from_json(&Json::parse(l).unwrap_or_else(|e| panic!("{e}: {l}"))).unwrap())
         .collect();
-    assert_eq!(records.len(), 24 + 3 + 3 + 2, "{stdout}");
+    assert_eq!(records.len(), 24 + 3 + 3 + 4, "{stdout}");
     assert!(records[..24].iter().all(|r| r.kind() == "serve_request"));
     assert!(records[24..27].iter().all(|r| r.kind() == "serve_kind_latency"));
     let kind_slos = &records[27..30];
@@ -544,8 +554,10 @@ fn cli_serve_mix_emits_per_kind_breakdowns() {
             "every kind's responses NaN-free: {r:?}"
         );
     }
-    assert_eq!(records[30].kind(), "serve_latency");
-    assert_eq!(records[31].kind(), "serve_slo");
+    assert_eq!(records[30].kind(), "serve_queue_wait");
+    assert_eq!(records[31].kind(), "serve_latency");
+    assert_eq!(records[32].kind(), "batch_fill");
+    assert_eq!(records[33].kind(), "serve_slo");
     // every serve_request carries its stamped kind
     for r in &records[..24] {
         let kind = r.get("kind").and_then(Json::as_str).unwrap();
@@ -634,4 +646,158 @@ fn cli_capacity_mix_deterministic_with_per_kind_ledger() {
     for r in &kind_rows {
         assert_eq!(r.get("rps").and_then(Json::as_f64), Some(knee_rps));
     }
+}
+
+fn grid_cfg(workers: usize, batch: usize) -> ServeConfig {
+    ServeConfig {
+        // a mutating kind (stencil) rides in the mix so the grid also
+        // covers the copy-on-serve restore path inside batched windows
+        mix: RequestMix::parse("matmul:24:0.4,jacobi:24:10:0.3,stencil:24:3:0.3").unwrap(),
+        policy: RepairPolicy::One,
+        protection: Protection::RegisterMemory,
+        requests: 48,
+        workers,
+        queue_depth: 8,
+        batch,
+        fault_rate: 5e-3,
+        seed: 17,
+        arrival: Arrival::Closed,
+        ..Default::default()
+    }
+}
+
+/// Acceptance (batched dispatch, the tentpole invariant): the repair
+/// ledger is **worker-count AND batch-size invariant**.  Across the full
+/// {1, 4, 8} workers × {1, 4, 16} batch grid, every request's
+/// (kind, dose, planted, trap counters modulo the rdtsc cycle tally,
+/// output NaNs) stamp and every per-kind summary ledger are identical to
+/// the serial unbatched run — doses and placements derive from
+/// `(seed, index)` alone, and hygiene + pristine restore stay
+/// request-scoped inside a window (DESIGN.md §4.3).
+#[test]
+fn batched_ledger_invariant_across_workers_and_batch_grid() {
+    let baseline = serve(&grid_cfg(1, 1)).unwrap();
+    assert_eq!(baseline.results.len(), 48);
+    assert_eq!(baseline.output_nans_total(), 0);
+    assert!(baseline.repairs_total() > 0);
+    for workers in [1usize, 4, 8] {
+        for batch in [1usize, 4, 16] {
+            let rep = serve(&grid_cfg(workers, batch)).unwrap();
+            let tag = format!("workers={workers} batch={batch}");
+            assert_eq!(rep.results.len(), 48, "{tag}");
+            assert_eq!(rep.batch_fills.len(), batch, "{tag}");
+            for (s, p) in baseline.results.iter().zip(&rep.results) {
+                assert_eq!(s.index, p.index, "{tag}");
+                assert_eq!(s.kind, p.kind, "{tag}: request {} kind", s.index);
+                assert_eq!(s.dose, p.dose, "{tag}: request {} dose", s.index);
+                assert_eq!(
+                    s.nans_planted(),
+                    p.nans_planted(),
+                    "{tag}: request {} planted words",
+                    s.index
+                );
+                assert_eq!(p.output_nans(), 0, "{tag}: request {}", s.index);
+                let (mut st, mut pt) = (s.traps(), p.traps());
+                st.trap_cycles_total = 0;
+                pt.trap_cycles_total = 0;
+                assert_eq!(st, pt, "{tag}: request {} trap counters", s.index);
+            }
+            let (ks, kp) = (baseline.kind_summaries(), rep.kind_summaries());
+            assert_eq!(ks.len(), kp.len(), "{tag}");
+            for (a, b) in ks.iter().zip(&kp) {
+                assert_eq!(a.kind, b.kind, "{tag}");
+                assert_eq!(a.requests, b.requests, "{tag}: {} split", a.kind);
+                assert_eq!(a.dose_total, b.dose_total, "{tag}: {} dose", a.kind);
+                assert_eq!(a.nans_planted, b.nans_planted, "{tag}: {} plants", a.kind);
+                assert_eq!(a.sigfpe_total, b.sigfpe_total, "{tag}: {} traps", a.kind);
+                assert_eq!(
+                    a.repairs_total, b.repairs_total,
+                    "{tag}: {} per-kind repair ledger must be batch-size invariant",
+                    a.kind
+                );
+            }
+        }
+    }
+}
+
+/// Acceptance (batched dispatch + mutation hazard): a mutating-kind
+/// resident is byte-identical to its pristine snapshot after multi-request
+/// batched windows interleaved with sheds — the copy-on-serve restore and
+/// the shed patch-back both stay request-scoped inside a window, so no
+/// request in a batch ever observes its predecessor's mutations.
+#[test]
+fn batched_serve_and_shed_keep_mutating_resident_pristine() {
+    let workload = WorkloadKind::Stencil { n: 12, steps: 3 };
+    let cell = |dose: u64, placement_seed: u64| ServeCell {
+        workload,
+        resident_seed: 11,
+        protection: Protection::RegisterMemory,
+        policy: RepairPolicy::Zero,
+        dose,
+        placement_seed,
+    };
+    let mut s = ExperimentSession::new();
+    s.prepare_resident(workload, 11);
+    let pristine = s.residents().pristine(workload).unwrap().to_vec();
+
+    // two 4-request windows with sheds interleaved between them
+    let window: Vec<ServeCell> = (0..4).map(|i| cell(3, 100 + i)).collect();
+    let served = s.serve_batch(&window).unwrap();
+    assert_eq!(served.len(), 4);
+    for (out, _) in &served {
+        assert_eq!(out.output_nans(), 0);
+        assert!(out.restored_words() > 0, "stencil restores per request");
+    }
+    for i in 0..3 {
+        let out = s.shed_request(&cell(2, 200 + i)).unwrap();
+        assert_eq!(out.shed_repairs(), out.nans_planted());
+    }
+    s.serve_batch(&window).unwrap();
+
+    assert_eq!(
+        s.residents().input_bits(workload).unwrap(),
+        pristine,
+        "mutating resident byte-identical after batched serve + shed"
+    );
+}
+
+/// Acceptance (tentpole smoke at scale): 1k offered concurrency — a
+/// closed-loop flood at `--queue-depth 1024` across 8 workers with
+/// batch=32 windows — drains clean: zero queue residue, zero NaNs in
+/// responses, and **zero orphan SIGFPEs** (no trap ever escaped its
+/// window's armed domain, even with windows spanning 32 requests).
+#[test]
+fn high_offered_concurrency_smoke_no_orphan_sigfpes() {
+    let orphans_before = nanrepair::trap::handler::orphan_sigfpe_total();
+    let rep = serve(&ServeConfig {
+        mix: RequestMix::single(WorkloadKind::MatMul { n: 16 }),
+        protection: Protection::RegisterMemory,
+        requests: 2000,
+        workers: 8,
+        queue_depth: 1024,
+        batch: 32,
+        fault_rate: 1e-3,
+        seed: 29,
+        arrival: Arrival::Closed,
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(rep.results.len(), 2000);
+    assert_eq!(rep.queue_residue, 0, "clean drain");
+    assert_eq!(rep.output_nans_total(), 0);
+    assert!(rep.dose_total() > 0);
+    assert_eq!(
+        nanrepair::trap::handler::orphan_sigfpe_total(),
+        orphans_before,
+        "no SIGFPE escaped an armed trap domain"
+    );
+    assert_eq!(rep.batch_fills.len(), 32);
+    let windows: u64 = rep.batch_fills.iter().sum();
+    assert!(windows > 0);
+    assert!(
+        windows <= 2000,
+        "windows can never outnumber requests: {windows}"
+    );
+    assert_eq!(rep.lane_highwater.len(), 8, "one lane per worker");
+    assert!(rep.queue_highwater >= rep.lane_highwater.iter().copied().max().unwrap());
 }
