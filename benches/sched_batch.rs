@@ -34,6 +34,13 @@
 //! stream through batch-8 windows and prints the p999 tail so batching
 //! regressions that trade tail latency for throughput cannot hide.
 //!
+//! The data-plane kernel sweep rides in front: `scan1mib` times the
+//! `fp::scan` bulk kernels over a 1 MiB buffer — the per-word classify
+//! the kernels replaced vs the chunked scalar kernel vs the dispatched
+//! (AVX2 when available) kernel, clean and 1e-4-NaN-dirty — and prints
+//! GB/s per variant.  When the dispatch is AVX2 the printed headline
+//! asserts the dispatched clean-scan runs ≥ 2x the per-word classify.
+//!
 //! `cargo bench --bench sched_batch` (env NANREPAIR_BENCH_QUICK=1 for CI,
 //! NANREPAIR_SCHED_CELLS=N to override the batch size,
 //! NANREPAIR_BENCH_JSON=FILE to write the records as a JSON baseline).
@@ -50,6 +57,7 @@ use nanrepair::coordinator::capacity::{self, CapacityConfig};
 use nanrepair::coordinator::protection::Protection;
 use nanrepair::coordinator::scheduler;
 use nanrepair::coordinator::server::{self, Arrival, RequestMix, ServeConfig};
+use nanrepair::fp::scan;
 use nanrepair::repair::policy::RepairPolicy;
 use nanrepair::workloads::WorkloadKind;
 
@@ -197,6 +205,47 @@ fn serve_batch_sweep(r: &mut Runner, requests: usize, n: usize) -> Vec<(usize, f
     throughput
 }
 
+/// Bench the `fp::scan` data-plane kernels over a 1 MiB word buffer: the
+/// per-word classify they replaced vs the chunked scalar kernel vs the
+/// dispatched kernel, on a clean buffer (the fast path every response
+/// scan takes) and a 1e-4-NaN-dirty one.  Returns (variant, GB/s).
+fn scan_sweep(r: &mut Runner) -> Vec<(String, f64)> {
+    const WORDS: usize = 131_072; // 1 MiB of f64 words
+    const PASSES: usize = 8; // sweeps per timed sample, for stable clocks
+    let clean: Vec<u64> = (0..WORDS).map(|i| (1.0 + i as f64).to_bits()).collect();
+    let mut dirty = clean.clone();
+    let mut rng = nanrepair::util::rng::Pcg64::seed(7);
+    for _ in 0..WORDS / 10_000 {
+        dirty[rng.index(WORDS)] = nanrepair::fp::nan::PAPER_NAN_BITS;
+    }
+    let dirty_count = scan::count_nonfinite_scalar(&dirty);
+    assert!(dirty_count > 0, "the dirty buffer must hold planted NaNs");
+    let gbs = |mean: f64| (WORDS * 8 * PASSES) as f64 / mean / 1e9;
+
+    let mut out = Vec::new();
+    let mut variant = |r: &mut Runner, name: &str, mut scan_fn: Box<dyn FnMut() -> u64>, want| {
+        let res = r.bench(
+            &format!("scan1mib/{name}"),
+            Bench::new(move || {
+                let mut total = 0u64;
+                for _ in 0..PASSES {
+                    total += scan_fn();
+                }
+                assert_eq!(total, want * PASSES as u64);
+            })
+            .samples(5)
+            .budget(1.0),
+        );
+        out.push((name.to_string(), gbs(res.summary.mean)));
+    };
+    let (a, b, c, d) = (clean.clone(), clean.clone(), clean, dirty);
+    variant(r, "perword_clean", Box::new(move || scan::count_nonfinite_perword(&a)), 0);
+    variant(r, "scalar_clean", Box::new(move || scan::count_nonfinite_scalar(&b)), 0);
+    variant(r, "dispatch_clean", Box::new(move || scan::count_nonfinite(&c)), 0);
+    variant(r, "dispatch_dirty", Box::new(move || scan::count_nonfinite(&d)), dirty_count);
+    out
+}
+
 fn print_throughput(title: &str, unit: &str, throughput: &[(usize, f64)]) {
     println!("\n{title} ({unit}):");
     let (_, serial) = throughput[0];
@@ -215,6 +264,10 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(16);
     let n = if r.is_quick() { 32 } else { 96 };
+
+    // data-plane kernels first: the scan throughput every serve-path
+    // sweep (response scan, scrub, hygiene) is built on
+    let scans = scan_sweep(&mut r);
 
     // non-trap: pure scheduler/session overhead
     let plain = sweep(&mut r, "batch", cells, n, Protection::None);
@@ -356,6 +409,31 @@ fn main() {
         .budget(1.0),
     );
     r.finish();
+
+    println!("\ndata-plane scan over 1 MiB ({} dispatch):", scan::dispatch_label());
+    for (name, g) in &scans {
+        println!("  {name:14} {g:8.2} GB/s");
+    }
+    let rate = |name: &str| {
+        scans
+            .iter()
+            .find(|(v, _)| v == name)
+            .map(|&(_, g)| g)
+            .expect("scan variant present")
+    };
+    if scan::dispatches_avx2() {
+        let (per, disp) = (rate("perword_clean"), rate("dispatch_clean"));
+        assert!(
+            disp >= 2.0 * per,
+            "dispatched clean scan must run >= 2x the per-word classify \
+             ({disp:.2} vs {per:.2} GB/s)"
+        );
+        println!(
+            "headline: dispatched clean scan runs {:.2}x the per-word classify \
+             ({disp:.2} vs {per:.2} GB/s; acceptance gate >= 2.00x)",
+            disp / per
+        );
+    }
 
     print_throughput("non-trap throughput", "cells/s", &plain);
     print_throughput("trap-armed throughput", "cells/s", &trap);

@@ -8,7 +8,7 @@
 //! with the configured policy value.  The coordinator interleaves scrub
 //! passes with compute at a configurable period.
 
-use crate::fp::nan::{classify_f64, NanClass};
+use crate::fp::scan;
 
 use super::pool::ApproxPool;
 
@@ -51,10 +51,11 @@ impl Scrubber {
     /// coordinator scrubs between compute phases, like a real scrub engine
     /// arbitrating with demand traffic).
     pub fn scrub(&self, pool: &ApproxPool) -> ScrubReport {
-        // §Perf: slice-based sweep with a branch-free NaN pre-filter
-        // (exponent-mask compare) so the common all-clean case runs at
-        // memory bandwidth; classification/repair happens only on hits.
-        const EXP: u64 = crate::fp::bits::F64Bits::EXP_MASK;
+        // §Perf: each region sweeps through the bulk data-plane kernel
+        // ([`crate::fp::scan::repair_nans_in_place`]) — SIMD-dispatched
+        // exponent-mask classify, so the common all-clean case runs at
+        // memory bandwidth and only NaN-bearing chunks pay the repair
+        // blend (DESIGN.md §4.4).
         let mut report = ScrubReport::default();
         let repair_bits = self.repair_value.to_bits();
         for region in pool.regions() {
@@ -63,23 +64,9 @@ impl Scrubber {
             let slice =
                 unsafe { std::slice::from_raw_parts_mut(region.start as *mut u64, words) };
             report.words_scanned += words as u64;
-            for w in slice.iter_mut() {
-                let bits = *w;
-                if bits & EXP == EXP {
-                    // exponent all ones: Inf or NaN — rare path
-                    match classify_f64(bits) {
-                        NanClass::NotNan => {}
-                        NanClass::Signaling => {
-                            report.snans_repaired += 1;
-                            *w = repair_bits;
-                        }
-                        NanClass::Quiet => {
-                            report.qnans_repaired += 1;
-                            *w = repair_bits;
-                        }
-                    }
-                }
-            }
+            let counts = scan::repair_nans_in_place(slice, repair_bits);
+            report.snans_repaired += counts.snans;
+            report.qnans_repaired += counts.qnans;
         }
         report
     }

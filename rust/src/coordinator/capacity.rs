@@ -156,13 +156,15 @@ pub struct ServiceModel {
     /// Modeled compute rate in GFLOP/s.
     pub gflops: f64,
     /// Fixed per-request overhead that batching cannot amortize
-    /// (plant, hygiene, per-request bookkeeping), in seconds.
+    /// (allocation-free plant, hygiene, the kernel response scan,
+    /// per-request bookkeeping), in seconds.
     pub base_secs: f64,
     /// Fixed per-*window* overhead (trap-domain arm/disarm, MXCSR
     /// round-trip, dispatch hand-off), in seconds — paid once per
     /// dispatch window, so a full batch divides it by the fill
-    /// (`arm_secs + base_secs` at batch 1 equals the historical
-    /// 20 µs per-request dispatch constant).
+    /// (`arm_secs + base_secs` at batch 1 is the 18 µs per-request
+    /// dispatch constant of the vectorized data plane; the historical
+    /// per-word scan path cost 20 µs).
     pub arm_secs: f64,
     /// Cost per trap round-trip (decode, repair, resume), in seconds.
     pub trap_secs: f64,
@@ -170,10 +172,15 @@ pub struct ServiceModel {
     /// seconds, on top of `trap_secs` per planted word.
     pub shed_base_secs: f64,
     /// Scrub-sweep cost per resident word, in seconds (paid every
-    /// `scrub:K` cadence hit).
+    /// `scrub:K` cadence hit).  Models the bulk kernel sweep
+    /// ([`crate::fp::scan`]): an exponent-mask classify at SIMD width,
+    /// not a per-word FP classify through a virtual call.
     pub scrub_word_secs: f64,
     /// Copy-on-serve restore cost per input word, in seconds (paid by
-    /// every served request of an input-mutating kind).
+    /// every served request of an input-mutating kind).  Models the
+    /// region-bulk `copy_from_slice` restore — a memcpy at memory
+    /// bandwidth, an order of magnitude under the retired per-word
+    /// `poison_input` loop it replaced.
     pub restore_word_secs: f64,
 }
 
@@ -181,12 +188,12 @@ impl Default for ServiceModel {
     fn default() -> Self {
         Self {
             gflops: 1.0,
-            base_secs: 8e-6,
+            base_secs: 6e-6,
             arm_secs: 12e-6,
             trap_secs: 4e-6,
             shed_base_secs: 2e-6,
-            scrub_word_secs: 2e-9,
-            restore_word_secs: 1e-9,
+            scrub_word_secs: 4e-10,
+            restore_word_secs: 1e-10,
         }
     }
 }

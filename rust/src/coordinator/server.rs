@@ -830,6 +830,13 @@ impl RequestResult {
         self.outcome.restore_secs()
     }
 
+    /// Seconds the worker was busy with this request end to end (service
+    /// + restore when served, plant-and-patch when shed) — what sums to
+    /// the `serve_slo` utilization numerator.
+    pub fn busy_secs(&self) -> f64 {
+        self.outcome.busy_secs()
+    }
+
     /// The per-request `serve_request` record.
     pub fn to_record(&self) -> Record {
         let traps = self.outcome.traps();
@@ -848,6 +855,7 @@ impl RequestResult {
             .field("shed_repairs", self.outcome.shed_repairs())
             .field("service_secs", self.outcome.service_secs())
             .field("restore_secs", self.outcome.restore_secs())
+            .field("busy_secs", self.outcome.busy_secs())
             .field("queue_wait_secs", self.queue_wait_secs)
             .field("latency_secs", self.latency_secs)
             .field("output_nans", self.outcome.output_nans())
@@ -1098,6 +1106,28 @@ impl ServeReport {
         self.results.iter().map(|r| r.restore_secs()).sum()
     }
 
+    /// Total worker busy seconds across all requests (served: service +
+    /// restore; shed: plant-and-patch).  Every per-request cost the
+    /// session stamps lands in exactly one `busy_secs`, so this is the
+    /// whole run's busy time with nothing double-counted.
+    pub fn busy_secs_total(&self) -> f64 {
+        self.results.iter().map(|r| r.busy_secs()).sum()
+    }
+
+    /// Fraction of worker×wall capacity spent busy — the utilization
+    /// behind the SLO knee: ≈1.0 means workers were saturated (queueing
+    /// dominates latency), well under 1.0 means arrival gaps dominated.
+    /// Can exceed 1.0 slightly: per-request stamps include wall time
+    /// before the readiness barrier that `wall_secs` excludes.
+    pub fn utilization(&self) -> f64 {
+        let capacity = self.workers as f64 * self.wall_secs;
+        if capacity == 0.0 {
+            0.0
+        } else {
+            self.busy_secs_total() / capacity
+        }
+    }
+
     /// Per-kind breakdown of the run, in mix order — the `serve_kind_slo`
     /// record source.  Counts cover the whole run; latency quantiles
     /// cover measured served requests of the kind (like the overall
@@ -1280,6 +1310,8 @@ impl ServeReport {
             .field("sigfpe_total", self.sigfpe_total())
             .field("repairs_total", self.repairs_total())
             .field("restore_secs_total", self.restore_secs_total())
+            .field("busy_secs_total", self.busy_secs_total())
+            .field("utilization", self.utilization())
             .field("output_nans", self.output_nans_total());
         if let Some(d) = self.deadline {
             rec = rec.field("deadline_secs", d);
@@ -1351,6 +1383,7 @@ impl ServeReport {
         t.row(&["wall time".into(), fmt_secs(self.wall_secs)]);
         t.row(&["drain time".into(), fmt_secs(self.drain_secs)]);
         t.row(&["throughput".into(), format!("{:.1} req/s", self.throughput_rps())]);
+        t.row(&["worker utilization".into(), format!("{:.1}%", self.utilization() * 100.0)]);
         t.row(&[
             "served / shed".into(),
             format!("{} / {}", self.served_total(), self.shed_total()),
@@ -2035,6 +2068,18 @@ mod tests {
                 r.latency_secs
             );
         }
+        // busy-time accounting adds up: per request busy = service +
+        // restore (served; shed requests stamp their handling instead),
+        // and the slo record's total/utilization derive from exactly it
+        let mut busy_total = 0.0;
+        for r in &rep.results {
+            assert_eq!(r.busy_secs(), r.service_secs() + r.restore_secs());
+            busy_total += r.busy_secs();
+        }
+        assert_eq!(rep.busy_secs_total(), busy_total);
+        assert!(rep.utilization() > 0.0);
+        assert!(matches!(slo.get("busy_secs_total"), Some(Json::Num(b)) if *b == busy_total));
+        assert!(slo.get("utilization").is_some(), "{slo:?}");
     }
 
     #[test]

@@ -269,6 +269,19 @@ impl RequestOutcome {
             RequestOutcome::Shed(_) => 0.0,
         }
     }
+
+    /// Seconds the worker was busy with this request end to end: the
+    /// protected window plus the copy-on-serve restore when served
+    /// (hygiene runs inside the window, so it is already in
+    /// `service_secs`), or the plant-and-patch handling when shed.
+    /// Summed across a serve run this is exactly the worker busy time
+    /// behind the `serve_slo` utilization field.
+    pub fn busy_secs(&self) -> f64 {
+        match self {
+            RequestOutcome::Served(o) => o.service_secs + o.restore_secs,
+            RequestOutcome::Shed(o) => o.shed_secs,
+        }
+    }
 }
 
 /// The serving residents of one session: one cached workload per
@@ -306,9 +319,11 @@ impl ResidentSet {
             let pool = ApproxPool::new();
             let workload = kind.build(&pool, seed);
             let pristine = kind.mutates_inputs().then(|| {
-                (0..workload.input_len())
-                    .map(|i| workload.input_bits(i))
-                    .collect()
+                let mut snap = Vec::with_capacity(workload.input_len());
+                for region in 0..workload.input_regions() {
+                    snap.extend_from_slice(workload.input_words(region));
+                }
+                snap
             });
             Resident {
                 pool,
@@ -357,12 +372,64 @@ impl ResidentSet {
     }
 }
 
-/// Write `pristine` back over the workload's input words (the
-/// copy-on-serve restore: one store per input word through the same
-/// flat-index path the injector uses).
+/// Write `pristine` back over the workload's input words — the
+/// copy-on-serve restore, one bulk `copy_from_slice` per input region
+/// (a memory-bandwidth memcpy) instead of one virtual `poison_input`
+/// call per word.  The regions concatenate to exactly the flat index
+/// space the snapshot was captured from ([`Workload::input_regions`]).
 fn restore_pristine(workload: &mut dyn Workload, pristine: &[u64]) {
-    for (i, &bits) in pristine.iter().enumerate() {
-        workload.poison_input(i, bits);
+    let mut off = 0;
+    for region in 0..workload.input_regions() {
+        let words = workload.input_words_mut(region);
+        let next = off + words.len();
+        words.copy_from_slice(&pristine[off..next]);
+        off = next;
+    }
+    debug_assert_eq!(off, pristine.len(), "pristine snapshot length mismatch");
+}
+
+/// Session-owned scratch for dose placement: the serve/shed plant path
+/// reuses these buffers across requests and windows instead of paying a
+/// fresh `Vec` allocation plus sort per request.  [`dose_indices`] stays
+/// as the allocating derivation the capacity planner shares — both yield
+/// the same distinct-index *set* for the same draws.
+#[derive(Default)]
+struct DoseScratch {
+    /// Distinct planted indices of the current request, in first-draw
+    /// order (readable until the next [`DoseScratch::fill`]).
+    indices: Vec<usize>,
+    /// One bit per flat input word; bit set ⇔ index is in `indices`.
+    /// Cleared index-by-index after each request (O(dose), not O(len)),
+    /// and never shrunk, so it settles at the largest resident size.
+    mask: Vec<u64>,
+}
+
+impl DoseScratch {
+    /// Refill with the distinct indices of `dose` placement draws over
+    /// `len` words — the same PCG draw sequence as [`dose_indices`],
+    /// deduplicated through the bitmap instead of sort+dedup (identical
+    /// index set, first-draw order instead of sorted).
+    fn fill(&mut self, len: usize, dose: u64, placement_seed: u64) {
+        for &idx in &self.indices {
+            self.mask[idx >> 6] &= !(1u64 << (idx & 63));
+        }
+        self.indices.clear();
+        if dose == 0 {
+            return;
+        }
+        let mask_words = len.div_ceil(64);
+        if self.mask.len() < mask_words {
+            self.mask.resize(mask_words, 0);
+        }
+        let mut rng = crate::util::rng::Pcg64::seed(placement_seed);
+        for _ in 0..dose {
+            let idx = rng.index(len);
+            let bit = 1u64 << (idx & 63);
+            if self.mask[idx >> 6] & bit == 0 {
+                self.mask[idx >> 6] |= bit;
+                self.indices.push(idx);
+            }
+        }
     }
 }
 
@@ -372,6 +439,9 @@ pub struct ExperimentSession {
     cache: HashMap<WorkloadKind, CachedWorkload>,
     residents: ResidentSet,
     cells_run: u64,
+    /// Dose-placement scratch shared by the serve and shed paths — the
+    /// request hot path allocates nothing per request once warm.
+    dose_scratch: DoseScratch,
 }
 
 impl ExperimentSession {
@@ -616,8 +686,11 @@ impl ExperimentSession {
     /// `sigfpe_total` depend on the batch size — see DESIGN.md §4.3.
     /// Per-request trap counters come from [`TrapGuard::take_stats`]
     /// (snapshot+reset between requests); the window's arm cost is
-    /// charged to its first request's `service_secs`, so summed service
-    /// time still covers all worker busy time.  The give-up streak
+    /// charged to its first request's `service_secs`, and the
+    /// copy-on-serve restore is stamped separately as `restore_secs`, so
+    /// per-request [`RequestOutcome::busy_secs`] (service + restore) is
+    /// what sums to total worker busy time — the `serve_slo`
+    /// utilization accounting.  The give-up streak
     /// ([`crate::trap::handler`]) is window-scoped rather than
     /// request-scoped — under the full repair mechanism every trap acts,
     /// so the streak resets on every repair either way.
@@ -656,9 +729,10 @@ impl ExperimentSession {
         let mut out = Vec::with_capacity(cells.len());
         for (i, cell) in cells.iter().enumerate() {
             // The fault process acts between requests: plant the dose as
-            // paper-pattern NaN words at placement-seed-derived positions.
-            let plant_idxs = plant_dose(workload, cell.dose, cell.placement_seed);
-            let planted = plant_idxs.len() as u64;
+            // paper-pattern NaN words at placement-seed-derived positions
+            // (session scratch — no per-request allocation).
+            let planted =
+                plant_dose(workload, &mut self.dose_scratch, cell.dose, cell.placement_seed);
 
             // Proactive scrubbing and the compute are inside the service
             // window — protection overhead is what the latency SLO is
@@ -689,7 +763,7 @@ impl ExperimentSession {
             let mut hygiene_repairs = 0u64;
             if matches!(cell.protection, Protection::RegisterMemory) {
                 let repair_bits = cell.policy.fallback_value().to_bits();
-                for &idx in &plant_idxs {
+                for &idx in &self.dose_scratch.indices {
                     // Bit-level NaN test (like repair/memory.rs): the
                     // guard is still armed, and an FP `is_nan()`
                     // comparison on the paper's *signaling* NaN would
@@ -707,17 +781,16 @@ impl ExperimentSession {
             }
             let traps = guard.as_ref().map(|g| g.take_stats()).unwrap_or_default();
 
-            // Response NaN scan.  `output_nonfinite` uses FP
-            // comparisons, which trap on a signaling NaN left in an
-            // output buffer (e.g. a copied stencil boundary cell under
-            // register-only) — mask the exception around the scan so it
-            // runs in the same FP environment the unbatched path had
-            // after guard drop, and no scan-trap can leak into the next
-            // request's ledger.
-            let output_nans = match &guard {
-                Some(g) => g.with_masked(|| workload.output_nonfinite()),
-                None => workload.output_nonfinite(),
-            };
+            // Response NaN scan.  The default `output_nonfinite` sweeps
+            // the output words with the integer-only bulk kernel
+            // ([`crate::fp::scan`]), which executes no FP instruction —
+            // trap-free by construction even on a signaling NaN left in
+            // an output buffer (e.g. a copied stencil boundary cell
+            // under register-only), so it runs inside the armed window
+            // with no MXCSR save/restore.  `TrapGuard::with_masked`
+            // stays available as the FP-scan test oracle (DESIGN.md
+            // §4.4).
+            let output_nans = workload.output_nonfinite();
 
             // Copy-on-serve: put a mutating resident back to its
             // pristine bytes after the response was taken.  This also
@@ -788,16 +861,16 @@ impl ExperimentSession {
         let workload: &mut dyn Workload = resident.workload.as_mut();
 
         let t0 = Instant::now();
-        let idxs = plant_dose(workload, cell.dose, cell.placement_seed);
+        let planted = plant_dose(workload, &mut self.dose_scratch, cell.dose, cell.placement_seed);
         match &resident.pristine {
             Some(pristine) => {
-                for &idx in idxs.iter() {
+                for &idx in &self.dose_scratch.indices {
                     workload.poison_input(idx, pristine[idx]);
                 }
             }
             None => {
                 let repair_bits = cell.policy.fallback_value().to_bits();
-                for &idx in idxs.iter() {
+                for &idx in &self.dose_scratch.indices {
                     workload.poison_input(idx, repair_bits);
                 }
             }
@@ -806,8 +879,8 @@ impl ExperimentSession {
         self.cells_run += 1;
 
         Ok(RequestOutcome::Shed(ShedOutcome {
-            nans_planted: idxs.len() as u64,
-            shed_repairs: idxs.len() as u64,
+            nans_planted: planted,
+            shed_repairs: planted,
             shed_secs,
         }))
     }
@@ -831,15 +904,23 @@ pub(crate) fn dose_indices(len: usize, dose: u64, placement_seed: u64) -> Vec<us
 }
 
 /// Plant `dose` paper-pattern NaN words at placement-seed-derived input
-/// positions; returns the distinct indices poisoned.  The single
-/// planting path `serve_request` and `shed_request` share, so a
-/// request's fault footprint is identical either way.
-fn plant_dose(workload: &mut dyn Workload, dose: u64, placement_seed: u64) -> Vec<usize> {
-    let idxs = dose_indices(workload.input_len(), dose, placement_seed);
-    for &idx in &idxs {
+/// positions through the session's [`DoseScratch`] (allocation-free once
+/// warm); returns how many distinct words were poisoned, and leaves the
+/// planted indices readable in `scratch.indices` until the next fill.
+/// The single planting path `serve_batch` and `shed_request` share, so a
+/// request's fault footprint is identical either way — and the same
+/// index set [`dose_indices`] derives for the capacity planner.
+fn plant_dose(
+    workload: &mut dyn Workload,
+    scratch: &mut DoseScratch,
+    dose: u64,
+    placement_seed: u64,
+) -> u64 {
+    scratch.fill(workload.input_len(), dose, placement_seed);
+    for &idx in &scratch.indices {
         workload.poison_input(idx, crate::fp::nan::PAPER_NAN_BITS);
     }
-    idxs
+    scratch.indices.len() as u64
 }
 
 #[cfg(test)]
@@ -1253,6 +1334,38 @@ mod tests {
                 s.residents().input_bits(workload).unwrap(),
                 pristine,
                 "{workload}: resident byte-identical after 4 serve + 4 shed requests"
+            );
+        }
+    }
+
+    /// The allocation-free scratch fill yields exactly the index *set*
+    /// `dose_indices` derives (the capacity planner's shared derivation)
+    /// — including across refills of different lengths, which must leave
+    /// no stale mask bits behind.
+    #[test]
+    fn dose_scratch_matches_dose_indices_set() {
+        let mut scratch = DoseScratch::default();
+        for (len, dose, seed) in [
+            (100usize, 0u64, 1u64),
+            (100, 7, 2),
+            (64, 64, 3),
+            (1000, 900, 4),
+            (17, 5, 5),
+            (50, 10, 6), // shrinking len after a larger fill
+        ] {
+            scratch.fill(len, dose, seed);
+            let mut got = scratch.indices.clone();
+            got.sort_unstable();
+            assert_eq!(
+                got,
+                dose_indices(len, dose, seed),
+                "len {len} dose {dose} seed {seed}"
+            );
+            let set_bits: u64 = scratch.mask.iter().map(|w| w.count_ones() as u64).sum();
+            assert_eq!(
+                set_bits,
+                scratch.indices.len() as u64,
+                "mask must hold exactly the current indices"
             );
         }
     }

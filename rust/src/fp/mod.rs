@@ -1,10 +1,12 @@
-//! IEEE-754 bit-level utilities: NaN taxonomy, bit-flip modelling, and the
+//! IEEE-754 bit-level utilities: NaN taxonomy, bit-flip modelling, the
 //! analytical probability model for "a random bit flip turns a float into a
-//! NaN" that motivates the paper (§2.2).
+//! NaN" that motivates the paper (§2.2), and the bulk integer-only
+//! scan/repair kernels the serving data plane runs on ([`scan`]).
 
 pub mod analytics;
 pub mod bits;
 pub mod nan;
+pub mod scan;
 
 pub use bits::{F32Bits, F64Bits};
 pub use nan::{classify_f32, classify_f64, NanClass};

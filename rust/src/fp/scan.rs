@@ -1,0 +1,516 @@
+//! Bulk NaN scan/repair kernels — the memory-bandwidth data plane.
+//!
+//! Every sweep the serving engine performs over resident state (response
+//! scans, scrub sweeps, shed patch-backs) reduces to one of three bulk
+//! operations over a `&[u64]` word view of an `f64` buffer:
+//!
+//! * [`count_nonfinite`] — how many words have an all-ones exponent
+//!   (NaN or ±Inf), the response-scan question;
+//! * [`find_nans`] — *which* words are NaNs (exponent all ones **and**
+//!   non-zero fraction), the hygiene/injection question;
+//! * [`repair_nans_in_place`] — overwrite every NaN word with a repair
+//!   pattern and report the SNaN/QNaN split, the scrub question.
+//!
+//! The kernels are **integer-only**: nonfiniteness is the exponent-mask
+//! compare `bits & EXP_MASK == EXP_MASK` and NaN-ness adds
+//! `bits & FRAC_MASK != 0`, evaluated with scalar or SIMD *integer*
+//! instructions.  No kernel ever executes a floating-point instruction,
+//! so they are **trap-free by construction**: they can run inside an
+//! armed trap window (invalid-operation unmasked) without raising
+//! `SIGFPE` — which is why `serve_batch`'s mid-window response scan no
+//! longer needs the MXCSR save/restore that the old `is_finite()` scan
+//! did (DESIGN.md §4.4).
+//!
+//! Dispatch: on x86-64 the entry points use the AVX2 paths when the CPU
+//! reports the feature (`is_x86_feature_detected!`), decided once per
+//! process and cached.  Setting `NANREPAIR_FORCE_SCALAR=1` pins the
+//! scalar fallback (CI runs the test suite once per dispatch path).  The
+//! scalar kernels are written branchless over fixed-width chunks so LLVM
+//! can autovectorize them even without the explicit SIMD path.
+
+use once_cell::sync::Lazy;
+
+use super::bits::F64Bits;
+
+const EXP: u64 = F64Bits::EXP_MASK;
+const FRAC: u64 = F64Bits::FRAC_MASK;
+const QUIET: u64 = F64Bits::QUIET_BIT;
+
+/// Lane width of the scalar kernels' inner chunk (chosen so the chunk
+/// fills one or two vector registers after autovectorization).
+const SCALAR_LANES: usize = 8;
+
+/// What [`repair_nans_in_place`] repaired, split by NaN class (the
+/// scrubber's ledger distinguishes signaling from quiet repairs).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RepairCounts {
+    /// Signaling NaNs overwritten (quiet bit clear, fraction non-zero).
+    pub snans: u64,
+    /// Quiet NaNs overwritten (quiet bit set).
+    pub qnans: u64,
+}
+
+impl RepairCounts {
+    /// Total NaN words overwritten.
+    pub fn total(&self) -> u64 {
+        self.snans + self.qnans
+    }
+}
+
+/// View an `f64` slice as its raw little-endian bit words.
+///
+/// `f64` and `u64` have identical size and alignment, so the reinterpret
+/// is exactly the per-element `to_bits()` view without a copy.
+pub fn as_words(xs: &[f64]) -> &[u64] {
+    // SAFETY: same layout (size 8, align 8), and every u64 bit pattern is
+    // a valid f64 bit pattern and vice versa.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u64, xs.len()) }
+}
+
+/// Mutable variant of [`as_words`].
+pub fn as_words_mut(xs: &mut [f64]) -> &mut [u64] {
+    // SAFETY: as for `as_words`; writes of arbitrary u64 patterns produce
+    // valid (possibly NaN) f64 values, which is the whole point.
+    unsafe { std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut u64, xs.len()) }
+}
+
+/// `true` iff the dispatched kernels will take the AVX2 path.
+///
+/// False on non-x86-64, on CPUs without AVX2, and under
+/// `NANREPAIR_FORCE_SCALAR=1`.  Cached after the first call.
+pub fn dispatches_avx2() -> bool {
+    static USE_AVX2: Lazy<bool> = Lazy::new(|| !force_scalar() && avx2_available());
+    *USE_AVX2
+}
+
+/// Human-readable dispatch decision for bench/record labels.
+pub fn dispatch_label() -> &'static str {
+    if dispatches_avx2() {
+        "avx2"
+    } else {
+        "scalar"
+    }
+}
+
+fn force_scalar() -> bool {
+    std::env::var("NANREPAIR_FORCE_SCALAR").map_or(false, |v| v == "1")
+}
+
+/// Raw CPU capability (ignores the env override) — gate for the
+/// scalar-vs-SIMD differential tests.
+#[cfg(target_arch = "x86_64")]
+pub fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+/// Raw CPU capability (ignores the env override) — gate for the
+/// scalar-vs-SIMD differential tests.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn avx2_available() -> bool {
+    false
+}
+
+/// Count words with an all-ones exponent field (NaN or ±Inf).
+pub fn count_nonfinite(words: &[u64]) -> u64 {
+    #[cfg(target_arch = "x86_64")]
+    if dispatches_avx2() {
+        // SAFETY: dispatches_avx2() is true only when the CPU reports AVX2.
+        return unsafe { avx2::count_nonfinite(words) };
+    }
+    count_nonfinite_scalar(words)
+}
+
+/// Append the index of every NaN word (all-ones exponent, non-zero
+/// fraction — ±Inf excluded) to `out`, in ascending order.
+pub fn find_nans_into(words: &[u64], out: &mut Vec<usize>) {
+    #[cfg(target_arch = "x86_64")]
+    if dispatches_avx2() {
+        // SAFETY: dispatches_avx2() is true only when the CPU reports AVX2.
+        unsafe { avx2::find_nans_into(words, out) };
+        return;
+    }
+    find_nans_scalar_into(words, out);
+}
+
+/// Indices of every NaN word, ascending ([`find_nans_into`] into a fresh
+/// vector).
+pub fn find_nans(words: &[u64]) -> Vec<usize> {
+    let mut out = Vec::new();
+    find_nans_into(words, &mut out);
+    out
+}
+
+/// Overwrite every NaN word (±Inf untouched) with `repair_bits` and
+/// report how many of each class were repaired.
+pub fn repair_nans_in_place(words: &mut [u64], repair_bits: u64) -> RepairCounts {
+    #[cfg(target_arch = "x86_64")]
+    if dispatches_avx2() {
+        // SAFETY: dispatches_avx2() is true only when the CPU reports AVX2.
+        return unsafe { avx2::repair_nans_in_place(words, repair_bits) };
+    }
+    repair_nans_in_place_scalar(words, repair_bits)
+}
+
+/// Scalar [`count_nonfinite`]: branchless over [`SCALAR_LANES`]-word
+/// chunks (autovectorization-friendly), plus a scalar tail.
+pub fn count_nonfinite_scalar(words: &[u64]) -> u64 {
+    let mut acc = [0u64; SCALAR_LANES];
+    let mut chunks = words.chunks_exact(SCALAR_LANES);
+    for c in chunks.by_ref() {
+        for (a, &w) in acc.iter_mut().zip(c) {
+            *a += u64::from(w & EXP == EXP);
+        }
+    }
+    let mut count: u64 = acc.iter().sum();
+    for &w in chunks.remainder() {
+        count += u64::from(w & EXP == EXP);
+    }
+    count
+}
+
+/// Scalar [`find_nans_into`].
+pub fn find_nans_scalar_into(words: &[u64], out: &mut Vec<usize>) {
+    for (i, &w) in words.iter().enumerate() {
+        if w & EXP == EXP && w & FRAC != 0 {
+            out.push(i);
+        }
+    }
+}
+
+/// Scalar [`repair_nans_in_place`].
+pub fn repair_nans_in_place_scalar(words: &mut [u64], repair_bits: u64) -> RepairCounts {
+    let mut counts = RepairCounts::default();
+    for w in words.iter_mut() {
+        let bits = *w;
+        if bits & EXP == EXP && bits & FRAC != 0 {
+            if bits & QUIET != 0 {
+                counts.qnans += 1;
+            } else {
+                counts.snans += 1;
+            }
+            *w = repair_bits;
+        }
+    }
+    counts
+}
+
+/// AVX2 [`count_nonfinite`] behind the safe capability gate; `None` when
+/// the CPU lacks AVX2 (or off x86-64).  For differential tests/benches.
+pub fn count_nonfinite_avx2(words: &[u64]) -> Option<u64> {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 presence checked above.
+        return Some(unsafe { avx2::count_nonfinite(words) });
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = words;
+    None
+}
+
+/// AVX2 [`find_nans`] behind the safe capability gate (see
+/// [`count_nonfinite_avx2`]).
+pub fn find_nans_avx2(words: &[u64]) -> Option<Vec<usize>> {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        let mut out = Vec::new();
+        // SAFETY: AVX2 presence checked above.
+        unsafe { avx2::find_nans_into(words, &mut out) };
+        return Some(out);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = words;
+    None
+}
+
+/// AVX2 [`repair_nans_in_place`] behind the safe capability gate (see
+/// [`count_nonfinite_avx2`]).
+pub fn repair_nans_in_place_avx2(words: &mut [u64], repair_bits: u64) -> Option<RepairCounts> {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 presence checked above.
+        return Some(unsafe { avx2::repair_nans_in_place(words, repair_bits) });
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = (words, repair_bits);
+    None
+}
+
+/// The pre-kernel scan shape: one classification per word through an
+/// opaque call boundary, modeling the old per-word `dyn Workload` /
+/// `Vec<f64>`-clone scans the kernels replaced.  Bench baseline only —
+/// the `scan_sweep` bench gates the dispatched kernel against it.
+pub fn count_nonfinite_perword(words: &[u64]) -> u64 {
+    let mut count = 0u64;
+    for &w in words {
+        let b = std::hint::black_box(F64Bits(w));
+        if b.is_nan() || b.is_inf() {
+            count += 1;
+        }
+    }
+    count
+}
+
+/// FP-based reference: counts words whose `f64` view is not finite.
+///
+/// Unlike the kernels this executes real floating-point classification,
+/// so it is **not** trap-free — it is the test oracle the integer
+/// kernels are checked against, never a serve-path scan.
+pub fn count_nonfinite_fp_oracle(words: &[u64]) -> u64 {
+    words.iter().filter(|&&w| !f64::from_bits(w).is_finite()).count() as u64
+}
+
+/// FP-based reference for [`find_nans`]: indices whose `f64` view
+/// `is_nan()`.  Test oracle only (see [`count_nonfinite_fp_oracle`]).
+pub fn find_nans_fp_oracle(words: &[u64]) -> Vec<usize> {
+    words
+        .iter()
+        .enumerate()
+        .filter(|(_, &w)| f64::from_bits(w).is_nan())
+        .map(|(i, _)| i)
+        .collect()
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! Explicit AVX2 paths: 4 words per 256-bit vector, the classify as
+    //! integer compares against broadcast masks, NaN-free chunks skipped
+    //! with one `vptest`.  Callers must guarantee AVX2 is present.
+
+    use std::arch::x86_64::*;
+
+    use super::{EXP, FRAC, QUIET, RepairCounts};
+
+    /// Words per 256-bit vector.
+    const VLANES: usize = 4;
+
+    /// High bit of each 64-bit lane as a 4-bit mask.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn lane_mask(v: __m256i) -> u32 {
+        _mm256_movemask_pd(_mm256_castsi256_pd(v)) as u32 & 0xf
+    }
+
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn count_nonfinite(words: &[u64]) -> u64 {
+        let exp = _mm256_set1_epi64x(EXP as i64);
+        // Nonfinite lanes compare to all-ones (−1 per 64-bit lane), so
+        // subtracting the compare result counts them per lane.
+        let mut acc = _mm256_setzero_si256();
+        let mut chunks = words.chunks_exact(VLANES);
+        for c in chunks.by_ref() {
+            let v = _mm256_loadu_si256(c.as_ptr() as *const __m256i);
+            let nonfin = _mm256_cmpeq_epi64(_mm256_and_si256(v, exp), exp);
+            acc = _mm256_sub_epi64(acc, nonfin);
+        }
+        let mut lanes = [0u64; VLANES];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        lanes.iter().sum::<u64>() + super::count_nonfinite_scalar(chunks.remainder())
+    }
+
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn find_nans_into(words: &[u64], out: &mut Vec<usize>) {
+        let exp = _mm256_set1_epi64x(EXP as i64);
+        let frac = _mm256_set1_epi64x(FRAC as i64);
+        let zero = _mm256_setzero_si256();
+        let mut chunks = words.chunks_exact(VLANES);
+        let mut base = 0usize;
+        for c in chunks.by_ref() {
+            let v = _mm256_loadu_si256(c.as_ptr() as *const __m256i);
+            let nonfin = _mm256_cmpeq_epi64(_mm256_and_si256(v, exp), exp);
+            let frac_zero = _mm256_cmpeq_epi64(_mm256_and_si256(v, frac), zero);
+            let nan = _mm256_andnot_si256(frac_zero, nonfin);
+            let mut m = lane_mask(nan);
+            while m != 0 {
+                out.push(base + m.trailing_zeros() as usize);
+                m &= m - 1;
+            }
+            base += VLANES;
+        }
+        for (i, &w) in chunks.remainder().iter().enumerate() {
+            if w & EXP == EXP && w & FRAC != 0 {
+                out.push(base + i);
+            }
+        }
+    }
+
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn repair_nans_in_place(words: &mut [u64], repair_bits: u64) -> RepairCounts {
+        let exp = _mm256_set1_epi64x(EXP as i64);
+        let frac = _mm256_set1_epi64x(FRAC as i64);
+        let quiet = _mm256_set1_epi64x(QUIET as i64);
+        let zero = _mm256_setzero_si256();
+        let fill = _mm256_set1_epi64x(repair_bits as i64);
+        let mut counts = RepairCounts::default();
+        let mut chunks = words.chunks_exact_mut(VLANES);
+        for c in chunks.by_ref() {
+            let v = _mm256_loadu_si256(c.as_ptr() as *const __m256i);
+            let nonfin = _mm256_cmpeq_epi64(_mm256_and_si256(v, exp), exp);
+            let frac_zero = _mm256_cmpeq_epi64(_mm256_and_si256(v, frac), zero);
+            let nan = _mm256_andnot_si256(frac_zero, nonfin);
+            if _mm256_testz_si256(nan, nan) != 0 {
+                continue; // fast path: chunk has no NaN, nothing to write
+            }
+            let quiet_zero = _mm256_cmpeq_epi64(_mm256_and_si256(v, quiet), zero);
+            let snan_mask = lane_mask(_mm256_and_si256(nan, quiet_zero));
+            let qnan_mask = lane_mask(_mm256_andnot_si256(quiet_zero, nan));
+            counts.snans += u64::from(snan_mask.count_ones());
+            counts.qnans += u64::from(qnan_mask.count_ones());
+            // NaN lanes are all-ones, so the per-byte blend selects whole
+            // lanes from `fill` exactly where `nan` is set.
+            let repaired = _mm256_blendv_epi8(v, fill, nan);
+            _mm256_storeu_si256(c.as_mut_ptr() as *mut __m256i, repaired);
+        }
+        let tail = super::repair_nans_in_place_scalar(chunks.into_remainder(), repair_bits);
+        counts.snans += tail.snans;
+        counts.qnans += tail.qnans;
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::nan::{PAPER_NAN_BITS, qnan_f64, snan_f64};
+    use crate::util::rng::Pcg64;
+
+    /// Bit patterns chosen to sit on every classification boundary.
+    fn adversarial_patterns() -> Vec<u64> {
+        vec![
+            0,                              // +0.0
+            (-0.0f64).to_bits(),            // −0.0
+            1.0f64.to_bits(),               // normal
+            f64::MAX.to_bits(),             // largest finite
+            f64::MIN_POSITIVE.to_bits() - 1, // largest subnormal
+            1,                              // smallest subnormal
+            EXP,                            // +Inf (fraction zero: NOT a NaN)
+            EXP | (1u64 << 63),             // −Inf
+            EXP | 1,                        // SNaN, minimal payload
+            EXP | (FRAC >> 1),              // SNaN, all payload bits below quiet
+            EXP | QUIET,                    // QNaN, zero payload
+            PAPER_NAN_BITS,                 // the paper's SNaN
+            snan_f64(0xdead),
+            qnan_f64(0xbeef),
+            u64::MAX,                       // all ones: QNaN with sign bit
+            f64::NAN.to_bits(),             // Rust's canonical QNaN
+        ]
+    }
+
+    /// Buffers exercising chunk boundaries: empty, sub-chunk, exact
+    /// multiples, and off-by-one around the scalar and SIMD widths.
+    fn boundary_lengths() -> Vec<usize> {
+        vec![0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 63, 64, 65, 100]
+    }
+
+    fn adversarial_buffer(len: usize, seed: u64) -> Vec<u64> {
+        let pats = adversarial_patterns();
+        let mut rng = Pcg64::seed(seed);
+        (0..len).map(|_| pats[rng.index(pats.len())]).collect()
+    }
+
+    #[test]
+    fn count_matches_fp_oracle_on_adversarial_buffers() {
+        for len in boundary_lengths() {
+            let buf = adversarial_buffer(len, 7 + len as u64);
+            assert_eq!(
+                count_nonfinite_scalar(&buf),
+                count_nonfinite_fp_oracle(&buf),
+                "scalar vs oracle, len {len}"
+            );
+            assert_eq!(
+                count_nonfinite(&buf),
+                count_nonfinite_fp_oracle(&buf),
+                "dispatched vs oracle, len {len}"
+            );
+            assert_eq!(count_nonfinite_perword(&buf), count_nonfinite_fp_oracle(&buf));
+        }
+    }
+
+    #[test]
+    fn find_nans_matches_fp_oracle_and_excludes_inf() {
+        let buf = vec![EXP, PAPER_NAN_BITS, 1.0f64.to_bits(), EXP | (1 << 63), u64::MAX];
+        assert_eq!(find_nans(&buf), vec![1, 4]);
+        for len in boundary_lengths() {
+            let buf = adversarial_buffer(len, 31 + len as u64);
+            assert_eq!(find_nans(&buf), find_nans_fp_oracle(&buf), "len {len}");
+            let mut scalar = Vec::new();
+            find_nans_scalar_into(&buf, &mut scalar);
+            assert_eq!(scalar, find_nans_fp_oracle(&buf), "scalar, len {len}");
+        }
+    }
+
+    #[test]
+    fn repair_overwrites_nans_only_and_splits_classes() {
+        let repair = 5.5f64.to_bits();
+        for len in boundary_lengths() {
+            let pristine = adversarial_buffer(len, 101 + len as u64);
+            let mut buf = pristine.clone();
+            let counts = repair_nans_in_place(&mut buf, repair);
+            let mut expect = RepairCounts::default();
+            for (i, (&before, &after)) in pristine.iter().zip(&buf).enumerate() {
+                if f64::from_bits(before).is_nan() {
+                    assert_eq!(after, repair, "NaN at {i} not repaired, len {len}");
+                    if before & QUIET != 0 {
+                        expect.qnans += 1;
+                    } else {
+                        expect.snans += 1;
+                    }
+                } else {
+                    assert_eq!(after, before, "non-NaN at {i} modified, len {len}");
+                }
+            }
+            assert_eq!(counts, expect, "len {len}");
+        }
+    }
+
+    #[test]
+    fn scalar_and_avx2_paths_agree() {
+        if !avx2_available() {
+            return; // nothing to differentiate on this CPU
+        }
+        for len in boundary_lengths() {
+            let buf = adversarial_buffer(len, 211 + len as u64);
+            assert_eq!(
+                count_nonfinite_avx2(&buf),
+                Some(count_nonfinite_scalar(&buf)),
+                "count, len {len}"
+            );
+            let mut scalar_idx = Vec::new();
+            find_nans_scalar_into(&buf, &mut scalar_idx);
+            assert_eq!(find_nans_avx2(&buf), Some(scalar_idx), "find, len {len}");
+
+            let repair = 1.0f64.to_bits();
+            let mut scalar_buf = buf.clone();
+            let mut simd_buf = buf.clone();
+            let scalar_counts = repair_nans_in_place_scalar(&mut scalar_buf, repair);
+            let simd_counts = repair_nans_in_place_avx2(&mut simd_buf, repair);
+            assert_eq!(simd_counts, Some(scalar_counts), "repair counts, len {len}");
+            assert_eq!(simd_buf, scalar_buf, "repair buffer, len {len}");
+        }
+    }
+
+    #[test]
+    fn as_words_roundtrips_bits() {
+        let mut xs = vec![1.5f64, -0.0, f64::INFINITY, f64::from_bits(PAPER_NAN_BITS)];
+        let words: Vec<u64> = xs.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(as_words(&xs), &words[..]);
+        as_words_mut(&mut xs)[0] = PAPER_NAN_BITS;
+        assert!(xs[0].is_nan());
+    }
+
+    #[test]
+    fn dispatch_label_is_consistent_with_decision() {
+        let label = dispatch_label();
+        assert_eq!(label == "avx2", dispatches_avx2());
+        if !avx2_available() {
+            assert_eq!(label, "scalar");
+        }
+    }
+}

@@ -113,12 +113,15 @@ impl TrapGuard {
 
     /// Run `f` with this thread's MXCSR restored to its pre-arm state
     /// (invalid-operation masked again), re-unmasking on the way out.
-    /// FP bookkeeping *between* a batch window's requests — e.g. the
-    /// response NaN scan, whose `is_finite()` comparisons would trap on a
-    /// signaling NaN left in an output buffer — runs in exactly the FP
-    /// environment it would see after the guard dropped, without paying a
-    /// full disarm/re-arm.  The domain stays armed and bound; only the
-    /// exception mask toggles.
+    /// FP bookkeeping inside an armed window — `is_finite()` comparisons
+    /// that would trap on a signaling NaN left in an output buffer —
+    /// runs in exactly the FP environment it would see after the guard
+    /// dropped, without paying a full disarm/re-arm.  The domain stays
+    /// armed and bound; only the exception mask toggles.  The serve
+    /// path's response scan no longer needs this: the bulk kernel scan
+    /// ([`crate::fp::scan`]) is integer-only and trap-free by
+    /// construction — `with_masked` remains as the FP-scan oracle the
+    /// kernels are tested against (DESIGN.md §4.4).
     pub fn with_masked<R>(&self, f: impl FnOnce() -> R) -> R {
         mxcsr::restore(self.saved_mxcsr);
         let out = f();
@@ -364,6 +367,38 @@ mod tests {
         let second = guard.take_stats();
         drop(guard);
         assert_eq!(second.sigfpe_total, 0, "{second:#?}");
+    }
+
+    /// `with_masked` as the FP-scan oracle: inside an armed window an FP
+    /// `is_finite()` sweep over a signaling NaN must agree with the
+    /// integer-only kernel scan the serve path uses — and neither scan
+    /// may trap (the masked FP sweep quiets the invalid op; the kernel
+    /// executes no FP instruction at all).
+    #[test]
+    fn masked_fp_scan_matches_integer_kernel_scan() {
+        let pool = ApproxPool::new();
+        let mut buf = pool.alloc_f64(64);
+        buf.fill_with(|i| i as f64);
+        buf[7] = f64::from_bits(PAPER_NAN_BITS);
+        buf[21] = f64::INFINITY;
+        buf[40] = f64::from_bits(crate::fp::nan::qnan_f64(0x42));
+
+        let guard = TrapGuard::arm_reset(
+            &pool,
+            &TrapConfig {
+                policy: RepairPolicy::Zero,
+                memory_repair: true,
+            },
+        );
+        let fp =
+            guard.with_masked(|| buf.as_slice().iter().filter(|v| !v.is_finite()).count() as u64);
+        let kernel = crate::fp::scan::count_nonfinite(crate::fp::scan::as_words(buf.as_slice()));
+        let stats = guard.stats();
+        drop(guard);
+
+        assert_eq!(fp, 3);
+        assert_eq!(kernel, fp, "kernel scan must match the FP oracle");
+        assert_eq!(stats.sigfpe_total, 0, "neither scan may trap: {stats:#?}");
     }
 
     /// Concurrent guards own distinct domain slots.

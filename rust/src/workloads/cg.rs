@@ -5,6 +5,7 @@
 //! iteration — a sharper test for reactive repair than the stencil.
 
 use crate::approxmem::pool::{ApproxBuf, ApproxPool};
+use crate::fp::scan::{as_words, as_words_mut};
 use crate::util::rng::Pcg64;
 
 use super::{kernels, Workload};
@@ -168,8 +169,32 @@ impl Workload for Cg {
         }
     }
 
+    fn input_regions(&self) -> usize {
+        2
+    }
+
+    fn input_words(&self, region: usize) -> &[u64] {
+        match region {
+            0 => as_words(self.a.as_slice()),
+            1 => as_words(self.b.as_slice()),
+            _ => panic!("cg has 2 input regions, got {region}"),
+        }
+    }
+
+    fn input_words_mut(&mut self, region: usize) -> &mut [u64] {
+        match region {
+            0 => as_words_mut(self.a.as_mut_slice()),
+            1 => as_words_mut(self.b.as_mut_slice()),
+            _ => panic!("cg has 2 input regions, got {region}"),
+        }
+    }
+
     fn output(&self) -> Vec<f64> {
         self.x.as_slice().to_vec()
+    }
+
+    fn output_words(&self) -> &[u64] {
+        as_words(self.x.as_slice())
     }
 
     fn reference(&self) -> Vec<f64> {

@@ -4,6 +4,7 @@
 //! policy-ablation experiment uses this workload to quantify that hazard.
 
 use crate::approxmem::pool::{ApproxBuf, ApproxPool};
+use crate::fp::scan::{as_words, as_words_mut};
 use crate::util::rng::Pcg64;
 
 use super::{kernels, Workload};
@@ -147,8 +148,26 @@ impl Workload for Lu {
         self.a[flat_idx % (self.n * self.n)].to_bits()
     }
 
+    fn input_regions(&self) -> usize {
+        1
+    }
+
+    fn input_words(&self, region: usize) -> &[u64] {
+        assert_eq!(region, 0, "lu has 1 input region");
+        as_words(self.a.as_slice())
+    }
+
+    fn input_words_mut(&mut self, region: usize) -> &mut [u64] {
+        assert_eq!(region, 0, "lu has 1 input region");
+        as_words_mut(self.a.as_mut_slice())
+    }
+
     fn output(&self) -> Vec<f64> {
         self.a.as_slice().to_vec()
+    }
+
+    fn output_words(&self) -> &[u64] {
+        as_words(self.a.as_slice())
     }
 
     fn reference(&self) -> Vec<f64> {

@@ -6,6 +6,7 @@
 //! paper's Figure-3 access pattern.
 
 use crate::approxmem::pool::{ApproxBuf, ApproxPool};
+use crate::fp::scan::{as_words, as_words_mut};
 use crate::util::rng::Pcg64;
 
 use super::{kernels, Workload};
@@ -132,13 +133,32 @@ impl Workload for MatMul {
         buf[flat_idx % nn].to_bits()
     }
 
+    fn input_regions(&self) -> usize {
+        2
+    }
+
+    fn input_words(&self, region: usize) -> &[u64] {
+        match region {
+            0 => as_words(self.a.as_slice()),
+            1 => as_words(self.bt.as_slice()),
+            _ => panic!("matmul has 2 input regions, got {region}"),
+        }
+    }
+
+    fn input_words_mut(&mut self, region: usize) -> &mut [u64] {
+        match region {
+            0 => as_words_mut(self.a.as_mut_slice()),
+            1 => as_words_mut(self.bt.as_mut_slice()),
+            _ => panic!("matmul has 2 input regions, got {region}"),
+        }
+    }
+
     fn output(&self) -> Vec<f64> {
         self.c.as_slice().to_vec()
     }
 
-    fn output_nonfinite(&self) -> u64 {
-        // serving hot path: count in place, no O(n²) clone
-        self.c.as_slice().iter().filter(|x| !x.is_finite()).count() as u64
+    fn output_words(&self) -> &[u64] {
+        as_words(self.c.as_slice())
     }
 
     fn reference(&self) -> Vec<f64> {

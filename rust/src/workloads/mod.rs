@@ -305,21 +305,40 @@ pub trait Workload: Send {
 
     /// Read input element `flat_idx` (0..input_len) as raw bits — the
     /// inverse of [`Workload::poison_input`]'s write (kept in lock-step by
-    /// the `input_bits_mirrors_poison_input` test).  The resident set
-    /// ([`crate::coordinator::session::ResidentSet`]) snapshots a
-    /// mutating workload's pristine inputs through this before its first
-    /// serve and restores them word-by-word afterwards (copy-on-serve).
+    /// the `input_bits_mirrors_poison_input` test).
     fn input_bits(&self, flat_idx: usize) -> u64;
+
+    /// Number of contiguous input buffers backing the flat
+    /// `poison_input`/`input_bits` index space.  Concatenating
+    /// [`Workload::input_words`] over `0..input_regions()` yields exactly
+    /// the flat index space, in flat-index order (kept in lock-step by
+    /// the `bulk_words_mirror_flat_accessors` test) — that contract is
+    /// what lets the resident set snapshot and restore pristine inputs
+    /// with bulk `copy_from_slice` instead of one virtual call per word.
+    fn input_regions(&self) -> usize;
+
+    /// Input region `region` (`0..input_regions()`) as raw bit words —
+    /// the bulk view the data-plane kernels ([`crate::fp::scan`]) sweep.
+    fn input_words(&self, region: usize) -> &[u64];
+
+    /// Mutable variant of [`Workload::input_words`] — the copy-on-serve
+    /// restore target ([`crate::coordinator::session::ResidentSet`]).
+    fn input_words_mut(&mut self, region: usize) -> &mut [u64];
 
     /// Flat view of the output (for quality comparison).
     fn output(&self) -> Vec<f64>;
 
+    /// The response buffer as raw bit words, in [`Workload::output`]
+    /// order — what the serving path's response scan sweeps in place.
+    fn output_words(&self) -> &[u64];
+
     /// Non-finite values in the current output — the serving path's
-    /// per-request response scan.  The default goes through
-    /// [`Workload::output`] (one allocation + copy); workloads with
-    /// large outputs should count over their buffer in place.
+    /// per-request response scan.  The default sweeps
+    /// [`Workload::output_words`] with the integer-only bulk kernel
+    /// ([`crate::fp::scan::count_nonfinite`]): no allocation, no FP
+    /// instruction, so it is safe to run inside an armed trap window.
     fn output_nonfinite(&self) -> u64 {
-        self.output().iter().filter(|x| !x.is_finite()).count() as u64
+        crate::fp::scan::count_nonfinite(self.output_words())
     }
 
     /// Run the same computation on clean private buffers → reference.
@@ -555,6 +574,55 @@ mod tests {
                     "{kind}: input_bits({idx}) out of lock-step with poison_input"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn bulk_words_mirror_flat_accessors() {
+        let pool = ApproxPool::new();
+        for kind in [
+            WorkloadKind::MatMul { n: 9 },
+            WorkloadKind::MatVec { n: 9 },
+            WorkloadKind::Jacobi { n: 9, iters: 3 },
+            WorkloadKind::Cg { n: 9, iters: 3 },
+            WorkloadKind::Lu { n: 9 },
+            WorkloadKind::Stencil { n: 9, steps: 3 },
+        ] {
+            let mut w = kind.build(&pool, 11);
+            // concatenated regions are exactly the flat input space,
+            // in flat-index order
+            let flat: Vec<u64> = (0..w.input_len()).map(|i| w.input_bits(i)).collect();
+            let mut concat = Vec::new();
+            for r in 0..w.input_regions() {
+                concat.extend_from_slice(w.input_words(r));
+            }
+            assert_eq!(concat, flat, "{kind}: region concat vs flat input_bits");
+            // a bulk write through input_words_mut is visible at the
+            // matching flat index (and vice versa via poison_input)
+            let marker = 0x400921fb54442d18u64; // π
+            let mut off = 0;
+            for r in 0..w.input_regions() {
+                let len = w.input_words(r).len();
+                assert!(len > 0, "{kind}: empty region {r}");
+                w.input_words_mut(r)[len - 1] = marker;
+                assert_eq!(
+                    w.input_bits(off + len - 1),
+                    marker,
+                    "{kind}: input_words_mut({r}) out of lock-step with input_bits"
+                );
+                w.poison_input(off, marker);
+                assert_eq!(
+                    w.input_words(r)[0],
+                    marker,
+                    "{kind}: poison_input out of lock-step with input_words({r})"
+                );
+                off += len;
+            }
+            // output_words is the raw-bits view of output()
+            w.reset();
+            w.run();
+            let out_bits: Vec<u64> = w.output().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(w.output_words(), &out_bits[..], "{kind}: output_words vs output");
         }
     }
 

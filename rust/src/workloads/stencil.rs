@@ -6,6 +6,7 @@
 //! repair.
 
 use crate::approxmem::pool::{ApproxBuf, ApproxPool};
+use crate::fp::scan::{as_words, as_words_mut};
 use crate::util::rng::Pcg64;
 
 use super::Workload;
@@ -118,8 +119,26 @@ impl Workload for Stencil {
         self.grid[flat_idx % (self.n * self.n)].to_bits()
     }
 
+    fn input_regions(&self) -> usize {
+        1
+    }
+
+    fn input_words(&self, region: usize) -> &[u64] {
+        assert_eq!(region, 0, "stencil has 1 input region");
+        as_words(self.grid.as_slice())
+    }
+
+    fn input_words_mut(&mut self, region: usize) -> &mut [u64] {
+        assert_eq!(region, 0, "stencil has 1 input region");
+        as_words_mut(self.grid.as_mut_slice())
+    }
+
     fn output(&self) -> Vec<f64> {
         self.grid.as_slice().to_vec()
+    }
+
+    fn output_words(&self) -> &[u64] {
+        as_words(self.grid.as_slice())
     }
 
     fn reference(&self) -> Vec<f64> {

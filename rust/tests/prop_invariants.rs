@@ -9,7 +9,9 @@ use nanrepair::disasm::decode::decode_len;
 use nanrepair::fp::analytics;
 use nanrepair::fp::bits::F64Bits;
 use nanrepair::fp::nan::{classify_f64, NanClass};
+use nanrepair::fp::scan;
 use nanrepair::testutil::prop::assert_prop;
+use nanrepair::util::rng::Pcg64;
 use nanrepair::util::stats::Summary;
 use rand_core::RngCore;
 
@@ -257,6 +259,119 @@ fn prop_latency_histogram_quantiles_monotone_and_clamped() {
             let estimates: Vec<f64> = qs.iter().map(|&q| h.quantile(q)).collect();
             estimates.windows(2).all(|w| w[0] <= w[1])
                 && estimates.iter().all(|&e| e >= lo && e <= hi)
+        },
+    );
+}
+
+/// Bit patterns that sit on every edge the data-plane kernels classify
+/// across: the SNaN/QNaN quiet-bit boundary, both infinities, the
+/// exponent band one below the NaN band, subnormals, and both zeros.
+const SCAN_EDGE_PATTERNS: [u64; 12] = [
+    0x7ff0_0000_0000_0001, // minimal SNaN (quiet bit clear, fraction = 1)
+    0x7ff7_ffff_ffff_ffff, // maximal SNaN (fraction saturated below the quiet bit)
+    0x7ff8_0000_0000_0000, // canonical QNaN (quiet bit alone)
+    0xfff8_0000_0000_0001, // negative QNaN with payload
+    0x7ff0_0000_0000_0000, // +Inf (nonfinite but not a NaN)
+    0xfff0_0000_0000_0000, // -Inf
+    0x7fef_ffff_ffff_ffff, // f64::MAX: exponent one below the NaN band
+    0x0010_0000_0000_0000, // smallest normal
+    0x000f_ffff_ffff_ffff, // largest subnormal (NaN fraction, zero exponent)
+    0x0000_0000_0000_0001, // smallest subnormal
+    0x0000_0000_0000_0000, // +0
+    0x8000_0000_0000_0000, // -0
+];
+
+/// A buffer where roughly half the words are drawn from the edge
+/// patterns above and half are arbitrary bits, at a length that
+/// straddles the 8-word scalar chunk and the 4-lane vector remainder.
+fn scan_edge_buffer(rng: &mut Pcg64, max_len: usize) -> Vec<u64> {
+    let len = rng.index(max_len + 1);
+    (0..len)
+        .map(|_| {
+            if rng.below(2) == 0 {
+                SCAN_EDGE_PATTERNS[rng.index(SCAN_EDGE_PATTERNS.len())]
+            } else {
+                rng.next_u64()
+            }
+        })
+        .collect()
+}
+
+/// Data-plane kernels (DESIGN.md §4.4): the scalar and AVX2 legs are
+/// interchangeable — identical counts, identical NaN index lists, and
+/// bit-identical repair results with identical class splits — over
+/// adversarial buffers at every chunk-remainder length.
+#[test]
+fn prop_scan_scalar_and_avx2_agree() {
+    if !scan::avx2_available() {
+        return; // single-leg host: nothing to differentiate
+    }
+    assert_prop(
+        "scan-scalar-avx2-agree",
+        12,
+        300,
+        |rng| (scan_edge_buffer(rng, 67), rng.next_f64().to_bits()),
+        |(words, repair_bits)| {
+            let mut scalar_nans = Vec::new();
+            scan::find_nans_scalar_into(words, &mut scalar_nans);
+            let (mut scalar_buf, mut avx2_buf) = (words.clone(), words.clone());
+            let scalar_counts = scan::repair_nans_in_place_scalar(&mut scalar_buf, *repair_bits);
+            let avx2_counts = scan::repair_nans_in_place_avx2(&mut avx2_buf, *repair_bits)
+                .expect("gated on avx2_available");
+            scan::count_nonfinite_avx2(words).expect("gated on avx2_available")
+                == scan::count_nonfinite_scalar(words)
+                && scan::find_nans_avx2(words).expect("gated on avx2_available") == scalar_nans
+                && avx2_counts == scalar_counts
+                && avx2_buf == scalar_buf
+        },
+    );
+}
+
+/// The dispatched kernels agree with the floating-point oracle (the
+/// `is_finite`/`is_nan` view the hardware itself classifies by) on
+/// NaN-dense buffers.
+#[test]
+fn prop_scan_dispatch_matches_fp_oracle() {
+    assert_prop(
+        "scan-dispatch-fp-oracle",
+        13,
+        300,
+        |rng| scan_edge_buffer(rng, 150),
+        |words| {
+            scan::count_nonfinite(words) == scan::count_nonfinite_fp_oracle(words)
+                && scan::find_nans(words) == scan::find_nans_fp_oracle(words)
+        },
+    );
+}
+
+/// Repair overwrites exactly the NaN words (infinities and every finite
+/// word survive bit-for-bit), reports the class split the classifier
+/// sees, and leaves a NaN-free buffer behind.
+#[test]
+fn prop_scan_repair_overwrites_exactly_the_nans() {
+    assert_prop(
+        "scan-repair-postcondition",
+        14,
+        300,
+        |rng| (scan_edge_buffer(rng, 100), rng.next_f64().to_bits()),
+        |(words, repair_bits)| {
+            let nans_before = scan::find_nans(words);
+            let snans = words
+                .iter()
+                .filter(|&&w| matches!(classify_f64(w), NanClass::Signaling))
+                .count() as u64;
+            let mut buf = words.clone();
+            let counts = scan::repair_nans_in_place(&mut buf, *repair_bits);
+            counts.snans == snans
+                && counts.total() == nans_before.len() as u64
+                && scan::find_nans(&buf).is_empty()
+                && words.iter().zip(&buf).enumerate().all(|(i, (&before, &after))| {
+                    if nans_before.contains(&i) {
+                        after == *repair_bits
+                    } else {
+                        after == before
+                    }
+                })
         },
     );
 }
