@@ -163,6 +163,42 @@ fn serve_mix_sweep(r: &mut Runner, requests: usize, n: usize) -> Vec<(usize, f64
     throughput
 }
 
+/// Bench the access-ledger overhead: the same closed-loop serve run on
+/// the flat-dose path (`energy: None`) vs with full energy accounting
+/// (per-request hold stamps, access ledgers, energy records); returns
+/// (variant, mean_secs).  The caller gates ledger within 10 % of flat.
+fn serve_energy_sweep(r: &mut Runner, requests: usize, n: usize) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for (name, energy) in [
+        ("flat", None),
+        ("ledger", Some(server::EnergyConfig::default())),
+    ] {
+        let res = r.bench(
+            &format!("serve_energy{requests}x{n}/{name}"),
+            Bench::new(move || {
+                let rep = server::serve(&ServeConfig {
+                    mix: RequestMix::single(WorkloadKind::MatMul { n }),
+                    protection: Protection::RegisterMemory,
+                    requests,
+                    workers: 4,
+                    queue_depth: 16,
+                    fault_rate: 1e-3,
+                    seed: 42,
+                    arrival: Arrival::Closed,
+                    energy: energy.clone(),
+                    ..Default::default()
+                })
+                .expect("energy serve runs");
+                assert_eq!(rep.output_nans_total(), 0);
+            })
+            .samples(5)
+            .budget(2.0),
+        );
+        out.push((name.to_string(), res.summary.mean));
+    }
+    out
+}
+
 /// Bench the batched dispatch core: a closed-loop flood at 1024 offered
 /// concurrency across 8 workers, swept over the window-size knob;
 /// returns (batch, req/s).  Batch 1 reproduces the unbatched per-request
@@ -285,6 +321,10 @@ fn main() {
     // mixed-workload serving: 3 kinds resident per worker, requests
     // stamped by mix weight, division-safe policy for jacobi/cg
     let served_mix = serve_mix_sweep(&mut r, serve_requests, n);
+    // access-ledger overhead: flat-dose vs full energy accounting on the
+    // same run, gated below so ledger stamping cannot silently tax the
+    // request path
+    let energy_bench = serve_energy_sweep(&mut r, serve_requests, n);
     // batched dispatch at 1k+ offered concurrency: the request count is
     // sized so the 1024-deep closed-loop queue stays flooded and windows
     // actually fill (quick mode keeps CI under the sample budget)
@@ -472,4 +512,27 @@ fn main() {
         );
     }
     println!("serve_p999: poisson open-loop tail at batch 8: p999 = {:.3} ms", p999 * 1e3);
+
+    let energy_mean = |name: &str| {
+        energy_bench
+            .iter()
+            .find(|(v, _)| v == name)
+            .map(|&(_, m)| m)
+            .expect("energy variant present")
+    };
+    let (flat, ledger) = (energy_mean("flat"), energy_mean("ledger"));
+    assert!(
+        ledger <= flat * 1.10,
+        "access-ledger serve path must stay within 10 % of the flat-dose path \
+         ({:.1} ms vs {:.1} ms mean)",
+        ledger * 1e3,
+        flat * 1e3
+    );
+    println!(
+        "serve_energy: access-ledger path runs {:.2}x the flat-dose mean \
+         ({:.1} vs {:.1} ms; acceptance gate <= 1.10x)",
+        ledger / flat,
+        ledger * 1e3,
+        flat * 1e3
+    );
 }

@@ -70,6 +70,39 @@ impl DramEnergyModel {
     pub fn server_savings(&self, t_secs: f64, memory_share: f64) -> f64 {
         self.evaluate(t_secs).savings * memory_share
     }
+
+    /// Reject models whose parameters are not probabilities — a NaN or
+    /// negative fraction silently poisons every downstream savings number,
+    /// so fail loudly at configuration time instead.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, v) in [
+            ("refresh_fraction_at_64ms", self.refresh_fraction_at_64ms),
+            ("approx_fraction", self.approx_fraction),
+        ] {
+            if !v.is_finite() {
+                anyhow::bail!(
+                    "DramEnergyModel.{name} must be a finite fraction in [0, 1], got {v}"
+                );
+            }
+            if !(0.0..=1.0).contains(&v) {
+                anyhow::bail!("DramEnergyModel.{name} must lie in [0, 1], got {v}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Inverse of [`evaluate`](Self::evaluate): the refresh interval that
+    /// achieves `target` savings.  `None` if the target is non-positive,
+    /// non-finite, or at/above [`max_savings`](Self::max_savings) (the
+    /// asymptote — unreachable at any finite interval).
+    pub fn interval_for_savings(&self, target: f64) -> Option<f64> {
+        let cap = self.max_savings();
+        if !target.is_finite() || target <= 0.0 || target >= cap {
+            return None;
+        }
+        // savings(t) = cap * (1 - 0.064/t)  for t >= 0.064
+        Some(0.064 * cap / (cap - target))
+    }
 }
 
 #[cfg(test)]
@@ -131,6 +164,38 @@ mod tests {
         let m = DramEnergyModel::default();
         let s = m.evaluate(10.0).savings;
         assert!(s > 0.15 && s < 0.25, "s={s}");
+    }
+
+    #[test]
+    fn interval_for_savings_inverts_evaluate() {
+        let m = DramEnergyModel::default();
+        for target in [0.01, 0.05, 0.10, 0.15, 0.19] {
+            let t = m.interval_for_savings(target).unwrap();
+            let s = m.evaluate(t).savings;
+            assert!((s - target).abs() < 1e-12, "target={target} got {s}");
+        }
+        assert!(m.interval_for_savings(0.0).is_none());
+        assert!(m.interval_for_savings(m.max_savings()).is_none());
+        assert!(m.interval_for_savings(f64::NAN).is_none());
+    }
+
+    #[test]
+    fn validate_rejects_nan_and_out_of_range() {
+        let bad = DramEnergyModel {
+            refresh_fraction_at_64ms: f64::NAN,
+            ..Default::default()
+        };
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("refresh_fraction_at_64ms"), "{msg}");
+        assert!(msg.contains("finite"), "{msg}");
+        let bad = DramEnergyModel {
+            approx_fraction: -0.5,
+            ..Default::default()
+        };
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("approx_fraction"), "{msg}");
+        assert!(msg.contains("[0, 1]"), "{msg}");
+        assert!(DramEnergyModel::default().validate().is_ok());
     }
 
     #[test]

@@ -18,6 +18,71 @@ use crate::fp::nan::{classify_f64, NanClass, PAPER_NAN_BITS};
 use crate::util::rng::Pcg64;
 
 use super::pool::ApproxPool;
+use super::profiles::DeviceProfile;
+
+/// Access-driven fault model (the ApproxSS view): instead of one flat
+/// per-request Binomial, each request's dose is derived from what the
+/// resident's memory actually experienced — a per-touched-word upset
+/// probability for the reads/writes the request performs, plus a hold
+/// upset rate per word-second of idle residency between requests.
+///
+/// Both rates come from the device profile's retention curve at the
+/// configured refresh interval: `BER(t)` is the per-bit error probability
+/// per retention window of length `t`, converted to a per-word NaN-upset
+/// probability via the exact exponent model in `fp::analytics` (for a
+/// typical one-zero-exponent resident word this is ≈ BER).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccessFaultModel {
+    /// NaN-upset probability per word touched by a request (read or write
+    /// lands on a word that sat un-refreshed for up to one window).
+    pub touch_upset_per_word: f64,
+    /// NaN-upset probability per word per second of idle hold.
+    pub hold_upset_per_word_sec: f64,
+    /// The refresh interval the rates were derived at, seconds.
+    pub refresh_interval_secs: f64,
+    /// The raw per-bit error rate at that interval (reported alongside
+    /// doses so results do not depend on the conversion).
+    pub ber: f64,
+}
+
+impl AccessFaultModel {
+    /// Canonical BER → per-word NaN-upset conversion: evaluated at 1.5, a
+    /// representative resident word whose exponent (0x3FF) is one flip from
+    /// all-ones.
+    pub fn word_upset_probability(ber: f64) -> f64 {
+        if ber <= 0.0 {
+            return 0.0;
+        }
+        crate::fp::analytics::p_nan_f64(1.5, ber)
+    }
+
+    /// Derive the model from a device profile at a refresh interval.  The
+    /// hold rate amortizes one retention window's upset probability over
+    /// the window length (a word held idle for `s` seconds accumulates
+    /// `s/t` windows of exposure).
+    pub fn from_profile(profile: &DeviceProfile, refresh_interval_secs: f64) -> anyhow::Result<Self> {
+        profile.validate()?;
+        if !refresh_interval_secs.is_finite() || refresh_interval_secs <= 0.0 {
+            anyhow::bail!(
+                "refresh interval must be finite and positive, got {refresh_interval_secs}"
+            );
+        }
+        let ber = profile.retention.ber(refresh_interval_secs);
+        let upset = Self::word_upset_probability(ber);
+        Ok(Self {
+            touch_upset_per_word: upset,
+            hold_upset_per_word_sec: upset / refresh_interval_secs.max(1e-6),
+            refresh_interval_secs,
+            ber,
+        })
+    }
+
+    /// Upset probability for a word held idle for `secs` seconds, clamped
+    /// to a probability.
+    pub fn hold_upset_probability(&self, secs: f64) -> f64 {
+        (self.hold_upset_per_word_sec * secs.max(0.0)).min(1.0)
+    }
+}
 
 /// What to inject.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -335,6 +400,35 @@ mod tests {
         // 1.5 (exp 0x3ff) is NaN iff bit 62 of 11 candidates flips:
         // expect ~200/11 ≈ 18 hits; P(0 hits) = (10/11)^200 ≈ 5e-9.
         assert!(made_nan > 5, "made_nan={made_nan}");
+    }
+
+    #[test]
+    fn access_fault_model_tracks_retention_curve() {
+        use crate::approxmem::profiles::DeviceProfile;
+        let p = DeviceProfile::server_ddr();
+        // Standard interval: zero BER, zero rates.
+        let std = AccessFaultModel::from_profile(&p, 0.064).unwrap();
+        assert_eq!(std.ber, 0.0);
+        assert_eq!(std.touch_upset_per_word, 0.0);
+        assert_eq!(std.hold_upset_per_word_sec, 0.0);
+        // Relaxed interval: positive rates, upset ≈ BER for typical words.
+        let relaxed = AccessFaultModel::from_profile(&p, 10.0).unwrap();
+        assert!(relaxed.ber > 0.0);
+        assert!((relaxed.touch_upset_per_word / relaxed.ber - 1.0).abs() < 0.01);
+        assert!(
+            (relaxed.hold_upset_per_word_sec - relaxed.touch_upset_per_word / 10.0).abs() < 1e-18
+        );
+        // Hold exposure is linear in idle time and clamps at 1.
+        let h1 = relaxed.hold_upset_probability(1.0);
+        let h2 = relaxed.hold_upset_probability(2.0);
+        assert!((h2 / h1 - 2.0).abs() < 1e-9);
+        assert_eq!(relaxed.hold_upset_probability(1e18), 1.0);
+        assert_eq!(relaxed.hold_upset_probability(-5.0), 0.0);
+        // Bad interval rejected with the offending value named.
+        let msg = AccessFaultModel::from_profile(&p, f64::NAN)
+            .unwrap_err()
+            .to_string();
+        assert!(msg.contains("refresh interval"), "{msg}");
     }
 
     #[test]

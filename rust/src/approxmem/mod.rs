@@ -19,6 +19,7 @@ pub mod profiles;
 pub mod retention;
 pub mod scrubber;
 
-pub use injector::{InjectionReport, InjectionSpec, Injector};
-pub use pool::{ApproxPool, Region};
+pub use injector::{AccessFaultModel, InjectionReport, InjectionSpec, Injector};
+pub use pool::{AccessLedger, ApproxPool, Region};
+pub use profiles::{AccessEnergy, DeviceProfile};
 pub use retention::RetentionModel;

@@ -40,6 +40,55 @@ struct Registry {
     regions: Vec<Region>,
 }
 
+/// Per-resident access ledger (the ApproxSS model): the serve, scrub and
+/// restore paths stamp bulk read/write word counts, and hold time accrues
+/// while the resident sits idle between dispatch windows.
+///
+/// Every counter is a pure function of the request stream — reads/writes
+/// are stamped per request from request-invariant quantities, and hold time
+/// is accrued on the virtual request-index clock at stamp time — so the
+/// ledger is worker-count and batch-size invariant by construction, like
+/// the repair ledger it sits next to.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AccessLedger {
+    /// 8-byte words read from approximate memory.
+    pub words_read: u64,
+    /// 8-byte words written to approximate memory.
+    pub words_written: u64,
+    /// Word-seconds of idle residency (words × seconds held between
+    /// accesses) — the quantity refresh energy and hold errors scale with.
+    pub hold_word_secs: f64,
+    /// Dose-stamp epochs consumed (one per request of the resident's kind);
+    /// the per-resident stream index of the `(seed, resident, epoch)` draws.
+    pub access_epochs: u64,
+}
+
+impl AccessLedger {
+    pub fn record_read(&mut self, words: u64) {
+        self.words_read += words;
+    }
+
+    pub fn record_write(&mut self, words: u64) {
+        self.words_written += words;
+    }
+
+    pub fn record_hold(&mut self, words: u64, secs: f64) {
+        self.hold_word_secs += words as f64 * secs;
+        self.access_epochs += 1;
+    }
+
+    pub fn merge(&mut self, other: &AccessLedger) {
+        self.words_read += other.words_read;
+        self.words_written += other.words_written;
+        self.hold_word_secs += other.hold_word_secs;
+        self.access_epochs += other.access_epochs;
+    }
+
+    pub fn words_touched(&self) -> u64 {
+        self.words_read + self.words_written
+    }
+}
+
 /// An allocation pool whose buffers are subject to fault injection.
 ///
 /// The pool hands out [`ApproxBuf<T>`]s (owned, aligned, zero-initialised)
@@ -294,6 +343,27 @@ mod tests {
         assert_eq!(buf[3], 6.0);
         buf[3] = -1.0;
         assert_eq!(buf.as_slice()[3], -1.0);
+    }
+
+    #[test]
+    fn access_ledger_accumulates_and_merges() {
+        let mut a = AccessLedger::default();
+        a.record_read(100);
+        a.record_write(40);
+        a.record_hold(1024, 0.5);
+        assert_eq!(a.words_read, 100);
+        assert_eq!(a.words_written, 40);
+        assert_eq!(a.words_touched(), 140);
+        assert!((a.hold_word_secs - 512.0).abs() < 1e-12);
+        assert_eq!(a.access_epochs, 1);
+        let mut b = AccessLedger::default();
+        b.record_read(1);
+        b.record_hold(2, 2.0);
+        b.merge(&a);
+        assert_eq!(b.words_read, 101);
+        assert_eq!(b.words_written, 40);
+        assert!((b.hold_word_secs - 516.0).abs() < 1e-12);
+        assert_eq!(b.access_epochs, 2);
     }
 
     #[test]

@@ -14,6 +14,38 @@ pub struct DeviceProfile {
     pub description: &'static str,
     pub retention: RetentionModel,
     pub energy: DramEnergyModel,
+    /// DRAM read energy per 8-byte word, picojoules (activate + I/O share;
+    /// ~15–25 pJ/byte for DDR-class parts).  Nominal calibration constants:
+    /// results always report the raw word counts alongside the pJ totals.
+    pub read_pj_per_word: f64,
+    /// DRAM write energy per 8-byte word, picojoules.
+    pub write_pj_per_word: f64,
+    /// Refresh energy per resident word per second of hold at the standard
+    /// 64 ms interval; relaxing the interval scales this by `0.064/t`.
+    pub refresh_pj_per_word_sec: f64,
+}
+
+/// Energy decomposition for one resident's access ledger, picojoules.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccessEnergy {
+    pub read_pj: f64,
+    pub write_pj: f64,
+    /// Refresh actually spent at the configured interval.
+    pub refresh_pj: f64,
+    /// Refresh a standard-interval (64 ms) device would have spent over the
+    /// same hold time — the baseline the savings are measured against.
+    pub refresh_baseline_pj: f64,
+}
+
+impl AccessEnergy {
+    pub fn total_pj(&self) -> f64 {
+        self.read_pj + self.write_pj + self.refresh_pj
+    }
+
+    /// Refresh energy avoided relative to the standard-interval baseline.
+    pub fn saved_pj(&self) -> f64 {
+        self.refresh_baseline_pj - self.refresh_pj
+    }
 }
 
 impl DeviceProfile {
@@ -27,6 +59,9 @@ impl DeviceProfile {
                 refresh_fraction_at_64ms: 0.20,
                 approx_fraction: 1.0,
             },
+            read_pj_per_word: 160.0,
+            write_pj_per_word: 180.0,
+            refresh_pj_per_word_sec: 0.60,
         }
     }
 
@@ -42,6 +77,9 @@ impl DeviceProfile {
                 refresh_fraction_at_64ms: 0.32,
                 approx_fraction: 0.75,
             },
+            read_pj_per_word: 80.0,
+            write_pj_per_word: 96.0,
+            refresh_pj_per_word_sec: 1.10,
         }
     }
 
@@ -59,6 +97,9 @@ impl DeviceProfile {
                 refresh_fraction_at_64ms: 0.35,
                 approx_fraction: 1.0,
             },
+            read_pj_per_word: 120.0,
+            write_pj_per_word: 140.0,
+            refresh_pj_per_word_sec: 1.40,
         }
     }
 
@@ -81,6 +122,45 @@ impl DeviceProfile {
             .interval_for_ber(ber_budget)
             .unwrap_or(self.retention.t0_secs);
         (interval, self.energy.evaluate(interval).savings)
+    }
+
+    /// Validate the composed models plus this profile's pJ calibration.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.retention.validate()?;
+        self.energy.validate()?;
+        for (name, v) in [
+            ("read_pj_per_word", self.read_pj_per_word),
+            ("write_pj_per_word", self.write_pj_per_word),
+            ("refresh_pj_per_word_sec", self.refresh_pj_per_word_sec),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                anyhow::bail!(
+                    "DeviceProfile({}).{name} must be finite and non-negative, got {v}",
+                    self.name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Price an access ledger at this profile's pJ calibration, with the
+    /// refresh term scaled to the configured interval (refresh energy ∝
+    /// refresh rate = 1/t, clamped at the 64 ms spec rate).
+    pub fn access_energy(
+        &self,
+        words_read: u64,
+        words_written: u64,
+        hold_word_secs: f64,
+        refresh_interval_secs: f64,
+    ) -> AccessEnergy {
+        let scale = (0.064 / refresh_interval_secs.max(1e-6)).min(1.0);
+        let refresh_baseline_pj = hold_word_secs * self.refresh_pj_per_word_sec;
+        AccessEnergy {
+            read_pj: words_read as f64 * self.read_pj_per_word,
+            write_pj: words_written as f64 * self.write_pj_per_word,
+            refresh_pj: refresh_baseline_pj * scale,
+            refresh_baseline_pj,
+        }
     }
 }
 
@@ -114,6 +194,33 @@ mod tests {
         assert!(t2 > t1, "looser BER budget → longer interval");
         assert!(s2 > s1, "…and more savings");
         assert!(s2 <= p.energy.max_savings() + 1e-12);
+    }
+
+    #[test]
+    fn all_profiles_validate() {
+        for p in DeviceProfile::all() {
+            p.validate().unwrap();
+        }
+        let mut bad = DeviceProfile::server_ddr();
+        bad.read_pj_per_word = f64::NAN;
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("read_pj_per_word"), "{msg}");
+    }
+
+    #[test]
+    fn access_energy_prices_the_ledger() {
+        let p = DeviceProfile::server_ddr();
+        // Standard interval: refresh at full baseline, zero savings.
+        let e = p.access_energy(10, 4, 100.0, 0.064);
+        assert!((e.read_pj - 10.0 * p.read_pj_per_word).abs() < 1e-9);
+        assert!((e.write_pj - 4.0 * p.write_pj_per_word).abs() < 1e-9);
+        assert!((e.refresh_pj - e.refresh_baseline_pj).abs() < 1e-9);
+        assert!(e.saved_pj().abs() < 1e-9);
+        // 10× relaxed interval: refresh drops 10×, reads/writes unchanged.
+        let r = p.access_energy(10, 4, 100.0, 0.64);
+        assert!((r.refresh_pj - e.refresh_baseline_pj / 10.0).abs() < 1e-9);
+        assert!((r.saved_pj() - 0.9 * e.refresh_baseline_pj).abs() < 1e-9);
+        assert!(r.total_pj() < e.total_pj());
     }
 
     #[test]

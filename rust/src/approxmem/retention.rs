@@ -70,6 +70,32 @@ impl RetentionModel {
     pub fn expected_flips(&self, n_bits: u64, t_secs: f64) -> f64 {
         self.ber(t_secs) * n_bits as f64
     }
+
+    /// Reject models with NaN/negative parameters: a poisoned retention
+    /// curve turns every derived fault rate into garbage, so fail at
+    /// configuration time with the offending field named.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, v) in [
+            ("t0_secs", self.t0_secs),
+            ("a", self.a),
+            ("b", self.b),
+            ("ber_max", self.ber_max),
+        ] {
+            if !v.is_finite() {
+                anyhow::bail!("RetentionModel.{name} must be finite and positive, got {v}");
+            }
+            if v <= 0.0 {
+                anyhow::bail!("RetentionModel.{name} must be positive, got {v}");
+            }
+        }
+        if self.ber_max > 1.0 {
+            anyhow::bail!(
+                "RetentionModel.ber_max is a per-bit probability and must lie in (0, 1], got {}",
+                self.ber_max
+            );
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -116,6 +142,31 @@ mod tests {
         }
         assert!(m.interval_for_ber(0.0).is_none());
         assert!(m.interval_for_ber(1.0).is_none());
+    }
+
+    #[test]
+    fn validate_rejects_bad_parameters() {
+        let bad = RetentionModel {
+            a: f64::NAN,
+            ..Default::default()
+        };
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("RetentionModel.a"), "{msg}");
+        assert!(msg.contains("finite"), "{msg}");
+        let bad = RetentionModel {
+            b: -1.0,
+            ..Default::default()
+        };
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("RetentionModel.b"), "{msg}");
+        assert!(msg.contains("positive"), "{msg}");
+        let bad = RetentionModel {
+            ber_max: 1.5,
+            ..Default::default()
+        };
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("ber_max"), "{msg}");
+        assert!(RetentionModel::default().validate().is_ok());
     }
 
     #[test]

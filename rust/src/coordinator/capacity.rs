@@ -58,6 +58,7 @@
 
 use anyhow::Result;
 
+use crate::approxmem::injector::AccessFaultModel;
 use crate::repair::policy::RepairPolicy;
 use crate::util::report::Record;
 use crate::util::stats::percentile_sorted;
@@ -66,7 +67,7 @@ use crate::workloads::WorkloadKind;
 
 use super::protection::Protection;
 use super::scheduler;
-use super::server::{self, Arrival, RequestMix, ServeConfig};
+use super::server::{self, Arrival, EnergyConfig, FaultProcess, RequestMix, ServeConfig};
 use super::session::ensure_servable;
 
 /// Hard cap on probes per cell: a ramp over 10 decades plus a bisection
@@ -278,6 +279,18 @@ pub struct CapacityConfig {
     pub mode: ProbeMode,
     /// Service-time model for [`ProbeMode::Model`] probes.
     pub model: ServiceModel,
+    /// Energy accounting + hold-error process shared by every probe
+    /// (model and live); the Pareto sweep derives its refresh intervals
+    /// from this profile.  `None` is the flat-dose path.
+    pub energy: Option<EnergyConfig>,
+    /// Refresh-energy savings fractions to sweep the energy–capacity
+    /// Pareto frontier over: for each budget *B* (per mix × protection)
+    /// the planner derives the longest refresh interval delivering *B*,
+    /// the retention BER at that interval, and the word upset rate it
+    /// implies, then searches the knee at that derived fault rate —
+    /// knee RPS *per energy budget* (`capacity_pareto` records).  Empty
+    /// disables the sweep.
+    pub energy_budgets: Vec<f64>,
 }
 
 impl Default for CapacityConfig {
@@ -301,6 +314,8 @@ impl Default for CapacityConfig {
             tolerance: 0.05,
             arrival: ArrivalShape::Uniform,
             mode: ProbeMode::Model,
+            energy: Some(EnergyConfig::default()),
+            energy_budgets: Vec::new(),
         }
     }
 }
@@ -362,6 +377,30 @@ impl CapacityConfig {
             self.tolerance > 0.0 && self.tolerance < 1.0,
             "--tolerance is a relative bracket width in (0, 1)"
         );
+        if let Some(e) = &self.energy {
+            e.validate()?;
+        }
+        if !self.energy_budgets.is_empty() {
+            let e = self.energy.as_ref().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--energy-budget needs an energy profile; the flat-dose path \
+                     has no refresh model to derive intervals from"
+                )
+            })?;
+            let cap = e.profile.energy.max_savings();
+            for &b in &self.energy_budgets {
+                anyhow::ensure!(
+                    b.is_finite() && b > 0.0 && b < cap,
+                    "--energy-budget {} must be a refresh-savings fraction in \
+                     (0, {:.3}) — profile {} cannot save more than {:.1} % of \
+                     DRAM energy by stretching refresh",
+                    b,
+                    cap,
+                    e.profile.name,
+                    cap * 100.0
+                );
+            }
+        }
         Ok(())
     }
 
@@ -371,7 +410,9 @@ impl CapacityConfig {
     }
 
     /// The configuration matrix, in deterministic
-    /// mix-major × protection × fault-rate order.
+    /// mix-major × protection × fault-rate order; the energy-budget
+    /// Pareto cells (mix-major × protection × budget) follow the base
+    /// matrix so classic record streams keep their historical prefix.
     fn cells(&self) -> Vec<CapacityCell> {
         let mut cells = Vec::new();
         for mix in &self.mixes {
@@ -381,8 +422,40 @@ impl CapacityConfig {
                         mix: mix.clone(),
                         protection,
                         fault_rate,
+                        energy: self.energy.clone(),
+                        pareto: None,
                         shared: self.clone(),
                     });
+                }
+            }
+        }
+        if !self.energy_budgets.is_empty() {
+            let e = self.energy.as_ref().expect("validated: budgets need an energy profile");
+            for mix in &self.mixes {
+                for &protection in &self.protections {
+                    for &budget in &self.energy_budgets {
+                        let t = e
+                            .profile
+                            .energy
+                            .interval_for_savings(budget)
+                            .expect("validated: budget below the profile ceiling");
+                        let ber = e.profile.retention.ber(t);
+                        cells.push(CapacityCell {
+                            mix: mix.clone(),
+                            protection,
+                            fault_rate: AccessFaultModel::word_upset_probability(ber),
+                            energy: Some(EnergyConfig {
+                                refresh_interval_secs: t,
+                                ..e.clone()
+                            }),
+                            pareto: Some(ParetoPoint {
+                                energy_budget: budget,
+                                refresh_interval_secs: t,
+                                ber,
+                            }),
+                            shared: self.clone(),
+                        });
+                    }
                 }
             }
         }
@@ -390,27 +463,54 @@ impl CapacityConfig {
     }
 }
 
+/// How a Pareto cell's fault rate was derived from its energy budget:
+/// budget → longest refresh interval delivering it → retention BER at
+/// that interval → per-word upset probability.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParetoPoint {
+    /// Refresh-energy savings fraction the cell is budgeted at.
+    pub energy_budget: f64,
+    /// Longest refresh interval (seconds) delivering that savings.
+    pub refresh_interval_secs: f64,
+    /// Retention BER at that interval.
+    pub ber: f64,
+}
+
 /// One cell of the capacity matrix: a concrete
 /// `(mix, protection, fault_rate)` triple plus the shared knobs.
+/// Pareto cells additionally carry the energy-budget derivation their
+/// fault rate (and per-cell refresh interval) came from.
 #[derive(Debug, Clone)]
 struct CapacityCell {
     mix: RequestMix,
     protection: Protection,
     fault_rate: f64,
+    energy: Option<EnergyConfig>,
+    pareto: Option<ParetoPoint>,
     shared: CapacityConfig,
 }
 
 impl CapacityCell {
     /// `mix/protection@shape×rate`-style label shared by all of the
-    /// cell's records.
+    /// cell's records (`e{budget}` instead of `f{rate}` for Pareto
+    /// cells — the budget is their identity; the rate is derived).
     fn label(&self) -> String {
-        format!(
-            "{}/{}/f{:e}@{}",
-            self.mix.label(),
-            self.protection.name(),
-            self.fault_rate,
-            self.shared.arrival.name()
-        )
+        match &self.pareto {
+            Some(p) => format!(
+                "{}/{}/e{}@{}",
+                self.mix.label(),
+                self.protection.name(),
+                p.energy_budget,
+                self.shared.arrival.name()
+            ),
+            None => format!(
+                "{}/{}/f{:e}@{}",
+                self.mix.label(),
+                self.protection.name(),
+                self.fault_rate,
+                self.shared.arrival.name()
+            ),
+        }
     }
 }
 
@@ -521,6 +621,9 @@ pub struct CapacityOutcome {
     /// True when the knee equals `max_rps` because nothing failed — the
     /// real knee is above the ramp ceiling.
     pub ceiling: bool,
+    /// The energy-budget derivation behind this cell's fault rate
+    /// (`None` for classic fault-rate cells).
+    pub pareto: Option<ParetoPoint>,
 }
 
 impl CapacityOutcome {
@@ -572,6 +675,12 @@ impl CapacityOutcome {
             .field("probes", self.points.len())
             .field("knee_rps", self.knee_rps)
             .field("ceiling", self.ceiling);
+        if let Some(p) = &self.pareto {
+            rec = rec
+                .field("energy_budget", p.energy_budget)
+                .field("refresh_interval_secs", p.refresh_interval_secs)
+                .field("ber", p.ber);
+        }
         if let Some(f) = self.fail_rps {
             rec = rec.field("fail_rps", f);
         }
@@ -618,7 +727,90 @@ impl CapacityReport {
             }
             out.push(o.knee_record(&self.config));
         }
+        // The energy–capacity Pareto frontier closes the stream: one
+        // `energy_budget` derivation record per swept budget, then one
+        // `capacity_pareto` summary per Pareto cell, all in matrix order.
+        if self.outcomes.iter().any(|o| o.pareto.is_some()) {
+            let e = self
+                .config
+                .energy
+                .as_ref()
+                .expect("pareto outcomes come from an energy profile");
+            for &b in &self.config.energy_budgets {
+                let t = e
+                    .profile
+                    .energy
+                    .interval_for_savings(b)
+                    .expect("validated: budget below the profile ceiling");
+                let point = e.profile.energy.evaluate(t);
+                let ber = e.profile.retention.ber(t);
+                out.push(
+                    Record::new("energy_budget")
+                        .field("profile", e.profile.name)
+                        .field("energy_budget", b)
+                        .field("refresh_interval_secs", t)
+                        .field("ber", ber)
+                        .field("fault_rate", AccessFaultModel::word_upset_probability(ber))
+                        .field("relative_energy", point.relative_energy)
+                        .field("savings", point.savings),
+                );
+            }
+            for o in self.outcomes.iter().filter(|o| o.pareto.is_some()) {
+                let p = o.pareto.as_ref().expect("filtered on pareto cells");
+                let mut rec = Record::new("capacity_pareto")
+                    .field("label", o.label.as_str())
+                    .field("mix", o.mix.label())
+                    .field("protection", o.protection.name())
+                    .field("profile", e.profile.name)
+                    .field("energy_budget", p.energy_budget)
+                    .field("refresh_interval_secs", p.refresh_interval_secs)
+                    .field("ber", p.ber)
+                    .field("fault_rate", o.fault_rate)
+                    .field("knee_rps", o.knee_rps)
+                    .field("ceiling", o.ceiling);
+                if let Some(kp) = o.knee_point() {
+                    rec = rec
+                        .field("knee_p99_secs", kp.p99_secs)
+                        .field("knee_shed_frac", kp.shed_frac)
+                        .field("knee_throughput_rps", kp.throughput_rps);
+                }
+                out.push(rec);
+            }
+        }
         out
+    }
+
+    /// The energy–capacity Pareto table (knee RPS per energy budget);
+    /// `None` when no budgets were swept.
+    pub fn pareto_table(&self) -> Option<Table> {
+        let rows: Vec<&CapacityOutcome> =
+            self.outcomes.iter().filter(|o| o.pareto.is_some()).collect();
+        if rows.is_empty() {
+            return None;
+        }
+        let profile = self
+            .config
+            .energy
+            .as_ref()
+            .map(|e| e.profile.name)
+            .unwrap_or("?");
+        let mut t = Table::new(
+            &format!("energy-capacity pareto — profile {profile}"),
+            &["config", "budget", "refresh", "ber", "fault rate", "knee rps", "ceiling"],
+        );
+        for o in rows {
+            let p = o.pareto.as_ref().expect("filtered on pareto cells");
+            t.row(&[
+                format!("{}/{}", o.mix.label(), o.protection.name()),
+                format!("{:.1} %", p.energy_budget * 100.0),
+                format!("{:.3} s", p.refresh_interval_secs),
+                format!("{:.2e}", p.ber),
+                format!("{:.2e}", o.fault_rate),
+                format!("{:.1}", o.knee_rps),
+                if o.ceiling { "yes".into() } else { "no".into() },
+            ]);
+        }
+        Some(t)
     }
 
     /// The human knee table (default text output).
@@ -749,6 +941,7 @@ fn find_knee(cell: &CapacityCell) -> Result<CapacityOutcome> {
         knee_rps,
         fail_rps,
         ceiling: fail_rps.is_none() && pass_rps.is_some(),
+        pareto: cell.pareto,
     })
 }
 
@@ -777,15 +970,19 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
     let n = cfg.requests;
     let seed = probe_seed(cfg.seed, rate_index);
     let kinds = cell.mix.kinds();
-    let kind_index = |kind: WorkloadKind| -> usize {
-        kinds
-            .iter()
-            .position(|&k| k == kind)
-            .expect("stamped kind is in the mix")
-    };
-    let offsets = cfg
-        .arrival
-        .arrival(rps)
+    let arrival = cfg.arrival.arrival(rps);
+    // The same access-driven fault process a live probe runs: touch
+    // doses plus per-kind hold doses accrued on the arrival clock.
+    let mut faults = FaultProcess::new(
+        seed,
+        &cell.mix,
+        cell.fault_rate,
+        &arrival,
+        n,
+        cell.energy.as_ref(),
+    )
+    .expect("cell energy config validated before probing");
+    let offsets = arrival
         .offsets(seed, n)
         .expect("capacity probes are open-loop");
     let deadline = cfg.effective_deadline();
@@ -859,8 +1056,9 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
         dequeue_at[i] = dequeue;
 
         // The same (kind, dose, placement) stamp a live run derives.
-        let (kind, dose) = server::request_stamp(seed, &cell.mix, cell.fault_rate, i);
-        let ki = kind_index(kind);
+        let stamp = faults.stamp(i);
+        let (kind, dose) = (stamp.kind, stamp.dose);
+        let ki = stamp.kind_idx;
         let input_words = kind.input_words();
         let planted = planted_words(seed, i, dose, input_words);
         dose_total += dose;
@@ -1006,6 +1204,7 @@ fn probe_live(cell: &CapacityCell, rps: f64, rate_index: usize) -> Result<ProbeP
         deadline: Some(cfg.effective_deadline()),
         warmup: cfg.warmup,
         slo_shed: Some(cfg.slo_shed),
+        energy: cell.energy.clone(),
     })?;
     let measured = report.measured();
     let shed = measured.iter().filter(|r| r.is_shed()).count() as u64;
@@ -1276,7 +1475,73 @@ mod tests {
         assert!(plan(&CapacityConfig { min_rps: 0.0, ..ok.clone() }, 1).is_err());
         assert!(plan(&CapacityConfig { max_rps: 1.0, ..ok.clone() }, 1).is_err());
         assert!(plan(&CapacityConfig { tolerance: 0.0, ..ok.clone() }, 1).is_err());
-        assert!(plan(&CapacityConfig { deadline: Some(-1.0), ..ok }, 1).is_err());
+        assert!(plan(&CapacityConfig { deadline: Some(-1.0), ..ok.clone() }, 1).is_err());
+        // budgets beyond the profile's refresh ceiling (server-ddr caps
+        // at 20 % savings), non-positive, non-finite, or without any
+        // energy profile to derive intervals from
+        let err = plan(&CapacityConfig { energy_budgets: vec![0.5], ..ok.clone() }, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cannot save more than"), "{err}");
+        assert!(
+            plan(&CapacityConfig { energy_budgets: vec![0.0], ..ok.clone() }, 1).is_err()
+        );
+        assert!(
+            plan(&CapacityConfig { energy_budgets: vec![f64::NAN], ..ok.clone() }, 1)
+                .is_err()
+        );
+        assert!(plan(
+            &CapacityConfig { energy: None, energy_budgets: vec![0.1], ..ok },
+            1
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn energy_budget_sweep_emits_a_deterministic_pareto_frontier() {
+        let cfg = CapacityConfig {
+            energy_budgets: vec![0.10, 0.199],
+            ..model_cfg()
+        };
+        let a = plan(&cfg, 1).unwrap();
+        let b = plan(&cfg, 4).unwrap();
+        let ra: Vec<String> = a.records().iter().map(Record::render_jsonl).collect();
+        let rb: Vec<String> = b.records().iter().map(Record::render_jsonl).collect();
+        assert_eq!(ra, rb, "the pareto sweep must be matrix-worker invariant");
+
+        // 1 base cell + 2 pareto cells, budgets in config order.
+        assert_eq!(a.outcomes.len(), 3);
+        assert!(a.outcomes[0].pareto.is_none());
+        let p1 = a.outcomes[1].pareto.expect("budget cell");
+        let p2 = a.outcomes[2].pareto.expect("budget cell");
+        assert_eq!(p1.energy_budget, 0.10);
+        assert_eq!(p2.energy_budget, 0.199);
+        // A deeper savings budget stretches refresh further and raises
+        // the derived BER and fault rate — the trade the sweep measures.
+        assert!(p2.refresh_interval_secs > p1.refresh_interval_secs);
+        assert!(p2.ber > p1.ber);
+        assert!(a.outcomes[2].fault_rate > a.outcomes[1].fault_rate);
+        assert!(a.outcomes[1].label.contains("/e0.1@"), "{}", a.outcomes[1].label);
+
+        // Record stream: base cell's points+knee first, then each pareto
+        // cell's stream, then one energy_budget per budget and one
+        // capacity_pareto per pareto cell closing the stream.
+        let recs = a.records();
+        let kinds: Vec<&str> = recs.iter().map(|r| r.kind()).collect();
+        let first_budget = kinds.iter().position(|&k| k == "energy_budget").unwrap();
+        assert!(kinds[..first_budget]
+            .iter()
+            .all(|&k| k == "capacity_point" || k == "capacity_knee"));
+        assert_eq!(kinds[first_budget..first_budget + 2], ["energy_budget"; 2][..]);
+        assert_eq!(kinds[first_budget + 2..], ["capacity_pareto"; 2][..]);
+        let pareto = &recs[first_budget + 2];
+        assert!(pareto.get("energy_budget").is_some());
+        assert!(pareto.get("knee_rps").is_some());
+        // knee records of pareto cells carry the derivation inline
+        let knee = a.outcomes[1].knee_record(&cfg);
+        assert!(knee.get("refresh_interval_secs").is_some());
+        assert_eq!(a.pareto_table().expect("budgets swept").n_rows(), 2);
+        assert!(plan(&model_cfg(), 1).unwrap().pareto_table().is_none());
     }
 
     #[test]

@@ -97,6 +97,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::approxmem::injector::AccessFaultModel;
+use crate::approxmem::profiles::DeviceProfile;
 use crate::repair::policy::RepairPolicy;
 use crate::trap::{TrapStats, NUM_DOMAINS};
 use crate::util::report::{Json, LatencyHistogram, Record};
@@ -113,6 +115,9 @@ pub(crate) const FAULT_SEED: u64 = 0x6661756c745f7271; // "fault_rq"
 
 /// Seed domain separator for the Poisson inter-arrival gap draws.
 const ARRIVAL_SEED: u64 = 0x6172726976616c73; // "arrivals"
+
+/// Seed domain separator for the hold-error (retention) dose draws.
+pub(crate) const HOLD_SEED: u64 = 0x686f6c6465727273; // "holderrs"
 
 /// How requests arrive at the queue.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -348,6 +353,60 @@ impl RequestMix {
     }
 }
 
+/// Energy-accounting configuration of a serving run: the device whose
+/// pJ/word calibration and retention curve price the residents' access
+/// ledgers, and the refresh interval the approximate pool runs at.
+/// Present by default — every serve run emits `energy_*` records fed by
+/// the real per-resident ledgers — and `None` only reproduces the
+/// flat-dose compatibility path (hold doses zero, no energy records;
+/// the `serve_energy` benchmark's baseline leg).
+#[derive(Debug, Clone)]
+pub struct EnergyConfig {
+    /// Device profile: retention curve, refresh-energy model, and
+    /// pJ/word access costs ([`DeviceProfile::by_name`]).
+    pub profile: DeviceProfile,
+    /// DRAM refresh interval the approximate pool runs at, in seconds.
+    /// Sets the retention BER behind the hold-error process and the
+    /// refresh energy drawn while residents sit in memory.
+    pub refresh_interval_secs: f64,
+    /// Closed-loop idle-time quantum: with no arrival schedule, request
+    /// `i` of the run is modelled as arriving `i * hold_tick_secs` after
+    /// the origin, so a resident's hold time accrues on the virtual
+    /// request-index clock — worker-count and batch-size invariant by
+    /// construction.  Open-loop runs use the arrival schedule itself
+    /// (also a pure function of the seed) and ignore this knob.
+    pub hold_tick_secs: f64,
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        Self {
+            profile: DeviceProfile::server_ddr(),
+            refresh_interval_secs: 1.0,
+            hold_tick_secs: 1e-3,
+        }
+    }
+}
+
+impl EnergyConfig {
+    /// Validate the profile and the run knobs (actionable errors — a
+    /// NaN refresh interval must not silently zero the energy ledger).
+    pub fn validate(&self) -> Result<()> {
+        self.profile.validate()?;
+        anyhow::ensure!(
+            self.refresh_interval_secs > 0.0 && self.refresh_interval_secs.is_finite(),
+            "--refresh-interval must be positive and finite, got {}",
+            self.refresh_interval_secs
+        );
+        anyhow::ensure!(
+            self.hold_tick_secs > 0.0 && self.hold_tick_secs.is_finite(),
+            "hold tick must be positive and finite, got {}",
+            self.hold_tick_secs
+        );
+        Ok(())
+    }
+}
+
 /// Full description of one serving run.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -409,6 +468,9 @@ pub struct ServeConfig {
     /// (otherwise a server could "meet" any latency target by shedding
     /// everything).
     pub slo_shed: Option<f64>,
+    /// Energy accounting + hold-error process ([`EnergyConfig`]).  On by
+    /// default; `None` is the flat-dose compatibility path.
+    pub energy: Option<EnergyConfig>,
 }
 
 impl Default for ServeConfig {
@@ -429,6 +491,7 @@ impl Default for ServeConfig {
             deadline: None,
             warmup: 0,
             slo_shed: None,
+            energy: Some(EnergyConfig::default()),
         }
     }
 }
@@ -488,6 +551,13 @@ struct ServeRequest {
     /// Position of `kind` in the mix (sub-queue routing key).
     kind_idx: usize,
     dose: u64,
+    /// Of `dose`, the hold-error share (retention upsets accrued while
+    /// the resident sat idle since its previous request; 0 on the
+    /// flat-dose path).
+    hold_dose: u64,
+    /// Idle seconds the fault process charged this request's resident,
+    /// on the virtual request-index clock.
+    hold_secs: f64,
     arrival: Instant,
 }
 
@@ -770,8 +840,16 @@ pub struct RequestResult {
     /// Workload kind the injector stamped on the request (a pure
     /// function of `(seed, index)`, like the dose).
     pub kind: WorkloadKind,
-    /// NaN dose the fault injector stamped on the request.
+    /// NaN dose the fault injector stamped on the request (touch dose
+    /// plus hold dose under access-driven injection).
     pub dose: u64,
+    /// Of `dose`, the hold-error share: retention upsets accrued while
+    /// the resident sat idle since its previous request (0 on the
+    /// flat-dose path).
+    pub hold_dose: u64,
+    /// Idle seconds the fault process charged this request's resident
+    /// on the virtual request-index clock.
+    pub hold_secs: f64,
     /// What the worker did with it (served compute or overload shed) and
     /// what that cost.
     pub outcome: RequestOutcome,
@@ -846,6 +924,8 @@ impl RequestResult {
             .field("kind", self.kind.to_string())
             .field("outcome", if self.is_shed() { "shed" } else { "served" })
             .field("dose", self.dose)
+            .field("hold_dose", self.hold_dose)
+            .field("hold_secs", self.hold_secs)
             .field("nans_planted", self.outcome.nans_planted())
             .field("sigfpe", traps.sigfpe_total)
             .field("register_repairs", traps.register_repairs)
@@ -878,8 +958,22 @@ pub struct KindSummary {
     pub shed: u64,
     /// Total NaN dose issued against this kind's residents.
     pub dose_total: u64,
+    /// Of `dose_total`, the hold-error share (retention upsets accrued
+    /// while this kind's residents sat idle).
+    pub hold_dose_total: u64,
     /// Total distinct NaN words planted into this kind's residents.
     pub nans_planted: u64,
+    /// Words read from this kind's residents (access ledger, whole run:
+    /// request inputs + scrub sweeps), summed in request-index order.
+    pub words_read: u64,
+    /// Words written to this kind's residents (outputs, plants, repairs,
+    /// restores), summed in request-index order.
+    pub words_written: u64,
+    /// Word-seconds this kind's residents sat idle in approximate
+    /// memory (the refresh-energy integrand), summed in request-index
+    /// order — worker-count invariant because every addend is a pure
+    /// function of `(seed, request_index)`.
+    pub hold_word_secs: f64,
     /// SIGFPE traps taken serving this kind.
     pub sigfpe_total: u64,
     /// Repairs attributable to this kind (register + memory + scrub +
@@ -917,7 +1011,11 @@ impl KindSummary {
             .field("served", self.served)
             .field("shed", self.shed)
             .field("dose_total", self.dose_total)
+            .field("hold_dose_total", self.hold_dose_total)
             .field("nans_planted", self.nans_planted)
+            .field("words_read", self.words_read)
+            .field("words_written", self.words_written)
+            .field("hold_word_secs", self.hold_word_secs)
             .field("sigfpe_total", self.sigfpe_total)
             .field("repairs_total", self.repairs_total)
             .field("output_nans", self.output_nans)
@@ -985,6 +1083,9 @@ pub struct ServeReport {
     pub slo_kind_p99: Vec<(String, f64)>,
     /// Maximum tolerable measured shed fraction (if set).
     pub slo_shed: Option<f64>,
+    /// Energy accounting of the run (emits the `energy_resident` and
+    /// `energy_summary` records; `None` on the flat-dose path).
+    pub energy: Option<EnergyConfig>,
 }
 
 impl ServeReport {
@@ -1165,7 +1266,14 @@ impl ServeReport {
                     served: all.iter().filter(|r| !r.is_shed()).count() as u64,
                     shed: all.iter().filter(|r| r.is_shed()).count() as u64,
                     dose_total: all.iter().map(|r| r.dose).sum(),
+                    hold_dose_total: all.iter().map(|r| r.hold_dose).sum(),
                     nans_planted: all.iter().map(|r| r.nans_planted()).sum(),
+                    words_read: all.iter().map(|r| r.outcome.words_read()).sum(),
+                    words_written: all.iter().map(|r| r.outcome.words_written()).sum(),
+                    hold_word_secs: all
+                        .iter()
+                        .map(|r| kind.input_words() as f64 * r.hold_secs)
+                        .sum(),
                     sigfpe_total: all.iter().map(|r| r.traps().sigfpe_total).sum(),
                     repairs_total: all.iter().map(|r| r.repairs()).sum(),
                     output_nans: all.iter().map(|r| r.output_nans()).sum(),
@@ -1277,6 +1385,58 @@ impl ServeReport {
         Some(p99_ok && shed_ok && kinds_ok)
     }
 
+    /// The `energy_resident` records (one per mix kind, in mix order)
+    /// plus the run's `energy_summary`: each resident's access ledger
+    /// priced at the profile's pJ/word calibration with the refresh term
+    /// scaled to the configured interval, and the refresh-relative
+    /// savings the interval buys.  Every input is either a u64 ledger
+    /// total or a float summed in request-index order, so the records
+    /// are byte-identical at any worker count and batch size.
+    fn energy_records(&self, e: &EnergyConfig) -> Vec<Record> {
+        let mut out = Vec::new();
+        let mut total_pj = 0.0;
+        let mut saved_pj = 0.0;
+        for ks in self.kind_summaries() {
+            let ae = e.profile.access_energy(
+                ks.words_read,
+                ks.words_written,
+                ks.hold_word_secs,
+                e.refresh_interval_secs,
+            );
+            total_pj += ae.total_pj();
+            saved_pj += ae.saved_pj();
+            out.push(
+                Record::new("energy_resident")
+                    .field("label", self.config_label.as_str())
+                    .field("kind", ks.kind.to_string())
+                    .field("profile", e.profile.name)
+                    .field("words_read", ks.words_read)
+                    .field("words_written", ks.words_written)
+                    .field("hold_word_secs", ks.hold_word_secs)
+                    .field("hold_dose", ks.hold_dose_total)
+                    .field("read_pj", ae.read_pj)
+                    .field("write_pj", ae.write_pj)
+                    .field("refresh_pj", ae.refresh_pj)
+                    .field("refresh_baseline_pj", ae.refresh_baseline_pj)
+                    .field("total_pj", ae.total_pj())
+                    .field("saved_pj", ae.saved_pj()),
+            );
+        }
+        let point = e.profile.energy.evaluate(e.refresh_interval_secs);
+        out.push(
+            Record::new("energy_summary")
+                .field("label", self.config_label.as_str())
+                .field("profile", e.profile.name)
+                .field("refresh_interval_secs", e.refresh_interval_secs)
+                .field("ber", e.profile.retention.ber(e.refresh_interval_secs))
+                .field("relative_energy", point.relative_energy)
+                .field("savings", point.savings)
+                .field("total_pj", total_pj)
+                .field("saved_pj", saved_pj),
+        );
+        out
+    }
+
     /// The final `serve_slo` summary record.
     pub fn slo_record(&self) -> Record {
         let lat = self.sorted_latencies();
@@ -1360,6 +1520,9 @@ impl ServeReport {
         out.push(qw_hist.to_record("serve_queue_wait"));
         out.push(self.latency_hist.to_record("serve_latency"));
         out.push(self.batch_fill_record());
+        if let Some(e) = &self.energy {
+            out.extend(self.energy_records(e));
+        }
         out.push(self.slo_record());
         out
     }
@@ -1408,6 +1571,29 @@ impl ServeReport {
             ]);
         }
         t.row(&["NaNs in responses".into(), self.output_nans_total().to_string()]);
+        if let Some(e) = &self.energy {
+            let mut total_pj = 0.0;
+            let mut saved_pj = 0.0;
+            for ks in self.kind_summaries() {
+                let ae = e.profile.access_energy(
+                    ks.words_read,
+                    ks.words_written,
+                    ks.hold_word_secs,
+                    e.refresh_interval_secs,
+                );
+                total_pj += ae.total_pj();
+                saved_pj += ae.saved_pj();
+            }
+            let point = e.profile.energy.evaluate(e.refresh_interval_secs);
+            t.row(&[
+                format!("energy ({} @ {})", e.profile.name, fmt_secs(e.refresh_interval_secs)),
+                format!("{total_pj:.0} pJ ({saved_pj:.0} pJ refresh saved)"),
+            ]);
+            t.row(&[
+                "DRAM energy vs 64 ms refresh".into(),
+                format!("{:.1}% ({:.1}% saved)", point.relative_energy * 100.0, point.savings * 100.0),
+            ]);
+        }
         if !self.mix.is_single() || !self.slo_kind_p99.is_empty() {
             for ks in self.kind_summaries() {
                 let target = match ks.slo_p99 {
@@ -1483,6 +1669,127 @@ pub(crate) fn request_stamp(
     (kind, dose)
 }
 
+/// Hold-dose stream seed for access epoch `epoch` of mix kind
+/// `kind_idx`: the dose a resident accrues while idle is keyed by
+/// `(seed, resident, access_epoch)` — not by worker or batch — so the
+/// hold-error process is invariant under both knobs.
+pub(crate) fn hold_seed(seed: u64, kind_idx: usize, epoch: u64) -> u64 {
+    (seed ^ HOLD_SEED)
+        .wrapping_add((kind_idx as u64).wrapping_mul(0xd1b54a32d192ed03))
+        .wrapping_add(epoch.wrapping_mul(0x9e3779b97f4a7c15))
+}
+
+/// One request's stamp from the access-driven fault process.
+pub(crate) struct FaultStamp {
+    pub(crate) kind: WorkloadKind,
+    pub(crate) kind_idx: usize,
+    /// Total NaN dose: touch dose + hold dose.
+    pub(crate) dose: u64,
+    /// Of `dose`, the retention (hold-error) share.
+    pub(crate) hold_dose: u64,
+    /// Idle seconds charged to the resident, virtual-clock.
+    pub(crate) hold_secs: f64,
+}
+
+/// The access-driven fault process (DESIGN.md §4.5): stamps requests
+/// **in index order** with a kind, a *touch* dose — the legacy
+/// `Binomial(kind.input_words(), fault_rate)` over the words the
+/// request actually reads, exactly [`request_stamp`] — and a *hold*
+/// dose: retention upsets accrued while the kind's resident sat idle
+/// since its previous request, at the BER the configured refresh
+/// interval implies ([`AccessFaultModel`]).  Idle time is read off the
+/// deterministic virtual clock (the arrival schedule when one exists,
+/// else `index * hold_tick_secs`), and hold doses draw from per-kind
+/// `(seed, resident, access_epoch)` streams ([`hold_seed`]) — so every
+/// stamp is a pure function of the seed and the request index, never of
+/// worker assignment or batch formation.  With no energy config the
+/// process reduces byte-identically to the flat [`request_stamp`] path.
+/// Shared by the live load generator and the capacity planner's
+/// virtual-time probe, so model doses match live ones by construction.
+pub(crate) struct FaultProcess<'a> {
+    seed: u64,
+    mix: &'a RequestMix,
+    fault_rate: f64,
+    /// Retention-derived hold-error model (`None` ⇒ flat-dose path).
+    hold: Option<AccessFaultModel>,
+    hold_tick_secs: f64,
+    /// Scheduled arrival offsets (`None` for closed loop).
+    offsets: Option<Vec<f64>>,
+    /// Per-kind virtual instant of the last access, in mix order.
+    last_access: Vec<f64>,
+    /// Per-kind access-epoch counters (the hold-dose stream key).
+    access_epochs: Vec<u64>,
+}
+
+impl<'a> FaultProcess<'a> {
+    pub(crate) fn new(
+        seed: u64,
+        mix: &'a RequestMix,
+        fault_rate: f64,
+        arrival: &Arrival,
+        requests: usize,
+        energy: Option<&EnergyConfig>,
+    ) -> Result<Self> {
+        let hold = match energy {
+            None => None,
+            Some(e) => Some(AccessFaultModel::from_profile(
+                &e.profile,
+                e.refresh_interval_secs,
+            )?),
+        };
+        Ok(Self {
+            seed,
+            mix,
+            fault_rate,
+            hold,
+            hold_tick_secs: energy.map_or(0.0, |e| e.hold_tick_secs),
+            offsets: arrival.offsets(seed, requests),
+            last_access: vec![0.0; mix.entries().len()],
+            access_epochs: vec![0; mix.entries().len()],
+        })
+    }
+
+    /// The virtual instant request `index` arrives at.
+    fn clock(&self, index: usize) -> f64 {
+        match &self.offsets {
+            Some(offs) => offs[index],
+            None => index as f64 * self.hold_tick_secs,
+        }
+    }
+
+    /// Stamp request `index`.  Must be called in index order — the
+    /// per-kind idle clocks and access epochs advance with each call.
+    pub(crate) fn stamp(&mut self, index: usize) -> FaultStamp {
+        let (kind, touch_dose) = request_stamp(self.seed, self.mix, self.fault_rate, index);
+        let kind_idx = self
+            .mix
+            .entries()
+            .iter()
+            .position(|&(k, _)| k == kind)
+            .expect("stamped kind comes from the mix");
+        let (hold_dose, hold_secs) = match &self.hold {
+            None => (0, 0.0),
+            Some(model) => {
+                let now = self.clock(index);
+                let hold_secs = (now - self.last_access[kind_idx]).max(0.0);
+                self.last_access[kind_idx] = now;
+                let epoch = self.access_epochs[kind_idx];
+                self.access_epochs[kind_idx] += 1;
+                let p = model.hold_upset_probability(hold_secs);
+                let mut rng = Pcg64::seed(hold_seed(self.seed, kind_idx, epoch));
+                (rng.binomial(kind.input_words() as u64, p), hold_secs)
+            }
+        };
+        FaultStamp {
+            kind,
+            kind_idx,
+            dose: touch_dose + hold_dose,
+            hold_dose,
+            hold_secs,
+        }
+    }
+}
+
 /// Run one serving campaign: spawn the workers and the
 /// load-generator/fault-injector thread, serve every request, and
 /// assemble the [`ServeReport`].
@@ -1544,6 +1851,9 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         cfg.warmup,
         cfg.requests
     );
+    if let Some(e) = &cfg.energy {
+        e.validate()?;
+    }
     let workers = cfg.workers.clamp(1, NUM_DOMAINS).min(cfg.requests);
     let deadline = cfg.deadline.map(Duration::from_secs_f64);
 
@@ -1568,21 +1878,29 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
     let admission_closed: Mutex<Option<Instant>> = Mutex::new(None);
     let admission_closed = &admission_closed;
 
+    // The access-driven fault process (built before the threads spawn so
+    // profile/interval errors surface here, not in a worker panic).
+    let mut faults = FaultProcess::new(
+        cfg.seed,
+        &cfg.mix,
+        cfg.fault_rate,
+        &cfg.arrival,
+        cfg.requests,
+        cfg.energy.as_ref(),
+    )?;
+
     let (t0, last_done, results, first_err) = std::thread::scope(|scope| {
         // Load generator + fault injector: stamps each request with its
-        // deterministic NaN dose and paces arrivals.
+        // deterministic NaN dose (touch + hold, in index order) and
+        // paces arrivals.
+        let faults = &mut faults;
         scope.spawn(move || {
             let _close = CloseOnDrop(queue);
             let offsets = cfg.arrival.offsets(cfg.seed, cfg.requests);
-            let kinds = cfg.mix.kinds();
             ready.wait();
             let start = Instant::now();
             for index in 0..cfg.requests {
-                let (kind, dose) = request_stamp(cfg.seed, &cfg.mix, cfg.fault_rate, index);
-                let kind_idx = kinds
-                    .iter()
-                    .position(|k| *k == kind)
-                    .expect("stamped kind comes from the mix");
+                let stamp = faults.stamp(index);
                 let arrival = match &offsets {
                     None => Instant::now(),
                     Some(offs) => {
@@ -1603,9 +1921,11 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                     index % workers,
                     ServeRequest {
                         index,
-                        kind,
-                        kind_idx,
-                        dose,
+                        kind: stamp.kind,
+                        kind_idx: stamp.kind_idx,
+                        dose: stamp.dose,
+                        hold_dose: stamp.hold_dose,
+                        hold_secs: stamp.hold_secs,
                         arrival,
                     },
                 );
@@ -1660,6 +1980,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                             policy: cfg.policy,
                             dose: req.dose,
                             placement_seed: request_seed(cfg.seed, req.index),
+                            hold_secs: req.hold_secs,
                         };
                         let blown = deadline
                             .map(|d| dispatch.saturating_duration_since(req.arrival) > d)
@@ -1681,6 +2002,8 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                                 worker,
                                 kind: req.kind,
                                 dose: req.dose,
+                                hold_dose: req.hold_dose,
+                                hold_secs: req.hold_secs,
                                 outcome,
                                 queue_wait_secs: dispatch
                                     .saturating_duration_since(req.arrival)
@@ -1697,6 +2020,8 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                                 worker,
                                 kind: req.kind,
                                 dose: req.dose,
+                                hold_dose: req.hold_dose,
+                                hold_secs: req.hold_secs,
                                 outcome,
                                 queue_wait_secs: dispatch
                                     .saturating_duration_since(req.arrival)
@@ -1784,6 +2109,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         slo_p99: cfg.slo_p99,
         slo_kind_p99: cfg.slo_kind_p99.clone(),
         slo_shed: cfg.slo_shed,
+        energy: cfg.energy.clone(),
     })
 }
 
@@ -1920,6 +2246,8 @@ mod tests {
             kind: WorkloadKind::MatMul { n: 12 },
             kind_idx,
             dose: 0,
+            hold_dose: 0,
+            hold_secs: 0.0,
             arrival: Instant::now(),
         }
     }
@@ -2040,16 +2368,18 @@ mod tests {
         assert_eq!(rep.latency_hist.count(), 6);
 
         let recs = rep.records();
-        assert_eq!(recs.len(), 6 + 4);
+        assert_eq!(recs.len(), 6 + 6);
         assert!(recs[..6].iter().all(|r| r.kind() == "serve_request"));
         assert_eq!(recs[6].kind(), "serve_queue_wait");
         assert_eq!(recs[7].kind(), "serve_latency");
         assert_eq!(recs[8].kind(), "batch_fill");
-        assert_eq!(recs[9].kind(), "serve_slo");
+        assert_eq!(recs[9].kind(), "energy_resident");
+        assert_eq!(recs[10].kind(), "energy_summary");
+        assert_eq!(recs[11].kind(), "serve_slo");
         let fill = &recs[8];
         assert!(matches!(fill.get("windows"), Some(Json::Int(n)) if *n > 0), "{fill:?}");
         assert!(fill.get("mean_fill").is_some());
-        let slo = &recs[9];
+        let slo = &recs[11];
         assert!(matches!(slo.get("shed"), Some(Json::Int(0))), "{slo:?}");
         assert!(matches!(slo.get("served"), Some(Json::Int(6))), "{slo:?}");
         assert!(slo.get("queue_highwater").is_some());
@@ -2295,14 +2625,16 @@ mod tests {
         // record stream: per-request, then per-kind latency + slo blocks,
         // then the overall histogram and verdict
         let recs = rep.records();
-        assert_eq!(recs.len(), 30 + 3 + 3 + 4);
+        assert_eq!(recs.len(), 30 + 3 + 3 + 8);
         assert!(recs[..30].iter().all(|r| r.kind() == "serve_request"));
         assert!(recs[30..33].iter().all(|r| r.kind() == "serve_kind_latency"));
         assert!(recs[33..36].iter().all(|r| r.kind() == "serve_kind_slo"));
         assert_eq!(recs[36].kind(), "serve_queue_wait");
         assert_eq!(recs[37].kind(), "serve_latency");
         assert_eq!(recs[38].kind(), "batch_fill");
-        assert_eq!(recs[39].kind(), "serve_slo");
+        assert!(recs[39..42].iter().all(|r| r.kind() == "energy_resident"));
+        assert_eq!(recs[42].kind(), "energy_summary");
+        assert_eq!(recs[43].kind(), "serve_slo");
     }
 
     #[test]
@@ -2379,6 +2711,109 @@ mod tests {
             yt.trap_cycles_total = 0;
             assert_eq!(xt, yt, "request {}", x.index);
             assert_eq!(x.outcome.output_nans(), y.outcome.output_nans());
+        }
+    }
+
+    #[test]
+    fn fault_process_reduces_to_flat_stamp_without_energy() {
+        // With no energy config the access-driven process must be
+        // byte-identical to the legacy flat stamp: same kinds, same
+        // doses, zero hold share.
+        let mix = RequestMix::parse("matmul:12:0.5,jacobi:12:5:0.5").unwrap();
+        let mut fp =
+            FaultProcess::new(9, &mix, 0.01, &Arrival::Closed, 32, None).unwrap();
+        for i in 0..32 {
+            let s = fp.stamp(i);
+            let (kind, dose) = request_stamp(9, &mix, 0.01, i);
+            assert_eq!(s.kind, kind);
+            assert_eq!(s.dose, dose);
+            assert_eq!(s.hold_dose, 0);
+            assert_eq!(s.hold_secs, 0.0);
+        }
+    }
+
+    #[test]
+    fn fault_process_accrues_hold_time_per_kind() {
+        // future-dense at a 10 s interval clamps the BER at ber_max, so
+        // every idle second contributes real hold dose; idle time must
+        // accrue per kind on the virtual request-index clock.
+        let mix = RequestMix::parse("matmul:12:0.5,jacobi:12:5:0.5").unwrap();
+        let energy = EnergyConfig {
+            profile: DeviceProfile::future_dense(),
+            refresh_interval_secs: 10.0,
+            hold_tick_secs: 10.0,
+        };
+        let stamps = |e: Option<&EnergyConfig>| -> Vec<(WorkloadKind, u64, u64, f64)> {
+            let mut fp = FaultProcess::new(9, &mix, 0.0, &Arrival::Closed, 48, e).unwrap();
+            (0..48)
+                .map(|i| {
+                    let s = fp.stamp(i);
+                    (s.kind, s.dose, s.hold_dose, s.hold_secs)
+                })
+                .collect()
+        };
+        let a = stamps(Some(&energy));
+        let b = stamps(Some(&energy));
+        assert_eq!(a, b, "the hold process is a pure function of the seed");
+        assert!(
+            a.iter().any(|&(_, _, hd, _)| hd > 0),
+            "ber_max over 10 s ticks must land hold upsets"
+        );
+        // with zero touch rate the whole dose is the hold share
+        assert!(a.iter().all(|&(_, d, hd, _)| d == hd));
+        // per-kind idle clocks: each kind's hold_secs equals the virtual
+        // gap to its own previous request, so the per-kind sums cover the
+        // run's virtual span without double counting
+        let mut last = std::collections::HashMap::new();
+        for (i, &(kind, _, _, hold_secs)) in a.iter().enumerate() {
+            let now = i as f64 * energy.hold_tick_secs;
+            let expect = now - last.get(&kind).copied().unwrap_or(0.0);
+            assert_eq!(hold_secs, expect, "request {i}");
+            last.insert(kind, now);
+        }
+    }
+
+    #[test]
+    fn serve_energy_records_price_the_access_ledger() {
+        // Default config: energy accounting is on, records present and
+        // priced from the summed per-request access ledger.
+        let rep = serve(&small_cfg(2)).unwrap();
+        let recs = rep.records();
+        let resident = recs.iter().find(|r| r.kind() == "energy_resident").unwrap();
+        let words_read: u64 = rep.results.iter().map(|r| r.outcome.words_read()).sum();
+        let words_written: u64 = rep.results.iter().map(|r| r.outcome.words_written()).sum();
+        assert!(words_read > 0 && words_written > 0);
+        assert!(
+            matches!(resident.get("words_read"), Some(Json::Int(n)) if *n as u64 == words_read),
+            "{resident:?}"
+        );
+        assert!(
+            matches!(resident.get("words_written"), Some(Json::Int(n)) if *n as u64 == words_written),
+            "{resident:?}"
+        );
+        let e = rep.energy.as_ref().unwrap();
+        let ks = &rep.kind_summaries()[0];
+        let ae = e.profile.access_energy(
+            ks.words_read,
+            ks.words_written,
+            ks.hold_word_secs,
+            e.refresh_interval_secs,
+        );
+        assert!(
+            matches!(resident.get("total_pj"), Some(Json::Num(v)) if *v == ae.total_pj()),
+            "{resident:?}"
+        );
+        let summary = recs.iter().find(|r| r.kind() == "energy_summary").unwrap();
+        assert!(summary.get("savings").is_some(), "{summary:?}");
+
+        // The flat-dose path: no energy records, no hold share, and the
+        // per-request doses identical (hold doses at a 1 s server-ddr
+        // interval are zero at these scales).
+        let flat = serve(&ServeConfig { energy: None, ..small_cfg(2) }).unwrap();
+        assert!(flat.records().iter().all(|r| !r.kind().starts_with("energy_")));
+        assert!(flat.results.iter().all(|r| r.hold_dose == 0 && r.hold_secs == 0.0));
+        for (x, y) in rep.results.iter().zip(&flat.results) {
+            assert_eq!(x.dose, y.dose, "request {}", x.index);
         }
     }
 }

@@ -39,7 +39,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::approxmem::injector::{InjectionReport, InjectionSpec, Injector};
-use crate::approxmem::pool::ApproxPool;
+use crate::approxmem::pool::{AccessLedger, ApproxPool};
 use crate::approxmem::scrubber::Scrubber;
 use crate::repair::policy::RepairPolicy;
 use crate::trap::{TrapGuard, TrapStats};
@@ -115,6 +115,12 @@ pub struct ServeCell {
     /// Seed for the dose-placement draws (derived from the request index,
     /// so placement is independent of which worker serves the request).
     pub placement_seed: u64,
+    /// Idle seconds the resident sat unaccessed before this request, on
+    /// the virtual request-index clock — stamped by the fault process at
+    /// generation time (never from wall clock), so the hold ledger is
+    /// worker-count and batch-size invariant.  Zero when access-driven
+    /// injection is off.
+    pub hold_secs: f64,
 }
 
 /// What a serving worker did with one request: ran it inside a protected
@@ -169,6 +175,16 @@ pub struct ServedOutcome {
     /// Wall-clock seconds of the copy-on-serve restore (outside the
     /// protected window; the worker is still busy for its duration).
     pub restore_secs: f64,
+    /// Approximate-memory words this request read (input sweep, plus the
+    /// scrub sweep when one ran) — the request's read-side access-ledger
+    /// delta.
+    pub words_read: u64,
+    /// Approximate-memory words this request wrote (outputs, dose plants,
+    /// repair patches, copy-on-serve restore) — the write-side delta.
+    pub words_written: u64,
+    /// Idle hold seconds stamped on the request's cell (see
+    /// [`ServeCell::hold_secs`]).
+    pub hold_secs: f64,
 }
 
 /// What [`ExperimentSession::shed_request`] did for one shed request.
@@ -181,6 +197,11 @@ pub struct ShedOutcome {
     pub shed_repairs: u64,
     /// Wall-clock seconds of the shed handling (plant + patch; O(dose)).
     pub shed_secs: f64,
+    /// Words written by the shed handling (plant + patch back).
+    pub words_written: u64,
+    /// Idle hold seconds stamped on the request's cell — the upset process
+    /// (and refresh energy) acted on the resident regardless of admission.
+    pub hold_secs: f64,
 }
 
 impl RequestOutcome {
@@ -282,6 +303,33 @@ impl RequestOutcome {
             RequestOutcome::Shed(o) => o.shed_secs,
         }
     }
+
+    /// Approximate-memory words this request read (zero when shed — no
+    /// compute swept the inputs).
+    pub fn words_read(&self) -> u64 {
+        match self {
+            RequestOutcome::Served(o) => o.words_read,
+            RequestOutcome::Shed(_) => 0,
+        }
+    }
+
+    /// Approximate-memory words this request wrote (served: outputs +
+    /// plants + patches + restore; shed: plant + patch back).
+    pub fn words_written(&self) -> u64 {
+        match self {
+            RequestOutcome::Served(o) => o.words_written,
+            RequestOutcome::Shed(o) => o.words_written,
+        }
+    }
+
+    /// Idle hold seconds the fault process stamped on this request's cell
+    /// (accrues whether the request was then served or shed).
+    pub fn hold_secs(&self) -> f64 {
+        match self {
+            RequestOutcome::Served(o) => o.hold_secs,
+            RequestOutcome::Shed(o) => o.hold_secs,
+        }
+    }
 }
 
 /// The serving residents of one session: one cached workload per
@@ -308,6 +356,10 @@ struct Resident {
     /// Requests served against this resident (drives the per-kind scrub
     /// cadence for [`Protection::Scrub`]).
     served: u64,
+    /// Read/write/hold events this resident's memory experienced — the
+    /// ApproxSS-style access ledger the energy records price.  Stamped by
+    /// the serve/scrub/restore paths from request-invariant quantities.
+    ledger: AccessLedger,
 }
 
 impl ResidentSet {
@@ -330,6 +382,7 @@ impl ResidentSet {
                 workload,
                 pristine,
                 served: 0,
+                ledger: AccessLedger::default(),
             }
         })
     }
@@ -364,6 +417,12 @@ impl ResidentSet {
     /// kinds only).
     pub fn pristine(&self, kind: WorkloadKind) -> Option<&[u64]> {
         self.entries.get(&kind).and_then(|r| r.pristine.as_deref())
+    }
+
+    /// The access ledger of `kind`'s resident — what its approximate
+    /// memory experienced across the session's serve/shed traffic.
+    pub fn ledger(&self, kind: WorkloadKind) -> Option<AccessLedger> {
+        self.entries.get(&kind).map(|r| r.ledger)
     }
 
     /// Total allocations across the resident pools.
@@ -713,8 +772,13 @@ impl ExperimentSession {
             "a dispatch window must share one (kind, protection, policy) triple"
         );
         ensure_servable(first.workload, first.protection, first.policy)?;
+        // Per-request access traffic, from kind-level constants so the
+        // ledger is identical between this live path and the capacity
+        // planner's virtual-time model.
+        let (base_reads, base_writes) = first.workload.access_words();
         let resident = self.residents.entry(first.workload, first.resident_seed);
         let pool = resident.pool.clone();
+        let pool_words = (pool.total_bytes() / 8) as u64;
         let workload: &mut dyn Workload = resident.workload.as_mut();
 
         // One arm for the whole window (reactive protections only); its
@@ -739,11 +803,13 @@ impl ExperimentSession {
             // about.
             let t0 = Instant::now();
             let mut scrub_repairs = 0u64;
+            let mut scrub_swept_words = 0u64;
             if let Protection::Scrub { period_runs } = cell.protection {
                 if period_runs > 0 && resident.served % period_runs as u64 == 0 {
                     scrub_repairs = Scrubber::new(cell.policy.fallback_value())
                         .scrub(&pool)
                         .nans_repaired();
+                    scrub_swept_words = pool_words;
                 }
             }
             workload.run();
@@ -806,6 +872,20 @@ impl ExperimentSession {
                 None => (0, 0.0),
             };
 
+            // Access-ledger deltas, all request-invariant quantities: one
+            // input sweep (plus the scrub sweep when one ran) on the read
+            // side; outputs + restore (kind constants), dose plants, and
+            // the repairs that closed them on the write side.  Hold time
+            // was stamped on the cell by the fault process at generation
+            // time — never measured here — so the ledger stays worker-
+            // count and batch-size invariant.
+            let words_read = base_reads + scrub_swept_words;
+            let words_written =
+                base_writes + planted + traps.memory_repairs() + hygiene_repairs + scrub_repairs;
+            resident.ledger.record_read(words_read);
+            resident.ledger.record_write(words_written);
+            resident.ledger.record_hold(base_reads, cell.hold_secs);
+
             resident.served += 1;
             self.cells_run += 1;
 
@@ -819,6 +899,9 @@ impl ExperimentSession {
                     hygiene_repairs,
                     restored_words,
                     restore_secs,
+                    words_read,
+                    words_written,
+                    hold_secs: cell.hold_secs,
                 }),
                 Instant::now(),
             ));
@@ -876,12 +959,21 @@ impl ExperimentSession {
             }
         }
         let shed_secs = t0.elapsed().as_secs_f64();
+        // Shed access accounting: plant + patch back touch each planted
+        // word twice on the write side; nothing computes, so no reads.
+        // Hold time accrued regardless of admission control.
+        let input_words = resident.workload.input_len() as u64;
+        let words_written = 2 * planted;
+        resident.ledger.record_write(words_written);
+        resident.ledger.record_hold(input_words, cell.hold_secs);
         self.cells_run += 1;
 
         Ok(RequestOutcome::Shed(ShedOutcome {
             nans_planted: planted,
             shed_repairs: planted,
             shed_secs,
+            words_written,
+            hold_secs: cell.hold_secs,
         }))
     }
 }
@@ -1051,6 +1143,7 @@ mod tests {
             policy: RepairPolicy::Zero,
             dose,
             placement_seed: 0x5eed ^ idx,
+            hold_secs: 0.0,
         }
     }
 
@@ -1191,6 +1284,7 @@ mod tests {
             policy: RepairPolicy::One,
             dose: 3,
             placement_seed: 0x5eed ^ i,
+            hold_secs: 0.25 * (i + 1) as f64,
         };
 
         let mut one_by_one = ExperimentSession::new();
@@ -1214,7 +1308,54 @@ mod tests {
             assert_eq!(a.hygiene_repairs(), b.hygiene_repairs());
             assert_eq!(a.output_nans(), b.output_nans());
             assert_eq!(a.output_nans(), 0);
+            assert_eq!(a.words_read(), b.words_read(), "access ledger sees no batch");
+            assert_eq!(a.words_written(), b.words_written());
+            assert_eq!(a.hold_secs(), b.hold_secs());
         }
+        assert_eq!(
+            one_by_one.residents().ledger(kind).unwrap(),
+            batched.residents().ledger(kind).unwrap(),
+            "resident access ledger is batch-size invariant"
+        );
+    }
+
+    #[test]
+    fn access_ledger_stamps_serve_and_shed_traffic() {
+        let kind = WorkloadKind::MatMul { n: 16 };
+        let (reads, writes) = kind.access_words();
+        let mut s = ExperimentSession::new();
+        s.prepare_resident(kind, 9);
+        assert_eq!(
+            s.residents().ledger(kind).unwrap(),
+            AccessLedger::default(),
+            "prepare is unmeasured warmup, not serving traffic"
+        );
+        let cell = ServeCell {
+            hold_secs: 2.0,
+            ..serve_cell(2, 0, Protection::RegisterMemory)
+        };
+        let out = s.serve_request(&cell).unwrap();
+        let led = s.residents().ledger(kind).unwrap();
+        assert_eq!(led.words_read, reads, "one input sweep per served request");
+        // outputs (+restore for mutating kinds) + plants + the repairs
+        // that closed them: under register+memory every plant is closed
+        // by a trap or the hygiene pass, so writes = base + 2×planted.
+        assert_eq!(led.words_written, writes + 2 * out.nans_planted());
+        assert_eq!(led.words_written, out.words_written());
+        assert!((led.hold_word_secs - reads as f64 * 2.0).abs() < 1e-9);
+        assert_eq!(led.access_epochs, 1);
+
+        // Shed: no reads, plant+patch writes, hold still accrues.
+        let shed = ServeCell {
+            hold_secs: 1.0,
+            ..serve_cell(3, 1, Protection::RegisterMemory)
+        };
+        let out = s.shed_request(&shed).unwrap();
+        let led = s.residents().ledger(kind).unwrap();
+        assert_eq!(led.words_read, reads, "shed requests read nothing");
+        assert_eq!(out.words_written(), 2 * out.nans_planted());
+        assert!((led.hold_word_secs - reads as f64 * 3.0).abs() < 1e-9);
+        assert_eq!(led.access_epochs, 2);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 
 use anyhow::Result;
 use nanrepair::approxmem::injector::InjectionSpec;
+use nanrepair::approxmem::DeviceProfile;
 use nanrepair::bench;
 use nanrepair::coordinator::campaign::{Campaign, CampaignConfig, CampaignReport};
 use nanrepair::coordinator::capacity;
@@ -162,6 +163,22 @@ fn app() -> App {
                 )
                 .opt("warmup", Some("0"), "leading requests excluded from measured quantiles")
                 .opt("slo-shed", None, "max shed fraction the SLO verdict tolerates")
+                .opt(
+                    "profile",
+                    Some("server-ddr"),
+                    "device energy profile pricing the access ledger: \
+                     server-ddr|mobile-lpddr|future-dense",
+                )
+                .opt(
+                    "refresh-interval",
+                    Some("1.0"),
+                    "DRAM refresh interval in seconds (sets the hold-error hazard and \
+                     the refresh energy the run saves)",
+                )
+                .flag(
+                    "no-energy",
+                    "flat-dose mode: no energy records, no access-driven hold errors",
+                )
                 .opt("seed", Some("42"), "PRNG seed"),
         )
         .cmd(
@@ -212,6 +229,28 @@ fn app() -> App {
                 .flag(
                     "live",
                     "probe with real serve runs (wall-clock) instead of the deterministic model",
+                )
+                .opt(
+                    "energy-budget",
+                    None,
+                    "comma-separated refresh-savings fractions sweeping the \
+                     energy-capacity pareto frontier (e.g. 0.1,0.15,0.199): each \
+                     budget derives its refresh interval, retention BER, and fault \
+                     rate, then gets its own knee search",
+                )
+                .opt(
+                    "profile",
+                    Some("server-ddr"),
+                    "device energy profile: server-ddr|mobile-lpddr|future-dense",
+                )
+                .opt(
+                    "refresh-interval",
+                    Some("1.0"),
+                    "refresh interval in seconds for the base cells' hold/energy model",
+                )
+                .flag(
+                    "no-energy",
+                    "flat-dose probes: no hold errors (incompatible with --energy-budget)",
                 )
                 .opt("seed", Some("42"), "PRNG seed"),
         )
@@ -564,6 +603,15 @@ fn main() -> Result<()> {
                 Some(spec) => server::RequestMix::parse(spec)?,
                 None => server::RequestMix::single(WorkloadKind::parse(m.get_str("workload")?)?),
             };
+            let energy = if m.flag("no-energy") {
+                None
+            } else {
+                Some(server::EnergyConfig {
+                    profile: DeviceProfile::by_name(m.get_str("profile")?)?,
+                    refresh_interval_secs: m.get_parse("refresh-interval")?,
+                    ..Default::default()
+                })
+            };
             let cfg = server::ServeConfig {
                 mix,
                 protection: Protection::parse(m.get_str("protection")?)?,
@@ -580,6 +628,7 @@ fn main() -> Result<()> {
                 deadline,
                 warmup: m.get_parse("warmup")?,
                 slo_shed: m.get_parse_opt("slo-shed")?,
+                energy,
             };
             let rep = server::serve(&cfg)?;
             match &mut sink {
@@ -626,12 +675,31 @@ fn main() -> Result<()> {
                     capacity::ProbeMode::Model
                 },
                 model: capacity::ServiceModel::default(),
+                energy: if m.flag("no-energy") {
+                    None
+                } else {
+                    Some(server::EnergyConfig {
+                        profile: DeviceProfile::by_name(m.get_str("profile")?)?,
+                        refresh_interval_secs: m.get_parse("refresh-interval")?,
+                        ..Default::default()
+                    })
+                },
+                energy_budgets: match m.get("energy-budget") {
+                    Some(_) => m.get_list("energy-budget")?,
+                    None => Vec::new(),
+                },
             };
             // --workers parallelizes the configuration matrix; probe
             // serve-worker counts stay pinned so knees are comparable.
             let rep = capacity::plan(&cfg, workers)?;
             match &mut sink {
-                None => rep.knee_table().print(),
+                None => {
+                    rep.knee_table().print();
+                    if let Some(t) = rep.pareto_table() {
+                        println!();
+                        t.print();
+                    }
+                }
                 Some(s) => {
                     for rec in rep.records() {
                         s.record(&rec)?;

@@ -159,6 +159,36 @@ impl WorkloadKind {
         }
     }
 
+    /// Number of f64 *output* words one `run()` produces
+    /// ([`Workload::output_words`]`.len()`), computable without building —
+    /// the access-ledger write accounting sizes response traffic from
+    /// this.  Kept in lock-step with every built workload by the
+    /// `output_words_matches_built_workloads` test.
+    pub fn output_words(&self) -> usize {
+        match *self {
+            WorkloadKind::MatMul { n }
+            | WorkloadKind::Lu { n }
+            | WorkloadKind::Stencil { n, .. } => n * n,
+            WorkloadKind::MatVec { n }
+            | WorkloadKind::Jacobi { n, .. }
+            | WorkloadKind::Cg { n, .. } => n,
+        }
+    }
+
+    /// Per-request approximate-memory traffic of one serve of this kind,
+    /// as `(words_read, words_written)`: one sweep of the inputs on the
+    /// read side; the output words plus — for mutating kinds — the
+    /// copy-on-serve pristine restore on the write side.  Pure function of
+    /// the kind, so the access ledger built from it is identical between
+    /// the live serve path and the capacity planner's virtual-time model.
+    /// Dose plants and repair patches are accounted separately (they vary
+    /// per request).
+    pub fn access_words(&self) -> (u64, u64) {
+        let inputs = self.input_words() as u64;
+        let restore = if self.mutates_inputs() { inputs } else { 0 };
+        (inputs, self.output_words() as u64 + restore)
+    }
+
     /// FLOP count of one `run()`, computable without building the
     /// workload — e.g. the capacity planner's deterministic service-time
     /// model ([`crate::coordinator::capacity`]) costs a probe request
@@ -467,6 +497,34 @@ mod tests {
                 w.input_len(),
                 "{kind}: input_words out of lock-step with the built workload"
             );
+        }
+    }
+
+    #[test]
+    fn output_words_matches_built_workloads() {
+        let pool = ApproxPool::new();
+        for kind in [
+            WorkloadKind::MatMul { n: 9 },
+            WorkloadKind::MatVec { n: 9 },
+            WorkloadKind::Jacobi { n: 9, iters: 3 },
+            WorkloadKind::Cg { n: 9, iters: 3 },
+            WorkloadKind::Lu { n: 9 },
+            WorkloadKind::Stencil { n: 9, steps: 3 },
+        ] {
+            let w = kind.build(&pool, 1);
+            assert_eq!(
+                kind.output_words(),
+                w.output_words().len(),
+                "{kind}: output_words out of lock-step with the built workload"
+            );
+            let (reads, writes) = kind.access_words();
+            assert_eq!(reads, kind.input_words() as u64);
+            let restore = if kind.mutates_inputs() {
+                kind.input_words() as u64
+            } else {
+                0
+            };
+            assert_eq!(writes, kind.output_words() as u64 + restore);
         }
     }
 

@@ -22,8 +22,9 @@
 use std::collections::HashSet;
 use std::process::Command;
 
+use nanrepair::approxmem::DeviceProfile;
 use nanrepair::coordinator::protection::Protection;
-use nanrepair::coordinator::server::{serve, Arrival, RequestMix, ServeConfig};
+use nanrepair::coordinator::server::{serve, Arrival, EnergyConfig, RequestMix, ServeConfig};
 use nanrepair::coordinator::session::{ExperimentSession, ServeCell};
 use nanrepair::repair::policy::RepairPolicy;
 use nanrepair::util::report::{Json, Record};
@@ -126,7 +127,7 @@ fn cli_serve_json_emits_requests_and_slo() {
     ]);
     assert!(ok, "stderr: {stderr}");
     let lines: Vec<&str> = stdout.lines().filter(|l| !l.is_empty()).collect();
-    assert_eq!(lines.len(), 12 + 4, "{stdout}");
+    assert_eq!(lines.len(), 12 + 6, "{stdout}");
     for (i, line) in lines[..12].iter().enumerate() {
         let parsed = Json::parse(line).unwrap_or_else(|e| panic!("{e}: {line}"));
         let rec = Record::from_json(&parsed).unwrap();
@@ -148,7 +149,22 @@ fn cli_serve_json_emits_requests_and_slo() {
     assert_eq!(fill.get("record").and_then(Json::as_str), Some("batch_fill"));
     assert!(fill.get("windows").and_then(Json::as_f64).unwrap() > 0.0, "{stdout}");
 
-    let slo = Json::parse(lines[15]).unwrap();
+    // Every serve run prices its access ledger: one energy_resident per
+    // mix kind, then the run-level energy_summary.
+    let res = Json::parse(lines[15]).unwrap();
+    assert_eq!(res.get("record").and_then(Json::as_str), Some("energy_resident"));
+    assert_eq!(res.get("profile").and_then(Json::as_str), Some("server-ddr"));
+    assert!(res.get("words_read").and_then(Json::as_f64).unwrap() > 0.0, "{stdout}");
+    assert!(res.get("total_pj").and_then(Json::as_f64).unwrap() > 0.0, "{stdout}");
+    let summary = Json::parse(lines[16]).unwrap();
+    assert_eq!(
+        summary.get("record").and_then(Json::as_str),
+        Some("energy_summary"),
+        "{stdout}"
+    );
+    assert!(summary.get("savings").and_then(Json::as_f64).unwrap() > 0.0, "{stdout}");
+
+    let slo = Json::parse(lines[17]).unwrap();
     assert_eq!(slo.get("record").and_then(Json::as_str), Some("serve_slo"));
     assert_eq!(slo.get("requests").and_then(Json::as_f64), Some(12.0));
     assert_eq!(slo.get("output_nans").and_then(Json::as_f64), Some(0.0));
@@ -537,7 +553,7 @@ fn cli_serve_mix_emits_per_kind_breakdowns() {
         .filter(|l| !l.is_empty())
         .map(|l| Record::from_json(&Json::parse(l).unwrap_or_else(|e| panic!("{e}: {l}"))).unwrap())
         .collect();
-    assert_eq!(records.len(), 24 + 3 + 3 + 4, "{stdout}");
+    assert_eq!(records.len(), 24 + 3 + 3 + 8, "{stdout}");
     assert!(records[..24].iter().all(|r| r.kind() == "serve_request"));
     assert!(records[24..27].iter().all(|r| r.kind() == "serve_kind_latency"));
     let kind_slos = &records[27..30];
@@ -557,7 +573,15 @@ fn cli_serve_mix_emits_per_kind_breakdowns() {
     assert_eq!(records[30].kind(), "serve_queue_wait");
     assert_eq!(records[31].kind(), "serve_latency");
     assert_eq!(records[32].kind(), "batch_fill");
-    assert_eq!(records[33].kind(), "serve_slo");
+    // one energy_resident per mix kind, then the run-level summary
+    assert!(records[33..36].iter().all(|r| r.kind() == "energy_resident"));
+    let energy_kinds: Vec<String> = records[33..36]
+        .iter()
+        .map(|r| r.get("kind").and_then(Json::as_str).unwrap().to_string())
+        .collect();
+    assert_eq!(energy_kinds, kinds, "energy rows cover every mix kind");
+    assert_eq!(records[36].kind(), "energy_summary");
+    assert_eq!(records[37].kind(), "serve_slo");
     // every serve_request carries its stamped kind
     for r in &records[..24] {
         let kind = r.get("kind").and_then(Json::as_str).unwrap();
@@ -800,4 +824,174 @@ fn high_offered_concurrency_smoke_no_orphan_sigfpes() {
     );
     assert_eq!(rep.lane_highwater.len(), 8, "one lane per worker");
     assert!(rep.queue_highwater >= rep.lane_highwater.iter().copied().max().unwrap());
+}
+
+/// An aggressive device profile whose retention BER at a 10 s refresh
+/// interval saturates the model's cap, so idle seconds carry a hold
+/// hazard the tests below can observe in a 60-request run.
+fn dense_energy() -> EnergyConfig {
+    EnergyConfig {
+        profile: DeviceProfile::by_name("future-dense").unwrap(),
+        refresh_interval_secs: 10.0,
+        hold_tick_secs: 10.0,
+    }
+}
+
+fn hold_cfg(workers: usize, batch: usize, energy: Option<EnergyConfig>) -> ServeConfig {
+    ServeConfig {
+        // cg rides at weight 0.1: it sits idle ~10× longer between its
+        // requests than the heavy kinds, so its hold ledger dominates
+        mix: RequestMix::parse("matmul:16:0.45,jacobi:16:5:0.45,cg:16:5:0.1").unwrap(),
+        policy: RepairPolicy::One,
+        protection: Protection::RegisterMemory,
+        requests: 60,
+        workers,
+        queue_depth: 8,
+        batch,
+        fault_rate: 1e-3,
+        seed: 23,
+        arrival: Arrival::Closed,
+        energy,
+        ..Default::default()
+    }
+}
+
+/// Acceptance (tentpole, hold-error hazard): a low-weight kind in a
+/// 3-kind mix accumulates hold errors while idle between its requests —
+/// its per-kind dose ledger strictly exceeds the flat-dose baseline,
+/// responses stay NaN-free, and the access-driven ledger is byte-identical
+/// serial vs 4 workers vs batch-16 windows.
+#[test]
+fn idle_kind_accrues_hold_errors_beyond_the_flat_dose_baseline() {
+    let held = serve(&hold_cfg(1, 1, Some(dense_energy()))).unwrap();
+    let flat = serve(&hold_cfg(1, 1, None)).unwrap();
+    assert_eq!(held.output_nans_total(), 0, "hold errors are repaired like any NaN");
+    assert!(held.repairs_total() > 0);
+
+    // Hold doses ride on top of the flat touch doses, per request.
+    for (h, f) in held.results.iter().zip(&flat.results) {
+        assert_eq!(h.kind, f.kind, "request {}", h.index);
+        assert_eq!(h.dose, f.dose + h.hold_dose, "request {}", h.index);
+        assert_eq!(f.hold_dose, 0, "the flat path draws no hold doses");
+    }
+
+    let hk = held.kind_summaries();
+    let fk = flat.kind_summaries();
+    let cg_h = hk.iter().find(|k| k.kind.to_string().starts_with("cg")).unwrap();
+    let cg_f = fk.iter().find(|k| k.kind.to_string().starts_with("cg")).unwrap();
+    assert!(cg_h.hold_dose_total > 0, "the idle kind accumulated hold errors");
+    assert!(
+        cg_h.dose_total > cg_f.dose_total,
+        "hold hazard must show in the per-kind ledger: {} vs {}",
+        cg_h.dose_total,
+        cg_f.dose_total
+    );
+    assert!(cg_h.hold_word_secs > 0.0);
+
+    // The access ledger is worker-count and batch-size invariant: hold
+    // time accrues on the virtual request-index clock, never wall time.
+    for rep in [
+        serve(&hold_cfg(4, 1, Some(dense_energy()))).unwrap(),
+        serve(&hold_cfg(1, 16, Some(dense_energy()))).unwrap(),
+    ] {
+        assert_eq!(rep.output_nans_total(), 0);
+        for (a, b) in held.results.iter().zip(&rep.results) {
+            assert_eq!(a.dose, b.dose, "request {}", a.index);
+            assert_eq!(a.hold_dose, b.hold_dose, "request {}", a.index);
+            assert_eq!(
+                a.hold_secs.to_bits(),
+                b.hold_secs.to_bits(),
+                "request {}: hold seconds must be bit-exact",
+                a.index
+            );
+        }
+        for (a, b) in hk.iter().zip(&rep.kind_summaries()) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.hold_dose_total, b.hold_dose_total, "{}", a.kind);
+            assert_eq!(a.dose_total, b.dose_total, "{}", a.kind);
+            assert_eq!(
+                a.hold_word_secs.to_bits(),
+                b.hold_word_secs.to_bits(),
+                "{}: hold word-seconds must be bit-exact",
+                a.kind
+            );
+        }
+    }
+}
+
+/// Acceptance (energy–capacity Pareto): `nanrepair capacity
+/// --energy-budget` model runs emit byte-identical record streams at
+/// `--workers 1` vs `4`, close the stream with `energy_budget` and
+/// `capacity_pareto` records, and deeper budgets pay in fault rate.
+#[test]
+fn cli_capacity_energy_budget_pareto_deterministic_across_workers() {
+    let args = |workers: &str| {
+        vec![
+            "capacity",
+            "--workloads",
+            "matmul:16",
+            "--protections",
+            "memory",
+            "--fault-rates",
+            "1e-3",
+            "--energy-budget",
+            "0.1,0.199",
+            "--requests",
+            "60",
+            "--warmup",
+            "10",
+            "--serve-workers",
+            "2",
+            "--queue-depth",
+            "8",
+            "--slo-p99",
+            "0.2",
+            "--slo-shed",
+            "0.05",
+            "--min-rps",
+            "100",
+            "--seed",
+            "3",
+            "--workers",
+            workers,
+            "--json",
+        ]
+    };
+    let (serial, err1, ok1) = run_cli(&args("1"));
+    let (parallel, err2, ok2) = run_cli(&args("4"));
+    assert!(ok1, "stderr: {err1}");
+    assert!(ok2, "stderr: {err2}");
+    assert_eq!(serial, parallel, "matrix worker count changed the bytes");
+
+    let records: Vec<Record> = serial
+        .lines()
+        .filter(|l| !l.is_empty())
+        .map(|l| Record::from_json(&Json::parse(l).unwrap_or_else(|e| panic!("{e}: {l}"))).unwrap())
+        .collect();
+    let budgets: Vec<&Record> = records.iter().filter(|r| r.kind() == "energy_budget").collect();
+    let pareto: Vec<&Record> = records.iter().filter(|r| r.kind() == "capacity_pareto").collect();
+    assert_eq!(budgets.len(), 2, "{serial}");
+    assert_eq!(pareto.len(), 2, "{serial}");
+    assert_eq!(
+        records.last().unwrap().kind(),
+        "capacity_pareto",
+        "the pareto frontier closes the stream: {serial}"
+    );
+    assert_eq!(
+        records.iter().filter(|r| r.kind() == "capacity_knee").count(),
+        3,
+        "1 base cell + 2 budget cells: {serial}"
+    );
+    // a deeper savings budget stretches refresh and pays in fault rate
+    let fr = |r: &Record| r.get("fault_rate").and_then(Json::as_f64).unwrap();
+    let iv = |r: &Record| r.get("refresh_interval_secs").and_then(Json::as_f64).unwrap();
+    assert!(fr(pareto[1]) > fr(pareto[0]), "{serial}");
+    assert!(iv(pareto[1]) > iv(pareto[0]), "{serial}");
+    for p in &pareto {
+        assert!(p.get("knee_rps").and_then(Json::as_f64).unwrap() > 0.0, "{serial}");
+        assert!(
+            p.get("energy_budget").and_then(Json::as_f64).unwrap() > 0.0,
+            "{serial}"
+        );
+    }
 }

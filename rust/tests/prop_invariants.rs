@@ -2,8 +2,12 @@
 //! over the substrate invariants DESIGN.md §2's layer map calls out.
 
 use nanrepair::approxmem::ecc::{decode, encode, flip_codeword_bit, Decoded};
-use nanrepair::approxmem::injector::{InjectionSpec, Injector};
+use nanrepair::approxmem::energy::DramEnergyModel;
+use nanrepair::approxmem::injector::{AccessFaultModel, InjectionSpec, Injector};
 use nanrepair::approxmem::pool::ApproxPool;
+use nanrepair::approxmem::profiles::DeviceProfile;
+use nanrepair::approxmem::retention::RetentionModel;
+use nanrepair::coordinator::server::EnergyConfig;
 use nanrepair::disasm::backtrace::{backtrace_mov, BacktraceOutcome};
 use nanrepair::disasm::decode::decode_len;
 use nanrepair::fp::analytics;
@@ -374,4 +378,141 @@ fn prop_scan_repair_overwrites_exactly_the_nans() {
                 })
         },
     );
+}
+
+/// ECC: encode→decode with no corruption is `Clean` and round-trips the
+/// word bit-for-bit.
+#[test]
+fn prop_ecc_roundtrip_clean() {
+    assert_prop(
+        "ecc-secded-roundtrip",
+        15,
+        500,
+        |rng| rng.next_u64(),
+        |&word| decode(encode(word)) == Decoded::Clean(word),
+    );
+}
+
+/// ECC, exhaustive sweep: for any word, flipping each of the 72 codeword
+/// bits in turn is always `Corrected` back to the original — not just a
+/// sampled bit, every position of every sampled word.
+#[test]
+fn prop_ecc_corrects_all_72_positions() {
+    assert_prop(
+        "ecc-secded-all-72-flips",
+        16,
+        100,
+        |rng| rng.next_u64(),
+        |&word| {
+            let cw = encode(word);
+            (0..72u32).all(|bit| match decode(flip_codeword_bit(cw, bit)) {
+                Decoded::Corrected { data, .. } => data == word,
+                _ => false,
+            })
+        },
+    );
+}
+
+/// Energy model: savings are monotone non-decreasing in the refresh
+/// interval, clamped to [0, max_savings], and complementary to the
+/// relative energy.
+#[test]
+fn prop_energy_savings_monotone_in_interval() {
+    assert_prop(
+        "energy-savings-monotone",
+        17,
+        500,
+        |rng| {
+            let t1 = 10f64.powf(rng.range_f64(-3.0, 3.0));
+            let t2 = t1 * (1.0 + rng.next_f64() * 100.0);
+            (t1, t2)
+        },
+        |&(t1, t2)| {
+            let m = DramEnergyModel::default();
+            let (p1, p2) = (m.evaluate(t1), m.evaluate(t2));
+            p1.savings <= p2.savings + 1e-12
+                && p1.savings >= 0.0
+                && p1.savings <= m.max_savings() + 1e-12
+                && (p1.relative_energy + p1.savings - 1.0).abs() < 1e-12
+        },
+    );
+}
+
+/// Energy model: savings are linear in `approx_fraction` — a partition
+/// covering a fraction `f` of memory saves exactly `f` times what the
+/// whole memory would, at any interval (the Flikker partition premise).
+#[test]
+fn prop_energy_savings_linear_in_fraction() {
+    assert_prop(
+        "energy-savings-linear-in-fraction",
+        18,
+        500,
+        |rng| (rng.next_f64(), 10f64.powf(rng.range_f64(-2.0, 3.0))),
+        |&(frac, t)| {
+            let full = DramEnergyModel::default().evaluate(t).savings;
+            let part = DramEnergyModel {
+                approx_fraction: frac,
+                ..Default::default()
+            }
+            .evaluate(t)
+            .savings;
+            (part - frac * full).abs() < 1e-12
+        },
+    );
+}
+
+/// Retention: BER is monotone non-decreasing in the interval, zero at or
+/// below the standard refresh window, and never exceeds the ceiling.
+#[test]
+fn prop_retention_ber_monotone_and_capped() {
+    assert_prop(
+        "retention-ber-monotone",
+        19,
+        500,
+        |rng| {
+            let t1 = 10f64.powf(rng.range_f64(-3.0, 2.0));
+            let t2 = t1 * (1.0 + rng.next_f64() * 100.0);
+            (t1, t2)
+        },
+        |&(t1, t2)| {
+            let m = RetentionModel::default();
+            let (b1, b2) = (m.ber(t1), m.ber(t2));
+            b1 <= b2 && b2 <= m.ber_max && m.ber(m.t0_secs) == 0.0
+        },
+    );
+}
+
+/// The energy layer rejects NaN/negative parameters at configuration
+/// time with the offending knob named — never by silently zeroing a
+/// downstream ledger.
+#[test]
+fn energy_layer_rejects_poisoned_parameters_with_actionable_errors() {
+    let msg = DramEnergyModel {
+        approx_fraction: f64::NAN,
+        ..Default::default()
+    }
+    .validate()
+    .unwrap_err()
+    .to_string();
+    assert!(msg.contains("approx_fraction") && msg.contains("finite"), "{msg}");
+
+    let msg = RetentionModel { b: -2.0, ..Default::default() }
+        .validate()
+        .unwrap_err()
+        .to_string();
+    assert!(msg.contains("RetentionModel.b") && msg.contains("positive"), "{msg}");
+
+    let msg = EnergyConfig {
+        refresh_interval_secs: f64::NAN,
+        ..Default::default()
+    }
+    .validate()
+    .unwrap_err()
+    .to_string();
+    assert!(msg.contains("--refresh-interval") && msg.contains("NaN"), "{msg}");
+
+    let msg = AccessFaultModel::from_profile(&DeviceProfile::server_ddr(), -1.0)
+        .unwrap_err()
+        .to_string();
+    assert!(msg.contains("refresh interval") && msg.contains("-1"), "{msg}");
 }
