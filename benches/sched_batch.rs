@@ -18,6 +18,11 @@
 //! `capacity_model/knee` times one full deterministic knee search
 //! (`nanrepair capacity`'s model mode).
 //!
+//! The telemetry-plane variant (`serve_trace*/off` vs `/on`) times the
+//! same serve run untraced vs with `--trace --tick` capture armed and
+//! gates the traced path within 10 % — observation must stay
+//! observation (DESIGN.md §4.6).
+//!
 //! Mixed-workload variants cover the servability-contract path:
 //! `serve_mix` drives a 3-kind weighted mix (matmul + jacobi + cg under
 //! the division-safe `one` policy) at 1/4/8 workers, and
@@ -199,6 +204,46 @@ fn serve_energy_sweep(r: &mut Runner, requests: usize, n: usize) -> Vec<(String,
     out
 }
 
+/// Bench the telemetry-plane overhead: the same closed-loop serve run
+/// with telemetry off vs `--trace --tick` on (span rings, trap-cycle
+/// capture, tick samples); returns (variant, mean_secs).  The caller
+/// gates the traced path within 10 % of the untraced one.
+fn serve_trace_sweep(r: &mut Runner, requests: usize, n: usize) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for (name, traced) in [("off", false), ("on", true)] {
+        let res = r.bench(
+            &format!("serve_trace{requests}x{n}/{name}"),
+            Bench::new(move || {
+                let rep = server::serve(&ServeConfig {
+                    mix: RequestMix::single(WorkloadKind::MatMul { n }),
+                    protection: Protection::RegisterMemory,
+                    requests,
+                    workers: 4,
+                    queue_depth: 16,
+                    fault_rate: 1e-3,
+                    seed: 42,
+                    arrival: Arrival::Closed,
+                    trace: traced,
+                    tick_secs: traced.then_some(0.05),
+                    ..Default::default()
+                })
+                .expect("trace serve runs");
+                assert_eq!(rep.output_nans_total(), 0);
+                if traced {
+                    assert!(
+                        rep.trace.as_ref().is_some_and(|t| !t.spans.is_empty()),
+                        "traced run must record spans"
+                    );
+                }
+            })
+            .samples(5)
+            .budget(2.0),
+        );
+        out.push((name.to_string(), res.summary.mean));
+    }
+    out
+}
+
 /// Bench the batched dispatch core: a closed-loop flood at 1024 offered
 /// concurrency across 8 workers, swept over the window-size knob;
 /// returns (batch, req/s).  Batch 1 reproduces the unbatched per-request
@@ -325,6 +370,9 @@ fn main() {
     // same run, gated below so ledger stamping cannot silently tax the
     // request path
     let energy_bench = serve_energy_sweep(&mut r, serve_requests, n);
+    // telemetry-plane overhead: the same run untraced vs --trace --tick,
+    // gated below so observation stays observation
+    let trace_bench = serve_trace_sweep(&mut r, serve_requests, n);
     // batched dispatch at 1k+ offered concurrency: the request count is
     // sized so the 1024-deep closed-loop queue stays flooded and windows
     // actually fill (quick mode keeps CI under the sample budget)
@@ -534,5 +582,28 @@ fn main() {
         ledger / flat,
         ledger * 1e3,
         flat * 1e3
+    );
+
+    let trace_mean = |name: &str| {
+        trace_bench
+            .iter()
+            .find(|(v, _)| v == name)
+            .map(|&(_, m)| m)
+            .expect("trace variant present")
+    };
+    let (off, on) = (trace_mean("off"), trace_mean("on"));
+    assert!(
+        on <= off * 1.10,
+        "traced serve path must stay within 10 % of the untraced path \
+         ({:.1} ms vs {:.1} ms mean)",
+        on * 1e3,
+        off * 1e3
+    );
+    println!(
+        "serve_trace: --trace --tick path runs {:.2}x the untraced mean \
+         ({:.1} vs {:.1} ms; acceptance gate <= 1.10x)",
+        on / off,
+        on * 1e3,
+        off * 1e3
     );
 }

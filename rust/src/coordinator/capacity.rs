@@ -69,6 +69,7 @@ use super::protection::Protection;
 use super::scheduler;
 use super::server::{self, Arrival, EnergyConfig, FaultProcess, RequestMix, ServeConfig};
 use super::session::ensure_servable;
+use super::telemetry;
 
 /// Hard cap on probes per cell: a ramp over 10 decades plus a bisection
 /// to sub-percent tolerance stays well under it, and it bounds the cost
@@ -291,6 +292,12 @@ pub struct CapacityConfig {
     /// knee RPS *per energy budget* (`capacity_pareto` records).  Empty
     /// disables the sweep.
     pub energy_budgets: Vec<f64>,
+    /// `serve_tick` period in **virtual seconds** for the knee probe of
+    /// each planned cell (`None` disables the stream).  Model-mode ticks
+    /// bucket the DES completion clock, so the series is byte-identical
+    /// at any matrix `--workers` (asserted by test); live-mode probes do
+    /// not tick (wall-clock ticks belong to `nanrepair serve`).
+    pub tick_secs: Option<f64>,
 }
 
 impl Default for CapacityConfig {
@@ -316,6 +323,7 @@ impl Default for CapacityConfig {
             mode: ProbeMode::Model,
             energy: Some(EnergyConfig::default()),
             energy_budgets: Vec::new(),
+            tick_secs: None,
         }
     }
 }
@@ -379,6 +387,12 @@ impl CapacityConfig {
         );
         if let Some(e) = &self.energy {
             e.validate()?;
+        }
+        if let Some(dt) = self.tick_secs {
+            anyhow::ensure!(
+                dt > 0.0 && dt.is_finite(),
+                "--tick period must be positive and finite"
+            );
         }
         if !self.energy_budgets.is_empty() {
             let e = self.energy.as_ref().ok_or_else(|| {
@@ -578,6 +592,10 @@ pub struct ProbePoint {
     /// Per-kind breakdown, in mix order (one entry per kind; trivially a
     /// single entry for single-kind mixes).
     pub per_kind: Vec<KindPoint>,
+    /// Virtual-time `serve_tick` series of the probe (model mode with
+    /// [`CapacityConfig::tick_secs`] set; empty otherwise).  Bucketed on
+    /// the DES completion clock, so byte-identical at any `--workers`.
+    pub ticks: Vec<telemetry::TickPoint>,
 }
 
 impl ProbePoint {
@@ -726,6 +744,14 @@ impl CapacityReport {
                 }
             }
             out.push(o.knee_record(&self.config));
+            // Virtual-time tick series of the knee probe, appended after
+            // the cell's knee record so the base stream layout is
+            // unchanged when `--tick` is off.
+            if let Some(knee) = o.knee_point() {
+                for t in &knee.ticks {
+                    out.push(t.to_record(&o.label, "model"));
+                }
+            }
         }
         // The energy–capacity Pareto frontier closes the stream: one
         // `energy_budget` derivation record per swept budget, then one
@@ -1029,6 +1055,14 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
     let mut kind_planted = vec![0u64; kinds.len()];
     let mut kind_latencies: Vec<Vec<f64>> = vec![Vec::new(); kinds.len()];
 
+    // Virtual-time tick capture: per-request completion events on the
+    // DES clock plus occupancy samples at each offer.  Everything here
+    // is a pure function of (seed, rate_index, i), so the bucketed
+    // series is byte-identical at any matrix `--workers`.
+    let ticking = cfg.tick_secs.is_some();
+    let mut tick_events: Vec<telemetry::TickEvent> = Vec::new();
+    let mut tick_samples: Vec<(f64, usize, usize)> = Vec::new();
+
     for i in 0..n {
         let due = offsets[i];
         // The generator is sequential and blocks while the queue is at
@@ -1070,11 +1104,11 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
         // Shedding plants and immediately patches its own dose, so the
         // worker's resident-NaN count is unchanged.
         let blown = dequeue - due > deadline;
-        let busy = if blown {
+        let (busy, trap_count) = if blown {
             // The shed path neither arms nor disturbs the worker's open
             // window (the live server sheds out of the popped window
             // before the batched dispatch).
-            cfg.model.shed_secs(planted)
+            (cfg.model.shed_secs(planted), 0u64)
         } else {
             let (wkind, run_len) = window[wi];
             let joins = offer <= wfree && wkind == Some(ki) && run_len < cfg.batch;
@@ -1109,13 +1143,28 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
                 _ => (0, 0),
             };
             served_before[wi][ki] += 1;
-            arm + cfg.model.service_secs(kind, traps, scrub_words)
+            (arm + cfg.model.service_secs(kind, traps, scrub_words), traps)
         };
         let done = dequeue + busy;
         worker_free[wi] = done;
         makespan = makespan.max(done);
         if !blown {
             served_total_all += 1;
+        }
+        if ticking {
+            tick_samples.push((offer, occupancy, highwater));
+            tick_events.push(telemetry::TickEvent {
+                t_secs: done,
+                latency_secs: done - due,
+                shed: blown,
+                traps: trap_count,
+                // model repairs: trap repairs when served, the shed
+                // path's patch-back of its own plants when shed
+                repairs: if blown { planted } else { trap_count },
+                dose,
+                nans_planted: planted,
+                energy_pj: None,
+            });
         }
 
         if i >= cfg.warmup {
@@ -1182,6 +1231,10 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
         queue_highwater: highwater,
         pass,
         per_kind,
+        ticks: match cfg.tick_secs {
+            Some(dt) => telemetry::bucket_ticks(dt, &tick_events, &tick_samples),
+            None => Vec::new(),
+        },
     }
 }
 
@@ -1205,6 +1258,12 @@ fn probe_live(cell: &CapacityCell, rps: f64, rate_index: usize) -> Result<ProbeP
         warmup: cfg.warmup,
         slo_shed: Some(cfg.slo_shed),
         energy: cell.energy.clone(),
+        // Telemetry stays off inside live probes: wall-clock ticks and
+        // span capture belong to `nanrepair serve`, and the probe's job
+        // is a clean knee measurement.
+        trace: false,
+        trace_sample: 1,
+        tick_secs: None,
     })?;
     let measured = report.measured();
     let shed = measured.iter().filter(|r| r.is_shed()).count() as u64;
@@ -1247,6 +1306,7 @@ fn probe_live(cell: &CapacityCell, rps: f64, rate_index: usize) -> Result<ProbeP
         queue_highwater: report.queue_highwater,
         pass: report.slo_met() == Some(true),
         per_kind,
+        ticks: Vec::new(),
     })
 }
 
@@ -1360,6 +1420,40 @@ mod tests {
         let ra: Vec<String> = a.records().iter().map(Record::render_jsonl).collect();
         let rb: Vec<String> = b.records().iter().map(Record::render_jsonl).collect();
         assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn model_ticks_are_byte_deterministic_across_matrix_workers() {
+        // The virtual-time serve_tick stream buckets the DES completion
+        // clock — a pure function of (seed, rate_index, i) — so the
+        // whole record stream, ticks included, is byte-identical no
+        // matter how the configuration matrix fans out.
+        let cfg = CapacityConfig { tick_secs: Some(0.001), ..model_cfg() };
+        let a = plan(&cfg, 1).unwrap();
+        let b = plan(&cfg, 4).unwrap();
+        let ra: Vec<String> = a.records().iter().map(Record::render_jsonl).collect();
+        let rb: Vec<String> = b.records().iter().map(Record::render_jsonl).collect();
+        assert_eq!(ra, rb, "tick stream must not depend on matrix workers");
+        let recs = a.records();
+        let ticks: Vec<_> = recs.iter().filter(|r| r.kind() == "serve_tick").collect();
+        assert!(!ticks.is_empty(), "knee probe emitted its tick series");
+        for t in &ticks {
+            assert_eq!(
+                t.get("mode").and_then(|v| v.as_str()),
+                Some("model"),
+                "{t:?}"
+            );
+        }
+        // the knee probe's tick stream partitions its requests
+        let knee = a.outcomes[0].knee_point().unwrap();
+        let ticked: f64 = ticks
+            .iter()
+            .map(|t| t.get("requests").and_then(|v| v.as_f64()).unwrap())
+            .sum();
+        assert_eq!(ticked as usize, cfg.requests, "{:?}", knee.ticks.len());
+        // off by default: no serve_tick records in the base stream
+        let base = plan(&model_cfg(), 1).unwrap();
+        assert!(base.records().iter().all(|r| r.kind() != "serve_tick"));
     }
 
     #[test]

@@ -1,16 +1,75 @@
 //! Named counters/gauges for the coordinator and harness: cheap to update,
 //! rendered as one table at the end of a run.
+//!
+//! The registry is **lock-free on the hot path**: names hash to one of
+//! [`NUM_SHARDS`] shards, each an atomic-pointer linked list of
+//! immutable nodes.  An update walks the shard's list with `Acquire`
+//! loads and does one `Relaxed` RMW on the node's value; only the first
+//! update of a brand-new name allocates (a CAS-published node).  The
+//! old `Mutex<BTreeMap>` design took the lock twice on a miss —
+//! check-then-insert — so a reader could observe the gap between the
+//! two critical sections; here an update is a single atomic on an
+//! already-published node, and publication itself is a CAS loop that
+//! re-traverses only the prefix prepended since its last look.
+//!
+//! Nodes are never unlinked while the registry is alive (a metric name
+//! set is small and stable), so readers need no reclamation scheme:
+//! [`Metrics::reset`] tombstones nodes (`present = false`, value 0)
+//! instead of freeing them, and a later update revives the node in
+//! place.  The backing allocations are freed in `Drop`.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicI64, Ordering};
-use std::sync::Mutex;
+use std::ptr;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicPtr, Ordering};
 
 use crate::util::table::Table;
 
-/// A process-wide metrics registry.
-#[derive(Debug, Default)]
+/// Shard count: a power of two comfortably above the worker counts the
+/// harness runs, so distinct hot names rarely share a head pointer.
+const NUM_SHARDS: usize = 16;
+
+/// One published metric.  `value` and `present` are the only mutable
+/// state; `name` and `next` are frozen at publication.
+#[derive(Debug)]
+struct Node {
+    name: String,
+    value: AtomicI64,
+    /// False after a [`Metrics::reset`] until the next update: the node
+    /// stays linked (readers hold no lock, so unlinking would race) but
+    /// drops out of `get`/`snapshot`/`render`.
+    present: AtomicBool,
+    next: *const Node,
+}
+
+/// A process-wide metrics registry (see the module docs for the
+/// concurrency design).
+#[derive(Debug)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, AtomicI64>>,
+    shards: [AtomicPtr<Node>; NUM_SHARDS],
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const EMPTY: AtomicPtr<Node> = AtomicPtr::new(ptr::null_mut());
+        Self { shards: [EMPTY; NUM_SHARDS] }
+    }
+}
+
+// The raw `next` pointers only ever reference nodes owned by the same
+// registry, which outlive every reader borrow of `&self`.
+unsafe impl Send for Metrics {}
+unsafe impl Sync for Metrics {}
+
+/// FNV-1a over the name bytes: cheap, allocation-free, good enough
+/// dispersion for a handful of short metric names.
+fn shard_of(name: &str) -> usize {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in name.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (h as usize) & (NUM_SHARDS - 1)
 }
 
 impl Metrics {
@@ -24,17 +83,70 @@ impl Metrics {
         &GLOBAL
     }
 
-    pub fn add(&self, name: &str, delta: i64) {
-        let map = self.counters.lock().unwrap();
-        if let Some(c) = map.get(name) {
-            c.fetch_add(delta, Ordering::Relaxed);
-            return;
+    /// Find `name`'s node in its shard, walking from `head` to the
+    /// first node published at or before the walk began.
+    fn find(&self, name: &str) -> Option<&Node> {
+        let shard = &self.shards[shard_of(name)];
+        let mut cur = shard.load(Ordering::Acquire) as *const Node;
+        while !cur.is_null() {
+            // Safety: nodes are never freed while `&self` is borrowed.
+            let node = unsafe { &*cur };
+            if node.name == name {
+                return Some(node);
+            }
+            cur = node.next;
         }
-        drop(map);
-        let mut map = self.counters.lock().unwrap();
-        map.entry(name.to_string())
-            .or_insert_with(|| AtomicI64::new(0))
-            .fetch_add(delta, Ordering::Relaxed);
+        None
+    }
+
+    /// `name`'s node, publishing a fresh zero-valued node if absent.
+    /// The CAS loop re-checks only the newly prepended prefix after a
+    /// failure, so two racing first-updates of one name converge on a
+    /// single winner and the loser frees its candidate.
+    fn intern(&self, name: &str) -> &Node {
+        if let Some(node) = self.find(name) {
+            node.present.store(true, Ordering::Relaxed);
+            return node;
+        }
+        let shard = &self.shards[shard_of(name)];
+        let mut head = shard.load(Ordering::Acquire);
+        let candidate = Box::into_raw(Box::new(Node {
+            name: name.to_string(),
+            value: AtomicI64::new(0),
+            present: AtomicBool::new(true),
+            next: head,
+        }));
+        loop {
+            match shard.compare_exchange(
+                head,
+                candidate,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return unsafe { &*candidate },
+                Err(new_head) => {
+                    // Someone else prepended; the new prefix
+                    // (new_head..head) may now hold our name.
+                    let mut cur = new_head as *const Node;
+                    while cur != head as *const Node {
+                        let node = unsafe { &*cur };
+                        if node.name == name {
+                            // Safety: our candidate never got published.
+                            drop(unsafe { Box::from_raw(candidate) });
+                            node.present.store(true, Ordering::Relaxed);
+                            return node;
+                        }
+                        cur = node.next;
+                    }
+                    unsafe { (*candidate).next = new_head };
+                    head = new_head;
+                }
+            }
+        }
+    }
+
+    pub fn add(&self, name: &str, delta: i64) {
+        self.intern(name).value.fetch_add(delta, Ordering::Relaxed);
     }
 
     pub fn incr(&self, name: &str) {
@@ -42,32 +154,43 @@ impl Metrics {
     }
 
     pub fn set(&self, name: &str, value: i64) {
-        let mut map = self.counters.lock().unwrap();
-        map.entry(name.to_string())
-            .or_insert_with(|| AtomicI64::new(0))
-            .store(value, Ordering::Relaxed);
+        self.intern(name).value.store(value, Ordering::Relaxed);
     }
 
     pub fn get(&self, name: &str) -> i64 {
-        self.counters
-            .lock()
-            .unwrap()
-            .get(name)
-            .map(|c| c.load(Ordering::Relaxed))
+        self.find(name)
+            .filter(|n| n.present.load(Ordering::Relaxed))
+            .map(|n| n.value.load(Ordering::Relaxed))
             .unwrap_or(0)
     }
 
     pub fn snapshot(&self) -> BTreeMap<String, i64> {
-        self.counters
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
-            .collect()
+        let mut out = BTreeMap::new();
+        for shard in &self.shards {
+            let mut cur = shard.load(Ordering::Acquire) as *const Node;
+            while !cur.is_null() {
+                let node = unsafe { &*cur };
+                if node.present.load(Ordering::Relaxed) {
+                    out.insert(node.name.clone(), node.value.load(Ordering::Relaxed));
+                }
+                cur = node.next;
+            }
+        }
+        out
     }
 
+    /// Tombstone every metric: values zero, names hidden from reads,
+    /// nodes left linked for lock-free revival by the next update.
     pub fn reset(&self) {
-        self.counters.lock().unwrap().clear();
+        for shard in &self.shards {
+            let mut cur = shard.load(Ordering::Acquire) as *const Node;
+            while !cur.is_null() {
+                let node = unsafe { &*cur };
+                node.present.store(false, Ordering::Relaxed);
+                node.value.store(0, Ordering::Relaxed);
+                cur = node.next;
+            }
+        }
     }
 
     pub fn render(&self, title: &str) -> String {
@@ -76,6 +199,20 @@ impl Metrics {
             t.row(&[k, v.to_string()]);
         }
         t.render()
+    }
+}
+
+impl Drop for Metrics {
+    fn drop(&mut self) {
+        for shard in &self.shards {
+            let mut cur = shard.swap(ptr::null_mut(), Ordering::AcqRel);
+            while !cur.is_null() {
+                // Safety: `&mut self` means no reader can still hold a
+                // reference into the lists.
+                let node = unsafe { Box::from_raw(cur) };
+                cur = node.next as *mut Node;
+            }
+        }
     }
 }
 
@@ -130,5 +267,45 @@ mod tests {
         m.reset();
         assert_eq!(m.get("a"), 0);
         assert!(m.snapshot().is_empty());
+        // and a tombstoned name revives from zero
+        m.incr("a");
+        assert_eq!(m.get("a"), 1);
+    }
+
+    #[test]
+    fn concurrent_inserts_of_fresh_names_lose_no_updates() {
+        // 8 threads racing to create-and-bump a shared set of brand-new
+        // names: every first-update CAS race must converge on one node
+        // per name, so no increment is lost and no name is duplicated.
+        let m = std::sync::Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for round in 0..100 {
+                    for name in ["alpha", "beta", "gamma", "delta", "epsilon"] {
+                        m.add(name, 1);
+                        m.incr(&format!("{name}.{}", round % 7));
+                    }
+                    // interleave gauge writes on a per-thread name
+                    m.set(&format!("thread.{t}"), round);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        for name in ["alpha", "beta", "gamma", "delta", "epsilon"] {
+            assert_eq!(s[name], 800, "{name}");
+            for round in 0..7 {
+                // 100 rounds over 7 buckets: rounds ≡ r (mod 7)
+                let hits = (0..100).filter(|x| x % 7 == round).count() as i64;
+                assert_eq!(s[&format!("{name}.{round}")], hits * 8);
+            }
+        }
+        for t in 0..8 {
+            assert_eq!(s[&format!("thread.{t}")], 99, "last write of thread {t}");
+        }
     }
 }

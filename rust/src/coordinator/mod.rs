@@ -15,8 +15,10 @@
 //! control; [`capacity`] probes that server over an arrival-rate
 //! schedule to find each configuration's SLO knee (the `nanrepair
 //! capacity` subcommand, DESIGN.md §4.1).  [`metrics`] collects
-//! cross-cutting counters, and results flow out as structured records
-//! (see [`crate::util::report`]).
+//! cross-cutting counters, [`telemetry`] is the streaming observation
+//! plane (request spans, trap-handler latency, serve ticks, watchdog
+//! stalls — DESIGN.md §4.6), and results flow out as structured
+//! records (see [`crate::util::report`]).
 
 pub mod campaign;
 pub mod capacity;
@@ -25,6 +27,7 @@ pub mod protection;
 pub mod scheduler;
 pub mod server;
 pub mod session;
+pub mod telemetry;
 
 pub use campaign::{Campaign, CampaignConfig, CampaignReport};
 pub use capacity::{CapacityConfig, CapacityReport};

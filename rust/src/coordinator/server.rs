@@ -109,6 +109,7 @@ use crate::workloads::WorkloadKind;
 
 use super::protection::Protection;
 use super::session::{ExperimentSession, RequestOutcome, ServeCell};
+use super::telemetry;
 
 /// Seed domain separator for the fault-injector's dose draws.
 pub(crate) const FAULT_SEED: u64 = 0x6661756c745f7271; // "fault_rq"
@@ -471,6 +472,23 @@ pub struct ServeConfig {
     /// Energy accounting + hold-error process ([`EnergyConfig`]).  On by
     /// default; `None` is the flat-dose compatibility path.
     pub energy: Option<EnergyConfig>,
+    /// Record per-request phase spans into per-worker lock-free rings
+    /// and capture each trap's handler entry→exit rdtsc latency
+    /// (`--trace`): the run then emits sampled `serve_span` records and
+    /// a `trap_latency` histogram.  Observation-only — the repair /
+    /// dose / energy ledgers are bit-identical either way (asserted by
+    /// test; DESIGN.md §4.6).
+    pub trace: bool,
+    /// Under `trace`, span every Nth request (1 = every request).
+    /// Trap-latency capture is unaffected — every trap is cheap to
+    /// stamp; spans carry more payload.
+    pub trace_sample: usize,
+    /// Emit `serve_tick` time-series records every this many seconds
+    /// (`--tick SECS`); `None` disables.  Live serve buckets by **wall
+    /// clock** at request completion — explicitly diagnostic.  (The
+    /// capacity planner's model probes bucket the same schema by DES
+    /// virtual time and are byte-deterministic; DESIGN.md §4.6.)
+    pub tick_secs: Option<f64>,
 }
 
 impl Default for ServeConfig {
@@ -492,6 +510,9 @@ impl Default for ServeConfig {
             warmup: 0,
             slo_shed: None,
             energy: Some(EnergyConfig::default()),
+            trace: false,
+            trace_sample: 1,
+            tick_secs: None,
         }
     }
 }
@@ -1086,6 +1107,47 @@ pub struct ServeReport {
     /// Energy accounting of the run (emits the `energy_resident` and
     /// `energy_summary` records; `None` on the flat-dose path).
     pub energy: Option<EnergyConfig>,
+    /// Telemetry captured under `--trace` (`None` off): sampled spans
+    /// plus the trap-handler latency timeline (DESIGN.md §4.6).
+    pub trace: Option<TraceData>,
+    /// `serve_tick` period in seconds (`None` disables the tick
+    /// stream).
+    pub tick_secs: Option<f64>,
+    /// Raw collector-side completion samples the live `serve_tick`
+    /// records are bucketed from (empty when ticks are off).
+    pub ticks_raw: Vec<TickSample>,
+}
+
+/// What a `--trace` serve run captured (observation-only; the ledgers
+/// never read any of it).
+#[derive(Debug, Clone)]
+pub struct TraceData {
+    /// Sampled request spans, merged across worker rings, in request
+    /// order.
+    pub spans: Vec<telemetry::SpanSample>,
+    /// Trap-handler entry→exit rdtsc deltas retained by the global
+    /// cycle ring (the newest [`telemetry::TRAP_CYCLE_SLOTS`]).
+    pub trap_cycles: Vec<u64>,
+    /// Every trap the handler offered to the ring during the run
+    /// (>= the retained count once the ring wraps).
+    pub trap_samples_total: u64,
+}
+
+/// One live tick sample: stamped by the collector when a dispatch
+/// window's results arrive — zero cost on the worker hot path, which
+/// is why live ticks are bucketed by window collection time rather
+/// than per-request completion.
+#[derive(Debug, Clone)]
+pub struct TickSample {
+    /// Wall-clock offset of the window's collection since serve t0.
+    pub offset_secs: f64,
+    /// Aggregate queue occupancy at collection time.
+    pub queue_len: usize,
+    /// Highest single-lane occupancy high-water observed by collection
+    /// time.
+    pub lane_max: usize,
+    /// Request indices completing in the window.
+    pub indices: Vec<usize>,
 }
 
 impl ServeReport {
@@ -1524,7 +1586,63 @@ impl ServeReport {
             out.extend(self.energy_records(e));
         }
         out.push(self.slo_record());
+        // Telemetry records append strictly after `serve_slo` so the
+        // positional layout of the base stream is unchanged when the
+        // flags are off (and only grows at the tail when on).
+        if let Some(tr) = &self.trace {
+            for s in &tr.spans {
+                out.push(s.to_record().field("label", self.config_label.as_str()));
+            }
+            out.push(
+                telemetry::trap_latency_record(&tr.trap_cycles, tr.trap_samples_total)
+                    .field("label", self.config_label.as_str()),
+            );
+        }
+        out.extend(self.tick_records());
         out
+    }
+
+    /// The live `serve_tick` time series: per-request completion events
+    /// (stamped with their window's collector time) bucketed into
+    /// fixed-width wall-clock ticks.  Empty when `--tick` is off.
+    pub fn tick_records(&self) -> Vec<Record> {
+        let Some(dt) = self.tick_secs else {
+            return Vec::new();
+        };
+        let mut events = Vec::new();
+        for s in &self.ticks_raw {
+            for &index in &s.indices {
+                let r = &self.results[index];
+                events.push(telemetry::TickEvent {
+                    t_secs: s.offset_secs,
+                    latency_secs: r.latency_secs,
+                    shed: r.is_shed(),
+                    traps: r.traps().sigfpe_total,
+                    repairs: r.repairs(),
+                    dose: r.dose,
+                    nans_planted: r.nans_planted(),
+                    energy_pj: self.energy.as_ref().map(|e| {
+                        e.profile
+                            .access_energy(
+                                r.outcome.words_read(),
+                                r.outcome.words_written(),
+                                r.kind.input_words() as f64 * r.hold_secs,
+                                e.refresh_interval_secs,
+                            )
+                            .total_pj()
+                    }),
+                });
+            }
+        }
+        let samples: Vec<(f64, usize, usize)> = self
+            .ticks_raw
+            .iter()
+            .map(|s| (s.offset_secs, s.queue_len, s.lane_max))
+            .collect();
+        telemetry::bucket_ticks(dt, &events, &samples)
+            .iter()
+            .map(|t| t.to_record(&self.config_label, "live"))
+            .collect()
     }
 
     /// The human summary table (default text output).
@@ -1571,6 +1689,24 @@ impl ServeReport {
             ]);
         }
         t.row(&["NaNs in responses".into(), self.output_nans_total().to_string()]);
+        if let Some(tr) = &self.trace {
+            t.row(&[
+                "trace spans (recorded)".into(),
+                tr.spans.len().to_string(),
+            ]);
+            let rec = telemetry::trap_latency_record(&tr.trap_cycles, tr.trap_samples_total);
+            let g = |k: &str| rec.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+            t.row(&[
+                "trap handler latency".into(),
+                format!(
+                    "{} samples, p50 {:.0} cyc, p99 {:.0} cyc ({})",
+                    tr.trap_cycles.len(),
+                    g("p50_cycles"),
+                    g("p99_cycles"),
+                    fmt_secs(g("p99_secs"))
+                ),
+            ]);
+        }
         if let Some(e) = &self.energy {
             let mut total_pj = 0.0;
             let mut saved_pj = 0.0;
@@ -1854,6 +1990,15 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
     if let Some(e) = &cfg.energy {
         e.validate()?;
     }
+    if cfg.trace {
+        anyhow::ensure!(cfg.trace_sample >= 1, "--trace-sample must be >= 1");
+    }
+    if let Some(dt) = cfg.tick_secs {
+        anyhow::ensure!(
+            dt > 0.0 && dt.is_finite(),
+            "--tick period must be positive and finite"
+        );
+    }
     let workers = cfg.workers.clamp(1, NUM_DOMAINS).min(cfg.requests);
     let deadline = cfg.deadline.map(Duration::from_secs_f64);
 
@@ -1878,6 +2023,21 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
     let admission_closed: Mutex<Option<Instant>> = Mutex::new(None);
     let admission_closed = &admission_closed;
 
+    // Telemetry is observation-only: the span rings are run-owned (no
+    // cross-run interference), and the trap-cycle ring — necessarily
+    // process-global because the signal handler has no run context — is
+    // armed only for the duration of a `--trace` run.
+    let tele = if cfg.trace {
+        Some(telemetry::Telemetry::new(workers))
+    } else {
+        None
+    };
+    let tele_ref = tele.as_ref();
+    if cfg.trace {
+        telemetry::clear_trap_cycles();
+        telemetry::set_trap_capture(true);
+    }
+
     // The access-driven fault process (built before the threads spawn so
     // profile/interval errors surface here, not in a worker panic).
     let mut faults = FaultProcess::new(
@@ -1889,7 +2049,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         cfg.energy.as_ref(),
     )?;
 
-    let (t0, last_done, results, first_err) = std::thread::scope(|scope| {
+    let (t0, last_done, results, first_err, ticks_raw) = std::thread::scope(|scope| {
         // Load generator + fault injector: stamps each request with its
         // deterministic NaN dose (touch + hold, in index order) and
         // paces arrivals.
@@ -2012,6 +2172,14 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                                     .saturating_duration_since(req.arrival)
                                     .as_secs_f64(),
                             });
+                            if let Some(t) = tele_ref {
+                                record_span(
+                                    t,
+                                    cfg.trace_sample,
+                                    req.kind_idx,
+                                    out.last().expect("just pushed"),
+                                );
+                            }
                         }
                         let served = session.serve_batch(&cells)?;
                         for (req, (outcome, done)) in live.iter().zip(served) {
@@ -2030,6 +2198,14 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                                     .saturating_duration_since(req.arrival)
                                     .as_secs_f64(),
                             });
+                            if let Some(t) = tele_ref {
+                                record_span(
+                                    t,
+                                    cfg.trace_sample,
+                                    req.kind_idx,
+                                    out.last().expect("just pushed"),
+                                );
+                            }
                         }
                         Ok(out)
                     })();
@@ -2050,10 +2226,27 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         let mut results: Vec<Option<RequestResult>> = (0..cfg.requests).map(|_| None).collect();
         let mut first_err = None;
         let mut last_done = t0;
+        let mut ticks_raw: Vec<TickSample> = Vec::new();
         for msg in rx {
             last_done = Instant::now();
             match msg {
                 Ok(window) => {
+                    // Tick samples are stamped here — on the collector,
+                    // per window, off every worker hot path — which is
+                    // why live serve ticks are explicitly diagnostic
+                    // wall-clock records, not a determinism surface.
+                    if cfg.tick_secs.is_some() {
+                        ticks_raw.push(TickSample {
+                            offset_secs: last_done.saturating_duration_since(t0).as_secs_f64(),
+                            queue_len: queue.len(),
+                            lane_max: queue
+                                .lane_highwaters()
+                                .into_iter()
+                                .max()
+                                .unwrap_or(0),
+                            indices: window.iter().map(|r| r.index).collect(),
+                        });
+                    }
                     for r in window {
                         let index = r.index;
                         results[index] = Some(r);
@@ -2067,8 +2260,21 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                 }
             }
         }
-        (t0, last_done, results, first_err)
+        (t0, last_done, results, first_err, ticks_raw)
     });
+    // Disarm the trap-cycle ring and drain it before any early return,
+    // so an error run never leaves the process-global capture armed.
+    let trace = if cfg.trace {
+        telemetry::set_trap_capture(false);
+        let (trap_cycles, trap_samples_total) = telemetry::take_trap_cycles();
+        Some(TraceData {
+            spans: tele.as_ref().map(|t| t.spans()).unwrap_or_default(),
+            trap_cycles,
+            trap_samples_total,
+        })
+    } else {
+        None
+    };
     let wall_secs = last_done.saturating_duration_since(t0).as_secs_f64();
     let drain_secs = admission_closed
         .lock()
@@ -2110,7 +2316,39 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         slo_kind_p99: cfg.slo_kind_p99.clone(),
         slo_shed: cfg.slo_shed,
         energy: cfg.energy.clone(),
+        trace,
+        tick_secs: cfg.tick_secs,
+        ticks_raw,
     })
+}
+
+/// Push one sampled span into the worker's ring.  Sampling is by
+/// request index (`index % sample_every == 0`) so the sampled set is
+/// deterministic regardless of worker interleaving.
+fn record_span(
+    tele: &telemetry::Telemetry,
+    sample_every: usize,
+    kind_idx: usize,
+    r: &RequestResult,
+) {
+    if r.index % sample_every != 0 {
+        return;
+    }
+    let shed = r.is_shed();
+    let phases = r.outcome.phases().unwrap_or_default();
+    tele.ring(r.worker).record(&telemetry::SpanSample {
+        index: r.index as u64,
+        worker: r.worker as u32,
+        kind_idx: kind_idx as u32,
+        shed,
+        queue_wait_secs: r.queue_wait_secs,
+        arm_secs: phases.arm_secs,
+        compute_secs: phases.compute_secs,
+        hygiene_secs: phases.hygiene_secs,
+        scan_secs: phases.scan_secs,
+        restore_secs: r.restore_secs(),
+        shed_secs: if shed { r.busy_secs() } else { 0.0 },
+    });
 }
 
 #[cfg(test)]
@@ -2815,5 +3053,178 @@ mod tests {
         for (x, y) in rep.results.iter().zip(&flat.results) {
             assert_eq!(x.dose, y.dose, "request {}", x.index);
         }
+    }
+
+    /// The deterministic slice of a request's ledger — everything a
+    /// telemetry flag could conceivably perturb except wall-clock noise.
+    fn ledger_of(rep: &ServeReport) -> Vec<(usize, u64, u64, u64, u64, bool)> {
+        rep.results
+            .iter()
+            .map(|r| {
+                (
+                    r.index,
+                    r.dose,
+                    r.hold_dose,
+                    r.nans_planted(),
+                    r.repairs(),
+                    r.is_shed(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn trace_and_tick_do_not_perturb_the_ledger() {
+        // The tentpole invariant: telemetry is observation-only.  Across
+        // a worker × batch grid, a run with --trace --tick must produce
+        // a bit-identical repair/dose/energy ledger to the same run with
+        // telemetry off.
+        let _guard = crate::trap::test_lock();
+        for workers in [1, 4] {
+            for batch in [1, 16] {
+                let base = ServeConfig {
+                    requests: 12,
+                    batch,
+                    ..small_cfg(workers)
+                };
+                let plain = serve(&base).unwrap();
+                let traced = serve(&ServeConfig {
+                    trace: true,
+                    tick_secs: Some(0.01),
+                    ..base.clone()
+                })
+                .unwrap();
+                assert_eq!(
+                    ledger_of(&plain),
+                    ledger_of(&traced),
+                    "workers={workers} batch={batch}"
+                );
+                // The energy ledger prices the same access counts, so
+                // the rendered energy records must match byte for byte.
+                let energy_jsonl = |rep: &ServeReport| -> Vec<String> {
+                    rep.records()
+                        .iter()
+                        .filter(|r| r.kind().starts_with("energy_"))
+                        .map(Record::render_jsonl)
+                        .collect()
+                };
+                assert_eq!(
+                    energy_jsonl(&plain),
+                    energy_jsonl(&traced),
+                    "workers={workers} batch={batch}"
+                );
+                // and the telemetry actually ran: spans recorded, tick
+                // stream partitions the run
+                let tr = traced.trace.as_ref().unwrap();
+                assert_eq!(tr.spans.len(), 12, "sample 1 spans every request");
+                let ticks = traced.tick_records();
+                assert!(!ticks.is_empty());
+                let ticked: f64 = ticks
+                    .iter()
+                    .map(|t| t.get("requests").and_then(|v| v.as_f64()).unwrap())
+                    .sum();
+                assert_eq!(ticked as usize, 12, "ticks partition the requests");
+            }
+        }
+    }
+
+    #[test]
+    fn serve_span_phases_sum_to_busy_seconds() {
+        let _guard = crate::trap::test_lock();
+        let rep = serve(&ServeConfig {
+            trace: true,
+            requests: 8,
+            ..small_cfg(2)
+        })
+        .unwrap();
+        let tr = rep.trace.as_ref().unwrap();
+        assert_eq!(tr.spans.len(), 8);
+        for s in &tr.spans {
+            let r = &rep.results[s.index as usize];
+            assert_eq!(s.worker as usize, r.worker);
+            assert_eq!(s.queue_wait_secs, r.queue_wait_secs);
+            // service_secs is assembled from the phase sum, so the span
+            // reconstruction is bit-exact, not merely close
+            assert!(
+                (s.busy_secs() - r.busy_secs()).abs() <= 1e-12,
+                "request {}: span {:?} vs busy {}",
+                s.index,
+                s,
+                r.busy_secs()
+            );
+        }
+        // spans render as records after the serve_slo tail
+        let recs = rep.records();
+        let slo_at = recs.iter().position(|r| r.kind() == "serve_slo").unwrap();
+        let span_at = recs.iter().position(|r| r.kind() == "serve_span").unwrap();
+        assert!(span_at > slo_at, "telemetry appends after the base stream");
+    }
+
+    #[test]
+    fn trace_sample_keeps_every_nth_request() {
+        let _guard = crate::trap::test_lock();
+        let rep = serve(&ServeConfig {
+            trace: true,
+            trace_sample: 2,
+            requests: 9,
+            ..small_cfg(1)
+        })
+        .unwrap();
+        let tr = rep.trace.as_ref().unwrap();
+        let indices: Vec<u64> = tr.spans.iter().map(|s| s.index).collect();
+        assert_eq!(indices, vec![0, 2, 4, 6, 8], "index-deterministic sampling");
+    }
+
+    #[test]
+    fn trap_latency_histogram_has_samples_under_injection() {
+        let _guard = crate::trap::test_lock();
+        let rep = serve(&ServeConfig {
+            trace: true,
+            requests: 8,
+            ..small_cfg(1)
+        })
+        .unwrap();
+        assert!(rep.sigfpe_total() > 0, "the dose must actually trap");
+        let tr = rep.trace.as_ref().unwrap();
+        assert!(
+            !tr.trap_cycles.is_empty() && tr.trap_samples_total > 0,
+            "handler stamped entry/exit cycles into the ring"
+        );
+        let rec = rep
+            .records()
+            .into_iter()
+            .find(|r| r.kind() == "trap_latency")
+            .unwrap();
+        let samples = rec.get("samples").and_then(|v| v.as_f64()).unwrap();
+        assert!(samples > 0.0, "{rec:?}");
+        assert!(
+            rec.get("p99_cycles").and_then(|v| v.as_f64()).unwrap()
+                >= rec.get("p50_cycles").and_then(|v| v.as_f64()).unwrap()
+        );
+    }
+
+    #[test]
+    fn telemetry_records_absent_by_default() {
+        let rep = serve(&small_cfg(1)).unwrap();
+        assert!(rep.trace.is_none() && rep.ticks_raw.is_empty());
+        assert!(rep.records().iter().all(|r| {
+            r.kind() != "serve_span" && r.kind() != "trap_latency" && r.kind() != "serve_tick"
+        }));
+    }
+
+    #[test]
+    fn trace_and_tick_flags_are_validated() {
+        assert!(serve(&ServeConfig {
+            trace: true,
+            trace_sample: 0,
+            ..small_cfg(1)
+        })
+        .is_err());
+        assert!(serve(&ServeConfig { tick_secs: Some(0.0), ..small_cfg(1) }).is_err());
+        assert!(serve(&ServeConfig {
+            tick_secs: Some(f64::NAN),
+            ..small_cfg(1)
+        })
+        .is_err());
     }
 }

@@ -141,6 +141,25 @@ pub enum RequestOutcome {
     Shed(ShedOutcome),
 }
 
+/// Wall-clock phase breakdown of one served request — the telemetry
+/// plane's `serve_span` payload (DESIGN.md §4.6).  Phases are disjoint
+/// and **observation-only**: the ledgers never read them.  Summed in
+/// the documented order they reproduce the request's `service_secs`
+/// (and, with `restore_secs`, its `busy_secs`) exactly, because
+/// `service_secs` is *built from* this sum rather than measured twice.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServedPhases {
+    /// Trap-arm share charged to this request (the window head carries
+    /// the whole window's one arm cost; later requests carry 0).
+    pub arm_secs: f64,
+    /// Any proactive scrub sweep plus the workload compute.
+    pub compute_secs: f64,
+    /// The post-run resident NaN hygiene pass.
+    pub hygiene_secs: f64,
+    /// The response NaN scan.
+    pub scan_secs: f64,
+}
+
 /// What [`ExperimentSession::serve_request`] measured for one served
 /// request.
 #[derive(Debug, Clone, Copy, Default)]
@@ -153,9 +172,13 @@ pub struct ServedOutcome {
     /// NaNs repaired by a proactive scrub sweep before the compute
     /// ([`Protection::Scrub`] only).
     pub scrub_repairs: u64,
-    /// Wall-clock seconds of the protected window (arming + any scrub
-    /// sweep + the compute itself).
+    /// Wall-clock seconds of serving the request: arming (window head),
+    /// any scrub sweep, the compute, the hygiene pass, and the response
+    /// NaN scan — the sum of [`ServedPhases`] (copy-on-serve restore is
+    /// accounted separately in `restore_secs`).
     pub service_secs: f64,
+    /// Where `service_secs` went, phase by phase (telemetry).
+    pub phases: ServedPhases,
     /// Non-finite values in the response — zero under reactive
     /// protection, the paper's Fig. 1 catastrophe without it.
     pub output_nans: u64,
@@ -328,6 +351,15 @@ impl RequestOutcome {
         match self {
             RequestOutcome::Served(o) => o.hold_secs,
             RequestOutcome::Shed(o) => o.hold_secs,
+        }
+    }
+
+    /// The served phase breakdown (`None` when shed — the shed path is
+    /// one O(dose) plant-and-patch, reported whole in `shed_secs`).
+    pub fn phases(&self) -> Option<ServedPhases> {
+        match self {
+            RequestOutcome::Served(o) => Some(o.phases),
+            RequestOutcome::Shed(_) => None,
         }
     }
 }
@@ -813,6 +845,7 @@ impl ExperimentSession {
                 }
             }
             workload.run();
+            let t_hygiene = Instant::now();
 
             // Hygiene pass (full paper mechanism only): a planted word
             // the compute never touched with an FP instruction took no
@@ -841,10 +874,7 @@ impl ExperimentSession {
                     }
                 }
             }
-            let mut service_secs = t0.elapsed().as_secs_f64();
-            if i == 0 {
-                service_secs += arm_secs;
-            }
+            let t_hygiene_end = Instant::now();
             let traps = guard.as_ref().map(|g| g.take_stats()).unwrap_or_default();
 
             // Response NaN scan.  The default `output_nonfinite` sweeps
@@ -856,7 +886,26 @@ impl ExperimentSession {
             // with no MXCSR save/restore.  `TrapGuard::with_masked`
             // stays available as the FP-scan test oracle (DESIGN.md
             // §4.4).
+            let t_scan = Instant::now();
             let output_nans = workload.output_nonfinite();
+            let scan_secs = t_scan.elapsed().as_secs_f64();
+
+            // Phase accounting: service time is *assembled* from the
+            // per-phase stamps (one left-to-right sum, mirrored by
+            // `SpanSample::busy_secs`), so a request's span phases add
+            // up to its `service_secs` bit-exactly instead of drifting
+            // from a second end-to-end measurement.  The stats read
+            // between hygiene and scan is deliberately outside every
+            // phase — it is bookkeeping, not service work.
+            let phases = ServedPhases {
+                arm_secs: if i == 0 { arm_secs } else { 0.0 },
+                compute_secs: t_hygiene.duration_since(t0).as_secs_f64(),
+                hygiene_secs: t_hygiene_end.duration_since(t_hygiene).as_secs_f64(),
+                scan_secs,
+            };
+            let service_secs = ((phases.arm_secs + phases.compute_secs)
+                + phases.hygiene_secs)
+                + phases.scan_secs;
 
             // Copy-on-serve: put a mutating resident back to its
             // pristine bytes after the response was taken.  This also
@@ -895,6 +944,7 @@ impl ExperimentSession {
                     traps,
                     scrub_repairs,
                     service_secs,
+                    phases,
                     output_nans,
                     hygiene_repairs,
                     restored_words,

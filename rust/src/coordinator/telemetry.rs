@@ -1,0 +1,728 @@
+//! Streaming telemetry plane: per-request phase spans, trap-handler
+//! latency capture, virtual/wall-clock serve ticks, and watchdog stall
+//! surfacing.
+//!
+//! Everything in this module is **observation-only**: nothing here may
+//! influence the repair, dose, or energy ledgers.  The serve path
+//! records into lock-free rings; aggregation into [`Record`]s happens
+//! after the run, off the hot path.
+//!
+//! Three capture surfaces live here:
+//!
+//! * **Span rings** ([`SpanRing`] / [`Telemetry`]) — one ring per serve
+//!   worker, written only by the owning worker thread under the
+//!   seqlock idiom of [`crate::trap::diagnostics`]: zero the sequence
+//!   word (`Release`), store the payload (`Relaxed`), publish the new
+//!   sequence (`Release`).  A reader that observes a stable non-zero
+//!   sequence on both sides of its payload loads has a consistent
+//!   sample; torn slots are skipped.  The rings are owned by one serve
+//!   run (not process-global), so concurrent runs never mix spans.
+//!
+//! * **Trap-cycle ring** — a process-global ring of `AtomicU64`s the
+//!   `SIGFPE` handler appends each trap's rdtsc entry→exit cycle delta
+//!   to.  It must be global (the handler has no run context) and every
+//!   operation on it is a plain atomic load/store/fetch-add, so the
+//!   append is async-signal-safe by the same argument as the handler's
+//!   own counters.  Capture is gated by one `AtomicBool` the handler
+//!   reads with a single `Relaxed` load, so the cost with tracing off
+//!   is one predictable branch.
+//!
+//! * **Watchdog stalls** — the scrub watchdog's monitor thread is a
+//!   normal thread, so stall events go through a plain mutexed buffer
+//!   plus a [`Metrics`](super::metrics::Metrics) counter; the CLI
+//!   drains them into `watchdog_stall` records after the command.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::report::Record;
+use crate::util::stats::percentile_sorted;
+use crate::util::timing;
+
+// ---------------------------------------------------------------------------
+// Span rings
+// ---------------------------------------------------------------------------
+
+/// Default per-worker span-ring capacity (slots).  Runs longer than
+/// this per worker keep the newest samples; the `recorded` counter
+/// still reports how many spans were offered.
+pub const SPAN_RING_SLOTS: usize = 4096;
+
+/// One sampled request span: who served it and where its wall time
+/// went, phase by phase.  Phase fields are disjoint; their sum (in the
+/// documented order) reproduces the request's `busy_secs` exactly, and
+/// `queue_wait_secs` rides on top of that to make up the latency.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SpanSample {
+    /// Request index (admission order).
+    pub index: u64,
+    /// Worker that served (or shed) the request.
+    pub worker: u32,
+    /// Position of the request's kind in the mix.
+    pub kind_idx: u32,
+    /// True when the request was shed at dequeue.
+    pub shed: bool,
+    /// Admission → dispatch.
+    pub queue_wait_secs: f64,
+    /// Trap-arm share charged to this request (window head only).
+    pub arm_secs: f64,
+    /// Scrub sweep + workload compute under the armed window.
+    pub compute_secs: f64,
+    /// Post-run resident NaN hygiene pass.
+    pub hygiene_secs: f64,
+    /// Response-scan (output NaN audit).
+    pub scan_secs: f64,
+    /// Copy-on-serve pristine restore.
+    pub restore_secs: f64,
+    /// Shed-path dose patch-back (shed requests only).
+    pub shed_secs: f64,
+}
+
+impl SpanSample {
+    /// The span's busy time: the same left-to-right sum the server uses
+    /// to build `service_secs`/`busy_secs`, so a span's phases sum to
+    /// its request's ledger bit-exactly.
+    pub fn busy_secs(&self) -> f64 {
+        if self.shed {
+            self.shed_secs
+        } else {
+            (((self.arm_secs + self.compute_secs) + self.hygiene_secs) + self.scan_secs)
+                + self.restore_secs
+        }
+    }
+
+    /// The span's `serve_span` record.
+    pub fn to_record(&self) -> Record {
+        Record::new("serve_span")
+            .field("index", self.index)
+            .field("worker", self.worker)
+            .field("kind_idx", self.kind_idx)
+            .field("outcome", if self.shed { "shed" } else { "served" })
+            .field("queue_wait_secs", self.queue_wait_secs)
+            .field("arm_secs", self.arm_secs)
+            .field("compute_secs", self.compute_secs)
+            .field("hygiene_secs", self.hygiene_secs)
+            .field("scan_secs", self.scan_secs)
+            .field("restore_secs", self.restore_secs)
+            .field("shed_secs", self.shed_secs)
+            .field("busy_secs", self.busy_secs())
+    }
+}
+
+/// Payload word count of a span slot (everything but the sequence).
+const SPAN_WORDS: usize = 11;
+
+/// One seqlock slot: a sequence word plus the span payload, f64 fields
+/// stored as raw bits.
+struct SpanSlot {
+    /// 0 = empty or mid-write; otherwise `1 + record ordinal`.
+    seq: AtomicU64,
+    words: [AtomicU64; SPAN_WORDS],
+}
+
+impl SpanSlot {
+    const fn empty() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Self { seq: AtomicU64::new(0), words: [ZERO; SPAN_WORDS] }
+    }
+}
+
+fn span_words(s: &SpanSample) -> [u64; SPAN_WORDS] {
+    [
+        s.index,
+        s.worker as u64,
+        s.kind_idx as u64,
+        s.shed as u64,
+        s.queue_wait_secs.to_bits(),
+        s.arm_secs.to_bits(),
+        s.compute_secs.to_bits(),
+        s.hygiene_secs.to_bits(),
+        s.scan_secs.to_bits(),
+        s.restore_secs.to_bits(),
+        s.shed_secs.to_bits(),
+    ]
+}
+
+fn span_from_words(w: &[u64; SPAN_WORDS]) -> SpanSample {
+    SpanSample {
+        index: w[0],
+        worker: w[1] as u32,
+        kind_idx: w[2] as u32,
+        shed: w[3] != 0,
+        queue_wait_secs: f64::from_bits(w[4]),
+        arm_secs: f64::from_bits(w[5]),
+        compute_secs: f64::from_bits(w[6]),
+        hygiene_secs: f64::from_bits(w[7]),
+        scan_secs: f64::from_bits(w[8]),
+        restore_secs: f64::from_bits(w[9]),
+        shed_secs: f64::from_bits(w[10]),
+    }
+}
+
+/// A single-writer lock-free span ring.  The owning worker appends with
+/// two `Release` stores and a handful of `Relaxed` payload stores — no
+/// lock, no allocation — and any thread may snapshot concurrently,
+/// skipping slots it catches mid-write.
+pub struct SpanRing {
+    slots: Box<[SpanSlot]>,
+    next: AtomicU64,
+}
+
+impl SpanRing {
+    /// A ring with `slots` capacity (at least 1).
+    pub fn new(slots: usize) -> Self {
+        let n = slots.max(1);
+        Self {
+            slots: (0..n).map(|_| SpanSlot::empty()).collect(),
+            next: AtomicU64::new(0),
+        }
+    }
+
+    /// Append one span (seqlock write; wraps over the oldest slot).
+    pub fn record(&self, s: &SpanSample) {
+        let n = self.next.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(n % self.slots.len() as u64) as usize];
+        slot.seq.store(0, Ordering::Release);
+        for (w, v) in slot.words.iter().zip(span_words(s)) {
+            w.store(v, Ordering::Relaxed);
+        }
+        slot.seq.store(n + 1, Ordering::Release);
+    }
+
+    /// Spans offered to the ring over its lifetime (may exceed the
+    /// retained count once the ring wraps).
+    pub fn recorded(&self) -> u64 {
+        self.next.load(Ordering::Relaxed)
+    }
+
+    /// Consistent retained samples, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanSample> {
+        let mut out: Vec<(u64, SpanSample)> = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter() {
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq == 0 {
+                continue;
+            }
+            let mut w = [0u64; SPAN_WORDS];
+            for (dst, src) in w.iter_mut().zip(slot.words.iter()) {
+                *dst = src.load(Ordering::Relaxed);
+            }
+            if slot.seq.load(Ordering::Acquire) != seq {
+                continue; // torn: writer lapped us mid-read
+            }
+            out.push((seq, span_from_words(&w)));
+        }
+        out.sort_by_key(|&(seq, _)| seq);
+        out.into_iter().map(|(_, s)| s).collect()
+    }
+}
+
+/// One serve run's telemetry: a span ring per worker.  Owned by the
+/// run (dropped with the report), so concurrent serve runs — tests,
+/// capacity probes — never observe each other's spans.
+pub struct Telemetry {
+    rings: Vec<SpanRing>,
+}
+
+impl Telemetry {
+    /// Rings for `workers` workers at the default capacity.
+    pub fn new(workers: usize) -> Self {
+        Self::with_slots(workers, SPAN_RING_SLOTS)
+    }
+
+    /// Rings for `workers` workers with `slots` slots each.
+    pub fn with_slots(workers: usize, slots: usize) -> Self {
+        Self { rings: (0..workers.max(1)).map(|_| SpanRing::new(slots)).collect() }
+    }
+
+    /// The ring owned by `worker`.
+    pub fn ring(&self, worker: usize) -> &SpanRing {
+        &self.rings[worker]
+    }
+
+    /// Every worker's retained spans, merged and sorted by request
+    /// index.
+    pub fn spans(&self) -> Vec<SpanSample> {
+        let mut all: Vec<SpanSample> = self.rings.iter().flat_map(|r| r.snapshot()).collect();
+        all.sort_by_key(|s| s.index);
+        all
+    }
+
+    /// Total spans offered across all rings.
+    pub fn recorded(&self) -> u64 {
+        self.rings.iter().map(|r| r.recorded()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trap-handler latency capture
+// ---------------------------------------------------------------------------
+
+/// Trap-cycle ring capacity (power of two; the handler masks into it).
+pub const TRAP_CYCLE_SLOTS: usize = 8192;
+
+static TRAP_CAPTURE: AtomicBool = AtomicBool::new(false);
+static TRAP_CYCLE_NEXT: AtomicU64 = AtomicU64::new(0);
+static TRAP_CYCLES: [AtomicU64; TRAP_CYCLE_SLOTS] = {
+    #[allow(clippy::declare_interior_mutable_const)]
+    const ZERO: AtomicU64 = AtomicU64::new(0);
+    [ZERO; TRAP_CYCLE_SLOTS]
+};
+
+/// Turn handler-side cycle capture on or off.  Serve runs with
+/// `--trace` bracket themselves with this; anything trapped by other
+/// threads meanwhile is captured too (the ring is process-global), so
+/// tests serialize on [`crate::trap::test_lock`].
+pub fn set_trap_capture(on: bool) {
+    TRAP_CAPTURE.store(on, Ordering::Relaxed);
+}
+
+/// Is handler-side cycle capture armed?
+pub fn trap_capture_enabled() -> bool {
+    TRAP_CAPTURE.load(Ordering::Relaxed)
+}
+
+/// Reset the trap-cycle ring (slots + offered counter).
+pub fn clear_trap_cycles() {
+    TRAP_CYCLE_NEXT.store(0, Ordering::Relaxed);
+    for c in TRAP_CYCLES.iter() {
+        c.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Append one trap's handler entry→exit rdtsc delta.
+///
+/// **Async-signal-safety:** one `Relaxed` load, one `fetch_add`, one
+/// `store` — no locks, no allocation, no syscalls — so the `SIGFPE`
+/// handler may call this at any depth.  The delta is stored `+1` so a
+/// zero slot always means "never written" (a genuine 0-cycle delta is
+/// impossible on real hardware but would still round-trip as 1).
+pub fn record_trap_cycles(entry: u64, exit: u64) {
+    if !TRAP_CAPTURE.load(Ordering::Relaxed) {
+        return;
+    }
+    let n = TRAP_CYCLE_NEXT.fetch_add(1, Ordering::Relaxed);
+    TRAP_CYCLES[(n as usize) & (TRAP_CYCLE_SLOTS - 1)]
+        .store(exit.wrapping_sub(entry).wrapping_add(1), Ordering::Relaxed);
+}
+
+/// Drain the retained cycle deltas (newest `TRAP_CYCLE_SLOTS` of them)
+/// plus the total number of traps offered to the ring, then clear it.
+pub fn take_trap_cycles() -> (Vec<u64>, u64) {
+    let total = TRAP_CYCLE_NEXT.load(Ordering::Relaxed);
+    let mut out = Vec::new();
+    for c in TRAP_CYCLES.iter() {
+        let v = c.load(Ordering::Relaxed);
+        if v != 0 {
+            out.push(v - 1);
+        }
+    }
+    clear_trap_cycles();
+    (out, total)
+}
+
+/// The `trap_latency` histogram record: cycle and wall-time quantiles
+/// of the captured handler entry→exit deltas.  `samples` is the
+/// retained count, `samples_total` everything the handler offered
+/// (they differ once the ring wraps).
+pub fn trap_latency_record(cycles: &[u64], samples_total: u64) -> Record {
+    let mut secs: Vec<f64> = cycles.iter().map(|&c| timing::tsc_to_secs(c)).collect();
+    secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut cyc: Vec<f64> = cycles.iter().map(|&c| c as f64).collect();
+    cyc.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (mean_secs, mean_cycles) = if cycles.is_empty() {
+        (0.0, 0.0)
+    } else {
+        (
+            secs.iter().sum::<f64>() / secs.len() as f64,
+            cyc.iter().sum::<f64>() / cyc.len() as f64,
+        )
+    };
+    let q = |v: &[f64], p: f64| if v.is_empty() { 0.0 } else { percentile_sorted(v, p) };
+    Record::new("trap_latency")
+        .field("samples", cycles.len() as u64)
+        .field("samples_total", samples_total)
+        .field("mean_cycles", mean_cycles)
+        .field("p50_cycles", q(&cyc, 0.50))
+        .field("p99_cycles", q(&cyc, 0.99))
+        .field("max_cycles", cyc.last().copied().unwrap_or(0.0))
+        .field("mean_secs", mean_secs)
+        .field("p50_secs", q(&secs, 0.50))
+        .field("p99_secs", q(&secs, 0.99))
+        .field("max_secs", secs.last().copied().unwrap_or(0.0))
+}
+
+// ---------------------------------------------------------------------------
+// Serve ticks
+// ---------------------------------------------------------------------------
+
+/// One `serve_tick` time-series window: what the server did between
+/// `t_secs` and `t_secs + dt_secs`.  Live runs bucket requests by
+/// wall-clock completion (diagnostic — wall time is noisy); `capacity`
+/// model probes bucket by DES virtual completion time and are
+/// byte-deterministic at any `--workers`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TickPoint {
+    /// Window ordinal (0-based).
+    pub tick: u64,
+    /// Window start, seconds since the run's t0 (virtual or wall).
+    pub t_secs: f64,
+    /// Window width, seconds.
+    pub dt_secs: f64,
+    /// Requests completing in the window (served + shed).
+    pub requests: u64,
+    /// Of those, served.
+    pub served: u64,
+    /// Of those, shed.
+    pub shed: u64,
+    /// In-window p50 latency over served completions.
+    pub p50_secs: f64,
+    /// In-window p99 latency over served completions.
+    pub p99_secs: f64,
+    /// Highest queue occupancy sampled in the window.
+    pub queue_depth: usize,
+    /// Highest single-lane occupancy sampled in the window (live runs;
+    /// the model has no lanes and reports 0).
+    pub lane_highwater: usize,
+    /// SIGFPE traps taken by requests completing in the window.
+    pub traps: u64,
+    /// Repairs (register + memory + scrub + hygiene + shed patch-backs)
+    /// by requests completing in the window.
+    pub repairs: u64,
+    /// NaN dose issued to requests completing in the window.
+    pub dose: u64,
+    /// Distinct NaN words planted into those requests.
+    pub nans_planted: u64,
+    /// Access-ledger energy priced over the window, picojoules (live
+    /// runs with an energy profile; `None` otherwise).
+    pub energy_pj: Option<f64>,
+}
+
+impl TickPoint {
+    /// The window's `serve_tick` record.  `mode` is `"live"` (wall
+    /// clock, diagnostic) or `"model"` (virtual time, deterministic).
+    pub fn to_record(&self, label: &str, mode: &str) -> Record {
+        let rps = if self.dt_secs > 0.0 { self.served as f64 / self.dt_secs } else { 0.0 };
+        let mut rec = Record::new("serve_tick")
+            .field("label", label)
+            .field("mode", mode)
+            .field("tick", self.tick)
+            .field("t_secs", self.t_secs)
+            .field("dt_secs", self.dt_secs)
+            .field("requests", self.requests)
+            .field("served", self.served)
+            .field("shed", self.shed)
+            .field("rps", rps)
+            .field("p50_secs", self.p50_secs)
+            .field("p99_secs", self.p99_secs)
+            .field("queue_depth", self.queue_depth)
+            .field("lane_highwater", self.lane_highwater)
+            .field("traps", self.traps)
+            .field("repairs", self.repairs)
+            .field("dose", self.dose)
+            .field("nans_planted", self.nans_planted);
+        if let Some(pj) = self.energy_pj {
+            rec = rec
+                .field("energy_pj", pj)
+                .field("energy_pj_per_sec", if self.dt_secs > 0.0 { pj / self.dt_secs } else { 0.0 });
+        }
+        rec
+    }
+}
+
+/// Shared tick bucketing: fold per-request completion events into
+/// fixed-width windows.  Events are `(completion time since t0,
+/// latency, shed, traps, repairs, dose, planted)`; `samples` are
+/// `(time since t0, queue occupancy, lane high-water)` observations
+/// folded into whichever window they land in.  Pure function of its
+/// inputs — the capacity model's byte-determinism rides on that.
+pub fn bucket_ticks(
+    dt: f64,
+    events: &[TickEvent],
+    samples: &[(f64, usize, usize)],
+) -> Vec<TickPoint> {
+    if !(dt > 0.0) || events.is_empty() {
+        return Vec::new();
+    }
+    let horizon = events
+        .iter()
+        .map(|e| e.t_secs)
+        .fold(0.0f64, f64::max)
+        .max(samples.iter().map(|&(t, _, _)| t).fold(0.0f64, f64::max));
+    let n = (horizon / dt) as usize + 1;
+    let mut ticks: Vec<TickPoint> = (0..n)
+        .map(|i| TickPoint {
+            tick: i as u64,
+            t_secs: i as f64 * dt,
+            dt_secs: dt,
+            ..TickPoint::default()
+        })
+        .collect();
+    let idx = |t: f64| ((t / dt) as usize).min(n - 1);
+    let mut lat: Vec<Vec<f64>> = vec![Vec::new(); n];
+    for e in events {
+        let i = idx(e.t_secs);
+        let tp = &mut ticks[i];
+        tp.requests += 1;
+        if e.shed {
+            tp.shed += 1;
+        } else {
+            tp.served += 1;
+            lat[i].push(e.latency_secs);
+        }
+        tp.traps += e.traps;
+        tp.repairs += e.repairs;
+        tp.dose += e.dose;
+        tp.nans_planted += e.nans_planted;
+        if let Some(pj) = e.energy_pj {
+            *tp.energy_pj.get_or_insert(0.0) += pj;
+        }
+    }
+    for &(t, depth, lane) in samples {
+        let i = idx(t);
+        ticks[i].queue_depth = ticks[i].queue_depth.max(depth);
+        ticks[i].lane_highwater = ticks[i].lane_highwater.max(lane);
+    }
+    for (i, tp) in ticks.iter_mut().enumerate() {
+        let l = &mut lat[i];
+        l.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if !l.is_empty() {
+            tp.p50_secs = percentile_sorted(l, 0.50);
+            tp.p99_secs = percentile_sorted(l, 0.99);
+        }
+    }
+    ticks
+}
+
+/// One request completion, as fed to [`bucket_ticks`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TickEvent {
+    /// Completion time since the run's t0 (virtual or wall).
+    pub t_secs: f64,
+    /// Admission→completion latency.
+    pub latency_secs: f64,
+    /// Was the request shed?
+    pub shed: bool,
+    /// SIGFPE traps the request took.
+    pub traps: u64,
+    /// Repairs of every flavor the request performed.
+    pub repairs: u64,
+    /// The request's NaN dose.
+    pub dose: u64,
+    /// Distinct NaN words planted for it.
+    pub nans_planted: u64,
+    /// Access-ledger energy attributable to the request, picojoules.
+    pub energy_pj: Option<f64>,
+}
+
+// ---------------------------------------------------------------------------
+// Watchdog stalls
+// ---------------------------------------------------------------------------
+
+/// One scrub-watchdog stall detection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StallEvent {
+    /// Trap domain the stalled window is bound to, when known.
+    pub domain: Option<usize>,
+    /// Words in the watched window.
+    pub window_words: usize,
+    /// Monitor periods the window went unchanged before the verdict.
+    pub unchanged_periods: u32,
+    /// Monitor period, seconds.
+    pub period_secs: f64,
+}
+
+impl StallEvent {
+    /// The stall's `watchdog_stall` record.
+    pub fn to_record(&self) -> Record {
+        let mut rec = Record::new("watchdog_stall")
+            .field("window_words", self.window_words)
+            .field("unchanged_periods", self.unchanged_periods)
+            .field("period_secs", self.period_secs)
+            .field("stalled_secs", self.period_secs * self.unchanged_periods as f64);
+        if let Some(d) = self.domain {
+            rec = rec.field("domain", d);
+        }
+        rec
+    }
+}
+
+static STALLS: Mutex<Vec<StallEvent>> = Mutex::new(Vec::new());
+
+/// Report a watchdog stall: buffers the event for the CLI's
+/// `watchdog_stall` records and bumps the global
+/// `watchdog_stall_total` metrics counter.  Called from the watchdog's
+/// monitor thread (a normal thread — locking is fine here).
+pub fn record_stall(e: StallEvent) {
+    super::metrics::Metrics::global().incr("watchdog_stall_total");
+    STALLS.lock().expect("stall buffer poisoned").push(e);
+}
+
+/// Drain every buffered stall event.
+pub fn take_stalls() -> Vec<StallEvent> {
+    std::mem::take(&mut *STALLS.lock().expect("stall buffer poisoned"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(i: u64, compute: f64) -> SpanSample {
+        SpanSample {
+            index: i,
+            worker: (i % 3) as u32,
+            kind_idx: 0,
+            shed: false,
+            queue_wait_secs: 0.5,
+            arm_secs: 0.1,
+            compute_secs: compute,
+            hygiene_secs: 0.01,
+            scan_secs: 0.02,
+            restore_secs: 0.03,
+            shed_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn span_ring_roundtrips_and_orders() {
+        let ring = SpanRing::new(8);
+        for i in 0..5 {
+            ring.record(&span(i, i as f64));
+        }
+        let got = ring.snapshot();
+        assert_eq!(got.len(), 5);
+        assert_eq!(ring.recorded(), 5);
+        for (i, s) in got.iter().enumerate() {
+            assert_eq!(*s, span(i as u64, i as f64));
+        }
+    }
+
+    #[test]
+    fn span_ring_wraps_keeping_newest() {
+        let ring = SpanRing::new(4);
+        for i in 0..10 {
+            ring.record(&span(i, 0.0));
+        }
+        let got = ring.snapshot();
+        assert_eq!(got.len(), 4);
+        assert_eq!(ring.recorded(), 10);
+        let idx: Vec<u64> = got.iter().map(|s| s.index).collect();
+        assert_eq!(idx, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn telemetry_merges_worker_rings_by_index() {
+        let t = Telemetry::with_slots(3, 16);
+        for i in (0..9).rev() {
+            t.ring((i % 3) as usize).record(&span(i, 0.0));
+        }
+        let spans = t.spans();
+        assert_eq!(spans.len(), 9);
+        assert_eq!(t.recorded(), 9);
+        let idx: Vec<u64> = spans.iter().map(|s| s.index).collect();
+        assert_eq!(idx, (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn span_busy_matches_phase_sum() {
+        let s = span(0, 1.0);
+        let sum = (((s.arm_secs + s.compute_secs) + s.hygiene_secs) + s.scan_secs)
+            + s.restore_secs;
+        assert_eq!(s.busy_secs(), sum);
+        let shed = SpanSample { shed: true, shed_secs: 0.25, ..SpanSample::default() };
+        assert_eq!(shed.busy_secs(), 0.25);
+    }
+
+    #[test]
+    fn trap_cycle_capture_is_gated() {
+        let _guard = crate::trap::test_lock();
+        set_trap_capture(false);
+        clear_trap_cycles();
+        record_trap_cycles(100, 300); // capture off: dropped
+        let (cycles, total) = take_trap_cycles();
+        assert!(cycles.is_empty());
+        assert_eq!(total, 0);
+
+        set_trap_capture(true);
+        record_trap_cycles(100, 300);
+        record_trap_cycles(1000, 1001);
+        set_trap_capture(false);
+        let (mut cycles, total) = take_trap_cycles();
+        cycles.sort_unstable();
+        assert_eq!(cycles, vec![1, 200]);
+        assert_eq!(total, 2);
+        // Drained: a second take sees an empty ring.
+        let (cycles, total) = take_trap_cycles();
+        assert!(cycles.is_empty());
+        assert_eq!(total, 0);
+    }
+
+    #[test]
+    fn trap_latency_record_reports_quantiles() {
+        let cycles: Vec<u64> = (1..=100).collect();
+        let rec = trap_latency_record(&cycles, 250);
+        assert_eq!(rec.kind(), "trap_latency");
+        assert_eq!(rec.get("samples").unwrap().as_f64(), Some(100.0));
+        assert_eq!(rec.get("samples_total").unwrap().as_f64(), Some(250.0));
+        assert!(rec.get("p99_cycles").unwrap().as_f64().unwrap() >= 99.0);
+        assert!(rec.get("mean_secs").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn bucket_ticks_partitions_events() {
+        let mk = |t: f64, shed: bool| TickEvent {
+            t_secs: t,
+            latency_secs: t / 10.0,
+            shed,
+            traps: 2,
+            repairs: 3,
+            dose: 4,
+            nans_planted: 1,
+            energy_pj: Some(10.0),
+        };
+        let events = vec![mk(0.1, false), mk(0.4, true), mk(1.2, false), mk(2.9, false)];
+        let samples = vec![(0.2, 5, 2), (1.3, 7, 3)];
+        let ticks = bucket_ticks(1.0, &events, &samples);
+        assert_eq!(ticks.len(), 3);
+        assert_eq!(ticks.iter().map(|t| t.requests).sum::<u64>(), 4);
+        assert_eq!(ticks[0].requests, 2);
+        assert_eq!(ticks[0].served, 1);
+        assert_eq!(ticks[0].shed, 1);
+        assert_eq!(ticks[0].queue_depth, 5);
+        assert_eq!(ticks[1].lane_highwater, 3);
+        assert_eq!(ticks[2].requests, 1);
+        assert_eq!(ticks[0].energy_pj, Some(20.0));
+        assert_eq!(ticks[0].traps, 4);
+        // p50 of tick 1's single served latency is that latency.
+        assert!((ticks[1].p50_secs - 0.12).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bucket_ticks_empty_and_disabled() {
+        assert!(bucket_ticks(0.0, &[TickEvent::default()], &[]).is_empty());
+        assert!(bucket_ticks(1.0, &[], &[(0.5, 3, 1)]).is_empty());
+    }
+
+    #[test]
+    fn stall_events_buffer_and_count() {
+        // Serializes with every other test that drains the global stall
+        // buffer (the watchdog's stall test does too).
+        let _guard = crate::trap::test_lock();
+        let before = super::super::metrics::Metrics::global().get("watchdog_stall_total");
+        let marker = StallEvent {
+            domain: Some(7777),
+            window_words: 1234,
+            unchanged_periods: 3,
+            period_secs: 0.01,
+        };
+        record_stall(marker);
+        let after = super::super::metrics::Metrics::global().get("watchdog_stall_total");
+        assert!(after >= before + 1);
+        let taken = take_stalls();
+        assert!(taken.iter().any(|e| *e == marker));
+        let rec = marker.to_record();
+        assert_eq!(rec.kind(), "watchdog_stall");
+        assert_eq!(rec.get("domain").unwrap().as_f64(), Some(7777.0));
+    }
+}

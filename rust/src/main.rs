@@ -37,6 +37,28 @@ fn app() -> App {
         .global_opt("out", None, "write output to this file instead of stdout")
         .global_opt("workers", Some("0"), "scheduler worker threads (0 = all cores)")
         .global_flag("telemetry", "emit per-cell scheduler telemetry (worker, timing)")
+        .global_flag(
+            "trace",
+            "serve: record per-request phase spans and the trap-handler latency \
+             timeline (observation-only; ledgers are bit-identical either way)",
+        )
+        .global_opt(
+            "trace-sample",
+            Some("1"),
+            "with --trace, span every Nth request (trap latency capture is unaffected)",
+        )
+        .global_opt(
+            "tick",
+            None,
+            "serve/capacity: emit serve_tick time-series records every SECS \
+             (wall clock in live serve, virtual time in the capacity model)",
+        )
+        .global_opt(
+            "trap-diag",
+            None,
+            "emit the newest N trap-diagnostics ring entries as trap_diag records \
+             after the results",
+        )
         .cmd(
             CmdSpec::new("run", "run one campaign cell (workload × protection × injection)")
                 .opt("workload", Some("matmul:512"), "workload spec name:size[:extra]")
@@ -629,6 +651,9 @@ fn main() -> Result<()> {
                 warmup: m.get_parse("warmup")?,
                 slo_shed: m.get_parse_opt("slo-shed")?,
                 energy,
+                trace: m.flag("trace"),
+                trace_sample: m.get_parse("trace-sample")?,
+                tick_secs: m.get_parse_opt("tick")?,
             };
             let rep = server::serve(&cfg)?;
             match &mut sink {
@@ -688,6 +713,7 @@ fn main() -> Result<()> {
                     Some(_) => m.get_list("energy-budget")?,
                     None => Vec::new(),
                 },
+                tick_secs: m.get_parse_opt("tick")?,
             };
             // --workers parallelizes the configuration matrix; probe
             // serve-worker counts stay pinned so knees are comparable.
@@ -757,8 +783,64 @@ fn main() -> Result<()> {
     if m.flag("telemetry") {
         emit_telemetry(&mut sink)?;
     }
+    if let Some(n) = m.get_parse_opt::<usize>("trap-diag")? {
+        emit_trap_diag(&mut sink, n)?;
+    }
+    emit_watchdog_stalls(&mut sink)?;
     if let Some(s) = &mut sink {
         s.flush()?;
+    }
+    Ok(())
+}
+
+/// Emit the newest `n` trap-diagnostics ring entries as structured
+/// `trap_diag` records (or the ring's text rendering in default text
+/// mode) — the `--trap-diag N` global flag.
+fn emit_trap_diag(sink: &mut Option<ResultSink>, n: usize) -> Result<()> {
+    use nanrepair::trap::diagnostics;
+    match sink {
+        Some(s) => {
+            for r in diagnostics::snapshot().into_iter().take(n) {
+                s.record(&r.to_record())?;
+            }
+        }
+        None => {
+            println!("\nlast traps:\n{}", diagnostics::render(n));
+        }
+    }
+    Ok(())
+}
+
+/// Emit any watchdog stalls the command's runs detected: one
+/// `watchdog_stall` record per stall through the sink, or a line on
+/// stdout in text mode.  A no-op when nothing stalled (the common case).
+fn emit_watchdog_stalls(sink: &mut Option<ResultSink>) -> Result<()> {
+    use nanrepair::coordinator::telemetry;
+    let stalls = telemetry::take_stalls();
+    if stalls.is_empty() {
+        return Ok(());
+    }
+    match sink {
+        Some(s) => {
+            for e in &stalls {
+                s.record(&e.to_record())?;
+            }
+        }
+        None => {
+            for e in &stalls {
+                let domain = e
+                    .domain
+                    .map(|d| format!("domain {d}"))
+                    .unwrap_or_else(|| "no armed domain".into());
+                println!(
+                    "watchdog stall: no progress for {} periods of {} ({} words, {})",
+                    e.unchanged_periods,
+                    fmt_secs(e.period_secs),
+                    e.window_words,
+                    domain
+                );
+            }
+        }
     }
     Ok(())
 }

@@ -36,6 +36,61 @@ pub struct TrapRecord {
     /// Trap-domain slot the fault was handled in (attribution: the ring is
     /// shared across concurrently armed domains).
     pub domain: usize,
+    /// rdtsc stamp at handler entry (0 on pre-telemetry records).
+    pub entry_cycles: u64,
+    /// rdtsc stamp just before handler exit.
+    pub exit_cycles: u64,
+}
+
+impl TrapRecord {
+    /// Cycles the handler held the faulting thread (entry→exit rdtsc
+    /// delta — the same quantity the `trap_latency` histogram bins).
+    pub fn handler_cycles(&self) -> u64 {
+        self.exit_cycles.wrapping_sub(self.entry_cycles)
+    }
+
+    /// Structured `trap_diag` view of the record (the ring's text
+    /// [`render`] as a [`Record`](crate::util::report::Record)).
+    pub fn to_record(&self) -> crate::util::report::Record {
+        let text = match crate::disasm::decode_insn(&self.insn_bytes) {
+            Some(i) => crate::disasm::fmt::fmt_insn(&i),
+            None => "<undecoded>".to_string(),
+        };
+        crate::util::report::Record::new("trap_diag")
+            .field("seq", self.seq)
+            .field("domain", self.domain)
+            .field("rip", format!("{:#x}", self.rip))
+            .field("insn", text)
+            .field("actions", action_names(self.actions).join("+"))
+            .field("repaired_addr", format!("{:#x}", self.repaired_addr))
+            .field("entry_cycles", self.entry_cycles)
+            .field("exit_cycles", self.exit_cycles)
+            .field("handler_cycles", self.handler_cycles())
+    }
+}
+
+/// Human names for an [`action`] bitmask, in bit order.
+pub fn action_names(actions: u32) -> Vec<&'static str> {
+    let mut acts = Vec::new();
+    if actions & action::REG_REPAIR != 0 {
+        acts.push("reg");
+    }
+    if actions & action::MEM_DIRECT != 0 {
+        acts.push("mem-direct");
+    }
+    if actions & action::MEM_BACKTRACED != 0 {
+        acts.push("mem-backtraced");
+    }
+    if actions & action::EMULATED != 0 {
+        acts.push("emulated");
+    }
+    if actions & action::FALLBACK_SWEEP != 0 {
+        acts.push("sweep");
+    }
+    if actions & action::GAVE_UP != 0 {
+        acts.push("GAVE-UP");
+    }
+    acts
 }
 
 struct Slot {
@@ -45,6 +100,8 @@ struct Slot {
     addr: AtomicU64,
     actions: AtomicU64,
     domain: AtomicU64,
+    entry: AtomicU64,
+    exit: AtomicU64,
 }
 
 #[allow(clippy::declare_interior_mutable_const)]
@@ -55,6 +112,8 @@ const EMPTY: Slot = Slot {
     addr: AtomicU64::new(0),
     actions: AtomicU64::new(0),
     domain: AtomicU64::new(0),
+    entry: AtomicU64::new(0),
+    exit: AtomicU64::new(0),
 };
 
 static SLOTS: [Slot; RING] = [EMPTY; RING];
@@ -62,7 +121,9 @@ static NEXT: AtomicUsize = AtomicUsize::new(0);
 static SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// Record one trap (called from the signal handler; async-signal-safe).
-/// `domain` is the trap-domain slot that handled the fault.
+/// `domain` is the trap-domain slot that handled the fault;
+/// `entry_cycles`/`exit_cycles` are the handler's rdtsc stamps at entry
+/// and just before resuming the faulting thread.
 ///
 /// Handlers on different threads now run concurrently (trap domains), so
 /// each slot write is seqlock-style: invalidate `seq`, write the fields,
@@ -71,7 +132,16 @@ static SEQ: AtomicU64 = AtomicU64::new(0);
 /// slot requires RING concurrent traps between two ring wraps; the ring
 /// is diagnostics, not ground truth, so that residual race only costs a
 /// dropped/garbled diagnostic line, never counter correctness.)
-pub fn record(rip: u64, insn_bytes: [u8; 8], repaired_addr: u64, actions: u32, domain: usize) {
+#[allow(clippy::too_many_arguments)]
+pub fn record(
+    rip: u64,
+    insn_bytes: [u8; 8],
+    repaired_addr: u64,
+    actions: u32,
+    domain: usize,
+    entry_cycles: u64,
+    exit_cycles: u64,
+) {
     let seq = SEQ.fetch_add(1, Ordering::Relaxed) + 1;
     let i = NEXT.fetch_add(1, Ordering::Relaxed) & (RING - 1);
     let s = &SLOTS[i];
@@ -82,6 +152,8 @@ pub fn record(rip: u64, insn_bytes: [u8; 8], repaired_addr: u64, actions: u32, d
     s.addr.store(repaired_addr, Ordering::Relaxed);
     s.actions.store(actions as u64, Ordering::Relaxed);
     s.domain.store(domain as u64, Ordering::Relaxed);
+    s.entry.store(entry_cycles, Ordering::Relaxed);
+    s.exit.store(exit_cycles, Ordering::Relaxed);
     s.seq.store(seq, Ordering::Release); // publish
 }
 
@@ -102,6 +174,8 @@ pub fn snapshot() -> Vec<TrapRecord> {
                 repaired_addr: s.addr.load(Ordering::Relaxed),
                 actions: s.actions.load(Ordering::Relaxed) as u32,
                 domain: s.domain.load(Ordering::Relaxed) as usize,
+                entry_cycles: s.entry.load(Ordering::Relaxed),
+                exit_cycles: s.exit.load(Ordering::Relaxed),
             };
             // unchanged seq → the fields above belong to this seq
             (s.seq.load(Ordering::Acquire) == seq).then_some(rec)
@@ -128,25 +202,7 @@ pub fn render(limit: usize) -> String {
             Some(i) => crate::disasm::fmt::fmt_insn(&i),
             None => "<undecoded>".to_string(),
         };
-        let mut acts = Vec::new();
-        if r.actions & action::REG_REPAIR != 0 {
-            acts.push("reg");
-        }
-        if r.actions & action::MEM_DIRECT != 0 {
-            acts.push("mem-direct");
-        }
-        if r.actions & action::MEM_BACKTRACED != 0 {
-            acts.push("mem-backtraced");
-        }
-        if r.actions & action::EMULATED != 0 {
-            acts.push("emulated");
-        }
-        if r.actions & action::FALLBACK_SWEEP != 0 {
-            acts.push("sweep");
-        }
-        if r.actions & action::GAVE_UP != 0 {
-            acts.push("GAVE-UP");
-        }
+        let acts = action_names(r.actions);
         let _ = writeln!(
             out,
             "#{:<5} dom{:<3} rip={:#014x}  {:<40} [{}]{}",
@@ -185,14 +241,25 @@ mod tests {
             0xdead0,
             action::REG_REPAIR | action::MEM_BACKTRACED,
             61,
+            1000,
+            1420,
         );
-        record(0x5000, [0x90; 8], 0, action::GAVE_UP, 62);
+        record(0x5000, [0x90; 8], 0, action::GAVE_UP, 62, 0, 0);
         let snap = snapshot();
         let newer = snap.iter().position(|r| r.domain == 62).expect("second record");
         let older = snap.iter().position(|r| r.domain == 61).expect("first record");
         assert!(newer < older, "newest first");
         assert_eq!(snap[newer].rip, 0x5000);
         assert_eq!(snap[older].repaired_addr, 0xdead0);
+        assert_eq!(snap[older].handler_cycles(), 420);
+        let rec = snap[older].to_record();
+        assert_eq!(rec.kind(), "trap_diag");
+        assert_eq!(rec.get("entry_cycles").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(rec.get("handler_cycles").unwrap().as_f64(), Some(420.0));
+        assert_eq!(
+            rec.get("actions").unwrap().as_str(),
+            Some("reg+mem-backtraced")
+        );
         let text = render(RING);
         assert!(text.contains("mulsd  xmm0, xmm1"), "{text}");
         assert!(text.contains("reg+mem-backtraced"), "{text}");
@@ -205,7 +272,7 @@ mod tests {
     fn ring_wraps_without_growing() {
         let _l = crate::trap::test_lock();
         for i in 0..RING * 2 {
-            record(i as u64, [0; 8], 0, 0, 63);
+            record(i as u64, [0; 8], 0, 0, 63, 0, 0);
         }
         let snap = snapshot();
         assert!(snap.len() <= RING, "ring must not grow past {RING}");
@@ -220,7 +287,7 @@ mod tests {
     #[test]
     fn clear_empties_the_ring() {
         let _l = crate::trap::test_lock();
-        record(0x6000, [0; 8], 0, 0, 60);
+        record(0x6000, [0; 8], 0, 0, 60, 0, 0);
         assert!(snapshot().iter().any(|r| r.domain == 60));
         clear();
         assert!(
@@ -253,6 +320,11 @@ mod tests {
             .find(|r| r.domain == slot)
             .expect("handler must record into the ring under our domain");
         assert!(r.actions & (action::REG_REPAIR | action::MEM_DIRECT | action::MEM_BACKTRACED) != 0);
+        // the handler stamps real rdtsc entry/exit cycles
+        assert!(
+            r.handler_cycles() > 0,
+            "live trap must carry a nonzero handler latency: {r:?}"
+        );
         let text = render(RING);
         assert!(text.contains("mulsd"), "{text}");
     }

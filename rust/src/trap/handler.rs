@@ -49,6 +49,7 @@ use std::mem::MaybeUninit;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 
 use crate::approxmem::pool::Region;
+use crate::coordinator::telemetry;
 use crate::disasm::backtrace::BacktraceOutcome;
 use crate::disasm::decode::decode_insn;
 use crate::disasm::insn::{FpWidth, Operand};
@@ -481,17 +482,21 @@ extern "C" fn sigfpe_handler(
                     if emulate_and_skip(&ctx, &insn, value) {
                         d.counters.emulated_skips.fetch_add(1, Ordering::Relaxed);
                         d.same_rip_streak.store(0, Ordering::Relaxed);
+                        let t1 = rdtsc();
                         diagnostics::record(
                             rip,
                             first8(code),
                             0,
                             action::EMULATED,
                             slot,
+                            t0,
+                            t1,
                         );
+                        telemetry::record_trap_cycles(t0, t1);
                         ctx.clear_invalid_flag();
                         d.counters
                             .trap_cycles_total
-                            .fetch_add(rdtsc().wrapping_sub(t0), Ordering::Relaxed);
+                            .fetch_add(t1.wrapping_sub(t0), Ordering::Relaxed);
                         return;
                     }
                 }
@@ -561,12 +566,17 @@ extern "C" fn sigfpe_handler(
             act_mask |= action::GAVE_UP;
         }
     }
-    diagnostics::record(rip, first8(code), repaired_addr, act_mask, slot);
+    // One rdtsc read serves the diagnostics stamp, the telemetry
+    // latency sample, and the cycle counter — all atomics-only and
+    // async-signal-safe.
+    let t1 = rdtsc();
+    diagnostics::record(rip, first8(code), repaired_addr, act_mask, slot, t0, t1);
+    telemetry::record_trap_cycles(t0, t1);
 
     ctx.clear_invalid_flag();
     d.counters
         .trap_cycles_total
-        .fetch_add(rdtsc().wrapping_sub(t0), Ordering::Relaxed);
+        .fetch_add(t1.wrapping_sub(t0), Ordering::Relaxed);
 }
 
 /// Register-only fallback for a NaN behind a memory operand: compute the

@@ -25,6 +25,8 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::coordinator::telemetry;
+
 use super::handler;
 
 /// FNV-1a over a byte window — cheap, good enough for change detection.
@@ -120,7 +122,20 @@ impl Watchdog {
                 if h == last_hash {
                     unchanged += 1;
                     if unchanged >= stall_periods {
-                        shared2.stalled.store(true, Ordering::Relaxed);
+                        // Fire telemetry once per stall, on the
+                        // false→true transition — the flag may be
+                        // re-asserted every period until the loop
+                        // cooperatively aborts.
+                        let first = !shared2.stalled.swap(true, Ordering::Relaxed);
+                        if first {
+                            let d = shared2.domain.load(Ordering::Relaxed);
+                            telemetry::record_stall(telemetry::StallEvent {
+                                domain: (d != usize::MAX).then_some(d),
+                                window_words: shared2.len.load(Ordering::Relaxed) as usize / 8,
+                                unchanged_periods: stall_periods,
+                                period_secs: period.as_secs_f64(),
+                            });
+                        }
                     }
                 } else {
                     unchanged = 0;
@@ -231,6 +246,41 @@ mod tests {
         assert_eq!(handle.domain(), Some(guard.domain()));
         dog.stop();
         drop(guard);
+    }
+
+    #[test]
+    fn stall_surfaces_as_telemetry_event_and_counter() {
+        // A detected stall must land in the telemetry buffer and bump
+        // the global counter exactly once per stall, however many
+        // periods keep re-asserting the flag afterwards.
+        use crate::coordinator::{metrics::Metrics, telemetry};
+        let _guard = crate::trap::test_lock();
+        let before = Metrics::global().get("watchdog_stall_total");
+        let buf = vec![3.25f64; 32];
+        let (dog, handle) = Watchdog::start(&buf, Duration::from_millis(4), 3);
+        let t0 = std::time::Instant::now();
+        while !handle.should_abort() {
+            std::thread::sleep(Duration::from_millis(2));
+            assert!(t0.elapsed() < Duration::from_secs(5), "watchdog never fired");
+        }
+        // let a few more periods elapse: the transition must not refire
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(dog.stop());
+        assert!(
+            Metrics::global().get("watchdog_stall_total") >= before + 1,
+            "stall counter bumped"
+        );
+        let ours: Vec<telemetry::StallEvent> = telemetry::take_stalls()
+            .into_iter()
+            .filter(|e| e.window_words == 32 && e.unchanged_periods == 3)
+            .collect();
+        assert_eq!(ours.len(), 1, "one event per stall transition: {ours:?}");
+        let rec = ours[0].to_record();
+        assert_eq!(rec.kind(), "watchdog_stall");
+        assert_eq!(
+            rec.get("stalled_secs").and_then(|v| v.as_f64()),
+            Some(3.0 * 0.004)
+        );
     }
 
     #[test]
