@@ -45,6 +45,11 @@
 //! (AVX2 when available) kernel, clean and 1e-4-NaN-dirty — and prints
 //! GB/s per variant.  When the dispatch is AVX2 the printed headline
 //! asserts the dispatched clean-scan runs ≥ 2x the per-word classify.
+//! The half-precision legs ride alongside: `scan1mib/*_f16` sweeps the
+//! 16-bit-lane kernels over the same 1 MiB (4x the words; gated at ≥ 2x
+//! the f64 scan in words/sec), and `serve_half/capacity_bf16` plans the
+//! same matmul cell at bf16 vs f64 in model mode (gated at ≥ 1.30x the
+//! f64 knee RPS).
 //!
 //! `cargo bench --bench sched_batch` (env NANREPAIR_BENCH_QUICK=1 for CI,
 //! NANREPAIR_SCHED_CELLS=N to override the batch size,
@@ -62,7 +67,7 @@ use nanrepair::coordinator::capacity::{self, CapacityConfig};
 use nanrepair::coordinator::protection::Protection;
 use nanrepair::coordinator::scheduler;
 use nanrepair::coordinator::server::{self, Arrival, RequestMix, ServeConfig};
-use nanrepair::fp::scan;
+use nanrepair::fp::{scan, Precision};
 use nanrepair::repair::policy::RepairPolicy;
 use nanrepair::workloads::WorkloadKind;
 
@@ -324,6 +329,40 @@ fn scan_sweep(r: &mut Runner) -> Vec<(String, f64)> {
     variant(r, "scalar_clean", Box::new(move || scan::count_nonfinite_scalar(&b)), 0);
     variant(r, "dispatch_clean", Box::new(move || scan::count_nonfinite(&c)), 0);
     variant(r, "dispatch_dirty", Box::new(move || scan::count_nonfinite(&d)), dirty_count);
+
+    // the same 1 MiB as packed 16-bit words: equal bytes, 4x the words —
+    // the half-precision data plane's scan sweep (f16 layout; bf16 runs
+    // the identical kernel with different masks)
+    const WORDS16: usize = 524_288; // 1 MiB of 16-bit words
+    let layout = Precision::F16.half_layout().expect("f16 is a half format");
+    let clean16: Vec<u16> = (0..WORDS16)
+        .map(|i| Precision::F16.narrow_bits(1.0 + (i % 1000) as f64) as u16)
+        .collect();
+    let mut dirty16 = clean16.clone();
+    for _ in 0..WORDS16 / 10_000 {
+        dirty16[rng.index(WORDS16)] = nanrepair::fp::nan::PAPER_NAN_BITS_F16;
+    }
+    let dirty16_count = scan::count_nonfinite16_scalar(&dirty16, layout);
+    assert!(dirty16_count > 0, "the dirty f16 buffer must hold planted NaNs");
+    let (e, f, g) = (clean16.clone(), clean16, dirty16);
+    variant(
+        r,
+        "scalar_clean_f16",
+        Box::new(move || scan::count_nonfinite16_scalar(&e, layout)),
+        0,
+    );
+    variant(
+        r,
+        "dispatch_clean_f16",
+        Box::new(move || scan::count_nonfinite16(&f, layout)),
+        0,
+    );
+    variant(
+        r,
+        "dispatch_dirty_f16",
+        Box::new(move || scan::count_nonfinite16(&g, layout)),
+        dirty16_count,
+    );
     out
 }
 
@@ -496,6 +535,43 @@ fn main() {
         .samples(5)
         .budget(1.0),
     );
+    // half-precision planning: the same matmul cell planned at bf16 vs
+    // f64 residents in deterministic model mode — the packed data
+    // plane's capacity headline (word costs scale 4x down, widened-f32
+    // compute 2x up, so the knee must clear the f64 knee by >= 1.30x)
+    let half_cfg = |precision| CapacityConfig {
+        mixes: vec![RequestMix::single(WorkloadKind::MatMul { n: 32 })],
+        requests: 80,
+        warmup: 10,
+        serve_workers: 2,
+        queue_depth: 8,
+        min_rps: 100.0,
+        max_rps: 1_000_000.0,
+        fault_rates: vec![1e-3],
+        slo_p99: 0.002,
+        precision,
+        ..Default::default()
+    };
+    r.bench(
+        "serve_half/capacity_bf16",
+        Bench::new(move || {
+            let rep = capacity::plan(&half_cfg(Precision::Bf16), 1).expect("bf16 plan runs");
+            assert!(rep.outcomes[0].knee_rps > 0.0);
+        })
+        .samples(5)
+        .budget(1.0),
+    );
+    let half_knees = {
+        let f64_knee = capacity::plan(&half_cfg(Precision::F64), 1)
+            .expect("f64 plan runs")
+            .outcomes[0]
+            .knee_rps;
+        let bf16_knee = capacity::plan(&half_cfg(Precision::Bf16), 1)
+            .expect("bf16 plan runs")
+            .outcomes[0]
+            .knee_rps;
+        (f64_knee, bf16_knee)
+    };
     r.finish();
 
     println!("\ndata-plane scan over 1 MiB ({} dispatch):", scan::dispatch_label());
@@ -522,6 +598,26 @@ fn main() {
             disp / per
         );
     }
+    // half-precision kernel gate: the 16-bit buffer holds 4x the words
+    // in the same bytes, so at matched GB/s the dispatched f16 scan
+    // covers 4x the words/sec of the f64 scan — the gate asks for 2x,
+    // which holds for the scalar fallback too
+    let w64 = rate("dispatch_clean") * 1e9 / 8.0;
+    let w16 = rate("dispatch_clean_f16") * 1e9 / 2.0;
+    assert!(
+        w16 >= 2.0 * w64,
+        "dispatched f16 scan must cover >= 2x the f64 scan in words/sec \
+         ({:.0}M vs {:.0}M words/s)",
+        w16 / 1e6,
+        w64 / 1e6
+    );
+    println!(
+        "headline: dispatched f16 scan covers {:.2}x the f64 scan in words/sec \
+         ({:.0}M vs {:.0}M words/s; acceptance gate >= 2.00x)",
+        w16 / w64,
+        w16 / 1e6,
+        w64 / 1e6
+    );
 
     print_throughput("non-trap throughput", "cells/s", &plain);
     print_throughput("trap-armed throughput", "cells/s", &trap);
@@ -560,6 +656,17 @@ fn main() {
         );
     }
     println!("serve_p999: poisson open-loop tail at batch 8: p999 = {:.3} ms", p999 * 1e3);
+
+    let (k64, kbf) = half_knees;
+    assert!(
+        kbf >= 1.30 * k64,
+        "bf16 model knee must clear 1.30x the f64 knee ({kbf:.0} vs {k64:.0} rps)"
+    );
+    println!(
+        "serve_half: bf16 model knee runs {:.2}x the f64 knee \
+         ({kbf:.0} vs {k64:.0} rps; acceptance gate >= 1.30x)",
+        kbf / k64
+    );
 
     let energy_mean = |name: &str| {
         energy_bench

@@ -49,6 +49,15 @@ impl AccessFaultModel {
     /// Canonical BER → per-word NaN-upset conversion: evaluated at 1.5, a
     /// representative resident word whose exponent (0x3FF) is one flip from
     /// all-ones.
+    ///
+    /// The conversion is kept at the f64 layout for every storage
+    /// precision: a narrower word exposes fewer bits per word (∝ width)
+    /// but needs proportionally fewer exponent flips to reach all-ones,
+    /// so the per-word NaN-upset probability is approximately
+    /// width-independent at the small BERs this model runs at.  What
+    /// *does* change with precision is priced elsewhere — the energy
+    /// ledger scales pJ and refresh with `word_bytes`
+    /// ([`DeviceProfile::access_energy_at`]).
     pub fn word_upset_probability(ber: f64) -> f64 {
         if ber <= 0.0 {
             return 0.0;

@@ -162,6 +162,40 @@ impl DeviceProfile {
             refresh_baseline_pj,
         }
     }
+
+    /// [`DeviceProfile::access_energy`] for residents stored at a
+    /// narrower word width: the pJ/word calibration above is per
+    /// **8-byte** word, and a packed resident's data plane moves
+    /// `word_bytes`-wide words, so every term — reads, writes, and the
+    /// refresh footprint the words occupy — scales by `word_bytes / 8`
+    /// (a bf16 resident costs a quarter of an f64 resident per word
+    /// touched).  `word_bytes == 8` returns the unscaled decomposition
+    /// bit for bit.
+    pub fn access_energy_at(
+        &self,
+        words_read: u64,
+        words_written: u64,
+        hold_word_secs: f64,
+        refresh_interval_secs: f64,
+        word_bytes: usize,
+    ) -> AccessEnergy {
+        let ae = self.access_energy(
+            words_read,
+            words_written,
+            hold_word_secs,
+            refresh_interval_secs,
+        );
+        if word_bytes == 8 {
+            return ae;
+        }
+        let w = word_bytes as f64 / 8.0;
+        AccessEnergy {
+            read_pj: ae.read_pj * w,
+            write_pj: ae.write_pj * w,
+            refresh_pj: ae.refresh_pj * w,
+            refresh_baseline_pj: ae.refresh_baseline_pj * w,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -221,6 +255,20 @@ mod tests {
         assert!((r.refresh_pj - e.refresh_baseline_pj / 10.0).abs() < 1e-9);
         assert!((r.saved_pj() - 0.9 * e.refresh_baseline_pj).abs() < 1e-9);
         assert!(r.total_pj() < e.total_pj());
+    }
+
+    #[test]
+    fn access_energy_scales_with_word_width() {
+        let p = DeviceProfile::server_ddr();
+        let full = p.access_energy(10, 4, 100.0, 0.64);
+        // 8-byte words reproduce the unscaled decomposition bit for bit.
+        assert_eq!(p.access_energy_at(10, 4, 100.0, 0.64, 8), full);
+        // 2-byte (bf16/f16) words cost a quarter per term.
+        let half = p.access_energy_at(10, 4, 100.0, 0.64, 2);
+        assert!((half.read_pj - full.read_pj / 4.0).abs() < 1e-9);
+        assert!((half.write_pj - full.write_pj / 4.0).abs() < 1e-9);
+        assert!((half.refresh_pj - full.refresh_pj / 4.0).abs() < 1e-9);
+        assert!((half.saved_pj() - full.saved_pj() / 4.0).abs() < 1e-9);
     }
 
     #[test]

@@ -59,6 +59,7 @@
 use anyhow::Result;
 
 use crate::approxmem::injector::AccessFaultModel;
+use crate::fp::Precision;
 use crate::repair::policy::RepairPolicy;
 use crate::util::report::Record;
 use crate::util::stats::percentile_sorted;
@@ -208,19 +209,56 @@ impl ServiceModel {
     /// to the request that opens a new dispatch window, mirroring the
     /// live server's batch amortization.
     pub fn service_secs(&self, workload: WorkloadKind, traps: u64, scrub_words: u64) -> f64 {
+        self.service_secs_at(workload, Precision::F64, traps, scrub_words)
+    }
+
+    /// [`ServiceModel::service_secs`] for a resident stored at
+    /// `precision`: packed residents run widened f32-range compute
+    /// (double the f64 FLOP rate), and the per-word scrub/restore costs
+    /// scale with the storage word width — the bulk kernels sweep bytes,
+    /// so a 16-bit word costs a quarter of a 64-bit one.  At
+    /// [`Precision::F64`] every term reduces to the classic model bit
+    /// for bit.
+    pub fn service_secs_at(
+        &self,
+        workload: WorkloadKind,
+        precision: Precision,
+        traps: u64,
+        scrub_words: u64,
+    ) -> f64 {
         let restore_words = if workload.mutates_inputs() {
             workload.input_words() as u64
         } else {
             0
         };
         self.base_secs
-            + workload.flops() as f64 / (self.gflops * 1e9)
+            + workload.flops() as f64 / (self.gflops_at(precision) * 1e9)
             + traps as f64 * self.trap_secs
-            + scrub_words as f64 * self.scrub_word_secs
-            + restore_words as f64 * self.restore_word_secs
+            + scrub_words as f64 * self.scrub_word_secs * Self::word_scale(precision)
+            + restore_words as f64 * self.restore_word_secs * Self::word_scale(precision)
+    }
+
+    /// Modeled compute rate for a resident stored at `precision`:
+    /// packed storage widens to f32-range compute, modeled at twice the
+    /// f64 FLOP rate (the classic 2× single-vs-double throughput ratio
+    /// of SIMD FP units).
+    pub fn gflops_at(&self, precision: Precision) -> f64 {
+        if precision.compute_is_f32_range() {
+            self.gflops * 2.0
+        } else {
+            self.gflops
+        }
+    }
+
+    /// Per-word cost scale for `precision`'s storage width (the word
+    /// costs above are calibrated per 8-byte word).
+    fn word_scale(precision: Precision) -> f64 {
+        precision.word_bytes() as f64 / 8.0
     }
 
     /// Modeled seconds for the shed path (O(dose) plant-and-patch).
+    /// Precision-independent: the shed path is per-planted-word
+    /// bookkeeping, not a bulk sweep.
     pub fn shed_secs(&self, planted: u64) -> f64 {
         self.shed_base_secs + planted as f64 * self.trap_secs
     }
@@ -242,6 +280,13 @@ pub struct CapacityConfig {
     pub fault_rates: Vec<f64>,
     /// Repair-value policy for trap repairs and shed patch-backs.
     pub policy: RepairPolicy,
+    /// Default storage precision for every resident of every mix
+    /// (`--precision`); individual mix entries override it
+    /// (`matmul:256:bf16`).  Model probes price packed residents at
+    /// widened-f32 compute rates and width-scaled word costs
+    /// ([`ServiceModel::service_secs_at`]); live probes serve real
+    /// packed residents.
+    pub precision: Precision,
     /// Requests per probe, warmup included.
     pub requests: usize,
     /// Leading requests excluded from each probe's measured quantiles.
@@ -307,6 +352,7 @@ impl Default for CapacityConfig {
             protections: vec![Protection::RegisterMemory],
             fault_rates: vec![1e-4],
             policy: RepairPolicy::Zero,
+            precision: Precision::F64,
             requests: 200,
             warmup: 20,
             serve_workers: 2,
@@ -340,9 +386,10 @@ impl CapacityConfig {
             "capacity needs at least one fault rate"
         );
         for mix in &self.mixes {
-            for &(kind, _) in mix.entries() {
+            let precisions = mix.resolved_precisions(self.precision);
+            for (&(kind, _), &precision) in mix.entries().iter().zip(&precisions) {
                 for &p in &self.protections {
-                    ensure_servable(kind, p, self.policy)?;
+                    ensure_servable(kind, p, self.policy, precision)?;
                 }
             }
         }
@@ -509,7 +556,7 @@ impl CapacityCell {
     /// cell's records (`e{budget}` instead of `f{rate}` for Pareto
     /// cells — the budget is their identity; the rate is derived).
     fn label(&self) -> String {
-        match &self.pareto {
+        let mut label = match &self.pareto {
             Some(p) => format!(
                 "{}/{}/e{}@{}",
                 self.mix.label(),
@@ -524,7 +571,15 @@ impl CapacityCell {
                 self.fault_rate,
                 self.shared.arrival.name()
             ),
+        };
+        // Same rule as `ServeConfig::label`: a non-default run-level
+        // precision suffixes the label (entry overrides already show up
+        // inside the mix label).
+        if self.shared.precision != Precision::F64 {
+            label.push('~');
+            label.push_str(self.shared.precision.name());
         }
+        label
     }
 }
 
@@ -535,6 +590,8 @@ impl CapacityCell {
 pub struct KindPoint {
     /// The mix kind this row covers.
     pub kind: WorkloadKind,
+    /// Storage precision this kind's residents were probed at.
+    pub precision: Precision,
     /// Requests stamped with this kind (measured window).
     pub requests: u64,
     /// Of those, served.
@@ -554,6 +611,7 @@ impl KindPoint {
         Record::new("capacity_kind")
             .field("label", label)
             .field("kind", self.kind.to_string())
+            .field("precision", self.precision.name())
             .field("rps", rps)
             .field("requests", self.requests)
             .field("served", self.served)
@@ -678,6 +736,7 @@ impl CapacityOutcome {
             .field("label", self.label.as_str())
             .field("mix", self.mix.label())
             .field("protection", self.protection.name())
+            .field("precision", cfg.precision.name())
             .field("fault_rate", self.fault_rate)
             .field("arrival", cfg.arrival.name())
             .field("mode", cfg.mode.name())
@@ -996,6 +1055,7 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
     let n = cfg.requests;
     let seed = probe_seed(cfg.seed, rate_index);
     let kinds = cell.mix.kinds();
+    let precisions = cell.mix.resolved_precisions(cfg.precision);
     let arrival = cfg.arrival.arrival(rps);
     // The same access-driven fault process a live probe runs: touch
     // doses plus per-kind hold doses accrued on the arrival clock.
@@ -1143,7 +1203,10 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
                 _ => (0, 0),
             };
             served_before[wi][ki] += 1;
-            (arm + cfg.model.service_secs(kind, traps, scrub_words), traps)
+            (
+                arm + cfg.model.service_secs_at(kind, precisions[ki], traps, scrub_words),
+                traps,
+            )
         };
         let done = dequeue + busy;
         worker_free[wi] = done;
@@ -1204,6 +1267,7 @@ fn probe_model(cell: &CapacityCell, rps: f64, rate_index: usize) -> ProbePoint {
             lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
             KindPoint {
                 kind,
+                precision: precisions[ki],
                 requests: kind_requests[ki],
                 served: kind_served[ki],
                 shed: kind_shed[ki],
@@ -1245,6 +1309,7 @@ fn probe_live(cell: &CapacityCell, rps: f64, rate_index: usize) -> Result<ProbeP
         mix: cell.mix.clone(),
         protection: cell.protection,
         policy: cfg.policy,
+        precision: cfg.precision,
         requests: cfg.requests,
         workers: cfg.serve_workers,
         queue_depth: cfg.queue_depth,
@@ -1284,6 +1349,7 @@ fn probe_live(cell: &CapacityCell, rps: f64, rate_index: usize) -> Result<ProbeP
             }
             KindPoint {
                 kind: ks.kind,
+                precision: ks.precision,
                 requests: req,
                 served: srv,
                 shed: sh,
@@ -1420,6 +1486,39 @@ mod tests {
         let ra: Vec<String> = a.records().iter().map(Record::render_jsonl).collect();
         let rb: Vec<String> = b.records().iter().map(Record::render_jsonl).collect();
         assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn packed_precision_lifts_the_model_knee() {
+        // Same logical mix, bf16 vs f64 residents: widened-f32 compute
+        // runs at twice the modeled FLOP rate and the word costs scale
+        // down 4×, so the bf16 knee must clear the f64 knee by a wide
+        // margin on a compute-bound kind (the serve_half bench gate).
+        let f64_knee = plan(&model_cfg(), 1).unwrap().outcomes[0].knee_rps;
+        let bf16_cfg = CapacityConfig { precision: Precision::Bf16, ..model_cfg() };
+        let bf16 = plan(&bf16_cfg, 1).unwrap();
+        let bf16_knee = bf16.outcomes[0].knee_rps;
+        assert!(
+            bf16_knee >= 1.3 * f64_knee,
+            "bf16 knee {bf16_knee} must be >= 1.3x the f64 knee {f64_knee}"
+        );
+        // The precision shows up in the cell identity and the per-knee
+        // record, and the run stays byte-deterministic across matrix
+        // worker counts.
+        assert!(bf16.outcomes[0].label.ends_with("~bf16"), "{}", bf16.outcomes[0].label);
+        let again = plan(&bf16_cfg, 4).unwrap();
+        let ra: Vec<String> = bf16.records().iter().map(Record::render_jsonl).collect();
+        let rb: Vec<String> = again.records().iter().map(Record::render_jsonl).collect();
+        assert_eq!(ra, rb, "packed-precision model must stay byte-deterministic");
+
+        // A per-entry override behaves like the run-level default for a
+        // single-kind mix.
+        let entry_cfg = CapacityConfig {
+            mixes: vec![RequestMix::parse("matmul:32:bf16").unwrap()],
+            ..model_cfg()
+        };
+        let entry_knee = plan(&entry_cfg, 1).unwrap().outcomes[0].knee_rps;
+        assert_eq!(entry_knee, bf16_knee, "override and default must price identically");
     }
 
     #[test]

@@ -99,6 +99,7 @@ use anyhow::Result;
 
 use crate::approxmem::injector::AccessFaultModel;
 use crate::approxmem::profiles::DeviceProfile;
+use crate::fp::Precision;
 use crate::repair::policy::RepairPolicy;
 use crate::trap::{TrapStats, NUM_DOMAINS};
 use crate::util::report::{Json, LatencyHistogram, Record};
@@ -246,6 +247,10 @@ pub struct RequestMix {
     /// `(kind, weight)` entries in spec order; weights are normalized to
     /// sum to 1 and kinds are unique.
     entries: Vec<(WorkloadKind, f64)>,
+    /// Per-entry storage-precision override (`matmul:256:bf16`), parallel
+    /// to `entries`; `None` inherits the run-level `--precision` default
+    /// at resolution time ([`RequestMix::resolved_precisions`]).
+    precisions: Vec<Option<Precision>>,
 }
 
 impl RequestMix {
@@ -253,13 +258,25 @@ impl RequestMix {
     pub fn single(kind: WorkloadKind) -> Self {
         Self {
             entries: vec![(kind, 1.0)],
+            precisions: vec![None],
         }
     }
 
     /// Build a mix from `(kind, weight)` entries: weights must be
-    /// positive and finite (they are normalized), kinds unique.
+    /// positive and finite (they are normalized), kinds unique.  Every
+    /// entry inherits the run-level precision default; use
+    /// [`RequestMix::parse`] for per-entry overrides.
     pub fn new(entries: Vec<(WorkloadKind, f64)>) -> Result<Self> {
+        let precisions = vec![None; entries.len()];
+        Self::from_parts(entries, precisions)
+    }
+
+    fn from_parts(
+        entries: Vec<(WorkloadKind, f64)>,
+        precisions: Vec<Option<Precision>>,
+    ) -> Result<Self> {
         anyhow::ensure!(!entries.is_empty(), "a request mix needs at least one workload");
+        debug_assert_eq!(entries.len(), precisions.len());
         let mut seen = HashSet::new();
         for &(kind, w) in &entries {
             anyhow::ensure!(
@@ -271,50 +288,84 @@ impl RequestMix {
         let total: f64 = entries.iter().map(|(_, w)| w).sum();
         Ok(Self {
             entries: entries.into_iter().map(|(k, w)| (k, w / total)).collect(),
+            precisions,
         })
     }
 
     /// Parse a comma-separated mix spec.  Each entry is
-    /// `name[:size[:extra]][:weight]`: the trailing token is a weight
-    /// when it is a float but not a plain integer (`matmul:0.5`,
-    /// `jacobi:64:20:0.3`); an omitted weight is 1 (normalized later),
-    /// and a bare name uses the default serving size
+    /// `name[:size[:extra]][:precision][:weight]`: trailing tokens are
+    /// peeled from the end — a float that is not a plain integer is the
+    /// weight (`matmul:0.5`, `jacobi:64:20:0.3`), a precision name pins
+    /// the entry's storage format (`matmul:256:bf16`,
+    /// `cg:64:8:f16:0.3`).  An omitted weight is 1 (normalized later),
+    /// an omitted precision inherits the run-level `--precision`
+    /// default, and a bare name uses the default serving size
     /// ([`DEFAULT_MIX_SIZE`]).
     pub fn parse(s: &str) -> Result<Self> {
         let mut entries = Vec::new();
+        let mut precisions = Vec::new();
         for part in s.split(',').filter(|p| !p.trim().is_empty()) {
-            entries.push(Self::parse_entry(part.trim())?);
+            let (entry, precision) = Self::parse_entry(part.trim())?;
+            entries.push(entry);
+            precisions.push(precision);
         }
-        Self::new(entries)
+        Self::from_parts(entries, precisions)
     }
 
-    fn parse_entry(s: &str) -> Result<(WorkloadKind, f64)> {
-        let toks: Vec<&str> = s.split(':').collect();
+    fn parse_entry(s: &str) -> Result<((WorkloadKind, f64), Option<Precision>)> {
+        let mut toks: Vec<&str> = s.split(':').collect();
         let name = toks[0];
         anyhow::ensure!(!name.is_empty(), "empty workload name in mix entry {s:?}");
-        let (spec_toks, weight) = match toks.last() {
-            Some(last) if toks.len() > 1 && last.parse::<usize>().is_err() => {
-                let w: f64 = last.parse().map_err(|_| {
+        // Peel the optional suffix tokens from the end: weight last,
+        // precision before it (so `cg:64:8:f16:0.3` reads left to right
+        // the way the entry is spoken).  Neither token can be mistaken
+        // for a workload-size integer.
+        let mut weight = 1.0;
+        if let Some(&last) = toks.last() {
+            if toks.len() > 1 && last.parse::<usize>().is_err() && Precision::parse(last).is_err()
+            {
+                weight = last.parse().map_err(|_| {
                     anyhow::anyhow!(
                         "trailing token {last:?} in mix entry {s:?} is neither a \
-                         size nor a weight"
+                         size, a precision, nor a weight"
                     )
                 })?;
-                (&toks[..toks.len() - 1], w)
+                toks.pop();
             }
-            _ => (&toks[..], 1.0),
-        };
-        let kind = if spec_toks.len() == 1 {
+        }
+        let mut precision = None;
+        if let Some(&last) = toks.last() {
+            if toks.len() > 1 {
+                if let Ok(p) = Precision::parse(last) {
+                    precision = Some(p);
+                    toks.pop();
+                }
+            }
+        }
+        let kind = if toks.len() == 1 {
             WorkloadKind::parse(&format!("{name}:{DEFAULT_MIX_SIZE}"))?
         } else {
-            WorkloadKind::parse(&spec_toks.join(":"))?
+            WorkloadKind::parse(&toks.join(":"))?
         };
-        Ok((kind, weight))
+        Ok(((kind, weight), precision))
     }
 
     /// `(kind, normalized weight)` entries, in spec order.
     pub fn entries(&self) -> &[(WorkloadKind, f64)] {
         &self.entries
+    }
+
+    /// Per-entry precision overrides, parallel to [`RequestMix::entries`]
+    /// (`None` = inherit the run default).
+    pub fn precision_overrides(&self) -> &[Option<Precision>] {
+        &self.precisions
+    }
+
+    /// Each entry's storage precision with `default` filled in for
+    /// entries that did not pin one, parallel to
+    /// [`RequestMix::entries`].
+    pub fn resolved_precisions(&self, default: Precision) -> Vec<Precision> {
+        self.precisions.iter().map(|p| p.unwrap_or(default)).collect()
     }
 
     /// The mix's kinds, in spec order.
@@ -328,14 +379,21 @@ impl RequestMix {
     }
 
     /// Run label: the bare kind for a single-workload mix, else
-    /// `kind~weight+kind~weight+…`.
+    /// `kind~weight+kind~weight+…`; entries with a pinned storage
+    /// precision carry it as `kind@precision` so a bf16 run's records
+    /// never collide with an f64 run's.
     pub fn label(&self) -> String {
+        let name = |i: usize, kind: &WorkloadKind| match self.precisions[i] {
+            Some(p) => format!("{kind}@{p}"),
+            None => kind.to_string(),
+        };
         if let [(kind, _)] = self.entries.as_slice() {
-            return kind.to_string();
+            return name(0, kind);
         }
         self.entries
             .iter()
-            .map(|(k, w)| format!("{k}~{w:.2}"))
+            .enumerate()
+            .map(|(i, (k, w))| format!("{}~{w:.2}", name(i, k)))
             .collect::<Vec<_>>()
             .join("+")
     }
@@ -420,6 +478,14 @@ pub struct ServeConfig {
     pub protection: Protection,
     /// Repair-value policy for trap repairs and scrub sweeps.
     pub policy: RepairPolicy,
+    /// Default storage precision for every resident of the mix
+    /// (`--precision`); individual entries override it with a
+    /// `kind:size:precision` spec.  Packed residents (bf16/f16/f32)
+    /// store their weights as narrow words in approximate memory and
+    /// widen to the compute copy on admission; the repair policy's
+    /// constants must be exactly representable at every resolved
+    /// precision ([`RepairPolicy::ensure_representable`]).
+    pub precision: Precision,
     /// Measured requests.
     pub requests: usize,
     /// Serving worker threads (clamped to `1..=NUM_DOMAINS` and to the
@@ -497,6 +563,7 @@ impl Default for ServeConfig {
             mix: RequestMix::single(WorkloadKind::MatMul { n: DEFAULT_MIX_SIZE }),
             protection: Protection::RegisterMemory,
             policy: RepairPolicy::Zero,
+            precision: Precision::F64,
             requests: 500,
             workers: 4,
             queue_depth: 32,
@@ -552,14 +619,27 @@ pub fn parse_slo_p99_spec(s: &str) -> Result<(Option<f64>, Vec<(String, f64)>)> 
 }
 
 impl ServeConfig {
-    /// Short run label, `mix/protection@arrival`.
+    /// Short run label, `mix/protection@arrival`, with a `~precision`
+    /// suffix when the run-level default is not f64 (per-entry overrides
+    /// already show up inside the mix label).
     pub fn label(&self) -> String {
-        format!(
+        let mut label = format!(
             "{}/{}@{}",
             self.mix.label(),
             self.protection.name(),
             self.arrival.label()
-        )
+        );
+        if self.precision != Precision::F64 {
+            label.push('~');
+            label.push_str(self.precision.name());
+        }
+        label
+    }
+
+    /// Each mix entry's storage precision (entry override, else the
+    /// run-level default), parallel to the mix entries.
+    pub fn kind_precisions(&self) -> Vec<Precision> {
+        self.mix.resolved_precisions(self.precision)
     }
 }
 
@@ -969,6 +1049,10 @@ impl RequestResult {
 pub struct KindSummary {
     /// The mix kind this row covers.
     pub kind: WorkloadKind,
+    /// Storage precision of this kind's residents (entry override, else
+    /// the run default) — the word width its access/energy ledgers are
+    /// priced at.
+    pub precision: Precision,
     /// The kind's normalized mix weight.
     pub weight: f64,
     /// Requests stamped with this kind (whole run).
@@ -1027,6 +1111,7 @@ impl KindSummary {
         let mut rec = Record::new("serve_kind_slo")
             .field("label", label)
             .field("kind", self.kind.to_string())
+            .field("precision", self.precision.name())
             .field("weight", self.weight)
             .field("requests", self.requests)
             .field("served", self.served)
@@ -1063,6 +1148,9 @@ pub struct ServeReport {
     /// The request mix the run served (per-kind breakdowns derive from
     /// it, in mix order).
     pub mix: RequestMix,
+    /// Run-level default storage precision; per-kind resolution combines
+    /// it with the mix's entry overrides ([`ServeReport::kind_summaries`]).
+    pub precision: Precision,
     /// Worker threads that served (after clamping).
     pub workers: usize,
     /// Bounded queue capacity of the run (global, across lanes).
@@ -1296,10 +1384,12 @@ impl ServeReport {
     /// cover measured served requests of the kind (like the overall
     /// quantiles).
     pub fn kind_summaries(&self) -> Vec<KindSummary> {
+        let precisions = self.mix.resolved_precisions(self.precision);
         self.mix
             .entries()
             .iter()
-            .map(|&(kind, weight)| {
+            .zip(precisions)
+            .map(|(&(kind, weight), precision)| {
                 let all: Vec<&RequestResult> =
                     self.results.iter().filter(|r| r.kind == kind).collect();
                 let mut lat: Vec<f64> = self
@@ -1323,6 +1413,7 @@ impl ServeReport {
                 let slo_met = target.map(|t| !lat.is_empty() && latency_p99_secs <= t);
                 KindSummary {
                     kind,
+                    precision,
                     weight,
                     requests: all.len() as u64,
                     served: all.iter().filter(|r| !r.is_shed()).count() as u64,
@@ -1459,11 +1550,12 @@ impl ServeReport {
         let mut total_pj = 0.0;
         let mut saved_pj = 0.0;
         for ks in self.kind_summaries() {
-            let ae = e.profile.access_energy(
+            let ae = e.profile.access_energy_at(
                 ks.words_read,
                 ks.words_written,
                 ks.hold_word_secs,
                 e.refresh_interval_secs,
+                ks.precision.word_bytes(),
             );
             total_pj += ae.total_pj();
             saved_pj += ae.saved_pj();
@@ -1471,6 +1563,7 @@ impl ServeReport {
                 Record::new("energy_resident")
                     .field("label", self.config_label.as_str())
                     .field("kind", ks.kind.to_string())
+                    .field("precision", ks.precision.name())
                     .field("profile", e.profile.name)
                     .field("words_read", ks.words_read)
                     .field("words_written", ks.words_written)
@@ -1609,10 +1702,17 @@ impl ServeReport {
         let Some(dt) = self.tick_secs else {
             return Vec::new();
         };
+        let precisions = self.mix.resolved_precisions(self.precision);
         let mut events = Vec::new();
         for s in &self.ticks_raw {
             for &index in &s.indices {
                 let r = &self.results[index];
+                let precision = self
+                    .mix
+                    .entries()
+                    .iter()
+                    .position(|&(k, _)| k == r.kind)
+                    .map_or(self.precision, |i| precisions[i]);
                 events.push(telemetry::TickEvent {
                     t_secs: s.offset_secs,
                     latency_secs: r.latency_secs,
@@ -1623,11 +1723,12 @@ impl ServeReport {
                     nans_planted: r.nans_planted(),
                     energy_pj: self.energy.as_ref().map(|e| {
                         e.profile
-                            .access_energy(
+                            .access_energy_at(
                                 r.outcome.words_read(),
                                 r.outcome.words_written(),
                                 r.kind.input_words() as f64 * r.hold_secs,
                                 e.refresh_interval_secs,
+                                precision.word_bytes(),
                             )
                             .total_pj()
                     }),
@@ -1711,11 +1812,12 @@ impl ServeReport {
             let mut total_pj = 0.0;
             let mut saved_pj = 0.0;
             for ks in self.kind_summaries() {
-                let ae = e.profile.access_energy(
+                let ae = e.profile.access_energy_at(
                     ks.words_read,
                     ks.words_written,
                     ks.hold_word_secs,
                     e.refresh_interval_secs,
+                    ks.precision.word_bytes(),
                 );
                 total_pj += ae.total_pj();
                 saved_pj += ae.saved_pj();
@@ -1937,9 +2039,12 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         "--fault-rate is a per-word probability in [0, 1]"
     );
     // Every kind of the mix must honour the (workload, policy)
-    // servability contract under this protection.
-    for &(kind, _) in cfg.mix.entries() {
-        super::session::ensure_servable(kind, cfg.protection, cfg.policy)?;
+    // servability contract under this protection, at its resolved
+    // storage precision (a lossy repair constant is rejected here, not
+    // discovered one rounded patch at a time inside a worker).
+    let precisions = cfg.kind_precisions();
+    for (&(kind, _), &precision) in cfg.mix.entries().iter().zip(&precisions) {
+        super::session::ensure_servable(kind, cfg.protection, cfg.policy, precision)?;
     }
     if let Some(rps) = cfg.arrival.rate() {
         anyhow::ensure!(
@@ -2001,6 +2106,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
     }
     let workers = cfg.workers.clamp(1, NUM_DOMAINS).min(cfg.requests);
     let deadline = cfg.deadline.map(Duration::from_secs_f64);
+    let precisions = &precisions;
 
     let queue = LaneQueue::new(workers, cfg.mix.entries().len(), cfg.queue_depth);
     let queue = &queue;
@@ -2107,10 +2213,11 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                 {
                     let _ready = ReadyOnDrop(ready);
                     // Every mix kind becomes resident before the arrival
-                    // clocks start, so multi-kind setup cost is never
-                    // charged to the first wave of requests.
-                    for kind in cfg.mix.kinds() {
-                        session.prepare_resident(kind, cfg.seed);
+                    // clocks start, so multi-kind setup cost (including
+                    // packed-image quantization) is never charged to the
+                    // first wave of requests.
+                    for (kind, &precision) in cfg.mix.kinds().into_iter().zip(precisions.iter()) {
+                        session.prepare_resident_at(kind, cfg.seed, precision);
                     }
                     // _ready drops here: barrier released exactly once,
                     // during unwinding too if preparation panics
@@ -2138,6 +2245,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
                             resident_seed: cfg.seed,
                             protection: cfg.protection,
                             policy: cfg.policy,
+                            precision: precisions[req.kind_idx],
                             dose: req.dose,
                             placement_seed: request_seed(cfg.seed, req.index),
                             hold_secs: req.hold_secs,
@@ -2299,6 +2407,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
     Ok(ServeReport {
         config_label: cfg.label(),
         mix: cfg.mix.clone(),
+        precision: cfg.precision,
         workers,
         queue_depth: cfg.queue_depth,
         batch: cfg.batch,
@@ -2415,6 +2524,48 @@ mod tests {
             RequestMix::parse("matmul:16:0.5,matmul:16:0.5").is_err(),
             "duplicate kind"
         );
+    }
+
+    #[test]
+    fn request_mix_parses_precision_entries() {
+        // the acceptance-spec shape: a per-entry storage precision
+        let mix = RequestMix::parse("matmul:256:bf16").unwrap();
+        assert_eq!(mix.kinds(), vec![WorkloadKind::MatMul { n: 256 }]);
+        assert_eq!(mix.precision_overrides(), &[Some(Precision::Bf16)]);
+        assert_eq!(mix.label(), "matmul:256@bf16");
+        assert_eq!(mix.resolved_precisions(Precision::F64), vec![Precision::Bf16]);
+
+        // precision composes with extras and a trailing weight; entries
+        // without an override inherit the resolution default
+        let mix = RequestMix::parse("cg:64:8:f16:0.3,jacobi:64:20:0.7").unwrap();
+        assert_eq!(
+            mix.kinds(),
+            vec![
+                WorkloadKind::Cg { n: 64, iters: 8 },
+                WorkloadKind::Jacobi { n: 64, iters: 20 },
+            ]
+        );
+        assert_eq!(
+            mix.precision_overrides(),
+            &[Some(Precision::F16), None]
+        );
+        assert_eq!(
+            mix.resolved_precisions(Precision::F32),
+            vec![Precision::F16, Precision::F32]
+        );
+        let w: Vec<f64> = mix.entries().iter().map(|&(_, w)| w).collect();
+        assert!((w[0] - 0.3).abs() < 1e-12, "{w:?}");
+        assert_eq!(mix.label(), "cg:64:8@f16~0.30+jacobi:64:20~0.70");
+
+        // a bare name still gets the default size
+        let mix = RequestMix::parse("matmul:f16").unwrap();
+        assert_eq!(mix.kinds(), vec![WorkloadKind::MatMul { n: 256 }]);
+        assert_eq!(mix.precision_overrides(), &[Some(Precision::F16)]);
+
+        // near-miss precision names fall through to the weight parse and
+        // its actionable rejection
+        let err = RequestMix::parse("matmul:256:bf17").unwrap_err().to_string();
+        assert!(err.contains("neither a size, a precision, nor a weight"), "{err}");
     }
 
     #[test]

@@ -41,6 +41,7 @@ use anyhow::Result;
 use crate::approxmem::injector::{InjectionReport, InjectionSpec, Injector};
 use crate::approxmem::pool::{AccessLedger, ApproxPool};
 use crate::approxmem::scrubber::Scrubber;
+use crate::fp::Precision;
 use crate::repair::policy::RepairPolicy;
 use crate::trap::{TrapGuard, TrapStats};
 use crate::util::stats::Summary;
@@ -77,6 +78,7 @@ pub(crate) fn ensure_servable(
     workload: WorkloadKind,
     protection: Protection,
     policy: RepairPolicy,
+    precision: Precision,
 ) -> Result<()> {
     if matches!(protection, Protection::Ecc | Protection::Abft) {
         anyhow::bail!(
@@ -85,6 +87,10 @@ pub(crate) fn ensure_servable(
         );
     }
     workload.servable_with(policy)?;
+    // A repair constant that is not exactly representable at the resident's
+    // storage precision would silently round on every patch — a repaired
+    // bf16 word must hold *the policy value*, not its nearest neighbour.
+    policy.ensure_representable(precision)?;
     if let Protection::Scrub { period_runs } = protection {
         // `run_cell` treats scrub:0 as "never sweep" (a valid campaign
         // baseline); a *serving* run labeled scrub that never scrubs
@@ -110,6 +116,9 @@ pub struct ServeCell {
     pub protection: Protection,
     /// Repair-value policy for trap repairs and scrub sweeps.
     pub policy: RepairPolicy,
+    /// Storage precision of the resident's words in approximate memory
+    /// (fixed per resident; every request against a kind shares it).
+    pub precision: Precision,
     /// NaN words the fault process planted for this request.
     pub dose: u64,
     /// Seed for the dose-placement draws (derived from the request index,
@@ -381,9 +390,22 @@ pub struct ResidentSet {
 struct Resident {
     pool: ApproxPool,
     workload: Box<dyn Workload>,
+    /// Storage precision of the resident's words (fixed at admission).
+    precision: Precision,
+    /// Packed storage image of the resident *inputs* for sub-f64
+    /// precisions — the authoritative approximate-memory representation
+    /// (what the fault process upsets and the 16-bit kernels sweep).  The
+    /// workload's f64 buffers are this image's **widened compute copies**:
+    /// every image write is mirrored as a widened f64 write and every
+    /// compute-side repair is narrowed back at the request boundary, so
+    /// `image ≡ narrow(compute copy)` holds between requests.  `None` for
+    /// native f64 residents.
+    image: Option<PackedImage>,
     /// Pristine input-word snapshot, captured at admission before any
     /// compute ran — the copy-on-serve restore source.  Present exactly
-    /// for input-mutating kinds ([`WorkloadKind::mutates_inputs`]).
+    /// for input-mutating kinds ([`WorkloadKind::mutates_inputs`]).  For
+    /// packed residents it is captured *after* quantization, so every
+    /// pristine value narrows exactly back to its stored image word.
     pristine: Option<Vec<u64>>,
     /// Requests served against this resident (drives the per-kind scrub
     /// cadence for [`Protection::Scrub`]).
@@ -394,14 +416,91 @@ struct Resident {
     ledger: AccessLedger,
 }
 
+/// The packed word store behind a sub-f64 resident (see
+/// [`Resident::image`]).  Bits are exchanged right-aligned in a `u64`
+/// through [`Precision::narrow_bits`]/[`Precision::widen_bits`].
+enum PackedImage {
+    /// 16-bit residents (bf16/f16) — what the bulk 16-bit kernels sweep.
+    Half { precision: Precision, bits: Vec<u16> },
+    /// 32-bit residents (scalar classify; not the bandwidth story).
+    Single { bits: Vec<u32> },
+}
+
+impl PackedImage {
+    fn new(precision: Precision, len: usize) -> Self {
+        if precision.is_half() {
+            PackedImage::Half {
+                precision,
+                bits: vec![0; len],
+            }
+        } else {
+            PackedImage::Single { bits: vec![0; len] }
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            PackedImage::Half { bits, .. } => bits.len(),
+            PackedImage::Single { bits } => bits.len(),
+        }
+    }
+
+    fn set(&mut self, idx: usize, stored: u64) {
+        match self {
+            PackedImage::Half { bits, .. } => bits[idx] = stored as u16,
+            PackedImage::Single { bits } => bits[idx] = stored as u32,
+        }
+    }
+
+    fn get(&self, idx: usize) -> u64 {
+        match self {
+            PackedImage::Half { bits, .. } => bits[idx] as u64,
+            PackedImage::Single { bits } => bits[idx] as u64,
+        }
+    }
+
+    /// Indices of every NaN word in storage, ascending — the 16-bit bulk
+    /// kernel for half residents, a scalar classify for f32.
+    fn find_nans_into(&self, out: &mut Vec<usize>) {
+        match self {
+            PackedImage::Half { precision, bits } => {
+                let layout = precision.half_layout().expect("half image has a layout");
+                crate::fp::scan::find_nans_into16(bits, layout, out);
+            }
+            PackedImage::Single { bits } => {
+                for (i, &w) in bits.iter().enumerate() {
+                    if crate::fp::nan::classify_f32(w).is_nan() {
+                        out.push(i);
+                    }
+                }
+            }
+        }
+    }
+}
+
 impl ResidentSet {
-    /// Admit (or fetch) the resident for `kind`, built from `seed` on
-    /// first touch.  The first build wins: `seed` is ignored for a kind
-    /// that is already resident.
-    fn entry(&mut self, kind: WorkloadKind, seed: u64) -> &mut Resident {
+    /// Admit (or fetch) the resident for `kind`, built from `seed` at
+    /// storage precision `precision` on first touch.  The first build
+    /// wins: `seed` and `precision` are ignored for a kind that is
+    /// already resident (serve-config validation guarantees one precision
+    /// per kind per run).  For packed precisions the freshly built f64
+    /// inputs are **quantized on admission**: each word is narrowed to
+    /// storage bits (captured in the image) and the widened value written
+    /// back, so compute always runs on exactly the values storage holds.
+    fn entry(&mut self, kind: WorkloadKind, seed: u64, precision: Precision) -> &mut Resident {
         self.entries.entry(kind).or_insert_with(|| {
             let pool = ApproxPool::new();
-            let workload = kind.build(&pool, seed);
+            let mut workload = kind.build(&pool, seed);
+            let image = precision.is_packed().then(|| {
+                let mut image = PackedImage::new(precision, workload.input_len());
+                for idx in 0..workload.input_len() {
+                    let stored =
+                        precision.narrow_bits(f64::from_bits(workload.input_bits(idx)));
+                    image.set(idx, stored);
+                    workload.poison_input(idx, precision.widen_bits(stored).to_bits());
+                }
+                image
+            });
             let pristine = kind.mutates_inputs().then(|| {
                 let mut snap = Vec::with_capacity(workload.input_len());
                 for region in 0..workload.input_regions() {
@@ -412,6 +511,8 @@ impl ResidentSet {
             Resident {
                 pool,
                 workload,
+                precision,
+                image,
                 pristine,
                 served: 0,
                 ledger: AccessLedger::default(),
@@ -449,6 +550,21 @@ impl ResidentSet {
     /// kinds only).
     pub fn pristine(&self, kind: WorkloadKind) -> Option<&[u64]> {
         self.entries.get(&kind).and_then(|r| r.pristine.as_deref())
+    }
+
+    /// Storage precision of `kind`'s resident.
+    pub fn precision(&self, kind: WorkloadKind) -> Option<Precision> {
+        self.entries.get(&kind).map(|r| r.precision)
+    }
+
+    /// The packed storage image of `kind`'s resident, word by word as
+    /// right-aligned bits (`None` for native f64 residents) — the hook
+    /// tests use to assert storage-plane determinism and pristineness.
+    pub fn image_words(&self, kind: WorkloadKind) -> Option<Vec<u64>> {
+        self.entries.get(&kind).and_then(|r| {
+            let image = r.image.as_ref()?;
+            Some((0..image.len()).map(|i| image.get(i)).collect())
+        })
     }
 
     /// The access ledger of `kind`'s resident — what its approximate
@@ -493,6 +609,14 @@ struct DoseScratch {
     /// Cleared index-by-index after each request (O(dose), not O(len)),
     /// and never shrunk, so it settles at the largest resident size.
     mask: Vec<u64>,
+    /// Gather buffer for the bulk hygiene pass: the request's planted
+    /// words copied contiguous so one [`crate::fp::scan::find_nans_into`]
+    /// kernel sweep classifies them all (instead of one per-index probe
+    /// per word).  Reused across requests like the rest of the scratch.
+    gather: Vec<u64>,
+    /// The kernel's hit list into `gather`/the packed image (positions of
+    /// the words that are still NaN).
+    hits: Vec<usize>,
 }
 
 impl DoseScratch {
@@ -710,7 +834,14 @@ impl ExperimentSession {
     /// snapshot is captured *before* the warm run and restored after it,
     /// so the resident is byte-pristine when the first request arrives.
     pub fn prepare_resident(&mut self, kind: WorkloadKind, seed: u64) {
-        let resident = self.residents.entry(kind, seed);
+        self.prepare_resident_at(kind, seed, Precision::F64);
+    }
+
+    /// [`ExperimentSession::prepare_resident`] at an explicit storage
+    /// precision: packed residents are quantized on admission (see
+    /// [`ResidentSet::entry`]) before the unmeasured warm run.
+    pub fn prepare_resident_at(&mut self, kind: WorkloadKind, seed: u64, precision: Precision) {
+        let resident = self.residents.entry(kind, seed, precision);
         resident.workload.run();
         if let Some(pristine) = &resident.pristine {
             restore_pristine(resident.workload.as_mut(), pristine);
@@ -800,18 +931,27 @@ impl ExperimentSession {
             cells.iter().all(|c| c.workload == first.workload
                 && c.protection == first.protection
                 && c.policy == first.policy
+                && c.precision == first.precision
                 && c.resident_seed == first.resident_seed),
-            "a dispatch window must share one (kind, protection, policy) triple"
+            "a dispatch window must share one (kind, protection, policy, precision) tuple"
         );
-        ensure_servable(first.workload, first.protection, first.policy)?;
+        ensure_servable(first.workload, first.protection, first.policy, first.precision)?;
         // Per-request access traffic, from kind-level constants so the
         // ledger is identical between this live path and the capacity
         // planner's virtual-time model.
         let (base_reads, base_writes) = first.workload.access_words();
-        let resident = self.residents.entry(first.workload, first.resident_seed);
+        let precision = first.precision;
+        let resident = self
+            .residents
+            .entry(first.workload, first.resident_seed, precision);
         let pool = resident.pool.clone();
         let pool_words = (pool.total_bytes() / 8) as u64;
         let workload: &mut dyn Workload = resident.workload.as_mut();
+        // Policy fallback in both widths: the storage word every patch
+        // writes, and the widened compute-copy value it mirrors to.  The
+        // servability check above guarantees the narrow is exact.
+        let fb_store = precision.narrow_bits(first.policy.fallback_value());
+        let fb_wide = precision.widen_bits(fb_store).to_bits();
 
         // One arm for the whole window (reactive protections only); its
         // cost lands on the first request below.
@@ -825,10 +965,17 @@ impl ExperimentSession {
         let mut out = Vec::with_capacity(cells.len());
         for (i, cell) in cells.iter().enumerate() {
             // The fault process acts between requests: plant the dose as
-            // paper-pattern NaN words at placement-seed-derived positions
-            // (session scratch — no per-request allocation).
-            let planted =
-                plant_dose(workload, &mut self.dose_scratch, cell.dose, cell.placement_seed);
+            // paper-pattern NaN words — at the resident's storage
+            // precision — at placement-seed-derived positions (session
+            // scratch — no per-request allocation).
+            let planted = plant_dose(
+                workload,
+                &mut self.dose_scratch,
+                cell.dose,
+                cell.placement_seed,
+                precision,
+                resident.image.as_mut(),
+            );
 
             // Proactive scrubbing and the compute are inside the service
             // window — protection overhead is what the latency SLO is
@@ -838,10 +985,30 @@ impl ExperimentSession {
             let mut scrub_swept_words = 0u64;
             if let Protection::Scrub { period_runs } = cell.protection {
                 if period_runs > 0 && resident.served % period_runs as u64 == 0 {
-                    scrub_repairs = Scrubber::new(cell.policy.fallback_value())
-                        .scrub(&pool)
-                        .nans_repaired();
-                    scrub_swept_words = pool_words;
+                    match resident.image.as_mut() {
+                        // Packed residents: the sweep runs over *storage* —
+                        // one bulk 16-bit kernel pass over the image (4×
+                        // the words per GB/s of the f64 sweep), patching
+                        // each hit in the image and its widened compute
+                        // copy.
+                        Some(image) => {
+                            let hits = &mut self.dose_scratch.hits;
+                            hits.clear();
+                            image.find_nans_into(hits);
+                            for &idx in hits.iter() {
+                                image.set(idx, fb_store);
+                                workload.poison_input(idx, fb_wide);
+                            }
+                            scrub_repairs = hits.len() as u64;
+                            scrub_swept_words = image.len() as u64;
+                        }
+                        None => {
+                            scrub_repairs = Scrubber::new(cell.policy.fallback_value())
+                                .scrub(&pool)
+                                .nans_repaired();
+                            scrub_swept_words = pool_words;
+                        }
+                    }
                 }
             }
             workload.run();
@@ -861,16 +1028,40 @@ impl ExperimentSession {
             // their documented persistence semantics.
             let mut hygiene_repairs = 0u64;
             if matches!(cell.protection, Protection::RegisterMemory) {
-                let repair_bits = cell.policy.fallback_value().to_bits();
-                for &idx in &self.dose_scratch.indices {
-                    // Bit-level NaN test (like repair/memory.rs): the
-                    // guard is still armed, and an FP `is_nan()`
-                    // comparison on the paper's *signaling* NaN would
-                    // itself trap — repairing the probe register and
-                    // making the check read false.
-                    if crate::fp::nan::classify_f64(workload.input_bits(idx)).is_nan() {
-                        workload.poison_input(idx, repair_bits);
-                        hygiene_repairs += 1;
+                // Bulk form: gather this request's planted words
+                // contiguous and classify them all with one integer-only
+                // kernel sweep ([`crate::fp::scan::find_nans_into`])
+                // instead of one per-index probe each.  The kernel
+                // executes no FP instruction, so it is safe inside the
+                // still-armed window — an FP `is_nan()` on the paper's
+                // *signaling* NaN would itself trap, repairing the probe
+                // register and making the check read false.
+                let DoseScratch {
+                    indices,
+                    gather,
+                    hits,
+                    ..
+                } = &mut self.dose_scratch;
+                gather.clear();
+                gather.extend(indices.iter().map(|&idx| workload.input_bits(idx)));
+                hits.clear();
+                crate::fp::scan::find_nans_into(gather, hits);
+                for &k in hits.iter() {
+                    workload.poison_input(indices[k], fb_wide);
+                }
+                hygiene_repairs = hits.len() as u64;
+                // Packed residents: storage is authoritative — re-narrow
+                // every planted word's compute value into the image (trap
+                // repairs may have written values storage cannot hold
+                // exactly, e.g. a neighbor mean) and push the rounded
+                // value back into the compute copy, restoring the
+                // `image ≡ narrow(compute)` boundary invariant.
+                if let Some(image) = resident.image.as_mut() {
+                    for &idx in indices.iter() {
+                        let stored =
+                            precision.narrow_bits(f64::from_bits(workload.input_bits(idx)));
+                        image.set(idx, stored);
+                        workload.poison_input(idx, precision.widen_bits(stored).to_bits());
                     }
                 }
             }
@@ -916,6 +1107,19 @@ impl ExperimentSession {
                 Some(pristine) => {
                     let t_restore = Instant::now();
                     restore_pristine(workload, pristine);
+                    // Storage side of the restore: only this request's
+                    // planted indices can differ from the pristine image
+                    // (plants, scrub patches and hygiene syncs all land
+                    // on them), and pristine values narrow exactly (they
+                    // were quantized at admission) — O(dose), not O(len).
+                    if let Some(image) = resident.image.as_mut() {
+                        for &idx in &self.dose_scratch.indices {
+                            image.set(
+                                idx,
+                                precision.narrow_bits(f64::from_bits(pristine[idx])),
+                            );
+                        }
+                    }
                     (pristine.len() as u64, t_restore.elapsed().as_secs_f64())
                 }
                 None => (0, 0.0),
@@ -989,22 +1193,39 @@ impl ExperimentSession {
     /// [`crate::coordinator::server`] module docs); only the per-request
     /// `dose`/`nans_planted` stream stays invariant for them.
     pub fn shed_request(&mut self, cell: &ServeCell) -> Result<RequestOutcome> {
-        ensure_servable(cell.workload, cell.protection, cell.policy)?;
-        let resident = self.residents.entry(cell.workload, cell.resident_seed);
+        ensure_servable(cell.workload, cell.protection, cell.policy, cell.precision)?;
+        let precision = cell.precision;
+        let resident = self
+            .residents
+            .entry(cell.workload, cell.resident_seed, precision);
         let workload: &mut dyn Workload = resident.workload.as_mut();
 
         let t0 = Instant::now();
-        let planted = plant_dose(workload, &mut self.dose_scratch, cell.dose, cell.placement_seed);
+        let planted = plant_dose(
+            workload,
+            &mut self.dose_scratch,
+            cell.dose,
+            cell.placement_seed,
+            precision,
+            resident.image.as_mut(),
+        );
         match &resident.pristine {
             Some(pristine) => {
                 for &idx in &self.dose_scratch.indices {
                     workload.poison_input(idx, pristine[idx]);
+                    if let Some(image) = resident.image.as_mut() {
+                        image.set(idx, precision.narrow_bits(f64::from_bits(pristine[idx])));
+                    }
                 }
             }
             None => {
-                let repair_bits = cell.policy.fallback_value().to_bits();
+                let fb_store = precision.narrow_bits(cell.policy.fallback_value());
+                let fb_wide = precision.widen_bits(fb_store).to_bits();
                 for &idx in &self.dose_scratch.indices {
-                    workload.poison_input(idx, repair_bits);
+                    workload.poison_input(idx, fb_wide);
+                    if let Some(image) = resident.image.as_mut() {
+                        image.set(idx, fb_store);
+                    }
                 }
             }
         }
@@ -1052,15 +1273,28 @@ pub(crate) fn dose_indices(len: usize, dose: u64, placement_seed: u64) -> Vec<us
 /// The single planting path `serve_batch` and `shed_request` share, so a
 /// request's fault footprint is identical either way — and the same
 /// index set [`dose_indices`] derives for the capacity planner.
+///
+/// The pattern is the paper SNaN *at the resident's storage precision*
+/// ([`Precision::plant_bits`]): the packed image takes the 16/32-bit
+/// word, the compute copy its class-preserving widened f64 — still a
+/// signaling NaN, so the trap machinery fires identically.  For f64
+/// residents this degenerates to writing [`crate::fp::nan::PAPER_NAN_BITS`].
 fn plant_dose(
     workload: &mut dyn Workload,
     scratch: &mut DoseScratch,
     dose: u64,
     placement_seed: u64,
+    precision: Precision,
+    mut image: Option<&mut PackedImage>,
 ) -> u64 {
     scratch.fill(workload.input_len(), dose, placement_seed);
+    let plant_store = precision.plant_bits();
+    let plant_wide = precision.widen_bits(plant_store).to_bits();
     for &idx in &scratch.indices {
-        workload.poison_input(idx, crate::fp::nan::PAPER_NAN_BITS);
+        workload.poison_input(idx, plant_wide);
+        if let Some(image) = image.as_deref_mut() {
+            image.set(idx, plant_store);
+        }
     }
     scratch.indices.len() as u64
 }
@@ -1191,6 +1425,7 @@ mod tests {
             resident_seed: 9,
             protection,
             policy: RepairPolicy::Zero,
+            precision: Precision::F64,
             dose,
             placement_seed: 0x5eed ^ idx,
             hold_secs: 0.0,
@@ -1332,6 +1567,7 @@ mod tests {
             resident_seed: 9,
             protection: Protection::RegisterMemory,
             policy: RepairPolicy::One,
+            precision: Precision::F64,
             dose: 3,
             placement_seed: 0x5eed ^ i,
             hold_secs: 0.25 * (i + 1) as f64,
@@ -1527,6 +1763,170 @@ mod tests {
                 "{workload}: resident byte-identical after 4 serve + 4 shed requests"
             );
         }
+    }
+
+    fn half_cell(precision: Precision, dose: u64, idx: u64, protection: Protection) -> ServeCell {
+        ServeCell {
+            precision,
+            ..serve_cell(dose, idx, protection)
+        }
+    }
+
+    #[test]
+    fn packed_residents_trap_and_repair_like_f64() {
+        // The full reactive mechanism must work unchanged when residents
+        // are stored in 16 bits: planted storage SNaNs widen to compute
+        // SNaNs, trap at first FP touch, and the response stays clean.
+        for precision in [Precision::Bf16, Precision::F16, Precision::F32] {
+            let mut s = ExperimentSession::new();
+            s.prepare_resident_at(WorkloadKind::MatMul { n: 16 }, 9, precision);
+            for i in 0..4 {
+                let out = s
+                    .serve_request(&half_cell(precision, 2, i, Protection::RegisterMemory))
+                    .unwrap();
+                assert!(!out.is_shed());
+                assert_eq!(out.output_nans(), 0, "{precision}: reactive responses NaN-free");
+                assert!(out.nans_planted() >= 1 && out.nans_planted() <= 2);
+                assert!(
+                    out.traps().sigfpe_total >= 1,
+                    "{precision}: widened storage SNaN must trap"
+                );
+            }
+            // The storage image exists, covers every input word, and
+            // holds no NaN after a run of closed requests.
+            let kind = WorkloadKind::MatMul { n: 16 };
+            let image = s.residents().image_words(kind).unwrap();
+            assert_eq!(image.len(), s.residents().input_bits(kind).unwrap().len());
+            assert_eq!(s.residents().precision(kind), Some(precision));
+            assert!(
+                image
+                    .iter()
+                    .all(|&w| !precision.classify_bits(w).is_nan()),
+                "{precision}: every plant was closed in storage too"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_resident_compute_copy_mirrors_storage() {
+        // image ≡ narrow(compute copy) at request boundaries — and the
+        // compute copy is exactly widen(image), so the resident serves
+        // the same values storage holds.
+        let kind = WorkloadKind::MatMul { n: 16 };
+        let precision = Precision::Bf16;
+        let mut s = ExperimentSession::new();
+        s.prepare_resident_at(kind, 9, precision);
+        for i in 0..3 {
+            s.serve_request(&half_cell(precision, 3, i, Protection::RegisterMemory))
+                .unwrap();
+            let image = s.residents().image_words(kind).unwrap();
+            let compute = s.residents().input_bits(kind).unwrap();
+            for (idx, (&st, &cp)) in image.iter().zip(&compute).enumerate() {
+                assert_eq!(
+                    precision.widen_bits(st).to_bits(),
+                    cp,
+                    "word {idx} diverged after request {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_serve_ledger_is_batch_size_invariant() {
+        // The f64 batch-invariance contract holds verbatim for half
+        // residents (CG exercises the hygiene path).
+        let kind = WorkloadKind::Cg { n: 12, iters: 4 };
+        let cell = |i: u64| ServeCell {
+            workload: kind,
+            resident_seed: 9,
+            protection: Protection::RegisterMemory,
+            policy: RepairPolicy::One,
+            precision: Precision::F16,
+            dose: 3,
+            placement_seed: 0x5eed ^ i,
+            hold_secs: 0.5,
+        };
+        let mut one_by_one = ExperimentSession::new();
+        one_by_one.prepare_resident_at(kind, 9, Precision::F16);
+        let solo: Vec<_> = (0..3)
+            .map(|i| one_by_one.serve_request(&cell(i)).unwrap())
+            .collect();
+
+        let mut batched = ExperimentSession::new();
+        batched.prepare_resident_at(kind, 9, Precision::F16);
+        let cells: Vec<_> = (0..3).map(cell).collect();
+        let window = batched.serve_batch(&cells).unwrap();
+
+        for (a, (b, _done)) in solo.iter().zip(window.iter()) {
+            let (mut at, mut bt) = (a.traps(), b.traps());
+            at.trap_cycles_total = 0;
+            bt.trap_cycles_total = 0;
+            assert_eq!(at, bt);
+            assert_eq!(a.nans_planted(), b.nans_planted());
+            assert_eq!(a.hygiene_repairs(), b.hygiene_repairs());
+            assert_eq!(a.output_nans(), b.output_nans());
+            assert_eq!(a.words_written(), b.words_written());
+        }
+        assert_eq!(
+            one_by_one.residents().ledger(kind).unwrap(),
+            batched.residents().ledger(kind).unwrap()
+        );
+        assert_eq!(
+            one_by_one.residents().image_words(kind).unwrap(),
+            batched.residents().image_words(kind).unwrap(),
+            "storage image trajectory is batch-size invariant"
+        );
+    }
+
+    #[test]
+    fn packed_mutating_residents_restore_storage_and_compute() {
+        let kind = WorkloadKind::Stencil { n: 10, steps: 3 };
+        let precision = Precision::Bf16;
+        let mut s = ExperimentSession::new();
+        s.prepare_resident_at(kind, 9, precision);
+        let pristine_image = s.residents().image_words(kind).unwrap();
+        let pristine_inputs = s.residents().input_bits(kind).unwrap();
+        for i in 0..3 {
+            s.serve_request(&half_cell(precision, 2, i, Protection::RegisterMemory))
+                .unwrap();
+            let shed = ServeCell {
+                workload: kind,
+                ..half_cell(precision, 2, 100 + i, Protection::RegisterMemory)
+            };
+            s.shed_request(&shed).unwrap();
+        }
+        assert_eq!(
+            s.residents().image_words(kind).unwrap(),
+            pristine_image,
+            "storage image byte-identical after serve+shed traffic"
+        );
+        assert_eq!(
+            s.residents().input_bits(kind).unwrap(),
+            pristine_inputs,
+            "compute copy byte-identical after serve+shed traffic"
+        );
+    }
+
+    #[test]
+    fn serve_rejects_unrepresentable_repair_constants() {
+        // satellite: const:V must be exactly representable at the
+        // resident's storage precision.
+        let mut s = ExperimentSession::new();
+        let cell = ServeCell {
+            policy: RepairPolicy::parse("const:0.1").unwrap(),
+            ..half_cell(Precision::Bf16, 1, 0, Protection::RegisterMemory)
+        };
+        let err = s.serve_request(&cell).unwrap_err().to_string();
+        assert!(
+            err.contains("bf16") && err.contains("nearest"),
+            "rejection names the precision and the nearest value: {err}"
+        );
+        // the same constant is fine at f64
+        let cell = ServeCell {
+            policy: RepairPolicy::parse("const:0.1").unwrap(),
+            ..serve_cell(1, 0, Protection::RegisterMemory)
+        };
+        assert!(s.serve_request(&cell).is_ok());
     }
 
     /// The allocation-free scratch fill yields exactly the index *set*

@@ -148,6 +148,136 @@ impl F32Bits {
     }
 }
 
+/// Field layout constants and accessors for `bf16` (bfloat16: 1-8-7).
+///
+/// Same exponent field as `f32` (it is the top half of a binary32), so
+/// widening is a 16-bit left shift and every bf16 NaN widens to an f32
+/// NaN of the same class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bf16Bits(pub u16);
+
+impl Bf16Bits {
+    pub const SIGN_BIT: u32 = 15;
+    pub const EXP_BITS: u32 = 8;
+    pub const FRAC_BITS: u32 = 7;
+    pub const EXP_MASK: u16 = 0x7f80;
+    pub const FRAC_MASK: u16 = 0x007f;
+    /// The quiet bit: most-significant fraction bit.
+    pub const QUIET_BIT: u16 = 1 << 6;
+
+    #[inline]
+    pub fn sign(self) -> bool {
+        self.0 >> Self::SIGN_BIT != 0
+    }
+
+    /// Raw (biased) exponent field.
+    #[inline]
+    pub fn exponent(self) -> u16 {
+        (self.0 & Self::EXP_MASK) >> Self::FRAC_BITS
+    }
+
+    #[inline]
+    pub fn fraction(self) -> u16 {
+        self.0 & Self::FRAC_MASK
+    }
+
+    #[inline]
+    pub fn exp_all_ones(self) -> bool {
+        self.0 & Self::EXP_MASK == Self::EXP_MASK
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        self.exp_all_ones() && self.fraction() != 0
+    }
+
+    #[inline]
+    pub fn is_inf(self) -> bool {
+        self.exp_all_ones() && self.fraction() == 0
+    }
+
+    #[inline]
+    pub fn flip(self, i: u32) -> Self {
+        debug_assert!(i < 16);
+        Self(self.0 ^ (1u16 << i))
+    }
+
+    #[inline]
+    pub fn exp_ones(self) -> u32 {
+        (self.0 & Self::EXP_MASK).count_ones()
+    }
+
+    #[inline]
+    pub fn flips_to_nan_exponent(self) -> u32 {
+        Self::EXP_BITS - self.exp_ones()
+    }
+}
+
+/// Field layout constants and accessors for `f16` (binary16: 1-5-10).
+///
+/// The 5-bit exponent is the paper's §2.2 endgame: a random flip lands
+/// in NaN space far more often than in binary64, so reactive repair
+/// matters *more* here, not less.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct F16Bits(pub u16);
+
+impl F16Bits {
+    pub const SIGN_BIT: u32 = 15;
+    pub const EXP_BITS: u32 = 5;
+    pub const FRAC_BITS: u32 = 10;
+    pub const EXP_MASK: u16 = 0x7c00;
+    pub const FRAC_MASK: u16 = 0x03ff;
+    /// The quiet bit: most-significant fraction bit.
+    pub const QUIET_BIT: u16 = 1 << 9;
+
+    #[inline]
+    pub fn sign(self) -> bool {
+        self.0 >> Self::SIGN_BIT != 0
+    }
+
+    /// Raw (biased) exponent field.
+    #[inline]
+    pub fn exponent(self) -> u16 {
+        (self.0 & Self::EXP_MASK) >> Self::FRAC_BITS
+    }
+
+    #[inline]
+    pub fn fraction(self) -> u16 {
+        self.0 & Self::FRAC_MASK
+    }
+
+    #[inline]
+    pub fn exp_all_ones(self) -> bool {
+        self.0 & Self::EXP_MASK == Self::EXP_MASK
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        self.exp_all_ones() && self.fraction() != 0
+    }
+
+    #[inline]
+    pub fn is_inf(self) -> bool {
+        self.exp_all_ones() && self.fraction() == 0
+    }
+
+    #[inline]
+    pub fn flip(self, i: u32) -> Self {
+        debug_assert!(i < 16);
+        Self(self.0 ^ (1u16 << i))
+    }
+
+    #[inline]
+    pub fn exp_ones(self) -> u32 {
+        (self.0 & Self::EXP_MASK).count_ones()
+    }
+
+    #[inline]
+    pub fn flips_to_nan_exponent(self) -> u32 {
+        Self::EXP_BITS - self.exp_ones()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,5 +365,52 @@ mod tests {
         assert!(F32Bits::EXP_BITS < F64Bits::EXP_BITS);
         assert_eq!(F32Bits::from_f32(1.0).flips_to_nan_exponent(), 1);
         assert_eq!(F32Bits::from_f32(0.0).flips_to_nan_exponent(), 8);
+    }
+
+    #[test]
+    fn bf16_layout_is_the_top_half_of_f32() {
+        // bf16 is binary32 truncated to 16 bits: every constant is the
+        // f32 constant shifted down 16.
+        assert_eq!(Bf16Bits::EXP_MASK as u32, F32Bits::EXP_MASK >> 16);
+        assert_eq!(Bf16Bits::QUIET_BIT as u32, F32Bits::QUIET_BIT >> 16);
+        assert_eq!(Bf16Bits::EXP_BITS, F32Bits::EXP_BITS);
+        // 1.0f32 = 0x3f80_0000 → bf16 0x3f80
+        let one = Bf16Bits((1.0f32.to_bits() >> 16) as u16);
+        assert_eq!(one.exponent(), 127);
+        assert_eq!(one.fraction(), 0);
+        assert!(!one.is_nan() && !one.is_inf());
+        assert_eq!(one.flips_to_nan_exponent(), 1);
+    }
+
+    #[test]
+    fn f16_field_extraction_and_classes() {
+        // 1.0f16 = 0x3c00: exponent 15 (bias 15), fraction 0.
+        let one = F16Bits(0x3c00);
+        assert_eq!(one.exponent(), 15);
+        assert_eq!(one.fraction(), 0);
+        assert!(!one.sign() && !one.is_nan() && !one.is_inf());
+        assert_eq!(one.flips_to_nan_exponent(), 1);
+        // +Inf = 0x7c00, −Inf = 0xfc00, NaNs have non-zero fraction.
+        assert!(F16Bits(0x7c00).is_inf());
+        assert!(F16Bits(0xfc00).is_inf());
+        assert!(F16Bits(0x7c01).is_nan());
+        assert!(F16Bits(0x7e00).is_nan());
+        assert_ne!(F16Bits(0x7c01).0 & F16Bits::QUIET_BIT, F16Bits::QUIET_BIT);
+        assert_eq!(F16Bits(0x7e00).0 & F16Bits::QUIET_BIT, F16Bits::QUIET_BIT);
+    }
+
+    #[test]
+    fn half_formats_flip_roundtrip_and_nan_density_ordering() {
+        for i in 0..16 {
+            assert_eq!(Bf16Bits(0x3f80).flip(i).flip(i), Bf16Bits(0x3f80));
+            assert_eq!(F16Bits(0x3c00).flip(i).flip(i), F16Bits(0x3c00));
+        }
+        // The premise the tentpole rides on: shorter exponents mean a
+        // larger fraction of random single-bit flips reach NaN space.
+        assert!(F16Bits::EXP_BITS < Bf16Bits::EXP_BITS);
+        assert!(Bf16Bits::EXP_BITS < F64Bits::EXP_BITS);
+        // Zero is EXP_BITS flips from NaN space in every format.
+        assert_eq!(Bf16Bits(0).flips_to_nan_exponent(), 8);
+        assert_eq!(F16Bits(0).flips_to_nan_exponent(), 5);
     }
 }

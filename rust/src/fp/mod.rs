@@ -6,7 +6,9 @@
 pub mod analytics;
 pub mod bits;
 pub mod nan;
+pub mod precision;
 pub mod scan;
 
-pub use bits::{F32Bits, F64Bits};
-pub use nan::{classify_f32, classify_f64, NanClass};
+pub use bits::{Bf16Bits, F16Bits, F32Bits, F64Bits};
+pub use nan::{classify_bf16, classify_f16, classify_f32, classify_f64, NanClass};
+pub use precision::{HalfLayout, Precision};

@@ -6,11 +6,20 @@
 //! x86/ARM).  The paper's injected pattern `0x7ff0464544434241` has that bit
 //! clear, i.e. it *is* an SNaN — which is why the gdb prototype traps at all.
 
-use super::bits::{F32Bits, F64Bits};
+use super::bits::{Bf16Bits, F16Bits, F32Bits, F64Bits};
 
 /// The bit pattern the paper injects (Figure 4/5): ASCII "ABCDEF" packed
 /// under an all-ones exponent, quiet bit clear → signaling NaN.
 pub const PAPER_NAN_BITS: u64 = 0x7ff0_4645_4443_4241;
+
+/// The bf16 analogue of the paper pattern: all-ones exponent, quiet bit
+/// clear, ASCII "A" truncated into the 6 payload bits below the quiet
+/// bit → signaling NaN (`0x7f81`).
+pub const PAPER_NAN_BITS_BF16: u16 = Bf16Bits::EXP_MASK | (0x41 & (Bf16Bits::FRAC_MASK >> 1)) | 1;
+
+/// The f16 analogue of the paper pattern: all-ones exponent, quiet bit
+/// clear, ASCII "A" in the payload → signaling NaN (`0x7c41`).
+pub const PAPER_NAN_BITS_F16: u16 = F16Bits::EXP_MASK | (0x41 & (F16Bits::FRAC_MASK >> 1));
 
 /// Classification of a floating-point bit pattern.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -97,6 +106,59 @@ pub fn qnan_f32(payload: u32) -> u32 {
     F32Bits::EXP_MASK | F32Bits::QUIET_BIT | (payload & (F32Bits::FRAC_MASK >> 1))
 }
 
+/// Classify a bf16 (1-8-7) pattern.
+#[inline]
+pub fn classify_bf16(bits: u16) -> NanClass {
+    let b = Bf16Bits(bits);
+    if !b.is_nan() {
+        NanClass::NotNan
+    } else if bits & Bf16Bits::QUIET_BIT != 0 {
+        NanClass::Quiet
+    } else {
+        NanClass::Signaling
+    }
+}
+
+/// Classify an f16 (1-5-10) pattern.
+#[inline]
+pub fn classify_f16(bits: u16) -> NanClass {
+    let b = F16Bits(bits);
+    if !b.is_nan() {
+        NanClass::NotNan
+    } else if bits & F16Bits::QUIET_BIT != 0 {
+        NanClass::Quiet
+    } else {
+        NanClass::Signaling
+    }
+}
+
+/// Construct a canonical bf16 SNaN carrying `payload` (truncated to the 6
+/// payload bits below the quiet bit, forced non-zero).
+#[inline]
+pub fn snan_bf16(payload: u16) -> u16 {
+    let p = payload & (Bf16Bits::FRAC_MASK >> 1);
+    Bf16Bits::EXP_MASK | if p == 0 { 1 } else { p }
+}
+
+/// Construct a canonical bf16 QNaN carrying `payload`.
+#[inline]
+pub fn qnan_bf16(payload: u16) -> u16 {
+    Bf16Bits::EXP_MASK | Bf16Bits::QUIET_BIT | (payload & (Bf16Bits::FRAC_MASK >> 1))
+}
+
+/// Construct a canonical f16 SNaN carrying `payload`.
+#[inline]
+pub fn snan_f16(payload: u16) -> u16 {
+    let p = payload & (F16Bits::FRAC_MASK >> 1);
+    F16Bits::EXP_MASK | if p == 0 { 1 } else { p }
+}
+
+/// Construct a canonical f16 QNaN carrying `payload`.
+#[inline]
+pub fn qnan_f16(payload: u16) -> u16 {
+    F16Bits::EXP_MASK | F16Bits::QUIET_BIT | (payload & (F16Bits::FRAC_MASK >> 1))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +200,33 @@ mod tests {
         assert!(f64::from_bits(snan_f64(0x42)).is_nan());
         assert!(f64::from_bits(qnan_f64(0x42)).is_nan());
         assert!(f32::from_bits(snan_f32(0x42)).is_nan());
+    }
+
+    #[test]
+    fn half_precision_paper_patterns_are_signaling() {
+        assert_eq!(PAPER_NAN_BITS_BF16, 0x7f81);
+        assert_eq!(PAPER_NAN_BITS_F16, 0x7c41);
+        assert_eq!(classify_bf16(PAPER_NAN_BITS_BF16), NanClass::Signaling);
+        assert_eq!(classify_f16(PAPER_NAN_BITS_F16), NanClass::Signaling);
+    }
+
+    #[test]
+    fn half_precision_constructors_classify_correctly() {
+        for payload in [0u16, 1, 0x2f, u16::MAX] {
+            assert_eq!(classify_bf16(snan_bf16(payload)), NanClass::Signaling);
+            assert_eq!(classify_bf16(qnan_bf16(payload)), NanClass::Quiet);
+            assert_eq!(classify_f16(snan_f16(payload)), NanClass::Signaling);
+            assert_eq!(classify_f16(qnan_f16(payload)), NanClass::Quiet);
+        }
+        // Infinities and ordinary values are not NaNs in either layout.
+        for bits in [0x0000u16, 0x8000, 0x3f80, 0x3c00] {
+            assert_eq!(classify_bf16(bits), NanClass::NotNan);
+            assert_eq!(classify_f16(bits), NanClass::NotNan);
+        }
+        assert_eq!(classify_bf16(0x7f80), NanClass::NotNan); // +Inf bf16
+        assert_eq!(classify_f16(0x7c00), NanClass::NotNan); // +Inf f16
+        assert_eq!(classify_bf16(0xff80), NanClass::NotNan); // -Inf bf16
+        assert_eq!(classify_f16(0xfc00), NanClass::NotNan); // -Inf f16
     }
 
     #[test]

@@ -1,0 +1,468 @@
+//! The precision axis of the data plane.
+//!
+//! Residents can be stored at less than f64 without changing the repair
+//! story — a NaN is a NaN in any IEEE-754 width, only the masks move.  This
+//! module is the single place that knows how to move values between the
+//! *storage* precision (what sits in approximate memory) and the *compute*
+//! precision (what the FPU actually runs): packed bf16/f16 words widen to
+//! f32/f64 for arithmetic and narrow back on store.  All conversions here
+//! are soft (integer-only, no `half` crate, no FPU traps) and
+//! **NaN-class-preserving**: a signaling NaN planted in a 16-bit resident
+//! widens to a signaling f64, so the trap-and-repair machinery downstream
+//! fires exactly as it does for native f64 residents.
+
+use super::bits::{Bf16Bits, F16Bits, F32Bits, F64Bits};
+use super::nan::{
+    classify_bf16, classify_f16, classify_f32, classify_f64, NanClass, PAPER_NAN_BITS,
+    PAPER_NAN_BITS_BF16, PAPER_NAN_BITS_F16,
+};
+
+/// The three masks a 16-bit NaN kernel needs.  Both half formats share the
+/// sign-exp-frac shape; only the split differs, so the bulk kernels in
+/// `fp::scan` take this struct instead of being written twice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HalfLayout {
+    /// All-ones exponent mask (`0x7f80` bf16, `0x7c00` f16).
+    pub exp: u16,
+    /// Fraction mask (`0x007f` bf16, `0x03ff` f16).
+    pub frac: u16,
+    /// Quiet bit: top fraction bit (`0x0040` bf16, `0x0200` f16).
+    pub quiet: u16,
+}
+
+/// bf16: 1-8-7, the top half of an f32.
+pub const BF16_LAYOUT: HalfLayout = HalfLayout {
+    exp: Bf16Bits::EXP_MASK,
+    frac: Bf16Bits::FRAC_MASK,
+    quiet: Bf16Bits::QUIET_BIT,
+};
+
+/// f16 (IEEE binary16): 1-5-10.
+pub const F16_LAYOUT: HalfLayout = HalfLayout {
+    exp: F16Bits::EXP_MASK,
+    frac: F16Bits::FRAC_MASK,
+    quiet: F16Bits::QUIET_BIT,
+};
+
+/// Storage precision of a resident's words in approximate memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    /// Native f64 words; storage and compute coincide (the original plane).
+    #[default]
+    F64,
+    /// Packed f32 words, f64 compute copies.
+    F32,
+    /// Packed bfloat16 words (1-8-7), f32-range compute.
+    Bf16,
+    /// Packed IEEE binary16 words (1-5-10), f32-range compute.
+    F16,
+}
+
+impl Precision {
+    pub const ALL: [Precision; 4] = [
+        Precision::F64,
+        Precision::F32,
+        Precision::Bf16,
+        Precision::F16,
+    ];
+
+    /// Parse a CLI spelling.  Lowercase only, matching the mix grammar.
+    pub fn parse(s: &str) -> Result<Precision, String> {
+        match s {
+            "f64" => Ok(Precision::F64),
+            "f32" => Ok(Precision::F32),
+            "bf16" => Ok(Precision::Bf16),
+            "f16" => Ok(Precision::F16),
+            other => Err(format!(
+                "unknown precision '{other}' (expected one of: f64, f32, bf16, f16)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::F16 => "f16",
+        }
+    }
+
+    /// Bytes per stored word in approximate memory.
+    pub fn word_bytes(self) -> usize {
+        match self {
+            Precision::F64 => 8,
+            Precision::F32 => 4,
+            Precision::Bf16 | Precision::F16 => 2,
+        }
+    }
+
+    /// Whether residents are stored as packed 16-bit words (the formats the
+    /// `fp::scan` 16-bit kernels operate on).
+    pub fn is_half(self) -> bool {
+        matches!(self, Precision::Bf16 | Precision::F16)
+    }
+
+    /// Whether residents are stored packed at all (anything narrower than
+    /// the native f64 compute plane).
+    pub fn is_packed(self) -> bool {
+        self != Precision::F64
+    }
+
+    /// Masks for the 16-bit bulk kernels, if this is a half format.
+    pub fn half_layout(self) -> Option<HalfLayout> {
+        match self {
+            Precision::Bf16 => Some(BF16_LAYOUT),
+            Precision::F16 => Some(F16_LAYOUT),
+            _ => None,
+        }
+    }
+
+    /// The paper's injected SNaN pattern in this precision's word width,
+    /// right-aligned in a u64.
+    pub fn plant_bits(self) -> u64 {
+        match self {
+            Precision::F64 => PAPER_NAN_BITS,
+            Precision::F32 => {
+                // ASCII "AB" packed under an all-ones exponent, quiet clear.
+                super::nan::snan_f32(0x4241) as u64
+            }
+            Precision::Bf16 => PAPER_NAN_BITS_BF16 as u64,
+            Precision::F16 => PAPER_NAN_BITS_F16 as u64,
+        }
+    }
+
+    /// Classify a stored word (right-aligned in a u64; high bits ignored).
+    pub fn classify_bits(self, bits: u64) -> NanClass {
+        match self {
+            Precision::F64 => classify_f64(bits),
+            Precision::F32 => classify_f32(bits as u32),
+            Precision::Bf16 => classify_bf16(bits as u16),
+            Precision::F16 => classify_f16(bits as u16),
+        }
+    }
+
+    /// Narrow an f64 value to this precision's storage bits (right-aligned
+    /// in a u64).  Finite values round to nearest-even through f32 for the
+    /// packed formats (the compute plane is f32-range, so every stored value
+    /// passes through f32 anyway); NaNs narrow class-preserving.
+    pub fn narrow_bits(self, v: f64) -> u64 {
+        match self {
+            Precision::F64 => v.to_bits(),
+            Precision::F32 => f32_bits_from_f64(v) as u64,
+            Precision::Bf16 => bf16_bits_from_f32_bits(f32_bits_from_f64(v)) as u64,
+            Precision::F16 => f16_bits_from_f32_bits(f32_bits_from_f64(v)) as u64,
+        }
+    }
+
+    /// Widen storage bits back to an f64 value.  Exact for every finite
+    /// pattern (all three packed formats embed exactly in f64) and
+    /// NaN-class-preserving: a stored SNaN widens to an f64 SNaN so it still
+    /// traps on first use.
+    pub fn widen_bits(self, bits: u64) -> f64 {
+        match self {
+            Precision::F64 => f64::from_bits(bits),
+            Precision::F32 => f64::from_bits(f64_bits_from_f32_bits(bits as u32)),
+            Precision::Bf16 => {
+                f64::from_bits(f64_bits_from_f32_bits((bits as u32 & 0xffff) << 16))
+            }
+            Precision::F16 => {
+                f64::from_bits(f64_bits_from_f32_bits(f32_bits_from_f16_bits(bits as u16)))
+            }
+        }
+    }
+
+    /// The nearest value representable at this precision (round to
+    /// nearest-even; may be ±Inf when `v` overflows the format).
+    pub fn nearest(self, v: f64) -> f64 {
+        self.widen_bits(self.narrow_bits(v))
+    }
+
+    /// Whether `v` survives a narrow/widen round trip bit-exactly.
+    pub fn exactly_representable(self, v: f64) -> bool {
+        self.nearest(v).to_bits() == v.to_bits()
+    }
+
+    /// Whether compute copies run at f32 range (true for every packed
+    /// format; the f64 plane computes natively).
+    pub fn compute_is_f32_range(self) -> bool {
+        self.is_packed()
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Precision {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Precision::parse(s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Soft conversions.  Integer-only so they can run under an unmasked FE_INVALID
+// environment without trapping on the very NaNs they shepherd.
+// ---------------------------------------------------------------------------
+
+/// f64 value → f32 bits, round-to-nearest-even, NaN-class-preserving.
+#[inline]
+pub fn f32_bits_from_f64(v: f64) -> u32 {
+    let x = v.to_bits();
+    if classify_f64(x).is_nan() {
+        let sign = ((x >> 63) as u32) << 31;
+        let quiet = if x & F64Bits::QUIET_BIT != 0 {
+            F32Bits::QUIET_BIT
+        } else {
+            0
+        };
+        // Keep the top payload bits (f64 payload is 51 wide, f32's is 22).
+        let payload = ((x >> 29) as u32) & (F32Bits::FRAC_MASK >> 1);
+        let payload = if quiet == 0 && payload == 0 { 1 } else { payload };
+        sign | F32Bits::EXP_MASK | quiet | payload
+    } else {
+        (v as f32).to_bits()
+    }
+}
+
+/// f32 bits → f64 bits, exact for finite patterns, NaN-class-preserving.
+#[inline]
+pub fn f64_bits_from_f32_bits(x: u32) -> u64 {
+    if classify_f32(x).is_nan() {
+        let sign = ((x >> 31) as u64) << 63;
+        let quiet = if x & F32Bits::QUIET_BIT != 0 {
+            F64Bits::QUIET_BIT
+        } else {
+            0
+        };
+        let payload = ((x & (F32Bits::FRAC_MASK >> 1)) as u64) << 29;
+        let payload = if quiet == 0 && payload == 0 { 1 } else { payload };
+        sign | F64Bits::EXP_MASK | quiet | payload
+    } else {
+        (f32::from_bits(x) as f64).to_bits()
+    }
+}
+
+/// f32 bits → bf16 bits, round-to-nearest-even, NaN-class-preserving.
+/// The finite path is the classic add-half-ulp trick: bf16 is the top half
+/// of f32, so rounding is an addition visible only above bit 16.
+#[inline]
+pub fn bf16_bits_from_f32_bits(x: u32) -> u16 {
+    if classify_f32(x).is_nan() {
+        // Truncate the payload into the top half; keep quiet bit alignment
+        // for free (f32 bit 22 → bf16 bit 6) and force the fraction nonzero.
+        let t = (x >> 16) as u16;
+        if t & Bf16Bits::FRAC_MASK == 0 {
+            t | 1
+        } else {
+            t
+        }
+    } else {
+        (x.wrapping_add(0x7fff + ((x >> 16) & 1)) >> 16) as u16
+    }
+}
+
+/// f16 bits → f32 bits, exact and NaN-class-preserving (payload shifts up
+/// 13, putting the f16 quiet bit 9 exactly on the f32 quiet bit 22).
+#[inline]
+pub fn f32_bits_from_f16_bits(h: u16) -> u32 {
+    let sign = ((h >> 15) as u32) << 31;
+    let exp = ((h & F16Bits::EXP_MASK) >> 10) as u32;
+    let frac = (h & F16Bits::FRAC_MASK) as u32;
+    if exp == 0x1f {
+        // Inf or NaN: nonzero fraction stays nonzero after the shift.
+        sign | F32Bits::EXP_MASK | (frac << 13)
+    } else if exp == 0 {
+        if frac == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: normalize into an f32 normal.
+            let mut e = 113u32; // f32 bias 127 minus f16 subnormal scale 14
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((f & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (frac << 13)
+    }
+}
+
+/// f32 bits → f16 bits, round-to-nearest-even with overflow to ±Inf and
+/// gradual underflow, NaN-class-preserving.
+#[inline]
+pub fn f16_bits_from_f32_bits(x: u32) -> u16 {
+    let sign = ((x >> 31) as u16) << 15;
+    let exp = ((x >> 23) & 0xff) as i32;
+    let frac = x & F32Bits::FRAC_MASK;
+    if exp == 0xff {
+        if frac == 0 {
+            return sign | F16Bits::EXP_MASK; // ±Inf
+        }
+        let quiet = if x & F32Bits::QUIET_BIT != 0 {
+            F16Bits::QUIET_BIT
+        } else {
+            0
+        };
+        let payload = ((frac >> 13) as u16) & (F16Bits::FRAC_MASK >> 1);
+        let payload = if quiet == 0 && payload == 0 { 1 } else { payload };
+        return sign | F16Bits::EXP_MASK | quiet | payload;
+    }
+    let unbiased = exp - 127;
+    if unbiased >= 16 {
+        return sign | F16Bits::EXP_MASK; // overflow → ±Inf
+    }
+    if unbiased >= -14 {
+        // Normal range.  Round 13 dropped bits to nearest-even; a mantissa
+        // carry ripples into the exponent naturally (30 → 31 yields Inf).
+        let mut base = (((unbiased + 15) as u16) << 10) | ((frac >> 13) as u16);
+        let round = (frac >> 12) & 1;
+        let sticky = frac & 0xfff;
+        if round == 1 && (sticky != 0 || base & 1 == 1) {
+            base += 1;
+        }
+        return sign | base;
+    }
+    // Subnormal or zero.  shift = how far the 24-bit significand slides
+    // below the f16 subnormal scale; anything past the round position of the
+    // smallest subnormal flushes to signed zero.
+    let shift = (-14 - unbiased) as u32;
+    if shift > 11 {
+        return sign;
+    }
+    let m = 0x0080_0000 | frac; // implicit bit restored
+    let total = 13 + shift;
+    let mut base = (m >> total) as u16;
+    let round = (m >> (total - 1)) & 1;
+    let sticky = m & ((1u32 << (total - 1)) - 1);
+    if round == 1 && (sticky != 0 || base & 1 == 1) {
+        base += 1;
+    }
+    sign | base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_display_round_trip_and_word_bytes() {
+        for p in Precision::ALL {
+            assert_eq!(Precision::parse(p.name()), Ok(p));
+            assert_eq!(format!("{p}"), p.name());
+        }
+        assert_eq!(Precision::F64.word_bytes(), 8);
+        assert_eq!(Precision::F32.word_bytes(), 4);
+        assert_eq!(Precision::Bf16.word_bytes(), 2);
+        assert_eq!(Precision::F16.word_bytes(), 2);
+        assert!(Precision::parse("fp16").is_err());
+        assert_eq!(Precision::default(), Precision::F64);
+    }
+
+    #[test]
+    fn every_half_pattern_survives_widen_narrow_round_trip() {
+        // Widening is exact and narrowing an exactly-representable value is
+        // exact, so *every* 16-bit pattern — finite, Inf, subnormal, SNaN,
+        // QNaN — must come back bit-identical.  Exhaustive, both formats.
+        for bits in 0..=u16::MAX {
+            for p in [Precision::Bf16, Precision::F16] {
+                let widened = p.widen_bits(bits as u64);
+                let back = p.narrow_bits(widened) as u16;
+                assert_eq!(
+                    back, bits,
+                    "{p} pattern {bits:#06x} widened to {widened:?} narrowed to {back:#06x}"
+                );
+                // Class must be preserved through the widen too.
+                assert_eq!(
+                    p.classify_bits(bits as u64),
+                    classify_f64(widened.to_bits()),
+                    "{p} pattern {bits:#06x} changed NaN class on widen"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f16_widen_hits_known_values() {
+        assert_eq!(Precision::F16.widen_bits(0x3c00), 1.0);
+        assert_eq!(Precision::F16.widen_bits(0x7bff), 65504.0);
+        assert_eq!(Precision::F16.widen_bits(0xfbff), -65504.0);
+        assert_eq!(Precision::F16.widen_bits(0x0001), 2f64.powi(-24)); // min subnormal
+        assert_eq!(Precision::F16.widen_bits(0x0400), 2f64.powi(-14)); // min normal
+        assert_eq!(Precision::F16.widen_bits(0x3555), 0.333251953125);
+        assert_eq!(Precision::F16.widen_bits(0x7c00), f64::INFINITY);
+        assert_eq!(Precision::Bf16.widen_bits(0x3f80), 1.0);
+        assert_eq!(Precision::Bf16.widen_bits(0x0080), 2f64.powi(-126)); // min normal
+        assert_eq!(Precision::Bf16.widen_bits(0xff80), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn narrow_rounds_to_nearest_even() {
+        // Exactly halfway between bf16 neighbours 1.0 (0x3f80) and
+        // 1.0078125 (0x3f81): ties to even.
+        assert_eq!(Precision::Bf16.narrow_bits(1.00390625), 0x3f80);
+        // Halfway between 0x3f81 and 0x3f82: ties to even (up).
+        assert_eq!(Precision::Bf16.narrow_bits(1.01171875), 0x3f82);
+        // f16 overflow tie: 65520 is halfway between 65504 and 65536; the
+        // even side is Inf.
+        assert_eq!(Precision::F16.nearest(65520.0), f64::INFINITY);
+        assert_eq!(Precision::F16.nearest(-65520.0), f64::NEG_INFINITY);
+        // Below half the smallest subnormal: flushes to signed zero.
+        assert_eq!(Precision::F16.narrow_bits(2f64.powi(-26)), 0x0000);
+        assert_eq!(Precision::F16.narrow_bits(-2f64.powi(-26)), 0x8000);
+        // Just above the tie at 2^-25 rounds up to the smallest subnormal.
+        assert_eq!(Precision::F16.narrow_bits(2f64.powi(-25) * 1.5), 0x0001);
+    }
+
+    #[test]
+    fn exactly_representable_tracks_fraction_width() {
+        for p in Precision::ALL {
+            assert!(p.exactly_representable(1.0));
+            assert!(p.exactly_representable(-2.5));
+            assert!(p.exactly_representable(0.0));
+            assert!(!p.exactly_representable(f64::from_bits(1)) || p == Precision::F64);
+        }
+        assert!(!Precision::Bf16.exactly_representable(0.1));
+        assert!(!Precision::F16.exactly_representable(0.1));
+        // 1 + 2^-7 needs 7 fraction bits: fits both halves.
+        assert!(Precision::Bf16.exactly_representable(1.0 + 2f64.powi(-7)));
+        assert!(Precision::F16.exactly_representable(1.0 + 2f64.powi(-7)));
+        // 1 + 2^-10 needs 10: f16 only.
+        assert!(!Precision::Bf16.exactly_representable(1.0 + 2f64.powi(-10)));
+        assert!(Precision::F16.exactly_representable(1.0 + 2f64.powi(-10)));
+        // 70000 overflows f16 but not bf16.
+        assert!(!Precision::F16.exactly_representable(70000.0));
+        assert_eq!(Precision::F16.nearest(70000.0), f64::INFINITY);
+        assert!(Precision::F32.exactly_representable(65536.5));
+        assert!(!Precision::F32.exactly_representable(1.0 + 2f64.powi(-30)));
+    }
+
+    #[test]
+    fn plant_bits_are_signaling_in_every_precision() {
+        for p in Precision::ALL {
+            assert_eq!(
+                p.classify_bits(p.plant_bits()),
+                NanClass::Signaling,
+                "{p}"
+            );
+            // And the widened compute copy still traps.
+            let widened = p.widen_bits(p.plant_bits());
+            assert_eq!(classify_f64(widened.to_bits()), NanClass::Signaling, "{p}");
+        }
+    }
+
+    #[test]
+    fn half_layouts_match_bit_structs() {
+        let b = Precision::Bf16.half_layout().unwrap();
+        assert_eq!((b.exp, b.frac, b.quiet), (0x7f80, 0x007f, 0x0040));
+        let h = Precision::F16.half_layout().unwrap();
+        assert_eq!((h.exp, h.frac, h.quiet), (0x7c00, 0x03ff, 0x0200));
+        assert!(Precision::F64.half_layout().is_none());
+        assert!(Precision::F32.half_layout().is_none());
+    }
+}

@@ -27,10 +27,19 @@
 //! scalar fallback (CI runs the test suite once per dispatch path).  The
 //! scalar kernels are written branchless over fixed-width chunks so LLVM
 //! can autovectorize them even without the explicit SIMD path.
+//!
+//! The same three questions exist for packed 16-bit residents
+//! ([`count_nonfinite16`] / [`find_nans_into16`] /
+//! [`repair_nans_in_place16`]): identical mask algebra, parameterized by
+//! a [`HalfLayout`] because bf16 and f16 split the word differently.  A
+//! 256-bit vector holds 16 u16 lanes instead of 4 u64 lanes, so the same
+//! GB/s of memory bandwidth scans 4× the words — the whole point of the
+//! half-precision data plane.
 
 use once_cell::sync::Lazy;
 
 use super::bits::F64Bits;
+use super::precision::{HalfLayout, Precision};
 
 const EXP: u64 = F64Bits::EXP_MASK;
 const FRAC: u64 = F64Bits::FRAC_MASK;
@@ -39,6 +48,10 @@ const QUIET: u64 = F64Bits::QUIET_BIT;
 /// Lane width of the scalar kernels' inner chunk (chosen so the chunk
 /// fills one or two vector registers after autovectorization).
 const SCALAR_LANES: usize = 8;
+
+/// Lane width of the 16-bit scalar kernels' inner chunk (one 256-bit
+/// vector of u16 lanes after autovectorization).
+const SCALAR_LANES16: usize = 16;
 
 /// What [`repair_nans_in_place`] repaired, split by NaN class (the
 /// scrubber's ledger distinguishes signaling from quiet repairs).
@@ -270,6 +283,174 @@ pub fn find_nans_fp_oracle(words: &[u64]) -> Vec<usize> {
         .collect()
 }
 
+// ---------------------------------------------------------------------------
+// 16-bit kernels: packed bf16/f16 residents.  Same dispatch story, same
+// mask algebra, 16 lanes per vector.
+// ---------------------------------------------------------------------------
+
+/// Count 16-bit words with an all-ones exponent field (NaN or ±Inf)
+/// under `layout`'s bit split.
+pub fn count_nonfinite16(words: &[u16], layout: HalfLayout) -> u64 {
+    #[cfg(target_arch = "x86_64")]
+    if dispatches_avx2() {
+        // SAFETY: dispatches_avx2() is true only when the CPU reports AVX2.
+        return unsafe { avx2::count_nonfinite16(words, layout) };
+    }
+    count_nonfinite16_scalar(words, layout)
+}
+
+/// Append the index of every 16-bit NaN word (all-ones exponent,
+/// non-zero fraction — ±Inf excluded) to `out`, in ascending order.
+pub fn find_nans_into16(words: &[u16], layout: HalfLayout, out: &mut Vec<usize>) {
+    #[cfg(target_arch = "x86_64")]
+    if dispatches_avx2() {
+        // SAFETY: dispatches_avx2() is true only when the CPU reports AVX2.
+        unsafe { avx2::find_nans_into16(words, layout, out) };
+        return;
+    }
+    find_nans16_scalar_into(words, layout, out);
+}
+
+/// Indices of every 16-bit NaN word, ascending ([`find_nans_into16`]
+/// into a fresh vector).
+pub fn find_nans16(words: &[u16], layout: HalfLayout) -> Vec<usize> {
+    let mut out = Vec::new();
+    find_nans_into16(words, layout, &mut out);
+    out
+}
+
+/// Overwrite every 16-bit NaN word (±Inf untouched) with `repair_bits`
+/// and report how many of each class were repaired.
+pub fn repair_nans_in_place16(
+    words: &mut [u16],
+    layout: HalfLayout,
+    repair_bits: u16,
+) -> RepairCounts {
+    #[cfg(target_arch = "x86_64")]
+    if dispatches_avx2() {
+        // SAFETY: dispatches_avx2() is true only when the CPU reports AVX2.
+        return unsafe { avx2::repair_nans_in_place16(words, layout, repair_bits) };
+    }
+    repair_nans_in_place16_scalar(words, layout, repair_bits)
+}
+
+/// Scalar [`count_nonfinite16`]: branchless over [`SCALAR_LANES16`]-word
+/// chunks, plus a scalar tail.
+pub fn count_nonfinite16_scalar(words: &[u16], layout: HalfLayout) -> u64 {
+    let exp = layout.exp;
+    let mut acc = [0u64; SCALAR_LANES16];
+    let mut chunks = words.chunks_exact(SCALAR_LANES16);
+    for c in chunks.by_ref() {
+        for (a, &w) in acc.iter_mut().zip(c) {
+            *a += u64::from(w & exp == exp);
+        }
+    }
+    let mut count: u64 = acc.iter().sum();
+    for &w in chunks.remainder() {
+        count += u64::from(w & exp == exp);
+    }
+    count
+}
+
+/// Scalar [`find_nans_into16`].
+pub fn find_nans16_scalar_into(words: &[u16], layout: HalfLayout, out: &mut Vec<usize>) {
+    let (exp, frac) = (layout.exp, layout.frac);
+    for (i, &w) in words.iter().enumerate() {
+        if w & exp == exp && w & frac != 0 {
+            out.push(i);
+        }
+    }
+}
+
+/// Scalar [`repair_nans_in_place16`].
+pub fn repair_nans_in_place16_scalar(
+    words: &mut [u16],
+    layout: HalfLayout,
+    repair_bits: u16,
+) -> RepairCounts {
+    let (exp, frac, quiet) = (layout.exp, layout.frac, layout.quiet);
+    let mut counts = RepairCounts::default();
+    for w in words.iter_mut() {
+        let bits = *w;
+        if bits & exp == exp && bits & frac != 0 {
+            if bits & quiet != 0 {
+                counts.qnans += 1;
+            } else {
+                counts.snans += 1;
+            }
+            *w = repair_bits;
+        }
+    }
+    counts
+}
+
+/// AVX2 [`count_nonfinite16`] behind the safe capability gate; `None`
+/// when the CPU lacks AVX2 (or off x86-64).  For differential tests.
+pub fn count_nonfinite16_avx2(words: &[u16], layout: HalfLayout) -> Option<u64> {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 presence checked above.
+        return Some(unsafe { avx2::count_nonfinite16(words, layout) });
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = (words, layout);
+    None
+}
+
+/// AVX2 [`find_nans16`] behind the safe capability gate (see
+/// [`count_nonfinite16_avx2`]).
+pub fn find_nans16_avx2(words: &[u16], layout: HalfLayout) -> Option<Vec<usize>> {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        let mut out = Vec::new();
+        // SAFETY: AVX2 presence checked above.
+        unsafe { avx2::find_nans_into16(words, layout, &mut out) };
+        return Some(out);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = (words, layout);
+    None
+}
+
+/// AVX2 [`repair_nans_in_place16`] behind the safe capability gate (see
+/// [`count_nonfinite16_avx2`]).
+pub fn repair_nans_in_place16_avx2(
+    words: &mut [u16],
+    layout: HalfLayout,
+    repair_bits: u16,
+) -> Option<RepairCounts> {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 presence checked above.
+        return Some(unsafe { avx2::repair_nans_in_place16(words, layout, repair_bits) });
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = (words, layout, repair_bits);
+    None
+}
+
+/// FP-widen reference for [`count_nonfinite16`]: widens every word to
+/// f64 through the soft conversions and classifies with real
+/// floating-point predicates.  Test oracle only — a completely
+/// independent path from the integer mask algebra.
+pub fn count_nonfinite16_fp_oracle(words: &[u16], precision: Precision) -> u64 {
+    words
+        .iter()
+        .filter(|&&w| !precision.widen_bits(w as u64).is_finite())
+        .count() as u64
+}
+
+/// FP-widen reference for [`find_nans16`] (see
+/// [`count_nonfinite16_fp_oracle`]).
+pub fn find_nans16_fp_oracle(words: &[u16], precision: Precision) -> Vec<usize> {
+    words
+        .iter()
+        .enumerate()
+        .filter(|(_, &w)| precision.widen_bits(w as u64).is_nan())
+        .map(|(i, _)| i)
+        .collect()
+}
+
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
     //! Explicit AVX2 paths: 4 words per 256-bit vector, the classify as
@@ -278,10 +459,13 @@ mod avx2 {
 
     use std::arch::x86_64::*;
 
-    use super::{EXP, FRAC, QUIET, RepairCounts};
+    use super::{EXP, FRAC, HalfLayout, QUIET, RepairCounts};
 
     /// Words per 256-bit vector.
     const VLANES: usize = 4;
+
+    /// 16-bit words per 256-bit vector.
+    const VLANES16: usize = 16;
 
     /// High bit of each 64-bit lane as a 4-bit mask.
     ///
@@ -369,6 +553,105 @@ mod avx2 {
             _mm256_storeu_si256(c.as_mut_ptr() as *mut __m256i, repaired);
         }
         let tail = super::repair_nans_in_place_scalar(chunks.into_remainder(), repair_bits);
+        counts.snans += tail.snans;
+        counts.qnans += tail.qnans;
+        counts
+    }
+
+    /// High bit of each byte as a 32-bit mask; a matching 16-bit lane
+    /// (all-ones after `cmpeq_epi16`) contributes two adjacent set bits.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn byte_mask(v: __m256i) -> u32 {
+        _mm256_movemask_epi8(v) as u32
+    }
+
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn count_nonfinite16(words: &[u16], layout: HalfLayout) -> u64 {
+        let exp = _mm256_set1_epi16(layout.exp as i16);
+        // Each nonfinite lane sets both of its bytes in the movemask, so
+        // popcount/2 counts lanes; no per-lane accumulator to overflow.
+        let mut count = 0u64;
+        let mut chunks = words.chunks_exact(VLANES16);
+        for c in chunks.by_ref() {
+            let v = _mm256_loadu_si256(c.as_ptr() as *const __m256i);
+            let nonfin = _mm256_cmpeq_epi16(_mm256_and_si256(v, exp), exp);
+            count += u64::from(byte_mask(nonfin).count_ones() / 2);
+        }
+        count + super::count_nonfinite16_scalar(chunks.remainder(), layout)
+    }
+
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn find_nans_into16(words: &[u16], layout: HalfLayout, out: &mut Vec<usize>) {
+        let exp = _mm256_set1_epi16(layout.exp as i16);
+        let frac = _mm256_set1_epi16(layout.frac as i16);
+        let zero = _mm256_setzero_si256();
+        let mut chunks = words.chunks_exact(VLANES16);
+        let mut base = 0usize;
+        for c in chunks.by_ref() {
+            let v = _mm256_loadu_si256(c.as_ptr() as *const __m256i);
+            let nonfin = _mm256_cmpeq_epi16(_mm256_and_si256(v, exp), exp);
+            let frac_zero = _mm256_cmpeq_epi16(_mm256_and_si256(v, frac), zero);
+            let nan = _mm256_andnot_si256(frac_zero, nonfin);
+            // Two mask bits per lane: lane index = bit index / 2, and both
+            // bits of a lane are set together, so clear them pairwise.
+            let mut m = byte_mask(nan);
+            while m != 0 {
+                let tz = m.trailing_zeros();
+                out.push(base + (tz / 2) as usize);
+                m &= !(0b11 << tz);
+            }
+            base += VLANES16;
+        }
+        let (e, f) = (layout.exp, layout.frac);
+        for (i, &w) in chunks.remainder().iter().enumerate() {
+            if w & e == e && w & f != 0 {
+                out.push(base + i);
+            }
+        }
+    }
+
+    /// # Safety
+    /// The CPU must support AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn repair_nans_in_place16(
+        words: &mut [u16],
+        layout: HalfLayout,
+        repair_bits: u16,
+    ) -> RepairCounts {
+        let exp = _mm256_set1_epi16(layout.exp as i16);
+        let frac = _mm256_set1_epi16(layout.frac as i16);
+        let quiet = _mm256_set1_epi16(layout.quiet as i16);
+        let zero = _mm256_setzero_si256();
+        let fill = _mm256_set1_epi16(repair_bits as i16);
+        let mut counts = RepairCounts::default();
+        let mut chunks = words.chunks_exact_mut(VLANES16);
+        for c in chunks.by_ref() {
+            let v = _mm256_loadu_si256(c.as_ptr() as *const __m256i);
+            let nonfin = _mm256_cmpeq_epi16(_mm256_and_si256(v, exp), exp);
+            let frac_zero = _mm256_cmpeq_epi16(_mm256_and_si256(v, frac), zero);
+            let nan = _mm256_andnot_si256(frac_zero, nonfin);
+            if _mm256_testz_si256(nan, nan) != 0 {
+                continue; // fast path: chunk has no NaN, nothing to write
+            }
+            let quiet_zero = _mm256_cmpeq_epi16(_mm256_and_si256(v, quiet), zero);
+            let snan_mask = byte_mask(_mm256_and_si256(nan, quiet_zero));
+            let qnan_mask = byte_mask(_mm256_andnot_si256(quiet_zero, nan));
+            counts.snans += u64::from(snan_mask.count_ones() / 2);
+            counts.qnans += u64::from(qnan_mask.count_ones() / 2);
+            // NaN lanes are all-ones, so both bytes of a lane blend from
+            // `fill` together.
+            let repaired = _mm256_blendv_epi8(v, fill, nan);
+            _mm256_storeu_si256(c.as_mut_ptr() as *mut __m256i, repaired);
+        }
+        let tail =
+            super::repair_nans_in_place16_scalar(chunks.into_remainder(), layout, repair_bits);
         counts.snans += tail.snans;
         counts.qnans += tail.qnans;
         counts
@@ -493,6 +776,140 @@ mod tests {
             let simd_counts = repair_nans_in_place_avx2(&mut simd_buf, repair);
             assert_eq!(simd_counts, Some(scalar_counts), "repair counts, len {len}");
             assert_eq!(simd_buf, scalar_buf, "repair buffer, len {len}");
+        }
+    }
+
+    /// 16-bit patterns on every classification boundary for `p`'s layout:
+    /// quiet-bit boundary, ±Inf, subnormals, saturated payloads.
+    fn adversarial_patterns16(p: Precision) -> Vec<u16> {
+        let l = p.half_layout().unwrap();
+        let sign = 1u16 << 15;
+        vec![
+            0,                                // +0.0
+            sign,                             // −0.0
+            1,                                // smallest subnormal
+            l.frac,                           // largest subnormal
+            p.narrow_bits(1.0) as u16,        // a normal
+            (l.exp - (l.frac + 1)) | l.frac,  // largest finite
+            l.exp,                            // +Inf (fraction zero: NOT a NaN)
+            l.exp | sign,                     // −Inf
+            l.exp | 1,                        // SNaN, minimal payload
+            l.exp | (l.quiet - 1),            // SNaN, saturated payload below quiet
+            l.exp | l.quiet,                  // QNaN, zero payload
+            l.exp | l.frac,                   // QNaN, saturated payload
+            l.exp | l.frac | sign,            // negative saturated QNaN
+            p.plant_bits() as u16,            // the paper pattern analogue
+            p.narrow_bits(f64::NAN) as u16,   // canonical quiet NaN
+        ]
+    }
+
+    fn adversarial_buffer16(p: Precision, len: usize, seed: u64) -> Vec<u16> {
+        let pats = adversarial_patterns16(p);
+        let mut rng = Pcg64::seed(seed);
+        (0..len).map(|_| pats[rng.index(pats.len())]).collect()
+    }
+
+    #[test]
+    fn half_count_matches_widen_oracle_on_adversarial_buffers() {
+        for p in [Precision::Bf16, Precision::F16] {
+            let l = p.half_layout().unwrap();
+            for len in boundary_lengths() {
+                let buf = adversarial_buffer16(p, len, 7 + len as u64);
+                let oracle = count_nonfinite16_fp_oracle(&buf, p);
+                assert_eq!(
+                    count_nonfinite16_scalar(&buf, l),
+                    oracle,
+                    "{p} scalar vs oracle, len {len}"
+                );
+                assert_eq!(
+                    count_nonfinite16(&buf, l),
+                    oracle,
+                    "{p} dispatched vs oracle, len {len}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn half_find_matches_widen_oracle_and_excludes_inf() {
+        for p in [Precision::Bf16, Precision::F16] {
+            let l = p.half_layout().unwrap();
+            let buf = vec![
+                l.exp,                  // +Inf: excluded
+                p.plant_bits() as u16,  // SNaN: index 1
+                p.narrow_bits(1.0) as u16,
+                l.exp | (1 << 15),      // −Inf: excluded
+                l.exp | l.frac,         // QNaN: index 4
+            ];
+            assert_eq!(find_nans16(&buf, l), vec![1, 4], "{p}");
+            for len in boundary_lengths() {
+                let buf = adversarial_buffer16(p, len, 31 + len as u64);
+                let oracle = find_nans16_fp_oracle(&buf, p);
+                assert_eq!(find_nans16(&buf, l), oracle, "{p} len {len}");
+                let mut scalar = Vec::new();
+                find_nans16_scalar_into(&buf, l, &mut scalar);
+                assert_eq!(scalar, oracle, "{p} scalar, len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn half_repair_overwrites_nans_only_and_splits_classes() {
+        for p in [Precision::Bf16, Precision::F16] {
+            let l = p.half_layout().unwrap();
+            let repair = p.narrow_bits(5.5) as u16;
+            for len in boundary_lengths() {
+                let pristine = adversarial_buffer16(p, len, 101 + len as u64);
+                let mut buf = pristine.clone();
+                let counts = repair_nans_in_place16(&mut buf, l, repair);
+                let mut expect = RepairCounts::default();
+                for (i, (&before, &after)) in pristine.iter().zip(&buf).enumerate() {
+                    if p.widen_bits(before as u64).is_nan() {
+                        assert_eq!(after, repair, "{p}: NaN at {i} not repaired, len {len}");
+                        if before & l.quiet != 0 {
+                            expect.qnans += 1;
+                        } else {
+                            expect.snans += 1;
+                        }
+                    } else {
+                        assert_eq!(after, before, "{p}: non-NaN at {i} modified, len {len}");
+                    }
+                }
+                assert_eq!(counts, expect, "{p} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn half_scalar_and_avx2_paths_agree() {
+        if !avx2_available() {
+            return; // nothing to differentiate on this CPU
+        }
+        for p in [Precision::Bf16, Precision::F16] {
+            let l = p.half_layout().unwrap();
+            for len in boundary_lengths() {
+                let buf = adversarial_buffer16(p, len, 211 + len as u64);
+                assert_eq!(
+                    count_nonfinite16_avx2(&buf, l),
+                    Some(count_nonfinite16_scalar(&buf, l)),
+                    "{p} count, len {len}"
+                );
+                let mut scalar_idx = Vec::new();
+                find_nans16_scalar_into(&buf, l, &mut scalar_idx);
+                assert_eq!(find_nans16_avx2(&buf, l), Some(scalar_idx), "{p} find, len {len}");
+
+                let repair = p.narrow_bits(1.0) as u16;
+                let mut scalar_buf = buf.clone();
+                let mut simd_buf = buf.clone();
+                let scalar_counts = repair_nans_in_place16_scalar(&mut scalar_buf, l, repair);
+                let simd_counts = repair_nans_in_place16_avx2(&mut simd_buf, l, repair);
+                assert_eq!(
+                    simd_counts,
+                    Some(scalar_counts),
+                    "{p} repair counts, len {len}"
+                );
+                assert_eq!(simd_buf, scalar_buf, "{p} repair buffer, len {len}");
+            }
         }
     }
 

@@ -144,7 +144,15 @@ fn app() -> App {
                     "mix",
                     None,
                     "weighted request mix over resident kinds, overrides --workload: \
-                     name[:size[:extra]]:weight,… (e.g. matmul:0.5,jacobi:0.3,cg:0.2)",
+                     name[:size[:extra]][:precision]:weight,… \
+                     (e.g. matmul:0.5,jacobi:0.3,cg:0.2 or matmul:256:bf16)",
+                )
+                .opt(
+                    "precision",
+                    Some("f64"),
+                    "default resident storage precision: f64|f32|bf16|f16 (packed \
+                     residents store narrow words and widen to f32-range compute; \
+                     per-mix-entry overrides win)",
                 )
                 .opt("protection", Some("memory"), "none|register|memory|scrub:K")
                 .opt("requests", Some("500"), "measured requests")
@@ -210,7 +218,12 @@ fn app() -> App {
                     "mix",
                     None,
                     "weighted request mix as one matrix cell, overrides --workloads: \
-                     name[:size[:extra]]:weight,…",
+                     name[:size[:extra]][:precision]:weight,…",
+                )
+                .opt(
+                    "precision",
+                    Some("f64"),
+                    "default resident storage precision for every cell: f64|f32|bf16|f16",
                 )
                 .opt(
                     "protections",
@@ -638,6 +651,7 @@ fn main() -> Result<()> {
                 mix,
                 protection: Protection::parse(m.get_str("protection")?)?,
                 policy: RepairPolicy::parse(m.get_str("policy")?)?,
+                precision: m.get_parse("precision")?,
                 requests: m.get_parse("requests")?,
                 workers,
                 queue_depth: m.get_parse("queue-depth")?,
@@ -681,6 +695,7 @@ fn main() -> Result<()> {
                 protections: m.get_list("protections")?,
                 fault_rates: m.get_list("fault-rates")?,
                 policy: RepairPolicy::parse(m.get_str("policy")?)?,
+                precision: m.get_parse("precision")?,
                 requests: m.get_parse("requests")?,
                 warmup: m.get_parse("warmup")?,
                 serve_workers: m.get_parse("serve-workers")?,

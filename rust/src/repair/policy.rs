@@ -15,6 +15,7 @@
 
 use crate::approxmem::pool::Region;
 use crate::fp::nan::classify_f64;
+use crate::fp::Precision;
 
 /// What the serving contract needs to know about a repair policy: the
 /// guarantees [`RepairPolicy::resolve`] makes about the values it emits.
@@ -189,6 +190,44 @@ impl RepairPolicy {
                 ),
             },
         }
+    }
+
+    /// Check that every constant this policy can write — the `const:V`
+    /// value or the `neighbor:FB` fallback — is **exactly representable**
+    /// at the resident's storage `precision`.  A lossy constant would
+    /// silently round on every patch: a bf16 word "repaired to 0.1"
+    /// actually holds 0.1005859375, a much larger relative perturbation
+    /// than the same rounding at f64.  The rejection names the nearest
+    /// representable value so the fix is one copy-paste away.
+    ///
+    /// `zero`/`one` are exact in every format; the *positional* neighbor
+    /// mean is storage-rounded by the hygiene sync (an inherent property
+    /// of positional repair, not a config error), so only its fallback is
+    /// checked here.
+    pub fn ensure_representable(&self, precision: Precision) -> anyhow::Result<()> {
+        let check = |v: f64, what: &str| -> anyhow::Result<()> {
+            anyhow::ensure!(
+                precision.exactly_representable(v),
+                "repair {what} {v} is not exactly representable at {precision}; \
+                 nearest representable value is {}",
+                precision.nearest(v)
+            );
+            Ok(())
+        };
+        match *self {
+            RepairPolicy::Zero | RepairPolicy::One => Ok(()),
+            RepairPolicy::Constant(c) => check(c, "constant"),
+            RepairPolicy::NeighborMean { fallback } => check(fallback, "fallback"),
+        }
+    }
+
+    /// [`RepairPolicy::parse`] plus the [`RepairPolicy::ensure_representable`]
+    /// check against the storage precision the policy will patch — the CLI
+    /// entry point for precision-aware serve/capacity configs.
+    pub fn parse_for(s: &str, precision: Precision) -> anyhow::Result<Self> {
+        let policy = Self::parse(s)?;
+        policy.ensure_representable(precision)?;
+        Ok(policy)
     }
 }
 
@@ -386,5 +425,70 @@ mod tests {
         }
         assert_eq!(RepairPolicy::Constant(3.25).to_string(), "const:3.25");
         assert_eq!(NEIGHBOR_MEAN.to_string(), "neighbor");
+    }
+
+    #[test]
+    fn exact_constants_are_representable_at_every_precision() {
+        // Zero, one, and small dyadic constants have short fractions that
+        // fit even f16's 10 bits — the common configs stay precision-free.
+        for precision in Precision::ALL {
+            for policy in [
+                RepairPolicy::Zero,
+                RepairPolicy::One,
+                RepairPolicy::Constant(3.25),
+                RepairPolicy::Constant(-0.5),
+                NEIGHBOR_MEAN,
+                RepairPolicy::NeighborMean { fallback: 1.5 },
+            ] {
+                policy.ensure_representable(precision).unwrap_or_else(|e| {
+                    panic!("{policy} should be exact at {precision}: {e}")
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn lossy_constants_are_rejected_with_the_nearest_value() {
+        // 0.1 is not a dyadic rational: exact in no binary format, so it is
+        // "representable" only at the policy's own f64 carrier width.
+        let policy = RepairPolicy::parse("const:0.1").unwrap();
+        policy.ensure_representable(Precision::F64).unwrap();
+        for precision in [Precision::F32, Precision::Bf16, Precision::F16] {
+            let err = policy
+                .ensure_representable(precision)
+                .expect_err("0.1 must be rejected at narrowed storage")
+                .to_string();
+            assert!(err.contains(precision.name()), "names precision: {err}");
+            assert!(err.contains("nearest"), "offers the nearest value: {err}");
+        }
+        // The suggested replacement round-trips: parsing the nearest value
+        // back in produces a policy that passes the check.
+        let nearest = Precision::Bf16.nearest(0.1);
+        RepairPolicy::Constant(nearest)
+            .ensure_representable(Precision::Bf16)
+            .unwrap();
+        assert_eq!(nearest, 0.10009765625);
+    }
+
+    #[test]
+    fn neighbor_fallback_is_checked_like_a_constant() {
+        let policy = RepairPolicy::NeighborMean { fallback: 0.2 };
+        assert!(policy.ensure_representable(Precision::F16).is_err());
+        policy.ensure_representable(Precision::F64).unwrap();
+        // The positional mean itself is storage-rounded at patch time and
+        // deliberately not validated — only the static fallback is.
+        NEIGHBOR_MEAN.ensure_representable(Precision::F16).unwrap();
+    }
+
+    #[test]
+    fn parse_for_couples_parsing_with_the_representability_check() {
+        assert_eq!(
+            RepairPolicy::parse_for("const:0.25", Precision::F16).unwrap(),
+            RepairPolicy::Constant(0.25)
+        );
+        let err = RepairPolicy::parse_for("const:0.1", Precision::F16)
+            .expect_err("lossy constant must fail at parse time")
+            .to_string();
+        assert!(err.contains("f16") && err.contains("nearest"), "{err}");
     }
 }

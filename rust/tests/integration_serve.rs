@@ -26,6 +26,7 @@ use nanrepair::approxmem::DeviceProfile;
 use nanrepair::coordinator::protection::Protection;
 use nanrepair::coordinator::server::{serve, Arrival, EnergyConfig, RequestMix, ServeConfig};
 use nanrepair::coordinator::session::{ExperimentSession, ServeCell};
+use nanrepair::fp::Precision;
 use nanrepair::repair::policy::RepairPolicy;
 use nanrepair::util::report::{Json, Record};
 use nanrepair::workloads::WorkloadKind;
@@ -744,6 +745,79 @@ fn batched_ledger_invariant_across_workers_and_batch_grid() {
     }
 }
 
+fn half_cfg(workers: usize, batch: usize) -> ServeConfig {
+    ServeConfig {
+        // a bf16 per-entry override rides next to the run-default f16
+        // kind, so one stream exercises both half formats end to end
+        mix: RequestMix::parse("matmul:24:bf16:0.5,jacobi:24:10:0.5").unwrap(),
+        policy: RepairPolicy::One,
+        precision: Precision::F16,
+        protection: Protection::RegisterMemory,
+        requests: 48,
+        workers,
+        queue_depth: 8,
+        batch,
+        fault_rate: 5e-3,
+        seed: 31,
+        arrival: Arrival::Closed,
+        ..Default::default()
+    }
+}
+
+/// Acceptance (half-precision data plane): a mixed bf16/f16 stream serves
+/// NaN-free with real repairs, the per-kind summaries carry their storage
+/// precisions, and the repair/dose ledger is worker-count AND batch-size
+/// invariant across the {1, 4} workers × {1, 16} batch grid — packed
+/// residents keep the same (seed, index)-pure fault story as f64.
+#[test]
+fn half_precision_ledger_invariant_across_workers_and_batch() {
+    let baseline = serve(&half_cfg(1, 1)).unwrap();
+    assert_eq!(baseline.results.len(), 48);
+    assert_eq!(baseline.output_nans_total(), 0, "half responses NaN-free");
+    assert!(baseline.dose_total() > 0);
+    assert!(baseline.repairs_total() > 0, "16-bit storage NaNs repaired reactively");
+    let ks = baseline.kind_summaries();
+    let precisions: Vec<Precision> = ks.iter().map(|k| k.precision).collect();
+    assert_eq!(precisions, [Precision::Bf16, Precision::F16]);
+    for workers in [1usize, 4] {
+        for batch in [1usize, 16] {
+            let rep = serve(&half_cfg(workers, batch)).unwrap();
+            let tag = format!("workers={workers} batch={batch}");
+            assert_eq!(rep.results.len(), 48, "{tag}");
+            for (s, p) in baseline.results.iter().zip(&rep.results) {
+                assert_eq!(s.index, p.index, "{tag}");
+                assert_eq!(s.kind, p.kind, "{tag}: request {} kind", s.index);
+                assert_eq!(s.dose, p.dose, "{tag}: request {} dose", s.index);
+                assert_eq!(
+                    s.nans_planted(),
+                    p.nans_planted(),
+                    "{tag}: request {} planted words",
+                    s.index
+                );
+                assert_eq!(p.output_nans(), 0, "{tag}: request {}", s.index);
+                let (mut st, mut pt) = (s.traps(), p.traps());
+                st.trap_cycles_total = 0;
+                pt.trap_cycles_total = 0;
+                assert_eq!(st, pt, "{tag}: request {} trap counters", s.index);
+            }
+            for (a, b) in ks.iter().zip(&rep.kind_summaries()) {
+                assert_eq!(a.kind, b.kind, "{tag}");
+                assert_eq!(a.precision, b.precision, "{tag}: {} precision", a.kind);
+                assert_eq!(a.requests, b.requests, "{tag}: {} split", a.kind);
+                assert_eq!(a.dose_total, b.dose_total, "{tag}: {} dose", a.kind);
+                assert_eq!(a.nans_planted, b.nans_planted, "{tag}: {} plants", a.kind);
+                assert_eq!(a.sigfpe_total, b.sigfpe_total, "{tag}: {} traps", a.kind);
+                assert_eq!(
+                    a.repairs_total, b.repairs_total,
+                    "{tag}: {} half-precision repair ledger must be worker- and \
+                     batch-invariant",
+                    a.kind
+                );
+            }
+        }
+    }
+}
+
 /// Acceptance (batched dispatch + mutation hazard): a mutating-kind
 /// resident is byte-identical to its pristine snapshot after multi-request
 /// batched windows interleaved with sheds — the copy-on-serve restore and
@@ -757,8 +831,10 @@ fn batched_serve_and_shed_keep_mutating_resident_pristine() {
         resident_seed: 11,
         protection: Protection::RegisterMemory,
         policy: RepairPolicy::Zero,
+        precision: Precision::F64,
         dose,
         placement_seed,
+        hold_secs: 0.0,
     };
     let mut s = ExperimentSession::new();
     s.prepare_resident(workload, 11);
